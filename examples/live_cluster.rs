@@ -1,0 +1,28 @@
+//! Live mode: a REAL parameter server and worker clients exchanging the
+//! binary wire protocol over TCP on localhost — the deployable side of
+//! the coordinator (no simulation, no Python).
+//!
+//!     cargo run --release --example live_cluster
+
+use std::time::Duration;
+
+use hermes_dml::config::RunConfig;
+use hermes_dml::live::run_live;
+
+fn main() -> anyhow::Result<()> {
+    let mut cfg = RunConfig::new("mock", "hermes");
+    cfg.hp.lr = 0.5;
+    cfg.hp.alpha = -0.9;
+    cfg.hp.window = 8;
+    println!("starting live PS + 6 workers over TCP for 4s …");
+    let report = run_live(&cfg, 6, Duration::from_secs(4))?;
+    println!("workers          : {}", report.workers);
+    println!("local iterations : {}", report.iterations);
+    println!("gated pushes     : {}", report.pushes);
+    println!("PS aggregations  : {}", report.global_updates);
+    println!("bytes received   : {}", report.bytes_received);
+    println!("final loss       : {:.4}", report.final_loss);
+    println!("final accuracy   : {:.2}%", report.final_accuracy * 100.0);
+    println!("wall time        : {:.2}s", report.wall_time_s);
+    Ok(())
+}

@@ -1,0 +1,56 @@
+//! Quickstart: train a model with Hermes on the simulated 12-worker
+//! heterogeneous edge cluster and print what happened.
+//!
+//!     cargo run --release --example quickstart
+//!
+//! Uses the artifact-free mock runtime so it runs in milliseconds; see
+//! `heterogeneous_cluster.rs` for the real AOT-compiled CNN.
+
+use hermes_dml::config::RunConfig;
+use hermes_dml::frameworks::run_framework;
+use hermes_dml::runtime::MockRuntime;
+use hermes_dml::util::fmt_duration;
+
+fn main() -> anyhow::Result<()> {
+    // A RunConfig bundles Table I hyper-parameters, the Table II
+    // cluster, the network model and the experiment knobs.
+    let mut cfg = RunConfig::new("mock", "hermes");
+    cfg.hp.lr = 0.5; // the mock softmax model likes a big step
+    cfg.hp.alpha = -1.3; // GUP significance threshold (§IV-B)
+    cfg.hp.beta = 0.1; // α decay (§IV-B3)
+    cfg.target_acc = 0.92;
+    cfg.max_iters = 400;
+
+    let run = run_framework(cfg, Box::new(MockRuntime::new()))?;
+
+    println!("Hermes on 12 simulated edge workers:");
+    println!("  local iterations : {}", run.iterations);
+    println!("  gated pushes     : {}", run.total_pushes());
+    println!("  PS aggregations  : {}", run.global_updates);
+    println!("  virtual time     : {}", fmt_duration(run.virtual_time));
+    println!("  wall time        : {:.2}s", run.sim_wall_time);
+    println!("  final accuracy   : {:.2}%", run.final_accuracy * 100.0);
+    println!("  worker independence (Eq. 7): {:.2}", run.wi_avg());
+    println!("  API calls        : {}", run.api_calls);
+    println!("  bytes on wire    : {}", run.bytes);
+    println!("  converged        : {}", run.converged);
+
+    // The same API runs every baseline — swap the framework name:
+    for fw in ["bsp", "asp", "ssp", "ebsp", "selsync"] {
+        let mut cfg = RunConfig::new("mock", fw);
+        cfg.hp.lr = 0.5;
+        cfg.hp.ssp_staleness = 6;
+        cfg.hp.ebsp_lookahead = 4.0;
+        cfg.target_acc = 0.92;
+        cfg.max_iters = 400;
+        let r = run_framework(cfg, Box::new(MockRuntime::new()))?;
+        println!(
+            "  vs {fw:<8}: {:>5} iters, {:>8}, acc {:.1}%, WI {:.2}",
+            r.iterations,
+            fmt_duration(r.virtual_time),
+            r.final_accuracy * 100.0,
+            r.wi_avg()
+        );
+    }
+    Ok(())
+}

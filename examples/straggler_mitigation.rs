@@ -1,0 +1,62 @@
+//! Straggler mitigation demo (§IV-A, Figs. 7/11b/12): the dual binary
+//! search retargets the B1ms stragglers (and the under-utilized F4s_v2
+//! nodes) to the cluster-median iteration time.  Runs Hermes with and
+//! without dynamic allocation and prints per-family iteration times.
+//!
+//!     cargo run --release --example straggler_mitigation
+
+use hermes_dml::config::RunConfig;
+use hermes_dml::frameworks::run_framework;
+use hermes_dml::metrics::RunMetrics;
+use hermes_dml::runtime::MockRuntime;
+
+fn summarize(label: &str, run: &RunMetrics) {
+    println!("\n--- {label} ---");
+    println!(
+        "{:<10} {:>6} {:>12} {:>12} {:>8}",
+        "family", "iters", "t/iter (s)", "last t (s)", "realloc"
+    );
+    let mut fams = std::collections::BTreeMap::<String, (u64, f64, f64, usize)>::new();
+    for w in &run.workers {
+        let e = fams.entry(w.family.clone()).or_default();
+        e.0 += w.iterations;
+        e.1 += w.train_time;
+        if let Some((_, last)) = w.train_times.last() {
+            e.2 = e.2.max(*last);
+        }
+        e.3 += w.allocations.len();
+    }
+    for (fam, (iters, total, last, re)) in fams {
+        println!(
+            "{fam:<10} {iters:>6} {:>12.3} {last:>12.3} {re:>8}",
+            total / iters.max(1) as f64
+        );
+    }
+    // Spread of the final per-worker iteration time: dynamic allocation
+    // should pull everyone toward the median (Fig. 11b).
+    let finals: Vec<f64> = run
+        .workers
+        .iter()
+        .filter_map(|w| w.train_times.last().map(|(_, t)| *t))
+        .collect();
+    let max = finals.iter().cloned().fold(0.0, f64::max);
+    let min = finals.iter().cloned().fold(f64::MAX, f64::min);
+    println!("final iteration-time spread: {min:.3}s … {max:.3}s ({:.1}x)", max / min);
+}
+
+fn main() -> anyhow::Result<()> {
+    for dynamic in [false, true] {
+        let mut cfg = RunConfig::new("mock", "hermes");
+        cfg.hp.lr = 0.5;
+        cfg.dynamic_alloc = dynamic;
+        cfg.dss0 = 256;
+        cfg.target_acc = 1.5; // run the full budget
+        cfg.max_iters = 600;
+        let run = run_framework(cfg, Box::new(MockRuntime::new()))?;
+        summarize(
+            if dynamic { "dynamic allocation (Hermes)" } else { "static allocation" },
+            &run,
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,194 @@
+"""AOT lowering: JAX (L2) + Pallas (L1) → HLO text artifacts for Rust (L3).
+
+Emits HLO **text**, not a serialized ``HloModuleProto``: jax ≥ 0.5 writes
+protos with 64-bit instruction ids which the ``xla`` crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+One artifact per (model, kind, batch size):
+
+    artifacts/{model}_{train|eval}_b{batch}.hlo.txt
+
+plus ``artifacts/manifest.json`` describing parameter shapes and the
+exact input/output ordering, which the Rust runtime consumes.  Python
+runs only here — never on the request path.
+
+Usage:  cd python && python -m compile.aot --out ../artifacts
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import struct
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .model import (
+    MODELS,
+    example_args_eval,
+    example_args_train,
+    init_params,
+    make_eval_step,
+    make_train_step,
+)
+
+# Mini-batch sizes compiled per model.  The paper's dual binary search
+# walks MBS ∈ {2, 4, …, 256}; the runtime clamps the searched MBS to the
+# nearest compiled size (documented in DESIGN.md §3).  AlexNet gets a
+# narrower set to bound artifact build time.
+TRAIN_BATCHES = {"cnn": (8, 16, 32, 64), "alexnet": (16, 32)}
+EVAL_BATCH = 128
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR → XlaComputation → HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _write(path: str, text: str) -> dict:
+    with open(path, "w") as f:
+        f.write(text)
+    digest = hashlib.sha256(text.encode()).hexdigest()[:16]
+    return {"bytes": len(text), "sha256_16": digest}
+
+
+GOLDEN_BATCH = 16
+
+
+def _write_golden(out_dir: str, name: str, spec) -> dict:
+    """Cross-language contract fixture: deterministic inputs and the
+    jit-executed expected outputs of one train step, as a flat little-
+    endian f32 blob + a JSON index.  The Rust runtime integration test
+    loads the HLO artifact, runs the same inputs, and must match."""
+    batch = GOLDEN_BATCH
+    n = len(spec.param_shapes)
+    params = init_params(spec, jax.random.PRNGKey(0))
+    mom = [jnp.zeros_like(p) for p in params]
+    h, w, c = spec.input_shape
+    x = jax.random.normal(jax.random.PRNGKey(1), (batch, h, w, c))
+    y = jax.random.randint(jax.random.PRNGKey(2), (batch,), 0, 10)
+    lr, mu = 0.05, 0.9
+    out = make_train_step(spec)(
+        *params, *mom, x, y, jnp.float32(lr), jnp.float32(mu)
+    )
+    new_params, loss, correct = out[:n], out[2 * n], out[2 * n + 1]
+
+    blob_path = os.path.join(out_dir, f"golden_{name}.bin")
+    index = {
+        "batch": batch,
+        "lr": lr,
+        "momentum": mu,
+        "labels": [int(v) for v in np.asarray(y)],
+        "loss": float(loss),
+        "correct": float(correct),
+        "sections": [],
+    }
+    with open(blob_path, "wb") as f:
+        offset = 0
+
+        def put(tag, arr):
+            nonlocal offset
+            a = np.asarray(arr, dtype=np.float32).ravel()
+            f.write(struct.pack(f"<{a.size}f", *a.tolist()))
+            index["sections"].append(
+                {"tag": tag, "offset": offset, "len": int(a.size)}
+            )
+            offset += a.size
+
+        for i, p in enumerate(params):
+            put(f"param{i}", p)
+        put("x", x)
+        for i, p in enumerate(new_params):
+            put(f"new_param{i}", p)
+    index["blob"] = f"golden_{name}.bin"
+    with open(os.path.join(out_dir, f"golden_{name}.json"), "w") as f:
+        json.dump(index, f)
+    return {"blob": index["blob"], "index": f"golden_{name}.json"}
+
+
+def build(out_dir: str, models=None, verbose: bool = True) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"format": 1, "eval_batch": EVAL_BATCH, "models": {}}
+    for name, spec in MODELS.items():
+        if models and name not in models:
+            continue
+        entry = {
+            "input_shape": list(spec.input_shape),
+            "num_classes": spec.num_classes,
+            "param_shapes": [list(s) for s in spec.param_shapes],
+            "param_count": spec.param_count,
+            "layers": [
+                {
+                    "kind": l.kind,
+                    "shape": list(l.shape),
+                    "act": l.act,
+                    "pool": l.pool,
+                }
+                for l in spec.layers
+            ],
+            "train": {},
+            "eval": {},
+        }
+        train_step = make_train_step(spec)
+        for batch in TRAIN_BATCHES[name]:
+            t0 = time.time()
+            lowered = jax.jit(train_step).lower(
+                *example_args_train(spec, batch)
+            )
+            fname = f"{name}_train_b{batch}.hlo.txt"
+            info = _write(os.path.join(out_dir, fname), to_hlo_text(lowered))
+            info["path"] = fname
+            entry["train"][str(batch)] = info
+            if verbose:
+                print(
+                    f"[aot] {fname}: {info['bytes']} bytes "
+                    f"({time.time() - t0:.1f}s)"
+                )
+        eval_step = make_eval_step(spec)
+        t0 = time.time()
+        lowered = jax.jit(eval_step).lower(
+            *example_args_eval(spec, EVAL_BATCH)
+        )
+        fname = f"{name}_eval_b{EVAL_BATCH}.hlo.txt"
+        info = _write(os.path.join(out_dir, fname), to_hlo_text(lowered))
+        info["path"] = fname
+        entry["eval"][str(EVAL_BATCH)] = info
+        if verbose:
+            print(
+                f"[aot] {fname}: {info['bytes']} bytes "
+                f"({time.time() - t0:.1f}s)"
+            )
+        if GOLDEN_BATCH in TRAIN_BATCHES[name]:
+            entry["golden"] = _write_golden(out_dir, name, spec)
+            if verbose:
+                print(f"[aot] golden_{name}.bin")
+        manifest["models"][name] = entry
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    if verbose:
+        print(f"[aot] wrote {os.path.join(out_dir, 'manifest.json')}")
+    return manifest
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out", default="../artifacts")
+    parser.add_argument(
+        "--models", nargs="*", default=None, help="subset of models to build"
+    )
+    args = parser.parse_args()
+    build(args.out, models=args.models)
+
+
+if __name__ == "__main__":
+    main()

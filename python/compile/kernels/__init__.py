@@ -1,0 +1,21 @@
+"""Layer-1 Pallas kernels for the Hermes reproduction.
+
+Every FLOP-heavy op in the Layer-2 model routes through these kernels so
+that the AOT-lowered HLO contains the kernel loops, not ad-hoc jnp ops:
+
+- :mod:`matmul`  — fused tiled matmul + bias + optional ReLU, with a
+  custom VJP whose backward matmuls are themselves Pallas kernels.
+- :mod:`conv2d`  — stride-1 'same' conv expressed as an unrolled
+  shift-and-matmul (im2col-in-VMEM) kernel, custom VJP included.
+- :mod:`ref`     — pure-jnp oracles used by pytest/hypothesis.
+
+All kernels run with ``interpret=True``: the CPU PJRT plugin cannot
+execute Mosaic custom-calls, so the interpreter lowering (a fori-loop of
+dynamic-slice / dot / dynamic-update-slice over the grid) is what lands
+in the HLO artifact.  Block shapes are still chosen MXU/VMEM-first — see
+DESIGN.md §Hardware-Adaptation.
+"""
+
+from . import ref  # noqa: F401
+from .matmul import matmul_bias_act  # noqa: F401
+from .conv2d import conv2d_bias_act  # noqa: F401

@@ -1,0 +1,138 @@
+"""Stride-1 'same' conv2d + bias + activation as a Pallas kernel.
+
+The kernel materializes one batch-tile of the (pre-padded) input in
+VMEM, performs **im2col in VMEM** — the KH·KW shifted H×W windows are
+concatenated into a [bb·H·W, KH·KW·C] patch matrix that never touches
+HBM — and contracts it against the reshaped weights with one MXU-shaped
+``jnp.dot``.  This is the TPU re-think of the paper's (CPU, TensorFlow)
+conv: a GPU port's threadblock decomposition becomes a batch-tile grid
+where BlockSpec expresses the HBM↔VMEM schedule and the single big GEMM
+feeds the systolic array at full tile occupancy.
+
+VMEM per program at batch tile bb on H×W×C images:
+  input  bb·(H+2)·(W+2)·C·4 B, patches ≈ 9× the input, plus the
+  [bb·H·W, O] accumulator — bb=8 on 32×32×48 ≈ 8.5 MiB, inside the
+  ~16 MiB/core budget.  The CPU-interpret artifact uses bb = full batch
+  to minimize Pallas-interpreter grid overhead (see matmul.py).
+
+Backward is a custom VJP:
+  db = Σ g;   dw = patchesᵀ @ g  (one Pallas matmul);
+  dx = conv(g, flip(w) with channels swapped)  (this same kernel).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .matmul import _matmul_raw
+
+# Batch tile: a real-TPU build would use 8; the CPU-interpret artifact
+# uses the whole batch (grid = 1) to avoid per-grid-step interpreter
+# overhead.  `None` means "whole batch".
+TPU_BB = 8
+DEFAULT_BB = None
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def _conv_kernel(x_ref, w_ref, b_ref, o_ref, *, hh, ww, kh, kw, act):
+    """One batch tile.  x_ref:[bb, H+kh-1, W+kw-1, C] (pre-padded),
+    w_ref:[kh*kw*C, O], o_ref:[bb, H, W, O]."""
+    x = x_ref[...]
+    bb, cin = x.shape[0], x.shape[3]
+    cout = o_ref.shape[3]
+    # im2col in VMEM: [bb, H, W, kh*kw*C] patch tensor.
+    windows = [
+        x[:, i : i + hh, j : j + ww, :] for i in range(kh) for j in range(kw)
+    ]
+    patches = jnp.concatenate(windows, axis=3).reshape(
+        bb * hh * ww, kh * kw * cin
+    )
+    y = jnp.dot(patches, w_ref[...], preferred_element_type=jnp.float32)
+    y = y.reshape(bb, hh, ww, cout) + b_ref[...]
+    if act == "relu":
+        y = jnp.maximum(y, 0.0)
+    o_ref[...] = y
+
+
+def _conv_raw(x, w, b, act: str, bb):
+    if act not in ("relu", "none"):
+        raise ValueError(f"unknown act {act!r}")
+    batch, hh, ww, cin = x.shape
+    kh, kw, cin2, cout = w.shape
+    assert cin == cin2, (x.shape, w.shape)
+    assert kh % 2 == 1 and kw % 2 == 1, "odd taps only ('same' padding)"
+    ph, pw = kh // 2, kw // 2
+
+    bb = batch if bb is None else min(bb, batch)
+    bp = _round_up(batch, bb)
+    # Zero-pad: batch up to the tile multiple, spatial for 'same'.
+    xp = jnp.pad(x, ((0, bp - batch), (ph, ph), (pw, pw), (0, 0)))
+    wm = w.reshape(kh * kw * cin, cout)
+
+    out = pl.pallas_call(
+        functools.partial(_conv_kernel, hh=hh, ww=ww, kh=kh, kw=kw, act=act),
+        grid=(bp // bb,),
+        in_specs=[
+            pl.BlockSpec(
+                (bb, hh + kh - 1, ww + kw - 1, cin), lambda i: (i, 0, 0, 0)
+            ),
+            pl.BlockSpec((kh * kw * cin, cout), lambda i: (0, 0)),
+            pl.BlockSpec((cout,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bb, hh, ww, cout), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bp, hh, ww, cout), jnp.float32),
+        interpret=True,
+    )(xp, wm, b)
+    return out[:batch]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def conv2d_bias_act(x, w, b, act: str = "relu", bb=DEFAULT_BB):
+    """y = act(conv2d_same(x, w) + b); x:[B,H,W,C], w:[KH,KW,C,O], b:[O]."""
+    return _conv_raw(x, w, b, act, bb)
+
+
+def _conv_fwd(x, w, b, act, bb):
+    y = _conv_raw(x, w, b, act, bb)
+    return y, (x, w, y)
+
+
+def _conv_bwd(act, bb, res, g):
+    x, w, y = res
+    if act == "relu":
+        g = g * (y > 0.0).astype(g.dtype)
+    batch, hh, ww, cin = x.shape
+    kh, kw, _, cout = w.shape
+    ph, pw = kh // 2, kw // 2
+
+    db = g.sum(axis=(0, 1, 2))
+
+    # dw = patchesᵀ @ g — one Pallas matmul over the full im2col matrix.
+    xp = jnp.pad(x, ((0, 0), (ph, ph), (pw, pw), (0, 0)))
+    windows = [
+        xp[:, i : i + hh, j : j + ww, :]
+        for i in range(kh)
+        for j in range(kw)
+    ]
+    patches = jnp.concatenate(windows, axis=3).reshape(
+        batch * hh * ww, kh * kw * cin
+    )
+    gm = g.reshape(batch * hh * ww, cout)
+    zero_n = jnp.zeros((cout,), jnp.float32)
+    dw = _matmul_raw(
+        patches.T, gm, zero_n, "none", 4096, 512, 4096
+    ).reshape(kh, kw, cin, cout)
+
+    # dx = 'same' conv of g with the spatially-flipped, channel-swapped w.
+    w_flip = jnp.flip(w, axis=(0, 1)).transpose(0, 1, 3, 2)  # [KH,KW,O,C]
+    dx = _conv_raw(g, w_flip, jnp.zeros((cin,), jnp.float32), "none", bb)
+
+    return dx, dw, db
+
+
+conv2d_bias_act.defvjp(_conv_fwd, _conv_bwd)

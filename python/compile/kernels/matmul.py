@@ -1,0 +1,146 @@
+"""Fused tiled matmul + bias + activation as a Pallas kernel.
+
+This is the Layer-1 compute hot-spot of the reproduction: both models'
+dense layers and (via im2col in :mod:`conv2d`) all conv layers reduce to
+this kernel, and its custom VJP routes the backward matmuls
+(dx = g @ wᵀ, dw = xᵀ @ g) through the same kernel.
+
+TPU thinking (DESIGN.md §Hardware-Adaptation): the grid walks (M/bm,
+N/bn, K/bk) tiles; each program keeps one (bm, bn) output tile resident
+in VMEM while streaming (bm, bk) / (bk, bn) input tiles from HBM, and
+the inner ``jnp.dot`` maps onto the MXU.  Default blocks are 128-aligned
+— the MXU systolic array is 128×128 — and shrink (8-aligned) only when a
+dimension is smaller than a full tile.  VMEM footprint per program is
+(bm·bk + bk·bn + bm·bn + bn)·4 B ≈ 192 KiB at the 128³ default, well
+under the ~16 MiB/core budget, leaving room for double-buffering.
+
+``interpret=True`` everywhere: the CPU PJRT backend executes the
+interpreter lowering; a real TPU build would flip this flag only.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Two schedules (DESIGN.md §Hardware-Adaptation + §Perf):
+#
+# * TPU_BLOCKS — the 128-aligned MXU tiling a real-TPU build would use
+#   (VMEM ≈ 192 KiB/program, double-buffer friendly).
+# * CPU_BLOCKS — coarse whole(ish)-array blocks for the interpret-mode
+#   CPU artifact.  The Pallas interpreter charges ~1.5 ms of
+#   dynamic-slice/DUS machinery per grid step on this host (measured:
+#   128³ tiling = 50.6 ms vs 1.0 ms at grid≈1 for a (4096,216,48) GEMM,
+#   jnp.dot baseline 0.76 ms), so the CPU schedule minimizes grid steps.
+#   Numerical equivalence of the two schedules is pytest-enforced.
+TPU_BLOCKS = (128, 128, 128)
+CPU_BLOCKS = (4096, 512, 2048)
+DEFAULT_BM, DEFAULT_BN, DEFAULT_BK = CPU_BLOCKS
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def _pick_block(dim: int, cap: int) -> int:
+    """Block size for one dimension: a full `cap` tile when the dim is
+    large enough, otherwise the whole (8-aligned) dimension."""
+    if dim >= cap:
+        return cap
+    return _round_up(max(dim, 1), 8)
+
+
+def _matmul_kernel(x_ref, w_ref, b_ref, o_ref, *, nk: int, act: str):
+    """One (bm, bn) output tile; grid axis 2 walks the K tiles."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        y = o_ref[...] + b_ref[...]
+        if act == "relu":
+            y = jnp.maximum(y, 0.0)
+        o_ref[...] = y
+
+
+def _matmul_raw(x, w, b, act: str, bm: int, bn: int, bk: int):
+    """Pad to tile multiples, run the kernel, slice the result back."""
+    if act not in ("relu", "none"):
+        raise ValueError(f"unknown act {act!r}")
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, (x.shape, w.shape)
+    assert b.shape == (n,), b.shape
+
+    bm = _pick_block(m, bm)
+    bn = _pick_block(n, bn)
+    bk = _pick_block(k, bk)
+    mp, kp, np_ = _round_up(m, bm), _round_up(k, bk), _round_up(n, bn)
+
+    xp = jnp.pad(x, ((0, mp - m), (0, kp - k)))
+    wp = jnp.pad(w, ((0, kp - k), (0, np_ - n)))
+    bp = jnp.pad(b, (0, np_ - n))
+    nk = kp // bk
+
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, nk=nk, act=act),
+        grid=(mp // bm, np_ // bn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bn,), lambda i, j, kk: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(xp, wp, bp)
+    return out[:m, :n]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def matmul_bias_act(
+    x,
+    w,
+    b,
+    act: str = "relu",
+    bm: int = DEFAULT_BM,
+    bn: int = DEFAULT_BN,
+    bk: int = DEFAULT_BK,
+):
+    """y = act(x @ w + b) with x:[M,K], w:[K,N], b:[N].
+
+    Differentiable w.r.t. (x, w, b); the backward pass reuses the same
+    Pallas kernel for both backward matmuls.
+    """
+    return _matmul_raw(x, w, b, act, bm, bn, bk)
+
+
+def _mm_fwd(x, w, b, act, bm, bn, bk):
+    y = _matmul_raw(x, w, b, act, bm, bn, bk)
+    return y, (x, w, y)
+
+
+def _mm_bwd(act, bm, bn, bk, res, g):
+    x, w, y = res
+    if act == "relu":
+        g = g * (y > 0.0).astype(g.dtype)
+    n = w.shape[1]
+    zn = jnp.zeros((x.shape[0],), jnp.float32)
+    zk = jnp.zeros((w.shape[0],), jnp.float32)
+    # dx = g @ wᵀ, dw = xᵀ @ g — both through the Pallas kernel.
+    dx = _matmul_raw(g, w.T, zk, "none", bm, bk, bn)
+    dw = _matmul_raw(x.T, g, jnp.zeros((n,), jnp.float32), "none", bk, bn, bm)
+    db = g.sum(axis=0)
+    del zn
+    return dx, dw, db
+
+
+matmul_bias_act.defvjp(_mm_fwd, _mm_bwd)

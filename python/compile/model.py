@@ -1,0 +1,203 @@
+"""Layer-2 JAX models for the Hermes reproduction (build-time only).
+
+Two models, matching §V-A of the paper:
+
+- ``cnn``      — ~110K-parameter CNN for the IID (MNIST-like) dataset,
+                 plain SGD (η = 0.1 in Table I).
+- ``alexnet``  — ~990K-parameter downsized AlexNet for the non-IID
+                 (CIFAR-like) dataset, SGD + momentum (η = 0.001,
+                 momentum = 0.9 in Table I).
+
+All dense/conv compute routes through the Layer-1 Pallas kernels so the
+AOT artifact contains the kernel schedule.  Parameters are a flat *list*
+of arrays in a fixed order (the Rust runtime mirrors that order via
+``artifacts/manifest.json``).
+
+``train_step`` performs fwd + bwd + SGD(M) update in one XLA program and
+returns (new_params…, new_momentum…, loss, correct); ``eval_step``
+returns (loss, correct).  Learning rate and momentum are runtime scalar
+inputs so one artifact serves every hyper-parameter configuration.
+"""
+
+from dataclasses import dataclass, field
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import conv2d_bias_act, matmul_bias_act
+from .kernels.ref import maxpool2x2_ref as maxpool2x2
+
+
+@dataclass(frozen=True)
+class LayerSpec:
+    kind: str  # "conv" | "dense"
+    shape: Tuple[int, ...]  # weight shape
+    act: str  # "relu" | "none"
+    pool: bool = False  # 2x2 maxpool after activation (conv only)
+
+
+@dataclass(frozen=True)
+class ModelSpec:
+    name: str
+    input_shape: Tuple[int, int, int]  # H, W, C
+    num_classes: int
+    layers: Tuple[LayerSpec, ...] = field(default=())
+
+    @property
+    def param_shapes(self) -> List[Tuple[int, ...]]:
+        """Weight and bias shapes, interleaved [w0, b0, w1, b1, …]."""
+        out: List[Tuple[int, ...]] = []
+        for layer in self.layers:
+            out.append(layer.shape)
+            out.append((layer.shape[-1],))
+        return out
+
+    @property
+    def param_count(self) -> int:
+        total = 0
+        for s in self.param_shapes:
+            n = 1
+            for d in s:
+                n *= d
+            total += n
+        return total
+
+
+def _cnn_spec() -> ModelSpec:
+    """~110K params: 28×28×1 → conv8 → pool → conv16 → pool → 136 → 10."""
+    return ModelSpec(
+        name="cnn",
+        input_shape=(28, 28, 1),
+        num_classes=10,
+        layers=(
+            LayerSpec("conv", (3, 3, 1, 8), "relu", pool=True),
+            LayerSpec("conv", (3, 3, 8, 16), "relu", pool=True),
+            LayerSpec("dense", (7 * 7 * 16, 136), "relu"),
+            LayerSpec("dense", (136, 10), "none"),
+        ),
+    )
+
+
+def _alexnet_spec() -> ModelSpec:
+    """~990K params: downsized AlexNet for 32×32×3 (5 convs, 3 dense)."""
+    return ModelSpec(
+        name="alexnet",
+        input_shape=(32, 32, 3),
+        num_classes=10,
+        layers=(
+            LayerSpec("conv", (3, 3, 3, 24), "relu", pool=True),
+            LayerSpec("conv", (3, 3, 24, 48), "relu", pool=True),
+            LayerSpec("conv", (3, 3, 48, 64), "relu"),
+            LayerSpec("conv", (3, 3, 64, 64), "relu"),
+            LayerSpec("conv", (3, 3, 64, 48), "relu"),
+            LayerSpec("dense", (8 * 8 * 48, 284), "relu"),
+            LayerSpec("dense", (284, 64), "relu"),
+            LayerSpec("dense", (64, 10), "none"),
+        ),
+    )
+
+
+MODELS = {"cnn": _cnn_spec(), "alexnet": _alexnet_spec()}
+
+
+def init_params(spec: ModelSpec, key) -> List[jnp.ndarray]:
+    """He-normal weights, zero biases (the Rust host mirrors this)."""
+    params = []
+    for layer in spec.layers:
+        key, sub = jax.random.split(key)
+        fan_in = 1
+        for d in layer.shape[:-1]:
+            fan_in *= d
+        std = jnp.sqrt(2.0 / fan_in)
+        params.append(jax.random.normal(sub, layer.shape, jnp.float32) * std)
+        params.append(jnp.zeros((layer.shape[-1],), jnp.float32))
+    return params
+
+
+def forward(spec: ModelSpec, params: List[jnp.ndarray], x: jnp.ndarray):
+    """Logits for a batch x:[B,H,W,C]."""
+    h = x
+    idx = 0
+    for layer in spec.layers:
+        w, b = params[idx], params[idx + 1]
+        idx += 2
+        if layer.kind == "conv":
+            h = conv2d_bias_act(h, w, b, layer.act)
+            if layer.pool:
+                h = maxpool2x2(h)
+        else:
+            if h.ndim > 2:
+                h = h.reshape(h.shape[0], -1)
+            h = matmul_bias_act(h, w, b, layer.act)
+    return h
+
+
+def loss_and_correct(spec: ModelSpec, params, x, y):
+    """(mean xent loss, #correct) for a labelled batch."""
+    logits = forward(spec, params, x)
+    logz = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logz, y[:, None], axis=-1)[:, 0]
+    correct = (jnp.argmax(logits, axis=-1) == y).astype(jnp.float32).sum()
+    return nll.mean(), correct
+
+
+def make_train_step(spec: ModelSpec):
+    """fwd + bwd + SGD(M) update as one function of flat inputs.
+
+    Signature: (params… , momentum… , x, y, lr, mu) →
+               (new_params… , new_momentum… , loss, correct).
+    Momentum buffers are always present; plain SGD passes mu = 0 (the
+    buffers then carry the raw gradients, which the coordinator ignores).
+    """
+    n = len(spec.param_shapes)
+
+    def train_step(*args):
+        params = list(args[:n])
+        mom = list(args[n : 2 * n])
+        x, y, lr, mu = args[2 * n :]
+
+        def loss_fn(ps):
+            loss, correct = loss_and_correct(spec, ps, x, y)
+            return loss, correct
+
+        (loss, correct), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params
+        )
+        new_mom = [mu * m + g for m, g in zip(mom, grads)]
+        new_params = [p - lr * v for p, v in zip(params, new_mom)]
+        return tuple(new_params) + tuple(new_mom) + (loss, correct)
+
+    return train_step
+
+
+def make_eval_step(spec: ModelSpec):
+    """(params…, x, y) → (loss, correct)."""
+    n = len(spec.param_shapes)
+
+    def eval_step(*args):
+        params = list(args[:n])
+        x, y = args[n], args[n + 1]
+        return loss_and_correct(spec, params, x, y)
+
+    return eval_step
+
+
+def example_args_train(spec: ModelSpec, batch: int):
+    n_shapes = spec.param_shapes
+    h, w, c = spec.input_shape
+    args = [jax.ShapeDtypeStruct(s, jnp.float32) for s in n_shapes]
+    args += [jax.ShapeDtypeStruct(s, jnp.float32) for s in n_shapes]
+    args.append(jax.ShapeDtypeStruct((batch, h, w, c), jnp.float32))
+    args.append(jax.ShapeDtypeStruct((batch,), jnp.int32))
+    args.append(jax.ShapeDtypeStruct((), jnp.float32))  # lr
+    args.append(jax.ShapeDtypeStruct((), jnp.float32))  # momentum
+    return args
+
+
+def example_args_eval(spec: ModelSpec, batch: int):
+    h, w, c = spec.input_shape
+    args = [jax.ShapeDtypeStruct(s, jnp.float32) for s in spec.param_shapes]
+    args.append(jax.ShapeDtypeStruct((batch, h, w, c), jnp.float32))
+    args.append(jax.ShapeDtypeStruct((batch,), jnp.int32))
+    return args

@@ -1,0 +1,185 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes/regimes; explicit cases pin the block-edge and
+padding behaviour.  Both the CPU-interpret (coarse) and TPU (128-tiled)
+schedules must agree with the reference — the artifact uses the former,
+DESIGN.md's roofline estimate the latter.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import conv2d_bias_act, matmul_bias_act, ref
+from compile.kernels.matmul import TPU_BLOCKS
+
+FWD_TOL = dict(rtol=1e-4, atol=1e-4)
+BWD_TOL = dict(rtol=1e-3, atol=1e-3)
+
+
+def _rand(key, shape, scale=1.0):
+    return scale * jax.random.normal(jax.random.PRNGKey(key), shape)
+
+
+# ---------------------------------------------------------------- matmul
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 70),
+    k=st.integers(1, 90),
+    n=st.integers(1, 70),
+    act=st.sampled_from(["relu", "none"]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_forward_matches_ref(m, k, n, act, seed):
+    x = _rand(seed, (m, k))
+    w = _rand(seed + 1, (k, n))
+    b = _rand(seed + 2, (n,))
+    got = matmul_bias_act(x, w, b, act)
+    want = ref.matmul_bias_act_ref(x, w, b, act)
+    np.testing.assert_allclose(got, want, **FWD_TOL)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    m=st.integers(2, 40),
+    k=st.integers(2, 60),
+    n=st.integers(2, 40),
+    act=st.sampled_from(["relu", "none"]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_grad_matches_ref(m, k, n, act, seed):
+    x = _rand(seed, (m, k))
+    w = _rand(seed + 1, (k, n))
+    b = _rand(seed + 2, (n,))
+
+    def f_kernel(x, w, b):
+        return (matmul_bias_act(x, w, b, act) ** 2).sum()
+
+    def f_ref(x, w, b):
+        return (ref.matmul_bias_act_ref(x, w, b, act) ** 2).sum()
+
+    got = jax.grad(f_kernel, argnums=(0, 1, 2))(x, w, b)
+    want = jax.grad(f_ref, argnums=(0, 1, 2))(x, w, b)
+    for g, r in zip(got, want):
+        np.testing.assert_allclose(g, r, **BWD_TOL)
+
+
+@pytest.mark.parametrize(
+    "m,k,n",
+    [
+        (1, 1, 1),  # degenerate
+        (128, 128, 128),  # exactly one TPU tile
+        (129, 257, 130),  # one past the tile edge (padding path)
+        (16, 784, 136),  # the CNN fc1 shape
+    ],
+)
+def test_matmul_edge_shapes(m, k, n):
+    x = _rand(7, (m, k))
+    w = _rand(8, (k, n))
+    b = _rand(9, (n,))
+    got = matmul_bias_act(x, w, b, "relu")
+    want = ref.matmul_bias_act_ref(x, w, b, "relu")
+    np.testing.assert_allclose(got, want, **FWD_TOL)
+
+
+def test_matmul_tpu_schedule_matches_cpu_schedule():
+    """The 128-tiled TPU schedule and the coarse CPU schedule are the
+    same function (only the HBM↔VMEM walk differs)."""
+    x = _rand(1, (150, 300))
+    w = _rand(2, (300, 140))
+    b = _rand(3, (140,))
+    bm, bn, bk = TPU_BLOCKS
+    tiled = matmul_bias_act(x, w, b, "relu", bm, bn, bk)
+    coarse = matmul_bias_act(x, w, b, "relu")
+    # fp32 accumulation order differs between the schedules.
+    np.testing.assert_allclose(tiled, coarse, rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_rejects_unknown_act():
+    x = _rand(1, (4, 4))
+    with pytest.raises(ValueError):
+        matmul_bias_act(x, x, x[0], "gelu")
+
+
+def test_conv_rejects_unknown_act():
+    x = _rand(1, (1, 4, 4, 1))
+    w = _rand(2, (3, 3, 1, 2))
+    with pytest.raises(ValueError):
+        conv2d_bias_act(x, w, jnp.zeros((2,)), "gelu")
+
+
+# ---------------------------------------------------------------- conv2d
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    b=st.integers(1, 9),
+    hw=st.integers(4, 14),
+    cin=st.integers(1, 6),
+    cout=st.integers(1, 8),
+    act=st.sampled_from(["relu", "none"]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_conv_forward_matches_ref(b, hw, cin, cout, act, seed):
+    x = _rand(seed, (b, hw, hw, cin))
+    w = _rand(seed + 1, (3, 3, cin, cout), 0.5)
+    bias = _rand(seed + 2, (cout,))
+    got = conv2d_bias_act(x, w, bias, act)
+    want = ref.conv2d_bias_act_ref(x, w, bias, act)
+    np.testing.assert_allclose(got, want, **FWD_TOL)
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    b=st.integers(1, 5),
+    hw=st.integers(4, 10),
+    cin=st.integers(1, 4),
+    cout=st.integers(1, 5),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_conv_grad_matches_ref(b, hw, cin, cout, seed):
+    x = _rand(seed, (b, hw, hw, cin))
+    w = _rand(seed + 1, (3, 3, cin, cout), 0.5)
+    bias = _rand(seed + 2, (cout,))
+
+    def f_kernel(x, w, b):
+        return (conv2d_bias_act(x, w, b, "relu") ** 2).sum()
+
+    def f_ref(x, w, b):
+        return (ref.conv2d_bias_act_ref(x, w, b, "relu") ** 2).sum()
+
+    got = jax.grad(f_kernel, argnums=(0, 1, 2))(x, w, bias)
+    want = jax.grad(f_ref, argnums=(0, 1, 2))(x, w, bias)
+    for g, r in zip(got, want):
+        np.testing.assert_allclose(g, r, **BWD_TOL)
+
+
+def test_conv_5x5_taps():
+    x = _rand(4, (2, 9, 9, 3))
+    w = _rand(5, (5, 5, 3, 4), 0.3)
+    bias = _rand(6, (4,))
+    got = conv2d_bias_act(x, w, bias, "relu")
+    want = ref.conv2d_bias_act_ref(x, w, bias, "relu")
+    np.testing.assert_allclose(got, want, **FWD_TOL)
+
+
+def test_conv_batch_tiling_pads_correctly():
+    """Batch not divisible by the tile: padded rows must not leak."""
+    x = _rand(10, (5, 8, 8, 2))
+    w = _rand(11, (3, 3, 2, 3), 0.5)
+    bias = _rand(12, (3,))
+    got = conv2d_bias_act(x, w, bias, "none", 4)  # bb=4, batch=5
+    want = ref.conv2d_bias_act_ref(x, w, bias, "none")
+    np.testing.assert_allclose(got, want, **FWD_TOL)
+
+
+def test_conv_even_taps_rejected():
+    x = _rand(1, (1, 4, 4, 1))
+    w = _rand(2, (2, 2, 1, 1))
+    with pytest.raises(AssertionError):
+        conv2d_bias_act(x, w, jnp.zeros((1,)), "none")

@@ -1,0 +1,133 @@
+"""L2 correctness: model shapes, parameter counts, train/eval semantics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import ref
+from compile.model import (
+    MODELS,
+    example_args_eval,
+    example_args_train,
+    forward,
+    init_params,
+    loss_and_correct,
+    make_eval_step,
+    make_train_step,
+)
+
+
+@pytest.fixture(scope="module")
+def cnn():
+    return MODELS["cnn"]
+
+
+@pytest.fixture(scope="module")
+def alexnet():
+    return MODELS["alexnet"]
+
+
+def test_param_counts_match_paper(cnn, alexnet):
+    # §V-A: "approximately 110K" / "approximately 990K".
+    assert abs(cnn.param_count - 110_000) < 5_000, cnn.param_count
+    assert abs(alexnet.param_count - 990_000) < 20_000, alexnet.param_count
+
+
+def test_param_shapes_interleave_weights_and_biases(cnn):
+    shapes = cnn.param_shapes
+    assert len(shapes) == 2 * len(cnn.layers)
+    for i, layer in enumerate(cnn.layers):
+        assert tuple(shapes[2 * i]) == layer.shape
+        assert tuple(shapes[2 * i + 1]) == (layer.shape[-1],)
+
+
+@pytest.mark.parametrize("name", ["cnn", "alexnet"])
+def test_forward_shape_and_finite(name):
+    spec = MODELS[name]
+    params = init_params(spec, jax.random.PRNGKey(0))
+    h, w, c = spec.input_shape
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, h, w, c))
+    logits = forward(spec, params, x)
+    assert logits.shape == (4, spec.num_classes)
+    assert bool(jnp.isfinite(logits).all())
+
+
+def test_loss_matches_ref_xent(cnn):
+    params = init_params(cnn, jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (8, 28, 28, 1))
+    y = jax.random.randint(jax.random.PRNGKey(2), (8,), 0, 10)
+    loss, correct = loss_and_correct(cnn, params, x, y)
+    logits = forward(cnn, params, x)
+    want = ref.softmax_xent_ref(logits, y)
+    np.testing.assert_allclose(loss, want, rtol=1e-5)
+    assert 0 <= float(correct) <= 8
+
+
+def test_train_step_zero_lr_is_identity(cnn):
+    ts = make_train_step(cnn)
+    n = len(cnn.param_shapes)
+    params = init_params(cnn, jax.random.PRNGKey(0))
+    mom = [jnp.zeros_like(p) for p in params]
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 28, 28, 1))
+    y = jax.random.randint(jax.random.PRNGKey(2), (4,), 0, 10)
+    out = ts(*params, *mom, x, y, jnp.float32(0.0), jnp.float32(0.0))
+    for p_new, p_old in zip(out[:n], params):
+        np.testing.assert_array_equal(p_new, p_old)
+
+
+def test_train_step_momentum_zero_buffers_carry_raw_gradient(cnn):
+    """With mu=0 the returned momentum buffers are the raw gradients:
+    new_p = p − lr·g must hold exactly."""
+    ts = make_train_step(cnn)
+    n = len(cnn.param_shapes)
+    params = init_params(cnn, jax.random.PRNGKey(0))
+    mom = [jnp.ones_like(p) for p in params]  # stale junk; must be ignored
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 28, 28, 1))
+    y = jax.random.randint(jax.random.PRNGKey(2), (4,), 0, 10)
+    lr = jnp.float32(0.1)
+    out = ts(*params, *mom, x, y, lr, jnp.float32(0.0))
+    for p_new, p_old, g in zip(out[:n], params, out[n : 2 * n]):
+        np.testing.assert_allclose(p_new, p_old - lr * g, rtol=1e-6)
+
+
+def test_train_step_decreases_loss_on_fixed_batch(cnn):
+    ts = jax.jit(make_train_step(cnn))
+    n = len(cnn.param_shapes)
+    params = init_params(cnn, jax.random.PRNGKey(0))
+    mom = [jnp.zeros_like(p) for p in params]
+    x = jax.random.normal(jax.random.PRNGKey(1), (16, 28, 28, 1))
+    y = jax.random.randint(jax.random.PRNGKey(2), (16,), 0, 10)
+    losses = []
+    for _ in range(10):
+        out = ts(*params, *mom, x, y, jnp.float32(0.05), jnp.float32(0.0))
+        params = list(out[:n])
+        mom = list(out[n : 2 * n])
+        losses.append(float(out[2 * n]))
+    assert losses[-1] < losses[0] * 0.7, losses
+
+
+def test_eval_step_matches_loss_and_correct(alexnet):
+    es = make_eval_step(alexnet)
+    params = init_params(alexnet, jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (8, 32, 32, 3))
+    y = jax.random.randint(jax.random.PRNGKey(2), (8,), 0, 10)
+    loss, correct = es(*params, x, y)
+    want_loss, want_correct = loss_and_correct(alexnet, params, x, y)
+    np.testing.assert_allclose(loss, want_loss, rtol=1e-6)
+    np.testing.assert_allclose(correct, want_correct)
+
+
+@pytest.mark.parametrize("name,batch", [("cnn", 16), ("alexnet", 16)])
+def test_example_args_match_step_signature(name, batch):
+    spec = MODELS[name]
+    n = len(spec.param_shapes)
+    train_args = example_args_train(spec, batch)
+    assert len(train_args) == 2 * n + 4
+    eval_args = example_args_eval(spec, batch)
+    assert len(eval_args) == n + 2
+    # Abstract-eval the jitted step against the declared signature.
+    out = jax.eval_shape(make_train_step(spec), *train_args)
+    assert len(out) == 2 * n + 2
+    for got, shape in zip(out[:n], spec.param_shapes):
+        assert got.shape == tuple(shape)

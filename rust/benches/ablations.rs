@@ -1,0 +1,83 @@
+//! Ablation benches (DESIGN.md §6): isolate each Hermes component on
+//! identical workloads —
+//!   gate      : HermesGUP vs SelSync's relative-gradient gate vs ASP
+//!   alloc     : dual-binary-search sizing vs static
+//!   fp16      : wire compression on/off
+//!   prefetch  : overlapped vs synchronous dataset shipping
+//!   alpha-dir : relax-toward-0 vs tighten (DESIGN.md §9 ambiguity)
+
+use hermes_dml::bench_harness::Bench;
+use hermes_dml::config::RunConfig;
+use hermes_dml::frameworks::run_framework;
+use hermes_dml::metrics::RunMetrics;
+use hermes_dml::runtime::MockRuntime;
+use hermes_dml::util::fmt_duration;
+
+fn base(fw: &str) -> RunConfig {
+    let mut cfg = RunConfig::new("mock", fw);
+    cfg.hp.lr = 0.5;
+    cfg.hp.ssp_staleness = 6;
+    cfg.hp.ebsp_lookahead = 4.0;
+    cfg.max_iters = 500;
+    cfg.target_acc = 0.92;
+    cfg
+}
+
+fn row(label: &str, r: &RunMetrics) {
+    println!(
+        "{label:<38} iters {:>5}  vt {:>8}  acc {:>6.2}%  bytes/iter {:>8.0}  WI {:>6.2}",
+        r.iterations,
+        fmt_duration(r.virtual_time),
+        r.final_accuracy * 100.0,
+        r.bytes as f64 / r.iterations.max(1) as f64,
+        r.wi_avg(),
+    );
+}
+
+fn main() {
+    Bench::report_header("ablate_gate: what gates pushes?");
+    for (label, cfg) in [
+        ("hermes (GUP, test-loss z-score)", base("hermes")),
+        ("selsync (relative gradient change)", base("selsync")),
+        ("asp (no gate: push every iteration)", base("asp")),
+    ] {
+        let r = run_framework(cfg, Box::new(MockRuntime::new())).unwrap();
+        row(label, &r);
+    }
+
+    Bench::report_header("ablate_alloc: dynamic sizing on/off");
+    for dynamic in [true, false] {
+        let mut cfg = base("hermes");
+        cfg.dynamic_alloc = dynamic;
+        cfg.target_acc = 1.5;
+        cfg.max_iters = 600;
+        let r = run_framework(cfg, Box::new(MockRuntime::new())).unwrap();
+        row(if dynamic { "dual binary search" } else { "static allocation" }, &r);
+    }
+
+    Bench::report_header("ablate_fp16: wire compression");
+    for fp16 in [true, false] {
+        let mut cfg = base("hermes");
+        cfg.net.fp16_wire = fp16;
+        let r = run_framework(cfg, Box::new(MockRuntime::new())).unwrap();
+        row(if fp16 { "fp16 tensors" } else { "fp32 tensors" }, &r);
+    }
+
+    Bench::report_header("ablate_prefetch: dataset shipping");
+    for prefetch in [true, false] {
+        let mut cfg = base("hermes");
+        cfg.prefetch = prefetch;
+        cfg.target_acc = 1.5;
+        cfg.max_iters = 600;
+        let r = run_framework(cfg, Box::new(MockRuntime::new())).unwrap();
+        row(if prefetch { "prefetched" } else { "synchronous" }, &r);
+    }
+
+    Bench::report_header("ablate_alpha_dir: α decay direction (DESIGN.md §9)");
+    for relax in [true, false] {
+        let mut cfg = base("hermes");
+        cfg.alpha_relax = relax;
+        let r = run_framework(cfg, Box::new(MockRuntime::new())).unwrap();
+        row(if relax { "relax toward 0 (§VI-B reading)" } else { "tighten (more negative)" }, &r);
+    }
+}

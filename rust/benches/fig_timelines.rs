@@ -1,0 +1,29 @@
+//! Figure-regeneration bench: times the drivers behind Figs. 1/10
+//! (timelines), 2 (cycle breakdown), 3 (ASP oscillation), 4/5 (BSP
+//! waits), 11–14 (Hermes behaviour) on the mock backend.
+
+use std::path::Path;
+use std::time::Instant;
+
+use hermes_dml::bench_harness::Bench;
+use hermes_dml::exp;
+
+fn timed(name: &str, f: impl FnOnce() -> anyhow::Result<()>) {
+    let t0 = Instant::now();
+    f().unwrap();
+    println!(">> {name}: {:.2}s wall", t0.elapsed().as_secs_f64());
+}
+
+fn main() {
+    Bench::report_header("figure regeneration (mock backend)");
+    let out = std::env::temp_dir().join("hermes_bench_figs");
+    let arts = Path::new("artifacts");
+    timed("fig1+fig10 timelines", || exp::fig1_timelines(&out, "mock", arts));
+    timed("fig2 breakdown", || exp::fig2_breakdown(&out, "mock", arts));
+    timed("fig3 asp oscillation", || exp::fig3_asp_oscillation(&out, "mock", arts));
+    timed("fig4+fig5 bsp waits", || exp::fig4_fig5_bsp(&out, "mock", arts));
+    timed("fig11 hermes curves", || exp::fig11_hermes(&out, "mock", arts));
+    timed("fig12 dynamic sizing", || exp::fig12_dynamic_sizing(&out, "mock", arts));
+    timed("fig13 major updates", || exp::fig13_major_updates(&out, "mock", arts));
+    timed("fig14 alpha/beta sweep", || exp::fig14_alpha_beta(&out, "mock", arts));
+}

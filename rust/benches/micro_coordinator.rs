@@ -1,0 +1,88 @@
+//! Coordinator hot-path micro-benchmarks: the GUP gate, the dual binary
+//! search, the IQR rebalancing pass, PS aggregation algebra at real
+//! model sizes (110K and 995K params), wire codec and fp16 throughput.
+
+use hermes_dml::alloc::{dual_binary_search, rebalance_pass, Allocation, TimeMonitor, MBS_DOMAIN};
+use hermes_dml::bench_harness::Bench;
+use hermes_dml::gup::Gup;
+use hermes_dml::tensor::{ParamVec, Tensor};
+use hermes_dml::util::f16;
+use hermes_dml::util::rng::Xoshiro256pp;
+use hermes_dml::wire::{Message, TensorPayload};
+
+fn params_of(n: usize) -> ParamVec {
+    let mut rng = Xoshiro256pp::seed_from_u64(1);
+    ParamVec {
+        tensors: vec![Tensor::new(
+            vec![n],
+            (0..n).map(|_| rng.normal() as f32).collect(),
+        )],
+    }
+}
+
+fn main() {
+    let mut b = Bench::new().with_budget(1.0).with_max_iters(2000);
+
+    Bench::report_header("HermesGUP gate");
+    let mut gup = Gup::new(10, -1.3, 0.1, 5, true);
+    let mut rng = Xoshiro256pp::seed_from_u64(2);
+    let mut x = 2.3f64;
+    b.run("gup.observe (window 10)", || {
+        x = (x * 0.999 + 0.01 * rng.normal().abs()).max(0.01);
+        std::hint::black_box(gup.observe(x));
+    });
+
+    Bench::report_header("dual binary search + IQR pass (12 workers)");
+    b.run("dual_binary_search (dss_max 100k)", || {
+        std::hint::black_box(dual_binary_search(0.13, 1, 7.7, 100_000, &MBS_DOMAIN));
+    });
+    let mut mon = TimeMonitor::new(12);
+    for w in 0..12 {
+        mon.record(w, if w < 2 { 24.0 } else { 7.0 + 0.1 * w as f64 });
+    }
+    let current = vec![Allocation { dss: 1000, mbs: 16, modeled: 7.7 }; 12];
+    let caps = vec![100_000; 12];
+    b.run("rebalance_pass (12 workers)", || {
+        std::hint::black_box(rebalance_pass(&mon, 1, &current, &caps, &MBS_DOMAIN));
+    });
+
+    for (label, n) in [("cnn 110K", 109_378usize), ("alexnet 995K", 995_046)] {
+        Bench::report_header(&format!("PS aggregation algebra ({label})"));
+        let a = params_of(n);
+        let bb = params_of(n);
+        let mut acc = ParamVec::zeros_like(&a);
+        b.run(&format!("axpy ({label})"), || {
+            acc.axpy(0.5, &a);
+        });
+        b.run(&format!("weighted_sum ({label})"), || {
+            std::hint::black_box(ParamVec::weighted_sum(&a, 0.4, &bb, 0.6));
+        });
+        b.run(&format!("delta_over_eta ({label})"), || {
+            std::hint::black_box(a.delta_over_eta(&bb, 0.05));
+        });
+
+        Bench::report_header(&format!("wire codec ({label})"));
+        let msg = Message::GlobalModel {
+            version: 1,
+            params: TensorPayload::new(a.clone(), false),
+        };
+        b.run(&format!("encode f32 ({label})"), || {
+            std::hint::black_box(msg.encode());
+        });
+        let enc = msg.encode();
+        b.run(&format!("decode f32 ({label})"), || {
+            std::hint::black_box(Message::decode(&enc).unwrap());
+        });
+        let msg16 = Message::GlobalModel {
+            version: 1,
+            params: TensorPayload::new(a.clone(), true),
+        };
+        b.run(&format!("encode fp16 ({label})"), || {
+            std::hint::black_box(msg16.encode());
+        });
+        let data = a.tensors[0].data();
+        b.run(&format!("f16 codec roundtrip ({label})"), || {
+            std::hint::black_box(f16::decode_f16(&f16::encode_f16(data)));
+        });
+    }
+}

@@ -1,0 +1,64 @@
+//! Runtime micro-benchmarks: PJRT execute latency for the compiled
+//! train/eval artifacts per batch size (the L3↔L2 seam the whole
+//! simulator rides on), vs the host mock step.
+
+use std::path::Path;
+
+use hermes_dml::bench_harness::Bench;
+use hermes_dml::runtime::{init_params, Manifest, MockRuntime, ModelRuntime, XlaRuntime};
+use hermes_dml::tensor::ParamVec;
+use hermes_dml::util::rng::Xoshiro256pp;
+
+fn batch(elems: usize, n: usize, seed: u64) -> (Vec<f32>, Vec<i32>) {
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    let x = (0..n * elems).map(|_| rng.normal() as f32).collect();
+    let y = (0..n).map(|_| rng.next_below(10) as i32).collect();
+    (x, y)
+}
+
+fn bench_runtime(b: &mut Bench, label: &str, rt: &mut dyn ModelRuntime) {
+    let meta = rt.meta().clone();
+    let params = init_params(&meta, 7);
+    let mom = ParamVec::zeros_like(&params);
+    for &mbs in &meta.train_batches.clone() {
+        let (x, y) = batch(meta.input_elems(), mbs, mbs as u64);
+        b.run(&format!("{label} train_step b{mbs}"), || {
+            std::hint::black_box(
+                rt.train_step(&params, &mom, &x, &y, mbs, 0.05, 0.0).unwrap(),
+            );
+        });
+    }
+    let (x, y) = batch(meta.input_elems(), meta.eval_batch, 99);
+    b.run(&format!("{label} eval_step b{}", meta.eval_batch), || {
+        std::hint::black_box(rt.eval_step(&params, &x, &y).unwrap());
+    });
+}
+
+fn main() {
+    let mut b = Bench::new().with_budget(1.5).with_max_iters(300);
+
+    Bench::report_header("mock runtime (host softmax regression)");
+    let mut mock = MockRuntime::new();
+    let meta = mock.meta().clone();
+    let params = init_params(&meta, 7);
+    let mom = ParamVec::zeros_like(&params);
+    let (x, y) = batch(meta.input_elems(), 16, 1);
+    b.run("mock train_step b16", || {
+        std::hint::black_box(
+            mock.train_step(&params, &mom, &x, &y, 16, 0.5, 0.0).unwrap(),
+        );
+    });
+
+    let arts = Path::new("artifacts");
+    if !arts.join("manifest.json").exists() {
+        println!("(PJRT pass skipped: run `make artifacts`)");
+        return;
+    }
+    let manifest = Manifest::load(arts).unwrap();
+    for model in ["cnn", "alexnet"] {
+        Bench::report_header(&format!("PJRT runtime — {model}"));
+        let mut rt =
+            XlaRuntime::from_artifacts(manifest.model(model).unwrap(), None).unwrap();
+        bench_runtime(&mut b, model, &mut rt);
+    }
+}

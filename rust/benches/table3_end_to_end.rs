@@ -1,0 +1,38 @@
+//! Table III regeneration bench: end-to-end run of every framework
+//! (BSP/ASP/SSP/EBSP + three Hermes settings), timed, with the paper's
+//! columns printed.  Mock backend always; the real CNN backend runs
+//! when artifacts are present (skip with HERMES_BENCH_FAST=1).
+
+use std::path::Path;
+use std::time::Instant;
+
+use hermes_dml::bench_harness::Bench;
+use hermes_dml::exp;
+
+fn main() {
+    Bench::report_header("Table III end-to-end (mock backend)");
+    let out = std::env::temp_dir().join("hermes_bench_table3");
+    let t0 = Instant::now();
+    let rows = exp::table3(&out, "mock", Path::new("artifacts")).unwrap();
+    println!(
+        "table3[mock]: {} framework runs in {:.2}s wall",
+        rows.len(),
+        t0.elapsed().as_secs_f64()
+    );
+
+    let artifacts = Path::new("artifacts");
+    if artifacts.join("manifest.json").exists()
+        && std::env::var("HERMES_BENCH_FAST").is_err()
+    {
+        Bench::report_header("Table III end-to-end (real CNN via PJRT)");
+        let t0 = Instant::now();
+        let rows = exp::table3(&out, "cnn", artifacts).unwrap();
+        println!(
+            "table3[cnn]: {} framework runs in {:.2}s wall",
+            rows.len(),
+            t0.elapsed().as_secs_f64()
+        );
+    } else {
+        println!("(real-CNN pass skipped: artifacts missing or HERMES_BENCH_FAST set)");
+    }
+}

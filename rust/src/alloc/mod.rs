@@ -1,0 +1,300 @@
+//! Dynamic dataset/mini-batch allocation (§IV-A, Fig. 7):
+//!
+//! 1. The PS watches per-worker training times and flags IQR outliers
+//!    (stragglers *and* under-utilized fast nodes).
+//! 2. For a flagged node it estimates the Eq. 3 coefficient `K` from
+//!    the observed time, then runs the **dual binary search** — an
+//!    outer binary search over the power-of-two MBS domain and an inner
+//!    binary search over DSS ∈ [1, dss_max] — to land the node's next
+//!    iteration at the cluster-median time `t_median`.
+//!    Complexity O(lg N · lg K) ≈ O(lg N), as the paper argues.
+//! 3. The new assignment is prefetched so the worker never idles.
+
+use crate::util::stats;
+
+/// Power-of-two MBS domain from the paper ([2, 4, …, 256]).
+pub const MBS_DOMAIN: [usize; 8] = [2, 4, 8, 16, 32, 64, 128, 256];
+
+/// Eq. 3: t = K · E · DSS / MBS.
+pub fn modeled_time(k: f64, epochs: usize, dss: usize, mbs: usize) -> f64 {
+    k * epochs as f64 * dss as f64 / mbs as f64
+}
+
+/// Recover K from one observed iteration (the "initial run" of §IV-A).
+pub fn estimate_k(observed_t: f64, epochs: usize, dss: usize, mbs: usize) -> f64 {
+    observed_t * mbs as f64 / (epochs as f64 * dss as f64)
+}
+
+/// A (DSS, MBS) assignment and its modeled time.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Allocation {
+    pub dss: usize,
+    pub mbs: usize,
+    pub modeled: f64,
+}
+
+/// Per-worker observation history the PS keeps (the asynchronous
+/// monitor of Fig. 6(d)).
+#[derive(Debug, Clone, Default)]
+pub struct TimeMonitor {
+    /// Most recent training time per worker (NaN = no sample yet).
+    last: Vec<f64>,
+}
+
+/// One rebalancing decision.
+#[derive(Debug, Clone)]
+pub struct Rebalance {
+    pub worker: usize,
+    pub alloc: Allocation,
+    pub was_straggler: bool,
+}
+
+impl TimeMonitor {
+    pub fn new(n_workers: usize) -> Self {
+        TimeMonitor { last: vec![f64::NAN; n_workers] }
+    }
+
+    pub fn record(&mut self, worker: usize, t: f64) {
+        self.last[worker] = t;
+    }
+
+    pub fn have_all(&self) -> bool {
+        self.last.iter().all(|t| t.is_finite())
+    }
+
+    pub fn times(&self) -> Vec<f64> {
+        self.last.iter().copied().filter(|t| t.is_finite()).collect()
+    }
+
+    /// Median of the latest per-worker times (t_median in §IV-A).
+    pub fn median(&self) -> Option<f64> {
+        let ts = self.times();
+        if ts.is_empty() {
+            None
+        } else {
+            Some(stats::median(&ts))
+        }
+    }
+
+    /// Workers whose latest time is an IQR outlier.
+    pub fn outliers(&self) -> Vec<usize> {
+        let ts = self.times();
+        if ts.len() < 4 {
+            return Vec::new();
+        }
+        let f = stats::iqr_fences(&ts);
+        self.last
+            .iter()
+            .enumerate()
+            .filter(|(_, t)| t.is_finite() && (**t < f.lo || **t > f.hi))
+            .map(|(i, _)| i)
+            .collect()
+    }
+}
+
+/// Inner binary search: largest DSS in [1, dss_max] with modeled time
+/// ≤ t_target (monotone increasing in DSS).
+fn search_dss(k: f64, epochs: usize, mbs: usize, t_target: f64, dss_max: usize) -> usize {
+    let (mut lo, mut hi) = (1usize, dss_max.max(1));
+    // Entire range too slow ⇒ smallest possible.
+    if modeled_time(k, epochs, 1, mbs) > t_target {
+        return 1;
+    }
+    while lo < hi {
+        let mid = (lo + hi + 1) / 2;
+        if modeled_time(k, epochs, mid, mbs) <= t_target {
+            lo = mid;
+        } else {
+            hi = mid - 1;
+        }
+    }
+    lo
+}
+
+/// The dual binary search of Fig. 7.
+///
+/// Outer: binary search the sorted MBS domain for the smallest MBS
+/// whose optimal DSS still fits `dss_max` (optimal DSS grows with MBS —
+/// monotone, so binary search is valid).  Smaller MBS ⇒ more gradient
+/// steps per sample budget, which is the statistically efficient choice
+/// [Perrone et al., cited as the paper's (15)]; the memory/time budget
+/// is what forces MBS up.
+/// Inner: binary search DSS to land on `t_target`.
+pub fn dual_binary_search(
+    k: f64,
+    epochs: usize,
+    t_target: f64,
+    dss_max: usize,
+    mbs_domain: &[usize],
+) -> Allocation {
+    assert!(!mbs_domain.is_empty());
+    assert!(k > 0.0 && t_target > 0.0);
+    // Outer binary search over the (sorted) MBS domain: find the
+    // smallest MBS whose time-optimal DSS saturates neither the time
+    // target nor dss_max.
+    let (mut lo, mut hi) = (0usize, mbs_domain.len() - 1);
+    while lo < hi {
+        let mid = (lo + hi) / 2;
+        let dss_star = search_dss(k, epochs, mbs_domain[mid], t_target, dss_max);
+        // If at this MBS we can already hit the target within dss_max,
+        // smaller MBS suffices; otherwise go larger.
+        let t = modeled_time(k, epochs, dss_star, mbs_domain[mid]);
+        if dss_star < dss_max || t >= 0.95 * t_target {
+            hi = mid;
+        } else {
+            lo = mid + 1;
+        }
+    }
+    let mbs = mbs_domain[lo];
+    let dss = search_dss(k, epochs, mbs, t_target, dss_max);
+    Allocation { dss, mbs, modeled: modeled_time(k, epochs, dss, mbs) }
+}
+
+/// Full §IV-A rebalancing pass: IQR-flag outliers, retarget each to the
+/// median via the dual binary search.
+pub fn rebalance_pass(
+    monitor: &TimeMonitor,
+    epochs: usize,
+    current: &[Allocation],
+    dss_caps: &[usize],
+    mbs_domain: &[usize],
+) -> Vec<Rebalance> {
+    let Some(t_median) = monitor.median() else {
+        return Vec::new();
+    };
+    let mut out = Vec::new();
+    for worker in monitor.outliers() {
+        let observed = monitor.last[worker];
+        let cur = current[worker];
+        let k = estimate_k(observed, epochs, cur.dss, cur.mbs);
+        let alloc =
+            dual_binary_search(k, epochs, t_median, dss_caps[worker], mbs_domain);
+        out.push(Rebalance { worker, alloc, was_straggler: observed > t_median });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eq3_roundtrip() {
+        let k = 0.05;
+        let t = modeled_time(k, 2, 1000, 16);
+        assert!((t - 0.05 * 2.0 * 62.5).abs() < 1e-12);
+        assert!((estimate_k(t, 2, 1000, 16) - k).abs() < 1e-12);
+    }
+
+    #[test]
+    fn search_hits_target_within_one_step() {
+        // The inner search must land within one DSS step of the target
+        // (DESIGN.md §7 invariant) — here via the closed form.
+        for &k in &[0.01, 0.05, 0.13] {
+            for &mbs in &MBS_DOMAIN {
+                let t_target = 7.7;
+                let dss = search_dss(k, 1, mbs, t_target, 100_000);
+                let t = modeled_time(k, 1, dss, mbs);
+                assert!(t <= t_target + 1e-9, "k={k} mbs={mbs}: {t}");
+                if dss < 100_000 {
+                    let t_next = modeled_time(k, 1, dss + 1, mbs);
+                    assert!(t_next > t_target, "k={k} mbs={mbs}: not maximal");
+                    // Closed form agreement: dss* = ⌊t·mbs/(k·E)⌋.
+                    let closed = (t_target * mbs as f64 / k).floor() as usize;
+                    assert!(dss.abs_diff(closed) <= 1, "{dss} vs {closed}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dual_search_returns_valid_power_of_two_mbs() {
+        let a = dual_binary_search(0.13, 1, 7.7, 2500, &MBS_DOMAIN);
+        assert!(MBS_DOMAIN.contains(&a.mbs));
+        assert!(a.dss >= 1 && a.dss <= 2500);
+        assert!(a.modeled <= 7.7 + 1e-9);
+    }
+
+    #[test]
+    fn straggler_gets_less_data_fast_node_more() {
+        // Same target, straggler K ≫ fast K.
+        let straggler = dual_binary_search(0.13, 1, 7.7, 100_000, &MBS_DOMAIN);
+        let fast = dual_binary_search(0.026, 1, 7.7, 100_000, &MBS_DOMAIN);
+        let s_rate = straggler.dss as f64 / straggler.mbs as f64;
+        let f_rate = fast.dss as f64 / fast.mbs as f64;
+        // steps = dss/mbs must scale ~1/K at a fixed time target.
+        assert!(f_rate > 4.0 * s_rate, "fast {f_rate} vs straggler {s_rate}");
+        // Both still land at (≤, close to) the target.
+        assert!(straggler.modeled <= 7.7 + 1e-9);
+        assert!((fast.modeled - 7.7).abs() / 7.7 < 0.02);
+    }
+
+    #[test]
+    fn dss_cap_forces_larger_mbs() {
+        // With a tiny dss_max the searched MBS shrinks steps/sample so
+        // the target is approached from below without exceeding memory.
+        let a = dual_binary_search(0.01, 1, 10.0, 300, &MBS_DOMAIN);
+        assert!(a.dss <= 300);
+        // Uncapped, the same K/time would want thousands of samples.
+        let b = dual_binary_search(0.01, 1, 10.0, 100_000, &MBS_DOMAIN);
+        assert!(b.dss > 300);
+    }
+
+    #[test]
+    fn monitor_flags_stragglers_and_fast_outliers() {
+        let mut m = TimeMonitor::new(12);
+        for w in 0..10 {
+            m.record(w, 7.5 + 0.1 * (w % 3) as f64);
+        }
+        m.record(10, 24.0); // straggler
+        m.record(11, 0.7); // over-provisioned fast node
+        assert!(m.have_all());
+        let out = m.outliers();
+        assert!(out.contains(&10));
+        assert!(out.contains(&11));
+        assert_eq!(out.len(), 2);
+        let med = m.median().unwrap();
+        assert!((7.0..8.5).contains(&med), "{med}");
+    }
+
+    #[test]
+    fn rebalance_retargets_both_kinds_of_outlier() {
+        let mut m = TimeMonitor::new(6);
+        let times = [7.7, 7.5, 7.9, 7.6, 30.0, 1.0];
+        for (w, &t) in times.iter().enumerate() {
+            m.record(w, t);
+        }
+        let current = vec![Allocation { dss: 1000, mbs: 16, modeled: 7.7 }; 6];
+        let caps = vec![50_000; 6];
+        let rb = rebalance_pass(&m, 1, &current, &caps, &MBS_DOMAIN);
+        assert_eq!(rb.len(), 2);
+        let strag = rb.iter().find(|r| r.worker == 4).unwrap();
+        let fast = rb.iter().find(|r| r.worker == 5).unwrap();
+        assert!(strag.was_straggler);
+        assert!(!fast.was_straggler);
+        // Straggler's step budget shrinks; fast node's grows.
+        assert!(
+            (strag.alloc.dss as f64 / strag.alloc.mbs as f64)
+                < (1000.0 / 16.0)
+        );
+        assert!(
+            (fast.alloc.dss as f64 / fast.alloc.mbs as f64) > (1000.0 / 16.0)
+        );
+        // Both modeled times land at/below the cluster median.
+        let med = m.median().unwrap();
+        assert!(strag.alloc.modeled <= med + 1e-9);
+        assert!(fast.alloc.modeled <= med + 1e-9);
+        assert!(fast.alloc.modeled >= 0.8 * med);
+    }
+
+    #[test]
+    fn no_rebalance_when_cluster_is_homogeneous() {
+        let mut m = TimeMonitor::new(5);
+        for w in 0..5 {
+            m.record(w, 7.7);
+        }
+        let current = vec![Allocation { dss: 100, mbs: 16, modeled: 7.7 }; 5];
+        let rb = rebalance_pass(&m, 1, &current, &[1000; 5], &MBS_DOMAIN);
+        assert!(rb.is_empty());
+    }
+}

@@ -1,0 +1,156 @@
+//! Micro-benchmark harness (substrate — criterion is unavailable
+//! offline).  Warmup + timed iterations with mean / p50 / p95 / p99 and
+//! a stable text report; used by every target under `rust/benches/`.
+
+use std::time::Instant;
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    pub p99_ns: f64,
+    pub min_ns: f64,
+    pub max_ns: f64,
+}
+
+impl BenchResult {
+    pub fn line(&self) -> String {
+        format!(
+            "{:<44} {:>6} iters  mean {:>11}  p50 {:>11}  p95 {:>11}  p99 {:>11}",
+            self.name,
+            self.iters,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.p50_ns),
+            fmt_ns(self.p95_ns),
+            fmt_ns(self.p99_ns),
+        )
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1_000.0 {
+        format!("{ns:.0} ns")
+    } else if ns < 1_000_000.0 {
+        format!("{:.2} µs", ns / 1_000.0)
+    } else if ns < 1_000_000_000.0 {
+        format!("{:.2} ms", ns / 1_000_000.0)
+    } else {
+        format!("{:.3} s", ns / 1_000_000_000.0)
+    }
+}
+
+/// Runner with a time budget per benchmark.
+pub struct Bench {
+    warmup_iters: usize,
+    max_iters: usize,
+    budget_s: f64,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Bench {
+    pub fn new() -> Self {
+        Bench { warmup_iters: 3, max_iters: 200, budget_s: 3.0, results: Vec::new() }
+    }
+
+    pub fn with_budget(mut self, budget_s: f64) -> Self {
+        self.budget_s = budget_s;
+        self
+    }
+
+    pub fn with_max_iters(mut self, n: usize) -> Self {
+        self.max_iters = n;
+        self
+    }
+
+    pub fn with_warmup(mut self, n: usize) -> Self {
+        self.warmup_iters = n;
+        self
+    }
+
+    /// Time `f` repeatedly; returns and records the result.
+    pub fn run<F: FnMut()>(&mut self, name: &str, mut f: F) -> BenchResult {
+        for _ in 0..self.warmup_iters {
+            f();
+        }
+        let mut samples: Vec<f64> = Vec::new();
+        let start = Instant::now();
+        while samples.len() < self.max_iters
+            && (start.elapsed().as_secs_f64() < self.budget_s
+                || samples.len() < 5)
+        {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_nanos() as f64);
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let pct = |q: f64| -> f64 {
+            let pos = q * (samples.len() - 1) as f64;
+            let lo = pos.floor() as usize;
+            let hi = pos.ceil() as usize;
+            if lo == hi {
+                samples[lo]
+            } else {
+                samples[lo] * (hi as f64 - pos) + samples[hi] * (pos - lo as f64)
+            }
+        };
+        let result = BenchResult {
+            name: name.to_string(),
+            iters: samples.len(),
+            mean_ns: samples.iter().sum::<f64>() / samples.len() as f64,
+            p50_ns: pct(0.50),
+            p95_ns: pct(0.95),
+            p99_ns: pct(0.99),
+            min_ns: samples[0],
+            max_ns: samples[samples.len() - 1],
+        };
+        println!("{}", result.line());
+        self.results.push(result.clone());
+        result
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    pub fn report_header(title: &str) {
+        println!("\n=== {title} ===");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_sane() {
+        let mut b = Bench::new().with_budget(0.2).with_max_iters(50);
+        let mut acc = 0u64;
+        let r = b.run("spin", || {
+            for i in 0..10_000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+        });
+        assert!(r.iters >= 5);
+        assert!(r.mean_ns > 0.0);
+        assert!(r.p50_ns <= r.p95_ns && r.p95_ns <= r.p99_ns);
+        assert!(r.min_ns <= r.p50_ns && r.p99_ns <= r.max_ns);
+        std::hint::black_box(acc);
+    }
+
+    #[test]
+    fn formats_scales() {
+        assert_eq!(fmt_ns(500.0), "500 ns");
+        assert_eq!(fmt_ns(2_500.0), "2.50 µs");
+        assert_eq!(fmt_ns(3_000_000.0), "3.00 ms");
+        assert_eq!(fmt_ns(2_000_000_000.0), "2.000 s");
+    }
+}

@@ -1,0 +1,260 @@
+//! Tiny declarative CLI parser (substrate — no clap offline).
+//!
+//! Supports subcommands, `--flag`, `--key value` / `--key=value`, and
+//! positional arguments, with generated `--help` text.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+pub struct ArgSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub takes_value: bool,
+    pub default: Option<&'static str>,
+}
+
+#[derive(Debug, Default)]
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub args: Vec<ArgSpec>,
+    pub positionals: Vec<ArgSpec>,
+}
+
+impl Command {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Self { name, about, args: Vec::new(), positionals: Vec::new() }
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.args.push(ArgSpec { name, help, takes_value: false, default: None });
+        self
+    }
+
+    pub fn opt(
+        mut self,
+        name: &'static str,
+        default: &'static str,
+        help: &'static str,
+    ) -> Self {
+        self.args.push(ArgSpec {
+            name,
+            help,
+            takes_value: true,
+            default: Some(default),
+        });
+        self
+    }
+
+    /// Required option (no default).
+    pub fn req(mut self, name: &'static str, help: &'static str) -> Self {
+        self.args.push(ArgSpec { name, help, takes_value: true, default: None });
+        self
+    }
+
+    pub fn pos(mut self, name: &'static str, help: &'static str) -> Self {
+        self.positionals.push(ArgSpec {
+            name,
+            help,
+            takes_value: true,
+            default: None,
+        });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nUSAGE:\n  {}", self.name, self.about, self.name);
+        for p in &self.positionals {
+            s += &format!(" <{}>", p.name);
+        }
+        s += " [OPTIONS]\n\nOPTIONS:\n";
+        for a in &self.args {
+            let left = if a.takes_value {
+                format!("--{} <v>", a.name)
+            } else {
+                format!("--{}", a.name)
+            };
+            let def = a
+                .default
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            s += &format!("  {left:24} {}{def}\n", a.help);
+        }
+        for p in &self.positionals {
+            s += &format!("  <{}>{:20} {}\n", p.name, "", p.help);
+        }
+        s
+    }
+
+    /// Parse `argv` (not including the program/subcommand name).
+    pub fn parse(&self, argv: &[String]) -> Result<Matches, String> {
+        let mut values: BTreeMap<String, String> = BTreeMap::new();
+        let mut flags: Vec<String> = Vec::new();
+        let mut pos_idx = 0usize;
+
+        let mut it = argv.iter().peekable();
+        while let Some(tok) = it.next() {
+            if tok == "--help" || tok == "-h" {
+                return Err(self.usage());
+            }
+            if let Some(stripped) = tok.strip_prefix("--") {
+                let (key, inline_val) = match stripped.split_once('=') {
+                    Some((k, v)) => (k, Some(v.to_string())),
+                    None => (stripped, None),
+                };
+                let spec = self
+                    .args
+                    .iter()
+                    .find(|a| a.name == key)
+                    .ok_or_else(|| format!("unknown option --{key}\n\n{}", self.usage()))?;
+                if spec.takes_value {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .ok_or_else(|| format!("--{key} needs a value"))?
+                            .clone(),
+                    };
+                    values.insert(key.to_string(), val);
+                } else {
+                    if inline_val.is_some() {
+                        return Err(format!("--{key} takes no value"));
+                    }
+                    flags.push(key.to_string());
+                }
+            } else {
+                let spec = self
+                    .positionals
+                    .get(pos_idx)
+                    .ok_or_else(|| format!("unexpected argument '{tok}'"))?;
+                values.insert(spec.name.to_string(), tok.clone());
+                pos_idx += 1;
+            }
+        }
+
+        // Fill defaults; detect missing required options.
+        for a in &self.args {
+            if a.takes_value && !values.contains_key(a.name) {
+                match a.default {
+                    Some(d) => {
+                        values.insert(a.name.to_string(), d.to_string());
+                    }
+                    None => return Err(format!("missing required --{}", a.name)),
+                }
+            }
+        }
+        for p in &self.positionals {
+            if !values.contains_key(p.name) {
+                return Err(format!("missing <{}>\n\n{}", p.name, self.usage()));
+            }
+        }
+        Ok(Matches { values, flags })
+    }
+}
+
+#[derive(Debug)]
+pub struct Matches {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Matches {
+    pub fn get(&self, name: &str) -> &str {
+        self.values
+            .get(name)
+            .unwrap_or_else(|| panic!("arg '{name}' not declared"))
+    }
+
+    pub fn get_opt(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn has(&self, flag: &str) -> bool {
+        self.flags.iter().any(|f| f == flag)
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<f64, String> {
+        self.get(name)
+            .parse()
+            .map_err(|_| format!("--{name}: expected a number, got '{}'", self.get(name)))
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<usize, String> {
+        self.get(name)
+            .parse()
+            .map_err(|_| format!("--{name}: expected an integer, got '{}'", self.get(name)))
+    }
+
+    pub fn get_u64(&self, name: &str) -> Result<u64, String> {
+        self.get(name)
+            .parse()
+            .map_err(|_| format!("--{name}: expected an integer, got '{}'", self.get(name)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cmd() -> Command {
+        Command::new("run", "run a framework")
+            .opt("seed", "42", "rng seed")
+            .opt("alpha", "-1.3", "gup threshold")
+            .req("model", "model name")
+            .flag("verbose", "chatty output")
+            .pos("framework", "which framework")
+    }
+
+    fn args(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_mixed_forms() {
+        let m = cmd()
+            .parse(&args(&[
+                "hermes", "--seed=7", "--model", "cnn", "--verbose",
+            ]))
+            .unwrap();
+        assert_eq!(m.get("framework"), "hermes");
+        assert_eq!(m.get_u64("seed").unwrap(), 7);
+        assert_eq!(m.get("model"), "cnn");
+        assert!(m.has("verbose"));
+        assert_eq!(m.get_f64("alpha").unwrap(), -1.3);
+    }
+
+    #[test]
+    fn missing_required_is_an_error() {
+        let err = cmd().parse(&args(&["bsp"])).unwrap_err();
+        assert!(err.contains("--model"), "{err}");
+    }
+
+    #[test]
+    fn missing_positional_is_an_error() {
+        let err = cmd().parse(&args(&["--model", "cnn"])).unwrap_err();
+        assert!(err.contains("<framework>"), "{err}");
+    }
+
+    #[test]
+    fn unknown_option_is_an_error() {
+        let err = cmd()
+            .parse(&args(&["bsp", "--model", "cnn", "--bogus", "1"]))
+            .unwrap_err();
+        assert!(err.contains("--bogus"), "{err}");
+    }
+
+    #[test]
+    fn flag_with_value_rejected() {
+        let err = cmd()
+            .parse(&args(&["bsp", "--model", "cnn", "--verbose=1"]))
+            .unwrap_err();
+        assert!(err.contains("takes no value"), "{err}");
+    }
+
+    #[test]
+    fn help_renders_usage() {
+        let err = cmd().parse(&args(&["--help"])).unwrap_err();
+        assert!(err.contains("USAGE"), "{err}");
+        assert!(err.contains("--alpha"));
+    }
+}

@@ -1,0 +1,242 @@
+//! Heterogeneous edge cluster model: Table II node families, the Eq. 3
+//! training-time cost model `t = K·E·DSS/MBS`, lognormal per-iteration
+//! jitter, slow hardware-degradation drift (§III-C), memory limits, and
+//! the failure-injection hook used to reproduce EBSP's worker crashes
+//! (Table III footnote).
+
+use crate::config::ClusterConfig;
+use crate::util::rng::Xoshiro256pp;
+
+/// One simulated worker node.
+#[derive(Debug, Clone)]
+pub struct WorkerNode {
+    pub id: usize,
+    pub family: String,
+    pub vcpu: usize,
+    pub ram_gb: f64,
+    /// Current Eq. 3 coefficient (drifts if `degrading`).
+    pub k: f64,
+    pub base_k: f64,
+    pub jitter: f64,
+    pub degrading: bool,
+    pub degrade_rate: f64,
+    pub crashed: bool,
+}
+
+/// The instantiated cluster.
+#[derive(Debug, Clone)]
+pub struct Cluster {
+    pub nodes: Vec<WorkerNode>,
+    rng: Xoshiro256pp,
+}
+
+impl Cluster {
+    /// Expand a [`ClusterConfig`] into concrete nodes.  The degrading
+    /// subset is chosen deterministically from `seed`.
+    pub fn build(cfg: &ClusterConfig, seed: u64) -> Cluster {
+        let mut rng = Xoshiro256pp::stream(seed, 0xC1u64);
+        let mut nodes = Vec::new();
+        for fam in &cfg.families {
+            for _ in 0..fam.count {
+                nodes.push(WorkerNode {
+                    id: nodes.len(),
+                    family: fam.name.clone(),
+                    vcpu: fam.vcpu,
+                    ram_gb: fam.ram_gb,
+                    k: fam.k_coeff,
+                    base_k: fam.k_coeff,
+                    jitter: fam.jitter,
+                    degrading: false,
+                    degrade_rate: cfg.degrade_rate,
+                    crashed: false,
+                });
+            }
+        }
+        // Pick ⌊fraction·n⌋ degrading nodes.
+        let n_deg = (cfg.degrade_fraction * nodes.len() as f64).floor() as usize;
+        let mut order: Vec<usize> = (0..nodes.len()).collect();
+        rng.shuffle(&mut order);
+        for &i in order.iter().take(n_deg) {
+            nodes[i].degrading = true;
+        }
+        Cluster { nodes, rng }
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    pub fn node(&self, id: usize) -> &WorkerNode {
+        &self.nodes[id]
+    }
+
+    /// Eq. 3 with jitter: the virtual seconds one local training
+    /// iteration takes on `node`.  Advances the degradation drift.
+    pub fn train_time(&mut self, id: usize, epochs: usize, dss: usize, mbs: usize) -> f64 {
+        let node = &mut self.nodes[id];
+        if node.degrading {
+            node.k *= node.degrade_rate;
+        }
+        let base = node.k * epochs as f64 * dss as f64 / mbs as f64;
+        // Lognormal jitter: exp(N(0, σ)) has median 1.
+        let j = (self.rng.normal() * node.jitter).exp();
+        base * j
+    }
+
+    /// Deterministic (jitter-free) Eq. 3 prediction — what the PS's
+    /// allocator believes about a node (it estimates K from observed
+    /// times, so it never sees the jitter directly).
+    pub fn predict_time(&self, id: usize, epochs: usize, dss: usize, mbs: usize) -> f64 {
+        let node = &self.nodes[id];
+        node.k * epochs as f64 * dss as f64 / mbs as f64
+    }
+
+    /// Max DSS that fits in a node's memory next to the model and its
+    /// working state (params + momentum + gradients ≈ 3× model bytes,
+    /// plus a 50% OS/headroom haircut) — the §IV-A memory constraint.
+    pub fn memory_limit_dss(&self, id: usize, model_bytes: usize, sample_bytes: usize) -> usize {
+        let avail = self.nodes[id].ram_gb * 0.5 * 1e9;
+        let left = avail - 3.0 * model_bytes as f64;
+        if left <= 0.0 {
+            return 0;
+        }
+        (left / sample_bytes as f64).floor() as usize
+    }
+
+    /// Cluster-wide DSS cap: the worker with the least memory bounds
+    /// the initial static allocation (§IV step 1).
+    pub fn min_memory_dss(&self, model_bytes: usize, sample_bytes: usize) -> usize {
+        (0..self.len())
+            .filter(|&i| !self.nodes[i].crashed)
+            .map(|i| self.memory_limit_dss(i, model_bytes, sample_bytes))
+            .min()
+            .unwrap_or(0)
+    }
+
+    /// Failure injection: crash `id` (EBSP's benchmarking overload,
+    /// arbitrary edge failures).  Crashed nodes stop participating.
+    pub fn crash(&mut self, id: usize) {
+        self.nodes[id].crashed = true;
+    }
+
+    pub fn active_ids(&self) -> Vec<usize> {
+        (0..self.len()).filter(|&i| !self.nodes[i].crashed).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterConfig;
+
+    #[test]
+    fn build_expands_families_to_12_workers() {
+        let c = Cluster::build(&ClusterConfig::paper_testbed(), 1);
+        assert_eq!(c.len(), 12);
+        assert_eq!(c.nodes.iter().filter(|n| n.family == "B1ms").count(), 2);
+        assert_eq!(c.nodes.iter().filter(|n| n.family == "F2s_v2").count(), 3);
+        // ids are dense
+        for (i, n) in c.nodes.iter().enumerate() {
+            assert_eq!(n.id, i);
+        }
+        // ~15% of 12 = 1 degrading node
+        assert_eq!(c.nodes.iter().filter(|n| n.degrading).count(), 1);
+    }
+
+    #[test]
+    fn cost_model_follows_eq3() {
+        let mut c = Cluster::build(&ClusterConfig::paper_testbed(), 2);
+        let id = 0;
+        let k = c.node(id).k;
+        // Prediction is exact Eq. 3.
+        assert!((c.predict_time(id, 1, 1600, 16) - k * 100.0).abs() < 1e-12);
+        // Doubling DSS doubles time; doubling MBS halves it.
+        let t1 = c.predict_time(id, 1, 800, 16);
+        let t2 = c.predict_time(id, 1, 1600, 16);
+        let t3 = c.predict_time(id, 1, 1600, 32);
+        assert!((t2 / t1 - 2.0).abs() < 1e-9);
+        assert!((t2 / t3 - 2.0).abs() < 1e-9);
+        // Sampled time is within jitter bounds of prediction.
+        let mut max_ratio: f64 = 0.0;
+        for _ in 0..200 {
+            let t = c.train_time(id, 1, 1600, 16);
+            max_ratio = max_ratio.max((t / t2).ln().abs());
+        }
+        assert!(max_ratio < 0.5, "jitter too wild: {max_ratio}");
+    }
+
+    #[test]
+    fn b1ms_is_the_straggler_family() {
+        let mut c = Cluster::build(&ClusterConfig::paper_testbed(), 3);
+        let times: Vec<(String, f64)> = (0..c.len())
+            .map(|i| (c.node(i).family.clone(), c.predict_time(i, 1, 2500, 16)))
+            .collect();
+        let b1ms_min = times
+            .iter()
+            .filter(|(f, _)| f == "B1ms")
+            .map(|(_, t)| *t)
+            .fold(f64::MAX, f64::min);
+        for (fam, t) in &times {
+            if fam != "B1ms" {
+                assert!(*t < b1ms_min, "{fam} {t} vs B1ms {b1ms_min}");
+            }
+        }
+        let _ = c.train_time(0, 1, 16, 16);
+    }
+
+    #[test]
+    fn degradation_drifts_k_upward() {
+        let mut cfg = ClusterConfig::paper_testbed();
+        cfg.degrade_fraction = 1.0;
+        cfg.degrade_rate = 1.01;
+        let mut c = Cluster::build(&cfg, 4);
+        let k0 = c.node(0).k;
+        for _ in 0..50 {
+            c.train_time(0, 1, 160, 16);
+        }
+        assert!(c.node(0).k > k0 * 1.5, "{} vs {}", c.node(0).k, k0);
+    }
+
+    #[test]
+    fn memory_limits_scale_with_ram() {
+        let c = Cluster::build(&ClusterConfig::paper_testbed(), 5);
+        let model_bytes = 110_000 * 4;
+        let sample_bytes = 28 * 28 * 4 + 4;
+        // B1ms (2 GB) must allow fewer samples than E2ds_v4 (16 GB).
+        let b1ms = c.memory_limit_dss(0, model_bytes, sample_bytes);
+        let e2ds = c
+            .nodes
+            .iter()
+            .position(|n| n.family == "E2ds_v4")
+            .unwrap();
+        let e2 = c.memory_limit_dss(e2ds, model_bytes, sample_bytes);
+        assert!(b1ms > 0);
+        assert!(e2 > 4 * b1ms);
+        assert_eq!(c.min_memory_dss(model_bytes, sample_bytes), b1ms);
+    }
+
+    #[test]
+    fn crash_removes_from_active_set() {
+        let mut c = Cluster::build(&ClusterConfig::paper_testbed(), 6);
+        assert_eq!(c.active_ids().len(), 12);
+        c.crash(3);
+        c.crash(7);
+        let active = c.active_ids();
+        assert_eq!(active.len(), 10);
+        assert!(!active.contains(&3));
+        assert!(!active.contains(&7));
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mut a = Cluster::build(&ClusterConfig::paper_testbed(), 9);
+        let mut b = Cluster::build(&ClusterConfig::paper_testbed(), 9);
+        for i in 0..12 {
+            assert_eq!(a.train_time(i, 1, 320, 16), b.train_time(i, 1, 320, 16));
+        }
+    }
+}

@@ -1,0 +1,496 @@
+//! Typed configuration system: cluster topology (Table II), training
+//! hyper-parameters (Table I), network model, and per-run experiment
+//! settings — with JSON round-trip and validation.
+
+use crate::util::json::Json;
+
+/// One node family from Table II of the paper.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NodeFamily {
+    pub name: String,
+    pub count: usize,
+    pub vcpu: usize,
+    pub ram_gb: f64,
+    /// Eq. 3 compute coefficient: seconds per (E·DSS/MBS) unit.
+    /// Calibrated so one local cycle at the init allocation lands in
+    /// the few-second range of Fig. 2/4 (see DESIGN.md §3).
+    pub k_coeff: f64,
+    /// Multiplicative lognormal jitter σ applied per iteration.
+    pub jitter: f64,
+}
+
+/// Cluster topology: the paper's 12-worker heterogeneous testbed.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterConfig {
+    pub families: Vec<NodeFamily>,
+    /// Workers whose K drifts upward over time (hardware degradation /
+    /// data accumulation, §III-C).  Fraction of the cluster.
+    pub degrade_fraction: f64,
+    /// Per-iteration multiplicative K drift for degrading nodes.
+    pub degrade_rate: f64,
+}
+
+impl ClusterConfig {
+    /// Table II verbatim: B1ms×2, F2s_v2×3, DS2_v2×3, E2ds_v4×2,
+    /// F4s_v2×2.  K coefficients scale inversely with vCPU with a
+    /// memory-pressure penalty for the 2 GB B1ms nodes.
+    pub fn paper_testbed() -> Self {
+        let fam = |name: &str, count, vcpu, ram_gb, k_coeff| NodeFamily {
+            name: name.to_string(),
+            count,
+            vcpu,
+            ram_gb,
+            k_coeff,
+            jitter: 0.06,
+        };
+        ClusterConfig {
+            families: vec![
+                fam("B1ms", 2, 1, 2.0, 0.130),
+                fam("F2s_v2", 3, 2, 4.0, 0.052),
+                fam("DS2_v2", 3, 2, 7.0, 0.049),
+                fam("E2ds_v4", 2, 2, 16.0, 0.046),
+                fam("F4s_v2", 2, 4, 8.0, 0.026),
+            ],
+            degrade_fraction: 0.15,
+            degrade_rate: 1.002,
+        }
+    }
+
+    /// The contrived 4-worker cluster of Fig. 1/10 (worker₂ slowest,
+    /// worker₃ fastest).
+    pub fn fig1_cluster() -> Self {
+        let fam = |name: &str, k_coeff| NodeFamily {
+            name: name.to_string(),
+            count: 1,
+            vcpu: 2,
+            ram_gb: 8.0,
+            k_coeff,
+            jitter: 0.04,
+        };
+        ClusterConfig {
+            families: vec![
+                fam("worker1", 0.050),
+                fam("worker2", 0.110),
+                fam("worker3", 0.022),
+                fam("worker4", 0.061),
+            ],
+            degrade_fraction: 0.0,
+            degrade_rate: 1.0,
+        }
+    }
+
+    pub fn num_workers(&self) -> usize {
+        self.families.iter().map(|f| f.count).sum()
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.families.is_empty() {
+            return Err("cluster has no node families".into());
+        }
+        for f in &self.families {
+            if f.count == 0 {
+                return Err(format!("family {} has count 0", f.name));
+            }
+            if f.k_coeff <= 0.0 {
+                return Err(format!("family {} has non-positive K", f.name));
+            }
+            if f.ram_gb <= 0.0 {
+                return Err(format!("family {} has non-positive RAM", f.name));
+            }
+        }
+        if !(0.0..=1.0).contains(&self.degrade_fraction) {
+            return Err("degrade_fraction outside [0,1]".into());
+        }
+        Ok(())
+    }
+}
+
+/// Simulated network model + the live transport's tunables.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NetConfig {
+    /// One-way message latency, seconds.
+    pub latency_s: f64,
+    /// Link bandwidth, bytes/second (default 100 Mbit/s).
+    pub bandwidth_bps: f64,
+    /// fp16 compression of tensor payloads (§IV-D).
+    pub fp16_wire: bool,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        NetConfig { latency_s: 0.004, bandwidth_bps: 12_500_000.0, fp16_wire: true }
+    }
+}
+
+/// Table I + the Hermes-specific hyper-parameters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HyperParams {
+    pub lr: f32,
+    pub momentum: f32,
+    /// Local epochs per iteration (E in Eq. 3).
+    pub epochs: usize,
+    /// GUP window size w (both models use 10 in Table I).
+    pub window: usize,
+    /// GUP z-score threshold α (e.g. −1.3).
+    pub alpha: f64,
+    /// α decay step β applied when N_iter ≥ λ (§IV-B3).
+    pub beta: f64,
+    /// Iterations without a push before α decays (λ).
+    pub lambda: usize,
+    /// Patience: iterations without test-loss improvement before a run
+    /// is declared converged (Table I: 25 / 10).
+    pub patience: usize,
+    /// SSP staleness threshold s (§V-B uses 125).
+    pub ssp_staleness: usize,
+    /// EBSP lookahead limit R (§V-B uses 150), in seconds of virtual
+    /// time the PS may look ahead when placing the elastic barrier.
+    pub ebsp_lookahead: f64,
+    /// SelSync relative-gradient-change threshold δ.
+    pub selsync_delta: f64,
+}
+
+impl HyperParams {
+    /// Table I, CNN row (MNIST-like): η=0.1 (we default to 0.05 for the
+    /// synthetic set — documented in DESIGN.md), patience 25, λ=5.
+    pub fn cnn_paper() -> Self {
+        HyperParams {
+            lr: 0.05,
+            momentum: 0.0,
+            epochs: 1,
+            window: 10,
+            alpha: -1.3,
+            beta: 0.1,
+            lambda: 5,
+            patience: 25,
+            ssp_staleness: 125,
+            ebsp_lookahead: 150.0,
+            selsync_delta: 0.05,
+        }
+    }
+
+    /// Table I, AlexNet row: η=0.001, momentum 0.9, patience 10, λ=15.
+    pub fn alexnet_paper() -> Self {
+        HyperParams {
+            lr: 0.001,
+            momentum: 0.9,
+            epochs: 1,
+            window: 10,
+            alpha: -1.6,
+            beta: 0.15,
+            lambda: 15,
+            patience: 10,
+            ssp_staleness: 125,
+            ebsp_lookahead: 150.0,
+            selsync_delta: 0.05,
+        }
+    }
+
+    pub fn for_model(model: &str) -> Self {
+        match model {
+            "alexnet" => Self::alexnet_paper(),
+            _ => Self::cnn_paper(),
+        }
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.lr <= 0.0 {
+            return Err("lr must be positive".into());
+        }
+        if !(0.0..1.0).contains(&(self.momentum as f64)) {
+            return Err("momentum must be in [0,1)".into());
+        }
+        if self.window < 2 {
+            return Err("GUP window must be ≥ 2".into());
+        }
+        if self.alpha >= 0.0 || self.alpha < -3.0 {
+            return Err("alpha must be in [-3, 0) (§VI-B)".into());
+        }
+        if self.beta < 0.0 {
+            return Err("beta must be ≥ 0".into());
+        }
+        if self.epochs == 0 || self.patience == 0 {
+            return Err("epochs/patience must be ≥ 1".into());
+        }
+        Ok(())
+    }
+}
+
+/// One end-to-end run of a framework over a cluster.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RunConfig {
+    pub model: String,
+    pub framework: String,
+    pub seed: u64,
+    pub hp: HyperParams,
+    pub cluster: ClusterConfig,
+    pub net: NetConfig,
+    /// Initial per-worker dataset size (DSS₀; Fig. 12 uses 2500).
+    pub dss0: usize,
+    /// Initial mini-batch size (MBS₀; Fig. 12 uses 16).
+    pub mbs0: usize,
+    /// Stop when global test accuracy reaches this (or on patience).
+    pub target_acc: f64,
+    /// Hard cap on *global* training iterations (scaled-down runs).
+    pub max_iters: usize,
+    /// Cap on real XLA mini-batch steps per local iteration — the
+    /// compute-subsampling knob (DESIGN.md §5 scaling note).  Virtual
+    /// time always charges the full E·DSS/MBS.
+    pub steps_cap: usize,
+    /// Evaluate the *global* model every this many aggregations.
+    pub global_eval_every: usize,
+    /// Dynamic allocation on/off (Hermes ablation).
+    pub dynamic_alloc: bool,
+    /// Prefetch on/off (Hermes ablation).
+    pub prefetch: bool,
+    /// Direction of α decay: `true` = relax toward 0 (§VI-B reading),
+    /// `false` = tighten (more negative) — exposed for the ablation in
+    /// DESIGN.md §9.
+    pub alpha_relax: bool,
+}
+
+impl RunConfig {
+    pub fn new(model: &str, framework: &str) -> Self {
+        RunConfig {
+            model: model.to_string(),
+            framework: framework.to_string(),
+            seed: 42,
+            hp: HyperParams::for_model(model),
+            cluster: ClusterConfig::paper_testbed(),
+            net: NetConfig::default(),
+            dss0: 512,
+            mbs0: 16,
+            target_acc: 0.92,
+            max_iters: 400,
+            steps_cap: 4,
+            global_eval_every: 1,
+            dynamic_alloc: true,
+            prefetch: true,
+            alpha_relax: true,
+        }
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        self.hp.validate()?;
+        self.cluster.validate()?;
+        if self.dss0 == 0 || self.mbs0 == 0 {
+            return Err("dss0/mbs0 must be ≥ 1".into());
+        }
+        if !self.mbs0.is_power_of_two() {
+            return Err("mbs0 must be a power of two (§IV-A)".into());
+        }
+        if self.steps_cap == 0 {
+            return Err("steps_cap must be ≥ 1".into());
+        }
+        if !(0.0..=2.0).contains(&self.target_acc) {
+            // >1 is allowed and disables the convergence stop (used by
+            // the figure experiments that want full-length traces).
+            return Err("target_acc outside [0,2]".into());
+        }
+        Ok(())
+    }
+
+    // ------------------------------------------------- JSON round-trip
+
+    pub fn to_json(&self) -> Json {
+        let fam = |f: &NodeFamily| {
+            Json::obj(vec![
+                ("name", Json::Str(f.name.clone())),
+                ("count", Json::Num(f.count as f64)),
+                ("vcpu", Json::Num(f.vcpu as f64)),
+                ("ram_gb", Json::Num(f.ram_gb)),
+                ("k_coeff", Json::Num(f.k_coeff)),
+                ("jitter", Json::Num(f.jitter)),
+            ])
+        };
+        Json::obj(vec![
+            ("model", Json::Str(self.model.clone())),
+            ("framework", Json::Str(self.framework.clone())),
+            ("seed", Json::Num(self.seed as f64)),
+            (
+                "hp",
+                Json::obj(vec![
+                    ("lr", Json::Num(self.hp.lr as f64)),
+                    ("momentum", Json::Num(self.hp.momentum as f64)),
+                    ("epochs", Json::Num(self.hp.epochs as f64)),
+                    ("window", Json::Num(self.hp.window as f64)),
+                    ("alpha", Json::Num(self.hp.alpha)),
+                    ("beta", Json::Num(self.hp.beta)),
+                    ("lambda", Json::Num(self.hp.lambda as f64)),
+                    ("patience", Json::Num(self.hp.patience as f64)),
+                    ("ssp_staleness", Json::Num(self.hp.ssp_staleness as f64)),
+                    ("ebsp_lookahead", Json::Num(self.hp.ebsp_lookahead)),
+                    ("selsync_delta", Json::Num(self.hp.selsync_delta)),
+                ]),
+            ),
+            (
+                "cluster",
+                Json::obj(vec![
+                    (
+                        "families",
+                        Json::Arr(self.cluster.families.iter().map(fam).collect()),
+                    ),
+                    ("degrade_fraction", Json::Num(self.cluster.degrade_fraction)),
+                    ("degrade_rate", Json::Num(self.cluster.degrade_rate)),
+                ]),
+            ),
+            (
+                "net",
+                Json::obj(vec![
+                    ("latency_s", Json::Num(self.net.latency_s)),
+                    ("bandwidth_bps", Json::Num(self.net.bandwidth_bps)),
+                    ("fp16_wire", Json::Bool(self.net.fp16_wire)),
+                ]),
+            ),
+            ("dss0", Json::Num(self.dss0 as f64)),
+            ("mbs0", Json::Num(self.mbs0 as f64)),
+            ("target_acc", Json::Num(self.target_acc)),
+            ("max_iters", Json::Num(self.max_iters as f64)),
+            ("steps_cap", Json::Num(self.steps_cap as f64)),
+            ("global_eval_every", Json::Num(self.global_eval_every as f64)),
+            ("dynamic_alloc", Json::Bool(self.dynamic_alloc)),
+            ("prefetch", Json::Bool(self.prefetch)),
+            ("alpha_relax", Json::Bool(self.alpha_relax)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self, String> {
+        let s = |p: &str| -> Result<String, String> {
+            Ok(j.at(p).and_then(Json::as_str).ok_or(format!("missing {p}"))?.to_string())
+        };
+        let n = |p: &str| -> Result<f64, String> {
+            j.at(p).and_then(Json::as_f64).ok_or(format!("missing {p}"))
+        };
+        let b = |p: &str| -> Result<bool, String> {
+            j.at(p).and_then(Json::as_bool).ok_or(format!("missing {p}"))
+        };
+        let mut families = Vec::new();
+        for f in j
+            .at("cluster/families")
+            .and_then(Json::as_arr)
+            .ok_or("missing cluster/families")?
+        {
+            families.push(NodeFamily {
+                name: f
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .ok_or("family name")?
+                    .to_string(),
+                count: f.get("count").and_then(Json::as_usize).ok_or("count")?,
+                vcpu: f.get("vcpu").and_then(Json::as_usize).ok_or("vcpu")?,
+                ram_gb: f.get("ram_gb").and_then(Json::as_f64).ok_or("ram_gb")?,
+                k_coeff: f.get("k_coeff").and_then(Json::as_f64).ok_or("k_coeff")?,
+                jitter: f.get("jitter").and_then(Json::as_f64).ok_or("jitter")?,
+            });
+        }
+        let cfg = RunConfig {
+            model: s("model")?,
+            framework: s("framework")?,
+            seed: n("seed")? as u64,
+            hp: HyperParams {
+                lr: n("hp/lr")? as f32,
+                momentum: n("hp/momentum")? as f32,
+                epochs: n("hp/epochs")? as usize,
+                window: n("hp/window")? as usize,
+                alpha: n("hp/alpha")?,
+                beta: n("hp/beta")?,
+                lambda: n("hp/lambda")? as usize,
+                patience: n("hp/patience")? as usize,
+                ssp_staleness: n("hp/ssp_staleness")? as usize,
+                ebsp_lookahead: n("hp/ebsp_lookahead")?,
+                selsync_delta: n("hp/selsync_delta")?,
+            },
+            cluster: ClusterConfig {
+                families,
+                degrade_fraction: n("cluster/degrade_fraction")?,
+                degrade_rate: n("cluster/degrade_rate")?,
+            },
+            net: NetConfig {
+                latency_s: n("net/latency_s")?,
+                bandwidth_bps: n("net/bandwidth_bps")?,
+                fp16_wire: b("net/fp16_wire")?,
+            },
+            dss0: n("dss0")? as usize,
+            mbs0: n("mbs0")? as usize,
+            target_acc: n("target_acc")?,
+            max_iters: n("max_iters")? as usize,
+            steps_cap: n("steps_cap")? as usize,
+            global_eval_every: n("global_eval_every")? as usize,
+            dynamic_alloc: b("dynamic_alloc")?,
+            prefetch: b("prefetch")?,
+            alpha_relax: b("alpha_relax")?,
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_testbed_matches_table2() {
+        let c = ClusterConfig::paper_testbed();
+        assert_eq!(c.num_workers(), 12);
+        assert_eq!(c.families.len(), 5);
+        let b1ms = &c.families[0];
+        assert_eq!((b1ms.count, b1ms.vcpu), (2, 1));
+        assert_eq!(b1ms.ram_gb, 2.0);
+        // B1ms must be the straggler family (largest K).
+        assert!(c
+            .families
+            .iter()
+            .all(|f| f.k_coeff <= b1ms.k_coeff));
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn hyperparams_match_table1() {
+        let cnn = HyperParams::cnn_paper();
+        assert_eq!(cnn.window, 10);
+        assert_eq!(cnn.lambda, 5);
+        assert_eq!(cnn.patience, 25);
+        assert_eq!(cnn.momentum, 0.0);
+        let alex = HyperParams::alexnet_paper();
+        assert_eq!(alex.lambda, 15);
+        assert_eq!(alex.patience, 10);
+        assert!((alex.momentum - 0.9).abs() < 1e-6);
+        assert_eq!(alex.lr, 0.001);
+        cnn.validate().unwrap();
+        alex.validate().unwrap();
+    }
+
+    #[test]
+    fn validation_catches_bad_configs() {
+        let mut hp = HyperParams::cnn_paper();
+        hp.alpha = 0.5;
+        assert!(hp.validate().is_err());
+        hp = HyperParams::cnn_paper();
+        hp.window = 1;
+        assert!(hp.validate().is_err());
+
+        let mut rc = RunConfig::new("cnn", "hermes");
+        rc.mbs0 = 12; // not a power of two
+        assert!(rc.validate().is_err());
+        rc = RunConfig::new("cnn", "hermes");
+        rc.cluster.families.clear();
+        assert!(rc.validate().is_err());
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_config() {
+        let mut rc = RunConfig::new("alexnet", "ssp");
+        rc.seed = 1234;
+        rc.hp.alpha = -1.6;
+        rc.net.fp16_wire = false;
+        let j = rc.to_json().to_string();
+        let back = RunConfig::from_json(&Json::parse(&j).unwrap()).unwrap();
+        assert_eq!(back, rc);
+    }
+
+    #[test]
+    fn from_json_rejects_missing_fields() {
+        let j = Json::parse(r#"{"model":"cnn"}"#).unwrap();
+        assert!(RunConfig::from_json(&j).is_err());
+    }
+}

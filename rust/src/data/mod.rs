@@ -1,0 +1,514 @@
+//! Dataset substrate: deterministic synthetic datasets standing in for
+//! MNIST / CIFAR-10 (no network access — DESIGN.md §3), sharding and
+//! partitioning (IID, Dirichlet non-IID, SelDP full-shuffle), batch
+//! sampling and the prefetch working set.
+//!
+//! * `edgemnist` — 28×28×1, 10 classes, IID: class-conditional smooth
+//!   templates + per-sample noise.  Learnable by the 110K CNN in a few
+//!   hundred steps.
+//! * `edgecifar` — 32×32×3, 10 classes, served non-IID per worker via
+//!   Dirichlet(0.3) class skew.
+//! * `mockset`  — 4×4×2 features for [`crate::runtime::MockRuntime`].
+
+use crate::util::rng::Xoshiro256pp;
+
+/// Static description of a dataset's sample geometry.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DataMeta {
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+    pub classes: usize,
+}
+
+impl DataMeta {
+    pub fn elems(&self) -> usize {
+        self.h * self.w * self.c
+    }
+
+    pub fn sample_bytes(&self) -> usize {
+        self.elems() * 4 + 4
+    }
+}
+
+/// An in-memory labelled dataset (row-major samples).
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub meta: DataMeta,
+    images: Vec<f32>,
+    labels: Vec<i32>,
+}
+
+/// Which synthetic distribution to generate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DataKind {
+    EdgeMnist,
+    EdgeCifar,
+    MockSet,
+}
+
+impl DataKind {
+    pub fn for_model(model: &str) -> DataKind {
+        match model {
+            "alexnet" => DataKind::EdgeCifar,
+            "mock" => DataKind::MockSet,
+            _ => DataKind::EdgeMnist,
+        }
+    }
+
+    pub fn meta(&self) -> DataMeta {
+        match self {
+            DataKind::EdgeMnist => DataMeta { h: 28, w: 28, c: 1, classes: 10 },
+            DataKind::EdgeCifar => DataMeta { h: 32, w: 32, c: 3, classes: 10 },
+            DataKind::MockSet => DataMeta { h: 4, w: 4, c: 2, classes: 10 },
+        }
+    }
+
+    /// Per-sample noise σ — edgecifar is noisier (harder, like CIFAR
+    /// vs MNIST).
+    fn noise(&self) -> f32 {
+        // High enough that convergence needs sustained multi-round
+        // training (the paper's regime: thousands of iterations), low
+        // enough that the models still reach >90% (edgemnist) / ~70%
+        // (edgecifar) accuracy.
+        match self {
+            DataKind::EdgeCifar => 0.8,
+            DataKind::EdgeMnist => 1.2,
+            DataKind::MockSet => 0.4,
+        }
+    }
+}
+
+impl Dataset {
+    /// Generate `n` samples deterministically from `seed`.
+    ///
+    /// Templates are smooth class-conditional patterns (low-frequency
+    /// mixtures of separable cosines) so conv layers have real spatial
+    /// structure to exploit; each sample is template + N(0, σ²) noise.
+    pub fn synth(kind: DataKind, n: usize, seed: u64) -> Dataset {
+        let meta = kind.meta();
+        let elems = meta.elems();
+        let mut trng = Xoshiro256pp::stream(seed, 0xDA7A);
+        // Build class templates.
+        let mut templates = vec![0f32; meta.classes * elems];
+        for cls in 0..meta.classes {
+            let t = &mut templates[cls * elems..(cls + 1) * elems];
+            // 4 random separable cosine modes per class.
+            for _ in 0..4 {
+                let fx = trng.uniform(0.5, 3.0);
+                let fy = trng.uniform(0.5, 3.0);
+                let px = trng.uniform(0.0, std::f64::consts::TAU);
+                let py = trng.uniform(0.0, std::f64::consts::TAU);
+                let amp = trng.uniform(0.3, 0.7);
+                let ch = trng.next_below(meta.c as u64) as usize;
+                for yy in 0..meta.h {
+                    for xx in 0..meta.w {
+                        let v = amp
+                            * (fy * yy as f64 / meta.h as f64
+                                * std::f64::consts::TAU
+                                + py)
+                                .cos()
+                            * (fx * xx as f64 / meta.w as f64
+                                * std::f64::consts::TAU
+                                + px)
+                                .cos();
+                        t[(yy * meta.w + xx) * meta.c + ch] += v as f32;
+                    }
+                }
+            }
+        }
+        let noise = kind.noise();
+        let mut rng = Xoshiro256pp::stream(seed, 0x5A3B);
+        let mut images = Vec::with_capacity(n * elems);
+        let mut labels = Vec::with_capacity(n);
+        for _ in 0..n {
+            let cls = rng.next_below(meta.classes as u64) as usize;
+            labels.push(cls as i32);
+            let t = &templates[cls * elems..(cls + 1) * elems];
+            for &tv in t {
+                images.push(tv + noise * rng.normal() as f32);
+            }
+        }
+        Dataset { meta, images, labels }
+    }
+
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    pub fn sample(&self, i: usize) -> (&[f32], i32) {
+        let e = self.meta.elems();
+        (&self.images[i * e..(i + 1) * e], self.labels[i])
+    }
+
+    pub fn label(&self, i: usize) -> i32 {
+        self.labels[i]
+    }
+
+    /// Gather `idx` into a contiguous batch buffer.
+    pub fn gather(&self, idx: &[usize]) -> (Vec<f32>, Vec<i32>) {
+        let e = self.meta.elems();
+        let mut x = Vec::with_capacity(idx.len() * e);
+        let mut y = Vec::with_capacity(idx.len());
+        for &i in idx {
+            let (img, lbl) = self.sample(i);
+            x.extend_from_slice(img);
+            y.push(lbl);
+        }
+        (x, y)
+    }
+
+    /// Gather into caller-provided buffers (hot-path variant that
+    /// avoids per-batch allocation).
+    pub fn gather_into(&self, idx: &[usize], x: &mut Vec<f32>, y: &mut Vec<i32>) {
+        let e = self.meta.elems();
+        x.clear();
+        y.clear();
+        x.reserve(idx.len() * e);
+        y.reserve(idx.len());
+        for &i in idx {
+            let (img, lbl) = self.sample(i);
+            x.extend_from_slice(img);
+            y.push(lbl);
+        }
+    }
+
+    /// Deterministic train/test split (paper: 85% / 15%).
+    pub fn split(&self, train_frac: f64, seed: u64) -> (Vec<usize>, Vec<usize>) {
+        assert!((0.0..=1.0).contains(&train_frac));
+        let mut idx: Vec<usize> = (0..self.len()).collect();
+        let mut rng = Xoshiro256pp::stream(seed, 0x59171);
+        rng.shuffle(&mut idx);
+        let cut = (self.len() as f64 * train_frac).round() as usize;
+        let test = idx.split_off(cut.min(idx.len()));
+        (idx, test)
+    }
+}
+
+// ----------------------------------------------------------- sharding
+
+/// How training indices are spread across workers.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Partition {
+    /// IID: every worker draws uniformly from the train split.
+    Iid,
+    /// Dirichlet(α) class skew per worker — the non-IID regime the
+    /// paper uses CIFAR-10 for.
+    Dirichlet { alpha: f64 },
+    /// SelSync's SelDP: one global shuffle, contiguous equal slices
+    /// (§II-E; we model the assignment, not the on-device storage).
+    SelDp,
+}
+
+impl Partition {
+    pub fn for_kind(kind: DataKind) -> Partition {
+        match kind {
+            DataKind::EdgeCifar => Partition::Dirichlet { alpha: 0.3 },
+            _ => Partition::Iid,
+        }
+    }
+}
+
+/// Per-worker sampling source: the worker's view of the train split.
+#[derive(Debug, Clone)]
+pub struct Shard {
+    pub worker: usize,
+    /// Indices (into the full dataset) this worker may draw from.
+    pub pool: Vec<usize>,
+}
+
+/// Build per-worker pools for `n_workers` according to `partition`.
+pub fn partition_pools(
+    ds: &Dataset,
+    train_idx: &[usize],
+    n_workers: usize,
+    partition: Partition,
+    seed: u64,
+) -> Vec<Shard> {
+    let mut rng = Xoshiro256pp::stream(seed, 0x9A27);
+    match partition {
+        Partition::Iid => (0..n_workers)
+            .map(|w| Shard { worker: w, pool: train_idx.to_vec() })
+            .collect(),
+        Partition::SelDp => {
+            let mut idx = train_idx.to_vec();
+            rng.shuffle(&mut idx);
+            let per = idx.len() / n_workers;
+            (0..n_workers)
+                .map(|w| Shard {
+                    worker: w,
+                    pool: idx[w * per..(w + 1) * per].to_vec(),
+                })
+                .collect()
+        }
+        Partition::Dirichlet { alpha } => {
+            let classes = ds.meta.classes;
+            // Bucket train indices by class.
+            let mut by_class: Vec<Vec<usize>> = vec![Vec::new(); classes];
+            for &i in train_idx {
+                by_class[ds.label(i) as usize].push(i);
+            }
+            // Each class's samples are dealt to workers by a Dirichlet
+            // draw (standard federated non-IID protocol).
+            let mut pools: Vec<Vec<usize>> = vec![Vec::new(); n_workers];
+            for bucket in by_class.iter_mut() {
+                rng.shuffle(bucket);
+                let props = rng.dirichlet(alpha, n_workers);
+                let mut start = 0usize;
+                for (w, &p) in props.iter().enumerate() {
+                    let take = if w + 1 == n_workers {
+                        bucket.len() - start
+                    } else {
+                        ((bucket.len() as f64) * p).floor() as usize
+                    };
+                    let end = (start + take).min(bucket.len());
+                    pools[w].extend_from_slice(&bucket[start..end]);
+                    start = end;
+                }
+            }
+            // Guarantee non-empty pools.
+            for (w, pool) in pools.iter_mut().enumerate() {
+                if pool.is_empty() {
+                    pool.push(train_idx[w % train_idx.len()]);
+                }
+            }
+            pools
+                .into_iter()
+                .enumerate()
+                .map(|(worker, pool)| Shard { worker, pool })
+                .collect()
+        }
+    }
+}
+
+/// Draws mini-batches from a shard; `refill(dss)` emulates the PS
+/// sending a DSS-sized dataset which the worker then iterates (the
+/// prefetch path refills *before* the working set is exhausted).
+#[derive(Debug, Clone)]
+pub struct BatchSampler {
+    rng: Xoshiro256pp,
+    /// The DSS-sized working set (indices into the dataset).
+    active: Vec<usize>,
+    cursor: usize,
+}
+
+impl BatchSampler {
+    pub fn new(seed: u64, worker: usize) -> Self {
+        BatchSampler {
+            rng: Xoshiro256pp::stream(seed, 0xBA7C ^ ((worker as u64) << 17)),
+            active: Vec::new(),
+            cursor: 0,
+        }
+    }
+
+    /// Receive a new DSS-sized assignment drawn from the pool.
+    pub fn refill(&mut self, pool: &[usize], dss: usize) {
+        self.active.clear();
+        self.active.reserve(dss);
+        for _ in 0..dss {
+            let j = self.rng.next_below(pool.len() as u64) as usize;
+            self.active.push(pool[j]);
+        }
+        self.cursor = 0;
+    }
+
+    pub fn active_len(&self) -> usize {
+        self.active.len()
+    }
+
+    /// Next mini-batch of exactly `mbs` indices (wraps with reshuffle —
+    /// one wrap = one local epoch over the working set).
+    pub fn next_batch(&mut self, mbs: usize) -> Vec<usize> {
+        assert!(!self.active.is_empty(), "sampler not refilled");
+        let mut out = Vec::with_capacity(mbs);
+        for _ in 0..mbs {
+            if self.cursor >= self.active.len() {
+                self.rng.shuffle(&mut self.active);
+                self.cursor = 0;
+            }
+            out.push(self.active[self.cursor]);
+            self.cursor += 1;
+        }
+        out
+    }
+}
+
+/// Fixed probe batch (test-split samples) used for every test-loss
+/// evaluation — "a separate dataset not used for training" (§IV-B).
+#[derive(Debug, Clone)]
+pub struct Probe {
+    pub x: Vec<f32>,
+    pub y: Vec<i32>,
+    pub n: usize,
+}
+
+impl Probe {
+    pub fn build(ds: &Dataset, test_idx: &[usize], n: usize, seed: u64) -> Probe {
+        let mut rng = Xoshiro256pp::stream(seed, 0x9120B);
+        let mut idx = Vec::with_capacity(n);
+        for _ in 0..n {
+            idx.push(test_idx[rng.next_below(test_idx.len() as u64) as usize]);
+        }
+        let (x, y) = ds.gather(&idx);
+        Probe { x, y, n }
+    }
+
+    pub fn accuracy(&self, correct: f32) -> f64 {
+        correct as f64 / self.n as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synth_is_deterministic_and_shaped() {
+        let a = Dataset::synth(DataKind::EdgeMnist, 100, 7);
+        let b = Dataset::synth(DataKind::EdgeMnist, 100, 7);
+        assert_eq!(a.images, b.images);
+        assert_eq!(a.labels, b.labels);
+        assert_eq!(a.len(), 100);
+        assert_eq!(a.meta.elems(), 784);
+        let (img, lbl) = a.sample(3);
+        assert_eq!(img.len(), 784);
+        assert!((0..10).contains(&lbl));
+        let c = Dataset::synth(DataKind::EdgeMnist, 100, 8);
+        assert_ne!(a.images, c.images);
+    }
+
+    #[test]
+    fn classes_are_distinguishable() {
+        // Class-mean images must be well separated relative to noise.
+        let ds = Dataset::synth(DataKind::EdgeMnist, 400, 3);
+        let e = ds.meta.elems();
+        let mut sums = vec![vec![0f64; e]; 10];
+        let mut counts = [0usize; 10];
+        for i in 0..ds.len() {
+            let (img, lbl) = ds.sample(i);
+            counts[lbl as usize] += 1;
+            for (s, &v) in sums[lbl as usize].iter_mut().zip(img) {
+                *s += v as f64;
+            }
+        }
+        let means: Vec<Vec<f64>> = sums
+            .iter()
+            .zip(&counts)
+            .map(|(s, &c)| s.iter().map(|v| v / c.max(1) as f64).collect())
+            .collect();
+        let dist = |a: &[f64], b: &[f64]| -> f64 {
+            a.iter().zip(b).map(|(x, y)| (x - y).powi(2)).sum::<f64>().sqrt()
+        };
+        let mut inter = 0.0;
+        let mut pairs = 0;
+        for i in 0..10 {
+            for j in (i + 1)..10 {
+                inter += dist(&means[i], &means[j]);
+                pairs += 1;
+            }
+        }
+        inter /= pairs as f64;
+        assert!(inter > 1.0, "templates too close: {inter}");
+    }
+
+    #[test]
+    fn split_fractions_and_disjointness() {
+        let ds = Dataset::synth(DataKind::MockSet, 1000, 1);
+        let (train, test) = ds.split(0.85, 9);
+        assert_eq!(train.len(), 850);
+        assert_eq!(test.len(), 150);
+        let mut all: Vec<usize> = train.iter().chain(&test).copied().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..1000).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn iid_pools_share_everything() {
+        let ds = Dataset::synth(DataKind::MockSet, 200, 2);
+        let (train, _) = ds.split(0.85, 2);
+        let shards = partition_pools(&ds, &train, 4, Partition::Iid, 3);
+        assert_eq!(shards.len(), 4);
+        for s in &shards {
+            assert_eq!(s.pool, train);
+        }
+    }
+
+    #[test]
+    fn dirichlet_pools_are_skewed_and_cover_everyone() {
+        let ds = Dataset::synth(DataKind::MockSet, 2000, 4);
+        let (train, _) = ds.split(0.85, 4);
+        let shards =
+            partition_pools(&ds, &train, 8, Partition::Dirichlet { alpha: 0.3 }, 5);
+        assert_eq!(shards.len(), 8);
+        let mut any_skew = false;
+        for s in &shards {
+            assert!(!s.pool.is_empty());
+            let mut hist = [0usize; 10];
+            for &i in &s.pool {
+                hist[ds.label(i) as usize] += 1;
+            }
+            let max = *hist.iter().max().unwrap() as f64;
+            if max / s.pool.len() as f64 > 0.2 {
+                any_skew = true;
+            }
+        }
+        assert!(any_skew);
+    }
+
+    #[test]
+    fn seldp_slices_are_disjoint_and_equal() {
+        let ds = Dataset::synth(DataKind::MockSet, 400, 6);
+        let (train, _) = ds.split(1.0, 6);
+        let shards = partition_pools(&ds, &train, 4, Partition::SelDp, 7);
+        let sizes: Vec<usize> = shards.iter().map(|s| s.pool.len()).collect();
+        assert_eq!(sizes, vec![100, 100, 100, 100]);
+        let mut seen = std::collections::HashSet::new();
+        for s in &shards {
+            for &i in &s.pool {
+                assert!(seen.insert(i), "overlap at {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn sampler_wraps_as_epochs() {
+        let mut s = BatchSampler::new(1, 0);
+        s.refill(&(0..10).collect::<Vec<_>>(), 10);
+        assert_eq!(s.active_len(), 10);
+        let b1 = s.next_batch(6);
+        let b2 = s.next_batch(6); // wraps: reshuffle after 10 draws
+        assert_eq!(b1.len(), 6);
+        assert_eq!(b2.len(), 6);
+        for &i in b1.iter().chain(&b2) {
+            assert!(i < 10);
+        }
+    }
+
+    #[test]
+    fn probe_is_fixed_and_correct_size() {
+        let ds = Dataset::synth(DataKind::MockSet, 500, 8);
+        let (_, test) = ds.split(0.85, 8);
+        let p1 = Probe::build(&ds, &test, 64, 9);
+        let p2 = Probe::build(&ds, &test, 64, 9);
+        assert_eq!(p1.x, p2.x);
+        assert_eq!(p1.y, p2.y);
+        assert_eq!(p1.n, 64);
+        assert_eq!(p1.x.len(), 64 * ds.meta.elems());
+    }
+
+    #[test]
+    fn gather_into_matches_gather() {
+        let ds = Dataset::synth(DataKind::MockSet, 50, 9);
+        let idx = vec![3, 7, 7, 11];
+        let (x1, y1) = ds.gather(&idx);
+        let mut x2 = Vec::new();
+        let mut y2 = Vec::new();
+        ds.gather_into(&idx, &mut x2, &mut y2);
+        assert_eq!(x1, x2);
+        assert_eq!(y1, y2);
+    }
+}

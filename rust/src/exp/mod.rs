@@ -1,0 +1,478 @@
+//! Experiment drivers: one function per table/figure in the paper's
+//! evaluation (DESIGN.md §5 maps each to its modules).  Every function
+//! writes CSV/JSON series into an output directory and prints a short
+//! summary; `hermes exp all` regenerates the complete set.
+//!
+//! `runtime` selects the compute backend: `mock` (host softmax
+//! regression — fast, artifact-free) or a real AOT model (`cnn`,
+//! `alexnet`) through the PJRT runtime.
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use crate::config::{ClusterConfig, RunConfig};
+use crate::frameworks::{run_framework, run_framework_opts};
+use crate::metrics::{write_file, RunMetrics, TableFmt};
+use crate::runtime::{Manifest, MockRuntime, ModelRuntime, XlaRuntime};
+use crate::util::fmt_duration;
+
+/// Build a runtime for `model` ("mock" or a manifest model name).
+pub fn make_runtime(model: &str, artifacts: &Path) -> Result<Box<dyn ModelRuntime>> {
+    if model == "mock" {
+        return Ok(Box::new(MockRuntime::new()));
+    }
+    if !artifacts.join("manifest.json").exists() {
+        bail!(
+            "artifacts not built (run `make artifacts`) — needed for model '{model}'"
+        );
+    }
+    let manifest = Manifest::load(artifacts)?;
+    Ok(Box::new(XlaRuntime::from_artifacts(manifest.model(model)?, None)?))
+}
+
+/// Scaled-run defaults per backend (DESIGN.md §5 scaling note).
+pub fn scaled_cfg(model: &str, framework: &str) -> RunConfig {
+    let mut cfg = RunConfig::new(model, framework);
+    match model {
+        "mock" => {
+            cfg.hp.lr = 0.5;
+            cfg.max_iters = 400;
+            cfg.dss0 = 128;
+            cfg.target_acc = 0.9;
+        }
+        "cnn" => {
+            cfg.max_iters = 900;
+            cfg.dss0 = 512;
+            cfg.steps_cap = 3;
+            cfg.target_acc = 0.87;
+        }
+        "alexnet" => {
+            cfg.max_iters = 420;
+            cfg.dss0 = 512;
+            cfg.steps_cap = 2;
+            cfg.target_acc = 0.62;
+        }
+        _ => {}
+    }
+    // Scale the SSP staleness bound and EBSP lookahead to the scaled
+    // iteration budget (paper: s=125, R=150 against thousands of
+    // iterations; here ~max_iters/n iterations per worker).
+    cfg.hp.ssp_staleness = 6;
+    cfg.hp.ebsp_lookahead = match model {
+        "mock" => 4.0,
+        _ => 45.0,
+    };
+    cfg
+}
+
+// ------------------------------------------------------------ Fig 1/10
+
+/// Fig. 1 + Fig. 10: train/comm/wait timelines for BSP, SSP, ASP, EBSP
+/// and Hermes on the contrived 4-worker cluster.
+pub fn fig1_timelines(out: &Path, model: &str, artifacts: &Path) -> Result<()> {
+    for fw in ["bsp", "ssp", "asp", "ebsp", "hermes"] {
+        let mut cfg = scaled_cfg(model, fw);
+        cfg.cluster = ClusterConfig::fig1_cluster();
+        cfg.hp.ssp_staleness = 2;
+        cfg.max_iters = 60;
+        cfg.target_acc = 1.1; // never converge: we want the timeline
+        let rt = make_runtime(model, artifacts)?;
+        let run = run_framework_opts(cfg, rt, true)?;
+        let name = if fw == "hermes" { "fig10_hermes" } else { "fig1" };
+        write_file(out, &format!("{name}_{fw}.csv"), &run.segments_csv())?;
+        println!(
+            "[fig1/10] {fw}: {} segments, {} iters, vt {}",
+            run.segments.len(),
+            run.iterations,
+            fmt_duration(run.virtual_time)
+        );
+    }
+    Ok(())
+}
+
+// --------------------------------------------------------------- Fig 2
+
+/// Fig. 2: per-family breakup of one local cycle under BSP — training,
+/// dataset+model receive (comm), and barrier wait.
+pub fn fig2_breakdown(out: &Path, model: &str, artifacts: &Path) -> Result<()> {
+    let mut cfg = scaled_cfg(model, "bsp");
+    cfg.max_iters = 96; // 8 rounds × 12 workers
+    cfg.target_acc = 1.1;
+    let rt = make_runtime(model, artifacts)?;
+    let run = run_framework(cfg, rt)?;
+
+    let mut csv = String::from("family,train_s,comm_s,wait_s,iterations\n");
+    let mut seen = std::collections::BTreeMap::<String, (f64, f64, f64, u64)>::new();
+    for w in &run.workers {
+        let e = seen.entry(w.family.clone()).or_default();
+        e.0 += w.train_time;
+        e.1 += w.comm_time;
+        e.2 += w.wait_time;
+        e.3 += w.iterations;
+    }
+    for (fam, (tr, co, wa, it)) in &seen {
+        let it = (*it).max(1) as f64;
+        csv += &format!(
+            "{fam},{:.4},{:.4},{:.4},{it}\n",
+            tr / it,
+            co / it,
+            wa / it
+        );
+    }
+    write_file(out, "fig2_breakdown.csv", &csv)?;
+    println!("[fig2] per-family cycle breakdown:\n{csv}");
+    Ok(())
+}
+
+// --------------------------------------------------------------- Fig 3
+
+/// Fig. 3: ASP's global-loss oscillation.
+pub fn fig3_asp_oscillation(out: &Path, model: &str, artifacts: &Path) -> Result<()> {
+    let mut cfg = scaled_cfg(model, "asp");
+    cfg.target_acc = 1.1;
+    let rt = make_runtime(model, artifacts)?;
+    let run = run_framework(cfg, rt)?;
+    write_file(out, "fig3_asp_loss.csv", &run.curve_csv())?;
+    // Oscillation metric: count of sign flips in the loss differences.
+    let flips = run
+        .curve
+        .windows(3)
+        .filter(|w| (w[1].1 - w[0].1) * (w[2].1 - w[1].1) < 0.0)
+        .count();
+    println!(
+        "[fig3] ASP: {} evals, {} direction flips, final loss {:.3}",
+        run.curve.len(),
+        flips,
+        run.final_loss
+    );
+    Ok(())
+}
+
+// ------------------------------------------------------------ Fig 4/5
+
+/// Fig. 4 (a: per-node training times, b: time between updates) and
+/// Fig. 5 (a: per-node wait, b: fastest node's waits) for BSP.
+pub fn fig4_fig5_bsp(out: &Path, model: &str, artifacts: &Path) -> Result<()> {
+    let mut cfg = scaled_cfg(model, "bsp");
+    cfg.max_iters = 240;
+    cfg.target_acc = 1.1;
+    let rt = make_runtime(model, artifacts)?;
+    let run = run_framework(cfg, rt)?;
+
+    let mut a = String::from("worker,family,mean_train_s\n");
+    let mut f5a = String::from("worker,family,total_wait_s,mean_wait_s\n");
+    for (i, w) in run.workers.iter().enumerate() {
+        let mean_t = w.train_time / w.iterations.max(1) as f64;
+        a += &format!("{i},{},{:.4}\n", w.family, mean_t);
+        f5a += &format!(
+            "{i},{},{:.4},{:.4}\n",
+            w.family,
+            w.wait_time,
+            w.wait_time / w.iterations.max(1) as f64
+        );
+    }
+    write_file(out, "fig4a_train_times.csv", &a)?;
+    write_file(out, "fig5a_wait_times.csv", &f5a)?;
+
+    let mut b = String::from("worker,gap_s\n");
+    for (i, w) in run.workers.iter().enumerate() {
+        for g in w.update_gaps() {
+            b += &format!("{i},{g:.4}\n");
+        }
+    }
+    write_file(out, "fig4b_update_gaps.csv", &b)?;
+
+    // Fastest node = minimal mean train time.
+    let fastest = run
+        .workers
+        .iter()
+        .enumerate()
+        .min_by(|(_, x), (_, y)| {
+            (x.train_time / x.iterations.max(1) as f64)
+                .partial_cmp(&(y.train_time / y.iterations.max(1) as f64))
+                .unwrap()
+        })
+        .map(|(i, _)| i)
+        .unwrap_or(0);
+    write_file(
+        out,
+        "fig5b_fastest_node.csv",
+        &format!(
+            "worker,family,total_wait_s\n{fastest},{},{:.4}\n",
+            run.workers[fastest].family, run.workers[fastest].wait_time
+        ),
+    )?;
+    println!(
+        "[fig4/5] BSP: fastest node {} ({}) waited {:.1}s total",
+        fastest, run.workers[fastest].family, run.workers[fastest].wait_time
+    );
+    Ok(())
+}
+
+// -------------------------------------------------------------- Fig 11
+
+/// Fig. 11: (a) Hermes global loss/accuracy; (b) per-family training-
+/// time stabilization under dynamic allocation.
+pub fn fig11_hermes(out: &Path, model: &str, artifacts: &Path) -> Result<()> {
+    let mut cfg = scaled_cfg(model, "hermes");
+    cfg.hp.alpha = -1.3;
+    cfg.hp.beta = 0.1;
+    let rt = make_runtime(model, artifacts)?;
+    let run = run_framework(cfg, rt)?;
+    write_file(out, "fig11a_hermes_curve.csv", &run.curve_csv())?;
+
+    let mut b = String::from("worker,family,virtual_time,train_s\n");
+    for (i, w) in run.workers.iter().enumerate() {
+        for (t, dur) in &w.train_times {
+            b += &format!("{i},{},{t:.3},{dur:.4}\n", w.family);
+        }
+    }
+    write_file(out, "fig11b_train_times.csv", &b)?;
+    println!(
+        "[fig11] hermes: acc {:.3} in vt {}, {} pushes / {} iters",
+        run.final_accuracy,
+        fmt_duration(run.virtual_time),
+        run.total_pushes(),
+        run.iterations
+    );
+    Ok(())
+}
+
+// -------------------------------------------------------------- Fig 12
+
+/// Fig. 12: dataset size sent to the weakest worker vs its training
+/// time (full run + the iteration 5–10 zoom).
+pub fn fig12_dynamic_sizing(out: &Path, model: &str, artifacts: &Path) -> Result<()> {
+    let mut cfg = scaled_cfg(model, "hermes");
+    cfg.dss0 = if model == "mock" { 512 } else { 2048 };
+    cfg.mbs0 = 16;
+    cfg.target_acc = 1.1;
+    let (dss0, mbs0) = (cfg.dss0, cfg.mbs0);
+    let rt = make_runtime(model, artifacts)?;
+    let run = run_framework(cfg, rt)?;
+
+    // Weakest worker = first B1ms node (id 0 in the paper testbed).
+    let w = &run.workers[0];
+    let mut csv = String::from("iteration,virtual_time,train_s,dss,mbs\n");
+    let mut alloc_iter = w.allocations.iter().peekable();
+    let (mut dss, mut mbs) = (dss0, mbs0);
+    for (i, (t, dur)) in w.train_times.iter().enumerate() {
+        while let Some(&&(at, d, m)) = alloc_iter.peek() {
+            if at <= *t {
+                dss = d;
+                mbs = m;
+                alloc_iter.next();
+            } else {
+                break;
+            }
+        }
+        csv += &format!("{i},{t:.3},{dur:.4},{dss},{mbs}\n");
+    }
+    write_file(out, "fig12a_weakest_worker.csv", &csv)?;
+    let zoom: String = csv
+        .lines()
+        .take(1)
+        .chain(csv.lines().skip(6).take(6))
+        .collect::<Vec<_>>()
+        .join("\n");
+    write_file(out, "fig12b_iters_5_10.csv", &zoom)?;
+    println!(
+        "[fig12] weakest worker: {} reallocations over {} iterations",
+        w.allocations.len(),
+        w.train_times.len()
+    );
+    Ok(())
+}
+
+// -------------------------------------------------------------- Fig 13
+
+/// Fig. 13: global accuracy trajectory with a marker at every major
+/// (gated) update from an E2ds-class worker.
+pub fn fig13_major_updates(out: &Path, model: &str, artifacts: &Path) -> Result<()> {
+    let cfg = scaled_cfg(model, "hermes");
+    let rt = make_runtime(model, artifacts)?;
+    let run = run_framework(cfg, rt)?;
+    write_file(out, "fig13_global_curve.csv", &run.curve_csv())?;
+
+    // Push markers for one E2ds_v4 worker (or worker 0 as fallback).
+    let wid = run
+        .workers
+        .iter()
+        .position(|w| w.family == "E2ds_v4")
+        .unwrap_or(0);
+    let mut m = String::from("push_time\n");
+    for t in &run.workers[wid].push_times {
+        m += &format!("{t:.3}\n");
+    }
+    write_file(out, "fig13_push_markers.csv", &m)?;
+    println!(
+        "[fig13] worker {wid} ({}): {} major updates",
+        run.workers[wid].family,
+        run.workers[wid].push_times.len()
+    );
+    Ok(())
+}
+
+// -------------------------------------------------------------- Fig 14
+
+/// Fig. 14: α/β sensitivity — push frequency and final accuracy for
+/// the paper's three (α, β) settings.
+pub fn fig14_alpha_beta(out: &Path, model: &str, artifacts: &Path) -> Result<()> {
+    let settings = [(-0.9, 0.1), (-1.3, 0.1), (-1.6, 0.15)];
+    let mut csv = String::from("alpha,beta,pushes,iterations,final_acc,api_calls\n");
+    for (alpha, beta) in settings {
+        let mut cfg = scaled_cfg(model, "hermes");
+        cfg.hp.alpha = alpha;
+        cfg.hp.beta = beta;
+        let rt = make_runtime(model, artifacts)?;
+        let run = run_framework(cfg, rt)?;
+        csv += &format!(
+            "{alpha},{beta},{},{},{:.4},{}\n",
+            run.total_pushes(),
+            run.iterations,
+            run.final_accuracy,
+            run.api_calls
+        );
+        println!(
+            "[fig14] α={alpha} β={beta}: {} pushes, acc {:.3}",
+            run.total_pushes(),
+            run.final_accuracy
+        );
+    }
+    write_file(out, "fig14_alpha_beta.csv", &csv)?;
+    Ok(())
+}
+
+// ------------------------------------------------------------- Table 3
+
+/// Table III: every framework on one model, with iterations, virtual
+/// time, WI, accuracy, API calls and speedup vs BSP.
+pub fn table3(out: &Path, model: &str, artifacts: &Path) -> Result<Vec<RunMetrics>> {
+    let mut rows: Vec<RunMetrics> = Vec::new();
+    let mut configs: Vec<(String, RunConfig)> = Vec::new();
+    for fw in ["bsp", "asp", "ssp", "ebsp"] {
+        configs.push((fw.to_string(), scaled_cfg(model, fw)));
+    }
+    // The paper's three Hermes settings on the IID model, one on the
+    // non-IID model.
+    let hermes_settings: &[(f64, f64)] = if model == "alexnet" {
+        &[(-1.6, 0.15)]
+    } else {
+        &[(-0.9, 0.1), (-1.3, 0.1), (-1.6, 0.15)]
+    };
+    for &(alpha, beta) in hermes_settings {
+        let mut cfg = scaled_cfg(model, "hermes");
+        cfg.hp.alpha = alpha;
+        cfg.hp.beta = beta;
+        configs.push((format!("hermes(α={alpha},β={beta})"), cfg));
+    }
+
+    for (label, cfg) in configs {
+        let rt = make_runtime(model, artifacts)?;
+        let mut run = run_framework(cfg, rt)?;
+        run.framework = label;
+        rows.push(run);
+    }
+
+    let baseline = rows[0].clone(); // BSP
+    let mut table = TableFmt::new(&[
+        "Framework",
+        "Iterations",
+        "Time",
+        "WI_avg",
+        "Conv. Acc.",
+        "API Calls",
+        "Speedup",
+    ]);
+    let mut json_rows = Vec::new();
+    for run in &rows {
+        let failed = run.crashed_workers.len() * 4 >= run.workers.len();
+        if failed {
+            table.row(vec![
+                run.framework.clone(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+            ]);
+        } else {
+            table.row(vec![
+                run.framework.clone(),
+                run.iterations.to_string(),
+                fmt_duration(run.virtual_time),
+                format!("{:.2}", run.wi_avg()),
+                format!("{:.2}%", run.final_accuracy * 100.0),
+                run.api_calls.to_string(),
+                format!("{:.2}x", run.speedup_vs(&baseline)),
+            ]);
+        }
+        json_rows.push(run.summary_json());
+    }
+    let rendered = table.render();
+    println!("\nTable III ({model}):\n{rendered}");
+    write_file(out, &format!("table3_{model}.txt"), &rendered)?;
+    write_file(
+        out,
+        &format!("table3_{model}.json"),
+        &crate::util::json::Json::Arr(json_rows).to_string(),
+    )?;
+    Ok(rows)
+}
+
+/// Run the complete experiment suite.
+pub fn run_all(out: &Path, model: &str, artifacts: &Path) -> Result<()> {
+    fig1_timelines(out, model, artifacts)?;
+    fig2_breakdown(out, model, artifacts)?;
+    fig3_asp_oscillation(out, model, artifacts)?;
+    fig4_fig5_bsp(out, model, artifacts)?;
+    fig11_hermes(out, model, artifacts)?;
+    fig12_dynamic_sizing(out, model, artifacts)?;
+    fig13_major_updates(out, model, artifacts)?;
+    fig14_alpha_beta(out, model, artifacts)?;
+    table3(out, model, artifacts)?;
+    println!("\nAll experiment outputs in {}", out.display());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scaled_cfgs_are_valid() {
+        for model in ["mock", "cnn", "alexnet"] {
+            for fw in crate::frameworks::ALL {
+                scaled_cfg(model, fw).validate().unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn make_runtime_mock_never_needs_artifacts() {
+        let rt = make_runtime("mock", Path::new("/nonexistent")).unwrap();
+        assert_eq!(rt.meta().name, "mock");
+        assert!(make_runtime("cnn", Path::new("/nonexistent")).is_err());
+    }
+
+    #[test]
+    fn table3_mock_produces_all_rows() {
+        let dir = std::env::temp_dir().join("hermes_exp_test");
+        let rows = table3(&dir, "mock", Path::new("/nonexistent")).unwrap();
+        assert_eq!(rows.len(), 7); // bsp asp ssp ebsp + 3 hermes
+        // Hermes rows must beat BSP on virtual time (the headline).
+        let bsp_t = rows[0].virtual_time;
+        let best_hermes = rows[4..]
+            .iter()
+            .map(|r| r.virtual_time)
+            .fold(f64::MAX, f64::min);
+        assert!(
+            best_hermes < bsp_t,
+            "hermes {best_hermes:.1}s not faster than BSP {bsp_t:.1}s"
+        );
+        assert!(dir.join("table3_mock.txt").exists());
+        assert!(dir.join("table3_mock.json").exists());
+    }
+}

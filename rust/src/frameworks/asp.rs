@@ -1,0 +1,145 @@
+//! **ASP** (Asynchronous Parallel, §II-B): no barriers at all.  Each
+//! worker loops train → push → receive-global independently; the PS
+//! applies every gradient the moment it arrives (Eq. 2).  High hardware
+//! efficiency, stale gradients and the oscillation of Fig. 3 emerge
+//! naturally from the event interleaving.
+
+use anyhow::Result;
+
+use super::common::SimEnv;
+use crate::metrics::SegmentKind;
+use crate::sim::Ev;
+use crate::tensor::ParamVec;
+
+pub fn run(env: &mut SimEnv) -> Result<()> {
+    let n = env.n_workers();
+    let mut pending_grad: Vec<Option<ParamVec>> = vec![None; n];
+    let mut stopping = false;
+
+    // Bootstrap: model + dataset to every worker, then first iteration.
+    let model_b = env.model_bytes();
+    for w in 0..n {
+        let dss = env.workers[w].dss;
+        let comm = env.transfer(w, model_b) + env.transfer(w, env.dataset_bytes(dss));
+        env.workers[w].adopt_global(&env.ps.params.clone(), env.ps.version);
+        env.queue.push_at(comm, Ev::Tag { worker: w, tag: START });
+    }
+
+    while let Some((t, ev)) = env.queue.pop() {
+        if stopping {
+            continue; // drain
+        }
+        match ev {
+            Ev::Tag { worker: w, tag: START } => {
+                start_iteration(env, w, &mut pending_grad, t)?;
+            }
+            Ev::TrainDone { worker: w } => {
+                // Push this iteration's gradient to the PS.
+                let d = env.transfer(w, env.push_bytes());
+                env.segment(w, t, t + d, SegmentKind::Comm);
+                env.run.workers[w].push_times.push(t + d);
+                env.queue.push_in(d, Ev::ArriveAtPs { worker: w });
+            }
+            Ev::ArriveAtPs { worker: w } => {
+                let g = pending_grad[w].take().expect("push without gradient");
+                env.ps.async_sgd(&g);
+                if env.ps.updates % env.cfg.global_eval_every as u64 == 0
+                    && env.eval_global_and_check()?
+                {
+                    stopping = true;
+                    continue;
+                }
+                // Reply with the fresh global model.
+                let d = env.transfer(w, env.model_bytes());
+                env.queue.push_in(d, Ev::ArriveAtWorker { worker: w });
+            }
+            Ev::ArriveAtWorker { worker: w } => {
+                env.workers[w]
+                    .adopt_global(&env.ps.params.clone(), env.ps.version);
+                if env.iterations_exhausted() {
+                    stopping = true;
+                    continue;
+                }
+                start_iteration(env, w, &mut pending_grad, t)?;
+            }
+            _ => {}
+        }
+    }
+    Ok(())
+}
+
+const START: u32 = 0;
+
+fn start_iteration(
+    env: &mut SimEnv,
+    w: usize,
+    pending_grad: &mut [Option<ParamVec>],
+    t: f64,
+) -> Result<()> {
+    let before = env.workers[w].state.params.clone();
+    let (_out, dur) = env.run_local_iteration(w)?;
+    pending_grad[w] =
+        Some(before.delta_over_eta(&env.workers[w].state.params, env.cfg.hp.lr));
+    env.segment(w, t, t + dur, SegmentKind::Train);
+    env.queue.push_in(dur, Ev::TrainDone { worker: w });
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::config::RunConfig;
+    use crate::frameworks::common::run_framework;
+    use crate::runtime::MockRuntime;
+
+    fn cfg() -> RunConfig {
+        let mut cfg = RunConfig::new("mock", "asp");
+        cfg.hp.lr = 0.5;
+        cfg.max_iters = 400;
+        cfg.dss0 = 128;
+        cfg.target_acc = 0.85;
+        cfg
+    }
+
+    #[test]
+    fn asp_runs_and_fast_workers_iterate_more() {
+        let run = run_framework(cfg(), Box::new(MockRuntime::new())).unwrap();
+        assert!(run.iterations > 0);
+        // No barrier: the fast family must complete more iterations
+        // than the B1ms stragglers.
+        let b1ms: u64 = run.workers[..2].iter().map(|w| w.iterations).sum();
+        let fast: u64 = run
+            .workers
+            .iter()
+            .filter(|w| w.family == "F4s_v2")
+            .map(|w| w.iterations)
+            .sum();
+        assert!(fast > b1ms, "fast {fast} vs straggler {b1ms}");
+        // WI is still 1 (a model fetch follows every push).
+        assert!((run.wi_avg() - 1.0).abs() < 0.2, "WI {}", run.wi_avg());
+        // Essentially no barrier wait.
+        let total_wait: f64 = run.workers.iter().map(|w| w.wait_time).sum();
+        assert_eq!(total_wait, 0.0);
+    }
+
+    #[test]
+    fn asp_finishes_faster_than_bsp_in_virtual_time_per_iteration() {
+        let asp = run_framework(cfg(), Box::new(MockRuntime::new())).unwrap();
+        let mut bcfg = cfg();
+        bcfg.framework = "bsp".into();
+        let bsp = run_framework(bcfg, Box::new(MockRuntime::new())).unwrap();
+        let asp_rate = asp.virtual_time / asp.iterations.max(1) as f64;
+        let bsp_rate = bsp.virtual_time / bsp.iterations.max(1) as f64;
+        assert!(
+            asp_rate < bsp_rate,
+            "ASP {asp_rate:.3}s/iter vs BSP {bsp_rate:.3}s/iter"
+        );
+    }
+
+    #[test]
+    fn asp_is_deterministic() {
+        let a = run_framework(cfg(), Box::new(MockRuntime::new())).unwrap();
+        let b = run_framework(cfg(), Box::new(MockRuntime::new())).unwrap();
+        assert_eq!(a.iterations, b.iterations);
+        assert_eq!(a.virtual_time, b.virtual_time);
+    }
+}

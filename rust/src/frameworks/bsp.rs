@@ -1,0 +1,126 @@
+//! **BSP** (Bulk Synchronous Parallel, §II-A): supersteps with a hard
+//! barrier.  Every round the PS broadcasts the model and each worker's
+//! dataset, all workers run one local training pass, the barrier waits
+//! for the slowest (the straggler tax of Figs. 4/5), then SyncSGD
+//! (Eq. 1) aggregates the round's gradients.
+
+use anyhow::Result;
+
+use super::common::SimEnv;
+use crate::metrics::SegmentKind;
+use crate::tensor::ParamVec;
+
+pub fn run(env: &mut SimEnv) -> Result<()> {
+    let eta = env.cfg.hp.lr;
+    loop {
+        let t0 = env.queue.now();
+        let active = env.cluster.active_ids();
+        if active.is_empty() {
+            break;
+        }
+
+        // PS → workers: model + dataset (Fig. 2's "receive" components).
+        let model_b = env.model_bytes();
+        let mut starts = vec![0.0; env.n_workers()];
+        for &w in &active {
+            let dss = env.workers[w].dss;
+            let comm =
+                env.transfer(w, model_b) + env.transfer(w, env.dataset_bytes(dss));
+            starts[w] = t0 + comm;
+            env.segment(w, t0, starts[w], SegmentKind::Comm);
+            env.workers[w].adopt_global(&env.ps.params.clone(), env.ps.version);
+        }
+
+        // Local compute (real XLA steps; virtual duration via Eq. 3).
+        let mut finishes = vec![0.0; env.n_workers()];
+        let mut grads: Vec<ParamVec> = Vec::with_capacity(active.len());
+        for &w in &active {
+            let before = env.workers[w].state.params.clone();
+            let (_out, dur) = env.run_local_iteration(w)?;
+            finishes[w] = starts[w] + dur;
+            env.segment(w, starts[w], finishes[w], SegmentKind::Train);
+            grads.push(before.delta_over_eta(&env.workers[w].state.params, eta));
+        }
+
+        // Barrier: wait for the straggler.
+        let barrier = active.iter().map(|&w| finishes[w]).fold(0.0, f64::max);
+        for &w in &active {
+            env.charge_wait(w, barrier - finishes[w], finishes[w]);
+        }
+
+        // Workers → PS: gradient pushes; PS waits for all of them.
+        let push_b = env.push_bytes();
+        let mut ps_ready = barrier;
+        for &w in &active {
+            let arr = barrier + env.transfer(w, push_b);
+            env.segment(w, barrier, arr, SegmentKind::Comm);
+            env.run.workers[w].push_times.push(arr);
+            ps_ready = ps_ready.max(arr);
+        }
+        env.queue.advance_to(ps_ready);
+
+        env.ps.sync_sgd(&grads);
+        if env.eval_global_and_check()? || env.iterations_exhausted() {
+            break;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::config::RunConfig;
+    use crate::frameworks::common::run_framework;
+    use crate::runtime::MockRuntime;
+
+    fn cfg() -> RunConfig {
+        let mut cfg = RunConfig::new("mock", "bsp");
+        cfg.hp.lr = 0.5; // the mock model likes a big step
+        cfg.max_iters = 240;
+        cfg.dss0 = 128;
+        cfg.target_acc = 0.85;
+        cfg
+    }
+
+    #[test]
+    fn bsp_converges_on_mock_and_has_unit_wi() {
+        let run = run_framework(cfg(), Box::new(MockRuntime::new())).unwrap();
+        assert!(run.converged, "acc {}", run.final_accuracy);
+        // Every worker adopts the model exactly once per round: WI = 1.
+        assert!((run.wi_avg() - 1.0).abs() < 1e-9, "WI {}", run.wi_avg());
+        assert!(run.virtual_time > 0.0);
+        assert!(run.api_calls > 0);
+        // All 12 workers did the same number of iterations.
+        let iters: Vec<u64> =
+            run.workers.iter().map(|w| w.iterations).collect();
+        assert!(iters.iter().all(|&i| i == iters[0]), "{iters:?}");
+    }
+
+    #[test]
+    fn bsp_stragglers_accumulate_wait_time() {
+        let run = run_framework(cfg(), Box::new(MockRuntime::new())).unwrap();
+        // B1ms workers (ids 0,1) are the stragglers: ~zero wait.
+        // F4s_v2 (fastest family) must be waiting.
+        let b1ms_wait: f64 = run.workers[..2].iter().map(|w| w.wait_time).sum();
+        let fast: Vec<&crate::metrics::WorkerMetrics> = run
+            .workers
+            .iter()
+            .filter(|w| w.family == "F4s_v2")
+            .collect();
+        let fast_wait: f64 = fast.iter().map(|w| w.wait_time).sum();
+        assert!(
+            fast_wait > 10.0 * b1ms_wait.max(1e-9),
+            "fast {fast_wait} vs straggler {b1ms_wait}"
+        );
+    }
+
+    #[test]
+    fn bsp_is_deterministic() {
+        let a = run_framework(cfg(), Box::new(MockRuntime::new())).unwrap();
+        let b = run_framework(cfg(), Box::new(MockRuntime::new())).unwrap();
+        assert_eq!(a.iterations, b.iterations);
+        assert_eq!(a.virtual_time, b.virtual_time);
+        assert_eq!(a.final_accuracy, b.final_accuracy);
+        assert_eq!(a.api_calls, b.api_calls);
+    }
+}

@@ -1,0 +1,265 @@
+//! **Hermes** — the paper's system (§IV, Fig. 6):
+//!
+//! * Workers iterate asynchronously; every iteration ends with a probe
+//!   evaluation whose loss feeds **HermesGUP** (Alg. 1).  Only gated
+//!   pushes travel to the PS — everything else is local progress.
+//! * The PS aggregates with **loss-based SGD** (Alg. 2), replies with
+//!   the global model, and the worker refreshes (Fig. 6 c²).
+//! * The PS asynchronously monitors per-worker training times
+//!   (TimeReport heartbeats), flags IQR outliers and retargets them to
+//!   the cluster-median time via the **dual binary search** (§IV-A),
+//!   prefetching the re-sized dataset so nobody stalls (§IV-D).
+//! * Tensor traffic is fp16-compressed when `net.fp16_wire` is on.
+
+use anyhow::Result;
+
+use super::common::SimEnv;
+use crate::alloc::{rebalance_pass, Allocation, TimeMonitor, MBS_DOMAIN};
+use crate::metrics::SegmentKind;
+use crate::sim::Ev;
+
+const START: u32 = 0;
+
+/// Minimum virtual seconds between PS rebalancing passes.
+const REBALANCE_EVERY: f64 = 4.0;
+
+pub fn run(env: &mut SimEnv) -> Result<()> {
+    let eta = env.cfg.hp.lr;
+    let n = env.n_workers();
+    let mut monitor = TimeMonitor::new(n);
+    let mut pending_alloc: Vec<Option<Allocation>> = vec![None; n];
+    // Without prefetch the worker stalls for the dataset transfer
+    // before its next iteration (charged here, applied at start).
+    let mut pending_stall: Vec<f64> = vec![0.0; n];
+    let mut last_rebalance = f64::MIN;
+    let mut stopping = false;
+
+    // Memory caps per worker for the allocator.
+    let model_bytes = env.rt.meta().param_count * 4;
+    let sample_bytes = env.ds.meta.sample_bytes();
+    let dss_caps: Vec<usize> = (0..n)
+        .map(|w| {
+            env.cluster
+                .memory_limit_dss(w, model_bytes, sample_bytes)
+                .max(env.cfg.mbs0)
+        })
+        .collect();
+
+    // Bootstrap: model + dataset to everyone.
+    let model_b = env.model_bytes();
+    for w in 0..n {
+        let dss = env.workers[w].dss;
+        let comm = env.transfer(w, model_b) + env.transfer(w, env.dataset_bytes(dss));
+        env.workers[w].adopt_global(&env.ps.params.clone(), env.ps.version);
+        env.queue.push_at(comm, Ev::Tag { worker: w, tag: START });
+    }
+
+    while let Some((t, ev)) = env.queue.pop() {
+        if stopping {
+            continue;
+        }
+        match ev {
+            Ev::Tag { worker: w, tag: START } => {
+                start_iteration(
+                    env, w, &mut monitor, &mut pending_alloc, &mut pending_stall, t,
+                )?;
+            }
+            Ev::TrainDone { worker: w } => {
+                // The gate decision was computed with the iteration.
+                if env.workers[w].last_push_pending {
+                    env.workers[w].last_push_pending = false;
+                    // Ship G (cumulative from w₀) + T_w to the PS.
+                    let d = env.transfer(w, env.push_bytes());
+                    env.segment(w, t, t + d, SegmentKind::Comm);
+                    env.run.workers[w].push_times.push(t + d);
+                    env.queue.push_in(d, Ev::ArriveAtPs { worker: w });
+                } else {
+                    // Full independence: next iteration immediately.
+                    if env.iterations_exhausted() {
+                        stopping = true;
+                        continue;
+                    }
+                    start_iteration(
+                        env, w, &mut monitor, &mut pending_alloc,
+                        &mut pending_stall, t,
+                    )?;
+                }
+            }
+            Ev::ArriveAtPs { worker: w } => {
+                // Heartbeat already recorded; run Alg. 2.
+                let g = env.workers[w].cumulative_g(&env.ps.w0, eta);
+                let t_w = env.workers[w].last_loss;
+                env.ps
+                    .loss_based_sgd(&g, t_w, env.rt.as_mut(), &env.probe)?;
+                // Alg. 2's eval already refreshed loss/acc — record it.
+                let now = env.queue.now();
+                env.run
+                    .curve
+                    .push((now, env.ps.loss as f64, env.ps.accuracy));
+                if env.check_convergence_after_external_eval()? {
+                    stopping = true;
+                    continue;
+                }
+
+                // Asynchronous monitoring + dynamic allocation.
+                if env.cfg.dynamic_alloc
+                    && monitor.have_all()
+                    && now - last_rebalance >= REBALANCE_EVERY
+                {
+                    last_rebalance = now;
+                    let rbs = rebalance_pass(
+                        &monitor,
+                        env.cfg.hp.epochs,
+                        &env.allocs,
+                        &dss_caps,
+                        &MBS_DOMAIN,
+                    );
+                    for rb in rbs {
+                        env.allocs[rb.worker] = rb.alloc;
+                        // DatasetAssign control message…
+                        env.transfer(rb.worker, env.ctl_bytes());
+                        // …and the data plane: prefetched (overlapped)
+                        // or synchronous (stall charged on arrival).
+                        let data_d = env
+                            .transfer(rb.worker, env.dataset_bytes(rb.alloc.dss));
+                        env.run.workers[rb.worker]
+                            .allocations
+                            .push((now, rb.alloc.dss, rb.alloc.mbs));
+                        pending_alloc[rb.worker] = Some(rb.alloc);
+                        if env.cfg.prefetch {
+                            // Overlapped: lands while the worker trains.
+                            env.queue.push_in(
+                                data_d,
+                                Ev::PrefetchDone { worker: rb.worker },
+                            );
+                        } else {
+                            // Synchronous shipping: the worker stalls
+                            // for the transfer before its next start.
+                            env.charge_wait(rb.worker, data_d, now);
+                            pending_stall[rb.worker] += data_d;
+                        }
+                    }
+                }
+
+                // Reply with the fresh global model.
+                let d = env.transfer(w, env.model_bytes());
+                env.queue.push_in(d, Ev::ArriveAtWorker { worker: w });
+            }
+            Ev::ArriveAtWorker { worker: w } => {
+                env.workers[w]
+                    .adopt_global(&env.ps.params.clone(), env.ps.version);
+                if env.iterations_exhausted() {
+                    stopping = true;
+                    continue;
+                }
+                start_iteration(
+                    env, w, &mut monitor, &mut pending_alloc, &mut pending_stall, t,
+                )?;
+            }
+            Ev::PrefetchDone { .. } => { /* data landed; alloc already staged */ }
+            Ev::Tag { .. } => {}
+        }
+    }
+    Ok(())
+}
+
+fn start_iteration(
+    env: &mut SimEnv,
+    w: usize,
+    monitor: &mut TimeMonitor,
+    pending_alloc: &mut [Option<Allocation>],
+    pending_stall: &mut [f64],
+    t: f64,
+) -> Result<()> {
+    // Stage any prefetched allocation before the iteration.
+    if let Some(a) = pending_alloc[w].take() {
+        env.workers[w].assign(a.dss, a.mbs.min(256));
+    }
+    let stall = std::mem::take(&mut pending_stall[w]);
+    let (out, mut dur) = env.run_local_iteration(w)?;
+    dur += stall; // synchronous dataset wait lands on the critical path
+    monitor.record(w, dur);
+    env.allocs[w].modeled = dur;
+    // Lightweight TimeReport heartbeat (the PS's monitoring plane).
+    env.transfer(w, env.ctl_bytes());
+    env.segment(w, t, t + dur, SegmentKind::Train);
+    env.workers[w].last_push_pending = out.gate.push;
+    env.queue.push_in(dur, Ev::TrainDone { worker: w });
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::config::RunConfig;
+    use crate::frameworks::common::run_framework;
+    use crate::runtime::MockRuntime;
+
+    fn cfg() -> RunConfig {
+        let mut cfg = RunConfig::new("mock", "hermes");
+        cfg.hp.lr = 0.5;
+        cfg.hp.alpha = -1.0;
+        cfg.max_iters = 500;
+        cfg.dss0 = 128;
+        cfg.target_acc = 0.85;
+        cfg
+    }
+
+    /// Variant that cannot converge early — exercises the monitoring/
+    /// reallocation plane across many pushes.
+    fn long_cfg() -> RunConfig {
+        let mut cfg = cfg();
+        cfg.target_acc = 0.9999;
+        cfg.hp.patience = 1000;
+        cfg.max_iters = 700;
+        cfg
+    }
+
+    #[test]
+    fn hermes_learns_with_high_worker_independence() {
+        let run = run_framework(cfg(), Box::new(MockRuntime::new())).unwrap();
+        assert!(run.final_loss < 2.0, "loss {}", run.final_loss);
+        // The whole point: WI ≫ 1 (Table III: 7.4–8.7 vs 1.0).
+        assert!(run.wi_avg() > 2.0, "WI {}", run.wi_avg());
+        // Pushes are sparse relative to iterations.
+        assert!(run.total_pushes() * 2 < run.iterations);
+    }
+
+    #[test]
+    fn hermes_communicates_less_than_asp() {
+        let h = run_framework(cfg(), Box::new(MockRuntime::new())).unwrap();
+        let mut acfg = cfg();
+        acfg.framework = "asp".into();
+        let a = run_framework(acfg, Box::new(MockRuntime::new())).unwrap();
+        let h_rate = h.bytes as f64 / h.iterations.max(1) as f64;
+        let a_rate = a.bytes as f64 / a.iterations.max(1) as f64;
+        assert!(
+            h_rate < 0.6 * a_rate,
+            "hermes {h_rate:.0} B/iter vs asp {a_rate:.0} B/iter"
+        );
+    }
+
+    #[test]
+    fn dynamic_alloc_rebalances_the_straggler() {
+        let run = run_framework(long_cfg(), Box::new(MockRuntime::new())).unwrap();
+        // The B1ms stragglers (workers 0,1) must have been reallocated
+        // at least once.
+        let realloc: usize = run.workers[..2]
+            .iter()
+            .map(|w| w.allocations.len())
+            .sum();
+        assert!(realloc > 0, "straggler never rebalanced");
+    }
+
+    #[test]
+    fn ablations_change_behaviour() {
+        let on = run_framework(long_cfg(), Box::new(MockRuntime::new())).unwrap();
+        let mut off_cfg = long_cfg();
+        off_cfg.dynamic_alloc = false;
+        let off = run_framework(off_cfg, Box::new(MockRuntime::new())).unwrap();
+        let rb = |r: &crate::metrics::RunMetrics| {
+            r.workers.iter().map(|w| w.allocations.len()).sum::<usize>()
+        };
+        assert!(rb(&on) > 0);
+        assert_eq!(rb(&off), 0);
+    }
+}

@@ -1,0 +1,25 @@
+//! Framework drivers: the paper's Hermes plus every baseline it
+//! evaluates against, all explicit state machines over the shared
+//! [`common::SimEnv`] (real XLA compute, virtual Eq. 3 time).
+//!
+//! | driver    | paper section | sync discipline                        |
+//! |-----------|---------------|----------------------------------------|
+//! | `bsp`     | §II-A         | hard barrier every round (Eq. 1)       |
+//! | `asp`     | §II-B         | none (Eq. 2)                           |
+//! | `ssp`     | §II-C         | bounded staleness `s`                  |
+//! | `ebsp`    | §II-D         | elastic barrier within lookahead `R`   |
+//! | `selsync` | §II-E         | relative-gradient-change gate `δ`      |
+//! | `hermes`  | §IV           | GUP gate + loss-based SGD + dual search|
+
+pub mod asp;
+pub mod bsp;
+pub mod common;
+pub mod ebsp;
+pub mod hermes;
+pub mod selsync;
+pub mod ssp;
+
+pub use common::{run_framework, run_framework_opts, SimEnv};
+
+/// All framework names, in the paper's presentation order.
+pub const ALL: [&str; 6] = ["bsp", "asp", "ssp", "ebsp", "selsync", "hermes"];

@@ -1,0 +1,135 @@
+//! **SelSync** (§II-E): alternate between local-SGD and synchronous
+//! rounds based on the *relative gradient change* — when any worker's
+//! relative parameter change exceeds δ the round synchronizes (barrier
+//! + SyncSGD), otherwise updates stay local and no communication
+//! happens.  Data is partitioned SelDP-style (one global shuffle,
+//! disjoint equal slices).
+//!
+//! The paper's critique — relative gradients are noisy, so the gate is
+//! unreliable — is measurable here: the `ablate_gate` bench compares
+//! this gate against HermesGUP on identical runs.
+
+use anyhow::Result;
+
+use super::common::SimEnv;
+use crate::data::{partition_pools, Partition};
+use crate::metrics::SegmentKind;
+use crate::tensor::ParamVec;
+
+pub fn run(env: &mut SimEnv) -> Result<()> {
+    let eta = env.cfg.hp.lr;
+    let delta = env.cfg.hp.selsync_delta;
+    let n = env.n_workers();
+
+    // SelDP re-partition: one global shuffle, disjoint slices (§II-E).
+    let (train_idx, _) = env.ds.split(0.85, env.cfg.seed);
+    let shards =
+        partition_pools(&env.ds, &train_idx, n, Partition::SelDp, env.cfg.seed);
+    for (w, shard) in shards.into_iter().enumerate() {
+        env.workers[w].shard = shard;
+        let dss = env.workers[w].dss;
+        let mbs = env.workers[w].mbs;
+        env.workers[w].assign(dss, mbs);
+    }
+
+    // Initial broadcast.
+    let t0 = env.queue.now();
+    let model_b = env.model_bytes();
+    let mut ready = vec![t0; n];
+    for w in 0..n {
+        let dss = env.workers[w].dss;
+        let comm = env.transfer(w, model_b) + env.transfer(w, env.dataset_bytes(dss));
+        ready[w] = t0 + comm;
+        env.workers[w].adopt_global(&env.ps.params.clone(), env.ps.version);
+    }
+
+    loop {
+        // One local iteration everywhere; measure relative change.
+        let mut finishes = vec![0.0; n];
+        let mut rels = vec![0.0f64; n];
+        let mut grads: Vec<ParamVec> = Vec::with_capacity(n);
+        for w in 0..n {
+            let before = env.workers[w].state.params.clone();
+            let (_out, dur) = env.run_local_iteration(w)?;
+            finishes[w] = ready[w] + dur;
+            env.segment(w, ready[w], finishes[w], SegmentKind::Train);
+            rels[w] =
+                ParamVec::relative_change(&env.workers[w].state.params, &before);
+            grads.push(before.delta_over_eta(&env.workers[w].state.params, eta));
+        }
+
+        let sync_round = rels.iter().any(|&r| r > delta);
+        if sync_round {
+            // Barrier + push + SyncSGD + broadcast.
+            let barrier = finishes.iter().copied().fold(0.0, f64::max);
+            let push_b = env.push_bytes();
+            let mut ps_ready = barrier;
+            for w in 0..n {
+                env.charge_wait(w, barrier - finishes[w], finishes[w]);
+                let arr = barrier + env.transfer(w, push_b);
+                env.run.workers[w].push_times.push(arr);
+                ps_ready = ps_ready.max(arr);
+            }
+            env.queue.advance_to(ps_ready);
+            env.ps.sync_sgd(&grads);
+            let t1 = env.queue.now();
+            for w in 0..n {
+                let comm = env.transfer(w, model_b);
+                ready[w] = t1 + comm;
+                env.workers[w]
+                    .adopt_global(&env.ps.params.clone(), env.ps.version);
+            }
+            if env.eval_global_and_check()? {
+                break;
+            }
+        } else {
+            // Local round: no communication, everyone proceeds.
+            for w in 0..n {
+                ready[w] = finishes[w];
+            }
+            // The PS model is unchanged; advance the clock to the
+            // median progress point so the curve stays time-indexed.
+            let mut fs = finishes.clone();
+            fs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            env.queue.advance_to(fs[n / 2].max(env.queue.now()));
+        }
+        if env.iterations_exhausted() {
+            break;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::config::RunConfig;
+    use crate::frameworks::common::run_framework;
+    use crate::runtime::MockRuntime;
+
+    fn cfg(delta: f64) -> RunConfig {
+        let mut cfg = RunConfig::new("mock", "selsync");
+        cfg.hp.lr = 0.5;
+        cfg.hp.selsync_delta = delta;
+        cfg.max_iters = 360;
+        cfg.dss0 = 128;
+        cfg.target_acc = 0.85;
+        cfg
+    }
+
+    #[test]
+    fn tight_delta_syncs_often_loose_delta_rarely() {
+        let tight = run_framework(cfg(1e-6), Box::new(MockRuntime::new())).unwrap();
+        let loose = run_framework(cfg(1e3), Box::new(MockRuntime::new())).unwrap();
+        // δ→0: every round syncs ⇒ WI ≈ 1.  δ→∞: no syncs ⇒ huge WI.
+        assert!(tight.wi_avg() < 1.5, "tight WI {}", tight.wi_avg());
+        assert!(loose.wi_avg() > 10.0, "loose WI {}", loose.wi_avg());
+        assert!(loose.api_calls < tight.api_calls);
+    }
+
+    #[test]
+    fn selsync_runs_learn() {
+        let run = run_framework(cfg(0.05), Box::new(MockRuntime::new())).unwrap();
+        // Loss must drop from the ln(10) start.
+        assert!(run.final_loss < 2.0, "loss {}", run.final_loss);
+    }
+}

@@ -1,0 +1,154 @@
+//! **SSP** (Stale Synchronous Parallel, §II-C): ASP plus a staleness
+//! bound — a worker may run at most `s` iterations ahead of the slowest
+//! worker; crossing the bound blocks it until the laggard catches up.
+
+use anyhow::Result;
+
+use super::common::SimEnv;
+use crate::metrics::SegmentKind;
+use crate::sim::Ev;
+use crate::tensor::ParamVec;
+
+const START: u32 = 0;
+
+pub fn run(env: &mut SimEnv) -> Result<()> {
+    let s = env.cfg.hp.ssp_staleness as u64;
+    let n = env.n_workers();
+    let mut pending_grad: Vec<Option<ParamVec>> = vec![None; n];
+    // iteration clock per worker
+    let mut clock: Vec<u64> = vec![0; n];
+    // workers currently blocked on the staleness bound, with the time
+    // they blocked (for wait accounting)
+    let mut blocked: Vec<Option<f64>> = vec![None; n];
+    let mut stopping = false;
+
+    let model_b = env.model_bytes();
+    for w in 0..n {
+        let dss = env.workers[w].dss;
+        let comm = env.transfer(w, model_b) + env.transfer(w, env.dataset_bytes(dss));
+        env.workers[w].adopt_global(&env.ps.params.clone(), env.ps.version);
+        env.queue.push_at(comm, Ev::Tag { worker: w, tag: START });
+    }
+
+    while let Some((t, ev)) = env.queue.pop() {
+        if stopping {
+            continue;
+        }
+        match ev {
+            Ev::Tag { worker: w, tag: START } => {
+                start_iteration(env, w, &mut pending_grad, t)?;
+            }
+            Ev::TrainDone { worker: w } => {
+                clock[w] += 1;
+                let d = env.transfer(w, env.push_bytes());
+                env.segment(w, t, t + d, SegmentKind::Comm);
+                env.run.workers[w].push_times.push(t + d);
+                env.queue.push_in(d, Ev::ArriveAtPs { worker: w });
+            }
+            Ev::ArriveAtPs { worker: w } => {
+                let g = pending_grad[w].take().expect("push without gradient");
+                env.ps.async_sgd(&g);
+                if env.ps.updates % env.cfg.global_eval_every as u64 == 0
+                    && env.eval_global_and_check()?
+                {
+                    stopping = true;
+                    continue;
+                }
+                let d = env.transfer(w, env.model_bytes());
+                env.queue.push_in(d, Ev::ArriveAtWorker { worker: w });
+                // A slow worker advancing may release blocked ones.
+                let min_clock = *clock.iter().min().unwrap();
+                for b in 0..n {
+                    if let Some(since) = blocked[b] {
+                        if clock[b] <= min_clock + s {
+                            blocked[b] = None;
+                            env.charge_wait(b, t - since, since);
+                            env.queue
+                                .push_at(t, Ev::Tag { worker: b, tag: START });
+                        }
+                    }
+                }
+            }
+            Ev::ArriveAtWorker { worker: w } => {
+                env.workers[w]
+                    .adopt_global(&env.ps.params.clone(), env.ps.version);
+                if env.iterations_exhausted() {
+                    stopping = true;
+                    continue;
+                }
+                let min_clock = *clock.iter().min().unwrap();
+                if clock[w] > min_clock + s {
+                    // Too far ahead: block until the laggards catch up.
+                    blocked[w] = Some(t);
+                } else {
+                    start_iteration(env, w, &mut pending_grad, t)?;
+                }
+            }
+            _ => {}
+        }
+    }
+    Ok(())
+}
+
+fn start_iteration(
+    env: &mut SimEnv,
+    w: usize,
+    pending_grad: &mut [Option<ParamVec>],
+    t: f64,
+) -> Result<()> {
+    let before = env.workers[w].state.params.clone();
+    let (_out, dur) = env.run_local_iteration(w)?;
+    pending_grad[w] =
+        Some(before.delta_over_eta(&env.workers[w].state.params, env.cfg.hp.lr));
+    env.segment(w, t, t + dur, SegmentKind::Train);
+    env.queue.push_in(dur, Ev::TrainDone { worker: w });
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::config::RunConfig;
+    use crate::frameworks::common::run_framework;
+    use crate::runtime::MockRuntime;
+
+    fn cfg(s: usize) -> RunConfig {
+        let mut cfg = RunConfig::new("mock", "ssp");
+        cfg.hp.lr = 0.5;
+        cfg.hp.ssp_staleness = s;
+        cfg.max_iters = 400;
+        cfg.dss0 = 128;
+        // Don't let the run converge before the staleness gap builds.
+        cfg.target_acc = 0.9999;
+        cfg.hp.patience = 1000;
+        cfg
+    }
+
+    #[test]
+    fn tight_staleness_bounds_iteration_spread() {
+        let run = run_framework(cfg(2), Box::new(MockRuntime::new())).unwrap();
+        let iters: Vec<u64> = run.workers.iter().map(|w| w.iterations).collect();
+        let min = *iters.iter().min().unwrap();
+        let max = *iters.iter().max().unwrap();
+        // The bound allows at most s plus in-flight slack (one
+        // iteration may be mid-air per worker when the clock advances).
+        assert!(max - min <= 2 + 4, "spread {min}..{max}");
+        // Fast workers must have blocked: positive wait time.
+        let total_wait: f64 = run.workers.iter().map(|w| w.wait_time).sum();
+        assert!(total_wait > 0.0);
+    }
+
+    #[test]
+    fn loose_staleness_behaves_like_asp() {
+        let tight = run_framework(cfg(2), Box::new(MockRuntime::new())).unwrap();
+        let loose =
+            run_framework(cfg(1000), Box::new(MockRuntime::new())).unwrap();
+        let loose_wait: f64 = loose.workers.iter().map(|w| w.wait_time).sum();
+        assert_eq!(loose_wait, 0.0);
+        // Loose staleness lets the fast family pull further ahead.
+        let spread = |r: &crate::metrics::RunMetrics| {
+            let it: Vec<u64> = r.workers.iter().map(|w| w.iterations).collect();
+            it.iter().max().unwrap() - it.iter().min().unwrap()
+        };
+        assert!(spread(&loose) >= spread(&tight));
+    }
+}

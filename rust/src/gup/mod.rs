@@ -1,0 +1,285 @@
+//! **HermesGUP** (Alg. 1): the probabilistic gradient-update-push gate.
+//!
+//! Each local iteration the worker computes its test loss `x`, takes
+//! the z-score of `x` against the window of the last `w` test losses
+//! (Eq. 4), and pushes gradients to the PS only when `z ≤ α` — i.e.
+//! when the improvement in generalization is statistically significant
+//! at the α tail (§IV-B2).  α is *dynamic*: after λ iterations without
+//! a push it decays by β (§IV-B3).  Per DESIGN.md §9 we read "decay" as
+//! relaxing toward 0 (the §VI-B description); `relax=false` flips the
+//! direction for the ablation bench.
+
+use std::collections::VecDeque;
+
+use crate::util::stats;
+
+/// The per-worker gate state.
+#[derive(Debug, Clone)]
+pub struct Gup {
+    /// Window of the last `w` test losses (Fig. 8's queue).
+    window: VecDeque<f64>,
+    w: usize,
+    alpha0: f64,
+    pub alpha: f64,
+    beta: f64,
+    lambda: usize,
+    /// Iterations since the last push (N_iter in Alg. 1).
+    pub n_iter: usize,
+    relax: bool,
+    /// α never relaxes past this (keeps the gate meaningful).
+    alpha_cap: f64,
+    /// Total pushes fired (for the WI metric and Fig. 14b).
+    pub pushes: u64,
+    /// Total iterations observed.
+    pub observed: u64,
+}
+
+/// Outcome of one gate decision.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GateDecision {
+    pub push: bool,
+    /// The z-score, when the window had enough spread to compute one.
+    pub z: Option<f64>,
+    /// α in force at decision time.
+    pub alpha: f64,
+}
+
+impl Gup {
+    pub fn new(window: usize, alpha: f64, beta: f64, lambda: usize, relax: bool) -> Self {
+        assert!(window >= 2, "window must be ≥ 2");
+        assert!(alpha < 0.0, "alpha must be negative (§IV-B2)");
+        Gup {
+            window: VecDeque::with_capacity(window + 1),
+            w: window,
+            alpha0: alpha,
+            alpha,
+            beta,
+            lambda,
+            n_iter: 0,
+            relax,
+            alpha_cap: -0.05,
+            pushes: 0,
+            observed: 0,
+        }
+    }
+
+    pub fn from_hp(hp: &crate::config::HyperParams, relax: bool) -> Self {
+        Self::new(hp.window, hp.alpha, hp.beta, hp.lambda, relax)
+    }
+
+    /// Observe the test loss of the just-finished local iteration and
+    /// decide whether to push (Alg. 1 lines 4–12).
+    ///
+    /// Ordering matters and follows Alg. 1: the z-score standardizes
+    /// `x` against the *previous* window (μ, σ of Q), then `x` joins
+    /// the queue.  A window with no spread (σ≈0) yields no signal and
+    /// never fires the gate.
+    pub fn observe(&mut self, x: f64) -> GateDecision {
+        self.observed += 1;
+        // Warmup: until the queue holds w losses its μ/σ estimates are
+        // too unstable to standardize against ("the queue provides a
+        // more stable estimate of the underlying distribution",
+        // §IV-B2) — no gate decisions, no α decay.
+        if self.window.len() < self.w {
+            self.window.push_back(x);
+            return GateDecision { push: false, z: None, alpha: self.alpha };
+        }
+        let z = stats::z_score(x, self.window.make_contiguous());
+
+        // Slide the window.
+        self.window.push_back(x);
+        if self.window.len() > self.w {
+            self.window.pop_front();
+        }
+
+        let alpha_now = self.alpha;
+        let push = matches!(z, Some(z) if z <= alpha_now);
+        if push {
+            self.pushes += 1;
+            self.n_iter = 0;
+            // A push re-arms the strict threshold: the model just
+            // jumped to a new region (the worker refreshes from the
+            // global model), so "significant" is re-baselined.
+            self.alpha = self.alpha0;
+        } else {
+            self.n_iter += 1;
+            if self.n_iter >= self.lambda {
+                // Decay α by β (Alg. 1 line 12).
+                self.alpha = if self.relax {
+                    (self.alpha + self.beta).min(self.alpha_cap)
+                } else {
+                    self.alpha - self.beta
+                };
+                self.n_iter = 0;
+            }
+        }
+        GateDecision { push, z, alpha: alpha_now }
+    }
+
+    /// The tail probability the current α corresponds to (§V-E quotes
+    /// these: −1.3 → 9.68%, −1.6 → 5.48%, −0.9 → 18.4%).
+    pub fn tail_probability(&self) -> f64 {
+        stats::normal_cdf(self.alpha)
+    }
+
+    pub fn window_len(&self) -> usize {
+        self.window.len()
+    }
+
+    /// Clear the loss window (used when the worker's model is replaced
+    /// wholesale and old losses are no longer comparable).
+    pub fn reset_window(&mut self) {
+        self.window.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gup() -> Gup {
+        Gup::new(5, -1.3, 0.1, 4, true)
+    }
+
+    #[test]
+    fn no_push_during_warmup_or_zero_spread() {
+        let mut g = gup();
+        for _ in 0..5 {
+            assert!(!g.observe(1.0).push); // warmup (window < w)
+        }
+        assert!(!g.observe(0.1).push); // σ = 0 after warmup: no signal
+        assert_eq!(g.pushes, 0);
+    }
+
+    #[test]
+    fn significant_drop_fires_the_gate() {
+        let mut g = gup();
+        for x in [1.00, 1.02, 0.98, 1.01, 0.99] {
+            assert!(!g.observe(x).push); // warmup fills the window
+        }
+        // A big drop: z far below −1.3.
+        let d = g.observe(0.5);
+        assert!(d.push, "z = {:?}", d.z);
+        assert!(d.z.unwrap() < -1.3);
+        assert_eq!(g.pushes, 1);
+        assert_eq!(g.n_iter, 0);
+    }
+
+    #[test]
+    fn push_iff_z_leq_alpha() {
+        // Construct a window with known μ/σ; check the boundary
+        // behaviour explicitly on both sides.
+        let mut g = Gup::new(5, -1.0, 0.0, 1000, true);
+        let base = [1.00, 1.02, 0.98, 1.01, 0.99];
+        for x in base {
+            g.observe(x);
+        }
+        let mu = stats::mean(&base.map(|x| x));
+        let sigma = stats::std_dev(&base);
+        // Just above the threshold: z slightly > −1 ⇒ no push.
+        let d1 = g.observe(mu - 0.99 * sigma);
+        assert!(!d1.push, "{d1:?}");
+        // Well below: push.
+        let mut g2 = Gup::new(5, -1.0, 0.0, 1000, true);
+        for x in base {
+            g2.observe(x);
+        }
+        let d2 = g2.observe(mu - 1.5 * sigma);
+        assert!(d2.push, "{d2:?}");
+    }
+
+    #[test]
+    fn alpha_decays_after_lambda_quiet_iterations() {
+        let mut g = gup(); // w=5, λ=4, β=0.1, relax
+        for x in [1.0, 1.01, 0.99, 1.0, 1.02] {
+            g.observe(x); // warmup fills the window, no decay yet
+        }
+        assert!((g.alpha - (-1.3)).abs() < 1e-12);
+        for _ in 0..4 {
+            g.observe(1.0); // 4 quiet iterations (z ≈ 0) → one decay
+        }
+        assert!((g.alpha - (-1.2)).abs() < 1e-12, "alpha {}", g.alpha);
+        // 4 more (window saturates at σ=0: still quiet) → −1.1.
+        for _ in 0..4 {
+            g.observe(1.0);
+        }
+        assert!((g.alpha - (-1.1)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn alpha_relaxation_is_capped() {
+        let mut g = Gup::new(5, -0.2, 0.1, 1, true);
+        for _ in 0..50 {
+            g.observe(1.0); // σ=0 ⇒ never pushes, always decays
+        }
+        assert!(g.alpha <= -0.05 + 1e-12);
+        assert!(g.alpha >= -0.2);
+    }
+
+    #[test]
+    fn tighten_mode_goes_more_negative() {
+        let mut g = Gup::new(5, -1.0, 0.1, 1, false);
+        for _ in 0..10 {
+            g.observe(1.0);
+        }
+        assert!(g.alpha < -1.5, "alpha {}", g.alpha);
+    }
+
+    #[test]
+    fn push_resets_alpha_and_counter() {
+        let mut g = gup();
+        for x in [1.0, 1.02, 0.98, 1.01, 0.99] {
+            g.observe(x); // warmup
+        }
+        for _ in 0..4 {
+            g.observe(1.0); // quiet (z ≈ 0); decays once (λ=4) → −1.2
+        }
+        assert!((g.alpha - (-1.2)).abs() < 1e-12);
+        let d = g.observe(0.3);
+        assert!(d.push);
+        assert_eq!(g.alpha, -1.3); // re-armed
+        assert_eq!(g.n_iter, 0);
+    }
+
+    #[test]
+    fn rising_loss_never_pushes() {
+        let mut g = gup();
+        let mut pushed = false;
+        for i in 0..30 {
+            let d = g.observe(1.0 + 0.05 * i as f64);
+            pushed |= d.push;
+        }
+        assert!(!pushed);
+    }
+
+    #[test]
+    fn more_negative_alpha_means_fewer_pushes() {
+        // Fig. 14b's shape: α=−0.9 fires more often than α=−1.6 on the
+        // same noisy-but-improving loss sequence.
+        let run = |alpha: f64| -> u64 {
+            let mut g = Gup::new(10, alpha, 0.0, 10_000, true);
+            let mut rng = crate::util::rng::Xoshiro256pp::seed_from_u64(7);
+            let mut pushes = 0;
+            for i in 0..400 {
+                let trend = 2.0 * (-(i as f64) / 150.0).exp();
+                let x = trend + 0.05 * rng.normal().abs();
+                if g.observe(x).push {
+                    pushes += 1;
+                }
+            }
+            pushes
+        };
+        let loose = run(-0.9);
+        let mid = run(-1.3);
+        let tight = run(-1.6);
+        assert!(loose > mid, "{loose} vs {mid}");
+        assert!(mid >= tight, "{mid} vs {tight}");
+        assert!(tight > 0);
+    }
+
+    #[test]
+    fn tail_probabilities_match_paper_quotes() {
+        let g = Gup::new(10, -1.3, 0.1, 5, true);
+        assert!((g.tail_probability() - 0.0968).abs() < 1e-3);
+    }
+}

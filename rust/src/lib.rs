@@ -1,0 +1,39 @@
+//! # hermes-dml
+//!
+//! A production-grade reproduction of **Hermes** — *"When Less is More:
+//! Achieving Faster Convergence in Distributed Edge Machine Learning"*
+//! (HiPC 2024) — as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the coordination contribution: the parameter
+//!   server, the HermesGUP gradient-push gate, loss-based SGD
+//!   aggregation, dual-binary-search dataset allocation, and the
+//!   BSP/ASP/SSP/EBSP/SelSync baselines, all over a deterministic
+//!   discrete-event cluster simulator plus a live threaded TCP mode.
+//! * **L2/L1 (build time)** — JAX models whose dense/conv compute is
+//!   Pallas kernels, AOT-lowered to HLO text and executed here through
+//!   the XLA PJRT CPU client ([`runtime`]).  Python never runs on the
+//!   request path.
+//!
+//! See DESIGN.md for the system inventory and the per-experiment index,
+//! and EXPERIMENTS.md for paper-vs-measured results.
+
+pub mod alloc;
+pub mod bench_harness;
+pub mod cli;
+pub mod cluster;
+pub mod config;
+pub mod data;
+pub mod exp;
+pub mod frameworks;
+pub mod gup;
+pub mod live;
+pub mod metrics;
+pub mod model;
+pub mod net;
+pub mod ps;
+pub mod runtime;
+pub mod sim;
+pub mod tensor;
+pub mod util;
+pub mod wire;
+pub mod worker;

@@ -1,0 +1,232 @@
+//! `hermes` — CLI for the Hermes reproduction.
+//!
+//! Subcommands:
+//!   run   — one framework run (sim), printing the summary JSON
+//!   exp   — regenerate a paper table/figure (or `all`)
+//!   live  — start the threaded live TCP cluster
+//!   info  — artifact manifest / cluster / hyper-parameter info
+
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+use hermes_dml::cli::Command;
+use hermes_dml::config::{ClusterConfig, HyperParams, RunConfig};
+use hermes_dml::exp;
+use hermes_dml::live::run_live;
+use hermes_dml::metrics::write_file;
+use hermes_dml::runtime::Manifest;
+use hermes_dml::util::fmt_duration;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match dispatch(&args) {
+        Ok(()) => 0,
+        Err(msg) => {
+            eprintln!("{msg}");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn usage() -> String {
+    "hermes — reproduction of 'When Less is More' (HiPC 2024)\n\n\
+     USAGE:\n  hermes <run|exp|live|info> [options]\n\n\
+     SUBCOMMANDS:\n\
+       run   run one framework over the simulated 12-worker edge cluster\n\
+       exp   regenerate a paper experiment: fig1 fig2 fig3 fig4 fig11\n\
+             fig12 fig13 fig14 table3 all\n\
+       live  run the real threaded TCP parameter server + workers\n\
+       info  show artifacts, cluster and hyper-parameter defaults\n\n\
+     Try `hermes <cmd> --help`."
+        .to_string()
+}
+
+fn dispatch(args: &[String]) -> Result<(), String> {
+    let Some(sub) = args.first() else {
+        return Err(usage());
+    };
+    let rest = &args[1..];
+    match sub.as_str() {
+        "run" => cmd_run(rest),
+        "exp" => cmd_exp(rest),
+        "live" => cmd_live(rest),
+        "info" => cmd_info(rest),
+        "--help" | "-h" | "help" => Err(usage()),
+        other => Err(format!("unknown subcommand '{other}'\n\n{}", usage())),
+    }
+}
+
+fn artifacts_dir(m: &hermes_dml::cli::Matches) -> PathBuf {
+    PathBuf::from(m.get("artifacts"))
+}
+
+fn cmd_run(args: &[String]) -> Result<(), String> {
+    let cmd = Command::new("hermes run", "run one framework in the simulator")
+        .pos("framework", "bsp | asp | ssp | ebsp | selsync | hermes")
+        .opt("model", "mock", "mock | cnn | alexnet")
+        .opt("seed", "42", "rng seed")
+        .opt("alpha", "", "GUP α (default: per-model Table I)")
+        .opt("beta", "", "GUP β decay")
+        .opt("lambda", "", "GUP λ (iterations before decay)")
+        .opt("max-iters", "", "total local-iteration cap")
+        .opt("target-acc", "", "convergence accuracy target")
+        .opt("dss0", "", "initial per-worker dataset size")
+        .opt("mbs0", "", "initial mini-batch size (power of two)")
+        .opt("staleness", "", "SSP staleness bound s")
+        .opt("artifacts", "artifacts", "artifacts directory")
+        .opt("out", "results", "output directory")
+        .flag("no-dynamic-alloc", "disable dual-binary-search sizing")
+        .flag("no-prefetch", "disable prefetching")
+        .flag("no-fp16", "disable fp16 wire compression")
+        .flag("timeline", "record Fig.1-style timeline segments");
+    let m = cmd.parse(args)?;
+
+    let model = m.get("model").to_string();
+    let fw = m.get("framework").to_string();
+    let mut cfg = exp::scaled_cfg(&model, &fw);
+    cfg.seed = m.get_u64("seed")?;
+    let setf = |v: Option<&str>, dst: &mut f64| -> Result<(), String> {
+        if let Some(v) = v.filter(|s| !s.is_empty()) {
+            *dst = v.parse().map_err(|_| format!("bad number '{v}'"))?;
+        }
+        Ok(())
+    };
+    setf(m.get_opt("alpha"), &mut cfg.hp.alpha)?;
+    setf(m.get_opt("beta"), &mut cfg.hp.beta)?;
+    setf(m.get_opt("target-acc"), &mut cfg.target_acc)?;
+    let setu = |v: Option<&str>, dst: &mut usize| -> Result<(), String> {
+        if let Some(v) = v.filter(|s| !s.is_empty()) {
+            *dst = v.parse().map_err(|_| format!("bad integer '{v}'"))?;
+        }
+        Ok(())
+    };
+    setu(m.get_opt("lambda"), &mut cfg.hp.lambda)?;
+    setu(m.get_opt("max-iters"), &mut cfg.max_iters)?;
+    setu(m.get_opt("dss0"), &mut cfg.dss0)?;
+    setu(m.get_opt("mbs0"), &mut cfg.mbs0)?;
+    setu(m.get_opt("staleness"), &mut cfg.hp.ssp_staleness)?;
+    cfg.dynamic_alloc = !m.has("no-dynamic-alloc");
+    cfg.prefetch = !m.has("no-prefetch");
+    cfg.net.fp16_wire = !m.has("no-fp16");
+
+    let rt = exp::make_runtime(&model, &artifacts_dir(&m)).map_err(|e| e.to_string())?;
+    let run = hermes_dml::frameworks::run_framework_opts(cfg, rt, m.has("timeline"))
+        .map_err(|e| e.to_string())?;
+
+    println!("{}", run.summary_json());
+    println!(
+        "\n{fw}/{model}: {} local iterations in {} virtual ({:.1}s wall), \
+         acc {:.2}%, WI {:.2}, {} API calls, {} pushes{}",
+        run.iterations,
+        fmt_duration(run.virtual_time),
+        run.sim_wall_time,
+        run.final_accuracy * 100.0,
+        run.wi_avg(),
+        run.api_calls,
+        run.total_pushes(),
+        if run.converged { " — CONVERGED" } else { "" },
+    );
+    let out = PathBuf::from(m.get("out"));
+    write_file(&out, &format!("run_{fw}_{model}_curve.csv"), &run.curve_csv())
+        .map_err(|e| e.to_string())?;
+    if m.has("timeline") {
+        write_file(&out, &format!("run_{fw}_{model}_timeline.csv"), &run.segments_csv())
+            .map_err(|e| e.to_string())?;
+    }
+    Ok(())
+}
+
+fn cmd_exp(args: &[String]) -> Result<(), String> {
+    let cmd = Command::new("hermes exp", "regenerate a paper table/figure")
+        .pos("which", "fig1 fig2 fig3 fig4 fig11 fig12 fig13 fig14 table3 all")
+        .opt("model", "mock", "mock | cnn | alexnet (compute backend)")
+        .opt("artifacts", "artifacts", "artifacts directory")
+        .opt("out", "results", "output directory");
+    let m = cmd.parse(args)?;
+    let out = PathBuf::from(m.get("out"));
+    let model = m.get("model");
+    let arts = artifacts_dir(&m);
+    let r = match m.get("which") {
+        "fig1" | "fig10" => exp::fig1_timelines(&out, model, &arts),
+        "fig2" => exp::fig2_breakdown(&out, model, &arts),
+        "fig3" => exp::fig3_asp_oscillation(&out, model, &arts),
+        "fig4" | "fig5" => exp::fig4_fig5_bsp(&out, model, &arts),
+        "fig11" => exp::fig11_hermes(&out, model, &arts),
+        "fig12" => exp::fig12_dynamic_sizing(&out, model, &arts),
+        "fig13" => exp::fig13_major_updates(&out, model, &arts),
+        "fig14" => exp::fig14_alpha_beta(&out, model, &arts),
+        "table3" => exp::table3(&out, model, &arts).map(|_| ()),
+        "all" => exp::run_all(&out, model, &arts),
+        other => return Err(format!("unknown experiment '{other}'")),
+    };
+    r.map_err(|e| e.to_string())
+}
+
+fn cmd_live(args: &[String]) -> Result<(), String> {
+    let cmd = Command::new("hermes live", "run the threaded live TCP cluster")
+        .opt("workers", "4", "number of worker threads")
+        .opt("seconds", "5", "wall-clock run duration")
+        .opt("alpha", "-0.9", "GUP α")
+        .opt("seed", "42", "rng seed");
+    let m = cmd.parse(args)?;
+    let mut cfg = RunConfig::new("mock", "hermes");
+    cfg.hp.lr = 0.5;
+    cfg.hp.alpha = m.get_f64("alpha")?;
+    cfg.hp.window = 8;
+    cfg.seed = m.get_u64("seed")?;
+    let n = m.get_usize("workers")?;
+    let secs = m.get_f64("seconds")?;
+    println!("starting live PS + {n} workers for {secs}s …");
+    let report = run_live(&cfg, n, Duration::from_secs_f64(secs))
+        .map_err(|e| e.to_string())?;
+    println!(
+        "live: {} iterations, {} pushes, {} aggregations, loss {:.4}, \
+         acc {:.2}%, {} bytes received, {:.2}s wall",
+        report.iterations,
+        report.pushes,
+        report.global_updates,
+        report.final_loss,
+        report.final_accuracy * 100.0,
+        report.bytes_received,
+        report.wall_time_s,
+    );
+    Ok(())
+}
+
+fn cmd_info(args: &[String]) -> Result<(), String> {
+    let cmd = Command::new("hermes info", "artifact and config information")
+        .opt("artifacts", "artifacts", "artifacts directory");
+    let m = cmd.parse(args)?;
+    let cluster = ClusterConfig::paper_testbed();
+    println!("Cluster (Table II): {} workers", cluster.num_workers());
+    for f in &cluster.families {
+        println!(
+            "  {:<8} ×{}  {} vCPU, {:>4} GB, K={:.3}",
+            f.name, f.count, f.vcpu, f.ram_gb, f.k_coeff
+        );
+    }
+    for model in ["cnn", "alexnet"] {
+        let hp = HyperParams::for_model(model);
+        println!(
+            "HP {model}: lr={} mu={} w={} α={} β={} λ={} patience={}",
+            hp.lr, hp.momentum, hp.window, hp.alpha, hp.beta, hp.lambda, hp.patience
+        );
+    }
+    let dir = Path::new(m.get("artifacts"));
+    match Manifest::load(dir) {
+        Ok(man) => {
+            println!("Artifacts in {}:", dir.display());
+            for (name, arts) in &man.models {
+                println!(
+                    "  {name}: {} params, train batches {:?}, eval batch {}",
+                    arts.meta.param_count,
+                    arts.meta.train_batches,
+                    arts.meta.eval_batch
+                );
+            }
+        }
+        Err(e) => println!("Artifacts: not available ({e})"),
+    }
+    Ok(())
+}

@@ -1,0 +1,316 @@
+//! Run metrics: everything the paper's tables and figures report —
+//! loss/accuracy curves over virtual time, per-worker training-time and
+//! wait-time series, update gaps, timeline segments (Fig. 1/10), API
+//! calls, the WI metric (Eq. 7) — plus CSV/JSON writers.
+
+use std::io::Write;
+use std::path::Path;
+
+use crate::util::json::Json;
+
+/// One segment of a worker's timeline (Fig. 1/10 rendering data).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Segment {
+    pub worker: usize,
+    pub start: f64,
+    pub end: f64,
+    pub kind: SegmentKind,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SegmentKind {
+    Train,
+    Comm,
+    Wait,
+}
+
+impl SegmentKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            SegmentKind::Train => "train",
+            SegmentKind::Comm => "comm",
+            SegmentKind::Wait => "wait",
+        }
+    }
+}
+
+/// Per-worker accumulators.
+#[derive(Debug, Clone, Default)]
+pub struct WorkerMetrics {
+    pub family: String,
+    pub iterations: u64,
+    pub model_requests: u64,
+    pub pushes: u64,
+    pub train_time: f64,
+    pub wait_time: f64,
+    pub comm_time: f64,
+    /// (virtual time, train time) per iteration — Fig. 11b / 12.
+    pub train_times: Vec<(f64, f64)>,
+    /// (virtual time, dss, mbs) on every (re)assignment — Fig. 12.
+    pub allocations: Vec<(f64, usize, usize)>,
+    /// Virtual times of gradient pushes — Fig. 4b (update gaps).
+    pub push_times: Vec<f64>,
+}
+
+impl WorkerMetrics {
+    /// Worker independence (Eq. 7).
+    pub fn wi(&self) -> f64 {
+        self.iterations as f64 / self.model_requests.max(1) as f64
+    }
+
+    /// Gaps between consecutive pushes (Fig. 4b's series).
+    pub fn update_gaps(&self) -> Vec<f64> {
+        self.push_times.windows(2).map(|w| w[1] - w[0]).collect()
+    }
+}
+
+/// Everything one framework run produces.
+#[derive(Debug, Clone, Default)]
+pub struct RunMetrics {
+    pub framework: String,
+    pub model: String,
+    pub seed: u64,
+    /// Total local iterations across all workers (Table III col 1).
+    pub iterations: u64,
+    /// Virtual wall time of the run (Table III "Time taken").
+    pub virtual_time: f64,
+    /// Real wall time of the simulation itself.
+    pub sim_wall_time: f64,
+    /// Converged (hit target accuracy) vs stopped at cap/patience.
+    pub converged: bool,
+    /// Final global test accuracy ("Conv. Acc.").
+    pub final_accuracy: f64,
+    pub final_loss: f64,
+    /// Total API calls (Table III).
+    pub api_calls: u64,
+    pub bytes: u64,
+    /// PS aggregations performed.
+    pub global_updates: u64,
+    /// (virtual time, loss, accuracy) curve of the global model.
+    pub curve: Vec<(f64, f64, f64)>,
+    pub workers: Vec<WorkerMetrics>,
+    /// Timeline segments (only recorded when `record_timeline` is on).
+    pub segments: Vec<Segment>,
+    /// Workers that crashed during the run (EBSP reproduction).
+    pub crashed_workers: Vec<usize>,
+}
+
+impl RunMetrics {
+    /// Mean WI across workers (Table III "WI_avg").
+    pub fn wi_avg(&self) -> f64 {
+        if self.workers.is_empty() {
+            return 0.0;
+        }
+        self.workers.iter().map(|w| w.wi()).sum::<f64>() / self.workers.len() as f64
+    }
+
+    pub fn total_pushes(&self) -> u64 {
+        self.workers.iter().map(|w| w.pushes).sum()
+    }
+
+    /// Speedup vs a baseline's virtual time (Table III last column).
+    pub fn speedup_vs(&self, baseline: &RunMetrics) -> f64 {
+        baseline.virtual_time / self.virtual_time.max(1e-9)
+    }
+
+    // ------------------------------------------------------- writers
+
+    pub fn curve_csv(&self) -> String {
+        let mut s = String::from("virtual_time,loss,accuracy\n");
+        for (t, l, a) in &self.curve {
+            s += &format!("{t:.4},{l:.6},{a:.6}\n");
+        }
+        s
+    }
+
+    pub fn segments_csv(&self) -> String {
+        let mut s = String::from("worker,start,end,kind\n");
+        for seg in &self.segments {
+            s += &format!(
+                "{},{:.4},{:.4},{}\n",
+                seg.worker,
+                seg.start,
+                seg.end,
+                seg.kind.as_str()
+            );
+        }
+        s
+    }
+
+    pub fn summary_json(&self) -> Json {
+        Json::obj(vec![
+            ("framework", Json::Str(self.framework.clone())),
+            ("model", Json::Str(self.model.clone())),
+            ("seed", Json::Num(self.seed as f64)),
+            ("iterations", Json::Num(self.iterations as f64)),
+            ("virtual_time_s", Json::Num(self.virtual_time)),
+            ("sim_wall_time_s", Json::Num(self.sim_wall_time)),
+            ("converged", Json::Bool(self.converged)),
+            ("final_accuracy", Json::Num(self.final_accuracy)),
+            ("final_loss", Json::Num(self.final_loss)),
+            ("api_calls", Json::Num(self.api_calls as f64)),
+            ("bytes", Json::Num(self.bytes as f64)),
+            ("global_updates", Json::Num(self.global_updates as f64)),
+            ("wi_avg", Json::Num(self.wi_avg())),
+            ("pushes", Json::Num(self.total_pushes() as f64)),
+            (
+                "crashed_workers",
+                Json::Arr(
+                    self.crashed_workers
+                        .iter()
+                        .map(|&w| Json::Num(w as f64))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// Write a string to `dir/name`, creating `dir` as needed.
+pub fn write_file(dir: &Path, name: &str, contents: &str) -> std::io::Result<()> {
+    std::fs::create_dir_all(dir)?;
+    let mut f = std::fs::File::create(dir.join(name))?;
+    f.write_all(contents.as_bytes())
+}
+
+/// Fixed-width table rendering for terminal output (Table III style).
+pub struct TableFmt {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl TableFmt {
+    pub fn new(headers: &[&str]) -> Self {
+        TableFmt {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> =
+            self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| -> String {
+            let mut s = String::from("|");
+            for (c, w) in cells.iter().zip(&widths) {
+                s += &format!(" {c:<w$} |");
+            }
+            s + "\n"
+        };
+        let mut out = line(&self.headers);
+        out += &format!(
+            "|{}\n",
+            widths
+                .iter()
+                .map(|w| format!("{:-<1$}|", "", w + 2))
+                .collect::<String>()
+        );
+        for row in &self.rows {
+            out += &line(row);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_run() -> RunMetrics {
+        let mut run = RunMetrics {
+            framework: "hermes".into(),
+            model: "cnn".into(),
+            virtual_time: 100.0,
+            iterations: 240,
+            final_accuracy: 0.97,
+            api_calls: 1200,
+            ..Default::default()
+        };
+        for i in 0..3 {
+            run.workers.push(WorkerMetrics {
+                family: format!("F{i}"),
+                iterations: 80,
+                model_requests: 10,
+                pushes: 10,
+                push_times: vec![1.0, 3.0, 7.0],
+                ..Default::default()
+            });
+        }
+        run.curve = vec![(0.0, 2.3, 0.1), (50.0, 0.9, 0.7), (100.0, 0.3, 0.97)];
+        run
+    }
+
+    #[test]
+    fn wi_matches_eq7() {
+        let run = sample_run();
+        assert!((run.wi_avg() - 8.0).abs() < 1e-12); // 80/10 per worker
+        assert_eq!(run.total_pushes(), 30);
+    }
+
+    #[test]
+    fn update_gaps_from_push_times() {
+        let run = sample_run();
+        assert_eq!(run.workers[0].update_gaps(), vec![2.0, 4.0]);
+    }
+
+    #[test]
+    fn speedup_is_relative_virtual_time() {
+        let fast = sample_run();
+        let mut slow = sample_run();
+        slow.virtual_time = 1000.0;
+        assert!((fast.speedup_vs(&slow) - 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn csv_and_json_render() {
+        let run = sample_run();
+        let csv = run.curve_csv();
+        assert!(csv.starts_with("virtual_time,loss,accuracy\n"));
+        assert_eq!(csv.lines().count(), 4);
+        let j = run.summary_json().to_string();
+        let parsed = crate::util::json::Json::parse(&j).unwrap();
+        assert_eq!(parsed.at("iterations").unwrap().as_u64(), Some(240));
+        assert_eq!(parsed.at("wi_avg").unwrap().as_f64(), Some(8.0));
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = TableFmt::new(&["Framework", "Time", "Acc"]);
+        t.row(vec!["BSP".into(), "105.38m".into(), "98.07%".into()]);
+        t.row(vec!["Hermes".into(), "7.97m".into(), "97.82%".into()]);
+        let s = t.render();
+        assert!(s.contains("| Framework |"));
+        assert!(s.contains("| Hermes"));
+        assert_eq!(s.lines().count(), 4);
+    }
+
+    #[test]
+    fn segments_csv_roundtrip_shape() {
+        let mut run = sample_run();
+        run.segments.push(Segment {
+            worker: 1,
+            start: 0.0,
+            end: 2.5,
+            kind: SegmentKind::Train,
+        });
+        run.segments.push(Segment {
+            worker: 1,
+            start: 2.5,
+            end: 3.0,
+            kind: SegmentKind::Comm,
+        });
+        let csv = run.segments_csv();
+        assert!(csv.contains("1,0.0000,2.5000,train"));
+        assert!(csv.contains("1,2.5000,3.0000,comm"));
+    }
+}

@@ -1,0 +1,107 @@
+//! Host-side model state: the (params, momentum, version) bundle that
+//! travels between the PS and workers, with the cumulative-gradient
+//! algebra of Alg. 2 (`G`, `ς`) implemented over [`ParamVec`].
+
+use crate::runtime::ModelMeta;
+use crate::tensor::ParamVec;
+
+/// A model replica (global on the PS, local on a worker).
+#[derive(Debug, Clone)]
+pub struct ModelState {
+    pub params: ParamVec,
+    pub momentum: ParamVec,
+    /// Global-model version (bumps on every PS aggregation) — workers
+    /// record which version they trained against, which is what makes
+    /// staleness measurable.
+    pub version: u64,
+}
+
+impl ModelState {
+    pub fn new(params: ParamVec) -> Self {
+        let momentum = ParamVec::zeros_like(&params);
+        ModelState { params, momentum, version: 0 }
+    }
+
+    /// Cumulative gradient from the shared baseline w₀ (Alg. 2
+    /// Worker-SGD): G = (w₀ − w)/η.  Momentum effects are folded in —
+    /// exactly the sum of applied update directions.
+    pub fn cumulative_g(&self, w0: &ParamVec, eta: f32) -> ParamVec {
+        w0.delta_over_eta(&self.params, eta)
+    }
+
+    /// Rebuild parameters from a cumulative gradient: w = w₀ − η·ς
+    /// (Alg. 2 PS-SGD).
+    pub fn from_cumulative(w0: &ParamVec, sigma: &ParamVec, eta: f32) -> ParamVec {
+        let mut w = w0.clone();
+        w.axpy(-eta, sigma);
+        w
+    }
+
+    /// Adopt the global model (c² in Fig. 6: refresh after a push).
+    /// Momentum is reset — the worker restarts its local trajectory
+    /// from the new global point.
+    pub fn refresh(&mut self, global: &ParamVec, version: u64) {
+        self.params = global.clone();
+        self.momentum = ParamVec::zeros_like(global);
+        self.version = version;
+    }
+
+    /// Approximate RAM footprint of holding this model on a node
+    /// (params + momentum + transient gradients).
+    pub fn memory_bytes(meta: &ModelMeta) -> usize {
+        meta.param_count * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+
+    fn pv(vals: &[f32]) -> ParamVec {
+        ParamVec { tensors: vec![Tensor::new(vec![vals.len()], vals.to_vec())] }
+    }
+
+    #[test]
+    fn cumulative_g_roundtrips_with_from_cumulative() {
+        let w0 = pv(&[1.0, -2.0, 0.5]);
+        let eta = 0.1f32;
+        // Apply three SGD steps by hand.
+        let mut m = ModelState::new(w0.clone());
+        for g in [
+            pv(&[0.2, 0.0, -0.1]),
+            pv(&[-0.05, 0.3, 0.0]),
+            pv(&[0.1, 0.1, 0.1]),
+        ] {
+            m.params.axpy(-eta, &g);
+        }
+        let gsum = m.cumulative_g(&w0, eta);
+        // G must equal the sum of the step directions.
+        let want = [0.25f32, 0.4, 0.0];
+        for (a, b) in gsum.tensors[0].data().iter().zip(&want) {
+            assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+        }
+        // And w₀ − η·G reconstructs the final params.
+        let rebuilt = ModelState::from_cumulative(&w0, &gsum, eta);
+        for (a, b) in rebuilt.tensors_flat().zip(m.params.tensors[0].data()) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    impl ParamVec {
+        fn tensors_flat(&self) -> impl Iterator<Item = &f32> {
+            self.tensors.iter().flat_map(|t| t.data().iter())
+        }
+    }
+
+    #[test]
+    fn refresh_adopts_global_and_resets_momentum() {
+        let mut m = ModelState::new(pv(&[1.0, 1.0]));
+        m.momentum = pv(&[9.0, 9.0]);
+        let global = pv(&[3.0, 4.0]);
+        m.refresh(&global, 17);
+        assert_eq!(m.params, global);
+        assert_eq!(m.version, 17);
+        assert!(m.momentum.tensors[0].data().iter().all(|&x| x == 0.0));
+    }
+}

@@ -1,0 +1,189 @@
+//! Simulated network: message-level latency/bandwidth cost model plus
+//! the API-call and byte accounting the paper's evaluation reports
+//! ("Avg. API Calls" in Table III; "62.1% lesser communication
+//! activity", §V-B).  The live TCP transport shares the same
+//! [`crate::wire::Message`] sizes, so simulated and real byte counts
+//! agree by construction.
+
+use crate::config::NetConfig;
+use crate::runtime::ModelMeta;
+use crate::tensor::ParamVec;
+use crate::wire::{Message, TensorPayload};
+
+/// Per-worker and aggregate traffic counters.
+#[derive(Debug, Clone, Default)]
+pub struct TrafficStats {
+    pub api_calls: u64,
+    pub bytes: u64,
+    pub comm_time: f64,
+}
+
+/// The simulated network fabric between the PS and all workers.
+#[derive(Debug, Clone)]
+pub struct SimNet {
+    pub cfg: NetConfig,
+    total: TrafficStats,
+    per_worker: Vec<TrafficStats>,
+}
+
+impl SimNet {
+    pub fn new(cfg: NetConfig, n_workers: usize) -> SimNet {
+        SimNet {
+            cfg,
+            total: TrafficStats::default(),
+            per_worker: vec![TrafficStats::default(); n_workers],
+        }
+    }
+
+    /// Account one message to/from `worker`; returns the transfer time
+    /// (latency + serialization over the link) to advance virtual time.
+    pub fn transfer(&mut self, worker: usize, msg: &Message) -> f64 {
+        self.transfer_bytes(worker, msg.wire_size())
+    }
+
+    /// Size-only variant for the hot path (avoids building a Message
+    /// just to measure it — sizes come from [`Message::wire_size`]-
+    /// equivalent helpers below).
+    pub fn transfer_bytes(&mut self, worker: usize, bytes: usize) -> f64 {
+        let t = self.cfg.latency_s + bytes as f64 / self.cfg.bandwidth_bps;
+        self.total.api_calls += 1;
+        self.total.bytes += bytes as u64;
+        self.total.comm_time += t;
+        let w = &mut self.per_worker[worker];
+        w.api_calls += 1;
+        w.bytes += bytes as u64;
+        w.comm_time += t;
+        t
+    }
+
+    pub fn total(&self) -> &TrafficStats {
+        &self.total
+    }
+
+    pub fn worker(&self, id: usize) -> &TrafficStats {
+        &self.per_worker[id]
+    }
+
+    // ------------------------------------------------ size helpers
+    // Exact wire sizes for the recurring message shapes, computed once
+    // per model instead of per message (perf: no tensor cloning on the
+    // accounting path).
+
+    /// Bytes of a `GlobalModel` carrying `meta`'s parameters.
+    pub fn model_msg_bytes(&self, meta: &ModelMeta) -> usize {
+        payload_bytes(meta, self.cfg.fp16_wire) + 1 + 8
+    }
+
+    /// Bytes of a `PushUpdate` carrying gradients of `meta`'s shape.
+    pub fn push_msg_bytes(&self, meta: &ModelMeta) -> usize {
+        payload_bytes(meta, self.cfg.fp16_wire) + 1 + 4 + 8 + 4 + 8
+    }
+
+    /// Bytes of a dataset shipment of `dss` samples (the PS → worker
+    /// data plane; Kafka in the paper).  Data is shipped fp32 — only
+    /// model/gradient tensors are fp16-compressed (§IV-D).
+    pub fn dataset_bytes(&self, sample_bytes: usize, dss: usize) -> usize {
+        18 + sample_bytes * dss
+    }
+}
+
+/// Exact `TensorPayload` wire size for a model's parameter list.
+fn payload_bytes(meta: &ModelMeta, fp16: bool) -> usize {
+    let header: usize = meta.param_shapes.iter().map(|s| 1 + 4 * s.len()).sum();
+    let elem = if fp16 { 2 } else { 4 };
+    1 + 4 + header + elem * meta.param_count
+}
+
+/// Build a real `GlobalModel` message (live mode / tests).
+pub fn model_message(version: u64, params: &ParamVec, fp16: bool) -> Message {
+    Message::GlobalModel {
+        version,
+        params: TensorPayload::new(params.clone(), fp16),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::NetConfig;
+    use crate::runtime::MockRuntime;
+    use crate::runtime::ModelRuntime;
+    use crate::tensor::{ParamVec, Tensor};
+
+    fn mock_meta() -> ModelMeta {
+        MockRuntime::new().meta().clone()
+    }
+
+    fn mock_params() -> ParamVec {
+        ParamVec {
+            tensors: vec![
+                Tensor::zeros(vec![32, 10]),
+                Tensor::zeros(vec![10]),
+            ],
+        }
+    }
+
+    #[test]
+    fn transfer_accounts_latency_and_bandwidth() {
+        let cfg = NetConfig { latency_s: 0.01, bandwidth_bps: 1000.0, fp16_wire: false };
+        let mut net = SimNet::new(cfg, 2);
+        let t = net.transfer_bytes(1, 500);
+        assert!((t - (0.01 + 0.5)).abs() < 1e-12);
+        assert_eq!(net.total().api_calls, 1);
+        assert_eq!(net.total().bytes, 500);
+        assert_eq!(net.worker(1).api_calls, 1);
+        assert_eq!(net.worker(0).api_calls, 0);
+    }
+
+    #[test]
+    fn size_helpers_match_real_wire_encoding() {
+        for fp16 in [false, true] {
+            let cfg = NetConfig { fp16_wire: fp16, ..NetConfig::default() };
+            let net = SimNet::new(cfg, 1);
+            let meta = mock_meta();
+            let params = mock_params();
+
+            let model_msg = model_message(3, &params, fp16);
+            assert_eq!(
+                net.model_msg_bytes(&meta),
+                model_msg.encode().len(),
+                "fp16={fp16}"
+            );
+
+            let push = Message::PushUpdate {
+                worker: 0,
+                iter: 1,
+                test_loss: 0.5,
+                train_time: 1.0,
+                grads: TensorPayload::new(params, fp16),
+            };
+            assert_eq!(net.push_msg_bytes(&meta), push.encode().len());
+
+            let ds = Message::DatasetAssign {
+                dss: 100,
+                mbs: 16,
+                shard_seed: 1,
+                prefetch: true,
+            };
+            // DatasetAssign itself is the control message; the bulk
+            // data-plane cost is modeled separately.
+            assert_eq!(ds.encode().len(), 18);
+            assert_eq!(net.dataset_bytes(10, 100), 18 + 1000);
+        }
+    }
+
+    #[test]
+    fn fp16_wire_halves_tensor_traffic() {
+        let meta = mock_meta();
+        let f32_net = SimNet::new(
+            NetConfig { fp16_wire: false, ..NetConfig::default() },
+            1,
+        );
+        let f16_net = SimNet::new(
+            NetConfig { fp16_wire: true, ..NetConfig::default() },
+            1,
+        );
+        let diff = f32_net.model_msg_bytes(&meta) - f16_net.model_msg_bytes(&meta);
+        assert_eq!(diff, 2 * meta.param_count);
+    }
+}

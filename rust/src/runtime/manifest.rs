@@ -1,0 +1,269 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and
+//! the Rust runtime.  Parses `artifacts/manifest.json` into typed
+//! metadata (model shapes, compiled batch sizes, artifact paths).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Static description of one compiled model.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelMeta {
+    pub name: String,
+    /// (H, W, C) of one input sample.
+    pub input_shape: (usize, usize, usize),
+    pub num_classes: usize,
+    /// Interleaved [w0, b0, w1, b1, …] shapes in artifact order.
+    pub param_shapes: Vec<Vec<usize>>,
+    pub param_count: usize,
+    /// Mini-batch sizes with a compiled train-step executable.
+    pub train_batches: Vec<usize>,
+    /// Batch size of the compiled eval executable.
+    pub eval_batch: usize,
+}
+
+impl ModelMeta {
+    pub fn input_elems(&self) -> usize {
+        self.input_shape.0 * self.input_shape.1 * self.input_shape.2
+    }
+
+    /// Closest compiled train batch ≤ requested (or the smallest one) —
+    /// how the dual binary search's MBS domain maps onto the finite
+    /// artifact set (DESIGN.md §3).
+    pub fn clamp_train_batch(&self, mbs: usize) -> usize {
+        let mut best = self.train_batches[0];
+        for &b in &self.train_batches {
+            if b <= mbs && b > best {
+                best = b;
+            }
+        }
+        best
+    }
+}
+
+/// Paths of every artifact for one model.
+#[derive(Debug, Clone)]
+pub struct ModelArtifacts {
+    pub meta: ModelMeta,
+    pub train_paths: BTreeMap<usize, PathBuf>,
+    pub eval_path: PathBuf,
+    pub golden: Option<GoldenPaths>,
+}
+
+#[derive(Debug, Clone)]
+pub struct GoldenPaths {
+    pub index: PathBuf,
+    pub blob: PathBuf,
+}
+
+/// The whole artifacts directory.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub models: BTreeMap<String, ModelArtifacts>,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&dir, &text)
+    }
+
+    pub fn parse(dir: &Path, text: &str) -> Result<Manifest> {
+        let j = Json::parse(text).map_err(|e| anyhow!("manifest: {e}"))?;
+        if j.at("format").and_then(Json::as_u64) != Some(1) {
+            bail!("unsupported manifest format");
+        }
+        let mut models = BTreeMap::new();
+        let model_obj = j
+            .at("models")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("manifest missing 'models'"))?;
+        for (name, m) in model_obj {
+            let shape_arr = m
+                .get("input_shape")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("{name}: input_shape"))?;
+            if shape_arr.len() != 3 {
+                bail!("{name}: input_shape must be rank 3");
+            }
+            let dim = |i: usize| -> Result<usize> {
+                shape_arr[i]
+                    .as_usize()
+                    .ok_or_else(|| anyhow!("{name}: bad input dim"))
+            };
+            let param_shapes: Vec<Vec<usize>> = m
+                .get("param_shapes")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("{name}: param_shapes"))?
+                .iter()
+                .map(|s| {
+                    s.as_arr()
+                        .ok_or_else(|| anyhow!("{name}: bad shape"))?
+                        .iter()
+                        .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+                        .collect::<Result<Vec<usize>>>()
+                })
+                .collect::<Result<Vec<_>>>()?;
+
+            let mut train_paths = BTreeMap::new();
+            for (batch, info) in m
+                .get("train")
+                .and_then(Json::as_obj)
+                .ok_or_else(|| anyhow!("{name}: train"))?
+            {
+                let b: usize = batch.parse().context("train batch key")?;
+                let p = info
+                    .get("path")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("{name}: train path"))?;
+                train_paths.insert(b, dir.join(p));
+            }
+            if train_paths.is_empty() {
+                bail!("{name}: no train artifacts");
+            }
+
+            let evals = m
+                .get("eval")
+                .and_then(Json::as_obj)
+                .ok_or_else(|| anyhow!("{name}: eval"))?;
+            let (eval_batch, eval_info) = evals
+                .iter()
+                .next()
+                .ok_or_else(|| anyhow!("{name}: no eval artifact"))?;
+            let eval_path = dir.join(
+                eval_info
+                    .get("path")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("{name}: eval path"))?,
+            );
+
+            let golden = m.get("golden").and_then(Json::as_obj).map(|g| GoldenPaths {
+                index: dir.join(g.get("index").and_then(Json::as_str).unwrap_or_default()),
+                blob: dir.join(g.get("blob").and_then(Json::as_str).unwrap_or_default()),
+            });
+
+            let meta = ModelMeta {
+                name: name.clone(),
+                input_shape: (dim(0)?, dim(1)?, dim(2)?),
+                num_classes: m
+                    .get("num_classes")
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| anyhow!("{name}: num_classes"))?,
+                param_count: m
+                    .get("param_count")
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| anyhow!("{name}: param_count"))?,
+                param_shapes,
+                train_batches: train_paths.keys().copied().collect(),
+                eval_batch: eval_batch.parse().context("eval batch key")?,
+            };
+            // Cross-check: declared count must equal the shape product sum.
+            let computed: usize = meta
+                .param_shapes
+                .iter()
+                .map(|s| s.iter().product::<usize>())
+                .sum();
+            if computed != meta.param_count {
+                bail!(
+                    "{name}: param_count {} != computed {computed}",
+                    meta.param_count
+                );
+            }
+            models.insert(
+                name.clone(),
+                ModelArtifacts { meta, train_paths, eval_path, golden },
+            );
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), models })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelArtifacts> {
+        self.models
+            .get(name)
+            .ok_or_else(|| anyhow!("model '{name}' not in manifest"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "format": 1,
+      "eval_batch": 128,
+      "models": {
+        "cnn": {
+          "input_shape": [28, 28, 1],
+          "num_classes": 10,
+          "param_count": 26,
+          "param_shapes": [[2, 3], [3], [3, 5], [2]],
+          "train": {"16": {"path": "cnn_train_b16.hlo.txt", "bytes": 1, "sha256_16": "x"},
+                     "8": {"path": "cnn_train_b8.hlo.txt", "bytes": 1, "sha256_16": "x"}},
+          "eval": {"128": {"path": "cnn_eval_b128.hlo.txt", "bytes": 1, "sha256_16": "x"}}
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample_manifest() {
+        let m = Manifest::parse(Path::new("/tmp/a"), SAMPLE).unwrap();
+        let cnn = m.model("cnn").unwrap();
+        assert_eq!(cnn.meta.input_shape, (28, 28, 1));
+        assert_eq!(cnn.meta.train_batches, vec![8, 16]);
+        assert_eq!(cnn.meta.eval_batch, 128);
+        assert_eq!(
+            cnn.train_paths[&16],
+            PathBuf::from("/tmp/a/cnn_train_b16.hlo.txt")
+        );
+        assert!(m.model("nope").is_err());
+    }
+
+    #[test]
+    fn rejects_param_count_mismatch() {
+        let bad = SAMPLE.replace("\"param_count\": 26", "\"param_count\": 99");
+        assert!(Manifest::parse(Path::new("/tmp"), &bad).is_err());
+    }
+
+    #[test]
+    fn rejects_wrong_format_version() {
+        let bad = SAMPLE.replace("\"format\": 1", "\"format\": 2");
+        assert!(Manifest::parse(Path::new("/tmp"), &bad).is_err());
+    }
+
+    #[test]
+    fn clamp_train_batch_maps_search_domain_onto_artifacts() {
+        let m = Manifest::parse(Path::new("/tmp"), SAMPLE).unwrap();
+        let meta = &m.model("cnn").unwrap().meta;
+        assert_eq!(meta.clamp_train_batch(2), 8); // below smallest → smallest
+        assert_eq!(meta.clamp_train_batch(8), 8);
+        assert_eq!(meta.clamp_train_batch(12), 8);
+        assert_eq!(meta.clamp_train_batch(16), 16);
+        assert_eq!(meta.clamp_train_batch(256), 16); // above largest → largest
+    }
+
+    #[test]
+    fn loads_real_artifacts_dir_if_present() {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            return; // artifacts not built in this checkout
+        }
+        let m = Manifest::load(&dir).unwrap();
+        let cnn = &m.model("cnn").unwrap().meta;
+        assert_eq!(cnn.param_count, 109_378);
+        let alex = &m.model("alexnet").unwrap().meta;
+        assert_eq!(alex.param_count, 995_046);
+        for art in m.models.values() {
+            for p in art.train_paths.values() {
+                assert!(p.exists(), "{}", p.display());
+            }
+            assert!(art.eval_path.exists());
+        }
+    }
+}

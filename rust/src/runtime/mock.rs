@@ -1,0 +1,304 @@
+//! Artifact-free [`ModelRuntime`]: a softmax regression with real,
+//! host-computed gradients.
+//!
+//! The coordinator's behaviour (gating, aggregation, allocation,
+//! scheduling) is independent of *which* differentiable model produces
+//! the losses, so every coordinator test and micro-bench runs against
+//! this runtime: real learning dynamics, zero XLA dependency, ~µs per
+//! step.  The input is a flattened (4, 4, 2) "image" (32 features, 10
+//! classes ⇒ 330 parameters).
+
+use anyhow::{bail, Result};
+
+use super::manifest::ModelMeta;
+use super::{EvalOut, ModelRuntime, TrainOut};
+use crate::tensor::{ParamVec, Tensor};
+
+pub const MOCK_FEATURES: usize = 32;
+pub const MOCK_CLASSES: usize = 10;
+
+#[derive(Debug, Clone)]
+pub struct MockRuntime {
+    meta: ModelMeta,
+    execs: u64,
+}
+
+impl Default for MockRuntime {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl MockRuntime {
+    pub fn new() -> Self {
+        MockRuntime {
+            meta: ModelMeta {
+                name: "mock".into(),
+                input_shape: (4, 4, 2),
+                num_classes: MOCK_CLASSES,
+                param_shapes: vec![
+                    vec![MOCK_FEATURES, MOCK_CLASSES],
+                    vec![MOCK_CLASSES],
+                ],
+                param_count: MOCK_FEATURES * MOCK_CLASSES + MOCK_CLASSES,
+                train_batches: vec![2, 4, 8, 16, 32, 64, 128, 256],
+                eval_batch: 128,
+            },
+            execs: 0,
+        }
+    }
+
+    /// logits[b] = x[b]·W + bias; returns (mean xent loss, #correct,
+    /// per-class probabilities for the gradient).
+    fn forward(
+        params: &ParamVec,
+        x: &[f32],
+        y: &[i32],
+        batch: usize,
+    ) -> (f32, f32, Vec<f32>) {
+        let w = params.tensors[0].data();
+        let b = params.tensors[1].data();
+        let mut probs = vec![0f32; batch * MOCK_CLASSES];
+        let mut loss = 0f64;
+        let mut correct = 0f32;
+        for i in 0..batch {
+            let xi = &x[i * MOCK_FEATURES..(i + 1) * MOCK_FEATURES];
+            let row = &mut probs[i * MOCK_CLASSES..(i + 1) * MOCK_CLASSES];
+            for (c, r) in row.iter_mut().enumerate() {
+                let mut z = b[c];
+                for (f, &xv) in xi.iter().enumerate() {
+                    z += xv * w[f * MOCK_CLASSES + c];
+                }
+                *r = z;
+            }
+            // softmax + xent
+            let max = row.iter().cloned().fold(f32::MIN, f32::max);
+            let mut denom = 0f32;
+            for r in row.iter_mut() {
+                *r = (*r - max).exp();
+                denom += *r;
+            }
+            for r in row.iter_mut() {
+                *r /= denom;
+            }
+            let mut argmax = 0usize;
+            for c in 1..MOCK_CLASSES {
+                if row[c] > row[argmax] {
+                    argmax = c;
+                }
+            }
+            let label = y[i] as usize;
+            loss -= (row[label].max(1e-12) as f64).ln();
+            if argmax == label {
+                correct += 1.0;
+            }
+        }
+        ((loss / batch as f64) as f32, correct, probs)
+    }
+}
+
+impl ModelRuntime for MockRuntime {
+    fn meta(&self) -> &ModelMeta {
+        &self.meta
+    }
+
+    fn train_step(
+        &mut self,
+        params: &ParamVec,
+        momentum: &ParamVec,
+        x: &[f32],
+        y: &[i32],
+        mbs: usize,
+        lr: f32,
+        mu: f32,
+    ) -> Result<TrainOut> {
+        if x.len() != mbs * MOCK_FEATURES || y.len() != mbs {
+            bail!("mock: bad batch ({} x, {} y, mbs {mbs})", x.len(), y.len());
+        }
+        self.execs += 1;
+        let (loss, correct, probs) = Self::forward(params, x, y, mbs);
+
+        // grad_logits = probs − one_hot(y), averaged over the batch.
+        let w = params.tensors[0].data();
+        let b = params.tensors[1].data();
+        let mut gw = vec![0f32; w.len()];
+        let mut gb = vec![0f32; b.len()];
+        let inv = 1.0 / mbs as f32;
+        for i in 0..mbs {
+            let xi = &x[i * MOCK_FEATURES..(i + 1) * MOCK_FEATURES];
+            for c in 0..MOCK_CLASSES {
+                let mut g = probs[i * MOCK_CLASSES + c];
+                if y[i] as usize == c {
+                    g -= 1.0;
+                }
+                g *= inv;
+                gb[c] += g;
+                for (f, &xv) in xi.iter().enumerate() {
+                    gw[f * MOCK_CLASSES + c] += g * xv;
+                }
+            }
+        }
+
+        // SGD with momentum, matching the L2 train step semantics.
+        let mw = momentum.tensors[0].data();
+        let mb = momentum.tensors[1].data();
+        let new_mw: Vec<f32> =
+            mw.iter().zip(&gw).map(|(m, g)| mu * m + g).collect();
+        let new_mb: Vec<f32> =
+            mb.iter().zip(&gb).map(|(m, g)| mu * m + g).collect();
+        let new_w: Vec<f32> =
+            w.iter().zip(&new_mw).map(|(p, v)| p - lr * v).collect();
+        let new_b: Vec<f32> =
+            b.iter().zip(&new_mb).map(|(p, v)| p - lr * v).collect();
+
+        Ok(TrainOut {
+            params: ParamVec {
+                tensors: vec![
+                    Tensor::new(vec![MOCK_FEATURES, MOCK_CLASSES], new_w),
+                    Tensor::new(vec![MOCK_CLASSES], new_b),
+                ],
+            },
+            momentum: ParamVec {
+                tensors: vec![
+                    Tensor::new(vec![MOCK_FEATURES, MOCK_CLASSES], new_mw),
+                    Tensor::new(vec![MOCK_CLASSES], new_mb),
+                ],
+            },
+            loss,
+            correct,
+        })
+    }
+
+    fn eval_step(&mut self, params: &ParamVec, x: &[f32], y: &[i32]) -> Result<EvalOut> {
+        let b = self.meta.eval_batch;
+        if x.len() != b * MOCK_FEATURES || y.len() != b {
+            bail!("mock: bad eval batch");
+        }
+        self.execs += 1;
+        let (loss, correct, _) = Self::forward(params, x, y, b);
+        Ok(EvalOut { loss, correct })
+    }
+
+    fn exec_count(&self) -> u64 {
+        self.execs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::init_params;
+    use crate::util::rng::Xoshiro256pp;
+
+    /// Linearly separable toy data: class templates + noise.
+    fn toy_batch(
+        rng: &mut Xoshiro256pp,
+        n: usize,
+    ) -> (Vec<f32>, Vec<i32>, [[f32; MOCK_FEATURES]; MOCK_CLASSES]) {
+        let mut templates = [[0f32; MOCK_FEATURES]; MOCK_CLASSES];
+        let mut trng = Xoshiro256pp::seed_from_u64(99);
+        for t in templates.iter_mut() {
+            for v in t.iter_mut() {
+                *v = trng.normal() as f32;
+            }
+        }
+        let mut x = Vec::with_capacity(n * MOCK_FEATURES);
+        let mut y = Vec::with_capacity(n);
+        for _ in 0..n {
+            let c = rng.next_below(MOCK_CLASSES as u64) as usize;
+            y.push(c as i32);
+            for f in 0..MOCK_FEATURES {
+                x.push(templates[c][f] + 0.3 * rng.normal() as f32);
+            }
+        }
+        (x, y, templates)
+    }
+
+    #[test]
+    fn mock_learns_separable_data() {
+        let mut rt = MockRuntime::new();
+        let mut rng = Xoshiro256pp::seed_from_u64(5);
+        let mut params = init_params(rt.meta(), 1);
+        let mut mom = ParamVec::zeros_like(&params);
+        let mut first = 0f32;
+        let mut last = 0f32;
+        for step in 0..60 {
+            let (x, y, _) = toy_batch(&mut rng, 16);
+            let out = rt
+                .train_step(&params, &mom, &x, &y, 16, 0.5, 0.0)
+                .unwrap();
+            params = out.params;
+            mom = out.momentum;
+            if step == 0 {
+                first = out.loss;
+            }
+            last = out.loss;
+        }
+        assert!(last < first * 0.3, "no learning: {first} → {last}");
+        assert_eq!(rt.exec_count(), 60);
+    }
+
+    #[test]
+    fn zero_lr_is_identity() {
+        let mut rt = MockRuntime::new();
+        let mut rng = Xoshiro256pp::seed_from_u64(6);
+        let params = init_params(rt.meta(), 2);
+        let mom = ParamVec::zeros_like(&params);
+        let (x, y, _) = toy_batch(&mut rng, 8);
+        let out = rt.train_step(&params, &mom, &x, &y, 8, 0.0, 0.0).unwrap();
+        assert_eq!(out.params, params);
+    }
+
+    #[test]
+    fn momentum_zero_buffers_carry_raw_gradient() {
+        // Mirrors the L2 pytest: new_p = p − lr·g when mu = 0.
+        let mut rt = MockRuntime::new();
+        let mut rng = Xoshiro256pp::seed_from_u64(7);
+        let params = init_params(rt.meta(), 3);
+        let mom = ParamVec::zeros_like(&params);
+        let (x, y, _) = toy_batch(&mut rng, 4);
+        let lr = 0.1f32;
+        let out = rt.train_step(&params, &mom, &x, &y, 4, lr, 0.0).unwrap();
+        for ((p_new, p_old), g) in out
+            .params
+            .tensors
+            .iter()
+            .zip(&params.tensors)
+            .zip(&out.momentum.tensors)
+        {
+            for ((a, b), gv) in
+                p_new.data().iter().zip(b_iter(p_old)).zip(g.data())
+            {
+                assert!((a - (b - lr * gv)).abs() < 1e-6);
+            }
+        }
+        fn b_iter(t: &Tensor) -> std::slice::Iter<'_, f32> {
+            t.data().iter()
+        }
+    }
+
+    #[test]
+    fn eval_matches_train_loss_on_same_batch() {
+        let mut rt = MockRuntime::new();
+        let mut rng = Xoshiro256pp::seed_from_u64(8);
+        let params = init_params(rt.meta(), 4);
+        let (x, y, _) = toy_batch(&mut rng, 128);
+        let ev = rt.eval_step(&params, &x, &y).unwrap();
+        // Train step with lr=0 on the same 128 wouldn't be allowed
+        // (mbs 128 is compiled), so compare against forward directly.
+        let (loss, correct, _) = MockRuntime::forward(&params, &x, &y, 128);
+        assert_eq!(ev.loss, loss);
+        assert_eq!(ev.correct, correct);
+    }
+
+    #[test]
+    fn rejects_malformed_batches() {
+        let mut rt = MockRuntime::new();
+        let params = init_params(rt.meta(), 1);
+        let mom = ParamVec::zeros_like(&params);
+        assert!(rt
+            .train_step(&params, &mom, &[0.0; 10], &[0; 2], 2, 0.1, 0.0)
+            .is_err());
+        assert!(rt.eval_step(&params, &[0.0; 10], &[0; 2]).is_err());
+    }
+}

@@ -1,0 +1,146 @@
+//! Model execution runtime.
+//!
+//! [`ModelRuntime`] is the seam between the coordinator (L3) and the
+//! AOT-compiled compute (L2/L1): a train step is "params + batch in,
+//! params + loss out", nothing more.  Two implementations:
+//!
+//! * [`XlaRuntime`] — loads `artifacts/*.hlo.txt` through the `xla`
+//!   crate (PJRT CPU client), compiles once per (kind, batch size), and
+//!   executes on the hot path.  This is the production path; Python is
+//!   never involved.
+//! * [`MockRuntime`] — a host-computed softmax regression with real
+//!   gradients.  Same trait, no artifacts needed: coordinator tests,
+//!   property tests and micro-benches run against it.
+
+pub mod manifest;
+pub mod mock;
+pub mod xla_rt;
+
+pub use manifest::{Manifest, ModelArtifacts, ModelMeta};
+pub use mock::MockRuntime;
+pub use xla_rt::XlaRuntime;
+
+use anyhow::Result;
+
+use crate::tensor::ParamVec;
+
+/// Output of one fused fwd+bwd+update step.
+#[derive(Debug, Clone)]
+pub struct TrainOut {
+    pub params: ParamVec,
+    pub momentum: ParamVec,
+    pub loss: f32,
+    pub correct: f32,
+}
+
+/// Output of one eval pass over a probe batch.
+#[derive(Debug, Clone, Copy)]
+pub struct EvalOut {
+    pub loss: f32,
+    pub correct: f32,
+}
+
+/// The L3 ↔ L2 execution seam.
+///
+/// Not `Send`: the PJRT client wrapper is `Rc`-based, so each live-mode
+/// thread constructs its own runtime instead of sharing one.
+pub trait ModelRuntime {
+    fn meta(&self) -> &ModelMeta;
+
+    /// One mini-batch fwd+bwd+SGD(M) step.  `x` is `mbs·H·W·C` floats,
+    /// `y` is `mbs` labels; `mbs` must be a compiled batch size
+    /// (callers use [`ModelMeta::clamp_train_batch`]).
+    fn train_step(
+        &mut self,
+        params: &ParamVec,
+        momentum: &ParamVec,
+        x: &[f32],
+        y: &[i32],
+        mbs: usize,
+        lr: f32,
+        mu: f32,
+    ) -> Result<TrainOut>;
+
+    /// Evaluate on one probe batch of exactly `meta().eval_batch`
+    /// samples; returns mean loss and #correct.
+    fn eval_step(&mut self, params: &ParamVec, x: &[f32], y: &[i32]) -> Result<EvalOut>;
+
+    /// Number of executions performed (for perf accounting).
+    fn exec_count(&self) -> u64;
+}
+
+/// He-normal initialization on the host, mirroring
+/// `python/compile/model.py::init_params` in spirit (weights
+/// N(0, √(2/fan_in)), biases zero).  Exact bitwise agreement with the
+/// jax init is not required — the golden fixture carries its own
+/// parameters.
+pub fn init_params(meta: &ModelMeta, seed: u64) -> ParamVec {
+    use crate::tensor::Tensor;
+    use crate::util::rng::Xoshiro256pp;
+    let mut rng = Xoshiro256pp::stream(seed, 0x9e1f);
+    let mut tensors = Vec::with_capacity(meta.param_shapes.len());
+    for shape in &meta.param_shapes {
+        if shape.len() == 1 {
+            tensors.push(Tensor::zeros(shape.clone())); // bias
+        } else {
+            let fan_in: usize = shape[..shape.len() - 1].iter().product();
+            let std = (2.0 / fan_in as f64).sqrt();
+            let n: usize = shape.iter().product();
+            let data: Vec<f32> =
+                (0..n).map(|_| (rng.normal() * std) as f32).collect();
+            tensors.push(Tensor::new(shape.clone(), data));
+        }
+    }
+    ParamVec { tensors }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_meta() -> ModelMeta {
+        ModelMeta {
+            name: "tiny".into(),
+            input_shape: (2, 2, 1),
+            num_classes: 3,
+            param_shapes: vec![vec![4, 3], vec![3]],
+            param_count: 15,
+            train_batches: vec![8],
+            eval_batch: 16,
+        }
+    }
+
+    #[test]
+    fn init_params_shapes_and_stats() {
+        let meta = tiny_meta();
+        let p = init_params(&meta, 7);
+        assert_eq!(p.tensors.len(), 2);
+        assert_eq!(p.tensors[0].shape(), &[4, 3]);
+        // Bias is zero.
+        assert!(p.tensors[1].data().iter().all(|&x| x == 0.0));
+        assert!(p.tensors[0].data().iter().any(|&x| x != 0.0));
+        // Deterministic per seed.
+        assert_eq!(init_params(&meta, 7), p);
+        assert_ne!(init_params(&meta, 8), p);
+    }
+
+    #[test]
+    fn init_params_weight_std_matches_he() {
+        let meta = ModelMeta {
+            name: "wide".into(),
+            input_shape: (1, 1, 1),
+            num_classes: 2,
+            param_shapes: vec![vec![1000, 50], vec![50]],
+            param_count: 50_050,
+            train_batches: vec![8],
+            eval_batch: 8,
+        };
+        let p = init_params(&meta, 3);
+        let w = p.tensors[0].data();
+        let mean: f64 = w.iter().map(|&x| x as f64).sum::<f64>() / w.len() as f64;
+        let var: f64 =
+            w.iter().map(|&x| (x as f64 - mean).powi(2)).sum::<f64>() / w.len() as f64;
+        let want = 2.0 / 1000.0;
+        assert!((var - want).abs() < want * 0.1, "var {var} want {want}");
+    }
+}

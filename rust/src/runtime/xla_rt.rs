@@ -1,0 +1,306 @@
+//! PJRT-backed [`ModelRuntime`]: load HLO text, compile once per
+//! (kind, batch size), execute on the request path.
+//!
+//! Interchange contract (see /opt/xla-example/README.md and
+//! `python/compile/aot.py`): artifacts are HLO **text**, parsed with
+//! `HloModuleProto::from_text_file` (which reassigns instruction ids —
+//! jax ≥ 0.5 emits 64-bit ids that xla_extension 0.5.1 would reject in
+//! proto form).  Executables return a 1-tuple (lowered with
+//! `return_tuple=True`) whose single element is itself the flat output
+//! tuple.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::manifest::{Manifest, ModelArtifacts, ModelMeta};
+use super::{EvalOut, ModelRuntime, TrainOut};
+use crate::tensor::{ParamVec, Tensor};
+
+pub struct XlaRuntime {
+    client: xla::PjRtClient,
+    meta: ModelMeta,
+    train_exes: BTreeMap<usize, xla::PjRtLoadedExecutable>,
+    eval_exe: xla::PjRtLoadedExecutable,
+    execs: u64,
+    // ---- hot-path marshalling caches (EXPERIMENTS.md §Perf) ----
+    /// Zero momentum literals, reused when mu == 0 (the momentum
+    /// inputs cannot affect any output then: new_mom = 0·m + g).
+    zero_mom: Option<Vec<xla::Literal>>,
+    /// Cached probe-batch literals keyed by a content fingerprint —
+    /// the probe is constant for a whole run, so its ~400 KB of eval
+    /// input is marshalled once instead of per iteration.
+    eval_cache: Option<(u64, xla::Literal, xla::Literal)>,
+}
+
+impl XlaRuntime {
+    /// Load every compiled batch size for `model` from the artifacts
+    /// directory (use [`XlaRuntime::load_batches`] to restrict).
+    pub fn load(artifacts_dir: impl AsRef<Path>, model: &str) -> Result<Self> {
+        Self::load_batches(artifacts_dir, model, None)
+    }
+
+    /// Load with an optional batch-size restriction (compiling fewer
+    /// executables is faster for tests that only need one).
+    pub fn load_batches(
+        artifacts_dir: impl AsRef<Path>,
+        model: &str,
+        only: Option<&[usize]>,
+    ) -> Result<Self> {
+        let manifest = Manifest::load(&artifacts_dir)?;
+        let arts = manifest.model(model)?;
+        Self::from_artifacts(arts, only)
+    }
+
+    pub fn from_artifacts(arts: &ModelArtifacts, only: Option<&[usize]>) -> Result<Self> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("PJRT CPU client: {e}"))?;
+        let mut train_exes = BTreeMap::new();
+        let mut batches = Vec::new();
+        for (&batch, path) in &arts.train_paths {
+            if let Some(only) = only {
+                if !only.contains(&batch) {
+                    continue;
+                }
+            }
+            let exe = compile_text(&client, path)
+                .with_context(|| format!("compiling {}", path.display()))?;
+            train_exes.insert(batch, exe);
+            batches.push(batch);
+        }
+        if train_exes.is_empty() {
+            bail!("no train executables selected for '{}'", arts.meta.name);
+        }
+        let eval_exe = compile_text(&client, &arts.eval_path)
+            .with_context(|| format!("compiling {}", arts.eval_path.display()))?;
+        let mut meta = arts.meta.clone();
+        meta.train_batches = batches;
+        Ok(Self {
+            client,
+            meta,
+            train_exes,
+            eval_exe,
+            execs: 0,
+            zero_mom: None,
+            eval_cache: None,
+        })
+    }
+
+    fn params_to_literals(&self, params: &ParamVec, out: &mut Vec<xla::Literal>) -> Result<()> {
+        for t in &params.tensors {
+            out.push(tensor_to_literal(t)?);
+        }
+        Ok(())
+    }
+}
+
+fn compile_text(
+    client: &xla::PjRtClient,
+    path: &Path,
+) -> Result<xla::PjRtLoadedExecutable> {
+    let proto = xla::HloModuleProto::from_text_file(
+        path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+    )
+    .map_err(|e| anyhow!("parse {}: {e}", path.display()))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    client.compile(&comp).map_err(|e| anyhow!("compile: {e}"))
+}
+
+fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
+    // Direct shape+bytes construction: one memcpy, no reshape pass
+    // (§Perf: Literal::vec1 + reshape costs ~3× more on this path).
+    let bytes = unsafe {
+        std::slice::from_raw_parts(t.data().as_ptr() as *const u8, t.len() * 4)
+    };
+    xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::F32,
+        t.shape(),
+        bytes,
+    )
+    .map_err(|e| anyhow!("literal from {:?}: {e}", t.shape()))
+}
+
+fn slice_to_literal_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
+    let bytes = unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+    };
+    xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::F32, dims, bytes)
+        .map_err(|e| anyhow!("literal from {dims:?}: {e}"))
+}
+
+fn slice_to_literal_i32(data: &[i32], dims: &[usize]) -> Result<xla::Literal> {
+    let bytes = unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+    };
+    xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::S32, dims, bytes)
+        .map_err(|e| anyhow!("literal from {dims:?}: {e}"))
+}
+
+fn literal_to_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().map_err(|e| anyhow!("literal to_vec: {e}"))
+}
+
+/// Cheap content fingerprint for the eval-input cache: length plus 16
+/// sampled elements.  The probe batch is immutable for a run, so this
+/// only needs to distinguish "same probe" from "different probe".
+fn fingerprint(x: &[f32], y: &[i32]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    let mut mix = |v: u64| {
+        h ^= v;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    };
+    mix(x.len() as u64);
+    mix(y.len() as u64);
+    let step = (x.len() / 16).max(1);
+    for i in (0..x.len()).step_by(step) {
+        mix(x[i].to_bits() as u64);
+    }
+    for &v in y.iter().take(16) {
+        mix(v as u64);
+    }
+    h
+}
+
+impl ModelRuntime for XlaRuntime {
+    fn meta(&self) -> &ModelMeta {
+        &self.meta
+    }
+
+    fn train_step(
+        &mut self,
+        params: &ParamVec,
+        momentum: &ParamVec,
+        x: &[f32],
+        y: &[i32],
+        mbs: usize,
+        lr: f32,
+        mu: f32,
+    ) -> Result<TrainOut> {
+        let exe = self
+            .train_exes
+            .get(&mbs)
+            .ok_or_else(|| anyhow!("no train executable for batch {mbs}"))?;
+        let (h, w, c) = self.meta.input_shape;
+        if x.len() != mbs * h * w * c || y.len() != mbs {
+            bail!(
+                "bad batch: x {} (want {}), y {} (want {mbs})",
+                x.len(),
+                mbs * h * w * c,
+                y.len()
+            );
+        }
+        let n = self.meta.param_shapes.len();
+        let mut args: Vec<xla::Literal> = Vec::with_capacity(2 * n + 4);
+        self.params_to_literals(params, &mut args)?;
+        if mu == 0.0 {
+            // Momentum inputs are algebraically dead (new_mom = g):
+            // reuse cached zero literals instead of re-marshalling
+            // ~param_count·4 bytes per step.
+            if self.zero_mom.is_none() {
+                let zeros = ParamVec::zeros_like(params);
+                let mut lits = Vec::with_capacity(n);
+                for t in &zeros.tensors {
+                    lits.push(tensor_to_literal(t)?);
+                }
+                self.zero_mom = Some(lits);
+            }
+            for lit in self.zero_mom.as_ref().unwrap() {
+                args.push(lit.reshape(
+                    &lit.array_shape()
+                        .map_err(|e| anyhow!("{e}"))?
+                        .dims()
+                        .to_vec(),
+                )?);
+            }
+        } else {
+            self.params_to_literals(momentum, &mut args)?;
+        }
+        args.push(slice_to_literal_f32(x, &[mbs, h, w, c])?);
+        args.push(slice_to_literal_i32(y, &[mbs])?);
+        args.push(xla::Literal::scalar(lr));
+        args.push(xla::Literal::scalar(mu));
+
+        let result = exe
+            .execute::<xla::Literal>(&args)
+            .map_err(|e| anyhow!("execute train: {e}"))?;
+        self.execs += 1;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e}"))?
+            .to_tuple()
+            .map_err(|e| anyhow!("untuple: {e}"))?;
+        if tuple.len() != 2 * n + 2 {
+            bail!("train output arity {} != {}", tuple.len(), 2 * n + 2);
+        }
+
+        let mut new_params = ParamVec::default();
+        let mut new_mom = ParamVec::default();
+        for (i, shape) in self.meta.param_shapes.iter().enumerate() {
+            new_params
+                .tensors
+                .push(Tensor::new(shape.clone(), literal_to_vec_f32(&tuple[i])?));
+            new_mom.tensors.push(Tensor::new(
+                shape.clone(),
+                literal_to_vec_f32(&tuple[n + i])?,
+            ));
+        }
+        let loss = tuple[2 * n].to_vec::<f32>().map_err(|e| anyhow!("{e}"))?[0];
+        let correct =
+            tuple[2 * n + 1].to_vec::<f32>().map_err(|e| anyhow!("{e}"))?[0];
+        Ok(TrainOut { params: new_params, momentum: new_mom, loss, correct })
+    }
+
+    fn eval_step(&mut self, params: &ParamVec, x: &[f32], y: &[i32]) -> Result<EvalOut> {
+        let b = self.meta.eval_batch;
+        let (h, w, c) = self.meta.input_shape;
+        if x.len() != b * h * w * c || y.len() != b {
+            bail!("bad eval batch: x {} y {}", x.len(), y.len());
+        }
+        let n = self.meta.param_shapes.len();
+        let mut args: Vec<xla::Literal> = Vec::with_capacity(n + 2);
+        self.params_to_literals(params, &mut args)?;
+        let fp = fingerprint(x, y);
+        if self.eval_cache.as_ref().map(|(f, _, _)| *f) != Some(fp) {
+            let xl = slice_to_literal_f32(x, &[b, h, w, c])?;
+            let yl = slice_to_literal_i32(y, &[b])?;
+            self.eval_cache = Some((fp, xl, yl));
+        }
+        let (_, xl, yl) = self.eval_cache.as_ref().unwrap();
+        // Reshape-to-same-dims is the crate's cheap literal clone.
+        args.push(xl.reshape(&[b as i64, h as i64, w as i64, c as i64])?);
+        args.push(yl.reshape(&[b as i64])?);
+
+        let result = self
+            .eval_exe
+            .execute::<xla::Literal>(&args)
+            .map_err(|e| anyhow!("execute eval: {e}"))?;
+        self.execs += 1;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e}"))?
+            .to_tuple()
+            .map_err(|e| anyhow!("untuple: {e}"))?;
+        if tuple.len() != 2 {
+            bail!("eval output arity {}", tuple.len());
+        }
+        let loss = tuple[0].to_vec::<f32>().map_err(|e| anyhow!("{e}"))?[0];
+        let correct = tuple[1].to_vec::<f32>().map_err(|e| anyhow!("{e}"))?[0];
+        Ok(EvalOut { loss, correct })
+    }
+
+    fn exec_count(&self) -> u64 {
+        self.execs
+    }
+}
+
+impl std::fmt::Debug for XlaRuntime {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("XlaRuntime")
+            .field("model", &self.meta.name)
+            .field("platform", &self.client.platform_name())
+            .field("train_batches", &self.meta.train_batches)
+            .field("execs", &self.execs)
+            .finish()
+    }
+}

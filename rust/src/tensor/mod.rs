@@ -1,0 +1,288 @@
+//! Host-side tensor substrate: a flat `f32` buffer with a shape, plus
+//! the vector arithmetic the parameter server's aggregation algebra
+//! needs (Eqs. 1, 2, 5, 6).  Deliberately minimal — all FLOP-heavy math
+//! happens inside the XLA executables; this type only carries model
+//! state between them.
+
+use crate::util::f16;
+
+/// Dense, row-major, f32 tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        let n: usize = shape.iter().product();
+        assert_eq!(n, data.len(), "shape {shape:?} vs data len {}", data.len());
+        Self { shape, data }
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Self {
+        let n: usize = shape.iter().product();
+        Self { shape, data: vec![0.0; n] }
+    }
+
+    pub fn scalar(x: f32) -> Self {
+        Self { shape: vec![], data: vec![x] }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        self.data.len() * 4
+    }
+}
+
+/// A model's full parameter (or gradient) state as a list of tensors in
+/// manifest order.  This is the unit the PS aggregates and the wire
+/// ships.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct ParamVec {
+    pub tensors: Vec<Tensor>,
+}
+
+impl ParamVec {
+    pub fn zeros_like(other: &ParamVec) -> ParamVec {
+        ParamVec {
+            tensors: other
+                .tensors
+                .iter()
+                .map(|t| Tensor::zeros(t.shape().to_vec()))
+                .collect(),
+        }
+    }
+
+    pub fn from_shapes(shapes: &[Vec<usize>]) -> ParamVec {
+        ParamVec {
+            tensors: shapes.iter().map(|s| Tensor::zeros(s.clone())).collect(),
+        }
+    }
+
+    pub fn num_elements(&self) -> usize {
+        self.tensors.iter().map(|t| t.len()).sum()
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        self.num_elements() * 4
+    }
+
+    /// self ← self + alpha · other   (shape-checked axpy).
+    pub fn axpy(&mut self, alpha: f32, other: &ParamVec) {
+        assert_eq!(self.tensors.len(), other.tensors.len());
+        for (a, b) in self.tensors.iter_mut().zip(&other.tensors) {
+            debug_assert_eq!(a.shape(), b.shape());
+            for (x, y) in a.data_mut().iter_mut().zip(b.data()) {
+                *x += alpha * y;
+            }
+        }
+    }
+
+    /// self ← alpha · self.
+    pub fn scale(&mut self, alpha: f32) {
+        for t in &mut self.tensors {
+            for x in t.data_mut() {
+                *x *= alpha;
+            }
+        }
+    }
+
+    /// Out-of-place weighted sum: `wa·a + wb·b` — the loss-weighted
+    /// aggregation core of Eq. 6.
+    pub fn weighted_sum(a: &ParamVec, wa: f32, b: &ParamVec, wb: f32) -> ParamVec {
+        assert_eq!(a.tensors.len(), b.tensors.len());
+        ParamVec {
+            tensors: a
+                .tensors
+                .iter()
+                .zip(&b.tensors)
+                .map(|(ta, tb)| {
+                    debug_assert_eq!(ta.shape(), tb.shape());
+                    Tensor::new(
+                        ta.shape().to_vec(),
+                        ta.data()
+                            .iter()
+                            .zip(tb.data())
+                            .map(|(x, y)| wa * x + wb * y)
+                            .collect(),
+                    )
+                })
+                .collect(),
+        }
+    }
+
+    /// d = (self − other) / eta  — the cumulative-gradient recovery the
+    /// worker performs to report `G` (Alg. 2's Worker-SGD accumulates
+    /// gradient steps; dividing the parameter delta by η recovers the
+    /// same sum, including momentum contributions).
+    pub fn delta_over_eta(&self, other: &ParamVec, eta: f32) -> ParamVec {
+        assert!(eta != 0.0);
+        assert_eq!(self.tensors.len(), other.tensors.len());
+        ParamVec {
+            tensors: self
+                .tensors
+                .iter()
+                .zip(&other.tensors)
+                .map(|(a, b)| {
+                    Tensor::new(
+                        a.shape().to_vec(),
+                        a.data()
+                            .iter()
+                            .zip(b.data())
+                            .map(|(x, y)| (x - y) / eta)
+                            .collect(),
+                    )
+                })
+                .collect(),
+        }
+    }
+
+    /// L2 norm over all elements.
+    pub fn l2_norm(&self) -> f64 {
+        self.tensors
+            .iter()
+            .flat_map(|t| t.data())
+            .map(|&x| (x as f64) * (x as f64))
+            .sum::<f64>()
+            .sqrt()
+    }
+
+    /// Relative change ‖a−b‖/‖b‖ — SelSync's gate metric (§II-E).
+    pub fn relative_change(a: &ParamVec, b: &ParamVec) -> f64 {
+        let denom = b.l2_norm().max(1e-12);
+        let mut num = 0.0f64;
+        for (ta, tb) in a.tensors.iter().zip(&b.tensors) {
+            for (x, y) in ta.data().iter().zip(tb.data()) {
+                num += ((x - y) as f64).powi(2);
+            }
+        }
+        num.sqrt() / denom
+    }
+
+    /// fp16 wire encoding (shape info travels in the wire header).
+    pub fn encode_f16(&self) -> Vec<Vec<u8>> {
+        self.tensors.iter().map(|t| f16::encode_f16(t.data())).collect()
+    }
+
+    /// Decode an fp16 payload against known shapes.
+    pub fn decode_f16(shapes: &[Vec<usize>], payloads: &[Vec<u8>]) -> ParamVec {
+        assert_eq!(shapes.len(), payloads.len());
+        ParamVec {
+            tensors: shapes
+                .iter()
+                .zip(payloads)
+                .map(|(s, p)| Tensor::new(s.clone(), f16::decode_f16(p)))
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pv(vals: &[&[f32]]) -> ParamVec {
+        ParamVec {
+            tensors: vals
+                .iter()
+                .map(|v| Tensor::new(vec![v.len()], v.to_vec()))
+                .collect(),
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn tensor_shape_mismatch_panics() {
+        Tensor::new(vec![2, 3], vec![0.0; 5]);
+    }
+
+    #[test]
+    fn axpy_and_scale() {
+        let mut a = pv(&[&[1.0, 2.0], &[3.0]]);
+        let b = pv(&[&[10.0, 20.0], &[30.0]]);
+        a.axpy(0.5, &b);
+        assert_eq!(a, pv(&[&[6.0, 12.0], &[18.0]]));
+        a.scale(2.0);
+        assert_eq!(a, pv(&[&[12.0, 24.0], &[36.0]]));
+    }
+
+    #[test]
+    fn weighted_sum_is_convex_combination_when_weights_normalized() {
+        let a = pv(&[&[2.0, 4.0]]);
+        let b = pv(&[&[4.0, 8.0]]);
+        let c = ParamVec::weighted_sum(&a, 0.25, &b, 0.75);
+        assert_eq!(c, pv(&[&[3.5, 7.0]]));
+    }
+
+    #[test]
+    fn delta_over_eta_recovers_gradient_sum() {
+        // w_new = w_old − η·g  ⇒  (w_old − w_new)/η = g.
+        let w_old = pv(&[&[1.0, 2.0]]);
+        let mut w_new = w_old.clone();
+        let g = pv(&[&[0.5, -0.25]]);
+        w_new.axpy(-0.1, &g); // one SGD step, η = 0.1
+        let rec = w_old.delta_over_eta(&w_new, 0.1);
+        for (a, b) in rec.tensors[0].data().iter().zip(g.tensors[0].data()) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn l2_norm_and_relative_change() {
+        let a = pv(&[&[3.0], &[4.0]]);
+        assert!((a.l2_norm() - 5.0).abs() < 1e-12);
+        let b = pv(&[&[3.0], &[4.0]]);
+        assert_eq!(ParamVec::relative_change(&a, &b), 0.0);
+        let c = pv(&[&[6.0], &[8.0]]);
+        assert!((ParamVec::relative_change(&c, &a) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn f16_roundtrip_within_tolerance() {
+        let a = pv(&[&[0.125, -3.75, 100.0], &[1e-3]]);
+        let shapes: Vec<Vec<usize>> =
+            a.tensors.iter().map(|t| t.shape().to_vec()).collect();
+        let enc = a.encode_f16();
+        let dec = ParamVec::decode_f16(&shapes, &enc);
+        for (ta, tb) in a.tensors.iter().zip(&dec.tensors) {
+            for (x, y) in ta.data().iter().zip(tb.data()) {
+                assert!((x - y).abs() <= x.abs() * 0.001 + 1e-4);
+            }
+        }
+        // Wire bytes are half of f32.
+        let total: usize = enc.iter().map(|v| v.len()).sum();
+        assert_eq!(total, a.size_bytes() / 2);
+    }
+
+    #[test]
+    fn zeros_like_matches_shapes() {
+        let a = pv(&[&[1.0, 2.0], &[3.0]]);
+        let z = ParamVec::zeros_like(&a);
+        assert_eq!(z.num_elements(), 3);
+        assert!(z.tensors.iter().all(|t| t.data().iter().all(|&x| x == 0.0)));
+    }
+}

@@ -1,0 +1,170 @@
+//! IEEE 754 binary16 codec (substrate for the paper's fp16 model
+//! compression, §IV-D).  Hermes sends parameter/gradient tensors over
+//! the wire as f16 to halve traffic; math stays f32 on both ends.
+
+/// f32 → f16 bits, round-to-nearest-even, with overflow → ±inf and
+/// subnormal handling.
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xFF) as i32;
+    let mant = bits & 0x7F_FFFF;
+
+    if exp == 0xFF {
+        // Inf / NaN: keep NaN-ness in the top mantissa bit.
+        let m = if mant != 0 { 0x200 | (mant >> 13) as u16 & 0x3FF } else { 0 };
+        return sign | 0x7C00 | m;
+    }
+
+    // Re-bias 127 → 15.
+    let new_exp = exp - 127 + 15;
+    if new_exp >= 0x1F {
+        return sign | 0x7C00; // overflow → inf
+    }
+    if new_exp <= 0 {
+        // Subnormal (or underflow to zero).
+        if new_exp < -10 {
+            return sign;
+        }
+        let full_mant = mant | 0x80_0000;
+        let shift = (14 - new_exp) as u32;
+        let halfway = 1u32 << (shift - 1);
+        let mut half_mant = full_mant >> shift;
+        let rem = full_mant & ((1 << shift) - 1);
+        if rem > halfway || (rem == halfway && (half_mant & 1) == 1) {
+            half_mant += 1;
+        }
+        return sign | half_mant as u16;
+    }
+
+    let mut half = sign | ((new_exp as u16) << 10) | (mant >> 13) as u16;
+    let rem = mant & 0x1FFF;
+    if rem > 0x1000 || (rem == 0x1000 && (half & 1) == 1) {
+        half = half.wrapping_add(1); // may carry into exponent: correct
+    }
+    half
+}
+
+/// f16 bits → f32 (exact).
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1F) as u32;
+    let mant = (h & 0x3FF) as u32;
+    let bits = match (exp, mant) {
+        (0, 0) => sign,
+        (0, m) => {
+            // Subnormal: value = m·2⁻²⁴.  Normalize m to have bit 10
+            // set (k shifts) ⇒ value = 1.f × 2^(−14−k), exp field
+            // 127 + (−14−k) = 113 − k.
+            let mut k = 0u32;
+            let mut m = m;
+            while m & 0x400 == 0 {
+                m <<= 1;
+                k += 1;
+            }
+            sign | ((113 - k) << 23) | ((m & 0x3FF) << 13)
+        }
+        (0x1F, 0) => sign | 0x7F80_0000,
+        (0x1F, m) => sign | 0x7F80_0000 | (m << 13),
+        (e, m) => sign | ((e + 127 - 15) << 23) | (m << 13),
+    };
+    f32::from_bits(bits)
+}
+
+/// Encode a slice to little-endian f16 bytes.
+pub fn encode_f16(xs: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(xs.len() * 2);
+    for &x in xs {
+        out.extend_from_slice(&f32_to_f16_bits(x).to_le_bytes());
+    }
+    out
+}
+
+/// Decode little-endian f16 bytes back to f32.
+pub fn decode_f16(bytes: &[u8]) -> Vec<f32> {
+    assert!(bytes.len() % 2 == 0, "odd f16 byte length");
+    bytes
+        .chunks_exact(2)
+        .map(|c| f16_bits_to_f32(u16::from_le_bytes([c[0], c[1]])))
+        .collect()
+}
+
+/// Max relative error of the f16 round-trip for normal-range values —
+/// half has a 10-bit mantissa, so 2^-11 is the bound.
+pub const F16_MAX_REL_ERR: f32 = 1.0 / 2048.0;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_values_roundtrip() {
+        for &x in &[0.0f32, -0.0, 1.0, -1.0, 0.5, 2.0, 65504.0, -65504.0] {
+            let rt = f16_bits_to_f32(f32_to_f16_bits(x));
+            assert_eq!(rt, x, "{x}");
+        }
+    }
+
+    #[test]
+    fn known_bit_patterns() {
+        assert_eq!(f32_to_f16_bits(1.0), 0x3C00);
+        assert_eq!(f32_to_f16_bits(-2.0), 0xC000);
+        assert_eq!(f32_to_f16_bits(65504.0), 0x7BFF); // f16 max
+        assert_eq!(f32_to_f16_bits(f32::INFINITY), 0x7C00);
+        assert_eq!(f32_to_f16_bits(1e10), 0x7C00); // overflow → inf
+        assert_eq!(f16_bits_to_f32(0x3555), 0.33325195); // ~1/3
+    }
+
+    #[test]
+    fn nan_is_preserved() {
+        let h = f32_to_f16_bits(f32::NAN);
+        assert!(f16_bits_to_f32(h).is_nan());
+    }
+
+    #[test]
+    fn subnormals_roundtrip() {
+        let tiny = f16_bits_to_f32(0x0001); // smallest positive subnormal
+        assert!(tiny > 0.0);
+        assert_eq!(f32_to_f16_bits(tiny), 0x0001);
+        let sub = f16_bits_to_f32(0x03FF); // largest subnormal
+        assert_eq!(f32_to_f16_bits(sub), 0x03FF);
+    }
+
+    #[test]
+    fn relative_error_bound_holds() {
+        let mut rng = crate::util::rng::Xoshiro256pp::seed_from_u64(9);
+        for _ in 0..50_000 {
+            let x = (rng.normal() * 10.0) as f32;
+            let rt = f16_bits_to_f32(f32_to_f16_bits(x));
+            if x.abs() > 6.2e-5 {
+                // normal f16 range
+                assert!(
+                    ((rt - x) / x).abs() <= F16_MAX_REL_ERR,
+                    "x={x} rt={rt}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn slice_codec_roundtrip_and_halves_bytes() {
+        let xs: Vec<f32> = (0..1000).map(|i| (i as f32 - 500.0) * 0.01).collect();
+        let enc = encode_f16(&xs);
+        assert_eq!(enc.len(), xs.len() * 2);
+        let dec = decode_f16(&enc);
+        for (a, b) in xs.iter().zip(&dec) {
+            assert!((a - b).abs() <= 0.01, "{a} {b}");
+        }
+    }
+
+    #[test]
+    fn round_to_nearest_even() {
+        // 1.0 + 2^-11 is exactly halfway between 1.0 and the next f16;
+        // ties-to-even keeps 1.0 (even mantissa).
+        let x = 1.0f32 + 1.0 / 2048.0;
+        assert_eq!(f32_to_f16_bits(x), 0x3C00);
+        // 1.0 + 3·2^-11 is halfway and rounds up to even.
+        let y = 1.0f32 + 3.0 / 2048.0;
+        assert_eq!(f32_to_f16_bits(y), 0x3C02);
+    }
+}

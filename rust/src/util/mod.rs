@@ -1,0 +1,37 @@
+//! Foundation substrates built from scratch for the offline
+//! environment: PRNGs, statistics, JSON, and the fp16 codec.
+
+pub mod f16;
+pub mod json;
+pub mod rng;
+pub mod stats;
+
+/// Format a virtual-time duration (seconds) the way the paper's tables
+/// do: `7.97m`, `1h45m`, `12.3s`.
+pub fn fmt_duration(secs: f64) -> String {
+    if secs < 0.0 {
+        return format!("-{}", fmt_duration(-secs));
+    }
+    if secs < 60.0 {
+        format!("{secs:.1}s")
+    } else if secs < 3600.0 {
+        format!("{:.2}m", secs / 60.0)
+    } else {
+        let h = (secs / 3600.0).floor();
+        let m = (secs - h * 3600.0) / 60.0;
+        format!("{}h{:02.0}m", h as u64, m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn durations_format_like_the_paper() {
+        assert_eq!(fmt_duration(12.34), "12.3s");
+        assert_eq!(fmt_duration(478.2), "7.97m");
+        assert_eq!(fmt_duration(6300.0), "1h45m");
+        assert_eq!(fmt_duration(-30.0), "-30.0s");
+    }
+}

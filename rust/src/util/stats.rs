@@ -1,0 +1,227 @@
+//! Statistics substrate: the quartile/IQR outlier test behind the
+//! paper's straggler detection (§IV-A) and the z-score machinery behind
+//! HermesGUP (§IV-B), plus the running-moment helpers used everywhere.
+
+/// Arithmetic mean; 0.0 for an empty slice.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population variance (the paper standardizes against the window's own
+/// distribution, so population — not sample — variance is the match).
+pub fn variance(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    xs.iter().map(|x| (x - m).powi(2)).sum::<f64>() / xs.len() as f64
+}
+
+pub fn std_dev(xs: &[f64]) -> f64 {
+    variance(xs).sqrt()
+}
+
+/// z-score of `x` against the sample `xs` (Eq. 4).  Returns `None` when
+/// the window has no spread (σ = 0) — the caller must treat that as
+/// "no signal", not as an infinitely significant change.
+pub fn z_score(x: f64, xs: &[f64]) -> Option<f64> {
+    let sigma = std_dev(xs);
+    if sigma <= f64::EPSILON || !sigma.is_finite() {
+        return None;
+    }
+    Some((x - mean(xs)) / sigma)
+}
+
+/// Linear-interpolation quantile (type-7, the numpy default), `q` in
+/// [0, 1].  Input need not be sorted.
+pub fn quantile(xs: &[f64], q: f64) -> f64 {
+    assert!((0.0..=1.0).contains(&q), "q out of range: {q}");
+    assert!(!xs.is_empty(), "quantile of empty slice");
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pos = q * (v.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        let frac = pos - lo as f64;
+        v[lo] * (1.0 - frac) + v[hi] * frac
+    }
+}
+
+pub fn median(xs: &[f64]) -> f64 {
+    quantile(xs, 0.5)
+}
+
+/// Box-plot fences from §IV-A: `[Q1 − 1.5·IQR, Q3 + 1.5·IQR]`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Fences {
+    pub q1: f64,
+    pub q3: f64,
+    pub iqr: f64,
+    pub lo: f64,
+    pub hi: f64,
+}
+
+pub fn iqr_fences(xs: &[f64]) -> Fences {
+    let q1 = quantile(xs, 0.25);
+    let q3 = quantile(xs, 0.75);
+    let iqr = q3 - q1;
+    Fences { q1, q3, iqr, lo: q1 - 1.5 * iqr, hi: q3 + 1.5 * iqr }
+}
+
+/// Indices of IQR outliers — the straggler/over-provisioned set of
+/// §IV-A: `t ∉ [Q1 − 1.5·IQR, Q3 + 1.5·IQR]`.
+pub fn iqr_outliers(xs: &[f64]) -> Vec<usize> {
+    if xs.len() < 4 {
+        return Vec::new(); // quartiles are meaningless below 4 samples
+    }
+    let f = iqr_fences(xs);
+    xs.iter()
+        .enumerate()
+        .filter(|(_, &x)| x < f.lo || x > f.hi)
+        .map(|(i, _)| i)
+        .collect()
+}
+
+/// Welford online mean/variance accumulator.
+#[derive(Debug, Clone, Default)]
+pub struct Running {
+    n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl Running {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let delta = x - self.mean;
+        self.mean += delta / self.n as f64;
+        self.m2 += delta * (x - self.mean);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    /// Population variance, matching [`variance`].
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / self.n as f64
+        }
+    }
+
+    pub fn std_dev(&self) -> f64 {
+        self.variance().sqrt()
+    }
+}
+
+/// Standard-normal CDF via the Abramowitz–Stegun erf approximation
+/// (|err| < 1.5e-7) — used to report the tail probability a given α
+/// threshold corresponds to (§V-E quotes 9.68% for α = −1.3).
+pub fn normal_cdf(z: f64) -> f64 {
+    0.5 * (1.0 + erf(z / std::f64::consts::SQRT_2))
+}
+
+fn erf(x: f64) -> f64 {
+    let sign = if x < 0.0 { -1.0 } else { 1.0 };
+    let x = x.abs();
+    let t = 1.0 / (1.0 + 0.327_591_1 * x);
+    let y = 1.0
+        - (((((1.061_405_429 * t - 1.453_152_027) * t) + 1.421_413_741)
+            * t
+            - 0.284_496_736)
+            * t
+            + 0.254_829_592)
+            * t
+            * (-x * x).exp();
+    sign * y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_and_variance_basics() {
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(mean(&[2.0, 4.0]), 3.0);
+        assert_eq!(variance(&[1.0]), 0.0);
+        // Population variance of [2,4,4,4,5,5,7,9] is 4.
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        assert!((variance(&xs) - 4.0).abs() < 1e-12);
+        assert!((std_dev(&xs) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn z_score_matches_hand_computation() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0]; // μ=5, σ=2
+        assert!((z_score(1.0, &xs).unwrap() - (-2.0)).abs() < 1e-12);
+        assert!((z_score(9.0, &xs).unwrap() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn z_score_none_on_degenerate_window() {
+        assert_eq!(z_score(1.0, &[5.0, 5.0, 5.0]), None);
+        assert_eq!(z_score(1.0, &[5.0]), None);
+    }
+
+    #[test]
+    fn quantile_matches_numpy_type7() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert!((quantile(&xs, 0.25) - 1.75).abs() < 1e-12);
+        assert!((quantile(&xs, 0.5) - 2.5).abs() < 1e-12);
+        assert!((quantile(&xs, 0.75) - 3.25).abs() < 1e-12);
+        assert_eq!(quantile(&xs, 0.0), 1.0);
+        assert_eq!(quantile(&xs, 1.0), 4.0);
+    }
+
+    #[test]
+    fn iqr_outliers_flags_extremes_only() {
+        // 11 well-behaved points plus one straggler.
+        let mut xs: Vec<f64> = (0..11).map(|i| 2.0 + 0.05 * i as f64).collect();
+        xs.push(9.0);
+        let out = iqr_outliers(&xs);
+        assert_eq!(out, vec![11]);
+    }
+
+    #[test]
+    fn iqr_outliers_empty_for_tight_cluster_or_tiny_sample() {
+        assert!(iqr_outliers(&[1.0, 1.1, 0.9, 1.05]).is_empty());
+        assert!(iqr_outliers(&[1.0, 100.0]).is_empty());
+    }
+
+    #[test]
+    fn running_matches_batch() {
+        let xs = [3.0, 1.0, 4.0, 1.0, 5.0, 9.0, 2.0, 6.0];
+        let mut r = Running::new();
+        for &x in &xs {
+            r.push(x);
+        }
+        assert!((r.mean() - mean(&xs)).abs() < 1e-12);
+        assert!((r.variance() - variance(&xs)).abs() < 1e-12);
+        assert_eq!(r.count(), 8);
+    }
+
+    #[test]
+    fn normal_cdf_tail_probabilities_match_paper() {
+        // §V-E: α=-1.3 → 9.68%, α=-1.6 → 5.48%, α=-0.9 → 18.406%.
+        assert!((normal_cdf(-1.3) - 0.0968).abs() < 1e-3);
+        assert!((normal_cdf(-1.6) - 0.0548).abs() < 1e-3);
+        assert!((normal_cdf(-0.9) - 0.18406).abs() < 1.5e-3);
+    }
+}

@@ -1,0 +1,460 @@
+//! Binary wire protocol (substrate — replaces the paper's ZeroMQ/Kafka
+//! stack).  Self-describing little-endian codec with length-prefixed
+//! framing for the live TCP mode; the simulator uses
+//! [`Message::wire_size`] (tested to equal the real encoding length)
+//! for byte accounting without paying for encoding on every virtual
+//! message.
+
+use crate::tensor::{ParamVec, Tensor};
+use crate::util::f16;
+
+/// Everything that travels between a worker and the PS.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Message {
+    /// Worker → PS: join the cluster.
+    Register { worker: u32, family: String },
+    /// Worker → PS: a gated gradient push (Alg. 1 fired).
+    /// `grads` is the cumulative G from w₀ (Alg. 2 Worker-SGD);
+    /// `test_loss` is T_w; `train_time` feeds the allocator.
+    PushUpdate {
+        worker: u32,
+        iter: u64,
+        test_loss: f32,
+        train_time: f64,
+        grads: TensorPayload,
+    },
+    /// Worker → PS: fetch the current global model.
+    RequestModel { worker: u32 },
+    /// Worker → PS: heartbeat carrying the last local training time
+    /// (the PS monitors these for the IQR straggler test, §IV-A).
+    TimeReport { worker: u32, iter: u64, train_time: f64 },
+    /// PS → worker: global model broadcast/reply.
+    GlobalModel { version: u64, params: TensorPayload },
+    /// PS → worker: dataset (re)assignment from the dual binary search.
+    DatasetAssign { dss: u32, mbs: u32, shard_seed: u64, prefetch: bool },
+    /// PS → worker: proceed / stop (convergence reached).
+    Control { stop: bool },
+}
+
+/// Tensor payload with its wire precision.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorPayload {
+    pub fp16: bool,
+    pub params: ParamVec,
+}
+
+impl TensorPayload {
+    pub fn new(params: ParamVec, fp16: bool) -> Self {
+        Self { fp16, params }
+    }
+
+    fn payload_bytes(&self) -> usize {
+        let elems = self.params.num_elements();
+        if self.fp16 {
+            2 * elems
+        } else {
+            4 * elems
+        }
+    }
+}
+
+const TAG_REGISTER: u8 = 1;
+const TAG_PUSH: u8 = 2;
+const TAG_REQ_MODEL: u8 = 3;
+const TAG_TIME: u8 = 4;
+const TAG_MODEL: u8 = 5;
+const TAG_DATASET: u8 = 6;
+const TAG_CONTROL: u8 = 7;
+
+#[derive(Debug, thiserror::Error)]
+pub enum WireError {
+    #[error("truncated message (wanted {wanted} more bytes at {at})")]
+    Truncated { at: usize, wanted: usize },
+    #[error("unknown message tag {0}")]
+    UnknownTag(u8),
+    #[error("malformed field: {0}")]
+    Malformed(&'static str),
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+// ------------------------------------------------------------ writer
+
+struct Writer {
+    buf: Vec<u8>,
+}
+
+impl Writer {
+    fn new() -> Self {
+        Self { buf: Vec::new() }
+    }
+
+    fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+    fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn f32(&mut self, v: f32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn str(&mut self, s: &str) {
+        self.u32(s.len() as u32);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    fn tensors(&mut self, p: &TensorPayload) {
+        self.u8(p.fp16 as u8);
+        self.u32(p.params.tensors.len() as u32);
+        for t in &p.params.tensors {
+            self.u8(t.shape().len() as u8);
+            for &d in t.shape() {
+                self.u32(d as u32);
+            }
+            if p.fp16 {
+                self.buf.extend_from_slice(&f16::encode_f16(t.data()));
+            } else {
+                for &x in t.data() {
+                    self.buf.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------------ reader
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
+        if self.pos + n > self.buf.len() {
+            return Err(WireError::Truncated { at: self.pos, wanted: n });
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, WireError> {
+        Ok(self.take(1)?[0])
+    }
+    fn u32(&mut self) -> Result<u32, WireError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn u64(&mut self) -> Result<u64, WireError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn f32(&mut self) -> Result<f32, WireError> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn f64(&mut self) -> Result<f64, WireError> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn str(&mut self) -> Result<String, WireError> {
+        let n = self.u32()? as usize;
+        if n > 1 << 20 {
+            return Err(WireError::Malformed("string too long"));
+        }
+        String::from_utf8(self.take(n)?.to_vec())
+            .map_err(|_| WireError::Malformed("bad utf8"))
+    }
+
+    fn tensors(&mut self) -> Result<TensorPayload, WireError> {
+        let fp16 = self.u8()? != 0;
+        let count = self.u32()? as usize;
+        if count > 4096 {
+            return Err(WireError::Malformed("too many tensors"));
+        }
+        let mut tensors = Vec::with_capacity(count);
+        for _ in 0..count {
+            let rank = self.u8()? as usize;
+            if rank > 8 {
+                return Err(WireError::Malformed("rank too high"));
+            }
+            let mut shape = Vec::with_capacity(rank);
+            for _ in 0..rank {
+                shape.push(self.u32()? as usize);
+            }
+            let elems: usize = shape.iter().product();
+            if elems > 1 << 28 {
+                return Err(WireError::Malformed("tensor too large"));
+            }
+            let data = if fp16 {
+                f16::decode_f16(self.take(2 * elems)?)
+            } else {
+                self.take(4 * elems)?
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                    .collect()
+            };
+            tensors.push(Tensor::new(shape, data));
+        }
+        Ok(TensorPayload { fp16, params: ParamVec { tensors } })
+    }
+}
+
+impl Message {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = Writer::new();
+        match self {
+            Message::Register { worker, family } => {
+                w.u8(TAG_REGISTER);
+                w.u32(*worker);
+                w.str(family);
+            }
+            Message::PushUpdate { worker, iter, test_loss, train_time, grads } => {
+                w.u8(TAG_PUSH);
+                w.u32(*worker);
+                w.u64(*iter);
+                w.f32(*test_loss);
+                w.f64(*train_time);
+                w.tensors(grads);
+            }
+            Message::RequestModel { worker } => {
+                w.u8(TAG_REQ_MODEL);
+                w.u32(*worker);
+            }
+            Message::TimeReport { worker, iter, train_time } => {
+                w.u8(TAG_TIME);
+                w.u32(*worker);
+                w.u64(*iter);
+                w.f64(*train_time);
+            }
+            Message::GlobalModel { version, params } => {
+                w.u8(TAG_MODEL);
+                w.u64(*version);
+                w.tensors(params);
+            }
+            Message::DatasetAssign { dss, mbs, shard_seed, prefetch } => {
+                w.u8(TAG_DATASET);
+                w.u32(*dss);
+                w.u32(*mbs);
+                w.u64(*shard_seed);
+                w.u8(*prefetch as u8);
+            }
+            Message::Control { stop } => {
+                w.u8(TAG_CONTROL);
+                w.u8(*stop as u8);
+            }
+        }
+        w.buf
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<Message, WireError> {
+        let mut r = Reader::new(buf);
+        let msg = match r.u8()? {
+            TAG_REGISTER => Message::Register { worker: r.u32()?, family: r.str()? },
+            TAG_PUSH => Message::PushUpdate {
+                worker: r.u32()?,
+                iter: r.u64()?,
+                test_loss: r.f32()?,
+                train_time: r.f64()?,
+                grads: r.tensors()?,
+            },
+            TAG_REQ_MODEL => Message::RequestModel { worker: r.u32()? },
+            TAG_TIME => Message::TimeReport {
+                worker: r.u32()?,
+                iter: r.u64()?,
+                train_time: r.f64()?,
+            },
+            TAG_MODEL => Message::GlobalModel { version: r.u64()?, params: r.tensors()? },
+            TAG_DATASET => Message::DatasetAssign {
+                dss: r.u32()?,
+                mbs: r.u32()?,
+                shard_seed: r.u64()?,
+                prefetch: r.u8()? != 0,
+            },
+            TAG_CONTROL => Message::Control { stop: r.u8()? != 0 },
+            t => return Err(WireError::UnknownTag(t)),
+        };
+        if r.pos != buf.len() {
+            return Err(WireError::Malformed("trailing bytes"));
+        }
+        Ok(msg)
+    }
+
+    /// Exact encoded size without encoding — the simulator's byte
+    /// accounting (tested against `encode().len()`).
+    pub fn wire_size(&self) -> usize {
+        match self {
+            Message::Register { family, .. } => 1 + 4 + 4 + family.len(),
+            Message::PushUpdate { grads, .. } => {
+                1 + 4 + 8 + 4 + 8 + Self::tensors_size(grads)
+            }
+            Message::RequestModel { .. } => 1 + 4,
+            Message::TimeReport { .. } => 1 + 4 + 8 + 8,
+            Message::GlobalModel { params, .. } => 1 + 8 + Self::tensors_size(params),
+            Message::DatasetAssign { .. } => 1 + 4 + 4 + 8 + 1,
+            Message::Control { .. } => 1 + 1,
+        }
+    }
+
+    fn tensors_size(p: &TensorPayload) -> usize {
+        let header: usize = p
+            .params
+            .tensors
+            .iter()
+            .map(|t| 1 + 4 * t.shape().len())
+            .sum();
+        1 + 4 + header + p.payload_bytes()
+    }
+}
+
+// --------------------------------------------------- framed transport
+
+/// Write a length-prefixed frame.
+pub fn write_frame<W: std::io::Write>(w: &mut W, msg: &Message) -> Result<(), WireError> {
+    let body = msg.encode();
+    w.write_all(&(body.len() as u32).to_le_bytes())?;
+    w.write_all(&body)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read one length-prefixed frame.
+pub fn read_frame<R: std::io::Read>(r: &mut R) -> Result<Message, WireError> {
+    let mut len = [0u8; 4];
+    r.read_exact(&mut len)?;
+    let n = u32::from_le_bytes(len) as usize;
+    if n > 1 << 30 {
+        return Err(WireError::Malformed("frame too large"));
+    }
+    let mut body = vec![0u8; n];
+    r.read_exact(&mut body)?;
+    Message::decode(&body)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_params() -> ParamVec {
+        ParamVec {
+            tensors: vec![
+                Tensor::new(vec![2, 3], vec![1.0, -2.0, 3.5, 0.0, 5.25, -6.0]),
+                Tensor::new(vec![3], vec![0.5, 1.5, -0.125]),
+            ],
+        }
+    }
+
+    fn all_messages() -> Vec<Message> {
+        vec![
+            Message::Register { worker: 3, family: "B1ms".into() },
+            Message::PushUpdate {
+                worker: 7,
+                iter: 123,
+                test_loss: 0.42,
+                train_time: 7.7,
+                grads: TensorPayload::new(sample_params(), false),
+            },
+            Message::PushUpdate {
+                worker: 7,
+                iter: 124,
+                test_loss: 0.41,
+                train_time: 7.2,
+                grads: TensorPayload::new(sample_params(), true),
+            },
+            Message::RequestModel { worker: 1 },
+            Message::TimeReport { worker: 2, iter: 55, train_time: 3.25 },
+            Message::GlobalModel {
+                version: 9,
+                params: TensorPayload::new(sample_params(), false),
+            },
+            Message::DatasetAssign { dss: 2500, mbs: 16, shard_seed: 77, prefetch: true },
+            Message::Control { stop: true },
+        ]
+    }
+
+    #[test]
+    fn roundtrip_every_message_kind() {
+        for msg in all_messages() {
+            let enc = msg.encode();
+            let dec = Message::decode(&enc).unwrap();
+            match (&msg, &dec) {
+                // fp16 payloads lose precision; compare approximately.
+                (
+                    Message::PushUpdate { grads: a, .. },
+                    Message::PushUpdate { grads: b, .. },
+                ) if a.fp16 => {
+                    for (ta, tb) in a.params.tensors.iter().zip(&b.params.tensors) {
+                        for (x, y) in ta.data().iter().zip(tb.data()) {
+                            assert!((x - y).abs() <= x.abs() * 0.001 + 1e-4);
+                        }
+                    }
+                }
+                _ => assert_eq!(msg, dec),
+            }
+        }
+    }
+
+    #[test]
+    fn wire_size_matches_encoding_exactly() {
+        for msg in all_messages() {
+            assert_eq!(msg.wire_size(), msg.encode().len(), "{msg:?}");
+        }
+    }
+
+    #[test]
+    fn fp16_payload_is_half_the_f32_payload() {
+        let f32_msg = Message::GlobalModel {
+            version: 0,
+            params: TensorPayload::new(sample_params(), false),
+        };
+        let f16_msg = Message::GlobalModel {
+            version: 0,
+            params: TensorPayload::new(sample_params(), true),
+        };
+        let elems = sample_params().num_elements();
+        assert_eq!(f32_msg.wire_size() - f16_msg.wire_size(), 2 * elems);
+    }
+
+    #[test]
+    fn truncated_and_garbage_inputs_error() {
+        let enc = all_messages()[1].encode();
+        for cut in [0, 1, 5, enc.len() - 1] {
+            assert!(Message::decode(&enc[..cut]).is_err(), "cut {cut}");
+        }
+        assert!(matches!(
+            Message::decode(&[99, 0, 0]),
+            Err(WireError::UnknownTag(99))
+        ));
+        // Trailing garbage must be rejected too.
+        let mut padded = all_messages()[7].encode();
+        padded.push(0);
+        assert!(Message::decode(&padded).is_err());
+    }
+
+    #[test]
+    fn framing_roundtrip_over_a_buffer() {
+        let mut buf = Vec::new();
+        for msg in all_messages() {
+            write_frame(&mut buf, &msg).unwrap();
+        }
+        let mut cursor = std::io::Cursor::new(buf);
+        for msg in all_messages() {
+            let got = read_frame(&mut cursor).unwrap();
+            if msg.wire_size() == got.wire_size() {
+                // fp16 equality handled above; here just confirm kind.
+                assert_eq!(
+                    std::mem::discriminant(&msg),
+                    std::mem::discriminant(&got)
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,271 @@
+//! The worker core: local SGD over the assigned working set, test-loss
+//! probing, the GUP gate, and the cumulative-G bookkeeping of Alg. 2.
+//!
+//! One **local iteration** (the unit the paper counts) = `E·DSS/MBS`
+//! mini-batch steps over the working set, followed by one probe
+//! evaluation.  The simulator caps the *executed* steps at `steps_cap`
+//! (compute subsampling, DESIGN.md §5) while virtual time always
+//! charges the full Eq. 3 cost.
+
+use anyhow::Result;
+
+use crate::data::{BatchSampler, Dataset, Probe, Shard};
+use crate::gup::{GateDecision, Gup};
+use crate::model::ModelState;
+use crate::runtime::ModelRuntime;
+use crate::tensor::ParamVec;
+
+/// Per-worker training state.
+#[derive(Debug, Clone)]
+pub struct WorkerCore {
+    pub id: usize,
+    pub state: ModelState,
+    pub gup: Gup,
+    pub sampler: BatchSampler,
+    pub shard: Shard,
+    /// Current allocation.
+    pub dss: usize,
+    pub mbs: usize,
+    /// Local iterations completed.
+    pub iters: u64,
+    /// Times this worker requested/received the global model —
+    /// the denominator of the WI metric (Eq. 7).
+    pub model_requests: u64,
+    /// Last probe loss (test loss of the local model).
+    pub last_loss: f32,
+    pub last_correct: f32,
+    /// Driver flag: the last iteration's gate fired and the push is in
+    /// flight (set by event-driven drivers between compute and send).
+    pub last_push_pending: bool,
+    // Hot-path scratch buffers (avoid per-batch allocation).
+    scratch_x: Vec<f32>,
+    scratch_y: Vec<i32>,
+}
+
+/// What one local iteration produced.
+#[derive(Debug, Clone, Copy)]
+pub struct IterOut {
+    pub test_loss: f32,
+    pub test_correct: f32,
+    pub train_loss: f32,
+    pub gate: GateDecision,
+    /// Real mini-batch steps executed (≤ steps_cap).
+    pub steps_run: usize,
+    /// Mini-batch steps the cost model charges (E·DSS/MBS).
+    pub steps_modeled: usize,
+}
+
+impl WorkerCore {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        id: usize,
+        init: ParamVec,
+        gup: Gup,
+        shard: Shard,
+        dss: usize,
+        mbs: usize,
+        seed: u64,
+    ) -> Self {
+        let mut sampler = BatchSampler::new(seed, id);
+        sampler.refill(&shard.pool, dss);
+        WorkerCore {
+            id,
+            state: ModelState::new(init),
+            gup,
+            sampler,
+            shard,
+            dss,
+            mbs,
+            iters: 0,
+            model_requests: 0,
+            last_loss: f32::INFINITY,
+            last_correct: 0.0,
+            last_push_pending: false,
+            scratch_x: Vec::new(),
+            scratch_y: Vec::new(),
+        }
+    }
+
+    /// Apply a (re)allocation from the PS: new DSS/MBS and a fresh
+    /// working set (the prefetched dataset).
+    pub fn assign(&mut self, dss: usize, mbs: usize) {
+        self.dss = dss.max(1);
+        self.mbs = mbs.max(1);
+        self.sampler.refill(&self.shard.pool, self.dss);
+    }
+
+    /// Adopt the global model.
+    pub fn adopt_global(&mut self, global: &ParamVec, version: u64) {
+        self.state.refresh(global, version);
+        self.model_requests += 1;
+    }
+
+    /// Run one local iteration: `min(E·DSS/MBS, steps_cap)` real train
+    /// steps + one probe eval + the GUP decision.
+    #[allow(clippy::too_many_arguments)]
+    pub fn local_iteration(
+        &mut self,
+        rt: &mut dyn ModelRuntime,
+        ds: &Dataset,
+        probe: &Probe,
+        epochs: usize,
+        lr: f32,
+        mu: f32,
+        steps_cap: usize,
+    ) -> Result<IterOut> {
+        let exec_mbs = rt.meta().clamp_train_batch(self.mbs);
+        let steps_modeled =
+            ((epochs * self.dss) as f64 / self.mbs as f64).ceil().max(1.0) as usize;
+        let steps_run = steps_modeled.min(steps_cap).max(1);
+
+        let mut train_loss = 0f32;
+        for _ in 0..steps_run {
+            let idx = self.sampler.next_batch(exec_mbs);
+            ds.gather_into(&idx, &mut self.scratch_x, &mut self.scratch_y);
+            let out = rt.train_step(
+                &self.state.params,
+                &self.state.momentum,
+                &self.scratch_x,
+                &self.scratch_y,
+                exec_mbs,
+                lr,
+                mu,
+            )?;
+            self.state.params = out.params;
+            self.state.momentum = out.momentum;
+            train_loss = out.loss;
+        }
+
+        let ev = rt.eval_step(&self.state.params, &probe.x, &probe.y)?;
+        self.last_loss = ev.loss;
+        self.last_correct = ev.correct;
+        self.iters += 1;
+
+        let gate = self.gup.observe(ev.loss as f64);
+        Ok(IterOut {
+            test_loss: ev.loss,
+            test_correct: ev.correct,
+            train_loss,
+            gate,
+            steps_run,
+            steps_modeled,
+        })
+    }
+
+    /// Alg. 2 Worker-SGD: the cumulative gradient G from the shared
+    /// baseline w₀.
+    pub fn cumulative_g(&self, w0: &ParamVec, eta: f32) -> ParamVec {
+        self.state.cumulative_g(w0, eta)
+    }
+
+    /// Worker independence (Eq. 7): local iterations per global-model
+    /// request.
+    pub fn wi(&self) -> f64 {
+        self.iters as f64 / self.model_requests.max(1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{partition_pools, DataKind, Partition};
+    use crate::gup::Gup;
+    use crate::runtime::{init_params, MockRuntime};
+
+    fn setup() -> (MockRuntime, Dataset, Probe, WorkerCore) {
+        let rt = MockRuntime::new();
+        let ds = Dataset::synth(DataKind::MockSet, 1200, 21);
+        let (train, test) = ds.split(0.85, 21);
+        let probe = Probe::build(&ds, &test, 128, 21);
+        let shard =
+            partition_pools(&ds, &train, 1, Partition::Iid, 21).remove(0);
+        let init = init_params(rt.meta(), 21);
+        let gup = Gup::new(10, -1.3, 0.1, 5, true);
+        let w = WorkerCore::new(0, init, gup, shard, 256, 16, 21);
+        (rt, ds, probe, w)
+    }
+
+    #[test]
+    fn iterations_learn_and_count() {
+        let (mut rt, ds, probe, mut w) = setup();
+        let mut first = 0f32;
+        let mut last = 0f32;
+        for i in 0..30 {
+            let out = w
+                .local_iteration(&mut rt, &ds, &probe, 1, 0.5, 0.0, 4)
+                .unwrap();
+            if i == 0 {
+                first = out.test_loss;
+            }
+            last = out.test_loss;
+            assert_eq!(out.steps_run, 4); // 256/16 = 16 capped at 4
+            assert_eq!(out.steps_modeled, 16);
+        }
+        assert_eq!(w.iters, 30);
+        assert!(last < first, "no learning {first} → {last}");
+    }
+
+    #[test]
+    fn assign_changes_step_budget() {
+        let (mut rt, ds, probe, mut w) = setup();
+        w.assign(64, 32);
+        let out = w
+            .local_iteration(&mut rt, &ds, &probe, 1, 0.1, 0.0, 100)
+            .unwrap();
+        assert_eq!(out.steps_modeled, 2); // 64/32
+        assert_eq!(out.steps_run, 2);
+        assert_eq!(w.sampler.active_len(), 64);
+    }
+
+    #[test]
+    fn adopt_global_counts_model_requests_and_wi() {
+        let (mut rt, ds, probe, mut w) = setup();
+        for _ in 0..6 {
+            w.local_iteration(&mut rt, &ds, &probe, 1, 0.2, 0.0, 2).unwrap();
+        }
+        let g = init_params(rt.meta(), 99);
+        w.adopt_global(&g, 5);
+        assert_eq!(w.state.version, 5);
+        assert_eq!(w.model_requests, 1);
+        assert!((w.wi() - 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cumulative_g_reconstructs_params() {
+        let (mut rt, ds, probe, mut w) = setup();
+        let w0 = w.state.params.clone();
+        let eta = 0.3f32;
+        for _ in 0..5 {
+            w.local_iteration(&mut rt, &ds, &probe, 1, eta, 0.0, 3).unwrap();
+        }
+        let g = w.cumulative_g(&w0, eta);
+        let rebuilt = ModelState::from_cumulative(&w0, &g, eta);
+        for (a, b) in rebuilt
+            .tensors
+            .iter()
+            .flat_map(|t| t.data())
+            .zip(w.state.params.tensors.iter().flat_map(|t| t.data()))
+        {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn gate_fires_during_early_learning() {
+        let (mut rt, ds, probe, mut w) = setup();
+        let mut pushes = 0;
+        for _ in 0..40 {
+            let out = w
+                .local_iteration(&mut rt, &ds, &probe, 1, 0.5, 0.0, 4)
+                .unwrap();
+            if out.gate.push {
+                pushes += 1;
+            }
+        }
+        assert!(pushes > 0, "GUP never fired during steep learning");
+        assert!(
+            pushes < 40,
+            "GUP fired every iteration — gate not selective"
+        );
+    }
+}

@@ -1,0 +1,262 @@
+//! Property-based tests on coordinator invariants (DESIGN.md §7),
+//! using a from-scratch generative harness (no proptest offline): each
+//! property runs against hundreds of seeded random cases and reports
+//! the failing seed on violation.
+
+use hermes_dml::alloc::{dual_binary_search, modeled_time, MBS_DOMAIN};
+use hermes_dml::gup::Gup;
+use hermes_dml::ps::PsState;
+use hermes_dml::sim::{Ev, SimQueue};
+use hermes_dml::tensor::{ParamVec, Tensor};
+use hermes_dml::util::rng::Xoshiro256pp;
+use hermes_dml::util::stats;
+use hermes_dml::wire::{Message, TensorPayload};
+
+/// Mini property harness: run `f` for `n` seeded cases.
+fn forall(n: u64, mut f: impl FnMut(&mut Xoshiro256pp)) {
+    for seed in 0..n {
+        let mut rng = Xoshiro256pp::seed_from_u64(seed);
+        f(&mut rng);
+    }
+}
+
+// ---------------------------------------------------------- allocation
+
+#[test]
+fn prop_dual_binary_search_always_valid() {
+    forall(500, |rng| {
+        let k = rng.uniform(0.001, 0.5);
+        let t_target = rng.uniform(0.5, 30.0);
+        let dss_max = 1 + rng.next_below(100_000) as usize;
+        let epochs = 1 + rng.next_below(3) as usize;
+        let a = dual_binary_search(k, epochs, t_target, dss_max, &MBS_DOMAIN);
+        assert!(MBS_DOMAIN.contains(&a.mbs), "invalid mbs {}", a.mbs);
+        assert!(a.dss >= 1 && a.dss <= dss_max, "dss {} of {dss_max}", a.dss);
+        // Never overshoot the target (within fp slop) — except at the
+        // minimum feasible allocation (one sample still too slow).
+        assert!(
+            a.modeled <= t_target * (1.0 + 1e-9) || a.dss == 1,
+            "k={k} t={t_target}: modeled {} > target at dss {}",
+            a.modeled,
+            a.dss
+        );
+        // Maximality: one more sample at the same MBS would overshoot,
+        // unless we're pinned at the memory cap.
+        if a.dss < dss_max {
+            assert!(
+                modeled_time(k, epochs, a.dss + 1, a.mbs) > t_target,
+                "k={k} t={t_target}: not maximal"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_search_monotone_in_k() {
+    // Slower node (bigger K) must never get a larger step budget.
+    forall(200, |rng| {
+        let t = rng.uniform(1.0, 20.0);
+        let k1 = rng.uniform(0.005, 0.2);
+        let k2 = k1 * rng.uniform(1.1, 8.0);
+        let a1 = dual_binary_search(k1, 1, t, 50_000, &MBS_DOMAIN);
+        let a2 = dual_binary_search(k2, 1, t, 50_000, &MBS_DOMAIN);
+        let steps1 = a1.dss as f64 / a1.mbs as f64;
+        let steps2 = a2.dss as f64 / a2.mbs as f64;
+        assert!(
+            steps2 <= steps1 * 1.01,
+            "k {k1}->{k2}: steps {steps1} -> {steps2}"
+        );
+    });
+}
+
+// ----------------------------------------------------------------- GUP
+
+#[test]
+fn prop_gup_push_iff_z_leq_alpha_vs_oracle() {
+    // Replay random loss sequences; recompute the z-score decision with
+    // an independent oracle over the same sliding window.
+    forall(200, |rng| {
+        let w = 3 + rng.next_below(10) as usize;
+        let alpha = -rng.uniform(0.3, 2.0);
+        let mut gup = Gup::new(w, alpha, 0.0, usize::MAX / 2, true);
+        let mut window: Vec<f64> = Vec::new();
+        let mut loss = rng.uniform(1.0, 3.0);
+        for _ in 0..120 {
+            loss = (loss + rng.normal() * 0.1).max(0.01);
+            let d = gup.observe(loss);
+            if window.len() >= w {
+                let z = stats::z_score(loss, &window[window.len() - w..]);
+                let want = matches!(z, Some(z) if z <= alpha);
+                assert_eq!(d.push, want, "w={w} alpha={alpha}");
+            } else {
+                assert!(!d.push, "pushed during warmup");
+            }
+            window.push(loss);
+        }
+    });
+}
+
+#[test]
+fn prop_gup_alpha_stays_in_range() {
+    forall(200, |rng| {
+        let alpha0 = -rng.uniform(0.3, 2.5);
+        let beta = rng.uniform(0.0, 0.3);
+        let lambda = 1 + rng.next_below(6) as usize;
+        let relax = rng.next_below(2) == 0;
+        let mut gup = Gup::new(8, alpha0, beta, lambda, relax);
+        let mut loss = 2.0;
+        for _ in 0..300 {
+            loss = (loss + rng.normal() * 0.05 - 0.002).max(0.01);
+            gup.observe(loss);
+            if relax {
+                assert!(gup.alpha >= alpha0 - 1e-9, "relaxed below α₀");
+                assert!(gup.alpha <= -0.05 + 1e-9, "relaxed past the cap");
+            } else {
+                assert!(gup.alpha <= alpha0 + 1e-9, "tighten mode rose");
+            }
+        }
+    });
+}
+
+// ------------------------------------------------------------ PS state
+
+fn rand_params(rng: &mut Xoshiro256pp, n: usize) -> ParamVec {
+    ParamVec {
+        tensors: vec![Tensor::new(
+            vec![n],
+            (0..n).map(|_| rng.normal() as f32).collect(),
+        )],
+    }
+}
+
+#[test]
+fn prop_ps_params_always_w0_minus_eta_sigma() {
+    // After any sequence of loss-based pushes, the PS invariant
+    // params = w₀ − η·ς must hold exactly (DESIGN.md §7).
+    use hermes_dml::data::{DataKind, Dataset, Probe};
+    use hermes_dml::runtime::{MockRuntime, ModelRuntime};
+
+    let mut rt = MockRuntime::new();
+    let ds = Dataset::synth(DataKind::MockSet, 400, 5);
+    let (_, test) = ds.split(0.7, 5);
+    let probe = Probe::build(&ds, &test, rt.meta().eval_batch, 5);
+    let dim = rt.meta().param_count;
+
+    forall(25, |rng| {
+        let mut w0 = rand_params(rng, dim);
+        // Reshape into the mock's two tensors.
+        let flat = w0.tensors.remove(0).into_data();
+        let w0 = ParamVec {
+            tensors: vec![
+                Tensor::new(vec![32, 10], flat[..320].to_vec()),
+                Tensor::new(vec![10], flat[320..330].to_vec()),
+            ],
+        };
+        let eta = rng.uniform(0.01, 0.5) as f32;
+        let mut ps = PsState::new(w0.clone(), eta);
+        for _ in 0..5 {
+            let mut g = ParamVec::zeros_like(&w0);
+            for t in &mut g.tensors {
+                for v in t.data_mut() {
+                    *v = rng.normal() as f32;
+                }
+            }
+            ps.loss_based_sgd(&g, 1.0, &mut rt, &probe).unwrap();
+            let sigma = ps.sigma.as_ref().unwrap();
+            let mut want = w0.clone();
+            want.axpy(-eta, sigma);
+            for (a, b) in ps
+                .params
+                .tensors
+                .iter()
+                .flat_map(|t| t.data())
+                .zip(want.tensors.iter().flat_map(|t| t.data()))
+            {
+                assert!((a - b).abs() <= 1e-5, "{a} vs {b}");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_weighted_sum_is_convex() {
+    forall(300, |rng| {
+        let n = 1 + rng.next_below(64) as usize;
+        let a = rand_params(rng, n);
+        let b = rand_params(rng, n);
+        let la = rng.uniform(0.01, 10.0) as f32;
+        let lb = rng.uniform(0.01, 10.0) as f32;
+        let (w1, w2) = (1.0 / la, 1.0 / lb);
+        let denom = w1 + w2;
+        let c = ParamVec::weighted_sum(&a, w1 / denom, &b, w2 / denom);
+        for ((x, y), z) in a.tensors[0]
+            .data()
+            .iter()
+            .zip(b.tensors[0].data())
+            .zip(c.tensors[0].data())
+        {
+            let lo = x.min(*y) - 1e-5;
+            let hi = x.max(*y) + 1e-5;
+            assert!(*z >= lo && *z <= hi, "{z} outside [{lo}, {hi}]");
+        }
+    });
+}
+
+// ------------------------------------------------------------- wire
+
+#[test]
+fn prop_wire_roundtrip_random_messages() {
+    forall(300, |rng| {
+        let n = 1 + rng.next_below(200) as usize;
+        let params = rand_params(rng, n);
+        let msg = match rng.next_below(4) {
+            0 => Message::Register {
+                worker: rng.next_below(1 << 20) as u32,
+                family: format!("fam-{}", rng.next_below(100)),
+            },
+            1 => Message::PushUpdate {
+                worker: rng.next_below(64) as u32,
+                iter: rng.next_u64(),
+                test_loss: rng.normal() as f32,
+                train_time: rng.uniform(0.0, 100.0),
+                grads: TensorPayload::new(params, false),
+            },
+            2 => Message::GlobalModel {
+                version: rng.next_u64(),
+                params: TensorPayload::new(params, false),
+            },
+            _ => Message::DatasetAssign {
+                dss: rng.next_below(1 << 20) as u32,
+                mbs: 1 << rng.next_below(9),
+                shard_seed: rng.next_u64(),
+                prefetch: rng.next_below(2) == 0,
+            },
+        };
+        let enc = msg.encode();
+        assert_eq!(enc.len(), msg.wire_size());
+        assert_eq!(Message::decode(&enc).unwrap(), msg);
+    });
+}
+
+// ---------------------------------------------------------------- sim
+
+#[test]
+fn prop_sim_queue_time_monotone_under_random_schedules() {
+    forall(200, |rng| {
+        let mut q = SimQueue::new();
+        for w in 0..5 {
+            q.push_in(rng.uniform(0.0, 10.0), Ev::TrainDone { worker: w });
+        }
+        let mut last = 0.0;
+        let mut n = 0;
+        while let Some((t, ev)) = q.pop() {
+            assert!(t >= last);
+            last = t;
+            n += 1;
+            if n < 200 && rng.next_below(3) > 0 {
+                q.push_in(rng.uniform(0.0, 5.0), ev);
+            }
+        }
+        assert!(n >= 5);
+    });
+}

@@ -1,0 +1,41 @@
+//! Live threaded TCP deployment: a real PS server + worker clients
+//! exchanging the binary wire protocol — Python-free request path.
+
+use std::time::Duration;
+
+use hermes_dml::config::RunConfig;
+use hermes_dml::live::run_live;
+
+#[test]
+fn live_cluster_trains_over_tcp() {
+    let mut cfg = RunConfig::new("mock", "hermes");
+    cfg.hp.lr = 0.5;
+    cfg.hp.alpha = -0.9;
+    cfg.hp.window = 6;
+    cfg.steps_cap = 2;
+    let report = run_live(&cfg, 4, Duration::from_millis(1500)).unwrap();
+
+    assert_eq!(report.workers, 4);
+    assert!(report.iterations > 20, "iterations {}", report.iterations);
+    assert!(report.pushes > 0, "GUP never fired over TCP");
+    assert_eq!(report.global_updates, report.pushes);
+    assert!(report.bytes_received > 0);
+    // Loss-based SGD must have produced a finite, improving model.
+    assert!(report.final_loss.is_finite());
+    assert!(
+        report.final_loss < 2.303,
+        "global model never improved: {}",
+        report.final_loss
+    );
+}
+
+#[test]
+fn live_cluster_single_worker_is_stable() {
+    let mut cfg = RunConfig::new("mock", "hermes");
+    cfg.hp.lr = 0.5;
+    cfg.hp.alpha = -0.5;
+    cfg.hp.window = 4;
+    let report = run_live(&cfg, 1, Duration::from_millis(600)).unwrap();
+    assert_eq!(report.workers, 1);
+    assert!(report.iterations > 0);
+}

@@ -1,0 +1,165 @@
+//! Cross-language contract test: the Rust PJRT runtime must reproduce
+//! the exact train-step outputs that `python/compile/aot.py` recorded
+//! in the golden fixtures (same HLO, same inputs ⇒ same numerics).
+//!
+//! Skipped (pass-with-note) when `make artifacts` hasn't been run.
+
+use std::path::{Path, PathBuf};
+
+use hermes_dml::runtime::{Manifest, ModelRuntime, XlaRuntime};
+use hermes_dml::tensor::{ParamVec, Tensor};
+use hermes_dml::util::json::Json;
+
+fn artifacts_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+struct Golden {
+    batch: usize,
+    lr: f32,
+    momentum: f32,
+    labels: Vec<i32>,
+    loss: f32,
+    correct: f32,
+    params: ParamVec,
+    x: Vec<f32>,
+    new_params: ParamVec,
+}
+
+fn load_golden(model: &str, shapes: &[Vec<usize>], input_elems: usize) -> Golden {
+    let dir = artifacts_dir();
+    let index_text =
+        std::fs::read_to_string(dir.join(format!("golden_{model}.json"))).unwrap();
+    let idx = Json::parse(&index_text).unwrap();
+    let blob_bytes =
+        std::fs::read(dir.join(idx.at("blob").unwrap().as_str().unwrap())).unwrap();
+    let blob: Vec<f32> = blob_bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+
+    let sections = idx.at("sections").unwrap().as_arr().unwrap();
+    let get = |tag: &str| -> &[f32] {
+        let s = sections
+            .iter()
+            .find(|s| s.at("tag").unwrap().as_str() == Some(tag))
+            .unwrap_or_else(|| panic!("missing section {tag}"));
+        let off = s.at("offset").unwrap().as_usize().unwrap();
+        let len = s.at("len").unwrap().as_usize().unwrap();
+        &blob[off..off + len]
+    };
+
+    let batch = idx.at("batch").unwrap().as_usize().unwrap();
+    let pv = |prefix: &str| ParamVec {
+        tensors: shapes
+            .iter()
+            .enumerate()
+            .map(|(i, s)| Tensor::new(s.clone(), get(&format!("{prefix}{i}")).to_vec()))
+            .collect(),
+    };
+    Golden {
+        batch,
+        lr: idx.at("lr").unwrap().as_f64().unwrap() as f32,
+        momentum: idx.at("momentum").unwrap().as_f64().unwrap() as f32,
+        labels: idx
+            .at("labels")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_f64().unwrap() as i32)
+            .collect(),
+        loss: idx.at("loss").unwrap().as_f64().unwrap() as f32,
+        correct: idx.at("correct").unwrap().as_f64().unwrap() as f32,
+        params: pv("param"),
+        x: {
+            let x = get("x");
+            assert_eq!(x.len(), batch * input_elems);
+            x.to_vec()
+        },
+        new_params: pv("new_param"),
+    }
+}
+
+fn check_model(model: &str) {
+    let dir = artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        return;
+    }
+    let manifest = Manifest::load(&dir).unwrap();
+    let arts = manifest.model(model).unwrap();
+    let g = load_golden(model, &arts.meta.param_shapes, arts.meta.input_elems());
+
+    let mut rt = XlaRuntime::from_artifacts(arts, Some(&[g.batch])).unwrap();
+    let mom = ParamVec::zeros_like(&g.params);
+    let out = rt
+        .train_step(&g.params, &mom, &g.x, &g.labels, g.batch, g.lr, g.momentum)
+        .unwrap();
+
+    assert!(
+        (out.loss - g.loss).abs() <= g.loss.abs() * 1e-4 + 1e-6,
+        "{model} loss {} vs golden {}",
+        out.loss,
+        g.loss
+    );
+    assert_eq!(out.correct, g.correct, "{model} correct");
+    for (i, (got, want)) in out
+        .params
+        .tensors
+        .iter()
+        .zip(&g.new_params.tensors)
+        .enumerate()
+    {
+        let mut max_err = 0f32;
+        for (a, b) in got.data().iter().zip(want.data()) {
+            max_err = max_err.max((a - b).abs() / (b.abs() + 1e-3));
+        }
+        assert!(max_err < 1e-3, "{model} param {i}: max rel err {max_err}");
+    }
+    assert_eq!(rt.exec_count(), 1);
+}
+
+#[test]
+fn golden_cnn_train_step_matches_python() {
+    check_model("cnn");
+}
+
+#[test]
+fn golden_alexnet_train_step_matches_python() {
+    check_model("alexnet");
+}
+
+#[test]
+fn eval_executable_runs_and_is_consistent_with_train_loss() {
+    let dir = artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts not built");
+        return;
+    }
+    let manifest = Manifest::load(&dir).unwrap();
+    let arts = manifest.model("cnn").unwrap();
+    let g = load_golden("cnn", &arts.meta.param_shapes, arts.meta.input_elems());
+    let mut rt = XlaRuntime::from_artifacts(arts, Some(&[16])).unwrap();
+
+    // Build an eval batch by tiling the golden batch to eval_batch.
+    let eb = rt.meta().eval_batch;
+    let elems = rt.meta().input_elems();
+    let mut x = Vec::with_capacity(eb * elems);
+    let mut y = Vec::with_capacity(eb);
+    for i in 0..eb {
+        let src = i % g.batch;
+        x.extend_from_slice(&g.x[src * elems..(src + 1) * elems]);
+        y.push(g.labels[src]);
+    }
+    let ev = rt.eval_step(&g.params, &x, &y).unwrap();
+    assert!(ev.loss.is_finite());
+    // The tiled batch is 8 copies of the golden batch ⇒ same mean loss.
+    assert!(
+        (ev.loss - g.loss).abs() <= 1e-3,
+        "eval loss {} vs train loss {}",
+        ev.loss,
+        g.loss
+    );
+    assert!((0.0..=eb as f32).contains(&ev.correct));
+}
