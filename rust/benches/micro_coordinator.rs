@@ -1,17 +1,27 @@
 //! Coordinator hot-path micro-benchmarks: the GUP gate, the dual binary
 //! search, the IQR rebalancing pass, PS aggregation algebra at real
-//! model sizes (110K and 995K params), wire codec and fp16 throughput.
+//! model sizes (110K and 995K params) — both the seed's allocating path
+//! and the pooled in-place path — plus wire codec and fp16 throughput.
+//!
+//! Writes `BENCH_micro.json` (override with `BENCH_OUT`) containing
+//! every sample plus the before/after speedups, so each PR records a
+//! perf-trajectory datapoint.  Run from the repo root via
+//! `scripts/bench.sh`.
+
+use std::path::Path;
 
 use hermes_dml::alloc::{dual_binary_search, rebalance_pass, Allocation, TimeMonitor, MBS_DOMAIN};
 use hermes_dml::bench_harness::Bench;
 use hermes_dml::gup::Gup;
-use hermes_dml::tensor::{ParamVec, Tensor};
+use hermes_dml::ps::PsState;
+use hermes_dml::tensor::{BufferPool, ParamVec, Tensor};
 use hermes_dml::util::f16;
+use hermes_dml::util::json::Json;
 use hermes_dml::util::rng::Xoshiro256pp;
 use hermes_dml::wire::{Message, TensorPayload};
 
-fn params_of(n: usize) -> ParamVec {
-    let mut rng = Xoshiro256pp::seed_from_u64(1);
+fn params_of(n: usize, seed: u64) -> ParamVec {
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
     ParamVec {
         tensors: vec![Tensor::new(
             vec![n],
@@ -48,17 +58,49 @@ fn main() {
 
     for (label, n) in [("cnn 110K", 109_378usize), ("alexnet 995K", 995_046)] {
         Bench::report_header(&format!("PS aggregation algebra ({label})"));
-        let a = params_of(n);
-        let bb = params_of(n);
+        let a = params_of(n, 1);
+        let bb = params_of(n, 2);
+        let mut pool = BufferPool::new();
+        let mut out = pool.acquire_like(&a);
+
         let mut acc = ParamVec::zeros_like(&a);
         b.run(&format!("axpy ({label})"), || {
             acc.axpy(0.5, &a);
         });
-        b.run(&format!("weighted_sum ({label})"), || {
+        // Allocating baselines (the seed's per-message path) vs the
+        // pooled in-place path — the ≥2x acceptance comparison.
+        b.run(&format!("weighted_sum alloc ({label})"), || {
             std::hint::black_box(ParamVec::weighted_sum(&a, 0.4, &bb, 0.6));
         });
-        b.run(&format!("delta_over_eta ({label})"), || {
+        b.run(&format!("weighted_sum_into pooled ({label})"), || {
+            ParamVec::weighted_sum_into(&a, 0.4, &bb, 0.6, &mut out);
+            std::hint::black_box(&out);
+        });
+        b.run(&format!("delta_over_eta alloc ({label})"), || {
             std::hint::black_box(a.delta_over_eta(&bb, 0.05));
+        });
+        b.run(&format!("delta_over_eta_into pooled ({label})"), || {
+            a.delta_over_eta_into(&bb, 0.05, &mut out);
+            std::hint::black_box(&out);
+        });
+
+        // Full 12-worker SyncSGD round: the seed allocated (and page-
+        // faulted) a fresh mean buffer every round; the pooled PsState
+        // reuses its scratch.
+        let grads: Vec<ParamVec> = (0..12).map(|i| params_of(n, 10 + i)).collect();
+        let mut ps = PsState::new(a.clone(), 0.05);
+        b.run(&format!("sync_sgd round alloc baseline ({label})"), || {
+            let mut mean = ParamVec::zeros_like(&ps.params);
+            let w = 1.0 / grads.len() as f32;
+            for g in &grads {
+                mean.axpy(w, g);
+            }
+            ps.params.axpy(-0.05, &mean);
+            std::hint::black_box(&ps.params);
+        });
+        b.run(&format!("sync_sgd round pooled ({label})"), || {
+            ps.sync_sgd(&grads);
+            std::hint::black_box(&ps.params);
         });
 
         Bench::report_header(&format!("wire codec ({label})"));
@@ -66,8 +108,13 @@ fn main() {
             version: 1,
             params: TensorPayload::new(a.clone(), false),
         };
-        b.run(&format!("encode f32 ({label})"), || {
+        b.run(&format!("encode f32 alloc ({label})"), || {
             std::hint::black_box(msg.encode());
+        });
+        let mut enc_buf: Vec<u8> = Vec::new();
+        b.run(&format!("encode f32 reused buffer ({label})"), || {
+            msg.encode_into(&mut enc_buf);
+            std::hint::black_box(&enc_buf);
         });
         let enc = msg.encode();
         b.run(&format!("decode f32 ({label})"), || {
@@ -77,12 +124,44 @@ fn main() {
             version: 1,
             params: TensorPayload::new(a.clone(), true),
         };
-        b.run(&format!("encode fp16 ({label})"), || {
-            std::hint::black_box(msg16.encode());
+        b.run(&format!("encode fp16 reused buffer ({label})"), || {
+            msg16.encode_into(&mut enc_buf);
+            std::hint::black_box(&enc_buf);
         });
         let data = a.tensors[0].data();
-        b.run(&format!("f16 codec roundtrip ({label})"), || {
-            std::hint::black_box(f16::decode_f16(&f16::encode_f16(data)));
+        let mut f16_buf: Vec<u8> = Vec::new();
+        let mut f32_buf: Vec<f32> = Vec::new();
+        b.run(&format!("f16 codec roundtrip into ({label})"), || {
+            f16::encode_f16_into(data, &mut f16_buf);
+            f16::decode_f16_into(&f16_buf, &mut f32_buf);
+            f16_buf.clear();
+            std::hint::black_box(&f32_buf);
         });
+        pool.release(out);
     }
+
+    // ---- JSON perf report with before/after speedups.
+    let mut extra: Vec<(String, Json)> = Vec::new();
+    for (key, base, new) in [
+        ("speedup_weighted_sum", "weighted_sum alloc", "weighted_sum_into pooled"),
+        ("speedup_delta_over_eta", "delta_over_eta alloc", "delta_over_eta_into pooled"),
+        ("speedup_sync_sgd_round", "sync_sgd round alloc baseline", "sync_sgd round pooled"),
+        ("speedup_encode_f32", "encode f32 alloc", "encode f32 reused buffer"),
+    ] {
+        for short in ["cnn 110K", "alexnet 995K"] {
+            let tag = if short.starts_with("cnn") { "cnn" } else { "alexnet" };
+            if let Some(sp) = b.speedup(&format!("{base} ({short})"), &format!("{new} ({short})"))
+            {
+                println!("{key}_{tag}: {sp:.2}x");
+                extra.push((format!("{key}_{tag}"), Json::Num(sp)));
+            }
+        }
+    }
+    let out_path =
+        std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_micro.json".to_string());
+    let extra_refs: Vec<(&str, Json)> =
+        extra.iter().map(|(k, v)| (k.as_str(), v.clone())).collect();
+    b.write_json(Path::new(&out_path), "micro_coordinator", extra_refs)
+        .expect("writing bench json");
+    println!("\nwrote {out_path}");
 }

@@ -50,8 +50,8 @@ fn main() {
     });
 
     let arts = Path::new("artifacts");
-    if !arts.join("manifest.json").exists() {
-        println!("(PJRT pass skipped: run `make artifacts`)");
+    if !arts.join("manifest.json").exists() || !cfg!(feature = "xla") {
+        println!("(PJRT pass skipped: run `make artifacts` and build with --features xla)");
         return;
     }
     let manifest = Manifest::load(arts).unwrap();

@@ -1,27 +1,65 @@
 //! Table III regeneration bench: end-to-end run of every framework
 //! (BSP/ASP/SSP/EBSP + three Hermes settings), timed, with the paper's
-//! columns printed.  Mock backend always; the real CNN backend runs
-//! when artifacts are present (skip with HERMES_BENCH_FAST=1).
+//! columns printed.  The sweep runs once sequentially and once on all
+//! cores (bit-identical rows; see `exp::sweep`) so the wall-time gain
+//! of the parallel runner is part of the recorded trajectory.
+//!
+//! Writes `BENCH_table3.json` (override with `BENCH_TABLE3_OUT`).
+//! Mock backend always; the real CNN backend runs when artifacts are
+//! present (skip with HERMES_BENCH_FAST=1).
 
 use std::path::Path;
 use std::time::Instant;
 
 use hermes_dml::bench_harness::Bench;
 use hermes_dml::exp;
+use hermes_dml::util::json::Json;
 
 fn main() {
     Bench::report_header("Table III end-to-end (mock backend)");
     let out = std::env::temp_dir().join("hermes_bench_table3");
+
     let t0 = Instant::now();
-    let rows = exp::table3(&out, "mock", Path::new("artifacts")).unwrap();
+    let rows_seq = exp::table3_with_threads(&out, "mock", Path::new("artifacts"), 1).unwrap();
+    let wall_seq = t0.elapsed().as_secs_f64();
     println!(
-        "table3[mock]: {} framework runs in {:.2}s wall",
-        rows.len(),
-        t0.elapsed().as_secs_f64()
+        "table3[mock, 1 thread ]: {} framework runs in {wall_seq:.2}s wall",
+        rows_seq.len()
     );
+
+    let threads = exp::sweep::default_threads(rows_seq.len());
+    let t0 = Instant::now();
+    let rows = exp::table3_with_threads(&out, "mock", Path::new("artifacts"), threads).unwrap();
+    let wall_par = t0.elapsed().as_secs_f64();
+    println!(
+        "table3[mock, {threads} threads]: {} framework runs in {wall_par:.2}s wall \
+         ({:.2}x vs sequential)",
+        rows.len(),
+        wall_seq / wall_par.max(1e-9)
+    );
+
+    // Determinism spot-check across schedules.
+    for (a, b) in rows_seq.iter().zip(&rows) {
+        assert_eq!(a.iterations, b.iterations, "{}", a.framework);
+        assert_eq!(a.virtual_time.to_bits(), b.virtual_time.to_bits(), "{}", a.framework);
+    }
+
+    let json = Json::obj(vec![
+        ("title", Json::Str("table3_end_to_end".to_string())),
+        ("threads", Json::Num(threads as f64)),
+        ("wall_s_sequential", Json::Num(wall_seq)),
+        ("wall_s_parallel", Json::Num(wall_par)),
+        ("sweep_speedup", Json::Num(wall_seq / wall_par.max(1e-9))),
+        ("rows", Json::Arr(rows.iter().map(|r| r.summary_json()).collect())),
+    ]);
+    let out_path = std::env::var("BENCH_TABLE3_OUT")
+        .unwrap_or_else(|_| "BENCH_table3.json".to_string());
+    std::fs::write(&out_path, json.to_string()).expect("writing bench json");
+    println!("wrote {out_path}");
 
     let artifacts = Path::new("artifacts");
     if artifacts.join("manifest.json").exists()
+        && cfg!(feature = "xla")
         && std::env::var("HERMES_BENCH_FAST").is_err()
     {
         Bench::report_header("Table III end-to-end (real CNN via PJRT)");
@@ -33,6 +71,8 @@ fn main() {
             t0.elapsed().as_secs_f64()
         );
     } else {
-        println!("(real-CNN pass skipped: artifacts missing or HERMES_BENCH_FAST set)");
+        println!(
+            "(real-CNN pass skipped: artifacts/xla feature missing or HERMES_BENCH_FAST set)"
+        );
     }
 }

@@ -1,8 +1,14 @@
 //! Micro-benchmark harness (substrate — criterion is unavailable
 //! offline).  Warmup + timed iterations with mean / p50 / p95 / p99 and
 //! a stable text report; used by every target under `rust/benches/`.
+//! [`Bench::write_json`] dumps the recorded results as a JSON report
+//! (`BENCH_micro.json` / `BENCH_table3.json` at the repository root) so
+//! every PR leaves a perf-trajectory datapoint behind.
 
+use std::path::Path;
 use std::time::Instant;
+
+use crate::util::json::Json;
 
 #[derive(Debug, Clone)]
 pub struct BenchResult {
@@ -17,6 +23,19 @@ pub struct BenchResult {
 }
 
 impl BenchResult {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("iters", Json::Num(self.iters as f64)),
+            ("mean_ns", Json::Num(self.mean_ns)),
+            ("p50_ns", Json::Num(self.p50_ns)),
+            ("p95_ns", Json::Num(self.p95_ns)),
+            ("p99_ns", Json::Num(self.p99_ns)),
+            ("min_ns", Json::Num(self.min_ns)),
+            ("max_ns", Json::Num(self.max_ns)),
+        ])
+    }
+
     pub fn line(&self) -> String {
         format!(
             "{:<44} {:>6} iters  mean {:>11}  p50 {:>11}  p95 {:>11}  p99 {:>11}",
@@ -121,6 +140,34 @@ impl Bench {
         &self.results
     }
 
+    /// Mean-time ratio `base / new` — how many times faster `new` ran
+    /// than `base`.  `None` if either name was never recorded.
+    pub fn speedup(&self, base: &str, new: &str) -> Option<f64> {
+        let mean = |name: &str| {
+            self.results.iter().find(|r| r.name == name).map(|r| r.mean_ns)
+        };
+        Some(mean(base)? / mean(new)?)
+    }
+
+    /// Write every recorded result (plus caller-derived entries such as
+    /// before/after speedups) as a JSON report.
+    pub fn write_json(
+        &self,
+        path: &Path,
+        title: &str,
+        extra: Vec<(&str, Json)>,
+    ) -> std::io::Result<()> {
+        let mut fields = vec![
+            ("title", Json::Str(title.to_string())),
+            (
+                "results",
+                Json::Arr(self.results.iter().map(|r| r.to_json()).collect()),
+            ),
+        ];
+        fields.extend(extra);
+        std::fs::write(path, Json::obj(fields).to_string())
+    }
+
     pub fn report_header(title: &str) {
         println!("\n=== {title} ===");
     }
@@ -144,6 +191,27 @@ mod tests {
         assert!(r.p50_ns <= r.p95_ns && r.p95_ns <= r.p99_ns);
         assert!(r.min_ns <= r.p50_ns && r.p99_ns <= r.max_ns);
         std::hint::black_box(acc);
+    }
+
+    #[test]
+    fn speedup_and_json_report() {
+        let mut b = Bench::new().with_budget(0.05).with_max_iters(6).with_warmup(1);
+        b.run("slow", || std::thread::sleep(std::time::Duration::from_micros(200)));
+        b.run("fast", || std::thread::sleep(std::time::Duration::from_micros(20)));
+        let sp = b.speedup("slow", "fast").unwrap();
+        assert!(sp > 1.0, "speedup {sp}");
+        assert!(b.speedup("slow", "nope").is_none());
+
+        let path = std::env::temp_dir().join("hermes_bench_json_test.json");
+        b.write_json(&path, "unit", vec![("speedup", Json::Num(sp))]).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let j = Json::parse(&text).unwrap();
+        assert_eq!(j.at("title").unwrap().as_str(), Some("unit"));
+        assert_eq!(j.at("results").unwrap().as_arr().unwrap().len(), 2);
+        assert_eq!(j.at("results/0/name").unwrap().as_str(), Some("slow"));
+        assert!(j.at("results/0/mean_ns").unwrap().as_f64().unwrap() > 0.0);
+        assert_eq!(j.at("speedup").unwrap().as_f64(), Some(sp));
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

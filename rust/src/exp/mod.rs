@@ -6,16 +6,23 @@
 //! `runtime` selects the compute backend: `mock` (host softmax
 //! regression — fast, artifact-free) or a real AOT model (`cnn`,
 //! `alexnet`) through the PJRT runtime.
+//!
+//! Seed×framework grids (`table3`, `fig14`, the Fig. 1 timeline set)
+//! fan out over all cores through [`sweep::run_sweep`] — one DES
+//! instance per job, results bit-identical to the sequential order.
+
+pub mod sweep;
 
 use std::path::Path;
 
 use anyhow::{bail, Result};
 
 use crate::config::{ClusterConfig, RunConfig};
-use crate::frameworks::{run_framework, run_framework_opts};
+use crate::frameworks::run_framework;
 use crate::metrics::{write_file, RunMetrics, TableFmt};
 use crate::runtime::{Manifest, MockRuntime, ModelRuntime, XlaRuntime};
 use crate::util::fmt_duration;
+use self::sweep::SweepJob;
 
 /// Build a runtime for `model` ("mock" or a manifest model name).
 pub fn make_runtime(model: &str, artifacts: &Path) -> Result<Box<dyn ModelRuntime>> {
@@ -69,16 +76,22 @@ pub fn scaled_cfg(model: &str, framework: &str) -> RunConfig {
 // ------------------------------------------------------------ Fig 1/10
 
 /// Fig. 1 + Fig. 10: train/comm/wait timelines for BSP, SSP, ASP, EBSP
-/// and Hermes on the contrived 4-worker cluster.
+/// and Hermes on the contrived 4-worker cluster (one parallel sweep).
 pub fn fig1_timelines(out: &Path, model: &str, artifacts: &Path) -> Result<()> {
+    let mut jobs = Vec::new();
     for fw in ["bsp", "ssp", "asp", "ebsp", "hermes"] {
         let mut cfg = scaled_cfg(model, fw);
         cfg.cluster = ClusterConfig::fig1_cluster();
         cfg.hp.ssp_staleness = 2;
         cfg.max_iters = 60;
         cfg.target_acc = 1.1; // never converge: we want the timeline
-        let rt = make_runtime(model, artifacts)?;
-        let run = run_framework_opts(cfg, rt, true)?;
+        let mut job = SweepJob::new(fw, cfg);
+        job.record_timeline = true;
+        jobs.push(job);
+    }
+    let runs = run_jobs(jobs, model, artifacts, 0)?;
+    for run in &runs {
+        let fw = run.framework.as_str();
         let name = if fw == "hermes" { "fig10_hermes" } else { "fig1" };
         write_file(out, &format!("{name}_{fw}.csv"), &run.segments_csv())?;
         println!(
@@ -89,6 +102,21 @@ pub fn fig1_timelines(out: &Path, model: &str, artifacts: &Path) -> Result<()> {
         );
     }
     Ok(())
+}
+
+/// Shared sweep entry: `threads == 0` means one per core.  The runtime
+/// factory is rebuilt per job inside its worker thread (`ModelRuntime`
+/// is not `Send`).
+fn run_jobs(
+    jobs: Vec<SweepJob>,
+    model: &str,
+    artifacts: &Path,
+    threads: usize,
+) -> Result<Vec<RunMetrics>> {
+    let threads = if threads == 0 { sweep::default_threads(jobs.len()) } else { threads };
+    let model = model.to_string();
+    let artifacts = artifacts.to_path_buf();
+    sweep::run_sweep(jobs, threads, move |_job| make_runtime(&model, &artifacts))
 }
 
 // --------------------------------------------------------------- Fig 2
@@ -317,16 +345,19 @@ pub fn fig13_major_updates(out: &Path, model: &str, artifacts: &Path) -> Result<
 // -------------------------------------------------------------- Fig 14
 
 /// Fig. 14: α/β sensitivity — push frequency and final accuracy for
-/// the paper's three (α, β) settings.
+/// the paper's three (α, β) settings, swept in parallel.
 pub fn fig14_alpha_beta(out: &Path, model: &str, artifacts: &Path) -> Result<()> {
     let settings = [(-0.9, 0.1), (-1.3, 0.1), (-1.6, 0.15)];
-    let mut csv = String::from("alpha,beta,pushes,iterations,final_acc,api_calls\n");
+    let mut jobs = Vec::new();
     for (alpha, beta) in settings {
         let mut cfg = scaled_cfg(model, "hermes");
         cfg.hp.alpha = alpha;
         cfg.hp.beta = beta;
-        let rt = make_runtime(model, artifacts)?;
-        let run = run_framework(cfg, rt)?;
+        jobs.push(SweepJob::new(format!("hermes(α={alpha},β={beta})"), cfg));
+    }
+    let runs = run_jobs(jobs, model, artifacts, 0)?;
+    let mut csv = String::from("alpha,beta,pushes,iterations,final_acc,api_calls\n");
+    for ((alpha, beta), run) in settings.iter().zip(&runs) {
         csv += &format!(
             "{alpha},{beta},{},{},{:.4},{}\n",
             run.total_pushes(),
@@ -347,12 +378,24 @@ pub fn fig14_alpha_beta(out: &Path, model: &str, artifacts: &Path) -> Result<()>
 // ------------------------------------------------------------- Table 3
 
 /// Table III: every framework on one model, with iterations, virtual
-/// time, WI, accuracy, API calls and speedup vs BSP.
+/// time, WI, accuracy, API calls and speedup vs BSP.  Rows run as one
+/// parallel sweep (one core per framework).
 pub fn table3(out: &Path, model: &str, artifacts: &Path) -> Result<Vec<RunMetrics>> {
-    let mut rows: Vec<RunMetrics> = Vec::new();
-    let mut configs: Vec<(String, RunConfig)> = Vec::new();
+    table3_with_threads(out, model, artifacts, 0)
+}
+
+/// [`table3`] with an explicit sweep width: `0` = one thread per core,
+/// `1` = the sequential reference path (bit-identical results either
+/// way; see `exp::sweep`).
+pub fn table3_with_threads(
+    out: &Path,
+    model: &str,
+    artifacts: &Path,
+    threads: usize,
+) -> Result<Vec<RunMetrics>> {
+    let mut jobs: Vec<SweepJob> = Vec::new();
     for fw in ["bsp", "asp", "ssp", "ebsp"] {
-        configs.push((fw.to_string(), scaled_cfg(model, fw)));
+        jobs.push(SweepJob::new(fw, scaled_cfg(model, fw)));
     }
     // The paper's three Hermes settings on the IID model, one on the
     // non-IID model.
@@ -365,15 +408,10 @@ pub fn table3(out: &Path, model: &str, artifacts: &Path) -> Result<Vec<RunMetric
         let mut cfg = scaled_cfg(model, "hermes");
         cfg.hp.alpha = alpha;
         cfg.hp.beta = beta;
-        configs.push((format!("hermes(α={alpha},β={beta})"), cfg));
+        jobs.push(SweepJob::new(format!("hermes(α={alpha},β={beta})"), cfg));
     }
 
-    for (label, cfg) in configs {
-        let rt = make_runtime(model, artifacts)?;
-        let mut run = run_framework(cfg, rt)?;
-        run.framework = label;
-        rows.push(run);
-    }
+    let rows = run_jobs(jobs, model, artifacts, threads)?;
 
     let baseline = rows[0].clone(); // BSP
     let mut table = TableFmt::new(&[

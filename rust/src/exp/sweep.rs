@@ -1,0 +1,175 @@
+//! Scoped-thread parallel sweep runner: one deterministic DES instance
+//! per seed×framework job, fanned out over the machine's cores
+//! (std-only — `std::thread::scope`, no rayon offline).
+//!
+//! Determinism: every job is a pure function of its [`RunConfig`] — it
+//! owns a private runtime, RNG streams, event queue and metrics — so
+//! running jobs concurrently and slotting results back by job index is
+//! **bit-identical** to running them sequentially (asserted by
+//! `parallel_sweep_matches_sequential_bitwise` below).  Only
+//! `sim_wall_time` (real wall clock) differs between schedules.
+//!
+//! Runtimes are constructed *inside* the worker thread via the
+//! `make_rt` factory because [`ModelRuntime`] boxes are deliberately
+//! not `Send` (the PJRT client wrapper is `Rc`-based); each thread owns
+//! its runtime end to end.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use anyhow::Result;
+
+use crate::config::RunConfig;
+use crate::frameworks::run_framework_opts;
+use crate::metrics::RunMetrics;
+use crate::runtime::ModelRuntime;
+
+/// One unit of a sweep: a labelled run configuration.
+pub struct SweepJob {
+    /// Reported as `RunMetrics::framework` in the result row.
+    pub label: String,
+    pub cfg: RunConfig,
+    /// Record Fig. 1-style timeline segments (costs memory; off for
+    /// table sweeps).
+    pub record_timeline: bool,
+}
+
+impl SweepJob {
+    pub fn new(label: impl Into<String>, cfg: RunConfig) -> SweepJob {
+        SweepJob { label: label.into(), cfg, record_timeline: false }
+    }
+}
+
+/// Default worker-thread count for `jobs` parallel jobs: one per
+/// available core, capped at the job count.
+pub fn default_threads(jobs: usize) -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .clamp(1, jobs.max(1))
+}
+
+/// Run every job and return results in job order.
+///
+/// `threads == 1` is the sequential reference path; anything larger
+/// fans jobs out over scoped threads pulling from a shared work index.
+/// The first job error (in job order) is returned after all threads
+/// finish.
+pub fn run_sweep<F>(jobs: Vec<SweepJob>, threads: usize, make_rt: F) -> Result<Vec<RunMetrics>>
+where
+    F: Fn(&SweepJob) -> Result<Box<dyn ModelRuntime>> + Sync,
+{
+    let n = jobs.len();
+    if n == 0 {
+        return Ok(Vec::new());
+    }
+    let run_one = |job: &SweepJob| -> Result<RunMetrics> {
+        let rt = make_rt(job)?;
+        let mut run = run_framework_opts(job.cfg.clone(), rt, job.record_timeline)?;
+        run.framework = job.label.clone();
+        Ok(run)
+    };
+
+    let threads = threads.clamp(1, n);
+    if threads == 1 {
+        return jobs.iter().map(|job| run_one(job)).collect();
+    }
+
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<Result<RunMetrics>>>> =
+        (0..n).map(|_| Mutex::new(None)).collect();
+    let jobs = &jobs;
+    let run_one = &run_one;
+    let slots_ref = &slots;
+    let next_ref = &next;
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(move || loop {
+                let i = next_ref.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let res = run_one(&jobs[i]);
+                *slots_ref[i].lock().unwrap() = Some(res);
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|slot| slot.into_inner().unwrap().expect("sweep job not executed"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::MockRuntime;
+
+    fn jobs() -> Vec<SweepJob> {
+        crate::frameworks::ALL
+            .iter()
+            .map(|fw| {
+                let mut cfg = crate::exp::scaled_cfg("mock", fw);
+                cfg.max_iters = 120;
+                cfg.target_acc = 0.88;
+                SweepJob::new(*fw, cfg)
+            })
+            .collect()
+    }
+
+    fn mock_rt(_job: &SweepJob) -> Result<Box<dyn ModelRuntime>> {
+        Ok(Box::new(MockRuntime::new()))
+    }
+
+    #[test]
+    fn parallel_sweep_matches_sequential_bitwise() {
+        let seq = run_sweep(jobs(), 1, mock_rt).unwrap();
+        let par = run_sweep(jobs(), 4, mock_rt).unwrap();
+        assert_eq!(seq.len(), par.len());
+        for (a, b) in seq.iter().zip(&par) {
+            assert_eq!(a.framework, b.framework);
+            assert_eq!(a.iterations, b.iterations, "{}", a.framework);
+            assert_eq!(
+                a.virtual_time.to_bits(),
+                b.virtual_time.to_bits(),
+                "{}",
+                a.framework
+            );
+            assert_eq!(
+                a.final_accuracy.to_bits(),
+                b.final_accuracy.to_bits(),
+                "{}",
+                a.framework
+            );
+            assert_eq!(a.final_loss.to_bits(), b.final_loss.to_bits());
+            assert_eq!(a.api_calls, b.api_calls, "{}", a.framework);
+            assert_eq!(a.bytes, b.bytes, "{}", a.framework);
+            assert_eq!(a.global_updates, b.global_updates);
+            assert_eq!(a.curve, b.curve, "{}", a.framework);
+            assert_eq!(a.converged, b.converged);
+        }
+    }
+
+    #[test]
+    fn results_preserve_job_order_and_labels() {
+        let out = run_sweep(jobs(), 3, mock_rt).unwrap();
+        let labels: Vec<&str> = out.iter().map(|r| r.framework.as_str()).collect();
+        assert_eq!(labels, crate::frameworks::ALL.to_vec());
+    }
+
+    #[test]
+    fn empty_sweep_is_fine_and_errors_propagate() {
+        assert!(run_sweep(Vec::new(), 4, mock_rt).unwrap().is_empty());
+        let mut bad = jobs();
+        bad[2].cfg.framework = "nope".into();
+        let err = run_sweep(bad, 4, mock_rt).unwrap_err();
+        assert!(err.to_string().contains("unknown framework"), "{err}");
+    }
+
+    #[test]
+    fn default_threads_is_positive_and_capped() {
+        assert!(default_threads(0) >= 1);
+        assert!(default_threads(1) == 1);
+        assert!(default_threads(64) >= 1);
+    }
+}

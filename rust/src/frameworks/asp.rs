@@ -14,6 +14,9 @@ use crate::tensor::ParamVec;
 pub fn run(env: &mut SimEnv) -> Result<()> {
     let n = env.n_workers();
     let mut pending_grad: Vec<Option<ParamVec>> = vec![None; n];
+    // Snapshot scratch, leased once; gradient buffers cycle through the
+    // pool (acquired at train start, released after aggregation).
+    let mut before = env.pool.acquire_like(&env.ps.params);
     let mut stopping = false;
 
     // Bootstrap: model + dataset to every worker, then first iteration.
@@ -21,7 +24,7 @@ pub fn run(env: &mut SimEnv) -> Result<()> {
     for w in 0..n {
         let dss = env.workers[w].dss;
         let comm = env.transfer(w, model_b) + env.transfer(w, env.dataset_bytes(dss));
-        env.workers[w].adopt_global(&env.ps.params.clone(), env.ps.version);
+        env.workers[w].adopt_global(&env.ps.params, env.ps.version);
         env.queue.push_at(comm, Ev::Tag { worker: w, tag: START });
     }
 
@@ -31,7 +34,7 @@ pub fn run(env: &mut SimEnv) -> Result<()> {
         }
         match ev {
             Ev::Tag { worker: w, tag: START } => {
-                start_iteration(env, w, &mut pending_grad, t)?;
+                start_iteration(env, w, &mut pending_grad, &mut before, t)?;
             }
             Ev::TrainDone { worker: w } => {
                 // Push this iteration's gradient to the PS.
@@ -43,6 +46,7 @@ pub fn run(env: &mut SimEnv) -> Result<()> {
             Ev::ArriveAtPs { worker: w } => {
                 let g = pending_grad[w].take().expect("push without gradient");
                 env.ps.async_sgd(&g);
+                env.pool.release(g);
                 if env.ps.updates % env.cfg.global_eval_every as u64 == 0
                     && env.eval_global_and_check()?
                 {
@@ -54,17 +58,17 @@ pub fn run(env: &mut SimEnv) -> Result<()> {
                 env.queue.push_in(d, Ev::ArriveAtWorker { worker: w });
             }
             Ev::ArriveAtWorker { worker: w } => {
-                env.workers[w]
-                    .adopt_global(&env.ps.params.clone(), env.ps.version);
+                env.workers[w].adopt_global(&env.ps.params, env.ps.version);
                 if env.iterations_exhausted() {
                     stopping = true;
                     continue;
                 }
-                start_iteration(env, w, &mut pending_grad, t)?;
+                start_iteration(env, w, &mut pending_grad, &mut before, t)?;
             }
             _ => {}
         }
     }
+    env.pool.release(before);
     Ok(())
 }
 
@@ -74,12 +78,16 @@ fn start_iteration(
     env: &mut SimEnv,
     w: usize,
     pending_grad: &mut [Option<ParamVec>],
+    before: &mut ParamVec,
     t: f64,
 ) -> Result<()> {
-    let before = env.workers[w].state.params.clone();
+    before.copy_from(&env.workers[w].state.params);
     let (_out, dur) = env.run_local_iteration(w)?;
-    pending_grad[w] =
-        Some(before.delta_over_eta(&env.workers[w].state.params, env.cfg.hp.lr));
+    let mut g = pending_grad[w]
+        .take()
+        .unwrap_or_else(|| env.pool.acquire_like(&env.ps.params));
+    before.delta_over_eta_into(&env.workers[w].state.params, env.cfg.hp.lr, &mut g);
+    pending_grad[w] = Some(g);
     env.segment(w, t, t + dur, SegmentKind::Train);
     env.queue.push_in(dur, Ev::TrainDone { worker: w });
     Ok(())

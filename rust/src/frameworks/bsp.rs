@@ -12,6 +12,10 @@ use crate::tensor::ParamVec;
 
 pub fn run(env: &mut SimEnv) -> Result<()> {
     let eta = env.cfg.hp.lr;
+    // Round-scoped scratch leased once and reused every round: the
+    // pre-iteration parameter snapshot and the per-worker gradients.
+    let mut before = env.pool.acquire_like(&env.ps.params);
+    let mut grads: Vec<ParamVec> = Vec::with_capacity(env.n_workers());
     loop {
         let t0 = env.queue.now();
         let active = env.cluster.active_ids();
@@ -28,18 +32,19 @@ pub fn run(env: &mut SimEnv) -> Result<()> {
                 env.transfer(w, model_b) + env.transfer(w, env.dataset_bytes(dss));
             starts[w] = t0 + comm;
             env.segment(w, t0, starts[w], SegmentKind::Comm);
-            env.workers[w].adopt_global(&env.ps.params.clone(), env.ps.version);
+            env.workers[w].adopt_global(&env.ps.params, env.ps.version);
         }
 
         // Local compute (real XLA steps; virtual duration via Eq. 3).
         let mut finishes = vec![0.0; env.n_workers()];
-        let mut grads: Vec<ParamVec> = Vec::with_capacity(active.len());
         for &w in &active {
-            let before = env.workers[w].state.params.clone();
+            before.copy_from(&env.workers[w].state.params);
             let (_out, dur) = env.run_local_iteration(w)?;
             finishes[w] = starts[w] + dur;
             env.segment(w, starts[w], finishes[w], SegmentKind::Train);
-            grads.push(before.delta_over_eta(&env.workers[w].state.params, eta));
+            let mut g = env.pool.acquire_like(&env.ps.params);
+            before.delta_over_eta_into(&env.workers[w].state.params, eta, &mut g);
+            grads.push(g);
         }
 
         // Barrier: wait for the straggler.
@@ -60,10 +65,14 @@ pub fn run(env: &mut SimEnv) -> Result<()> {
         env.queue.advance_to(ps_ready);
 
         env.ps.sync_sgd(&grads);
+        for g in grads.drain(..) {
+            env.pool.release(g);
+        }
         if env.eval_global_and_check()? || env.iterations_exhausted() {
             break;
         }
     }
+    env.pool.release(before);
     Ok(())
 }
 

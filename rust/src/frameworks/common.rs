@@ -17,6 +17,7 @@ use crate::net::SimNet;
 use crate::ps::PsState;
 use crate::runtime::{init_params, ModelRuntime};
 use crate::sim::SimQueue;
+use crate::tensor::BufferPool;
 use crate::worker::WorkerCore;
 
 /// Default synthetic-dataset size (train+test pool).
@@ -39,6 +40,12 @@ pub struct SimEnv {
     pub run: RunMetrics,
     pub rt: Box<dyn ModelRuntime>,
     pub record_timeline: bool,
+    /// Scratch [`ParamVec`] buffers shared by the drivers: gradients
+    /// and snapshots are leased here instead of cloned per message, so
+    /// steady-state aggregation rounds allocate nothing (DESIGN.md §8).
+    ///
+    /// [`ParamVec`]: crate::tensor::ParamVec
+    pub pool: BufferPool,
     /// Current allocation per worker (for the rebalancer).
     pub allocs: Vec<Allocation>,
     /// Best accuracy seen + evals since improvement (patience stop).
@@ -120,6 +127,7 @@ impl SimEnv {
             run,
             rt,
             record_timeline: false,
+            pool: BufferPool::new(),
             allocs,
             best_acc: 0.0,
             stale_evals: 0,

@@ -58,6 +58,9 @@ pub fn run(env: &mut SimEnv) -> Result<()> {
     }
 
     // ---- Elastic rounds.
+    // Pool-leased round scratch (snapshot + per-worker gradients).
+    let mut before = env.pool.acquire_like(&env.ps.params);
+    let mut grads: Vec<ParamVec> = Vec::with_capacity(n);
     loop {
         let t0 = env.queue.now();
         let active = env.cluster.active_ids();
@@ -68,7 +71,7 @@ pub fn run(env: &mut SimEnv) -> Result<()> {
         for &w in &active {
             let comm = env.transfer(w, model_b);
             starts[w] = t0 + comm;
-            env.workers[w].adopt_global(&env.ps.params.clone(), env.ps.version);
+            env.workers[w].adopt_global(&env.ps.params, env.ps.version);
         }
 
         // Choose the barrier: candidates are each worker's k-th finish
@@ -110,9 +113,8 @@ pub fn run(env: &mut SimEnv) -> Result<()> {
 
         // Workers run as many local iterations as fit before the
         // barrier (real compute per iteration), then wait.
-        let mut grads: Vec<ParamVec> = Vec::new();
         for &w in &active {
-            let before = env.workers[w].state.params.clone();
+            before.copy_from(&env.workers[w].state.params);
             let mut t = starts[w];
             let mut ran = 0;
             loop {
@@ -127,7 +129,9 @@ pub fn run(env: &mut SimEnv) -> Result<()> {
                 }
             }
             env.charge_wait(w, barrier - t, t);
-            grads.push(before.delta_over_eta(&env.workers[w].state.params, eta));
+            let mut g = env.pool.acquire_like(&env.ps.params);
+            before.delta_over_eta_into(&env.workers[w].state.params, eta, &mut g);
+            grads.push(g);
         }
 
         // Push + aggregate.
@@ -140,10 +144,14 @@ pub fn run(env: &mut SimEnv) -> Result<()> {
         }
         env.queue.advance_to(ps_ready);
         env.ps.sync_sgd(&grads);
+        for g in grads.drain(..) {
+            env.pool.release(g);
+        }
         if env.eval_global_and_check()? || env.iterations_exhausted() {
             break;
         }
     }
+    env.pool.release(before);
     Ok(())
 }
 

@@ -45,12 +45,15 @@ pub fn run(env: &mut SimEnv) -> Result<()> {
         })
         .collect();
 
+    // Pool-leased scratch for the Alg. 2 cumulative gradient G.
+    let mut g_scratch = env.pool.acquire_like(&env.ps.params);
+
     // Bootstrap: model + dataset to everyone.
     let model_b = env.model_bytes();
     for w in 0..n {
         let dss = env.workers[w].dss;
         let comm = env.transfer(w, model_b) + env.transfer(w, env.dataset_bytes(dss));
-        env.workers[w].adopt_global(&env.ps.params.clone(), env.ps.version);
+        env.workers[w].adopt_global(&env.ps.params, env.ps.version);
         env.queue.push_at(comm, Ev::Tag { worker: w, tag: START });
     }
 
@@ -86,11 +89,12 @@ pub fn run(env: &mut SimEnv) -> Result<()> {
                 }
             }
             Ev::ArriveAtPs { worker: w } => {
-                // Heartbeat already recorded; run Alg. 2.
-                let g = env.workers[w].cumulative_g(&env.ps.w0, eta);
+                // Heartbeat already recorded; run Alg. 2 over the
+                // reused G buffer (no per-push allocation).
+                env.workers[w].cumulative_g_into(&env.ps.w0, eta, &mut g_scratch);
                 let t_w = env.workers[w].last_loss;
                 env.ps
-                    .loss_based_sgd(&g, t_w, env.rt.as_mut(), &env.probe)?;
+                    .loss_based_sgd(&g_scratch, t_w, env.rt.as_mut(), &env.probe)?;
                 // Alg. 2's eval already refreshed loss/acc — record it.
                 let now = env.queue.now();
                 env.run
@@ -146,8 +150,7 @@ pub fn run(env: &mut SimEnv) -> Result<()> {
                 env.queue.push_in(d, Ev::ArriveAtWorker { worker: w });
             }
             Ev::ArriveAtWorker { worker: w } => {
-                env.workers[w]
-                    .adopt_global(&env.ps.params.clone(), env.ps.version);
+                env.workers[w].adopt_global(&env.ps.params, env.ps.version);
                 if env.iterations_exhausted() {
                     stopping = true;
                     continue;
@@ -160,6 +163,7 @@ pub fn run(env: &mut SimEnv) -> Result<()> {
             Ev::Tag { .. } => {}
         }
     }
+    env.pool.release(g_scratch);
     Ok(())
 }
 

@@ -40,22 +40,26 @@ pub fn run(env: &mut SimEnv) -> Result<()> {
         let dss = env.workers[w].dss;
         let comm = env.transfer(w, model_b) + env.transfer(w, env.dataset_bytes(dss));
         ready[w] = t0 + comm;
-        env.workers[w].adopt_global(&env.ps.params.clone(), env.ps.version);
+        env.workers[w].adopt_global(&env.ps.params, env.ps.version);
     }
 
+    // Pool-leased round scratch (snapshot + per-worker gradients).
+    let mut before = env.pool.acquire_like(&env.ps.params);
+    let mut grads: Vec<ParamVec> = Vec::with_capacity(n);
     loop {
         // One local iteration everywhere; measure relative change.
         let mut finishes = vec![0.0; n];
         let mut rels = vec![0.0f64; n];
-        let mut grads: Vec<ParamVec> = Vec::with_capacity(n);
         for w in 0..n {
-            let before = env.workers[w].state.params.clone();
+            before.copy_from(&env.workers[w].state.params);
             let (_out, dur) = env.run_local_iteration(w)?;
             finishes[w] = ready[w] + dur;
             env.segment(w, ready[w], finishes[w], SegmentKind::Train);
             rels[w] =
                 ParamVec::relative_change(&env.workers[w].state.params, &before);
-            grads.push(before.delta_over_eta(&env.workers[w].state.params, eta));
+            let mut g = env.pool.acquire_like(&env.ps.params);
+            before.delta_over_eta_into(&env.workers[w].state.params, eta, &mut g);
+            grads.push(g);
         }
 
         let sync_round = rels.iter().any(|&r| r > delta);
@@ -72,18 +76,23 @@ pub fn run(env: &mut SimEnv) -> Result<()> {
             }
             env.queue.advance_to(ps_ready);
             env.ps.sync_sgd(&grads);
+            for g in grads.drain(..) {
+                env.pool.release(g);
+            }
             let t1 = env.queue.now();
             for w in 0..n {
                 let comm = env.transfer(w, model_b);
                 ready[w] = t1 + comm;
-                env.workers[w]
-                    .adopt_global(&env.ps.params.clone(), env.ps.version);
+                env.workers[w].adopt_global(&env.ps.params, env.ps.version);
             }
             if env.eval_global_and_check()? {
                 break;
             }
         } else {
             // Local round: no communication, everyone proceeds.
+            for g in grads.drain(..) {
+                env.pool.release(g);
+            }
             for w in 0..n {
                 ready[w] = finishes[w];
             }
@@ -97,6 +106,7 @@ pub fn run(env: &mut SimEnv) -> Result<()> {
             break;
         }
     }
+    env.pool.release(before);
     Ok(())
 }
 

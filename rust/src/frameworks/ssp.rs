@@ -15,6 +15,8 @@ pub fn run(env: &mut SimEnv) -> Result<()> {
     let s = env.cfg.hp.ssp_staleness as u64;
     let n = env.n_workers();
     let mut pending_grad: Vec<Option<ParamVec>> = vec![None; n];
+    // Pool-leased snapshot scratch (see the ASP driver).
+    let mut before = env.pool.acquire_like(&env.ps.params);
     // iteration clock per worker
     let mut clock: Vec<u64> = vec![0; n];
     // workers currently blocked on the staleness bound, with the time
@@ -26,7 +28,7 @@ pub fn run(env: &mut SimEnv) -> Result<()> {
     for w in 0..n {
         let dss = env.workers[w].dss;
         let comm = env.transfer(w, model_b) + env.transfer(w, env.dataset_bytes(dss));
-        env.workers[w].adopt_global(&env.ps.params.clone(), env.ps.version);
+        env.workers[w].adopt_global(&env.ps.params, env.ps.version);
         env.queue.push_at(comm, Ev::Tag { worker: w, tag: START });
     }
 
@@ -36,7 +38,7 @@ pub fn run(env: &mut SimEnv) -> Result<()> {
         }
         match ev {
             Ev::Tag { worker: w, tag: START } => {
-                start_iteration(env, w, &mut pending_grad, t)?;
+                start_iteration(env, w, &mut pending_grad, &mut before, t)?;
             }
             Ev::TrainDone { worker: w } => {
                 clock[w] += 1;
@@ -48,6 +50,7 @@ pub fn run(env: &mut SimEnv) -> Result<()> {
             Ev::ArriveAtPs { worker: w } => {
                 let g = pending_grad[w].take().expect("push without gradient");
                 env.ps.async_sgd(&g);
+                env.pool.release(g);
                 if env.ps.updates % env.cfg.global_eval_every as u64 == 0
                     && env.eval_global_and_check()?
                 {
@@ -70,8 +73,7 @@ pub fn run(env: &mut SimEnv) -> Result<()> {
                 }
             }
             Ev::ArriveAtWorker { worker: w } => {
-                env.workers[w]
-                    .adopt_global(&env.ps.params.clone(), env.ps.version);
+                env.workers[w].adopt_global(&env.ps.params, env.ps.version);
                 if env.iterations_exhausted() {
                     stopping = true;
                     continue;
@@ -81,12 +83,13 @@ pub fn run(env: &mut SimEnv) -> Result<()> {
                     // Too far ahead: block until the laggards catch up.
                     blocked[w] = Some(t);
                 } else {
-                    start_iteration(env, w, &mut pending_grad, t)?;
+                    start_iteration(env, w, &mut pending_grad, &mut before, t)?;
                 }
             }
             _ => {}
         }
     }
+    env.pool.release(before);
     Ok(())
 }
 
@@ -94,12 +97,16 @@ fn start_iteration(
     env: &mut SimEnv,
     w: usize,
     pending_grad: &mut [Option<ParamVec>],
+    before: &mut ParamVec,
     t: f64,
 ) -> Result<()> {
-    let before = env.workers[w].state.params.clone();
+    before.copy_from(&env.workers[w].state.params);
     let (_out, dur) = env.run_local_iteration(w)?;
-    pending_grad[w] =
-        Some(before.delta_over_eta(&env.workers[w].state.params, env.cfg.hp.lr));
+    let mut g = pending_grad[w]
+        .take()
+        .unwrap_or_else(|| env.pool.acquire_like(&env.ps.params));
+    before.delta_over_eta_into(&env.workers[w].state.params, env.cfg.hp.lr, &mut g);
+    pending_grad[w] = Some(g);
     env.segment(w, t, t + dur, SegmentKind::Train);
     env.queue.push_in(dur, Ev::TrainDone { worker: w });
     Ok(())

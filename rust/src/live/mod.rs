@@ -23,7 +23,8 @@ use crate::data::{partition_pools, DataKind, Dataset, Partition, Probe};
 use crate::gup::Gup;
 use crate::ps::PsState;
 use crate::runtime::{init_params, MockRuntime, ModelRuntime};
-use crate::wire::{read_frame, write_frame, Message, TensorPayload};
+use crate::tensor::ParamVec;
+use crate::wire::{read_frame_with, write_frame_with, Message, TensorPayload};
 use crate::worker::WorkerCore;
 
 /// Outcome of a live run.
@@ -136,9 +137,14 @@ where
             stream.set_nodelay(true)?;
             let mut rd = BufReader::new(stream.try_clone()?);
             let mut wr = BufWriter::new(stream);
-            write_frame(
+            // One encode buffer and one frame-body buffer per
+            // connection, reused for every frame on this socket.
+            let mut enc_buf: Vec<u8> = Vec::new();
+            let mut body_buf: Vec<u8> = Vec::new();
+            write_frame_with(
                 &mut wr,
                 &Message::Register { worker: wid as u32, family: format!("fam{k}") },
+                &mut enc_buf,
             )?;
 
             let mut iters = 0u64;
@@ -158,9 +164,10 @@ where
                 // Pace to the family's heterogeneity (ms-scale).
                 std::thread::sleep(Duration::from_micros((k * 2000.0) as u64));
                 let train_time = t0.elapsed().as_secs_f64();
-                write_frame(
+                write_frame_with(
                     &mut wr,
                     &Message::TimeReport { worker: wid as u32, iter: iters, train_time },
+                    &mut enc_buf,
                 )?;
                 if out.gate.push {
                     pushes += 1;
@@ -168,7 +175,7 @@ where
                     // recovers G = (w₀ − w_local)/η (Alg. 2) so the
                     // wire carries a single tensor payload.
                     let g = core.state.params.clone();
-                    write_frame(
+                    write_frame_with(
                         &mut wr,
                         &Message::PushUpdate {
                             worker: wid as u32,
@@ -177,9 +184,10 @@ where
                             train_time,
                             grads: TensorPayload::new(g, cfg.net.fp16_wire),
                         },
+                        &mut enc_buf,
                     )?;
                     // Wait for the global model (Alg. 1 line 7).
-                    match read_frame(&mut rd)? {
+                    match read_frame_with(&mut rd, &mut body_buf)? {
                         Message::GlobalModel { version, params } => {
                             core.adopt_global(&params.params, version);
                         }
@@ -190,7 +198,7 @@ where
                     }
                 }
             }
-            write_frame(&mut wr, &Message::Control { stop: true })?;
+            write_frame_with(&mut wr, &Message::Control { stop: true }, &mut enc_buf)?;
             Ok((iters, pushes))
         }));
     }
@@ -220,12 +228,19 @@ where
 }
 
 /// Per-connection PS handler: Alg. 2 on pushes, heartbeat bookkeeping.
+/// The frame-body, encode and recovered-G buffers are connection-scoped
+/// and reused across pushes; the reply still clones `ps.params` into
+/// its owned payload (the one remaining live-mode copy — removing it
+/// needs a borrowed `TensorPayload`, see DESIGN.md §8).
 fn serve_worker(stream: TcpStream, srv: Arc<PsShared>, fp16: bool) -> Result<()> {
     stream.set_nodelay(true)?;
     let mut rd = BufReader::new(stream.try_clone()?);
     let mut wr = BufWriter::new(stream);
+    let mut enc_buf: Vec<u8> = Vec::new();
+    let mut body_buf: Vec<u8> = Vec::new();
+    let mut g_scratch = ParamVec::default();
     loop {
-        let msg = match read_frame(&mut rd) {
+        let msg = match read_frame_with(&mut rd, &mut body_buf) {
             Ok(m) => m,
             Err(_) => return Ok(()), // peer closed
         };
@@ -240,13 +255,13 @@ fn serve_worker(stream: TcpStream, srv: Arc<PsShared>, fp16: bool) -> Result<()>
                 let (ps, rt) = &mut *srv.state.lock().unwrap();
                 // Recover G from the pushed local parameters:
                 // G = (w₀ − w_local)/η (Alg. 2 Worker-SGD).
-                let g = ps.w0.delta_over_eta(&grads.params, ps.eta);
-                ps.loss_based_sgd(&g, test_loss, rt.as_mut(), &srv.probe)?;
+                ps.w0.delta_over_eta_into(&grads.params, ps.eta, &mut g_scratch);
+                ps.loss_based_sgd(&g_scratch, test_loss, rt.as_mut(), &srv.probe)?;
                 let reply = Message::GlobalModel {
                     version: ps.version,
                     params: TensorPayload::new(ps.params.clone(), fp16),
                 };
-                write_frame(&mut wr, &reply)?;
+                write_frame_with(&mut wr, &reply, &mut enc_buf)?;
             }
             Message::Control { stop: true } => return Ok(()),
             _ => {}

@@ -142,11 +142,13 @@ fn cmd_exp(args: &[String]) -> Result<(), String> {
         .pos("which", "fig1 fig2 fig3 fig4 fig11 fig12 fig13 fig14 table3 all")
         .opt("model", "mock", "mock | cnn | alexnet (compute backend)")
         .opt("artifacts", "artifacts", "artifacts directory")
+        .opt("threads", "0", "sweep threads for table3 (0 = one per core)")
         .opt("out", "results", "output directory");
     let m = cmd.parse(args)?;
     let out = PathBuf::from(m.get("out"));
     let model = m.get("model");
     let arts = artifacts_dir(&m);
+    let threads = m.get_usize("threads")?;
     let r = match m.get("which") {
         "fig1" | "fig10" => exp::fig1_timelines(&out, model, &arts),
         "fig2" => exp::fig2_breakdown(&out, model, &arts),
@@ -156,7 +158,7 @@ fn cmd_exp(args: &[String]) -> Result<(), String> {
         "fig12" => exp::fig12_dynamic_sizing(&out, model, &arts),
         "fig13" => exp::fig13_major_updates(&out, model, &arts),
         "fig14" => exp::fig14_alpha_beta(&out, model, &arts),
-        "table3" => exp::table3(&out, model, &arts).map(|_| ()),
+        "table3" => exp::table3_with_threads(&out, model, &arts, threads).map(|_| ()),
         "all" => exp::run_all(&out, model, &arts),
         other => return Err(format!("unknown experiment '{other}'")),
     };

@@ -29,6 +29,12 @@ impl ModelState {
         w0.delta_over_eta(&self.params, eta)
     }
 
+    /// Borrow-based variant of [`ModelState::cumulative_g`]: writes G
+    /// into a caller-provided (typically pool-leased) buffer.
+    pub fn cumulative_g_into(&self, w0: &ParamVec, eta: f32, out: &mut ParamVec) {
+        w0.delta_over_eta_into(&self.params, eta, out);
+    }
+
     /// Rebuild parameters from a cumulative gradient: w = w₀ − η·ς
     /// (Alg. 2 PS-SGD).
     pub fn from_cumulative(w0: &ParamVec, sigma: &ParamVec, eta: f32) -> ParamVec {
@@ -39,10 +45,12 @@ impl ModelState {
 
     /// Adopt the global model (c² in Fig. 6: refresh after a push).
     /// Momentum is reset — the worker restarts its local trajectory
-    /// from the new global point.
+    /// from the new global point.  Both buffers are overwritten in
+    /// place; nothing is allocated once shapes are established.
     pub fn refresh(&mut self, global: &ParamVec, version: u64) {
-        self.params = global.clone();
-        self.momentum = ParamVec::zeros_like(global);
+        self.params.copy_from(global);
+        self.momentum.resize_like(global);
+        self.momentum.fill(0.0);
         self.version = version;
     }
 

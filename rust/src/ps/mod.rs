@@ -14,6 +14,10 @@ use crate::runtime::{EvalOut, ModelRuntime};
 use crate::tensor::ParamVec;
 
 /// Global model state at the PS.
+///
+/// All three aggregation algebras run over two private scratch buffers
+/// sized on first use, so steady-state aggregation performs zero heap
+/// allocations (DESIGN.md §8; asserted by `tests/alloc_hotpath.rs`).
 #[derive(Debug, Clone)]
 pub struct PsState {
     /// The frozen baseline w₀ every cumulative gradient refers to.
@@ -30,6 +34,10 @@ pub struct PsState {
     pub version: u64,
     /// Aggregations performed.
     pub updates: u64,
+    /// Scratch: gradient mean (Eq. 1) / w_temp (Alg. 2).
+    scratch_a: ParamVec,
+    /// Scratch: the ς-merge target swapped into `sigma` (Alg. 2).
+    scratch_b: ParamVec,
 }
 
 impl PsState {
@@ -43,6 +51,8 @@ impl PsState {
             eta,
             version: 0,
             updates: 0,
+            scratch_a: ParamVec::default(),
+            scratch_b: ParamVec::default(),
         }
     }
 
@@ -61,15 +71,17 @@ impl PsState {
 
     /// **SyncSGD** (Eq. 1): one superstep's aggregation.  `grads` are
     /// the per-worker local gradient sums of this round (direction of
-    /// descent, i.e. w ← w − η·mean g).
+    /// descent, i.e. w ← w − η·mean g).  The mean accumulates in a
+    /// reused scratch buffer — no per-round allocation.
     pub fn sync_sgd(&mut self, grads: &[ParamVec]) {
         assert!(!grads.is_empty());
-        let mut mean = ParamVec::zeros_like(&self.params);
+        self.scratch_a.resize_like(&self.params);
+        self.scratch_a.fill(0.0);
         let w = 1.0 / grads.len() as f32;
         for g in grads {
-            mean.axpy(w, g);
+            self.scratch_a.axpy(w, g);
         }
-        self.params.axpy(-self.eta, &mean);
+        self.params.axpy(-self.eta, &self.scratch_a);
         self.bump();
     }
 
@@ -90,40 +102,41 @@ impl PsState {
         rt: &mut dyn ModelRuntime,
         probe: &Probe,
     ) -> Result<(f32, f32)> {
-        match &self.sigma {
-            None => {
-                // Initial step: ς ← G; w₁ = w₀ − η·ς; L = eval(w₁).
-                self.sigma = Some(g.clone());
-                self.params = self.w0.clone();
-                self.params.axpy(-self.eta, g);
-                let out = self.eval_global(rt, probe)?;
-                self.bump();
-                Ok((out.loss, out.loss))
-            }
-            Some(sigma) => {
-                // w_temp = w₀ − η·G, L_temp = eval(w_temp).
-                let mut w_temp = self.w0.clone();
-                w_temp.axpy(-self.eta, g);
-                let tmp = rt.eval_step(&w_temp, &probe.x, &probe.y)?;
-                let l_temp = tmp.loss.max(1e-6);
-                let l_glob = self.loss.max(1e-6);
-                // W₁ = 1/L (global), W₂ = 1/L_temp (worker) — Alg. 2.
-                let w1 = 1.0 / l_glob;
-                let w2 = 1.0 / l_temp;
-                let denom = w1 + w2;
-                let new_sigma = ParamVec::weighted_sum(
-                    sigma,
-                    w1 / denom,
-                    g,
-                    w2 / denom,
-                );
-                self.params = self.w0.clone();
-                self.params.axpy(-self.eta, &new_sigma);
-                self.sigma = Some(new_sigma);
-                let out = self.eval_global(rt, probe)?;
-                self.bump();
-                Ok((l_temp, out.loss))
-            }
+        if self.sigma.is_none() {
+            // Initial step: ς ← G; w₁ = w₀ − η·ς; L = eval(w₁).
+            self.sigma = Some(g.clone());
+            self.params.copy_from(&self.w0);
+            self.params.axpy(-self.eta, g);
+            let out = self.eval_global(rt, probe)?;
+            self.bump();
+            Ok((out.loss, out.loss))
+        } else {
+            // w_temp = w₀ − η·G, L_temp = eval(w_temp) — built in the
+            // reused scratch instead of cloning w₀ per push.
+            self.scratch_a.copy_from(&self.w0);
+            self.scratch_a.axpy(-self.eta, g);
+            let tmp = rt.eval_step(&self.scratch_a, &probe.x, &probe.y)?;
+            let l_temp = tmp.loss.max(1e-6);
+            let l_glob = self.loss.max(1e-6);
+            // W₁ = 1/L (global), W₂ = 1/L_temp (worker) — Alg. 2.
+            let w1 = 1.0 / l_glob;
+            let w2 = 1.0 / l_temp;
+            let denom = w1 + w2;
+            ParamVec::weighted_sum_into(
+                self.sigma.as_ref().unwrap(),
+                w1 / denom,
+                g,
+                w2 / denom,
+                &mut self.scratch_b,
+            );
+            // The merged ς swaps in; the old buffer becomes next
+            // push's merge target.
+            std::mem::swap(self.sigma.as_mut().unwrap(), &mut self.scratch_b);
+            self.params.copy_from(&self.w0);
+            self.params.axpy(-self.eta, self.sigma.as_ref().unwrap());
+            let out = self.eval_global(rt, probe)?;
+            self.bump();
+            Ok((l_temp, out.loss))
         }
     }
 

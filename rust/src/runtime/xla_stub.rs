@@ -1,0 +1,95 @@
+//! Featureless stand-in for [`XlaRuntime`] compiled when the `xla`
+//! cargo feature is off (the default in the offline build: the external
+//! `xla` crate cannot be resolved without a registry).
+//!
+//! Public surface is identical to `xla_rt.rs`, so every caller —
+//! `exp::make_runtime`, the golden tests, the runtime micro-bench —
+//! typechecks unchanged; constructors return a descriptive error and
+//! the artifact-gated tests skip before ever reaching one.
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use super::manifest::{ModelArtifacts, ModelMeta};
+use super::{EvalOut, ModelRuntime, TrainOut};
+use crate::tensor::ParamVec;
+
+const DISABLED: &str = "XLA/PJRT backend not built: enable the `xla` cargo feature \
+     with a vendored `xla` crate (see DESIGN.md §3); the mock runtime covers all \
+     coordinator paths";
+
+/// Stub runtime — never constructible; see the module docs.
+pub struct XlaRuntime {
+    meta: ModelMeta,
+}
+
+impl XlaRuntime {
+    /// Load every compiled batch size for `model` from the artifacts
+    /// directory (use [`XlaRuntime::load_batches`] to restrict).
+    pub fn load(_artifacts_dir: impl AsRef<Path>, _model: &str) -> Result<Self> {
+        bail!("{DISABLED}")
+    }
+
+    /// Load with an optional batch-size restriction.
+    pub fn load_batches(
+        _artifacts_dir: impl AsRef<Path>,
+        _model: &str,
+        _only: Option<&[usize]>,
+    ) -> Result<Self> {
+        bail!("{DISABLED}")
+    }
+
+    pub fn from_artifacts(_arts: &ModelArtifacts, _only: Option<&[usize]>) -> Result<Self> {
+        bail!("{DISABLED}")
+    }
+}
+
+impl ModelRuntime for XlaRuntime {
+    fn meta(&self) -> &ModelMeta {
+        &self.meta
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn train_step(
+        &mut self,
+        _params: &ParamVec,
+        _momentum: &ParamVec,
+        _x: &[f32],
+        _y: &[i32],
+        _mbs: usize,
+        _lr: f32,
+        _mu: f32,
+    ) -> Result<TrainOut> {
+        bail!("{DISABLED}")
+    }
+
+    fn eval_step(&mut self, _params: &ParamVec, _x: &[f32], _y: &[i32]) -> Result<EvalOut> {
+        bail!("{DISABLED}")
+    }
+
+    fn exec_count(&self) -> u64 {
+        0
+    }
+}
+
+impl std::fmt::Debug for XlaRuntime {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("XlaRuntime")
+            .field("model", &self.meta.name)
+            .field("backend", &"stub (xla feature off)")
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_constructor_reports_the_missing_feature() {
+        let e = XlaRuntime::load("/nonexistent", "cnn").unwrap_err();
+        assert!(e.to_string().contains("xla"), "{e}");
+        assert!(XlaRuntime::load_batches("/nonexistent", "cnn", None).is_err());
+    }
+}

@@ -3,6 +3,19 @@
 //! needs (Eqs. 1, 2, 5, 6).  Deliberately minimal — all FLOP-heavy math
 //! happens inside the XLA executables; this type only carries model
 //! state between them.
+//!
+//! The algebra comes in two flavours:
+//!
+//! * allocating (`weighted_sum`, `delta_over_eta`) — convenience
+//!   wrappers that build a fresh [`ParamVec`];
+//! * in-place / borrow-based (`axpy_into`, `scale_in_place`,
+//!   `weighted_sum_into`, `delta_over_eta_into`, `copy_from`) — write
+//!   into caller-provided buffers, typically leased from a
+//!   [`BufferPool`], so the coordinator's steady-state aggregation
+//!   performs **zero heap allocations** (see DESIGN.md §8).
+//!
+//! The allocating versions delegate to the `_into` versions, so both
+//! are bit-identical by construction (enforced by property tests).
 
 use crate::util::f16;
 
@@ -91,6 +104,59 @@ impl ParamVec {
         self.num_elements() * 4
     }
 
+    /// Tensor-by-tensor shape equality (the precondition of every
+    /// in-place operation's fast path).
+    pub fn same_shape(&self, other: &ParamVec) -> bool {
+        self.tensors.len() == other.tensors.len()
+            && self
+                .tensors
+                .iter()
+                .zip(&other.tensors)
+                .all(|(a, b)| a.shape == b.shape)
+    }
+
+    /// Reshape `self` to match `like`, reusing existing allocations
+    /// where possible.  Element values are unspecified afterwards —
+    /// callers fully overwrite (the `_into` family) or [`fill`] first.
+    /// No-op (and allocation-free) when shapes already match.
+    ///
+    /// [`fill`]: ParamVec::fill
+    pub fn resize_like(&mut self, like: &ParamVec) {
+        if self.same_shape(like) {
+            return;
+        }
+        self.tensors.truncate(like.tensors.len());
+        for (i, t) in like.tensors.iter().enumerate() {
+            if let Some(mine) = self.tensors.get_mut(i) {
+                mine.shape.clear();
+                mine.shape.extend_from_slice(&t.shape);
+                mine.data.resize(t.data.len(), 0.0);
+            } else {
+                self.tensors.push(Tensor::zeros(t.shape.clone()));
+            }
+        }
+    }
+
+    /// Set every element to `v` in place.
+    pub fn fill(&mut self, v: f32) {
+        for t in &mut self.tensors {
+            for x in &mut t.data {
+                *x = v;
+            }
+        }
+    }
+
+    /// self ← other, reusing `self`'s allocations when shapes match.
+    pub fn copy_from(&mut self, other: &ParamVec) {
+        if !self.same_shape(other) {
+            *self = other.clone();
+            return;
+        }
+        for (a, b) in self.tensors.iter_mut().zip(&other.tensors) {
+            a.data.copy_from_slice(&b.data);
+        }
+    }
+
     /// self ← self + alpha · other   (shape-checked axpy).
     pub fn axpy(&mut self, alpha: f32, other: &ParamVec) {
         assert_eq!(self.tensors.len(), other.tensors.len());
@@ -102,8 +168,22 @@ impl ParamVec {
         }
     }
 
-    /// self ← alpha · self.
-    pub fn scale(&mut self, alpha: f32) {
+    /// out ← self + alpha · other — the borrow-based axpy: `self` stays
+    /// untouched and `out` (typically pool-leased) absorbs the result.
+    pub fn axpy_into(&self, alpha: f32, other: &ParamVec, out: &mut ParamVec) {
+        assert_eq!(self.tensors.len(), other.tensors.len());
+        out.resize_like(self);
+        for ((a, b), o) in self.tensors.iter().zip(&other.tensors).zip(&mut out.tensors) {
+            debug_assert_eq!(a.shape(), b.shape());
+            for ((x, y), z) in a.data.iter().zip(&b.data).zip(&mut o.data) {
+                *z = x + alpha * y;
+            }
+        }
+    }
+
+    /// self ← alpha · self (renamed from `scale`, which was already
+    /// in place; one name, no allocating twin).
+    pub fn scale_in_place(&mut self, alpha: f32) {
         for t in &mut self.tensors {
             for x in t.data_mut() {
                 *x *= alpha;
@@ -111,54 +191,49 @@ impl ParamVec {
         }
     }
 
-    /// Out-of-place weighted sum: `wa·a + wb·b` — the loss-weighted
-    /// aggregation core of Eq. 6.
-    pub fn weighted_sum(a: &ParamVec, wa: f32, b: &ParamVec, wb: f32) -> ParamVec {
+    /// out ← wa·a + wb·b — the loss-weighted aggregation core of Eq. 6,
+    /// writing into a caller-provided buffer.
+    pub fn weighted_sum_into(a: &ParamVec, wa: f32, b: &ParamVec, wb: f32, out: &mut ParamVec) {
         assert_eq!(a.tensors.len(), b.tensors.len());
-        ParamVec {
-            tensors: a
-                .tensors
-                .iter()
-                .zip(&b.tensors)
-                .map(|(ta, tb)| {
-                    debug_assert_eq!(ta.shape(), tb.shape());
-                    Tensor::new(
-                        ta.shape().to_vec(),
-                        ta.data()
-                            .iter()
-                            .zip(tb.data())
-                            .map(|(x, y)| wa * x + wb * y)
-                            .collect(),
-                    )
-                })
-                .collect(),
+        out.resize_like(a);
+        for ((ta, tb), to) in a.tensors.iter().zip(&b.tensors).zip(&mut out.tensors) {
+            debug_assert_eq!(ta.shape(), tb.shape());
+            for ((x, y), z) in ta.data.iter().zip(&tb.data).zip(&mut to.data) {
+                *z = wa * x + wb * y;
+            }
         }
     }
 
-    /// d = (self − other) / eta  — the cumulative-gradient recovery the
-    /// worker performs to report `G` (Alg. 2's Worker-SGD accumulates
-    /// gradient steps; dividing the parameter delta by η recovers the
-    /// same sum, including momentum contributions).
-    pub fn delta_over_eta(&self, other: &ParamVec, eta: f32) -> ParamVec {
+    /// Out-of-place weighted sum (allocating wrapper over
+    /// [`ParamVec::weighted_sum_into`] — bit-identical results).
+    pub fn weighted_sum(a: &ParamVec, wa: f32, b: &ParamVec, wb: f32) -> ParamVec {
+        let mut out = ParamVec::default();
+        ParamVec::weighted_sum_into(a, wa, b, wb, &mut out);
+        out
+    }
+
+    /// out ← (self − other) / eta  — the cumulative-gradient recovery
+    /// the worker performs to report `G` (Alg. 2's Worker-SGD
+    /// accumulates gradient steps; dividing the parameter delta by η
+    /// recovers the same sum, including momentum contributions).
+    pub fn delta_over_eta_into(&self, other: &ParamVec, eta: f32, out: &mut ParamVec) {
         assert!(eta != 0.0);
         assert_eq!(self.tensors.len(), other.tensors.len());
-        ParamVec {
-            tensors: self
-                .tensors
-                .iter()
-                .zip(&other.tensors)
-                .map(|(a, b)| {
-                    Tensor::new(
-                        a.shape().to_vec(),
-                        a.data()
-                            .iter()
-                            .zip(b.data())
-                            .map(|(x, y)| (x - y) / eta)
-                            .collect(),
-                    )
-                })
-                .collect(),
+        out.resize_like(self);
+        for ((a, b), o) in self.tensors.iter().zip(&other.tensors).zip(&mut out.tensors) {
+            debug_assert_eq!(a.shape(), b.shape());
+            for ((x, y), z) in a.data.iter().zip(&b.data).zip(&mut o.data) {
+                *z = (x - y) / eta;
+            }
         }
+    }
+
+    /// d = (self − other) / eta (allocating wrapper over
+    /// [`ParamVec::delta_over_eta_into`] — bit-identical results).
+    pub fn delta_over_eta(&self, other: &ParamVec, eta: f32) -> ParamVec {
+        let mut out = ParamVec::default();
+        self.delta_over_eta_into(other, eta, &mut out);
+        out
     }
 
     /// L2 norm over all elements.
@@ -201,9 +276,56 @@ impl ParamVec {
     }
 }
 
+/// Reusable [`ParamVec`] scratch buffers for the coordinator hot path.
+///
+/// The aggregation state machines (PS algebra, framework drivers) lease
+/// buffers with [`acquire_like`], write via the `_into` algebra, and
+/// [`release`] them when the message is fully processed.  After warmup
+/// every lease is satisfied from the free list and `resize_like` is a
+/// no-op, so steady-state rounds allocate nothing (asserted by
+/// `tests/alloc_hotpath.rs` with a counting global allocator).
+///
+/// [`acquire_like`]: BufferPool::acquire_like
+/// [`release`]: BufferPool::release
+#[derive(Debug, Default)]
+pub struct BufferPool {
+    free: Vec<ParamVec>,
+}
+
+impl BufferPool {
+    pub fn new() -> BufferPool {
+        BufferPool::default()
+    }
+
+    /// Buffers currently parked in the pool.
+    pub fn available(&self) -> usize {
+        self.free.len()
+    }
+
+    /// Lease a buffer shaped like `like`; element values unspecified.
+    pub fn acquire_like(&mut self, like: &ParamVec) -> ParamVec {
+        let mut pv = self.free.pop().unwrap_or_default();
+        pv.resize_like(like);
+        pv
+    }
+
+    /// Lease a zero-filled buffer shaped like `like`.
+    pub fn acquire_zeroed_like(&mut self, like: &ParamVec) -> ParamVec {
+        let mut pv = self.acquire_like(like);
+        pv.fill(0.0);
+        pv
+    }
+
+    /// Return a leased buffer for reuse.
+    pub fn release(&mut self, pv: ParamVec) {
+        self.free.push(pv);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::rng::Xoshiro256pp;
 
     fn pv(vals: &[&[f32]]) -> ParamVec {
         ParamVec {
@@ -212,6 +334,28 @@ mod tests {
                 .map(|v| Tensor::new(vec![v.len()], v.to_vec()))
                 .collect(),
         }
+    }
+
+    fn rand_pv(rng: &mut Xoshiro256pp) -> ParamVec {
+        let n_tensors = 1 + rng.next_below(4) as usize;
+        ParamVec {
+            tensors: (0..n_tensors)
+                .map(|_| {
+                    let n = 1 + rng.next_below(96) as usize;
+                    Tensor::new(
+                        vec![n],
+                        (0..n).map(|_| (rng.normal() * 2.0) as f32).collect(),
+                    )
+                })
+                .collect(),
+        }
+    }
+
+    fn bits(p: &ParamVec) -> Vec<u32> {
+        p.tensors
+            .iter()
+            .flat_map(|t| t.data().iter().map(|x| x.to_bits()))
+            .collect()
     }
 
     #[test]
@@ -226,7 +370,7 @@ mod tests {
         let b = pv(&[&[10.0, 20.0], &[30.0]]);
         a.axpy(0.5, &b);
         assert_eq!(a, pv(&[&[6.0, 12.0], &[18.0]]));
-        a.scale(2.0);
+        a.scale_in_place(2.0);
         assert_eq!(a, pv(&[&[12.0, 24.0], &[36.0]]));
     }
 
@@ -283,6 +427,128 @@ mod tests {
         let a = pv(&[&[1.0, 2.0], &[3.0]]);
         let z = ParamVec::zeros_like(&a);
         assert_eq!(z.num_elements(), 3);
+        assert!(z.tensors.iter().all(|t| t.data().iter().all(|&x| x == 0.0)));
+    }
+
+    // ------------------------------- in-place algebra property tests
+
+    #[test]
+    fn prop_axpy_into_bit_identical_to_clone_then_axpy() {
+        for seed in 0..200 {
+            let mut rng = Xoshiro256pp::seed_from_u64(seed);
+            let a = rand_pv(&mut rng);
+            let b = {
+                let mut b = ParamVec::zeros_like(&a);
+                for t in &mut b.tensors {
+                    for v in t.data_mut() {
+                        *v = (rng.normal() * 2.0) as f32;
+                    }
+                }
+                b
+            };
+            let alpha = rng.normal() as f32;
+            let mut want = a.clone();
+            want.axpy(alpha, &b);
+            let mut got = ParamVec::default();
+            a.axpy_into(alpha, &b, &mut got);
+            assert_eq!(bits(&want), bits(&got), "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn prop_weighted_sum_into_bit_identical_to_allocating() {
+        for seed in 0..200 {
+            let mut rng = Xoshiro256pp::seed_from_u64(1000 + seed);
+            let a = rand_pv(&mut rng);
+            let mut b = ParamVec::zeros_like(&a);
+            for t in &mut b.tensors {
+                for v in t.data_mut() {
+                    *v = (rng.normal() * 2.0) as f32;
+                }
+            }
+            let (wa, wb) = (rng.normal() as f32, rng.normal() as f32);
+            let want = ParamVec::weighted_sum(&a, wa, &b, wb);
+            // Dirty, differently-shaped out buffer: must still match.
+            let mut got = pv(&[&[9.0; 3]]);
+            ParamVec::weighted_sum_into(&a, wa, &b, wb, &mut got);
+            assert_eq!(bits(&want), bits(&got), "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn prop_delta_over_eta_into_bit_identical_to_allocating() {
+        for seed in 0..200 {
+            let mut rng = Xoshiro256pp::seed_from_u64(2000 + seed);
+            let a = rand_pv(&mut rng);
+            let mut b = ParamVec::zeros_like(&a);
+            for t in &mut b.tensors {
+                for v in t.data_mut() {
+                    *v = (rng.normal() * 2.0) as f32;
+                }
+            }
+            let eta = (rng.uniform(0.001, 0.9)) as f32;
+            let want = a.delta_over_eta(&b, eta);
+            let mut got = ParamVec::default();
+            a.delta_over_eta_into(&b, eta, &mut got);
+            assert_eq!(bits(&want), bits(&got), "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn scale_in_place_scales_every_element() {
+        let mut rng = Xoshiro256pp::seed_from_u64(3);
+        let a = rand_pv(&mut rng);
+        let mut x = a.clone();
+        x.scale_in_place(0.37);
+        for (got, orig) in x
+            .tensors
+            .iter()
+            .flat_map(|t| t.data())
+            .zip(a.tensors.iter().flat_map(|t| t.data()))
+        {
+            assert_eq!(got.to_bits(), (0.37f32 * orig).to_bits());
+        }
+    }
+
+    #[test]
+    fn copy_from_and_resize_like_reuse_allocations() {
+        let a = pv(&[&[1.0, 2.0, 3.0], &[4.0]]);
+        let mut dst = pv(&[&[9.0, 9.0, 9.0], &[9.0]]);
+        let ptr = dst.tensors[0].data().as_ptr();
+        dst.copy_from(&a);
+        assert_eq!(dst, a);
+        assert_eq!(dst.tensors[0].data().as_ptr(), ptr, "copy_from reallocated");
+        // Shape mismatch falls back to a clone.
+        let mut small = pv(&[&[0.0]]);
+        small.copy_from(&a);
+        assert_eq!(small, a);
+        // resize_like preserves buffers when shapes already match.
+        let mut buf = a.clone();
+        let ptr = buf.tensors[0].data().as_ptr();
+        buf.resize_like(&a);
+        assert_eq!(buf.tensors[0].data().as_ptr(), ptr);
+        assert!(buf.same_shape(&a));
+    }
+
+    #[test]
+    fn buffer_pool_reuses_released_buffers() {
+        let like = pv(&[&[1.0, 2.0], &[3.0, 4.0, 5.0]]);
+        let mut pool = BufferPool::new();
+        let b1 = pool.acquire_like(&like);
+        assert!(b1.same_shape(&like));
+        let ptr = b1.tensors[0].data().as_ptr();
+        pool.release(b1);
+        assert_eq!(pool.available(), 1);
+        // Same shape ⇒ the parked buffer comes back untouched.
+        let b2 = pool.acquire_like(&like);
+        assert_eq!(b2.tensors[0].data().as_ptr(), ptr);
+        assert_eq!(pool.available(), 0);
+        pool.release(b2);
+        // Zeroed lease really is zeroed even after dirty writes.
+        let mut dirty = pool.acquire_like(&like);
+        dirty.fill(7.0);
+        pool.release(dirty);
+        let z = pool.acquire_zeroed_like(&like);
         assert!(z.tensors.iter().all(|t| t.data().iter().all(|&x| x == 0.0)));
     }
 }

@@ -71,22 +71,53 @@ pub fn f16_bits_to_f32(h: u16) -> f32 {
     f32::from_bits(bits)
 }
 
-/// Encode a slice to little-endian f16 bytes.
+/// Conversion chunk: 256 elements staged on the stack per pass, so the
+/// output `Vec` sees one reserve and a few large extends instead of a
+/// 2-byte extend per element.
+const CHUNK: usize = 256;
+
+/// Encode a slice to little-endian f16 bytes, **appending** to `out` —
+/// the wire writer streams multiple tensors into one frame buffer.
+pub fn encode_f16_into(xs: &[f32], out: &mut Vec<u8>) {
+    out.reserve(xs.len() * 2);
+    let mut staged = [0u8; CHUNK * 2];
+    for chunk in xs.chunks(CHUNK) {
+        for (i, &x) in chunk.iter().enumerate() {
+            staged[2 * i..2 * i + 2].copy_from_slice(&f32_to_f16_bits(x).to_le_bytes());
+        }
+        out.extend_from_slice(&staged[..2 * chunk.len()]);
+    }
+}
+
+/// Encode a slice to little-endian f16 bytes (allocating wrapper).
 pub fn encode_f16(xs: &[f32]) -> Vec<u8> {
     let mut out = Vec::with_capacity(xs.len() * 2);
-    for &x in xs {
-        out.extend_from_slice(&f32_to_f16_bits(x).to_le_bytes());
-    }
+    encode_f16_into(xs, &mut out);
     out
 }
 
-/// Decode little-endian f16 bytes back to f32.
-pub fn decode_f16(bytes: &[u8]) -> Vec<f32> {
+/// Decode little-endian f16 bytes into `out` (cleared first) — decode
+/// targets are per-connection scratch buffers reused across frames.
+pub fn decode_f16_into(bytes: &[u8], out: &mut Vec<f32>) {
     assert!(bytes.len() % 2 == 0, "odd f16 byte length");
-    bytes
-        .chunks_exact(2)
-        .map(|c| f16_bits_to_f32(u16::from_le_bytes([c[0], c[1]])))
-        .collect()
+    out.clear();
+    out.reserve(bytes.len() / 2);
+    let mut staged = [0f32; CHUNK];
+    for chunk in bytes.chunks(2 * CHUNK) {
+        let mut n = 0;
+        for c in chunk.chunks_exact(2) {
+            staged[n] = f16_bits_to_f32(u16::from_le_bytes([c[0], c[1]]));
+            n += 1;
+        }
+        out.extend_from_slice(&staged[..n]);
+    }
+}
+
+/// Decode little-endian f16 bytes back to f32 (allocating wrapper).
+pub fn decode_f16(bytes: &[u8]) -> Vec<f32> {
+    let mut out = Vec::new();
+    decode_f16_into(bytes, &mut out);
+    out
 }
 
 /// Max relative error of the f16 round-trip for normal-range values —
@@ -155,6 +186,59 @@ mod tests {
         for (a, b) in xs.iter().zip(&dec) {
             assert!((a - b).abs() <= 0.01, "{a} {b}");
         }
+    }
+
+    #[test]
+    fn pinned_roundtrip_subnormals_infinities_and_nan() {
+        // Every f16-exact value round-trips bit-exactly: all 1023
+        // subnormals, both infinities, both zeros, and every normal.
+        for h in 0..=u16::MAX {
+            let x = f16_bits_to_f32(h);
+            if x.is_nan() {
+                assert!(f16_bits_to_f32(f32_to_f16_bits(x)).is_nan(), "h={h:#06x}");
+                continue;
+            }
+            assert_eq!(f32_to_f16_bits(x), h, "h={h:#06x} x={x}");
+        }
+        // Normal-range values are pinned to the F16_MAX_REL_ERR bound.
+        let mut rng = crate::util::rng::Xoshiro256pp::seed_from_u64(17);
+        for _ in 0..20_000 {
+            let mag = 10f64.powf(rng.uniform(-4.0, 4.5));
+            let x = (rng.normal() * mag) as f32;
+            if x.abs() < 6.2e-5 || x.abs() > 65504.0 {
+                continue; // subnormal/overflow handled above & below
+            }
+            let rt = f16_bits_to_f32(f32_to_f16_bits(x));
+            assert!(((rt - x) / x).abs() <= F16_MAX_REL_ERR, "x={x} rt={rt}");
+        }
+        // Out-of-range magnitudes saturate to the correctly-signed inf.
+        assert_eq!(f32_to_f16_bits(65520.0), 0x7C00); // > f16 max rounds up
+        assert_eq!(f32_to_f16_bits(-1e9), 0xFC00);
+        assert_eq!(f16_bits_to_f32(0x7C00), f32::INFINITY);
+        assert_eq!(f16_bits_to_f32(0xFC00), f32::NEG_INFINITY);
+        // Sub-subnormal magnitudes flush to signed zero.
+        assert_eq!(f32_to_f16_bits(1e-9), 0x0000);
+        assert_eq!(f32_to_f16_bits(-1e-9), 0x8000);
+    }
+
+    #[test]
+    fn into_variants_match_allocating_codec() {
+        let mut rng = crate::util::rng::Xoshiro256pp::seed_from_u64(23);
+        let xs: Vec<f32> = (0..1337) // odd length: exercises the chunk tail
+            .map(|_| (rng.normal() * 3.0) as f32)
+            .collect();
+        let mut enc = Vec::new();
+        encode_f16_into(&xs, &mut enc);
+        assert_eq!(enc, encode_f16(&xs));
+        // Appending semantics: a second encode extends the buffer.
+        encode_f16_into(&xs, &mut enc);
+        assert_eq!(enc.len(), 2 * xs.len() * 2);
+        assert_eq!(&enc[..xs.len() * 2], &enc[xs.len() * 2..]);
+
+        let mut dec = vec![0.0f32; 7]; // stale contents must be cleared
+        decode_f16_into(&enc[..xs.len() * 2], &mut dec);
+        assert_eq!(dec, decode_f16(&encode_f16(&xs)));
+        assert_eq!(dec.len(), xs.len());
     }
 
     #[test]

@@ -66,27 +66,54 @@ const TAG_MODEL: u8 = 5;
 const TAG_DATASET: u8 = 6;
 const TAG_CONTROL: u8 = 7;
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum WireError {
-    #[error("truncated message (wanted {wanted} more bytes at {at})")]
     Truncated { at: usize, wanted: usize },
-    #[error("unknown message tag {0}")]
     UnknownTag(u8),
-    #[error("malformed field: {0}")]
     Malformed(&'static str),
-    #[error("io: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::Truncated { at, wanted } => {
+                write!(f, "truncated message (wanted {wanted} more bytes at {at})")
+            }
+            WireError::UnknownTag(tag) => write!(f, "unknown message tag {tag}"),
+            WireError::Malformed(what) => write!(f, "malformed field: {what}"),
+            WireError::Io(e) => write!(f, "io: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            WireError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for WireError {
+    fn from(e: std::io::Error) -> Self {
+        WireError::Io(e)
+    }
 }
 
 // ------------------------------------------------------------ writer
 
-struct Writer {
-    buf: Vec<u8>,
+/// Serializer over a caller-owned buffer, so live-mode connections can
+/// reuse one encode buffer across frames (zero steady-state allocation
+/// on the framing path).
+struct Writer<'a> {
+    buf: &'a mut Vec<u8>,
 }
 
-impl Writer {
-    fn new() -> Self {
-        Self { buf: Vec::new() }
+impl<'a> Writer<'a> {
+    fn new(buf: &'a mut Vec<u8>) -> Self {
+        Self { buf }
     }
 
     fn u8(&mut self, v: u8) {
@@ -118,10 +145,20 @@ impl Writer {
                 self.u32(d as u32);
             }
             if p.fp16 {
-                self.buf.extend_from_slice(&f16::encode_f16(t.data()));
+                f16::encode_f16_into(t.data(), self.buf);
             } else {
-                for &x in t.data() {
-                    self.buf.extend_from_slice(&x.to_le_bytes());
+                // Chunked pass through a stack staging buffer: one
+                // reserve + large extends instead of a 4-byte extend
+                // per element (same pattern as f16::encode_f16_into).
+                const CHUNK: usize = 256;
+                let data = t.data();
+                self.buf.reserve(data.len() * 4);
+                let mut staged = [0u8; 4 * CHUNK];
+                for chunk in data.chunks(CHUNK) {
+                    for (i, &x) in chunk.iter().enumerate() {
+                        staged[4 * i..4 * i + 4].copy_from_slice(&x.to_le_bytes());
+                    }
+                    self.buf.extend_from_slice(&staged[..4 * chunk.len()]);
                 }
             }
         }
@@ -195,7 +232,9 @@ impl<'a> Reader<'a> {
                 return Err(WireError::Malformed("tensor too large"));
             }
             let data = if fp16 {
-                f16::decode_f16(self.take(2 * elems)?)
+                let mut v = Vec::with_capacity(elems);
+                f16::decode_f16_into(self.take(2 * elems)?, &mut v);
+                v
             } else {
                 self.take(4 * elems)?
                     .chunks_exact(4)
@@ -210,7 +249,17 @@ impl<'a> Reader<'a> {
 
 impl Message {
     pub fn encode(&self) -> Vec<u8> {
-        let mut w = Writer::new();
+        let mut buf = Vec::with_capacity(self.wire_size());
+        self.encode_into(&mut buf);
+        buf
+    }
+
+    /// Encode into a caller-provided buffer (cleared first).  Hot
+    /// senders keep one buffer per connection and call this instead of
+    /// [`Message::encode`], so framing allocates nothing steady-state.
+    pub fn encode_into(&self, buf: &mut Vec<u8>) {
+        buf.clear();
+        let mut w = Writer::new(buf);
         match self {
             Message::Register { worker, family } => {
                 w.u8(TAG_REGISTER);
@@ -252,7 +301,6 @@ impl Message {
                 w.u8(*stop as u8);
             }
         }
-        w.buf
     }
 
     pub fn decode(buf: &[u8]) -> Result<Message, WireError> {
@@ -317,26 +365,60 @@ impl Message {
 
 // --------------------------------------------------- framed transport
 
-/// Write a length-prefixed frame.
+/// Write a length-prefixed frame (allocating convenience wrapper).
 pub fn write_frame<W: std::io::Write>(w: &mut W, msg: &Message) -> Result<(), WireError> {
-    let body = msg.encode();
-    w.write_all(&(body.len() as u32).to_le_bytes())?;
-    w.write_all(&body)?;
+    let mut scratch = Vec::with_capacity(msg.wire_size());
+    write_frame_with(w, msg, &mut scratch)
+}
+
+/// Write a length-prefixed frame, encoding into `scratch` — the
+/// per-connection reuse path (one encode buffer per connection).
+pub fn write_frame_with<W: std::io::Write>(
+    w: &mut W,
+    msg: &Message,
+    scratch: &mut Vec<u8>,
+) -> Result<(), WireError> {
+    msg.encode_into(scratch);
+    w.write_all(&(scratch.len() as u32).to_le_bytes())?;
+    w.write_all(scratch)?;
     w.flush()?;
     Ok(())
 }
 
-/// Read one length-prefixed frame.
+/// Read one length-prefixed frame (allocating convenience wrapper).
 pub fn read_frame<R: std::io::Read>(r: &mut R) -> Result<Message, WireError> {
+    let mut scratch = Vec::new();
+    read_frame_with(r, &mut scratch)
+}
+
+/// Largest body buffer a connection retains between frames; anything
+/// bigger (a one-off oversized frame) is given back to the allocator
+/// so long-lived connections don't pin peak-frame memory.
+const MAX_RETAINED_FRAME_BUF: usize = 16 << 20;
+
+/// Read one length-prefixed frame into a reusable body buffer.
+pub fn read_frame_with<R: std::io::Read>(
+    r: &mut R,
+    scratch: &mut Vec<u8>,
+) -> Result<Message, WireError> {
     let mut len = [0u8; 4];
     r.read_exact(&mut len)?;
     let n = u32::from_le_bytes(len) as usize;
     if n > 1 << 30 {
         return Err(WireError::Malformed("frame too large"));
     }
-    let mut body = vec![0u8; n];
-    r.read_exact(&mut body)?;
-    Message::decode(&body)
+    // Grow-only: read_exact overwrites the prefix anyway, so never pay
+    // a zero-fill memset for bytes about to be replaced.
+    if scratch.len() < n {
+        scratch.resize(n, 0);
+    }
+    r.read_exact(&mut scratch[..n])?;
+    let msg = Message::decode(&scratch[..n]);
+    if scratch.capacity() > MAX_RETAINED_FRAME_BUF {
+        scratch.truncate(MAX_RETAINED_FRAME_BUF);
+        scratch.shrink_to(MAX_RETAINED_FRAME_BUF);
+    }
+    msg
 }
 
 #[cfg(test)]
@@ -437,6 +519,39 @@ mod tests {
         let mut padded = all_messages()[7].encode();
         padded.push(0);
         assert!(Message::decode(&padded).is_err());
+    }
+
+    #[test]
+    fn encode_into_matches_encode_and_reuses_the_buffer() {
+        let mut buf = Vec::new();
+        for msg in all_messages() {
+            msg.encode_into(&mut buf);
+            assert_eq!(buf, msg.encode(), "{msg:?}");
+        }
+        // After the largest message the buffer is warm: re-encoding a
+        // smaller one must not grow capacity.
+        let cap = buf.capacity();
+        Message::Control { stop: false }.encode_into(&mut buf);
+        assert_eq!(buf.capacity(), cap);
+        assert_eq!(buf, Message::Control { stop: false }.encode());
+    }
+
+    #[test]
+    fn buffered_framing_matches_allocating_framing() {
+        let mut plain = Vec::new();
+        let mut reused = Vec::new();
+        let mut scratch = Vec::new();
+        for msg in all_messages() {
+            write_frame(&mut plain, &msg).unwrap();
+            write_frame_with(&mut reused, &msg, &mut scratch).unwrap();
+        }
+        assert_eq!(plain, reused);
+        let mut cursor = std::io::Cursor::new(reused);
+        let mut body = Vec::new();
+        for msg in all_messages() {
+            let got = read_frame_with(&mut cursor, &mut body).unwrap();
+            assert_eq!(std::mem::discriminant(&msg), std::mem::discriminant(&got));
+        }
     }
 
     #[test]

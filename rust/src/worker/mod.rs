@@ -158,6 +158,12 @@ impl WorkerCore {
         self.state.cumulative_g(w0, eta)
     }
 
+    /// Borrow-based variant of [`WorkerCore::cumulative_g`] writing
+    /// into a pool-leased buffer (the Hermes driver's push path).
+    pub fn cumulative_g_into(&self, w0: &ParamVec, eta: f32, out: &mut ParamVec) {
+        self.state.cumulative_g_into(w0, eta, out);
+    }
+
     /// Worker independence (Eq. 7): local iterations per global-model
     /// request.
     pub fn wi(&self) -> f64 {

@@ -83,8 +83,8 @@ fn load_golden(model: &str, shapes: &[Vec<usize>], input_elems: usize) -> Golden
 
 fn check_model(model: &str) {
     let dir = artifacts_dir();
-    if !dir.join("manifest.json").exists() {
-        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+    if !dir.join("manifest.json").exists() || !cfg!(feature = "xla") {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`) or xla feature off");
         return;
     }
     let manifest = Manifest::load(&dir).unwrap();
@@ -133,8 +133,8 @@ fn golden_alexnet_train_step_matches_python() {
 #[test]
 fn eval_executable_runs_and_is_consistent_with_train_loss() {
     let dir = artifacts_dir();
-    if !dir.join("manifest.json").exists() {
-        eprintln!("SKIP: artifacts not built");
+    if !dir.join("manifest.json").exists() || !cfg!(feature = "xla") {
+        eprintln!("SKIP: artifacts not built or xla feature off");
         return;
     }
     let manifest = Manifest::load(&dir).unwrap();

@@ -1,0 +1,19 @@
+#!/usr/bin/env bash
+# Regenerate the perf-trajectory reports at the repo root:
+#   BENCH_micro.json  — coordinator hot-path micro-benchmarks,
+#                       allocating baseline vs pooled in-place path
+#   BENCH_table3.json — Table III end-to-end sweep, sequential vs
+#                       parallel wall time
+#
+# cargo runs bench binaries with the cwd set to the package root
+# (rust/), so the output paths are pinned to the repo root explicitly.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+root="$PWD"
+
+BENCH_OUT="$root/BENCH_micro.json" cargo bench --bench micro_coordinator
+BENCH_TABLE3_OUT="$root/BENCH_table3.json" cargo bench --bench table3_end_to_end
+
+echo
+echo "== perf reports =="
+ls -l "$root/BENCH_micro.json" "$root/BENCH_table3.json"

@@ -1,0 +1,9 @@
+#!/usr/bin/env bash
+# Repo gate: formatting, lints, then the tier-1 command.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+cargo fmt --check
+cargo clippy --all-targets -- -D warnings
+cargo build --release
+cargo test -q

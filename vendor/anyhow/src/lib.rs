@@ -1,0 +1,177 @@
+//! Minimal, offline-vendored drop-in for the `anyhow` crate.
+//!
+//! The build environment has no cargo registry, so external crates are
+//! not resolvable (the same constraint that produced the from-scratch
+//! JSON / CLI / bench substrates in the main crate).  This crate covers
+//! exactly the `anyhow` surface `hermes_dml` uses:
+//!
+//! * [`Error`] — an opaque, `Send + Sync + 'static` error value with a
+//!   rendered message (no source chain; nothing in the workspace walks
+//!   `source()` on `anyhow` errors).
+//! * [`Result`] — `Result<T, Error>` alias with the same default-param
+//!   shape as upstream.
+//! * [`anyhow!`], [`bail!`], [`ensure!`] — message/format macros.
+//! * [`Context`] — `.context(..)` / `.with_context(..)` on `Result`.
+//!
+//! Swap back to the real crate by replacing the `path` dependency with
+//! a registry version; no call sites need to change.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// Opaque error type: a pre-rendered message.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from anything displayable.
+    pub fn msg<M: fmt::Display>(msg: M) -> Error {
+        Error { msg: msg.to_string() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// Like upstream anyhow, `Error` deliberately does NOT implement
+// `std::error::Error`; that is what makes this blanket `From` coherent
+// (it would otherwise overlap the reflexive `From<T> for T`).
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::msg(&e)
+    }
+}
+
+/// `anyhow::Result<T>`, with the same default error parameter shape as
+/// the real crate.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to an error, upstream-style: the rendered message
+/// becomes `"{context}: {inner}"`.
+pub trait Context<T, E> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static;
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: StdError + Send + Sync + 'static> Context<T, E> for Result<T, E> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.map_err(|e| Error::msg(format!("{context}: {e}")))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+/// Construct an [`Error`] from a message, a format string, or any
+/// displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(::std::format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($fmt, $($arg)*))
+    };
+}
+
+/// Early-return with an error built by [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*).into())
+    };
+}
+
+/// `bail!` unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !$cond {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::Other, "disk on fire")
+    }
+
+    #[test]
+    fn macro_forms_render() {
+        let x = 7;
+        assert_eq!(anyhow!("plain").to_string(), "plain");
+        assert_eq!(anyhow!("captured {x}").to_string(), "captured 7");
+        assert_eq!(anyhow!("fmt {} {}", 1, "two").to_string(), "fmt 1 two");
+        assert_eq!(anyhow!(String::from("owned")).to_string(), "owned");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert_eq!(inner().unwrap_err().to_string(), "disk on fire");
+    }
+
+    #[test]
+    fn bail_and_ensure_return_early() {
+        fn f(n: i32) -> Result<i32> {
+            ensure!(n >= 0, "negative: {n}");
+            if n == 0 {
+                bail!("zero not allowed");
+            }
+            Ok(n)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert_eq!(f(0).unwrap_err().to_string(), "zero not allowed");
+        assert_eq!(f(-2).unwrap_err().to_string(), "negative: -2");
+    }
+
+    #[test]
+    fn context_wraps_messages() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("reading manifest").unwrap_err();
+        assert_eq!(e.to_string(), "reading manifest: disk on fire");
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.with_context(|| format!("pass {}", 2)).unwrap_err();
+        assert_eq!(e.to_string(), "pass 2: disk on fire");
+    }
+
+    #[test]
+    fn error_is_send_sync() {
+        fn assert_bounds<T: Send + Sync + 'static>() {}
+        assert_bounds::<Error>();
+    }
+}
