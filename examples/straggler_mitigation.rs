@@ -1,7 +1,10 @@
 //! Straggler mitigation demo (§IV-A, Figs. 7/11b/12): the dual binary
 //! search retargets the B1ms stragglers (and the under-utilized F4s_v2
 //! nodes) to the cluster-median iteration time.  Runs Hermes with and
-//! without dynamic allocation and prints per-family iteration times.
+//! without dynamic allocation and prints per-family iteration times —
+//! then once more under deterministic crash/rejoin churn (the faults
+//! subsystem, DESIGN.md §10; sweep every framework with
+//! `hermes exp faults`, or pass `--churn` to `hermes run`).
 //!
 //!     cargo run --release --example straggler_mitigation
 
@@ -58,5 +61,24 @@ fn main() -> anyhow::Result<()> {
             &run,
         );
     }
+
+    // The same mitigation with edge churn on top: worker 0 (a B1ms
+    // straggler) crashes and rejoins mid-run, worker 11 takes a 3× K
+    // spike — Hermes keeps training through both (try the full sweep
+    // with `hermes exp faults`).
+    let mut cfg = RunConfig::new("mock", "hermes");
+    cfg.hp.lr = 0.5;
+    cfg.dss0 = 256;
+    cfg.target_acc = 1.5;
+    cfg.max_iters = 600;
+    cfg.faults.plan = hermes_dml::faults::FaultPlan::new()
+        .crash_rejoin(0, 3.0, 5.0)
+        .k_spike(11, 2.0, 6.0, 3.0);
+    let run = run_framework(cfg, Box::new(MockRuntime::new()))?;
+    summarize("dynamic allocation + crash/rejoin churn", &run);
+    println!(
+        "faults applied: {} crashes, {} rejoins (deterministic per seed)",
+        run.fault_crashes, run.fault_rejoins
+    );
     Ok(())
 }

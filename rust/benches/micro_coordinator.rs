@@ -31,7 +31,14 @@ fn params_of(n: usize, seed: u64) -> ParamVec {
 }
 
 fn main() {
-    let mut b = Bench::new().with_budget(1.0).with_max_iters(2000);
+    // --smoke (scripts/bench.sh) / CI: tiny budget, small model only —
+    // still emits the full JSON report shape for the artifact upload.
+    let smoke = std::env::var("HERMES_BENCH_SMOKE").is_ok();
+    let mut b = if smoke {
+        Bench::new().with_budget(0.02).with_max_iters(40)
+    } else {
+        Bench::new().with_budget(1.0).with_max_iters(2000)
+    };
 
     Bench::report_header("HermesGUP gate");
     let mut gup = Gup::new(10, -1.3, 0.1, 5, true);
@@ -56,7 +63,12 @@ fn main() {
         std::hint::black_box(rebalance_pass(&mon, 1, &current, &caps, &MBS_DOMAIN));
     });
 
-    for (label, n) in [("cnn 110K", 109_378usize), ("alexnet 995K", 995_046)] {
+    let models: &[(&str, usize)] = if smoke {
+        &[("cnn 110K", 109_378)]
+    } else {
+        &[("cnn 110K", 109_378), ("alexnet 995K", 995_046)]
+    };
+    for &(label, n) in models {
         Bench::report_header(&format!("PS aggregation algebra ({label})"));
         let a = params_of(n, 1);
         let bb = params_of(n, 2);

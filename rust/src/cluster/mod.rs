@@ -123,6 +123,25 @@ impl Cluster {
         self.nodes[id].crashed = true;
     }
 
+    /// Elastic rejoin: the node comes back into the membership set
+    /// (the faults subsystem resyncs its state separately).
+    pub fn revive(&mut self, id: usize) {
+        self.nodes[id].crashed = false;
+    }
+
+    /// Transient K drift (fault-injected slowdown spike): multiply the
+    /// node's Eq. 3 coefficient; [`Cluster::unscale_k`] ends the spike.
+    pub fn scale_k(&mut self, id: usize, factor: f64) {
+        self.nodes[id].k *= factor;
+    }
+
+    /// End a K spike by dividing the same factor back out (a single
+    /// rounding step — exact for power-of-two factors, ≤1 ulp of
+    /// residue otherwise; deterministic either way).
+    pub fn unscale_k(&mut self, id: usize, factor: f64) {
+        self.nodes[id].k /= factor;
+    }
+
     pub fn active_ids(&self) -> Vec<usize> {
         (0..self.len()).filter(|&i| !self.nodes[i].crashed).collect()
     }
@@ -229,6 +248,21 @@ mod tests {
         assert_eq!(active.len(), 10);
         assert!(!active.contains(&3));
         assert!(!active.contains(&7));
+    }
+
+    #[test]
+    fn revive_restores_membership_and_scale_k_roundtrips() {
+        let mut c = Cluster::build(&ClusterConfig::paper_testbed(), 7);
+        c.crash(4);
+        assert_eq!(c.active_ids().len(), 11);
+        c.revive(4);
+        assert_eq!(c.active_ids().len(), 12);
+        assert!(!c.node(4).crashed);
+        let k0 = c.node(4).k;
+        c.scale_k(4, 3.0);
+        assert!((c.node(4).k - 3.0 * k0).abs() < 1e-12);
+        c.unscale_k(4, 3.0);
+        assert!((c.node(4).k - k0).abs() < 1e-12 * k0.max(1.0));
     }
 
     #[test]

@@ -1,7 +1,8 @@
 //! Typed configuration system: cluster topology (Table II), training
-//! hyper-parameters (Table I), network model, and per-run experiment
-//! settings — with JSON round-trip and validation.
+//! hyper-parameters (Table I), network model, fault/churn scenario, and
+//! per-run experiment settings — with JSON round-trip and validation.
 
+use crate::faults::{FaultEvent, FaultKind, FaultPlan};
 use crate::util::json::Json;
 
 /// One node family from Table II of the paper.
@@ -215,6 +216,79 @@ impl HyperParams {
     }
 }
 
+/// Fault/churn scenario for one run: an explicit declarative plan plus
+/// an optional seeded churn generator, both compiled into one
+/// [`FaultPlan`] at `SimEnv::build` (so a run stays a pure function of
+/// seed + config).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultConfig {
+    /// Explicit declarative faults (crashes, rejoins, link degradation,
+    /// K spikes) at fixed virtual times.
+    pub plan: FaultPlan,
+    /// Expected crash/rejoin cycles per 100 virtual seconds across the
+    /// whole cluster (0 = no generated churn).
+    pub churn_rate: f64,
+    /// Virtual-time window the generated churn is drawn over.
+    pub churn_horizon: f64,
+    /// Seconds a churned worker stays down before rejoining.
+    pub rejoin_after: f64,
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        FaultConfig {
+            plan: FaultPlan::default(),
+            churn_rate: 0.0,
+            churn_horizon: 60.0,
+            rejoin_after: 8.0,
+        }
+    }
+}
+
+impl FaultConfig {
+    pub fn is_empty(&self) -> bool {
+        self.plan.is_empty() && self.churn_rate <= 0.0
+    }
+
+    /// Merge the explicit plan with the seeded churn generator.  Churn
+    /// cycles drawn for a worker the explicit plan removes for good are
+    /// dropped — a generated rejoin must not resurrect it.
+    pub fn build_plan(&self, n_workers: usize, seed: u64) -> FaultPlan {
+        let mut plan = self.plan.clone();
+        if self.churn_rate > 0.0 {
+            let churn = FaultPlan::churn(
+                n_workers,
+                self.churn_rate,
+                self.churn_horizon,
+                self.rejoin_after,
+                seed,
+            );
+            plan.events.extend(
+                churn
+                    .events
+                    .into_iter()
+                    .filter(|e| !self.plan.permanently_crashes(e.worker)),
+            );
+        }
+        plan
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if !(self.churn_rate.is_finite() && self.churn_rate >= 0.0) {
+            return Err("churn_rate must be finite and ≥ 0".into());
+        }
+        if !(self.churn_horizon.is_finite() && self.churn_horizon > 0.0) {
+            return Err("churn_horizon must be positive".into());
+        }
+        if !(self.rejoin_after.is_finite() && self.rejoin_after > 0.0) {
+            return Err("rejoin_after must be positive".into());
+        }
+        // Worker bounds are checked against the instantiated cluster in
+        // `SimEnv::build`; here only the time/factor sanity.
+        self.plan.validate(usize::MAX)
+    }
+}
+
 /// One end-to-end run of a framework over a cluster.
 #[derive(Debug, Clone, PartialEq)]
 pub struct RunConfig {
@@ -246,6 +320,9 @@ pub struct RunConfig {
     /// `false` = tighten (more negative) — exposed for the ablation in
     /// DESIGN.md §9.
     pub alpha_relax: bool,
+    /// Fault-injection scenario (crash/rejoin churn, link degradation,
+    /// K spikes) — empty by default (DESIGN.md §10).
+    pub faults: FaultConfig,
 }
 
 impl RunConfig {
@@ -266,12 +343,14 @@ impl RunConfig {
             dynamic_alloc: true,
             prefetch: true,
             alpha_relax: true,
+            faults: FaultConfig::default(),
         }
     }
 
     pub fn validate(&self) -> Result<(), String> {
         self.hp.validate()?;
         self.cluster.validate()?;
+        self.faults.validate()?;
         if self.dss0 == 0 || self.mbs0 == 0 {
             return Err("dss0/mbs0 must be ≥ 1".into());
         }
@@ -341,6 +420,25 @@ impl RunConfig {
                     ("fp16_wire", Json::Bool(self.net.fp16_wire)),
                 ]),
             ),
+            (
+                "faults",
+                Json::obj(vec![
+                    ("churn_rate", Json::Num(self.faults.churn_rate)),
+                    ("churn_horizon", Json::Num(self.faults.churn_horizon)),
+                    ("rejoin_after", Json::Num(self.faults.rejoin_after)),
+                    (
+                        "events",
+                        Json::Arr(
+                            self.faults
+                                .plan
+                                .events
+                                .iter()
+                                .map(fault_event_json)
+                                .collect(),
+                        ),
+                    ),
+                ]),
+            ),
             ("dss0", Json::Num(self.dss0 as f64)),
             ("mbs0", Json::Num(self.mbs0 as f64)),
             ("target_acc", Json::Num(self.target_acc)),
@@ -382,6 +480,23 @@ impl RunConfig {
                 jitter: f.get("jitter").and_then(Json::as_f64).ok_or("jitter")?,
             });
         }
+        // Optional for older configs: missing `faults` = no faults.
+        let mut faults = FaultConfig::default();
+        if let Some(fj) = j.at("faults") {
+            faults.churn_rate =
+                fj.get("churn_rate").and_then(Json::as_f64).ok_or("faults/churn_rate")?;
+            faults.churn_horizon = fj
+                .get("churn_horizon")
+                .and_then(Json::as_f64)
+                .ok_or("faults/churn_horizon")?;
+            faults.rejoin_after = fj
+                .get("rejoin_after")
+                .and_then(Json::as_f64)
+                .ok_or("faults/rejoin_after")?;
+            for e in fj.get("events").and_then(Json::as_arr).ok_or("faults/events")? {
+                faults.plan.events.push(fault_event_from_json(e)?);
+            }
+        }
         let cfg = RunConfig {
             model: s("model")?,
             framework: s("framework")?,
@@ -418,10 +533,43 @@ impl RunConfig {
             dynamic_alloc: b("dynamic_alloc")?,
             prefetch: b("prefetch")?,
             alpha_relax: b("alpha_relax")?,
+            faults,
         };
         cfg.validate()?;
         Ok(cfg)
     }
+}
+
+fn fault_event_json(e: &FaultEvent) -> Json {
+    let (kind, factor, duration) = match e.kind {
+        FaultKind::Crash => ("crash", 0.0, 0.0),
+        FaultKind::Rejoin => ("rejoin", 0.0, 0.0),
+        FaultKind::LinkDegrade { factor, duration } => ("link", factor, duration),
+        FaultKind::KSpike { factor, duration } => ("kspike", factor, duration),
+    };
+    Json::obj(vec![
+        ("kind", Json::Str(kind.to_string())),
+        ("worker", Json::Num(e.worker as f64)),
+        ("at", Json::Num(e.at)),
+        ("factor", Json::Num(factor)),
+        ("duration", Json::Num(duration)),
+    ])
+}
+
+fn fault_event_from_json(e: &Json) -> Result<FaultEvent, String> {
+    let kind_s = e.get("kind").and_then(Json::as_str).ok_or("fault kind")?;
+    let worker = e.get("worker").and_then(Json::as_usize).ok_or("fault worker")?;
+    let at = e.get("at").and_then(Json::as_f64).ok_or("fault at")?;
+    let factor = e.get("factor").and_then(Json::as_f64).ok_or("fault factor")?;
+    let duration = e.get("duration").and_then(Json::as_f64).ok_or("fault duration")?;
+    let kind = match kind_s {
+        "crash" => FaultKind::Crash,
+        "rejoin" => FaultKind::Rejoin,
+        "link" => FaultKind::LinkDegrade { factor, duration },
+        "kspike" => FaultKind::KSpike { factor, duration },
+        other => return Err(format!("unknown fault kind '{other}'")),
+    };
+    Ok(FaultEvent { at, worker, kind })
 }
 
 #[cfg(test)]
@@ -483,9 +631,61 @@ mod tests {
         rc.seed = 1234;
         rc.hp.alpha = -1.6;
         rc.net.fp16_wire = false;
+        rc.faults.churn_rate = 1.5;
+        rc.faults.rejoin_after = 6.5;
+        rc.faults.plan = FaultPlan::new()
+            .crash_rejoin(0, 2.0, 4.0)
+            .degrade_link(3, 1.0, 2.0, 8.0)
+            .k_spike(5, 3.0, 2.5, 3.0)
+            .crash(7, 10.0);
         let j = rc.to_json().to_string();
         let back = RunConfig::from_json(&Json::parse(&j).unwrap()).unwrap();
         assert_eq!(back, rc);
+    }
+
+    #[test]
+    fn faults_are_optional_in_json_and_validated() {
+        // A config serialized before the faults subsystem still parses.
+        let mut rc = RunConfig::new("cnn", "hermes");
+        let j = rc.to_json();
+        let mut m = match j {
+            Json::Obj(m) => m,
+            _ => unreachable!(),
+        };
+        m.remove("faults");
+        let back = RunConfig::from_json(&Json::Obj(m)).unwrap();
+        assert!(back.faults.is_empty());
+
+        rc.faults.churn_rate = -1.0;
+        assert!(rc.validate().is_err());
+        rc.faults = FaultConfig::default();
+        rc.faults.plan = FaultPlan::new().degrade_link(0, 1.0, -3.0, 2.0);
+        assert!(rc.validate().is_err());
+        rc.faults = FaultConfig::default();
+        rc.faults.churn_rate = 2.0;
+        rc.validate().unwrap();
+        // The generated plan is seed-deterministic and non-empty.
+        let a = rc.faults.build_plan(12, 42);
+        let b = rc.faults.build_plan(12, 42);
+        assert_eq!(a, b);
+        assert!(!a.is_empty());
+    }
+
+    #[test]
+    fn generated_churn_cannot_resurrect_a_permanently_crashed_worker() {
+        let mut fc = FaultConfig::default();
+        fc.plan = FaultPlan::new().crash(0, 1.0); // explicit permanent departure
+        fc.churn_rate = 50.0; // ~30 generated cycles over 2 workers
+        let plan = fc.build_plan(2, 7);
+        assert!(plan
+            .events
+            .iter()
+            .all(|e| !(e.worker == 0 && e.kind == FaultKind::Rejoin)));
+        // The other worker still churns.
+        assert!(plan
+            .events
+            .iter()
+            .any(|e| e.worker == 1 && e.kind == FaultKind::Rejoin));
     }
 
     #[test]

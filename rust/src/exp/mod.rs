@@ -377,6 +377,11 @@ pub fn fig14_alpha_beta(out: &Path, model: &str, artifacts: &Path) -> Result<()>
 
 // ------------------------------------------------------------- Table 3
 
+/// Upper bound on the table3 job count (4 baselines + ≤3 Hermes
+/// settings) — benches size their sweep width from this instead of
+/// hardcoding the current job list's length.
+pub const TABLE3_MAX_JOBS: usize = 7;
+
 /// Table III: every framework on one model, with iterations, virtual
 /// time, WI, accuracy, API calls and speedup vs BSP.  Rows run as one
 /// parallel sweep (one core per framework).
@@ -460,6 +465,80 @@ pub fn table3_with_threads(
     Ok(rows)
 }
 
+// ------------------------------------------------------------- faults
+
+/// Default churn rates swept by `hermes exp faults` (crash/rejoin
+/// cycles per 100 virtual seconds, cluster-wide).
+pub const FAULT_SWEEP_RATES: [f64; 3] = [0.0, 1.0, 2.5];
+
+/// `hermes exp faults` — the churn sweep (ISSUE 2): every framework ×
+/// churn rate on the same seed, reporting convergence, wall time and
+/// traffic under deterministic crash/rejoin cycles.  Writes
+/// `faults_churn_{model}.csv`; returns rows in (rate-major, framework-
+/// minor) order.
+pub fn faults_churn_sweep(
+    out: &Path,
+    model: &str,
+    artifacts: &Path,
+    threads: usize,
+    rates: &[f64],
+    frameworks: &[&str],
+) -> Result<Vec<RunMetrics>> {
+    let mut jobs = Vec::new();
+    for &rate in rates {
+        for fw in frameworks {
+            let mut cfg = scaled_cfg(model, fw);
+            cfg.faults.churn_rate = rate;
+            jobs.push(SweepJob::new(format!("{fw}@churn{rate}"), cfg));
+        }
+    }
+    let rows = run_jobs(jobs, model, artifacts, threads)?;
+
+    let mut csv = String::from(
+        "framework,churn_rate,crashes,rejoins,iterations,virtual_time_s,\
+         final_loss,final_accuracy,bytes,api_calls,converged\n",
+    );
+    let mut table = TableFmt::new(&[
+        "Framework",
+        "Churn",
+        "Crashes",
+        "Time",
+        "Conv. Acc.",
+        "Bytes",
+    ]);
+    let mut i = 0usize;
+    for &rate in rates {
+        for fw in frameworks {
+            let r = &rows[i];
+            i += 1;
+            csv += &format!(
+                "{fw},{rate},{},{},{},{:.3},{:.5},{:.5},{},{},{}\n",
+                r.fault_crashes,
+                r.fault_rejoins,
+                r.iterations,
+                r.virtual_time,
+                r.final_loss,
+                r.final_accuracy,
+                r.bytes,
+                r.api_calls,
+                r.converged
+            );
+            table.row(vec![
+                fw.to_string(),
+                format!("{rate}"),
+                format!("{}", r.fault_crashes),
+                fmt_duration(r.virtual_time),
+                format!("{:.2}%", r.final_accuracy * 100.0),
+                r.bytes.to_string(),
+            ]);
+        }
+    }
+    let rendered = table.render();
+    println!("\nChurn sweep ({model}):\n{rendered}");
+    write_file(out, &format!("faults_churn_{model}.csv"), &csv)?;
+    Ok(rows)
+}
+
 /// Run the complete experiment suite.
 pub fn run_all(out: &Path, model: &str, artifacts: &Path) -> Result<()> {
     fig1_timelines(out, model, artifacts)?;
@@ -471,6 +550,14 @@ pub fn run_all(out: &Path, model: &str, artifacts: &Path) -> Result<()> {
     fig13_major_updates(out, model, artifacts)?;
     fig14_alpha_beta(out, model, artifacts)?;
     table3(out, model, artifacts)?;
+    faults_churn_sweep(
+        out,
+        model,
+        artifacts,
+        0,
+        &FAULT_SWEEP_RATES,
+        &crate::frameworks::ALL,
+    )?;
     println!("\nAll experiment outputs in {}", out.display());
     Ok(())
 }
@@ -493,6 +580,26 @@ mod tests {
         let rt = make_runtime("mock", Path::new("/nonexistent")).unwrap();
         assert_eq!(rt.meta().name, "mock");
         assert!(make_runtime("cnn", Path::new("/nonexistent")).is_err());
+    }
+
+    #[test]
+    fn faults_sweep_writes_csv_and_counts_churn() {
+        let dir = std::env::temp_dir().join("hermes_exp_faults_test");
+        let rows = faults_churn_sweep(
+            &dir,
+            "mock",
+            Path::new("/nonexistent"),
+            0,
+            &[0.0, 3.0],
+            &["hermes"],
+        )
+        .unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].fault_crashes, 0, "rate 0 must inject nothing");
+        assert!(dir.join("faults_churn_mock.csv").exists());
+        let csv = std::fs::read_to_string(dir.join("faults_churn_mock.csv")).unwrap();
+        assert_eq!(csv.lines().count(), 3, "{csv}");
+        assert!(csv.lines().nth(1).unwrap().starts_with("hermes,0,"), "{csv}");
     }
 
     #[test]

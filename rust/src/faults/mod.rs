@@ -1,0 +1,447 @@
+//! Deterministic fault injection & elastic membership (ISSUE 2).
+//!
+//! Real edge fleets churn: devices crash, rejoin, lose bandwidth and
+//! slow down under thermal/background load (ADSP, ScaDLES treat this as
+//! the default regime).  This module adds that axis to the DES without
+//! giving up the repo's core invariant — *a run is a pure function of
+//! seed + plan*:
+//!
+//! * A [`FaultPlan`] is a declarative, seeded list of [`FaultEvent`]s
+//!   (crash at virtual time `t`, rejoin after `d`, transient link
+//!   degradation, Eq. 3 K-spikes).
+//! * [`FaultTimeline::from_plan`] compiles the plan into primitive
+//!   [`FaultAction`]s sorted by time, and [`FaultTimeline::schedule`]
+//!   injects one `Ev::Tag` per action into the event queue so the
+//!   event-driven drivers are guaranteed a wake-up at every fault time
+//!   (round-based drivers apply due actions at round boundaries).
+//! * `SimEnv::apply_faults_up_to` interprets due actions against the
+//!   cluster membership, the network penalty table and the cost model;
+//!   everything downstream (dataset re-splits, resyncs, deferred
+//!   events) is driven off the same deterministic queue.
+//!
+//! Crash semantics: a crashed worker leaves the active membership set;
+//! events popped for it while it is down are *deferred to its scheduled
+//! rejoin* (its chain resumes after a state resync) or swallowed when
+//! no rejoin is planned.  This keeps exactly one event chain per worker
+//! across any crash/rejoin sequence — no zombie duplicates — which is
+//! what makes churned runs bit-identical across invocations (tested in
+//! `tests/faults_churn.rs`).
+
+use crate::sim::{Ev, SimQueue};
+use crate::util::rng::Xoshiro256pp;
+
+/// Tag range reserved for fault wake-ups; `tag - FAULT_TAG_BASE` is the
+/// action index in the compiled timeline.  Driver-defined tags are tiny
+/// constants, so the ranges cannot collide.
+pub const FAULT_TAG_BASE: u32 = 0xFA00_0000;
+
+/// Is this popped event a fault wake-up (as opposed to driver traffic)?
+pub fn is_fault_tag(ev: &Ev) -> bool {
+    matches!(ev, Ev::Tag { tag, .. } if *tag >= FAULT_TAG_BASE)
+}
+
+/// What happens to a worker, declaratively.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultKind {
+    /// The worker process dies at `at` (loses local state, leaves the
+    /// membership set).
+    Crash,
+    /// The worker comes back at `at` (resynced from the global model).
+    Rejoin,
+    /// The worker's link serialization cost multiplies by `factor` for
+    /// `duration` seconds (transient degradation).
+    LinkDegrade { factor: f64, duration: f64 },
+    /// The worker's Eq. 3 coefficient K multiplies by `factor` for
+    /// `duration` seconds (progressive-slowdown spike, §III-C).
+    KSpike { factor: f64, duration: f64 },
+}
+
+/// One declarative fault.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultEvent {
+    /// Virtual time the fault fires (seconds).
+    pub at: f64,
+    pub worker: usize,
+    pub kind: FaultKind,
+}
+
+/// A declarative, seed-reproducible fault scenario.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultPlan {
+    pub events: Vec<FaultEvent>,
+}
+
+impl FaultPlan {
+    pub fn new() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    /// Kill `worker` at `at` with no rejoin (permanent departure).
+    pub fn crash(mut self, worker: usize, at: f64) -> FaultPlan {
+        self.events.push(FaultEvent { at, worker, kind: FaultKind::Crash });
+        self
+    }
+
+    /// Kill `worker` at `at`; it rejoins `down_for` seconds later.
+    pub fn crash_rejoin(mut self, worker: usize, at: f64, down_for: f64) -> FaultPlan {
+        self.events.push(FaultEvent { at, worker, kind: FaultKind::Crash });
+        self.events.push(FaultEvent {
+            at: at + down_for,
+            worker,
+            kind: FaultKind::Rejoin,
+        });
+        self
+    }
+
+    /// Multiply `worker`'s link cost by `factor` over `[at, at+duration)`.
+    pub fn degrade_link(
+        mut self,
+        worker: usize,
+        at: f64,
+        duration: f64,
+        factor: f64,
+    ) -> FaultPlan {
+        self.events.push(FaultEvent {
+            at,
+            worker,
+            kind: FaultKind::LinkDegrade { factor, duration },
+        });
+        self
+    }
+
+    /// Multiply `worker`'s K by `factor` over `[at, at+duration)`.
+    pub fn k_spike(mut self, worker: usize, at: f64, duration: f64, factor: f64) -> FaultPlan {
+        self.events.push(FaultEvent {
+            at,
+            worker,
+            kind: FaultKind::KSpike { factor, duration },
+        });
+        self
+    }
+
+    /// Append every event of `other`.
+    pub fn extend(&mut self, other: FaultPlan) {
+        self.events.extend(other.events);
+    }
+
+    /// Does this plan remove `worker` for good — a crash with no rejoin
+    /// at or after it?  (Plan composition uses this so generated churn
+    /// can't resurrect an explicitly departed worker.)
+    pub fn permanently_crashes(&self, worker: usize) -> bool {
+        let last_crash = self
+            .events
+            .iter()
+            .filter(|e| e.worker == worker && e.kind == FaultKind::Crash)
+            .map(|e| e.at)
+            .fold(f64::NEG_INFINITY, f64::max);
+        if last_crash == f64::NEG_INFINITY {
+            return false;
+        }
+        !self
+            .events
+            .iter()
+            .any(|e| e.worker == worker && e.kind == FaultKind::Rejoin && e.at >= last_crash)
+    }
+
+    /// Seeded churn generator: roughly `rate_per_100s` crash/rejoin
+    /// cycles per 100 virtual seconds across the whole cluster, drawn
+    /// over `[0.05·horizon, 0.85·horizon]`.  Per-worker outages never
+    /// overlap (a worker's next crash waits for its previous rejoin),
+    /// and the plan is a pure function of the arguments.
+    pub fn churn(
+        n_workers: usize,
+        rate_per_100s: f64,
+        horizon: f64,
+        down_for: f64,
+        seed: u64,
+    ) -> FaultPlan {
+        let mut plan = FaultPlan::default();
+        if n_workers == 0 || rate_per_100s <= 0.0 || horizon <= 0.0 {
+            return plan;
+        }
+        let n_events = ((rate_per_100s * horizon / 100.0).round() as usize).max(1);
+        let mut rng = Xoshiro256pp::stream(seed, 0xFA17);
+        let mut free_at = vec![0.0f64; n_workers];
+        let down = down_for.max(0.5);
+        for _ in 0..n_events {
+            let w = rng.next_below(n_workers as u64) as usize;
+            let mut at = rng.uniform(0.05 * horizon, 0.85 * horizon);
+            if at < free_at[w] {
+                at = free_at[w];
+            }
+            plan = plan.crash_rejoin(w, at, down);
+            free_at[w] = at + down + 1.0;
+        }
+        plan
+    }
+
+    /// Reject ill-formed plans (cheap, run once at `SimEnv::build`).
+    pub fn validate(&self, n_workers: usize) -> Result<(), String> {
+        if self.events.len() > 100_000 {
+            return Err("fault plan too large".into());
+        }
+        for e in &self.events {
+            if e.worker >= n_workers {
+                return Err(format!(
+                    "fault targets worker {} but the cluster has {n_workers}",
+                    e.worker
+                ));
+            }
+            if !e.at.is_finite() || e.at < 0.0 {
+                return Err(format!("fault time {} invalid", e.at));
+            }
+            match e.kind {
+                FaultKind::LinkDegrade { factor, duration }
+                | FaultKind::KSpike { factor, duration } => {
+                    if !(factor.is_finite() && factor > 0.0) {
+                        return Err(format!("fault factor {factor} invalid"));
+                    }
+                    if !(duration.is_finite() && duration > 0.0) {
+                        return Err(format!("fault duration {duration} invalid"));
+                    }
+                }
+                FaultKind::Crash | FaultKind::Rejoin => {}
+            }
+        }
+        Ok(())
+    }
+}
+
+/// A primitive state change the simulator applies at one instant.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultAction {
+    Crash { worker: usize },
+    Rejoin { worker: usize },
+    LinkDegradeStart { worker: usize, factor: f64 },
+    LinkDegradeEnd { worker: usize, factor: f64 },
+    KSpikeStart { worker: usize, factor: f64 },
+    KSpikeEnd { worker: usize, factor: f64 },
+}
+
+impl FaultAction {
+    pub fn worker(&self) -> usize {
+        match *self {
+            FaultAction::Crash { worker }
+            | FaultAction::Rejoin { worker }
+            | FaultAction::LinkDegradeStart { worker, .. }
+            | FaultAction::LinkDegradeEnd { worker, .. }
+            | FaultAction::KSpikeStart { worker, .. }
+            | FaultAction::KSpikeEnd { worker, .. } => worker,
+        }
+    }
+}
+
+/// The compiled plan: primitive actions sorted by time, consumed front
+/// to back as virtual time advances.
+#[derive(Debug, Clone, Default)]
+pub struct FaultTimeline {
+    actions: Vec<(f64, FaultAction)>,
+    next: usize,
+}
+
+impl FaultTimeline {
+    /// Expand durations into start/end pairs and sort (stably) by time,
+    /// so ties resolve in plan order.
+    pub fn from_plan(plan: &FaultPlan) -> FaultTimeline {
+        let mut actions: Vec<(f64, FaultAction)> = Vec::new();
+        for e in &plan.events {
+            let w = e.worker;
+            match e.kind {
+                FaultKind::Crash => actions.push((e.at, FaultAction::Crash { worker: w })),
+                FaultKind::Rejoin => actions.push((e.at, FaultAction::Rejoin { worker: w })),
+                FaultKind::LinkDegrade { factor, duration } => {
+                    actions.push((e.at, FaultAction::LinkDegradeStart { worker: w, factor }));
+                    actions.push((
+                        e.at + duration,
+                        FaultAction::LinkDegradeEnd { worker: w, factor },
+                    ));
+                }
+                FaultKind::KSpike { factor, duration } => {
+                    actions.push((e.at, FaultAction::KSpikeStart { worker: w, factor }));
+                    actions.push((
+                        e.at + duration,
+                        FaultAction::KSpikeEnd { worker: w, factor },
+                    ));
+                }
+            }
+        }
+        actions.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        FaultTimeline { actions, next: 0 }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.actions.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.actions.len()
+    }
+
+    /// Actions not yet applied.
+    pub fn remaining(&self) -> usize {
+        self.actions.len() - self.next
+    }
+
+    /// Inject one `Ev::Tag` wake-up per action so event-driven drivers
+    /// pop at every fault time even when no regular traffic is due.
+    pub fn schedule(&self, q: &mut SimQueue) {
+        for (i, &(t, a)) in self.actions.iter().enumerate() {
+            q.push_at(
+                t.max(q.now()),
+                Ev::Tag { worker: a.worker(), tag: FAULT_TAG_BASE + i as u32 },
+            );
+        }
+    }
+
+    /// Pop the next action due at or before `t` (in time order).
+    pub fn pop_due(&mut self, t: f64) -> Option<(f64, FaultAction)> {
+        let &(at, a) = self.actions.get(self.next)?;
+        if at <= t {
+            self.next += 1;
+            Some((at, a))
+        } else {
+            None
+        }
+    }
+
+    /// The next *unapplied* rejoin time for `worker`, if any — where a
+    /// dead worker's deferred events resume.
+    pub fn next_rejoin_time(&self, worker: usize) -> Option<f64> {
+        self.actions[self.next..].iter().find_map(|&(t, a)| match a {
+            FaultAction::Rejoin { worker: w } if w == worker => Some(t),
+            _ => None,
+        })
+    }
+}
+
+/// What one `apply_faults_up_to` pass changed (drivers react to this).
+#[derive(Debug, Default)]
+pub struct FaultDelta {
+    /// Workers revived in this pass (already resynced by the env).
+    pub rejoined: Vec<usize>,
+    /// Any crash or rejoin was applied (membership set changed).
+    pub membership_changed: bool,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_builders_compile_to_sorted_pairs() {
+        let plan = FaultPlan::new()
+            .crash_rejoin(1, 5.0, 3.0)
+            .degrade_link(2, 1.0, 4.0, 8.0)
+            .k_spike(0, 2.0, 2.0, 3.0)
+            .crash(3, 0.5);
+        plan.validate(4).unwrap();
+        let tl = FaultTimeline::from_plan(&plan);
+        assert_eq!(tl.len(), 7); // 2 + 2 + 2 + 1
+        // Sorted by time.
+        let times: Vec<f64> = tl.actions.iter().map(|&(t, _)| t).collect();
+        let mut sorted = times.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(times, sorted);
+        assert_eq!(tl.actions[0], (0.5, FaultAction::Crash { worker: 3 }));
+        assert_eq!(
+            tl.actions[1],
+            (1.0, FaultAction::LinkDegradeStart { worker: 2, factor: 8.0 })
+        );
+    }
+
+    #[test]
+    fn pop_due_consumes_in_order_and_respects_time() {
+        let plan = FaultPlan::new().crash_rejoin(0, 2.0, 4.0);
+        let mut tl = FaultTimeline::from_plan(&plan);
+        assert!(tl.pop_due(1.0).is_none());
+        assert_eq!(tl.pop_due(2.5), Some((2.0, FaultAction::Crash { worker: 0 })));
+        assert!(tl.pop_due(2.5).is_none()); // rejoin at 6.0 not due
+        assert_eq!(tl.next_rejoin_time(0), Some(6.0));
+        assert_eq!(tl.next_rejoin_time(1), None);
+        assert_eq!(tl.pop_due(10.0), Some((6.0, FaultAction::Rejoin { worker: 0 })));
+        assert!(tl.pop_due(f64::MAX).is_none());
+        assert_eq!(tl.remaining(), 0);
+    }
+
+    #[test]
+    fn schedule_injects_fault_tags() {
+        let plan = FaultPlan::new().crash_rejoin(2, 3.0, 1.0);
+        let tl = FaultTimeline::from_plan(&plan);
+        let mut q = SimQueue::new();
+        tl.schedule(&mut q);
+        assert_eq!(q.len(), 2);
+        let (t, ev) = q.pop().unwrap();
+        assert_eq!(t, 3.0);
+        assert!(is_fault_tag(&ev));
+        assert_eq!(ev.worker(), 2);
+        assert!(!is_fault_tag(&Ev::Tag { worker: 2, tag: 0 }));
+        assert!(!is_fault_tag(&Ev::TrainDone { worker: 2 }));
+    }
+
+    #[test]
+    fn churn_is_deterministic_and_non_overlapping_per_worker() {
+        let a = FaultPlan::churn(12, 2.5, 120.0, 10.0, 7);
+        let b = FaultPlan::churn(12, 2.5, 120.0, 10.0, 7);
+        assert_eq!(a, b);
+        assert!(!a.is_empty());
+        let c = FaultPlan::churn(12, 2.5, 120.0, 10.0, 8);
+        assert_ne!(a, c, "seed had no effect");
+        a.validate(12).unwrap();
+        // Per-worker crash/rejoin intervals must not overlap.
+        for w in 0..12 {
+            let mut intervals: Vec<(f64, f64)> = Vec::new();
+            let mut crash_at = None;
+            for e in &a.events {
+                if e.worker != w {
+                    continue;
+                }
+                match e.kind {
+                    FaultKind::Crash => crash_at = Some(e.at),
+                    FaultKind::Rejoin => {
+                        intervals.push((crash_at.take().unwrap(), e.at))
+                    }
+                    _ => {}
+                }
+            }
+            intervals.sort_by(|x, y| x.0.partial_cmp(&y.0).unwrap());
+            for pair in intervals.windows(2) {
+                assert!(pair[0].1 <= pair[1].0, "worker {w} overlaps: {pair:?}");
+            }
+        }
+        // Zero rate / zero workers are empty plans.
+        assert!(FaultPlan::churn(12, 0.0, 120.0, 10.0, 1).is_empty());
+        assert!(FaultPlan::churn(0, 5.0, 120.0, 10.0, 1).is_empty());
+    }
+
+    #[test]
+    fn permanent_crash_detection() {
+        let p = FaultPlan::new().crash(1, 5.0).crash_rejoin(2, 1.0, 2.0);
+        assert!(p.permanently_crashes(1));
+        assert!(!p.permanently_crashes(2));
+        assert!(!p.permanently_crashes(0));
+        // A crash after the last rejoin is permanent again.
+        let p2 = FaultPlan::new().crash_rejoin(1, 1.0, 2.0).crash(1, 9.0);
+        assert!(p2.permanently_crashes(1));
+    }
+
+    #[test]
+    fn validate_rejects_bad_plans() {
+        assert!(FaultPlan::new().crash(5, 1.0).validate(4).is_err());
+        assert!(FaultPlan::new().crash(0, -1.0).validate(4).is_err());
+        assert!(FaultPlan::new().crash(0, f64::NAN).validate(4).is_err());
+        assert!(FaultPlan::new()
+            .degrade_link(0, 1.0, 2.0, 0.0)
+            .validate(4)
+            .is_err());
+        assert!(FaultPlan::new().k_spike(0, 1.0, -2.0, 3.0).validate(4).is_err());
+        assert!(FaultPlan::new().crash_rejoin(0, 1.0, 2.0).validate(4).is_ok());
+    }
+}

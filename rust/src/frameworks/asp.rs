@@ -17,7 +17,6 @@ pub fn run(env: &mut SimEnv) -> Result<()> {
     // Snapshot scratch, leased once; gradient buffers cycle through the
     // pool (acquired at train start, released after aggregation).
     let mut before = env.pool.acquire_like(&env.ps.params);
-    let mut stopping = false;
 
     // Bootstrap: model + dataset to every worker, then first iteration.
     let model_b = env.model_bytes();
@@ -29,8 +28,12 @@ pub fn run(env: &mut SimEnv) -> Result<()> {
     }
 
     while let Some((t, ev)) = env.queue.pop() {
-        if stopping {
-            continue; // drain
+        if env.has_faults() {
+            env.apply_faults_up_to(t);
+            if env.is_crashed(ev.worker()) && !crate::faults::is_fault_tag(&ev) {
+                env.defer_to_rejoin(ev); // dead worker: chain resumes at rejoin
+                continue;
+            }
         }
         match ev {
             Ev::Tag { worker: w, tag: START } => {
@@ -50,8 +53,7 @@ pub fn run(env: &mut SimEnv) -> Result<()> {
                 if env.ps.updates % env.cfg.global_eval_every as u64 == 0
                     && env.eval_global_and_check()?
                 {
-                    stopping = true;
-                    continue;
+                    break;
                 }
                 // Reply with the fresh global model.
                 let d = env.transfer(w, env.model_bytes());
@@ -60,8 +62,7 @@ pub fn run(env: &mut SimEnv) -> Result<()> {
             Ev::ArriveAtWorker { worker: w } => {
                 env.workers[w].adopt_global(&env.ps.params, env.ps.version);
                 if env.iterations_exhausted() {
-                    stopping = true;
-                    continue;
+                    break;
                 }
                 start_iteration(env, w, &mut pending_grad, &mut before, t)?;
             }

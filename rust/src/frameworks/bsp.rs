@@ -18,6 +18,12 @@ pub fn run(env: &mut SimEnv) -> Result<()> {
     let mut grads: Vec<ParamVec> = Vec::with_capacity(env.n_workers());
     loop {
         let t0 = env.queue.now();
+        // Crash/rejoin churn lands at superstep granularity: rejoined
+        // workers re-enter `active` and adopt the model in the round
+        // broadcast below (BSP re-ships model + dataset every round).
+        if env.has_faults() {
+            env.apply_faults_up_to(t0);
+        }
         let active = env.cluster.active_ids();
         if active.is_empty() {
             break;

@@ -10,13 +10,14 @@ use anyhow::Result;
 use crate::alloc::Allocation;
 use crate::cluster::Cluster;
 use crate::config::RunConfig;
-use crate::data::{partition_pools, DataKind, Dataset, Partition, Probe};
+use crate::data::{partition_pools, DataKind, Dataset, Partition, Probe, Shard};
+use crate::faults::{FaultAction, FaultDelta, FaultTimeline};
 use crate::gup::Gup;
 use crate::metrics::{RunMetrics, Segment, SegmentKind, WorkerMetrics};
 use crate::net::SimNet;
 use crate::ps::PsState;
 use crate::runtime::{init_params, ModelRuntime};
-use crate::sim::SimQueue;
+use crate::sim::{Ev, SimQueue};
 use crate::tensor::BufferPool;
 use crate::worker::WorkerCore;
 
@@ -52,6 +53,13 @@ pub struct SimEnv {
     best_acc: f64,
     stale_evals: usize,
     wall_start: Instant,
+    /// Compiled fault timeline (crash/rejoin/degradation actions in
+    /// virtual-time order; empty for fault-free runs — DESIGN.md §10).
+    faults: FaultTimeline,
+    /// Training indices retained for membership-change re-splits.
+    train_idx: Vec<usize>,
+    /// Pool re-splits performed (perturbs the re-split seed stream).
+    resplits: u64,
 }
 
 impl SimEnv {
@@ -115,11 +123,20 @@ impl SimEnv {
         ];
 
         let net = SimNet::new(cfg.net.clone(), n);
+
+        // Compile the fault scenario and inject one wake-up event per
+        // action, so event-driven drivers pop at every fault time.
+        let plan = cfg.faults.build_plan(n, cfg.seed);
+        plan.validate(n).map_err(|e| anyhow::anyhow!(e))?;
+        let faults = FaultTimeline::from_plan(&plan);
+        let mut queue = SimQueue::new();
+        faults.schedule(&mut queue);
+
         Ok(SimEnv {
             cfg,
             cluster,
             net,
-            queue: SimQueue::new(),
+            queue,
             ds,
             probe,
             workers,
@@ -132,6 +149,9 @@ impl SimEnv {
             best_acc: 0.0,
             stale_evals: 0,
             wall_start: Instant::now(),
+            faults,
+            train_idx,
+            resplits: 0,
         })
     }
 
@@ -171,6 +191,115 @@ impl SimEnv {
         let t = self.net.transfer_bytes(w, bytes);
         self.run.workers[w].comm_time += t;
         t
+    }
+
+    // ------------------------------------------- faults & elasticity
+
+    /// Does this run carry a fault scenario at all?  Fault-free runs
+    /// skip every per-event fault check (bit-identical to the
+    /// pre-faults engine).
+    pub fn has_faults(&self) -> bool {
+        !self.faults.is_empty()
+    }
+
+    pub fn is_crashed(&self, w: usize) -> bool {
+        self.cluster.node(w).crashed
+    }
+
+    /// Apply every fault action due at or before `t`: membership
+    /// changes (with GUP-style dataset-pool re-splits and rejoin
+    /// resyncs), link penalties and K spikes.  Event drivers call this
+    /// on every pop; round drivers at round boundaries.
+    pub fn apply_faults_up_to(&mut self, t: f64) -> FaultDelta {
+        let mut delta = FaultDelta::default();
+        while let Some((_, action)) = self.faults.pop_due(t) {
+            match action {
+                FaultAction::Crash { worker } => {
+                    if !self.cluster.node(worker).crashed {
+                        self.cluster.crash(worker);
+                        self.run.fault_crashes += 1;
+                        delta.membership_changed = true;
+                    }
+                }
+                FaultAction::Rejoin { worker } => {
+                    if self.cluster.node(worker).crashed {
+                        self.cluster.revive(worker);
+                        self.run.fault_rejoins += 1;
+                        delta.membership_changed = true;
+                        delta.rejoined.push(worker);
+                        self.rejoin_resync(worker);
+                    }
+                }
+                FaultAction::LinkDegradeStart { worker, factor } => {
+                    self.net.scale_link_penalty(worker, factor);
+                }
+                FaultAction::LinkDegradeEnd { worker, factor } => {
+                    self.net.unscale_link_penalty(worker, factor);
+                }
+                FaultAction::KSpikeStart { worker, factor } => {
+                    self.cluster.scale_k(worker, factor);
+                }
+                FaultAction::KSpikeEnd { worker, factor } => {
+                    self.cluster.unscale_k(worker, factor);
+                }
+            }
+        }
+        if delta.membership_changed {
+            self.resplit_pools();
+        }
+        delta
+    }
+
+    /// A popped event belonging to a crashed worker: requeue it at the
+    /// worker's scheduled rejoin (its chain resumes after the resync),
+    /// or swallow it when no rejoin is planned.  Exactly one event
+    /// chain per worker survives any crash/rejoin sequence.
+    pub fn defer_to_rejoin(&mut self, ev: Ev) {
+        if let Some(t) = self.faults.next_rejoin_time(ev.worker()) {
+            self.queue.push_at(t.max(self.queue.now()), ev);
+        }
+    }
+
+    /// State resync for a rejoining worker: ship the global model and
+    /// its dataset (accounted traffic), adopt, and restart the GUP
+    /// window — the simulated twin of the live-mode reconnect path.
+    fn rejoin_resync(&mut self, w: usize) {
+        let model_b = self.model_bytes();
+        let dss = self.workers[w].dss;
+        let data_b = self.dataset_bytes(dss);
+        self.transfer(w, model_b);
+        self.transfer(w, data_b);
+        self.workers[w].adopt_global(&self.ps.params, self.ps.version);
+        self.workers[w].gup.reset_window();
+        self.workers[w].last_push_pending = false;
+    }
+
+    /// The paper's dynamic-allocation machinery on the membership axis:
+    /// when a worker leaves or rejoins, re-split the training pools
+    /// over the *active* workers (Hermes/GUP dataset reallocation) and
+    /// send each survivor a DatasetAssign control message.
+    fn resplit_pools(&mut self) {
+        let active = self.cluster.active_ids();
+        if active.is_empty() {
+            return;
+        }
+        self.resplits += 1;
+        let kind = DataKind::for_model(&self.cfg.model);
+        let shards = partition_pools(
+            &self.ds,
+            &self.train_idx,
+            active.len(),
+            Partition::for_kind(kind),
+            self.cfg.seed.wrapping_add(self.resplits),
+        );
+        let ctl = self.ctl_bytes();
+        for (shard, &w) in shards.into_iter().zip(active.iter()) {
+            self.workers[w].shard = Shard { worker: w, pool: shard.pool };
+            let dss = self.workers[w].dss;
+            let mbs = self.workers[w].mbs;
+            self.workers[w].assign(dss, mbs);
+            self.transfer(w, ctl);
+        }
     }
 
     /// Charge `dt` of barrier wait time to worker `w`.
@@ -258,6 +387,8 @@ impl SimEnv {
             let wm = &mut self.run.workers[i];
             wm.model_requests = w.model_requests;
             wm.pushes = w.gup.pushes;
+            wm.bytes = self.net.worker(i).bytes;
+            wm.api_calls = self.net.worker(i).api_calls;
         }
         self.run
     }
@@ -366,6 +497,63 @@ mod tests {
         let run = env.finish();
         assert!(!run.converged);
         assert!(run.final_loss > 0.0);
+    }
+
+    #[test]
+    fn fault_plan_compiles_schedules_and_applies() {
+        use crate::faults::FaultPlan;
+        let mut cfg = mock_cfg();
+        cfg.faults.plan = FaultPlan::new()
+            .crash_rejoin(0, 2.0, 4.0)
+            .degrade_link(3, 1.0, 2.0, 8.0)
+            .k_spike(5, 1.0, 2.0, 3.0);
+        let mut env = SimEnv::build(cfg, Box::new(MockRuntime::new())).unwrap();
+        assert!(env.has_faults());
+        // One wake-up tag per compiled action sits in the queue.
+        assert_eq!(env.queue.len(), 6);
+        let k5 = env.cluster.node(5).k;
+
+        // Nothing due before t=1.
+        let d = env.apply_faults_up_to(0.5);
+        assert!(d.rejoined.is_empty() && !d.membership_changed);
+
+        // t=1.5: link degrade + K spike started; no membership change.
+        let d = env.apply_faults_up_to(1.5);
+        assert!(!d.membership_changed);
+        assert_eq!(env.net.link_penalty(3), 8.0);
+        assert!((env.cluster.node(5).k - 3.0 * k5).abs() < 1e-12);
+
+        // t=3.5: crash applied (and the transients ended).
+        let d = env.apply_faults_up_to(3.5);
+        assert!(d.membership_changed);
+        assert!(env.is_crashed(0));
+        assert_eq!(env.run.fault_crashes, 1);
+        assert_eq!(env.net.link_penalty(3), 1.0);
+
+        // t=6: rejoin applies, resyncs (model+dataset traffic) and
+        // reports the worker for the drivers.
+        let bytes_before = env.net.total().bytes;
+        let d = env.apply_faults_up_to(6.0);
+        assert_eq!(d.rejoined, vec![0]);
+        assert!(!env.is_crashed(0));
+        assert_eq!(env.run.fault_rejoins, 1);
+        assert!(env.net.total().bytes > bytes_before);
+        assert!(env.workers[0].model_requests > 0);
+    }
+
+    #[test]
+    fn defer_to_rejoin_requeues_only_when_a_rejoin_is_planned() {
+        use crate::faults::FaultPlan;
+        use crate::sim::Ev;
+        let mut cfg = mock_cfg();
+        cfg.faults.plan = FaultPlan::new().crash_rejoin(1, 1.0, 5.0).crash(2, 1.0);
+        let mut env = SimEnv::build(cfg, Box::new(MockRuntime::new())).unwrap();
+        let base = env.queue.len();
+        env.apply_faults_up_to(1.5);
+        env.defer_to_rejoin(Ev::TrainDone { worker: 1 });
+        assert_eq!(env.queue.len(), base + 1, "event deferred to rejoin");
+        env.defer_to_rejoin(Ev::TrainDone { worker: 2 });
+        assert_eq!(env.queue.len(), base + 1, "no rejoin planned: swallowed");
     }
 
     #[test]

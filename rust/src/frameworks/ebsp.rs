@@ -31,10 +31,16 @@ pub fn run(env: &mut SimEnv) -> Result<()> {
     let n = env.n_workers();
 
     // ---- Benchmark phase: one profiled iteration per node.
+    if env.has_faults() {
+        env.apply_faults_up_to(0.0); // faults planned at t=0 pre-empt the bench
+    }
     let heavy = env.rt.meta().param_count >= HEAVY_PARAMS;
     let mut bench_end = 0.0f64;
     let mut predicted = vec![0.0f64; n];
     for w in 0..n {
+        if env.is_crashed(w) {
+            continue;
+        }
         let node = env.cluster.node(w);
         if heavy && (node.vcpu as f64 * node.ram_gb) < CRASH_CAPACITY {
             // Benchmarking overload: the node dies (Table III footnote).
@@ -63,7 +69,23 @@ pub fn run(env: &mut SimEnv) -> Result<()> {
     let mut grads: Vec<ParamVec> = Vec::with_capacity(n);
     loop {
         let t0 = env.queue.now();
+        // Churn lands at round granularity; rejoined workers get a
+        // fresh Eq. 3 prediction so the barrier placement stays sane.
+        if env.has_faults() {
+            let delta = env.apply_faults_up_to(t0);
+            for &w in &delta.rejoined {
+                predicted[w] = env.cluster.predict_time(
+                    w,
+                    env.cfg.hp.epochs,
+                    env.workers[w].dss,
+                    env.workers[w].mbs,
+                );
+            }
+        }
         let active = env.cluster.active_ids();
+        if active.is_empty() {
+            break;
+        }
 
         // PS → workers: model broadcast.
         let model_b = env.model_bytes();

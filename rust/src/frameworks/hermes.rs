@@ -32,7 +32,6 @@ pub fn run(env: &mut SimEnv) -> Result<()> {
     // before its next iteration (charged here, applied at start).
     let mut pending_stall: Vec<f64> = vec![0.0; n];
     let mut last_rebalance = f64::MIN;
-    let mut stopping = false;
 
     // Memory caps per worker for the allocator.
     let model_bytes = env.rt.meta().param_count * 4;
@@ -58,8 +57,12 @@ pub fn run(env: &mut SimEnv) -> Result<()> {
     }
 
     while let Some((t, ev)) = env.queue.pop() {
-        if stopping {
-            continue;
+        if env.has_faults() {
+            env.apply_faults_up_to(t);
+            if env.is_crashed(ev.worker()) && !crate::faults::is_fault_tag(&ev) {
+                env.defer_to_rejoin(ev); // dead worker: chain resumes at rejoin
+                continue;
+            }
         }
         match ev {
             Ev::Tag { worker: w, tag: START } => {
@@ -79,8 +82,7 @@ pub fn run(env: &mut SimEnv) -> Result<()> {
                 } else {
                     // Full independence: next iteration immediately.
                     if env.iterations_exhausted() {
-                        stopping = true;
-                        continue;
+                        break;
                     }
                     start_iteration(
                         env, w, &mut monitor, &mut pending_alloc,
@@ -101,8 +103,7 @@ pub fn run(env: &mut SimEnv) -> Result<()> {
                     .curve
                     .push((now, env.ps.loss as f64, env.ps.accuracy));
                 if env.check_convergence_after_external_eval()? {
-                    stopping = true;
-                    continue;
+                    break;
                 }
 
                 // Asynchronous monitoring + dynamic allocation.
@@ -119,6 +120,9 @@ pub fn run(env: &mut SimEnv) -> Result<()> {
                         &MBS_DOMAIN,
                     );
                     for rb in rbs {
+                        if env.is_crashed(rb.worker) {
+                            continue; // monitor entry is stale: the node is down
+                        }
                         env.allocs[rb.worker] = rb.alloc;
                         // DatasetAssign control message…
                         env.transfer(rb.worker, env.ctl_bytes());
@@ -152,8 +156,7 @@ pub fn run(env: &mut SimEnv) -> Result<()> {
             Ev::ArriveAtWorker { worker: w } => {
                 env.workers[w].adopt_global(&env.ps.params, env.ps.version);
                 if env.iterations_exhausted() {
-                    stopping = true;
-                    continue;
+                    break;
                 }
                 start_iteration(
                     env, w, &mut monitor, &mut pending_alloc, &mut pending_stall, t,

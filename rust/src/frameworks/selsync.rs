@@ -47,10 +47,24 @@ pub fn run(env: &mut SimEnv) -> Result<()> {
     let mut before = env.pool.acquire_like(&env.ps.params);
     let mut grads: Vec<ParamVec> = Vec::with_capacity(n);
     loop {
-        // One local iteration everywhere; measure relative change.
+        // Churn lands at round granularity: rejoined workers restart
+        // from now (resync traffic is charged by the fault engine).
+        if env.has_faults() {
+            let fd = env.apply_faults_up_to(env.queue.now());
+            for &w in &fd.rejoined {
+                ready[w] = env.queue.now();
+            }
+        }
+        let active = env.cluster.active_ids();
+        if active.is_empty() {
+            break;
+        }
+
+        // One local iteration on every active worker; measure the
+        // relative change.
         let mut finishes = vec![0.0; n];
         let mut rels = vec![0.0f64; n];
-        for w in 0..n {
+        for &w in &active {
             before.copy_from(&env.workers[w].state.params);
             let (_out, dur) = env.run_local_iteration(w)?;
             finishes[w] = ready[w] + dur;
@@ -62,13 +76,16 @@ pub fn run(env: &mut SimEnv) -> Result<()> {
             grads.push(g);
         }
 
-        let sync_round = rels.iter().any(|&r| r > delta);
+        let sync_round = active.iter().any(|&w| rels[w] > delta);
         if sync_round {
             // Barrier + push + SyncSGD + broadcast.
-            let barrier = finishes.iter().copied().fold(0.0, f64::max);
+            let barrier = active
+                .iter()
+                .map(|&w| finishes[w])
+                .fold(env.queue.now(), f64::max);
             let push_b = env.push_bytes();
             let mut ps_ready = barrier;
-            for w in 0..n {
+            for &w in &active {
                 env.charge_wait(w, barrier - finishes[w], finishes[w]);
                 let arr = barrier + env.transfer(w, push_b);
                 env.run.workers[w].push_times.push(arr);
@@ -80,7 +97,7 @@ pub fn run(env: &mut SimEnv) -> Result<()> {
                 env.pool.release(g);
             }
             let t1 = env.queue.now();
-            for w in 0..n {
+            for &w in &active {
                 let comm = env.transfer(w, model_b);
                 ready[w] = t1 + comm;
                 env.workers[w].adopt_global(&env.ps.params, env.ps.version);
@@ -93,14 +110,14 @@ pub fn run(env: &mut SimEnv) -> Result<()> {
             for g in grads.drain(..) {
                 env.pool.release(g);
             }
-            for w in 0..n {
+            for &w in &active {
                 ready[w] = finishes[w];
             }
             // The PS model is unchanged; advance the clock to the
             // median progress point so the curve stays time-indexed.
-            let mut fs = finishes.clone();
+            let mut fs: Vec<f64> = active.iter().map(|&w| finishes[w]).collect();
             fs.sort_by(|a, b| a.partial_cmp(b).unwrap());
-            env.queue.advance_to(fs[n / 2].max(env.queue.now()));
+            env.queue.advance_to(fs[fs.len() / 2].max(env.queue.now()));
         }
         if env.iterations_exhausted() {
             break;

@@ -22,7 +22,6 @@ pub fn run(env: &mut SimEnv) -> Result<()> {
     // workers currently blocked on the staleness bound, with the time
     // they blocked (for wait accounting)
     let mut blocked: Vec<Option<f64>> = vec![None; n];
-    let mut stopping = false;
 
     let model_b = env.model_bytes();
     for w in 0..n {
@@ -33,8 +32,18 @@ pub fn run(env: &mut SimEnv) -> Result<()> {
     }
 
     while let Some((t, ev)) = env.queue.pop() {
-        if stopping {
-            continue;
+        if env.has_faults() {
+            let delta = env.apply_faults_up_to(t);
+            if delta.membership_changed {
+                // Crashes move the *active* clock floor up (and rejoins
+                // drag it down): re-check every blocked worker so the
+                // staleness bound can't wedge on a dead laggard.
+                release_unblocked(env, &clock, &mut blocked, s, t);
+            }
+            if env.is_crashed(ev.worker()) && !crate::faults::is_fault_tag(&ev) {
+                env.defer_to_rejoin(ev);
+                continue;
+            }
         }
         match ev {
             Ev::Tag { worker: w, tag: START } => {
@@ -54,32 +63,19 @@ pub fn run(env: &mut SimEnv) -> Result<()> {
                 if env.ps.updates % env.cfg.global_eval_every as u64 == 0
                     && env.eval_global_and_check()?
                 {
-                    stopping = true;
-                    continue;
+                    break;
                 }
                 let d = env.transfer(w, env.model_bytes());
                 env.queue.push_in(d, Ev::ArriveAtWorker { worker: w });
                 // A slow worker advancing may release blocked ones.
-                let min_clock = *clock.iter().min().unwrap();
-                for b in 0..n {
-                    if let Some(since) = blocked[b] {
-                        if clock[b] <= min_clock + s {
-                            blocked[b] = None;
-                            env.charge_wait(b, t - since, since);
-                            env.queue
-                                .push_at(t, Ev::Tag { worker: b, tag: START });
-                        }
-                    }
-                }
+                release_unblocked(env, &clock, &mut blocked, s, t);
             }
             Ev::ArriveAtWorker { worker: w } => {
                 env.workers[w].adopt_global(&env.ps.params, env.ps.version);
                 if env.iterations_exhausted() {
-                    stopping = true;
-                    continue;
+                    break;
                 }
-                let min_clock = *clock.iter().min().unwrap();
-                if clock[w] > min_clock + s {
+                if clock[w] > active_min_clock(env, &clock) + s {
                     // Too far ahead: block until the laggards catch up.
                     blocked[w] = Some(t);
                 } else {
@@ -91,6 +87,39 @@ pub fn run(env: &mut SimEnv) -> Result<()> {
     }
     env.pool.release(before);
     Ok(())
+}
+
+/// Minimum iteration clock over the *active* membership (crashed
+/// workers must not freeze the staleness floor).
+fn active_min_clock(env: &SimEnv, clock: &[u64]) -> u64 {
+    clock
+        .iter()
+        .enumerate()
+        .filter(|&(w, _)| !env.is_crashed(w))
+        .map(|(_, &c)| c)
+        .min()
+        .unwrap_or(0)
+}
+
+/// Unblock every worker back inside the staleness bound, charging its
+/// barrier wait and rescheduling its next iteration at `t`.
+fn release_unblocked(
+    env: &mut SimEnv,
+    clock: &[u64],
+    blocked: &mut [Option<f64>],
+    s: u64,
+    t: f64,
+) {
+    let min_clock = active_min_clock(env, clock);
+    for b in 0..blocked.len() {
+        if let Some(since) = blocked[b] {
+            if !env.is_crashed(b) && clock[b] <= min_clock + s {
+                blocked[b] = None;
+                env.charge_wait(b, t - since, since);
+                env.queue.push_at(t, Ev::Tag { worker: b, tag: START });
+            }
+        }
+    }
 }
 
 fn start_iteration(

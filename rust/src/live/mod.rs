@@ -9,9 +9,18 @@
 //! gating on the workers, loss-based SGD at the PS, TimeReport
 //! heartbeats, fp16 tensor compression.  Heterogeneity is reproduced by
 //! per-worker pacing delays derived from Table II's K coefficients.
+//!
+//! **Elasticity (DESIGN.md §10):** the PS keeps a per-worker *lease*
+//! renewed by every message; a lease that misses heartbeats for
+//! [`LEASE_TIMEOUT`] is reaped (the worker leaves the live membership
+//! set).  Every `Register` — first connect or reconnect after a kill —
+//! is answered with a `GlobalModel` state resync, so a killed worker
+//! process rejoins the run instead of wedging it.  [`run_live_churn`]
+//! drives both failure modes (socket kill + reconnect, heartbeat stall)
+//! deterministically for tests and demos.
 
 use std::io::{BufReader, BufWriter};
-use std::net::{TcpListener, TcpStream};
+use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -27,6 +36,9 @@ use crate::tensor::ParamVec;
 use crate::wire::{read_frame_with, write_frame_with, Message, TensorPayload};
 use crate::worker::WorkerCore;
 
+/// How long a worker may go silent before the PS reaps its lease.
+pub const LEASE_TIMEOUT: Duration = Duration::from_millis(250);
+
 /// Outcome of a live run.
 #[derive(Debug, Clone)]
 pub struct LiveReport {
@@ -38,16 +50,116 @@ pub struct LiveReport {
     pub final_accuracy: f64,
     pub wall_time_s: f64,
     pub bytes_received: u64,
+    /// Worker re-registrations after their first connect (rejoins).
+    pub reconnects: u64,
+    /// Leases reaped by the heartbeat timeout.
+    pub lease_expirations: u64,
+}
+
+/// How a churned live worker fails.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ChurnKind {
+    /// The worker process dies (socket dropped), then reconnects and
+    /// resyncs from the global model.
+    Kill,
+    /// The worker wedges (socket open, heartbeats stop) long enough for
+    /// its lease to expire, then resumes.
+    Stall,
+}
+
+/// One deterministic fault for a live run.
+#[derive(Debug, Clone, Copy)]
+pub struct LiveChurn {
+    pub worker: usize,
+    /// Wall time after run start the fault fires.
+    pub at: Duration,
+    /// Outage length.
+    pub down_for: Duration,
+    pub kind: ChurnKind,
+}
+
+/// Per-worker lease at the PS.
+#[derive(Debug, Clone)]
+struct Lease {
+    last_seen: Instant,
+    alive: bool,
+    /// Bumped on every Register; lets a stale handler's disconnect not
+    /// kill the lease a reconnected worker just re-acquired.
+    epoch: u64,
 }
 
 /// Shared server-side state.
 struct PsShared {
     state: Mutex<(PsState, Box<dyn ModelRuntime + Send>)>,
     probe: Probe,
+    leases: Mutex<Vec<Lease>>,
     iterations: AtomicU64,
     pushes: AtomicU64,
     bytes: AtomicU64,
+    reconnects: AtomicU64,
+    lease_expirations: AtomicU64,
     deadline: Instant,
+}
+
+/// Largest worker id the lease table will grow for — a malformed
+/// client must not be able to balloon PS memory with a bogus Register.
+const MAX_LEASED_WORKER: usize = 1 << 16;
+
+impl PsShared {
+    /// Register (or re-register) worker `w`; returns the new epoch.
+    /// Absurd ids (malformed clients) get epoch 0 and no lease.
+    fn lease_register(&self, w: usize) -> u64 {
+        if w > MAX_LEASED_WORKER {
+            return 0;
+        }
+        let mut ls = self.leases.lock().unwrap();
+        if ls.len() <= w {
+            ls.resize(
+                w + 1,
+                Lease { last_seen: Instant::now(), alive: false, epoch: 0 },
+            );
+        }
+        let l = &mut ls[w];
+        l.epoch += 1;
+        if l.epoch > 1 {
+            self.reconnects.fetch_add(1, Ordering::Relaxed);
+        }
+        l.alive = true;
+        l.last_seen = Instant::now();
+        l.epoch
+    }
+
+    /// Any message from `w` renews its lease (heartbeat semantics).
+    fn lease_renew(&self, w: usize) {
+        let mut ls = self.leases.lock().unwrap();
+        if let Some(l) = ls.get_mut(w) {
+            l.last_seen = Instant::now();
+            l.alive = true;
+        }
+    }
+
+    /// Connection closed: release the lease unless a newer epoch (a
+    /// reconnect) already took it over.
+    fn lease_drop(&self, w: usize, epoch: u64) {
+        let mut ls = self.leases.lock().unwrap();
+        if let Some(l) = ls.get_mut(w) {
+            if l.epoch == epoch {
+                l.alive = false;
+            }
+        }
+    }
+
+    /// Reap leases whose heartbeats stopped (the membership shrinks;
+    /// the worker re-acquires on its next message).
+    fn reap_expired(&self, timeout: Duration) {
+        let mut ls = self.leases.lock().unwrap();
+        for l in ls.iter_mut() {
+            if l.alive && l.last_seen.elapsed() > timeout {
+                l.alive = false;
+                self.lease_expirations.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
 }
 
 /// Run a live cluster: PS on an ephemeral localhost port + `n_workers`
@@ -55,7 +167,18 @@ struct PsShared {
 /// the demo light; pass artifact-backed runtimes via
 /// [`run_live_with`] for the full-model deployment.
 pub fn run_live(cfg: &RunConfig, n_workers: usize, duration: Duration) -> Result<LiveReport> {
-    run_live_with(cfg, n_workers, duration, || Box::new(MockRuntime::new()))
+    run_live_opts(cfg, n_workers, duration, None, Arc::new(mock_rt))
+}
+
+/// [`run_live`] with one deterministic fault injected (kill+reconnect
+/// or heartbeat stall) — the live twin of the simulator's `FaultPlan`.
+pub fn run_live_churn(
+    cfg: &RunConfig,
+    n_workers: usize,
+    duration: Duration,
+    churn: LiveChurn,
+) -> Result<LiveReport> {
+    run_live_opts(cfg, n_workers, duration, Some(churn), Arc::new(mock_rt))
 }
 
 pub fn run_live_with<F>(
@@ -67,7 +190,22 @@ pub fn run_live_with<F>(
 where
     F: Fn() -> Box<dyn ModelRuntime + Send> + Send + Sync + 'static,
 {
-    let make_rt = Arc::new(make_rt);
+    run_live_opts(cfg, n_workers, duration, None, Arc::new(make_rt))
+}
+
+fn mock_rt() -> Box<dyn ModelRuntime + Send> {
+    Box::new(MockRuntime::new())
+}
+
+type RtFactory = Arc<dyn Fn() -> Box<dyn ModelRuntime + Send> + Send + Sync>;
+
+fn run_live_opts(
+    cfg: &RunConfig,
+    n_workers: usize,
+    duration: Duration,
+    churn: Option<LiveChurn>,
+    make_rt: RtFactory,
+) -> Result<LiveReport> {
     let ps_rt = make_rt();
     let kind = DataKind::for_model(ps_rt.meta().name.as_str());
     let ds = Arc::new(Dataset::synth(kind, 3000, cfg.seed));
@@ -76,7 +214,6 @@ where
     let shards = partition_pools(&ds, &train_idx, n_workers, Partition::Iid, cfg.seed);
 
     let w0 = init_params(ps_rt.meta(), cfg.seed);
-    let meta = ps_rt.meta().clone();
     let ps = PsState::new(w0.clone(), cfg.hp.lr);
 
     let listener = TcpListener::bind("127.0.0.1:0")?;
@@ -85,28 +222,51 @@ where
     let shared = Arc::new(PsShared {
         state: Mutex::new((ps, ps_rt)),
         probe: probe.clone(),
+        leases: Mutex::new(Vec::new()),
         iterations: AtomicU64::new(0),
         pushes: AtomicU64::new(0),
         bytes: AtomicU64::new(0),
+        reconnects: AtomicU64::new(0),
+        lease_expirations: AtomicU64::new(0),
         deadline: start + duration,
     });
 
-    // ---- PS acceptor thread: one handler thread per worker.
+    // ---- PS acceptor thread: non-blocking accept loop so reconnects
+    // after the initial N connections are served too, doubling as the
+    // lease reaper; one handler thread per connection.
     let srv = shared.clone();
     let fp16 = cfg.net.fp16_wire;
-    let acceptor = std::thread::spawn(move || -> Result<()> {
+    listener.set_nonblocking(true)?;
+    let acceptor = std::thread::spawn(move || {
+        let grace = Duration::from_millis(400);
         let mut handlers = Vec::new();
-        for _ in 0..n_workers {
-            let (stream, _) = listener.accept()?;
-            let srv = srv.clone();
-            handlers.push(std::thread::spawn(move || {
-                let _ = serve_worker(stream, srv, fp16);
-            }));
+        loop {
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    let srv = srv.clone();
+                    handlers.push(std::thread::spawn(move || {
+                        let _ = serve_worker(stream, srv, fp16);
+                    }));
+                }
+                // WouldBlock is the idle tick; everything else (e.g. a
+                // churned client resetting mid-accept, EINTR) is
+                // transient — the acceptor must outlive it or rejoins
+                // and lease reaping die with it.  Only the deadline
+                // ends the loop.
+                Err(e) => {
+                    srv.reap_expired(LEASE_TIMEOUT);
+                    if Instant::now() > srv.deadline + grace {
+                        break;
+                    }
+                    if e.kind() == std::io::ErrorKind::WouldBlock {
+                        std::thread::sleep(Duration::from_millis(5));
+                    }
+                }
+            }
         }
         for h in handlers {
             let _ = h.join();
         }
-        Ok(())
     });
 
     // ---- Worker threads.
@@ -133,23 +293,55 @@ where
                 cfg.mbs0,
                 cfg.seed.wrapping_add(wid as u64),
             );
-            let stream = TcpStream::connect(addr)?;
-            stream.set_nodelay(true)?;
-            let mut rd = BufReader::new(stream.try_clone()?);
-            let mut wr = BufWriter::new(stream);
-            // One encode buffer and one frame-body buffer per
-            // connection, reused for every frame on this socket.
+            let family = format!("fam{k}");
+            // One encode buffer and one frame-body buffer per worker,
+            // reused for every frame on every connection it opens.
             let mut enc_buf: Vec<u8> = Vec::new();
             let mut body_buf: Vec<u8> = Vec::new();
-            write_frame_with(
-                &mut wr,
-                &Message::Register { worker: wid as u32, family: format!("fam{k}") },
-                &mut enc_buf,
-            )?;
+            let (mut rd, mut wr, version, global) =
+                connect_worker(addr, wid, &family, &mut enc_buf, &mut body_buf)?;
+            core.adopt_global(&global, version);
 
+            let my_churn = churn.filter(|c| c.worker == wid);
+            let mut churned = false;
             let mut iters = 0u64;
             let mut pushes = 0u64;
             while Instant::now() < deadline {
+                if let Some(c) = my_churn {
+                    if !churned && start.elapsed() >= c.at {
+                        churned = true;
+                        match c.kind {
+                            ChurnKind::Kill => {
+                                // The process dies: sockets drop, local
+                                // state is lost for the outage, then it
+                                // reconnects and resyncs.
+                                drop(rd);
+                                drop(wr);
+                                std::thread::sleep(c.down_for);
+                                if Instant::now() >= deadline {
+                                    return Ok((iters, pushes));
+                                }
+                                let (nrd, nwr, version, global) = connect_worker(
+                                    addr,
+                                    wid,
+                                    &family,
+                                    &mut enc_buf,
+                                    &mut body_buf,
+                                )?;
+                                rd = nrd;
+                                wr = nwr;
+                                core.adopt_global(&global, version);
+                                continue;
+                            }
+                            ChurnKind::Stall => {
+                                // Wedge: heartbeats stop with the socket
+                                // open; the PS lease must expire, then
+                                // re-acquire when we resume.
+                                std::thread::sleep(c.down_for);
+                            }
+                        }
+                    }
+                }
                 let t0 = Instant::now();
                 let out = core.local_iteration(
                     rt.as_mut(),
@@ -213,7 +405,7 @@ where
     let _ = acceptor.join();
 
     let (ps, _) = &mut *shared.state.lock().unwrap();
-    let report = LiveReport {
+    Ok(LiveReport {
         workers: n_workers,
         iterations,
         pushes,
@@ -222,49 +414,109 @@ where
         final_accuracy: ps.accuracy,
         wall_time_s: start.elapsed().as_secs_f64(),
         bytes_received: shared.bytes.load(Ordering::Relaxed),
-    };
-    let _ = meta;
-    Ok(report)
+        reconnects: shared.reconnects.load(Ordering::Relaxed),
+        lease_expirations: shared.lease_expirations.load(Ordering::Relaxed),
+    })
 }
 
-/// Per-connection PS handler: Alg. 2 on pushes, heartbeat bookkeeping.
-/// The frame-body, encode and recovered-G buffers are connection-scoped
-/// and reused across pushes; the reply still clones `ps.params` into
-/// its owned payload (the one remaining live-mode copy — removing it
-/// needs a borrowed `TensorPayload`, see DESIGN.md §8).
+/// Connect + register + read the PS's `GlobalModel` state resync —
+/// used for both the first connect and every rejoin after a kill.
+fn connect_worker(
+    addr: SocketAddr,
+    wid: usize,
+    family: &str,
+    enc_buf: &mut Vec<u8>,
+    body_buf: &mut Vec<u8>,
+) -> Result<(BufReader<TcpStream>, BufWriter<TcpStream>, u64, ParamVec)> {
+    let stream = TcpStream::connect(addr)?;
+    stream.set_nodelay(true)?;
+    let mut rd = BufReader::new(stream.try_clone()?);
+    let mut wr = BufWriter::new(stream);
+    write_frame_with(
+        &mut wr,
+        &Message::Register { worker: wid as u32, family: family.to_string() },
+        enc_buf,
+    )?;
+    match read_frame_with(&mut rd, body_buf)? {
+        Message::GlobalModel { version, params } => Ok((rd, wr, version, params.params)),
+        other => Err(anyhow!("unexpected resync reply {other:?}")),
+    }
+}
+
+/// Per-connection PS handler: lease bookkeeping on every frame, a
+/// `GlobalModel` resync on (re-)registration, Alg. 2 on pushes.  The
+/// frame-body, encode and recovered-G buffers are connection-scoped and
+/// reused across pushes; the reply still clones `ps.params` into its
+/// owned payload (the one remaining live-mode copy — removing it needs
+/// a borrowed `TensorPayload`, see DESIGN.md §8).
 fn serve_worker(stream: TcpStream, srv: Arc<PsShared>, fp16: bool) -> Result<()> {
+    // The listener is non-blocking (accept loop); handler sockets must
+    // block on reads regardless of what they inherited.
+    stream.set_nonblocking(false)?;
     stream.set_nodelay(true)?;
     let mut rd = BufReader::new(stream.try_clone()?);
     let mut wr = BufWriter::new(stream);
     let mut enc_buf: Vec<u8> = Vec::new();
     let mut body_buf: Vec<u8> = Vec::new();
     let mut g_scratch = ParamVec::default();
+    // (worker id, lease epoch) once registered on this connection.
+    let mut me: Option<(usize, u64)> = None;
     loop {
         let msg = match read_frame_with(&mut rd, &mut body_buf) {
             Ok(m) => m,
-            Err(_) => return Ok(()), // peer closed
+            Err(_) => break, // peer closed (or died)
         };
         srv.bytes.fetch_add(msg.wire_size() as u64, Ordering::Relaxed);
         match msg {
-            Message::Register { .. } => {}
-            Message::TimeReport { .. } => {
-                srv.iterations.fetch_add(1, Ordering::Relaxed);
+            Message::Register { worker, .. } => {
+                let wid = worker as usize;
+                let epoch = srv.lease_register(wid);
+                me = Some((wid, epoch));
+                // State resync: first connect and rejoin look the same.
+                let reply = {
+                    let (ps, _) = &mut *srv.state.lock().unwrap();
+                    Message::GlobalModel {
+                        version: ps.version,
+                        params: TensorPayload::new(ps.params.clone(), fp16),
+                    }
+                };
+                // Break (don't return) on write failure so the lease
+                // release below still runs for a peer that died mid-reply.
+                if write_frame_with(&mut wr, &reply, &mut enc_buf).is_err() {
+                    break;
+                }
             }
-            Message::PushUpdate { test_loss, grads, .. } => {
+            Message::TimeReport { worker, .. } => {
+                srv.iterations.fetch_add(1, Ordering::Relaxed);
+                srv.lease_renew(worker as usize);
+            }
+            Message::PushUpdate { worker, test_loss, grads, .. } => {
                 srv.pushes.fetch_add(1, Ordering::Relaxed);
+                srv.lease_renew(worker as usize);
                 let (ps, rt) = &mut *srv.state.lock().unwrap();
                 // Recover G from the pushed local parameters:
                 // G = (w₀ − w_local)/η (Alg. 2 Worker-SGD).
                 ps.w0.delta_over_eta_into(&grads.params, ps.eta, &mut g_scratch);
-                ps.loss_based_sgd(&g_scratch, test_loss, rt.as_mut(), &srv.probe)?;
+                if ps
+                    .loss_based_sgd(&g_scratch, test_loss, rt.as_mut(), &srv.probe)
+                    .is_err()
+                {
+                    break;
+                }
                 let reply = Message::GlobalModel {
                     version: ps.version,
                     params: TensorPayload::new(ps.params.clone(), fp16),
                 };
-                write_frame_with(&mut wr, &reply, &mut enc_buf)?;
+                if write_frame_with(&mut wr, &reply, &mut enc_buf).is_err() {
+                    break;
+                }
             }
-            Message::Control { stop: true } => return Ok(()),
+            Message::Control { stop: true } => break,
             _ => {}
         }
     }
+    if let Some((wid, epoch)) = me {
+        srv.lease_drop(wid, epoch);
+    }
+    Ok(())
 }

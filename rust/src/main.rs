@@ -35,9 +35,13 @@ fn usage() -> String {
      SUBCOMMANDS:\n\
        run   run one framework over the simulated 12-worker edge cluster\n\
        exp   regenerate a paper experiment: fig1 fig2 fig3 fig4 fig11\n\
-             fig12 fig13 fig14 table3 all\n\
+             fig12 fig13 fig14 table3 faults all\n\
        live  run the real threaded TCP parameter server + workers\n\
+             (worker leases, heartbeat timeouts, reconnect resync)\n\
        info  show artifacts, cluster and hyper-parameter defaults\n\n\
+     `hermes exp faults` sweeps every framework over deterministic\n\
+     crash/rejoin churn (see DESIGN.md §10 and\n\
+     examples/straggler_mitigation.rs).\n\n\
      Try `hermes <cmd> --help`."
         .to_string()
 }
@@ -74,6 +78,7 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
         .opt("dss0", "", "initial per-worker dataset size")
         .opt("mbs0", "", "initial mini-batch size (power of two)")
         .opt("staleness", "", "SSP staleness bound s")
+        .opt("churn", "0", "crash/rejoin cycles per 100 virtual s (faults)")
         .opt("artifacts", "artifacts", "artifacts directory")
         .opt("out", "results", "output directory")
         .flag("no-dynamic-alloc", "disable dual-binary-search sizing")
@@ -109,6 +114,7 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
     cfg.dynamic_alloc = !m.has("no-dynamic-alloc");
     cfg.prefetch = !m.has("no-prefetch");
     cfg.net.fp16_wire = !m.has("no-fp16");
+    cfg.faults.churn_rate = m.get_f64("churn")?;
 
     let rt = exp::make_runtime(&model, &artifacts_dir(&m)).map_err(|e| e.to_string())?;
     let run = hermes_dml::frameworks::run_framework_opts(cfg, rt, m.has("timeline"))
@@ -139,7 +145,7 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
 
 fn cmd_exp(args: &[String]) -> Result<(), String> {
     let cmd = Command::new("hermes exp", "regenerate a paper table/figure")
-        .pos("which", "fig1 fig2 fig3 fig4 fig11 fig12 fig13 fig14 table3 all")
+        .pos("which", "fig1 fig2 fig3 fig4 fig11 fig12 fig13 fig14 table3 faults all")
         .opt("model", "mock", "mock | cnn | alexnet (compute backend)")
         .opt("artifacts", "artifacts", "artifacts directory")
         .opt("threads", "0", "sweep threads for table3 (0 = one per core)")
@@ -159,6 +165,15 @@ fn cmd_exp(args: &[String]) -> Result<(), String> {
         "fig13" => exp::fig13_major_updates(&out, model, &arts),
         "fig14" => exp::fig14_alpha_beta(&out, model, &arts),
         "table3" => exp::table3_with_threads(&out, model, &arts, threads).map(|_| ()),
+        "faults" => exp::faults_churn_sweep(
+            &out,
+            model,
+            &arts,
+            threads,
+            &exp::FAULT_SWEEP_RATES,
+            &hermes_dml::frameworks::ALL,
+        )
+        .map(|_| ()),
         "all" => exp::run_all(&out, model, &arts),
         other => return Err(format!("unknown experiment '{other}'")),
     };
@@ -184,13 +199,16 @@ fn cmd_live(args: &[String]) -> Result<(), String> {
         .map_err(|e| e.to_string())?;
     println!(
         "live: {} iterations, {} pushes, {} aggregations, loss {:.4}, \
-         acc {:.2}%, {} bytes received, {:.2}s wall",
+         acc {:.2}%, {} bytes received, {} reconnects, {} lease timeouts, \
+         {:.2}s wall",
         report.iterations,
         report.pushes,
         report.global_updates,
         report.final_loss,
         report.final_accuracy * 100.0,
         report.bytes_received,
+        report.reconnects,
+        report.lease_expirations,
         report.wall_time_s,
     );
     Ok(())

@@ -44,6 +44,10 @@ pub struct WorkerMetrics {
     pub train_time: f64,
     pub wait_time: f64,
     pub comm_time: f64,
+    /// Wire bytes to/from this worker (sums to [`RunMetrics::bytes`]).
+    pub bytes: u64,
+    /// API calls to/from this worker (sums to [`RunMetrics::api_calls`]).
+    pub api_calls: u64,
     /// (virtual time, train time) per iteration — Fig. 11b / 12.
     pub train_times: Vec<(f64, f64)>,
     /// (virtual time, dss, mbs) on every (re)assignment — Fig. 12.
@@ -91,8 +95,13 @@ pub struct RunMetrics {
     pub workers: Vec<WorkerMetrics>,
     /// Timeline segments (only recorded when `record_timeline` is on).
     pub segments: Vec<Segment>,
-    /// Workers that crashed during the run (EBSP reproduction).
+    /// Workers still crashed at the end of the run (EBSP reproduction
+    /// + the faults subsystem).
     pub crashed_workers: Vec<usize>,
+    /// Fault-injected crashes applied during the run.
+    pub fault_crashes: u64,
+    /// Fault-injected rejoins applied during the run.
+    pub fault_rejoins: u64,
 }
 
 impl RunMetrics {
@@ -153,6 +162,8 @@ impl RunMetrics {
             ("global_updates", Json::Num(self.global_updates as f64)),
             ("wi_avg", Json::Num(self.wi_avg())),
             ("pushes", Json::Num(self.total_pushes() as f64)),
+            ("fault_crashes", Json::Num(self.fault_crashes as f64)),
+            ("fault_rejoins", Json::Num(self.fault_rejoins as f64)),
             (
                 "crashed_workers",
                 Json::Arr(

@@ -24,6 +24,10 @@ pub struct SimNet {
     pub cfg: NetConfig,
     total: TrafficStats,
     per_worker: Vec<TrafficStats>,
+    /// Fault-injected per-worker link multiplier (1.0 = healthy): the
+    /// serialization cost of a byte on worker `w`'s link scales by this
+    /// (transient degradation from the `faults` subsystem).
+    link_penalty: Vec<f64>,
 }
 
 impl SimNet {
@@ -32,6 +36,7 @@ impl SimNet {
             cfg,
             total: TrafficStats::default(),
             per_worker: vec![TrafficStats::default(); n_workers],
+            link_penalty: vec![1.0; n_workers],
         }
     }
 
@@ -45,7 +50,8 @@ impl SimNet {
     /// just to measure it — sizes come from [`Message::wire_size`]-
     /// equivalent helpers below).
     pub fn transfer_bytes(&mut self, worker: usize, bytes: usize) -> f64 {
-        let t = self.cfg.latency_s + bytes as f64 / self.cfg.bandwidth_bps;
+        let t = self.cfg.latency_s
+            + bytes as f64 * self.link_penalty[worker] / self.cfg.bandwidth_bps;
         self.total.api_calls += 1;
         self.total.bytes += bytes as u64;
         self.total.comm_time += t;
@@ -56,12 +62,32 @@ impl SimNet {
         t
     }
 
+    /// Multiply `worker`'s link penalty (fault start); the matching
+    /// fault end calls [`SimNet::unscale_link_penalty`].
+    pub fn scale_link_penalty(&mut self, worker: usize, factor: f64) {
+        self.link_penalty[worker] *= factor;
+    }
+
+    /// End a link degradation by dividing the same factor back out
+    /// (exact for power-of-two factors, ≤1 ulp otherwise).
+    pub fn unscale_link_penalty(&mut self, worker: usize, factor: f64) {
+        self.link_penalty[worker] /= factor;
+    }
+
+    pub fn link_penalty(&self, worker: usize) -> f64 {
+        self.link_penalty[worker]
+    }
+
     pub fn total(&self) -> &TrafficStats {
         &self.total
     }
 
     pub fn worker(&self, id: usize) -> &TrafficStats {
         &self.per_worker[id]
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.per_worker.len()
     }
 
     // ------------------------------------------------ size helpers
@@ -170,6 +196,83 @@ mod tests {
             assert_eq!(ds.encode().len(), 18);
             assert_eq!(net.dataset_bytes(10, 100), 18 + 1000);
         }
+    }
+
+    #[test]
+    fn transfer_and_transfer_bytes_agree_for_every_message_kind() {
+        // The drivers account bytes through `transfer_bytes` + the size
+        // helpers; the live path ships real `Message`s.  Both must
+        // charge identical time and identical counters for every wire
+        // variant, or simulated and real traffic reports diverge.
+        let params = mock_params();
+        let messages = vec![
+            Message::Register { worker: 3, family: "B1ms".into() },
+            Message::PushUpdate {
+                worker: 1,
+                iter: 9,
+                test_loss: 0.4,
+                train_time: 2.5,
+                grads: TensorPayload::new(params.clone(), true),
+            },
+            Message::RequestModel { worker: 1 },
+            Message::TimeReport { worker: 2, iter: 4, train_time: 1.5 },
+            model_message(7, &params, false),
+            Message::DatasetAssign { dss: 100, mbs: 16, shard_seed: 3, prefetch: false },
+            Message::Control { stop: false },
+        ];
+        for msg in &messages {
+            let mut by_msg = SimNet::new(NetConfig::default(), 2);
+            let mut by_size = SimNet::new(NetConfig::default(), 2);
+            let t1 = by_msg.transfer(1, msg);
+            let t2 = by_size.transfer_bytes(1, msg.wire_size());
+            assert_eq!(t1.to_bits(), t2.to_bits(), "{msg:?}");
+            assert_eq!(by_msg.total().bytes, by_size.total().bytes, "{msg:?}");
+            assert_eq!(by_msg.total().api_calls, by_size.total().api_calls);
+            assert_eq!(by_msg.worker(1).bytes, by_size.worker(1).bytes);
+            assert_eq!(by_msg.worker(0).bytes, 0);
+            // And both equal the real encoded length.
+            assert_eq!(by_msg.total().bytes, msg.encode().len() as u64, "{msg:?}");
+        }
+    }
+
+    #[test]
+    fn per_worker_totals_sum_to_aggregate() {
+        let mut net = SimNet::new(NetConfig::default(), 5);
+        net.scale_link_penalty(2, 4.0); // degraded link mid-pattern
+        for round in 0..17usize {
+            for w in 0..5 {
+                net.transfer_bytes(w, 100 + 37 * ((round + w) % 7));
+            }
+            if round == 8 {
+                net.unscale_link_penalty(2, 4.0); // restored
+            }
+        }
+        let (mut bytes, mut calls, mut comm) = (0u64, 0u64, 0f64);
+        for w in 0..net.n_workers() {
+            bytes += net.worker(w).bytes;
+            calls += net.worker(w).api_calls;
+            comm += net.worker(w).comm_time;
+        }
+        assert_eq!(bytes, net.total().bytes);
+        assert_eq!(calls, net.total().api_calls);
+        assert!((comm - net.total().comm_time).abs() < 1e-9);
+    }
+
+    #[test]
+    fn link_penalty_scales_serialization_and_roundtrips() {
+        let cfg = NetConfig { latency_s: 0.01, bandwidth_bps: 1000.0, fp16_wire: false };
+        let mut net = SimNet::new(cfg, 2);
+        let healthy = net.transfer_bytes(0, 500);
+        net.scale_link_penalty(0, 3.0);
+        let degraded = net.transfer_bytes(0, 500);
+        // Serialization component (0.5s) triples; latency unchanged.
+        assert!((degraded - (0.01 + 1.5)).abs() < 1e-9, "{degraded}");
+        net.unscale_link_penalty(0, 3.0);
+        let restored = net.transfer_bytes(0, 500);
+        // Divide-back restore: exact here, ≤1 ulp in general.
+        assert!((restored - healthy).abs() < 1e-15, "{restored} vs {healthy}");
+        // The untouched worker never saw a penalty.
+        assert_eq!(net.link_penalty(1), 1.0);
     }
 
     #[test]

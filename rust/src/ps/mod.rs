@@ -12,6 +12,14 @@ use anyhow::Result;
 use crate::data::Probe;
 use crate::runtime::{EvalOut, ModelRuntime};
 use crate::tensor::ParamVec;
+use crate::wire::{decode_param_vec, encode_param_vec, WireError};
+
+/// Magic prefix of a PS snapshot.
+const SNAP_MAGIC: [u8; 4] = *b"PSNP";
+
+/// Current snapshot layout version — bump on any format change;
+/// [`PsState::decode_snapshot`] rejects every other version.
+pub const SNAPSHOT_VERSION: u32 = 1;
 
 /// Global model state at the PS.
 ///
@@ -144,6 +152,96 @@ impl PsState {
         self.version += 1;
         self.updates += 1;
     }
+
+    // ------------------------------------------- checkpoint / restore
+
+    /// Serialize the complete PS state (fp32-lossless, through the wire
+    /// tensor codec) — the checkpoint half of crash recovery for the
+    /// elastic subsystem (DESIGN.md §10).
+    pub fn encode_snapshot(&self) -> Vec<u8> {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&SNAP_MAGIC);
+        buf.extend_from_slice(&SNAPSHOT_VERSION.to_le_bytes());
+        buf.extend_from_slice(&self.eta.to_le_bytes());
+        buf.extend_from_slice(&self.version.to_le_bytes());
+        buf.extend_from_slice(&self.updates.to_le_bytes());
+        buf.extend_from_slice(&self.loss.to_le_bytes());
+        buf.extend_from_slice(&self.accuracy.to_le_bytes());
+        encode_param_vec(&self.w0, false, &mut buf);
+        encode_param_vec(&self.params, false, &mut buf);
+        buf.push(self.sigma.is_some() as u8);
+        if let Some(sigma) = &self.sigma {
+            encode_param_vec(sigma, false, &mut buf);
+        }
+        buf
+    }
+
+    /// Restore a PS from [`PsState::encode_snapshot`] bytes.  Unknown
+    /// versions, truncation and trailing garbage are all rejected — a
+    /// restored PS continues bit-identically to the one that
+    /// checkpointed (tested below).
+    pub fn decode_snapshot(buf: &[u8]) -> Result<PsState, WireError> {
+        fn take<'a>(
+            buf: &'a [u8],
+            pos: &mut usize,
+            n: usize,
+        ) -> Result<&'a [u8], WireError> {
+            if buf.len() - *pos < n {
+                return Err(WireError::Truncated { at: *pos, wanted: n });
+            }
+            let s = &buf[*pos..*pos + n];
+            *pos += n;
+            Ok(s)
+        }
+        let mut pos = 0usize;
+        let b = take(buf, &mut pos, 4)?;
+        if b != &SNAP_MAGIC[..] {
+            return Err(WireError::Malformed("snapshot magic"));
+        }
+        let b = take(buf, &mut pos, 4)?;
+        let snap_version = u32::from_le_bytes([b[0], b[1], b[2], b[3]]);
+        if snap_version != SNAPSHOT_VERSION {
+            return Err(WireError::Malformed("unsupported snapshot version"));
+        }
+        let b = take(buf, &mut pos, 4)?;
+        let eta = f32::from_le_bytes([b[0], b[1], b[2], b[3]]);
+        let b = take(buf, &mut pos, 8)?;
+        let version = u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]);
+        let b = take(buf, &mut pos, 8)?;
+        let updates = u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]);
+        let b = take(buf, &mut pos, 4)?;
+        let loss = f32::from_le_bytes([b[0], b[1], b[2], b[3]]);
+        let b = take(buf, &mut pos, 8)?;
+        let accuracy =
+            f64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]);
+        let (w0, used) = decode_param_vec(&buf[pos..])?;
+        pos += used;
+        let (params, used) = decode_param_vec(&buf[pos..])?;
+        pos += used;
+        let has_sigma = take(buf, &mut pos, 1)?[0] != 0;
+        let sigma = if has_sigma {
+            let (s, used) = decode_param_vec(&buf[pos..])?;
+            pos += used;
+            Some(s)
+        } else {
+            None
+        };
+        if pos != buf.len() {
+            return Err(WireError::Malformed("trailing bytes"));
+        }
+        Ok(PsState {
+            w0,
+            params,
+            sigma,
+            loss,
+            accuracy,
+            eta,
+            version,
+            updates,
+            scratch_a: ParamVec::default(),
+            scratch_b: ParamVec::default(),
+        })
+    }
 }
 
 #[cfg(test)]
@@ -266,6 +364,68 @@ mod tests {
         ps.loss_based_sgd(&g2, 0.7, &mut rt, &probe).unwrap();
         let s = ps.sigma.as_ref().unwrap().tensors[0].data()[0];
         assert!((s - 3.0).abs() < 1e-6, "sigma {s}");
+    }
+
+    #[test]
+    fn snapshot_roundtrips_and_restored_ps_continues_bit_identically() {
+        let (mut rt, probe) = probe_for_mock();
+        let w0 = init_params(rt.meta(), 5);
+        let mut ps = PsState::new(w0.clone(), 0.1);
+        let mut g1 = ParamVec::zeros_like(&w0);
+        g1.tensors[0].data_mut()[0] = 1.5;
+        let mut g2 = ParamVec::zeros_like(&w0);
+        g2.tensors[0].data_mut()[1] = -0.75;
+        ps.loss_based_sgd(&g1, 1.0, &mut rt, &probe).unwrap();
+        ps.loss_based_sgd(&g2, 0.9, &mut rt, &probe).unwrap();
+
+        let snap = ps.encode_snapshot();
+        let mut restored = PsState::decode_snapshot(&snap).unwrap();
+        assert_eq!(restored.w0, ps.w0);
+        assert_eq!(restored.params, ps.params);
+        assert_eq!(restored.sigma, ps.sigma);
+        assert_eq!(restored.version, ps.version);
+        assert_eq!(restored.updates, ps.updates);
+        assert_eq!(restored.loss.to_bits(), ps.loss.to_bits());
+        assert_eq!(restored.accuracy.to_bits(), ps.accuracy.to_bits());
+        assert_eq!(restored.eta.to_bits(), ps.eta.to_bits());
+
+        // The restored PS must continue exactly like the original.
+        let mut g3 = ParamVec::zeros_like(&w0);
+        g3.tensors[0].data_mut()[2] = 0.25;
+        let mut rt2 = probe_for_mock().0;
+        ps.loss_based_sgd(&g3, 0.8, &mut rt, &probe).unwrap();
+        restored.loss_based_sgd(&g3, 0.8, &mut rt2, &probe).unwrap();
+        assert_eq!(restored.params, ps.params);
+        assert_eq!(restored.sigma, ps.sigma);
+        assert_eq!(restored.loss.to_bits(), ps.loss.to_bits());
+
+        // Pre-sigma snapshots (fresh PS) roundtrip too.
+        let fresh = PsState::new(w0, 0.05);
+        let back = PsState::decode_snapshot(&fresh.encode_snapshot()).unwrap();
+        assert!(back.sigma.is_none());
+        assert_eq!(back.params, fresh.params);
+    }
+
+    #[test]
+    fn snapshot_rejects_corruption_truncation_and_wrong_version() {
+        let ps = PsState::new(pv(&[1.0, 2.0, 3.0]), 0.1);
+        let snap = ps.encode_snapshot();
+        // Every strict prefix is rejected.
+        for cut in 0..snap.len() {
+            assert!(PsState::decode_snapshot(&snap[..cut]).is_err(), "cut {cut}");
+        }
+        // Trailing garbage is rejected.
+        let mut padded = snap.clone();
+        padded.push(0);
+        assert!(PsState::decode_snapshot(&padded).is_err());
+        // Wrong magic.
+        let mut bad = snap.clone();
+        bad[0] ^= 0xFF;
+        assert!(PsState::decode_snapshot(&bad).is_err());
+        // Unsupported version.
+        let mut v2 = snap;
+        v2[4] = 99;
+        assert!(PsState::decode_snapshot(&v2).is_err());
     }
 
     #[test]

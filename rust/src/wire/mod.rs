@@ -137,14 +137,18 @@ impl<'a> Writer<'a> {
     }
 
     fn tensors(&mut self, p: &TensorPayload) {
-        self.u8(p.fp16 as u8);
-        self.u32(p.params.tensors.len() as u32);
-        for t in &p.params.tensors {
+        self.tensors_ref(p.fp16, &p.params);
+    }
+
+    fn tensors_ref(&mut self, fp16: bool, params: &ParamVec) {
+        self.u8(fp16 as u8);
+        self.u32(params.tensors.len() as u32);
+        for t in &params.tensors {
             self.u8(t.shape().len() as u8);
             for &d in t.shape() {
                 self.u32(d as u32);
             }
-            if p.fp16 {
+            if fp16 {
                 f16::encode_f16_into(t.data(), self.buf);
             } else {
                 // Chunked pass through a stack staging buffer: one
@@ -178,7 +182,9 @@ impl<'a> Reader<'a> {
     }
 
     fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
-        if self.pos + n > self.buf.len() {
+        // Subtraction form: immune to `pos + n` overflow on adversarial
+        // declared sizes (a live PS must survive a malformed client).
+        if self.buf.len() - self.pos < n {
             return Err(WireError::Truncated { at: self.pos, wanted: n });
         }
         let s = &self.buf[self.pos..self.pos + n];
@@ -190,16 +196,20 @@ impl<'a> Reader<'a> {
         Ok(self.take(1)?[0])
     }
     fn u32(&mut self) -> Result<u32, WireError> {
-        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
     }
     fn u64(&mut self) -> Result<u64, WireError> {
-        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
     }
     fn f32(&mut self) -> Result<f32, WireError> {
-        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+        let b = self.take(4)?;
+        Ok(f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
     }
     fn f64(&mut self) -> Result<f64, WireError> {
-        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+        let b = self.take(8)?;
+        Ok(f64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
     }
 
     fn str(&mut self) -> Result<String, WireError> {
@@ -227,18 +237,25 @@ impl<'a> Reader<'a> {
             for _ in 0..rank {
                 shape.push(self.u32()? as usize);
             }
-            let elems: usize = shape.iter().product();
+            // Checked product: adversarial dims must error, not wrap.
+            let elems = shape
+                .iter()
+                .try_fold(1usize, |acc, &d| acc.checked_mul(d))
+                .ok_or(WireError::Malformed("shape product overflow"))?;
             if elems > 1 << 28 {
                 return Err(WireError::Malformed("tensor too large"));
             }
             let data = if fp16 {
+                // Take before allocating: a frame that declares 2^28
+                // elements but carries none must fail cheaply.
+                let bytes = self.take(2 * elems)?;
                 let mut v = Vec::with_capacity(elems);
-                f16::decode_f16_into(self.take(2 * elems)?, &mut v);
+                f16::decode_f16_into(bytes, &mut v);
                 v
             } else {
                 self.take(4 * elems)?
                     .chunks_exact(4)
-                    .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                    .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
                     .collect()
             };
             tensors.push(Tensor::new(shape, data));
@@ -361,6 +378,23 @@ impl Message {
             .sum();
         1 + 4 + header + p.payload_bytes()
     }
+}
+
+// ------------------------------------------------- bare tensor codec
+
+/// Append a bare [`ParamVec`] in the message tensor layout (reused by
+/// [`crate::ps::PsState`] snapshots and tooling — same bytes as the
+/// payload inside `GlobalModel`/`PushUpdate`).
+pub fn encode_param_vec(params: &ParamVec, fp16: bool, buf: &mut Vec<u8>) {
+    Writer::new(buf).tensors_ref(fp16, params);
+}
+
+/// Decode a bare [`ParamVec`] written by [`encode_param_vec`]; returns
+/// the vector and the number of bytes consumed (for sequential reads).
+pub fn decode_param_vec(buf: &[u8]) -> Result<(ParamVec, usize), WireError> {
+    let mut r = Reader::new(buf);
+    let p = r.tensors()?;
+    Ok((p.params, r.pos))
 }
 
 // --------------------------------------------------- framed transport
@@ -519,6 +553,95 @@ mod tests {
         let mut padded = all_messages()[7].encode();
         padded.push(0);
         assert!(Message::decode(&padded).is_err());
+    }
+
+    #[test]
+    fn fuzzed_garbage_frames_error_instead_of_panicking() {
+        // A live PS must survive any byte salad a client throws at it:
+        // this sweep feeds deterministic PRNG garbage, every strict
+        // prefix of every real message, and random bit flips through
+        // the decoder.  The assertion is simply "Err, never panic".
+        use crate::util::rng::Xoshiro256pp;
+        let mut rng = Xoshiro256pp::seed_from_u64(0xF422);
+        let mut buf = Vec::new();
+        for _ in 0..2000 {
+            let len = rng.next_below(96) as usize;
+            buf.clear();
+            for _ in 0..len {
+                buf.push((rng.next_u64() & 0xFF) as u8);
+            }
+            let _ = Message::decode(&buf);
+        }
+        for msg in all_messages() {
+            let enc = msg.encode();
+            for cut in 0..enc.len() {
+                assert!(Message::decode(&enc[..cut]).is_err(), "{msg:?} cut {cut}");
+            }
+            for _ in 0..200 {
+                let mut m = enc.clone();
+                let i = rng.next_below(m.len() as u64) as usize;
+                m[i] ^= 1u8 << rng.next_below(8);
+                let _ = Message::decode(&m);
+            }
+        }
+    }
+
+    #[test]
+    fn adversarial_headers_are_rejected_without_allocation_blowup() {
+        // PushUpdate header declaring one rank-2 tensor of u32::MAX ×
+        // u32::MAX elements: the checked shape product must error.
+        let mut evil = vec![2u8]; // TAG_PUSH
+        evil.extend_from_slice(&7u32.to_le_bytes()); // worker
+        evil.extend_from_slice(&1u64.to_le_bytes()); // iter
+        evil.extend_from_slice(&0.5f32.to_le_bytes()); // test_loss
+        evil.extend_from_slice(&1.0f64.to_le_bytes()); // train_time
+        evil.push(0); // fp16 = false
+        evil.extend_from_slice(&1u32.to_le_bytes()); // 1 tensor
+        evil.push(2); // rank 2
+        evil.extend_from_slice(&u32::MAX.to_le_bytes());
+        evil.extend_from_slice(&u32::MAX.to_le_bytes());
+        assert!(matches!(Message::decode(&evil), Err(WireError::Malformed(_))));
+
+        // Absurd tensor count and rank are rejected up front.
+        let mut many = vec![5u8]; // TAG_MODEL
+        many.extend_from_slice(&1u64.to_le_bytes());
+        many.push(0);
+        many.extend_from_slice(&1_000_000u32.to_le_bytes());
+        assert!(matches!(Message::decode(&many), Err(WireError::Malformed(_))));
+
+        let mut deep = vec![5u8];
+        deep.extend_from_slice(&1u64.to_le_bytes());
+        deep.push(0);
+        deep.extend_from_slice(&1u32.to_le_bytes());
+        deep.push(9); // rank 9 > 8
+        assert!(matches!(Message::decode(&deep), Err(WireError::Malformed(_))));
+
+        // Register with a multi-megabyte declared string length.
+        let mut long = vec![1u8]; // TAG_REGISTER
+        long.extend_from_slice(&0u32.to_le_bytes());
+        long.extend_from_slice(&(64u32 << 20).to_le_bytes());
+        assert!(matches!(Message::decode(&long), Err(WireError::Malformed(_))));
+    }
+
+    #[test]
+    fn param_vec_codec_roundtrips_and_reports_consumption() {
+        let pv = sample_params();
+        let mut buf = b"hdr".to_vec(); // append semantics: keep a prefix
+        encode_param_vec(&pv, false, &mut buf);
+        let used_at = buf.len();
+        buf.extend_from_slice(b"tail");
+        let (back, used) = decode_param_vec(&buf[3..]).unwrap();
+        assert_eq!(back, pv);
+        assert_eq!(used, used_at - 3);
+        // Truncated tensor bodies error.
+        assert!(decode_param_vec(&buf[3..used_at - 1]).is_err());
+        // And the bytes match the in-message payload layout exactly.
+        let msg = Message::GlobalModel {
+            version: 0,
+            params: TensorPayload::new(pv, false),
+        };
+        let enc = msg.encode();
+        assert_eq!(&buf[3..used_at], &enc[9..]); // skip tag + version
     }
 
     #[test]

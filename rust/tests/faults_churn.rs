@@ -1,0 +1,163 @@
+//! Fault-injection integration: churned runs stay bit-identical per
+//! seed across all six drivers, workers actually leave/rejoin, the
+//! traffic ledger still balances, and Hermes keeps its convergence-time
+//! advantage over BSP under crash/rejoin churn (ISSUE 2 acceptance).
+
+use hermes_dml::config::RunConfig;
+use hermes_dml::exp::scaled_cfg;
+use hermes_dml::faults::FaultPlan;
+use hermes_dml::frameworks::{run_framework, ALL};
+use hermes_dml::metrics::RunMetrics;
+use hermes_dml::runtime::MockRuntime;
+
+/// A busy plan exercising every fault kind early enough that even a
+/// fast-converging run experiences it: worker 0 crashes at t=1 and
+/// rejoins at t=3; worker 3's link degrades 8× for 4s; worker 5 takes a
+/// 3× K spike for 4s.
+fn busy_plan() -> FaultPlan {
+    FaultPlan::new()
+        .crash_rejoin(0, 1.0, 2.0)
+        .degrade_link(3, 0.5, 4.0, 8.0)
+        .k_spike(5, 0.5, 4.0, 3.0)
+}
+
+fn churned_cfg(fw: &str) -> RunConfig {
+    let mut cfg = scaled_cfg("mock", fw);
+    cfg.max_iters = 220;
+    cfg.faults.plan = busy_plan();
+    cfg
+}
+
+fn run(cfg: RunConfig) -> RunMetrics {
+    run_framework(cfg, Box::new(MockRuntime::new())).unwrap()
+}
+
+#[test]
+fn churned_runs_are_bit_identical_per_seed_for_every_framework() {
+    for fw in ALL {
+        let a = run(churned_cfg(fw));
+        let b = run(churned_cfg(fw));
+        assert!(a.fault_crashes >= 1, "{fw}: crash never applied");
+        assert_eq!(a.iterations, b.iterations, "{fw}");
+        assert_eq!(a.virtual_time.to_bits(), b.virtual_time.to_bits(), "{fw}");
+        assert_eq!(a.final_accuracy.to_bits(), b.final_accuracy.to_bits(), "{fw}");
+        assert_eq!(a.final_loss.to_bits(), b.final_loss.to_bits(), "{fw}");
+        assert_eq!(a.bytes, b.bytes, "{fw}");
+        assert_eq!(a.api_calls, b.api_calls, "{fw}");
+        assert_eq!(a.global_updates, b.global_updates, "{fw}");
+        assert_eq!(a.curve, b.curve, "{fw}");
+        assert_eq!(a.fault_crashes, b.fault_crashes, "{fw}");
+        assert_eq!(a.fault_rejoins, b.fault_rejoins, "{fw}");
+        // A different seed must actually change the run.
+        let mut cfg = churned_cfg(fw);
+        cfg.seed = 4242;
+        let c = run(cfg);
+        assert!(
+            c.virtual_time != a.virtual_time || c.iterations != a.iterations,
+            "{fw}: seed had no effect under faults"
+        );
+    }
+}
+
+#[test]
+fn crashed_worker_rejoins_and_keeps_iterating() {
+    for fw in ["hermes", "asp", "bsp"] {
+        // Fixed-length run (no convergence stop) so every framework is
+        // guaranteed to still be alive well past the rejoin at t=3.
+        let mut cfg = churned_cfg(fw);
+        cfg.target_acc = 1.1;
+        cfg.hp.patience = 1000;
+        let run = run(cfg);
+        assert_eq!(run.fault_crashes, 1, "{fw}");
+        assert_eq!(run.fault_rejoins, 1, "{fw}");
+        // Nobody is down at the end: worker 0 rejoined.
+        assert!(run.crashed_workers.is_empty(), "{fw}: {:?}", run.crashed_workers);
+        // Worker 0 trained after its rejoin at t=3 (the resync worked).
+        let post_rejoin = run.workers[0]
+            .train_times
+            .iter()
+            .filter(|&&(t, _)| t > 3.0)
+            .count();
+        assert!(post_rejoin > 0, "{fw}: worker 0 never resumed after rejoin");
+    }
+}
+
+#[test]
+fn crash_without_rejoin_removes_the_worker_for_good() {
+    let mut cfg = scaled_cfg("mock", "bsp");
+    cfg.max_iters = 180;
+    cfg.faults.plan = FaultPlan::new().crash(2, 1.5);
+    let run = run(cfg);
+    assert_eq!(run.fault_crashes, 1);
+    assert_eq!(run.fault_rejoins, 0);
+    assert_eq!(run.crashed_workers, vec![2]);
+    // The survivors kept the run alive well past the crash.
+    assert!(run.virtual_time > 1.5);
+    let survivor_iters: u64 = run
+        .workers
+        .iter()
+        .enumerate()
+        .filter(|&(i, _)| i != 2)
+        .map(|(_, w)| w.iterations)
+        .sum();
+    assert!(survivor_iters > run.workers[2].iterations * 2);
+}
+
+#[test]
+fn traffic_ledger_balances_after_a_churned_run() {
+    // Per-worker byte/API-call totals must still sum to the aggregate
+    // after crashes, rejoins, resyncs and pool re-splits.
+    for fw in ["hermes", "ssp", "selsync"] {
+        let run = run(churned_cfg(fw));
+        let bytes: u64 = run.workers.iter().map(|w| w.bytes).sum();
+        let calls: u64 = run.workers.iter().map(|w| w.api_calls).sum();
+        assert_eq!(bytes, run.bytes, "{fw}: byte ledger broken");
+        assert_eq!(calls, run.api_calls, "{fw}: api-call ledger broken");
+        assert!(bytes > 0, "{fw}");
+    }
+}
+
+#[test]
+fn hermes_retains_convergence_advantage_over_bsp_under_churn() {
+    // ISSUE 2 acceptance: with ≥1 crash/rejoin per run, Hermes still
+    // reaches the target accuracy in less virtual time than BSP (the
+    // straggler-robustness headline on the churn axis).
+    let hermes = run(churned_cfg("hermes"));
+    let bsp = run(churned_cfg("bsp"));
+    assert!(hermes.fault_crashes >= 1 && hermes.fault_rejoins >= 1);
+    assert!(bsp.fault_crashes >= 1 && bsp.fault_rejoins >= 1);
+    assert!(
+        hermes.virtual_time < bsp.virtual_time,
+        "hermes {:.1}s not faster than BSP {:.1}s under churn",
+        hermes.virtual_time,
+        bsp.virtual_time
+    );
+    // And it still communicates less per iteration than ASP.
+    let asp = run(churned_cfg("asp"));
+    let rate = |r: &RunMetrics| r.bytes as f64 / r.iterations.max(1) as f64;
+    assert!(
+        rate(&hermes) < 0.6 * rate(&asp),
+        "hermes {:.0} B/iter vs asp {:.0} B/iter",
+        rate(&hermes),
+        rate(&asp)
+    );
+}
+
+#[test]
+fn never_firing_plan_leaves_the_trajectory_bit_identical() {
+    // Guard on the fault engine's zero-impact property: a plan whose
+    // only event fires long after the run ends must not perturb the
+    // trajectory at all (no membership change, no re-split, no bytes).
+    for fw in ["bsp", "asp", "hermes"] {
+        let mut cfg = scaled_cfg("mock", fw);
+        cfg.max_iters = 200;
+        let plain = run(cfg.clone());
+        cfg.faults.plan = FaultPlan::new().crash_rejoin(0, 50_000.0, 10.0);
+        let armed = run(cfg);
+        assert_eq!(plain.virtual_time.to_bits(), armed.virtual_time.to_bits(), "{fw}");
+        assert_eq!(plain.bytes, armed.bytes, "{fw}");
+        assert_eq!(plain.iterations, armed.iterations, "{fw}");
+        assert_eq!(plain.final_loss.to_bits(), armed.final_loss.to_bits(), "{fw}");
+        assert_eq!(armed.fault_crashes, 0, "{fw}");
+    }
+}

@@ -1,10 +1,12 @@
 //! Live threaded TCP deployment: a real PS server + worker clients
-//! exchanging the binary wire protocol — Python-free request path.
+//! exchanging the binary wire protocol — Python-free request path —
+//! plus the elastic-worker paths: kill + reconnect with state resync,
+//! and heartbeat-stall lease expiry (DESIGN.md §10).
 
 use std::time::Duration;
 
 use hermes_dml::config::RunConfig;
-use hermes_dml::live::run_live;
+use hermes_dml::live::{run_live, run_live_churn, ChurnKind, LiveChurn};
 
 #[test]
 fn live_cluster_trains_over_tcp() {
@@ -27,6 +29,53 @@ fn live_cluster_trains_over_tcp() {
         "global model never improved: {}",
         report.final_loss
     );
+}
+
+#[test]
+fn killed_worker_reconnects_and_rejoins_instead_of_wedging() {
+    let mut cfg = RunConfig::new("mock", "hermes");
+    cfg.hp.lr = 0.5;
+    cfg.hp.alpha = -0.9;
+    cfg.hp.window = 6;
+    cfg.steps_cap = 2;
+    let churn = LiveChurn {
+        worker: 1,
+        at: Duration::from_millis(500),
+        down_for: Duration::from_millis(400),
+        kind: ChurnKind::Kill,
+    };
+    let report =
+        run_live_churn(&cfg, 3, Duration::from_millis(2200), churn).unwrap();
+    // The killed worker re-registered exactly once and the run finished
+    // (every worker thread joined) instead of wedging on the dead peer.
+    assert_eq!(report.reconnects, 1, "{report:?}");
+    assert_eq!(report.workers, 3);
+    assert!(report.iterations > 10, "iterations {}", report.iterations);
+    assert!(report.final_loss.is_finite());
+    // The PS kept aggregating across the outage.
+    assert_eq!(report.global_updates, report.pushes);
+}
+
+#[test]
+fn stalled_worker_lease_expires_then_reacquires() {
+    let mut cfg = RunConfig::new("mock", "hermes");
+    cfg.hp.lr = 0.5;
+    cfg.hp.alpha = -0.9;
+    cfg.hp.window = 6;
+    cfg.steps_cap = 2;
+    let churn = LiveChurn {
+        worker: 0,
+        at: Duration::from_millis(400),
+        down_for: Duration::from_millis(700), // ≫ LEASE_TIMEOUT (250ms)
+        kind: ChurnKind::Stall,
+    };
+    let report =
+        run_live_churn(&cfg, 2, Duration::from_millis(2000), churn).unwrap();
+    // The wedged worker's heartbeats stopped long enough for the PS to
+    // reap its lease; no reconnect happened (the socket stayed open).
+    assert!(report.lease_expirations >= 1, "{report:?}");
+    assert_eq!(report.reconnects, 0);
+    assert!(report.iterations > 0);
 }
 
 #[test]

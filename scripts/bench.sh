@@ -5,11 +5,22 @@
 #   BENCH_table3.json — Table III end-to-end sweep, sequential vs
 #                       parallel wall time
 #
+# Usage: scripts/bench.sh [--smoke]
+#   --smoke   CI mode: tiny budget, small model, one seed, one parallel
+#             table3 pass — fast enough for every PR, same JSON shape
+#             (uploaded as workflow artifacts by .github/workflows/ci.yml).
+#
 # cargo runs bench binaries with the cwd set to the package root
 # (rust/), so the output paths are pinned to the repo root explicitly.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 root="$PWD"
+
+if [[ "${1:-}" == "--smoke" ]]; then
+  export HERMES_BENCH_SMOKE=1
+  export HERMES_BENCH_FAST=1
+  echo "== bench smoke mode (tiny model, 1 seed) =="
+fi
 
 BENCH_OUT="$root/BENCH_micro.json" cargo bench --bench micro_coordinator
 BENCH_TABLE3_OUT="$root/BENCH_table3.json" cargo bench --bench table3_end_to_end
