@@ -11,24 +11,15 @@
 use std::path::Path;
 
 use hermes_dml::alloc::{dual_binary_search, rebalance_pass, Allocation, TimeMonitor, MBS_DOMAIN};
-use hermes_dml::bench_harness::Bench;
+use hermes_dml::bench_harness::{bench_params as params_of, Bench};
 use hermes_dml::gup::Gup;
 use hermes_dml::ps::PsState;
-use hermes_dml::tensor::{BufferPool, ParamVec, Tensor};
+use hermes_dml::tensor::kernels::{self, Backend};
+use hermes_dml::tensor::{shards, BufferPool, ParamVec};
 use hermes_dml::util::f16;
 use hermes_dml::util::json::Json;
 use hermes_dml::util::rng::Xoshiro256pp;
 use hermes_dml::wire::{Message, TensorPayload};
-
-fn params_of(n: usize, seed: u64) -> ParamVec {
-    let mut rng = Xoshiro256pp::seed_from_u64(seed);
-    ParamVec {
-        tensors: vec![Tensor::new(
-            vec![n],
-            (0..n).map(|_| rng.normal() as f32).collect(),
-        )],
-    }
-}
 
 fn main() {
     // --smoke (scripts/bench.sh) / CI: tiny budget, small model only —
@@ -152,6 +143,59 @@ fn main() {
         pool.release(out);
     }
 
+    // ---- Kernel dispatch: the same op forced scalar vs SIMD (shards
+    // pinned to 1 so lanes, not threads, are measured).  Emits per-op
+    // GB/s and the speedups the CI bench-smoke gate enforces.
+    for &(label, n) in models {
+        Bench::report_header(&format!(
+            "kernel dispatch scalar vs SIMD ({label}, simd_available={})",
+            kernels::simd_available()
+        ));
+        let a = params_of(n, 5);
+        let bb = params_of(n, 6);
+        let mut out = ParamVec::zeros_like(&a);
+        let mut acc = ParamVec::zeros_like(&a);
+        let mut f16buf: Vec<u8> = Vec::new();
+        let mut f32buf: Vec<f32> = Vec::new();
+        for backend in [Backend::Scalar, Backend::Simd] {
+            // Without AVX2 a "simd" run would silently execute scalar
+            // code — skip it rather than record meaningless datapoints
+            // in the versioned perf trajectory.
+            if backend == Backend::Simd && !kernels::simd_available() {
+                continue;
+            }
+            let bn = match backend {
+                Backend::Scalar => "scalar",
+                Backend::Simd => "simd",
+            };
+            shards::with_shards(1, || {
+                kernels::with_backend(backend, || {
+                    b.run(&format!("axpy {bn} ({label})"), || {
+                        acc.axpy(0.5, &a);
+                    });
+                    b.run(&format!("weighted_sum {bn} ({label})"), || {
+                        ParamVec::weighted_sum_into(&a, 0.4, &bb, 0.6, &mut out);
+                        std::hint::black_box(&out);
+                    });
+                    b.run(&format!("delta_over_eta {bn} ({label})"), || {
+                        a.delta_over_eta_into(&bb, 0.05, &mut out);
+                        std::hint::black_box(&out);
+                    });
+                    let data = a.tensors[0].data();
+                    b.run(&format!("f16_encode {bn} ({label})"), || {
+                        f16buf.clear();
+                        f16::encode_f16_into(data, &mut f16buf);
+                        std::hint::black_box(&f16buf);
+                    });
+                    b.run(&format!("f16_decode {bn} ({label})"), || {
+                        f16::decode_f16_into(&f16buf, &mut f32buf);
+                        std::hint::black_box(&f32buf);
+                    });
+                })
+            });
+        }
+    }
+
     // ---- JSON perf report with before/after speedups.
     let mut extra: Vec<(String, Json)> = Vec::new();
     for (key, base, new) in [
@@ -169,6 +213,34 @@ fn main() {
             }
         }
     }
+    // Scalar→SIMD speedups + GB/s throughput per kernel (DESIGN.md §12
+    // explains how to read these; bytes/call counts loads + stores).
+    let mut simd_speedups: Vec<f64> = Vec::new();
+    for &(label, n) in models {
+        let tag = if label.starts_with("cnn") { "cnn" } else { "alexnet" };
+        for (op, bytes_per_call) in [
+            ("axpy", 12 * n),
+            ("weighted_sum", 12 * n),
+            ("delta_over_eta", 12 * n),
+            ("f16_encode", 6 * n),
+            ("f16_decode", 6 * n),
+        ] {
+            let scalar_name = format!("{op} scalar ({label})");
+            let simd_name = format!("{op} simd ({label})");
+            if let Some(sp) = b.speedup(&scalar_name, &simd_name) {
+                println!("speedup_simd_{op}_{tag}: {sp:.2}x");
+                extra.push((format!("speedup_simd_{op}_{tag}"), Json::Num(sp)));
+                simd_speedups.push(sp);
+            }
+            for (bn, name) in [("scalar", &scalar_name), ("simd", &simd_name)] {
+                if let Some(r) = b.results().iter().find(|r| r.name == **name) {
+                    let gbps = bytes_per_call as f64 / r.mean_ns;
+                    extra.push((format!("gbps_{op}_{bn}_{tag}"), Json::Num(gbps)));
+                }
+            }
+        }
+    }
+
     let out_path =
         std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_micro.json".to_string());
     let extra_refs: Vec<(&str, Json)> =
@@ -176,4 +248,27 @@ fn main() {
     b.write_json(Path::new(&out_path), "micro_coordinator", extra_refs)
         .expect("writing bench json");
     println!("\nwrote {out_path}");
+
+    // CI gate (HERMES_BENCH_ENFORCE_SIMD): fail when the SIMD path is
+    // slower than scalar on the micro kernels.  Geomean must not
+    // regress; any single kernel may jitter down to 0.8x on a noisy
+    // shared runner without failing the build on its own.
+    if std::env::var_os("HERMES_BENCH_ENFORCE_SIMD").is_some() {
+        if !kernels::simd_available() {
+            println!("simd-enforce: no AVX2 on this host, gate skipped");
+        } else if simd_speedups.is_empty() {
+            eprintln!("simd-enforce: no scalar-vs-SIMD pairs recorded — failing");
+            std::process::exit(1);
+        } else {
+            let geomean = (simd_speedups.iter().map(|s| s.ln()).sum::<f64>()
+                / simd_speedups.len() as f64)
+                .exp();
+            let worst = simd_speedups.iter().cloned().fold(f64::INFINITY, f64::min);
+            println!("simd-enforce: geomean {geomean:.2}x, worst {worst:.2}x");
+            if geomean < 1.0 || worst < 0.8 {
+                eprintln!("simd-enforce: SIMD slower than scalar — failing");
+                std::process::exit(1);
+            }
+        }
+    }
 }

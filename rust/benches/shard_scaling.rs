@@ -1,0 +1,119 @@
+//! 1-vs-N-shard scaling of the coordinator aggregation hot path
+//! (DESIGN.md §12): `axpy`, `weighted_sum`, a full 12-worker SyncSGD
+//! round and the f16 wire codec, each at a model size large enough for
+//! the shard layer to matter, run with the shard count pinned to 1, 2,
+//! 4 and 8.  Results (wall clock + GB/s per shard count, plus the
+//! N-shard-over-1-shard speedups) land in `BENCH_shard.json` at the
+//! repo root (override with `BENCH_SHARD_OUT`).  Run via
+//! `scripts/bench.sh --record`.
+//!
+//! Shard counts are forced through `shards::with_shards`, the same hook
+//! the bit-equality property tests use — what is measured here is
+//! exactly what `tests/coordinator_props.rs` proves bit-identical.
+
+use std::path::Path;
+
+use hermes_dml::bench_harness::{bench_params as params_of, Bench};
+use hermes_dml::ps::PsState;
+use hermes_dml::tensor::{kernels, shards, ParamVec};
+use hermes_dml::util::f16;
+use hermes_dml::util::json::Json;
+
+const SHARD_COUNTS: [usize; 4] = [1, 2, 4, 8];
+
+fn main() {
+    let smoke = std::env::var("HERMES_BENCH_SMOKE").is_ok();
+    let (mut b, n, workers) = if smoke {
+        (Bench::new().with_budget(0.02).with_max_iters(20), 1 << 18, 4)
+    } else {
+        (Bench::new().with_budget(0.6).with_max_iters(400), 1 << 21, 12)
+    };
+    let elems_label = format!("{}K elems", n >> 10);
+    println!(
+        "shard scaling over {elems_label} ({} MB per buffer), {} hw threads, \
+         backend {:?}",
+        (n * 4) >> 20,
+        std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1),
+        kernels::active_backend(),
+    );
+
+    let a = params_of(n, 1);
+    let bb = params_of(n, 2);
+    let mut out = ParamVec::zeros_like(&a);
+    let mut acc = ParamVec::zeros_like(&a);
+    let grads: Vec<ParamVec> = (0..workers).map(|i| params_of(n, 10 + i as u64)).collect();
+    let mut ps = PsState::new(a.clone(), 0.05);
+    let mut f16buf: Vec<u8> = Vec::new();
+    let mut f32buf: Vec<f32> = Vec::new();
+
+    for &s in &SHARD_COUNTS {
+        Bench::report_header(&format!("{s} shard(s)"));
+        shards::with_shards(s, || {
+            b.run(&format!("axpy s={s}"), || {
+                acc.axpy(0.5, &a);
+            });
+            b.run(&format!("weighted_sum s={s}"), || {
+                ParamVec::weighted_sum_into(&a, 0.4, &bb, 0.6, &mut out);
+                std::hint::black_box(&out);
+            });
+            b.run(&format!("sync_sgd s={s}"), || {
+                ps.sync_sgd(&grads);
+                std::hint::black_box(&ps.params);
+            });
+            let data = a.tensors[0].data();
+            b.run(&format!("f16_encode s={s}"), || {
+                f16buf.clear();
+                f16::encode_f16_into(data, &mut f16buf);
+                std::hint::black_box(&f16buf);
+            });
+            b.run(&format!("f16_decode s={s}"), || {
+                f16::decode_f16_into(&f16buf, &mut f32buf);
+                std::hint::black_box(&f32buf);
+            });
+        });
+    }
+
+    // N-over-1 speedups + GB/s per (op, shard count).
+    let mut extra: Vec<(String, Json)> = Vec::new();
+    extra.push(("elems".to_string(), Json::Num(n as f64)));
+    extra.push((
+        "hw_threads".to_string(),
+        Json::Num(std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1) as f64),
+    ));
+    extra.push((
+        "simd_available".to_string(),
+        Json::Num(kernels::simd_available() as u8 as f64),
+    ));
+    // sync_sgd touches params+scratch+K grads; the rest stream 3 bufs,
+    // the codecs 1.5 buf-equivalents.
+    let op_bytes = [
+        ("axpy", 12 * n),
+        ("weighted_sum", 12 * n),
+        ("sync_sgd", (workers + 3) * 4 * n),
+        ("f16_encode", 6 * n),
+        ("f16_decode", 6 * n),
+    ];
+    for (op, bytes_per_call) in op_bytes {
+        for &s in &SHARD_COUNTS {
+            let name = format!("{op} s={s}");
+            if let Some(r) = b.results().iter().find(|r| r.name == name) {
+                let gbps = bytes_per_call as f64 / r.mean_ns;
+                extra.push((format!("gbps_{op}_s{s}"), Json::Num(gbps)));
+            }
+            if s > 1 {
+                if let Some(sp) = b.speedup(&format!("{op} s=1"), &name) {
+                    println!("speedup_{op}_s{s}_vs_1: {sp:.2}x");
+                    extra.push((format!("speedup_{op}_s{s}_vs_1"), Json::Num(sp)));
+                }
+            }
+        }
+    }
+
+    let out_path = std::env::var("BENCH_SHARD_OUT")
+        .unwrap_or_else(|_| "BENCH_shard.json".to_string());
+    let extra_refs: Vec<(&str, Json)> =
+        extra.iter().map(|(k, v)| (k.as_str(), v.clone())).collect();
+    b.write_json(Path::new(&out_path), "shard_scaling", extra_refs)
+        .expect("writing bench json");
+    println!("\nwrote {out_path}");
+}

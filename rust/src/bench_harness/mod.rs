@@ -8,7 +8,22 @@
 use std::path::Path;
 use std::time::Instant;
 
+use crate::tensor::{ParamVec, Tensor};
 use crate::util::json::Json;
+use crate::util::rng::Xoshiro256pp;
+
+/// Deterministic dense [`ParamVec`] for benches: one rank-1 tensor of
+/// `n` standard normals drawn from `seed`.  Shared by the bench
+/// binaries so the micro and shard reports measure identical data.
+pub fn bench_params(n: usize, seed: u64) -> ParamVec {
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    ParamVec {
+        tensors: vec![Tensor::new(
+            vec![n],
+            (0..n).map(|_| rng.normal() as f32).collect(),
+        )],
+    }
+}
 
 #[derive(Debug, Clone)]
 pub struct BenchResult {

@@ -63,14 +63,26 @@ where
     if n == 0 {
         return Ok(Vec::new());
     }
-    let run_one = |job: &SweepJob| -> Result<RunMetrics> {
+    let threads = threads.clamp(1, n);
+    let run_one = move |job: &SweepJob| -> Result<RunMetrics> {
         let rt = make_rt(job)?;
-        let mut run = run_framework_opts(job.cfg.clone(), rt, job.record_timeline)?;
+        let exec = || run_framework_opts(job.cfg.clone(), rt, job.record_timeline);
+        // A parallel sweep already saturates the cores with job-level
+        // parallelism; letting every tensor op inside a job fan out
+        // over `tensor::shards` workers on top of that would
+        // oversubscribe (threads × shards) and pay a scoped-spawn per
+        // kernel call.  Worker threads therefore pin the shard layer to
+        // inline execution — bit-identical either way (DESIGN.md §12),
+        // so the sequential-vs-parallel equality below is unaffected.
+        let mut run = if threads > 1 {
+            crate::tensor::shards::with_shards(1, exec)?
+        } else {
+            exec()?
+        };
         run.framework = job.label.clone();
         Ok(run)
     };
 
-    let threads = threads.clamp(1, n);
     if threads == 1 {
         return jobs.iter().map(|job| run_one(job)).collect();
     }

@@ -44,8 +44,18 @@ pub struct SimEnv {
     /// Scratch [`ParamVec`] buffers shared by the drivers: gradients
     /// and snapshots are leased here instead of cloned per message, so
     /// steady-state aggregation rounds allocate nothing (DESIGN.md §8).
+    /// The algebra the drivers run over these buffers (the
+    /// `delta_over_eta_into` gradient recovery here in the fan-in, the
+    /// Eq. 1/Alg. 2 aggregation in [`PsState`]) is SIMD-dispatched and
+    /// auto-sharded by the tensor layer (DESIGN.md §12) — identical
+    /// bits on every backend and shard count, so the DES stays a pure
+    /// function of its seed.  The pool's free list is growth-capped;
+    /// churned runs park at most
+    /// [`BufferPool::DEFAULT_MAX_PARKED`] buffers.
     ///
     /// [`ParamVec`]: crate::tensor::ParamVec
+    /// [`BufferPool::DEFAULT_MAX_PARKED`]:
+    /// crate::tensor::BufferPool::DEFAULT_MAX_PARKED
     pub pool: BufferPool,
     /// Current allocation per worker (for the rebalancer).
     pub allocs: Vec<Allocation>,

@@ -448,7 +448,12 @@ fn connect_worker(
 /// frame-body, encode and recovered-G buffers are connection-scoped and
 /// reused across pushes; the reply still clones `ps.params` into its
 /// owned payload (the one remaining live-mode copy — removing it needs
-/// a borrowed `TensorPayload`, see DESIGN.md §8).
+/// a borrowed `TensorPayload`, see DESIGN.md §8).  Frame encode/decode
+/// (f16 and f32 tensor payloads) and the `delta_over_eta_into` G
+/// recovery below run through the SIMD-dispatched, auto-sharded tensor
+/// kernels (DESIGN.md §12), so a big-model push parallelizes across
+/// cores while the PS mutex is held for the same (bit-identical)
+/// result.
 fn serve_worker(stream: TcpStream, srv: Arc<PsShared>, fp16: bool) -> Result<()> {
     // The listener is non-blocking (accept loop); handler sockets must
     // block on reads regardless of what they inherited.

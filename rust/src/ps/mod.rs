@@ -11,7 +11,7 @@ use anyhow::Result;
 
 use crate::data::Probe;
 use crate::runtime::{EvalOut, ModelRuntime};
-use crate::tensor::ParamVec;
+use crate::tensor::{shards, ParamVec};
 use crate::wire::{decode_param_vec, encode_param_vec, WireError};
 
 /// Magic prefix of a PS snapshot.
@@ -80,16 +80,33 @@ impl PsState {
     /// **SyncSGD** (Eq. 1): one superstep's aggregation.  `grads` are
     /// the per-worker local gradient sums of this round (direction of
     /// descent, i.e. w ← w − η·mean g).  The mean accumulates in a
-    /// reused scratch buffer — no per-round allocation.
+    /// reused scratch buffer — no per-round allocation — and at model
+    /// sizes past the shard threshold the whole round (zero, K
+    /// accumulates, apply) runs **fused over parallel shards** in one
+    /// scoped-thread region: elementwise ops over disjoint flat ranges,
+    /// so the result is bit-identical for any shard count
+    /// (DESIGN.md §12; property-tested across all six drivers).
     pub fn sync_sgd(&mut self, grads: &[ParamVec]) {
         assert!(!grads.is_empty());
         self.scratch_a.resize_like(&self.params);
-        self.scratch_a.fill(0.0);
         let w = 1.0 / grads.len() as f32;
-        for g in grads {
-            self.scratch_a.axpy(w, g);
+        let s = shards::shard_count(self.params.num_elements());
+        if s > 1 {
+            shards::par_sync_sgd(
+                &mut self.params,
+                &mut self.scratch_a,
+                grads,
+                w,
+                self.eta,
+                s,
+            );
+        } else {
+            self.scratch_a.fill(0.0);
+            for g in grads {
+                self.scratch_a.axpy(w, g);
+            }
+            self.params.axpy(-self.eta, &self.scratch_a);
         }
-        self.params.axpy(-self.eta, &self.scratch_a);
         self.bump();
     }
 
@@ -103,6 +120,10 @@ impl PsState {
     /// gradient from w₀; `t_w` its test loss.  Needs the runtime to
     /// evaluate the temporary model w_temp = w₀ − η·G (and the merged
     /// global).  Returns the (L_temp, L) pair for metrics/Fig. 13.
+    /// Every `copy_from`/`axpy`/`weighted_sum_into` below is
+    /// SIMD-dispatched and auto-sharded by the tensor layer
+    /// (DESIGN.md §12) — the per-push algebra scales with cores at
+    /// large model sizes while staying bit-identical.
     pub fn loss_based_sgd(
         &mut self,
         g: &ParamVec,

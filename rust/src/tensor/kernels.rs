@@ -1,0 +1,701 @@
+//! Runtime-dispatched compute kernels for the aggregation algebra
+//! (DESIGN.md §12).  Every elementwise hot op — `axpy`, `scale`,
+//! `weighted_sum`, `delta_over_eta`, `copy`, `fill`, and the f16/f32
+//! wire-codec inner loops — exists twice: a portable scalar loop and an
+//! x86_64 AVX2 (+F16C for the f16 encode) implementation selected once
+//! at runtime via `is_x86_feature_detected!`.  No new dependencies:
+//! only `std::arch`.
+//!
+//! **Bit-identity contract.**  The SIMD paths perform the *same*
+//! per-element operations in the same order as the scalar loops —
+//! explicit mul-then-add (never FMA, which would fuse the rounding
+//! step), IEEE division (never a reciprocal approximation), and a
+//! scalar tail for the `len % 8` remainder lanes.  Elementwise ops
+//! reassociate nothing, so scalar and SIMD results are bit-identical
+//! for all non-NaN inputs (NaN *payload* propagation through `mul` is
+//! the one case IEEE leaves to the hardware; parameter/gradient tensors
+//! carry no NaNs).  Property tests in this file and in
+//! `tests/coordinator_props.rs` enforce the contract over random
+//! shapes, remainder lanes and the full f16 bit space.
+//!
+//! Reductions (`l2_norm`, `relative_change`) are deliberately *not*
+//! here: vectorizing a sum reassociates the additions and changes the
+//! bits (see DESIGN.md §12 and `ParamVec::l2_norm`).
+//!
+//! Dispatch order: `with_backend` override (tests/benches) →
+//! `HERMES_FORCE_SCALAR` env var → CPU detection.  All three resolve to
+//! the same results; only the instructions differ.
+
+use std::cell::Cell;
+use std::sync::OnceLock;
+
+/// Which implementation family executes the kernels.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    /// Portable scalar loops — always available, the reference
+    /// semantics.
+    Scalar,
+    /// x86_64 AVX2 lanes (+F16C for the f16 encode when the CPU has
+    /// it).  Requesting `Simd` on a CPU without AVX2 silently runs
+    /// `Scalar` — the results are bit-identical either way.
+    Simd,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Caps {
+    avx2: bool,
+    f16c: bool,
+}
+
+fn caps() -> Caps {
+    static C: OnceLock<Caps> = OnceLock::new();
+    *C.get_or_init(|| {
+        #[allow(unused_mut)]
+        let mut c = Caps { avx2: false, f16c: false };
+        #[cfg(target_arch = "x86_64")]
+        {
+            c.avx2 = std::arch::is_x86_feature_detected!("avx2");
+            c.f16c = c.avx2 && std::arch::is_x86_feature_detected!("f16c");
+        }
+        c
+    })
+}
+
+/// Does this CPU have the AVX2 kernel path at all?
+pub fn simd_available() -> bool {
+    caps().avx2
+}
+
+/// Does this CPU have the hardware f16 encode (F16C) path?
+pub fn f16c_available() -> bool {
+    caps().f16c
+}
+
+const MODE_AUTO: u8 = 0;
+const MODE_SCALAR: u8 = 1;
+const MODE_SIMD: u8 = 2;
+
+thread_local! {
+    /// Per-thread test/bench override; `MODE_AUTO` defers to env +
+    /// detection.  Thread-local so concurrently running tests can force
+    /// different backends without racing each other; the shard runners
+    /// re-apply the caller's resolved backend on their scoped workers.
+    static OVERRIDE: Cell<u8> = const { Cell::new(MODE_AUTO) };
+}
+
+fn env_default() -> Backend {
+    static D: OnceLock<Backend> = OnceLock::new();
+    *D.get_or_init(|| {
+        let forced = std::env::var("HERMES_FORCE_SCALAR")
+            .map(|v| v != "0")
+            .unwrap_or(false);
+        if !forced && caps().avx2 {
+            Backend::Simd
+        } else {
+            Backend::Scalar
+        }
+    })
+}
+
+/// The backend the next kernel call on this thread dispatches to.
+pub fn active_backend() -> Backend {
+    match OVERRIDE.with(|c| c.get()) {
+        MODE_SCALAR => Backend::Scalar,
+        MODE_SIMD if caps().avx2 => Backend::Simd,
+        MODE_SIMD => Backend::Scalar,
+        _ => env_default(),
+    }
+}
+
+/// Run `f` with this thread's kernel backend forced to `b`, restoring
+/// the previous mode afterwards.  A test/bench hook; because every
+/// backend is bit-identical, forcing is a perf choice, never a semantic
+/// one.  The shard runners re-apply the caller's resolved backend on
+/// their scoped workers, so a forced section shards onto the same
+/// backend; other threads are unaffected.
+pub fn with_backend<R>(b: Backend, f: impl FnOnce() -> R) -> R {
+    let mode = match b {
+        Backend::Scalar => MODE_SCALAR,
+        Backend::Simd => MODE_SIMD,
+    };
+    let prev = OVERRIDE.with(|c| c.replace(mode));
+    let out = f();
+    OVERRIDE.with(|c| c.set(prev));
+    out
+}
+
+// ------------------------------------------------------- dispatchers
+
+/// dst\[i\] = v
+pub fn fill(dst: &mut [f32], v: f32) {
+    match active_backend() {
+        #[cfg(target_arch = "x86_64")]
+        Backend::Simd => unsafe { avx2::fill(dst, v) },
+        _ => scalar::fill(dst, v),
+    }
+}
+
+/// dst ← src (lengths must match).
+pub fn copy(dst: &mut [f32], src: &[f32]) {
+    // memcpy is optimal on every backend; dispatch would add nothing.
+    scalar::copy(dst, src);
+}
+
+/// dst\[i\] *= alpha
+pub fn scale_in_place(dst: &mut [f32], alpha: f32) {
+    match active_backend() {
+        #[cfg(target_arch = "x86_64")]
+        Backend::Simd => unsafe { avx2::scale_in_place(dst, alpha) },
+        _ => scalar::scale_in_place(dst, alpha),
+    }
+}
+
+/// dst\[i\] += alpha * y\[i\]
+pub fn axpy_in_place(dst: &mut [f32], alpha: f32, y: &[f32]) {
+    match active_backend() {
+        #[cfg(target_arch = "x86_64")]
+        Backend::Simd => unsafe { avx2::axpy_in_place(dst, alpha, y) },
+        _ => scalar::axpy_in_place(dst, alpha, y),
+    }
+}
+
+/// dst\[i\] = x\[i\] + alpha * y\[i\]
+pub fn axpy_out(dst: &mut [f32], x: &[f32], alpha: f32, y: &[f32]) {
+    match active_backend() {
+        #[cfg(target_arch = "x86_64")]
+        Backend::Simd => unsafe { avx2::axpy_out(dst, x, alpha, y) },
+        _ => scalar::axpy_out(dst, x, alpha, y),
+    }
+}
+
+/// dst\[i\] = wa * a\[i\] + wb * b\[i\]
+pub fn weighted_sum(dst: &mut [f32], a: &[f32], wa: f32, b: &[f32], wb: f32) {
+    match active_backend() {
+        #[cfg(target_arch = "x86_64")]
+        Backend::Simd => unsafe { avx2::weighted_sum(dst, a, wa, b, wb) },
+        _ => scalar::weighted_sum(dst, a, wa, b, wb),
+    }
+}
+
+/// dst\[i\] = (a\[i\] - b\[i\]) / eta   (true IEEE division, both paths)
+pub fn delta_over_eta(dst: &mut [f32], a: &[f32], b: &[f32], eta: f32) {
+    match active_backend() {
+        #[cfg(target_arch = "x86_64")]
+        Backend::Simd => unsafe { avx2::delta_over_eta(dst, a, b, eta) },
+        _ => scalar::delta_over_eta(dst, a, b, eta),
+    }
+}
+
+/// Encode `xs` as little-endian f16 into `dst` (`dst.len() == 2*xs.len()`).
+/// SIMD path = hardware F16C with round-to-nearest-even — the same
+/// rounding `util::f16::f32_to_f16_bits` implements in software
+/// (equality over the full f16-exact space is tested below).
+pub fn f16_encode(xs: &[f32], dst: &mut [u8]) {
+    debug_assert_eq!(dst.len(), 2 * xs.len());
+    match active_backend() {
+        #[cfg(target_arch = "x86_64")]
+        Backend::Simd if caps().f16c => unsafe { f16c::encode(xs, dst) },
+        _ => scalar::f16_encode(xs, dst),
+    }
+}
+
+/// Decode little-endian f16 bytes into `dst` (`src.len() == 2*dst.len()`).
+/// SIMD path = integer expand + one exact power-of-two multiply (the
+/// "magic multiply": normals and subnormals scale exactly, inf/NaN are
+/// blended from the carried bits) — bit-identical to the scalar decode
+/// for every one of the 65536 f16 patterns, signaling NaNs included.
+pub fn f16_decode(src: &[u8], dst: &mut [f32]) {
+    debug_assert_eq!(src.len(), 2 * dst.len());
+    match active_backend() {
+        #[cfg(target_arch = "x86_64")]
+        Backend::Simd => unsafe { avx2::f16_decode(src, dst) },
+        _ => scalar::f16_decode(src, dst),
+    }
+}
+
+/// Serialize `xs` as little-endian f32 bytes (`dst.len() == 4*xs.len()`).
+/// On little-endian targets this is one memcpy regardless of backend;
+/// the portable loop only runs on big-endian hosts.
+pub fn f32_write_le(xs: &[f32], dst: &mut [u8]) {
+    debug_assert_eq!(dst.len(), 4 * xs.len());
+    if cfg!(target_endian = "little") {
+        // SAFETY: f32 has no padding; on LE hosts its memory bytes are
+        // exactly its to_le_bytes(), and the ranges cannot overlap
+        // (&mut exclusivity).
+        unsafe {
+            std::ptr::copy_nonoverlapping(
+                xs.as_ptr() as *const u8,
+                dst.as_mut_ptr(),
+                dst.len(),
+            );
+        }
+    } else {
+        scalar::f32_write_le(xs, dst);
+    }
+}
+
+/// Deserialize little-endian f32 bytes (`src.len() == 4*dst.len()`).
+pub fn f32_read_le(src: &[u8], dst: &mut [f32]) {
+    debug_assert_eq!(src.len(), 4 * dst.len());
+    if cfg!(target_endian = "little") {
+        // SAFETY: see `f32_write_le`; every u32 bit pattern is a valid
+        // f32 (possibly NaN), so copying raw bytes is sound.
+        unsafe {
+            std::ptr::copy_nonoverlapping(
+                src.as_ptr(),
+                dst.as_mut_ptr() as *mut u8,
+                src.len(),
+            );
+        }
+    } else {
+        scalar::f32_read_le(src, dst);
+    }
+}
+
+// ---------------------------------------------------- scalar backend
+
+mod scalar {
+    use crate::util::f16::{f16_bits_to_f32, f32_to_f16_bits};
+
+    pub fn fill(dst: &mut [f32], v: f32) {
+        for x in dst {
+            *x = v;
+        }
+    }
+
+    pub fn copy(dst: &mut [f32], src: &[f32]) {
+        dst.copy_from_slice(src);
+    }
+
+    pub fn scale_in_place(dst: &mut [f32], alpha: f32) {
+        for x in dst {
+            *x *= alpha;
+        }
+    }
+
+    pub fn axpy_in_place(dst: &mut [f32], alpha: f32, y: &[f32]) {
+        for (x, y) in dst.iter_mut().zip(y) {
+            *x += alpha * y;
+        }
+    }
+
+    pub fn axpy_out(dst: &mut [f32], x: &[f32], alpha: f32, y: &[f32]) {
+        for ((z, x), y) in dst.iter_mut().zip(x).zip(y) {
+            *z = x + alpha * y;
+        }
+    }
+
+    pub fn weighted_sum(dst: &mut [f32], a: &[f32], wa: f32, b: &[f32], wb: f32) {
+        for ((z, x), y) in dst.iter_mut().zip(a).zip(b) {
+            *z = wa * x + wb * y;
+        }
+    }
+
+    pub fn delta_over_eta(dst: &mut [f32], a: &[f32], b: &[f32], eta: f32) {
+        for ((z, x), y) in dst.iter_mut().zip(a).zip(b) {
+            *z = (x - y) / eta;
+        }
+    }
+
+    pub fn f16_encode(xs: &[f32], dst: &mut [u8]) {
+        for (i, &x) in xs.iter().enumerate() {
+            dst[2 * i..2 * i + 2].copy_from_slice(&f32_to_f16_bits(x).to_le_bytes());
+        }
+    }
+
+    pub fn f16_decode(src: &[u8], dst: &mut [f32]) {
+        for (i, c) in src.chunks_exact(2).enumerate() {
+            dst[i] = f16_bits_to_f32(u16::from_le_bytes([c[0], c[1]]));
+        }
+    }
+
+    pub fn f32_write_le(xs: &[f32], dst: &mut [u8]) {
+        for (i, &x) in xs.iter().enumerate() {
+            dst[4 * i..4 * i + 4].copy_from_slice(&x.to_le_bytes());
+        }
+    }
+
+    pub fn f32_read_le(src: &[u8], dst: &mut [f32]) {
+        for (i, c) in src.chunks_exact(4).enumerate() {
+            dst[i] = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+        }
+    }
+}
+
+// ------------------------------------------------------ avx2 backend
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use std::arch::x86_64::*;
+
+    // Every function: 8-lane body + scalar tail performing the exact
+    // per-element expression of the scalar backend, in the same operand
+    // order.  SAFETY (all): caller guarantees the CPU has AVX2 (checked
+    // once by `caps()`); unaligned loads/stores are used throughout, so
+    // no alignment precondition; lane bounds are `i + 8 <= n`.
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn fill(dst: &mut [f32], v: f32) {
+        let n = dst.len();
+        let vv = _mm256_set1_ps(v);
+        let d = dst.as_mut_ptr();
+        let mut i = 0;
+        while i + 8 <= n {
+            _mm256_storeu_ps(d.add(i), vv);
+            i += 8;
+        }
+        while i < n {
+            dst[i] = v;
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn scale_in_place(dst: &mut [f32], alpha: f32) {
+        let n = dst.len();
+        let va = _mm256_set1_ps(alpha);
+        let d = dst.as_mut_ptr();
+        let mut i = 0;
+        while i + 8 <= n {
+            let x = _mm256_loadu_ps(d.add(i));
+            _mm256_storeu_ps(d.add(i), _mm256_mul_ps(x, va));
+            i += 8;
+        }
+        while i < n {
+            dst[i] *= alpha;
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn axpy_in_place(dst: &mut [f32], alpha: f32, y: &[f32]) {
+        let n = dst.len().min(y.len());
+        let va = _mm256_set1_ps(alpha);
+        let d = dst.as_mut_ptr();
+        let s = y.as_ptr();
+        let mut i = 0;
+        while i + 8 <= n {
+            let x = _mm256_loadu_ps(d.add(i));
+            let yv = _mm256_loadu_ps(s.add(i));
+            // mul then add — an FMA would round once instead of twice
+            // and diverge from the scalar bits.
+            _mm256_storeu_ps(d.add(i), _mm256_add_ps(x, _mm256_mul_ps(va, yv)));
+            i += 8;
+        }
+        while i < n {
+            dst[i] += alpha * y[i];
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn axpy_out(dst: &mut [f32], x: &[f32], alpha: f32, y: &[f32]) {
+        let n = dst.len().min(x.len()).min(y.len());
+        let va = _mm256_set1_ps(alpha);
+        let d = dst.as_mut_ptr();
+        let xs = x.as_ptr();
+        let ys = y.as_ptr();
+        let mut i = 0;
+        while i + 8 <= n {
+            let xv = _mm256_loadu_ps(xs.add(i));
+            let yv = _mm256_loadu_ps(ys.add(i));
+            _mm256_storeu_ps(d.add(i), _mm256_add_ps(xv, _mm256_mul_ps(va, yv)));
+            i += 8;
+        }
+        while i < n {
+            dst[i] = x[i] + alpha * y[i];
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn weighted_sum(dst: &mut [f32], a: &[f32], wa: f32, b: &[f32], wb: f32) {
+        let n = dst.len().min(a.len()).min(b.len());
+        let vwa = _mm256_set1_ps(wa);
+        let vwb = _mm256_set1_ps(wb);
+        let d = dst.as_mut_ptr();
+        let ap = a.as_ptr();
+        let bp = b.as_ptr();
+        let mut i = 0;
+        while i + 8 <= n {
+            let av = _mm256_loadu_ps(ap.add(i));
+            let bv = _mm256_loadu_ps(bp.add(i));
+            let t = _mm256_add_ps(_mm256_mul_ps(vwa, av), _mm256_mul_ps(vwb, bv));
+            _mm256_storeu_ps(d.add(i), t);
+            i += 8;
+        }
+        while i < n {
+            dst[i] = wa * a[i] + wb * b[i];
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn delta_over_eta(dst: &mut [f32], a: &[f32], b: &[f32], eta: f32) {
+        let n = dst.len().min(a.len()).min(b.len());
+        let ve = _mm256_set1_ps(eta);
+        let d = dst.as_mut_ptr();
+        let ap = a.as_ptr();
+        let bp = b.as_ptr();
+        let mut i = 0;
+        while i + 8 <= n {
+            let av = _mm256_loadu_ps(ap.add(i));
+            let bv = _mm256_loadu_ps(bp.add(i));
+            _mm256_storeu_ps(d.add(i), _mm256_div_ps(_mm256_sub_ps(av, bv), ve));
+            i += 8;
+        }
+        while i < n {
+            dst[i] = (a[i] - b[i]) / eta;
+            i += 1;
+        }
+    }
+
+    /// f16 → f32 via the exact "magic multiply": expand the 15
+    /// value bits into the f32 exponent/mantissa position and multiply
+    /// by 2¹¹² (a power of two — exact for normals *and* subnormals),
+    /// then blend in inf/NaN lanes rebuilt bit-by-bit exactly as the
+    /// scalar decoder does (so signaling NaNs stay signaling).
+    // The u8→__m128i pointer cast feeds an *unaligned* load intrinsic,
+    // so the stricter pointee alignment is never relied upon.
+    #[allow(clippy::cast_ptr_alignment)]
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn f16_decode(src: &[u8], dst: &mut [f32]) {
+        let n = dst.len().min(src.len() / 2);
+        let magic = _mm256_castsi256_ps(_mm256_set1_epi32(0x7780_0000)); // 2^112
+        let exp_mask = _mm256_set1_epi32(0x7C00);
+        let d = dst.as_mut_ptr();
+        let s = src.as_ptr();
+        let mut i = 0;
+        while i + 8 <= n {
+            let h = _mm_loadu_si128(s.add(2 * i) as *const __m128i);
+            let hw = _mm256_cvtepu16_epi32(h);
+            let sign =
+                _mm256_slli_epi32::<16>(_mm256_and_si256(hw, _mm256_set1_epi32(0x8000)));
+            let expmant =
+                _mm256_slli_epi32::<13>(_mm256_and_si256(hw, _mm256_set1_epi32(0x7FFF)));
+            let scaled = _mm256_mul_ps(_mm256_castsi256_ps(expmant), magic);
+            let is_special =
+                _mm256_cmpeq_epi32(_mm256_and_si256(hw, exp_mask), exp_mask);
+            let special = _mm256_or_si256(
+                _mm256_set1_epi32(0x7F80_0000),
+                _mm256_slli_epi32::<13>(_mm256_and_si256(hw, _mm256_set1_epi32(0x03FF))),
+            );
+            let body =
+                _mm256_blendv_epi8(_mm256_castps_si256(scaled), special, is_special);
+            _mm256_storeu_ps(d.add(i), _mm256_castsi256_ps(_mm256_or_si256(body, sign)));
+            i += 8;
+        }
+        while i < n {
+            dst[i] = crate::util::f16::f16_bits_to_f32(u16::from_le_bytes([
+                src[2 * i],
+                src[2 * i + 1],
+            ]));
+            i += 1;
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+mod f16c {
+    use std::arch::x86_64::*;
+
+    /// f32 → f16 through the hardware converter, explicitly pinned to
+    /// round-to-nearest-even — the rounding `f32_to_f16_bits`
+    /// implements in software (including subnormal results, overflow to
+    /// ±inf and NaN quieting), so the lanes match the scalar bytes.
+    /// SAFETY: caller guarantees AVX2+F16C (checked by `caps()`).
+    // u8→__m128i cast feeds an unaligned store — alignment not relied on.
+    #[allow(clippy::cast_ptr_alignment)]
+    #[target_feature(enable = "avx2,f16c")]
+    pub unsafe fn encode(xs: &[f32], dst: &mut [u8]) {
+        // imm8[1:0] = rounding control (00 = nearest-even), imm8[2] = 0
+        // so the immediate — not MXCSR — supplies the rounding.
+        const RN: i32 = _MM_FROUND_TO_NEAREST_INT;
+        let n = xs.len().min(dst.len() / 2);
+        let s = xs.as_ptr();
+        let d = dst.as_mut_ptr();
+        let mut i = 0;
+        while i + 8 <= n {
+            let v = _mm256_loadu_ps(s.add(i));
+            let h = _mm256_cvtps_ph::<RN>(v);
+            _mm_storeu_si128(d.add(2 * i) as *mut __m128i, h);
+            i += 8;
+        }
+        while i < n {
+            let b = crate::util::f16::f32_to_f16_bits(xs[i]).to_le_bytes();
+            dst[2 * i] = b[0];
+            dst[2 * i + 1] = b[1];
+            i += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::f16::{f16_bits_to_f32, f32_to_f16_bits};
+    use crate::util::rng::Xoshiro256pp;
+
+    fn rand_vec(rng: &mut Xoshiro256pp, n: usize) -> Vec<f32> {
+        (0..n).map(|_| (rng.normal() * 3.0) as f32).collect()
+    }
+
+    fn bits(xs: &[f32]) -> Vec<u32> {
+        xs.iter().map(|x| x.to_bits()).collect()
+    }
+
+    /// Lengths that exercise empty, single-lane, full-lane and
+    /// remainder-lane dispatch edges.
+    const EDGE_LENS: &[usize] = &[0, 1, 7, 8, 9, 15, 16, 17, 31, 100, 257];
+
+    #[test]
+    fn scalar_vs_simd_bit_identical_on_every_op() {
+        if !simd_available() {
+            return; // nothing to compare on this host
+        }
+        let mut rng = Xoshiro256pp::seed_from_u64(0x51D0);
+        for &n in EDGE_LENS {
+            let a = rand_vec(&mut rng, n);
+            let b = rand_vec(&mut rng, n);
+            let alpha = rng.normal() as f32;
+            let (wa, wb) = (rng.normal() as f32, rng.normal() as f32);
+            let eta = rng.uniform(0.001, 0.9) as f32;
+
+            let run = |backend: Backend| -> Vec<Vec<u32>> {
+                with_backend(backend, || {
+                    let mut outs = Vec::new();
+                    let mut d = a.clone();
+                    axpy_in_place(&mut d, alpha, &b);
+                    outs.push(bits(&d));
+                    let mut d = vec![0.0; n];
+                    axpy_out(&mut d, &a, alpha, &b);
+                    outs.push(bits(&d));
+                    let mut d = vec![0.0; n];
+                    weighted_sum(&mut d, &a, wa, &b, wb);
+                    outs.push(bits(&d));
+                    let mut d = vec![0.0; n];
+                    delta_over_eta(&mut d, &a, &b, eta);
+                    outs.push(bits(&d));
+                    let mut d = a.clone();
+                    scale_in_place(&mut d, alpha);
+                    outs.push(bits(&d));
+                    let mut d = vec![1.0; n];
+                    fill(&mut d, alpha);
+                    outs.push(bits(&d));
+                    outs
+                })
+            };
+            assert_eq!(run(Backend::Scalar), run(Backend::Simd), "n={n}");
+        }
+    }
+
+    #[test]
+    fn f16_decode_simd_matches_scalar_for_all_65536_patterns() {
+        if !simd_available() {
+            return;
+        }
+        // Every f16 bit pattern, laid out so lanes + tail both run.
+        let all: Vec<u8> = (0..=u16::MAX).flat_map(|h| h.to_le_bytes()).collect();
+        let n = all.len() / 2;
+        let mut want = vec![0.0f32; n];
+        let mut got = vec![0.0f32; n];
+        with_backend(Backend::Scalar, || f16_decode(&all, &mut want));
+        with_backend(Backend::Simd, || f16_decode(&all, &mut got));
+        for (i, (w, g)) in want.iter().zip(&got).enumerate() {
+            assert_eq!(w.to_bits(), g.to_bits(), "h={:#06x}", i as u16);
+        }
+    }
+
+    #[test]
+    fn f16_encode_simd_matches_scalar_incl_specials() {
+        if !f16c_available() {
+            return;
+        }
+        let mut xs: Vec<f32> = vec![
+            0.0,
+            -0.0,
+            1.0,
+            -1.0,
+            65504.0,
+            -65504.0,
+            65520.0, // rounds up to inf
+            1e10,
+            -1e10,
+            f32::INFINITY,
+            f32::NEG_INFINITY,
+            6.0e-8, // ~2⁻²⁴: rounds to the smallest subnormal
+            1.0e-8, // below half the smallest subnormal → zero
+            6.2e-5, // just inside the subnormal range
+            f16_bits_to_f32(0x0001),
+            f16_bits_to_f32(0x03FF),
+            1.0 + 1.0 / 2048.0, // RTNE tie, stays even
+            1.0 + 3.0 / 2048.0, // RTNE tie, rounds up to even
+        ];
+        let mut rng = Xoshiro256pp::seed_from_u64(0xF16C);
+        for _ in 0..10_000 {
+            let mag = 10f64.powf(rng.uniform(-9.0, 5.0));
+            xs.push((rng.normal() * mag) as f32);
+        }
+        let mut want = vec![0u8; 2 * xs.len()];
+        let mut got = vec![0u8; 2 * xs.len()];
+        with_backend(Backend::Scalar, || f16_encode(&xs, &mut want));
+        with_backend(Backend::Simd, || f16_encode(&xs, &mut got));
+        assert_eq!(want, got);
+        // NaN encodes to *a* NaN on both paths (payload equality is
+        // additionally expected, but NaN-ness is the contract).
+        let nan = [f32::NAN; 9];
+        let mut wn = vec![0u8; 18];
+        let mut gn = vec![0u8; 18];
+        with_backend(Backend::Scalar, || f16_encode(&nan, &mut wn));
+        with_backend(Backend::Simd, || f16_encode(&nan, &mut gn));
+        for c in wn.chunks_exact(2).chain(gn.chunks_exact(2)) {
+            let h = u16::from_le_bytes([c[0], c[1]]);
+            assert!(f16_bits_to_f32(h).is_nan());
+        }
+    }
+
+    #[test]
+    fn f32_le_codec_roundtrips_and_matches_to_le_bytes() {
+        let mut rng = Xoshiro256pp::seed_from_u64(0x1E);
+        for &n in EDGE_LENS {
+            let xs = rand_vec(&mut rng, n);
+            let mut enc = vec![0u8; 4 * n];
+            f32_write_le(&xs, &mut enc);
+            let want: Vec<u8> = xs.iter().flat_map(|x| x.to_le_bytes()).collect();
+            assert_eq!(enc, want);
+            let mut dec = vec![0.0f32; n];
+            f32_read_le(&enc, &mut dec);
+            assert_eq!(bits(&xs), bits(&dec));
+        }
+    }
+
+    #[test]
+    fn force_scalar_env_and_override_resolution() {
+        // The override wins over everything and restores cleanly.
+        let before = active_backend();
+        with_backend(Backend::Scalar, || {
+            assert_eq!(active_backend(), Backend::Scalar);
+        });
+        assert_eq!(active_backend(), before);
+        // Requesting SIMD clamps to what the CPU has.
+        with_backend(Backend::Simd, || {
+            let got = active_backend();
+            if simd_available() {
+                assert_eq!(got, Backend::Simd);
+            } else {
+                assert_eq!(got, Backend::Scalar);
+            }
+        });
+        // Encode↔decode roundtrip through the dispatched codec agrees
+        // with the pure-scalar converters.
+        let xs: Vec<f32> = (0..1000).map(|i| (i as f32 - 500.0) * 0.01).collect();
+        let mut enc = vec![0u8; 2 * xs.len()];
+        f16_encode(&xs, &mut enc);
+        let mut dec = vec![0.0f32; xs.len()];
+        f16_decode(&enc, &mut dec);
+        for (x, d) in xs.iter().zip(&dec) {
+            let h = f32_to_f16_bits(*x);
+            assert_eq!(d.to_bits(), f16_bits_to_f32(h).to_bits());
+        }
+    }
+}

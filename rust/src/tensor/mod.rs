@@ -16,6 +16,19 @@
 //!
 //! The allocating versions delegate to the `_into` versions, so both
 //! are bit-identical by construction (enforced by property tests).
+//!
+//! Execution is two-level (DESIGN.md §12): every elementwise op runs
+//! through the runtime-dispatched [`kernels`] (scalar ↔ AVX2, selected
+//! once per process, `HERMES_FORCE_SCALAR` overridable) and, for large
+//! buffers, fans its flat element range over [`shards`] workers —
+//! bit-identical for any backend and any shard count because the ops
+//! are elementwise (no FMA, no reassociation) and shards are disjoint.
+//! The reductions (`l2_norm`, `relative_change`) deliberately stay
+//! scalar-ordered: splitting or vectorizing a sum reassociates it and
+//! changes the bits.
+
+pub mod kernels;
+pub mod shards;
 
 use crate::util::f16;
 
@@ -139,9 +152,12 @@ impl ParamVec {
 
     /// Set every element to `v` in place.
     pub fn fill(&mut self, v: f32) {
-        for t in &mut self.tensors {
-            for x in &mut t.data {
-                *x = v;
+        let s = shards::shard_count(self.num_elements());
+        if s > 1 {
+            shards::run1(self, s, |d| kernels::fill(d, v));
+        } else {
+            for t in &mut self.tensors {
+                kernels::fill(&mut t.data, v);
             }
         }
     }
@@ -152,18 +168,29 @@ impl ParamVec {
             *self = other.clone();
             return;
         }
-        for (a, b) in self.tensors.iter_mut().zip(&other.tensors) {
-            a.data.copy_from_slice(&b.data);
+        let s = shards::shard_count(self.num_elements());
+        if s > 1 {
+            shards::run2(self, other, s, kernels::copy);
+        } else {
+            for (a, b) in self.tensors.iter_mut().zip(&other.tensors) {
+                a.data.copy_from_slice(&b.data);
+            }
         }
     }
 
     /// self ← self + alpha · other   (shape-checked axpy).
     pub fn axpy(&mut self, alpha: f32, other: &ParamVec) {
         assert_eq!(self.tensors.len(), other.tensors.len());
-        for (a, b) in self.tensors.iter_mut().zip(&other.tensors) {
-            debug_assert_eq!(a.shape(), b.shape());
-            for (x, y) in a.data_mut().iter_mut().zip(b.data()) {
-                *x += alpha * y;
+        let s = shards::shard_count(self.num_elements());
+        if s > 1 {
+            debug_assert!(self.same_shape(other));
+            shards::run2(self, other, s, move |d, y| {
+                kernels::axpy_in_place(d, alpha, y)
+            });
+        } else {
+            for (a, b) in self.tensors.iter_mut().zip(&other.tensors) {
+                debug_assert_eq!(a.shape(), b.shape());
+                kernels::axpy_in_place(&mut a.data, alpha, &b.data);
             }
         }
     }
@@ -173,10 +200,18 @@ impl ParamVec {
     pub fn axpy_into(&self, alpha: f32, other: &ParamVec, out: &mut ParamVec) {
         assert_eq!(self.tensors.len(), other.tensors.len());
         out.resize_like(self);
-        for ((a, b), o) in self.tensors.iter().zip(&other.tensors).zip(&mut out.tensors) {
-            debug_assert_eq!(a.shape(), b.shape());
-            for ((x, y), z) in a.data.iter().zip(&b.data).zip(&mut o.data) {
-                *z = x + alpha * y;
+        let s = shards::shard_count(self.num_elements());
+        if s > 1 {
+            debug_assert!(self.same_shape(other));
+            shards::run3(out, self, other, s, move |z, x, y| {
+                kernels::axpy_out(z, x, alpha, y)
+            });
+        } else {
+            for ((a, b), o) in
+                self.tensors.iter().zip(&other.tensors).zip(&mut out.tensors)
+            {
+                debug_assert_eq!(a.shape(), b.shape());
+                kernels::axpy_out(&mut o.data, &a.data, alpha, &b.data);
             }
         }
     }
@@ -184,9 +219,12 @@ impl ParamVec {
     /// self ← alpha · self (renamed from `scale`, which was already
     /// in place; one name, no allocating twin).
     pub fn scale_in_place(&mut self, alpha: f32) {
-        for t in &mut self.tensors {
-            for x in t.data_mut() {
-                *x *= alpha;
+        let s = shards::shard_count(self.num_elements());
+        if s > 1 {
+            shards::run1(self, s, move |d| kernels::scale_in_place(d, alpha));
+        } else {
+            for t in &mut self.tensors {
+                kernels::scale_in_place(&mut t.data, alpha);
             }
         }
     }
@@ -196,10 +234,16 @@ impl ParamVec {
     pub fn weighted_sum_into(a: &ParamVec, wa: f32, b: &ParamVec, wb: f32, out: &mut ParamVec) {
         assert_eq!(a.tensors.len(), b.tensors.len());
         out.resize_like(a);
-        for ((ta, tb), to) in a.tensors.iter().zip(&b.tensors).zip(&mut out.tensors) {
-            debug_assert_eq!(ta.shape(), tb.shape());
-            for ((x, y), z) in ta.data.iter().zip(&tb.data).zip(&mut to.data) {
-                *z = wa * x + wb * y;
+        let s = shards::shard_count(a.num_elements());
+        if s > 1 {
+            debug_assert!(a.same_shape(b));
+            shards::run3(out, a, b, s, move |z, x, y| {
+                kernels::weighted_sum(z, x, wa, y, wb)
+            });
+        } else {
+            for ((ta, tb), to) in a.tensors.iter().zip(&b.tensors).zip(&mut out.tensors) {
+                debug_assert_eq!(ta.shape(), tb.shape());
+                kernels::weighted_sum(&mut to.data, &ta.data, wa, &tb.data, wb);
             }
         }
     }
@@ -220,10 +264,18 @@ impl ParamVec {
         assert!(eta != 0.0);
         assert_eq!(self.tensors.len(), other.tensors.len());
         out.resize_like(self);
-        for ((a, b), o) in self.tensors.iter().zip(&other.tensors).zip(&mut out.tensors) {
-            debug_assert_eq!(a.shape(), b.shape());
-            for ((x, y), z) in a.data.iter().zip(&b.data).zip(&mut o.data) {
-                *z = (x - y) / eta;
+        let s = shards::shard_count(self.num_elements());
+        if s > 1 {
+            debug_assert!(self.same_shape(other));
+            shards::run3(out, self, other, s, move |z, x, y| {
+                kernels::delta_over_eta(z, x, y, eta)
+            });
+        } else {
+            for ((a, b), o) in
+                self.tensors.iter().zip(&other.tensors).zip(&mut out.tensors)
+            {
+                debug_assert_eq!(a.shape(), b.shape());
+                kernels::delta_over_eta(&mut o.data, &a.data, &b.data, eta);
             }
         }
     }
@@ -237,6 +289,14 @@ impl ParamVec {
     }
 
     /// L2 norm over all elements.
+    ///
+    /// Deliberately **scalar-ordered** — excluded from the SIMD/shard
+    /// layers: a reduction only vectorizes/parallelizes by splitting
+    /// the sum into partial sums, which reassociates the additions and
+    /// changes the result bits.  Elementwise ops have no such term
+    /// ordering, which is why they can fan out and reductions cannot
+    /// (DESIGN.md §12; pinned by `prop_reductions_pinned_scalar` in
+    /// `tests/coordinator_props.rs`).
     pub fn l2_norm(&self) -> f64 {
         self.tensors
             .iter()
@@ -247,6 +307,7 @@ impl ParamVec {
     }
 
     /// Relative change ‖a−b‖/‖b‖ — SelSync's gate metric (§II-E).
+    /// Scalar-ordered for the same reason as [`ParamVec::l2_norm`].
     pub fn relative_change(a: &ParamVec, b: &ParamVec) -> f64 {
         let denom = b.l2_norm().max(1e-12);
         let mut num = 0.0f64;
@@ -285,21 +346,55 @@ impl ParamVec {
 /// no-op, so steady-state rounds allocate nothing (asserted by
 /// `tests/alloc_hotpath.rs` with a counting global allocator).
 ///
+/// Growth is bounded: at most [`BufferPool::DEFAULT_MAX_PARKED`]
+/// buffers park on the free list (override with
+/// [`with_max_parked`]); a `release` beyond the cap drops the buffer
+/// instead of hoarding it.  Without the cap, churned runs (rejoin →
+/// `resize_like` over ever-bigger shapes) grow the free list without
+/// bound.  [`trim`] additionally releases already-parked memory after
+/// a peak (e.g. once a churn burst settles).
+///
 /// [`acquire_like`]: BufferPool::acquire_like
 /// [`release`]: BufferPool::release
-#[derive(Debug, Default)]
+/// [`with_max_parked`]: BufferPool::with_max_parked
+/// [`trim`]: BufferPool::trim
+#[derive(Debug)]
 pub struct BufferPool {
     free: Vec<ParamVec>,
+    max_parked: usize,
+}
+
+impl Default for BufferPool {
+    fn default() -> BufferPool {
+        BufferPool::new()
+    }
 }
 
 impl BufferPool {
+    /// Most buffers a pool parks by default — a dozen leases per round
+    /// across all six drivers, doubled for headroom.
+    pub const DEFAULT_MAX_PARKED: usize = 32;
+
     pub fn new() -> BufferPool {
-        BufferPool::default()
+        BufferPool {
+            free: Vec::new(),
+            max_parked: Self::DEFAULT_MAX_PARKED,
+        }
+    }
+
+    /// A pool that parks at most `max_parked` buffers.
+    pub fn with_max_parked(max_parked: usize) -> BufferPool {
+        BufferPool { free: Vec::new(), max_parked }
     }
 
     /// Buffers currently parked in the pool.
     pub fn available(&self) -> usize {
         self.free.len()
+    }
+
+    /// The parked-buffer cap.
+    pub fn max_parked(&self) -> usize {
+        self.max_parked
     }
 
     /// Lease a buffer shaped like `like`; element values unspecified.
@@ -316,9 +411,20 @@ impl BufferPool {
         pv
     }
 
-    /// Return a leased buffer for reuse.
+    /// Return a leased buffer for reuse.  Dropped (freed) instead of
+    /// parked when the pool is already holding `max_parked` buffers.
     pub fn release(&mut self, pv: ParamVec) {
-        self.free.push(pv);
+        if self.free.len() < self.max_parked {
+            self.free.push(pv);
+        }
+    }
+
+    /// Shrink to at most `keep` parked buffers and give the excess —
+    /// plus the free list's own spare capacity — back to the
+    /// allocator.
+    pub fn trim(&mut self, keep: usize) {
+        self.free.truncate(keep);
+        self.free.shrink_to_fit();
     }
 }
 
@@ -550,5 +656,87 @@ mod tests {
         pool.release(dirty);
         let z = pool.acquire_zeroed_like(&like);
         assert!(z.tensors.iter().all(|t| t.data().iter().all(|&x| x == 0.0)));
+    }
+
+    #[test]
+    fn buffer_pool_caps_growth_and_trims() {
+        let like = pv(&[&[1.0, 2.0, 3.0]]);
+        let mut pool = BufferPool::with_max_parked(3);
+        assert_eq!(pool.max_parked(), 3);
+        // Churn simulation: release more buffers than the cap.
+        for _ in 0..10 {
+            let b = ParamVec::zeros_like(&like);
+            pool.release(b);
+        }
+        assert_eq!(pool.available(), 3, "release beyond the cap must drop");
+        // Leases drain and refill without exceeding the cap.
+        let b = pool.acquire_like(&like);
+        assert_eq!(pool.available(), 2);
+        pool.release(b);
+        assert_eq!(pool.available(), 3);
+        // Trim shrinks the parked set (post-churn-peak memory release).
+        pool.trim(1);
+        assert_eq!(pool.available(), 1);
+        pool.trim(0);
+        assert_eq!(pool.available(), 0);
+        // The default pool carries the documented cap.
+        assert_eq!(BufferPool::new().max_parked(), BufferPool::DEFAULT_MAX_PARKED);
+    }
+
+    #[test]
+    fn ops_bit_identical_across_backends_and_shard_counts() {
+        // The in-place algebra must produce the same bits whether it
+        // runs scalar, SIMD, inline or sharded — including empty
+        // tensors, single elements and `len % 8 != 0` remainders.
+        use kernels::Backend;
+        let shapes: &[&[usize]] = &[&[0, 5, 1], &[9], &[8, 8], &[3, 0, 100]];
+        for (case, lens) in shapes.iter().enumerate() {
+            let mut rng = Xoshiro256pp::seed_from_u64(77 + case as u64);
+            let mk = |rng: &mut Xoshiro256pp| ParamVec {
+                tensors: lens
+                    .iter()
+                    .map(|&n| {
+                        Tensor::new(
+                            vec![n],
+                            (0..n).map(|_| (rng.normal() * 2.0) as f32).collect(),
+                        )
+                    })
+                    .collect(),
+            };
+            let a = mk(&mut rng);
+            let b = mk(&mut rng);
+            let alpha = rng.normal() as f32;
+            let eta = rng.uniform(0.01, 0.9) as f32;
+
+            let run = |backend: Backend, s: usize| -> Vec<Vec<u32>> {
+                kernels::with_backend(backend, || {
+                    shards::with_shards(s, || {
+                        let mut outs = Vec::new();
+                        let mut o = ParamVec::default();
+                        a.axpy_into(alpha, &b, &mut o);
+                        outs.push(bits(&o));
+                        ParamVec::weighted_sum_into(&a, 0.3, &b, 0.7, &mut o);
+                        outs.push(bits(&o));
+                        a.delta_over_eta_into(&b, eta, &mut o);
+                        outs.push(bits(&o));
+                        let mut x = a.clone();
+                        x.axpy(alpha, &b);
+                        outs.push(bits(&x));
+                        x.scale_in_place(alpha);
+                        outs.push(bits(&x));
+                        x.copy_from(&b);
+                        outs.push(bits(&x));
+                        x.fill(alpha);
+                        outs.push(bits(&x));
+                        outs
+                    })
+                })
+            };
+            let want = run(Backend::Scalar, 1);
+            for s in [1usize, 3, 4, 7] {
+                assert_eq!(want, run(Backend::Scalar, s), "scalar s={s} case {case}");
+                assert_eq!(want, run(Backend::Simd, s), "simd s={s} case {case}");
+            }
+        }
     }
 }

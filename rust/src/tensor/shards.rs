@@ -1,0 +1,513 @@
+//! Sharded parallel execution for the aggregation algebra
+//! (DESIGN.md §12).  A [`ParamVec`]'s *flat* element range (all tensors
+//! concatenated in manifest order) is split into `S` contiguous,
+//! disjoint shards; each shard is a list of `&mut [f32]` pieces (a
+//! shard may straddle tensor boundaries).  Shards are processed on
+//! `std::thread::scope` workers running the dispatched
+//! [`kernels`](super::kernels) on their pieces.
+//!
+//! **Determinism.**  Shards never overlap and every kernel is
+//! elementwise, so each output element is written exactly once by
+//! exactly one worker computing the exact scalar expression — results
+//! are bit-identical for *any* shard count and any thread schedule.
+//! Reductions (`l2_norm`, `relative_change`) are excluded: splitting a
+//! sum reassociates it and changes the bits (DESIGN.md §12).
+//!
+//! **Shard-count policy.**  `shard_count(len)` returns 1 (inline, no
+//! threads, no allocation — the regime `tests/alloc_hotpath.rs` pins)
+//! below [`SHARD_MIN_ELEMS`]·2, else scales with the buffer size up to
+//! `min(cores, MAX_SHARDS)`.  `HERMES_SHARDS=N` pins it globally;
+//! [`with_shards`] pins it for a closure (tests/benches).  Sharded
+//! calls pay a scoped-thread setup (spawn + join + piece lists, heap
+//! included) that only amortizes on multi-hundred-KB tensors — which is
+//! exactly when the policy turns it on.
+
+use std::cell::Cell;
+use std::sync::OnceLock;
+
+use super::kernels;
+use super::ParamVec;
+
+/// Below twice this many elements a buffer is processed inline.
+pub const SHARD_MIN_ELEMS: usize = 1 << 16;
+
+/// Upper bound on auto-selected shards (beyond ~8 the memory bus, not
+/// the cores, is the limit for these streaming kernels).
+pub const MAX_SHARDS: usize = 8;
+
+thread_local! {
+    /// Per-thread test/bench override; `usize::MAX` = no override.
+    /// Thread-local for the same reason as the kernel-backend override:
+    /// concurrently running tests force different shard counts without
+    /// racing each other.
+    static OVERRIDE: Cell<usize> = const { Cell::new(usize::MAX) };
+}
+
+fn env_shards() -> Option<usize> {
+    static E: OnceLock<Option<usize>> = OnceLock::new();
+    *E.get_or_init(|| {
+        std::env::var("HERMES_SHARDS")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .filter(|&s| s >= 1)
+    })
+}
+
+fn hw_threads() -> usize {
+    static T: OnceLock<usize> = OnceLock::new();
+    *T.get_or_init(|| {
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+    })
+}
+
+/// How many shards a buffer of `len` elements runs on right now (on
+/// this thread — see the override note above).
+pub fn shard_count(len: usize) -> usize {
+    let forced = OVERRIDE.with(|c| c.get());
+    if forced != usize::MAX {
+        return forced.max(1);
+    }
+    if let Some(s) = env_shards() {
+        return s;
+    }
+    if len < 2 * SHARD_MIN_ELEMS {
+        return 1;
+    }
+    (len / SHARD_MIN_ELEMS).min(hw_threads()).min(MAX_SHARDS)
+}
+
+/// Run `f` with this thread's shard count pinned to `s` (≥1),
+/// restoring the previous policy afterwards.  Like
+/// [`kernels::with_backend`](super::kernels::with_backend) this is a
+/// perf knob only: every shard count computes identical bits.
+pub fn with_shards<R>(s: usize, f: impl FnOnce() -> R) -> R {
+    let prev = OVERRIDE.with(|c| c.replace(s.max(1)));
+    let out = f();
+    OVERRIDE.with(|c| c.set(prev));
+    out
+}
+
+/// `s+1` cumulative boundaries of an even `n`-element split: shard `i`
+/// owns `[bounds[i], bounds[i+1])`; the first `n % s` shards take the
+/// remainder element each.
+pub fn shard_bounds(n: usize, s: usize) -> Vec<usize> {
+    let s = s.max(1);
+    let base = n / s;
+    let rem = n % s;
+    let mut bounds = Vec::with_capacity(s + 1);
+    bounds.push(0);
+    let mut acc = 0;
+    for i in 0..s {
+        acc += base + usize::from(i < rem);
+        bounds.push(acc);
+    }
+    bounds
+}
+
+/// Split `pv`'s flat range at `bounds` into per-shard lists of disjoint
+/// `&mut [f32]` pieces (tensor-order within each shard).
+pub fn split_mut<'a>(pv: &'a mut ParamVec, bounds: &[usize]) -> Vec<Vec<&'a mut [f32]>> {
+    let s = bounds.len() - 1;
+    let mut shards: Vec<Vec<&'a mut [f32]>> = (0..s).map(|_| Vec::new()).collect();
+    let mut off = 0usize;
+    for t in &mut pv.tensors {
+        let tlen = t.len();
+        let mut rest: &'a mut [f32] = t.data_mut();
+        for (i, shard) in shards.iter_mut().enumerate() {
+            let lo = bounds[i].max(off);
+            let hi = bounds[i + 1].min(off + tlen);
+            if hi <= lo {
+                continue;
+            }
+            let (piece, tail) = std::mem::take(&mut rest).split_at_mut(hi - lo);
+            shard.push(piece);
+            rest = tail;
+        }
+        off += tlen;
+    }
+    shards
+}
+
+/// Shared-reference twin of [`split_mut`]: shard `i` is
+/// [`pieces_in`]`(pv, bounds[i], bounds[i+1])`.
+pub fn split_ref<'a>(pv: &'a ParamVec, bounds: &[usize]) -> Vec<Vec<&'a [f32]>> {
+    bounds
+        .windows(2)
+        .map(|w| pieces_in(pv, w[0], w[1]))
+        .collect()
+}
+
+/// The pieces of `pv`'s flat range `[lo, hi)` (one shard's view).
+pub fn pieces_in<'a>(pv: &'a ParamVec, lo: usize, hi: usize) -> Vec<&'a [f32]> {
+    let mut out = Vec::new();
+    let mut off = 0usize;
+    for t in &pv.tensors {
+        let data = t.data();
+        let tlen = data.len();
+        let a = lo.max(off);
+        let b = hi.min(off + tlen);
+        if b > a {
+            out.push(&data[a - off..b - off]);
+        }
+        off += tlen;
+    }
+    out
+}
+
+// ------------------------------------------- scoped parallel runners
+//
+// Each runner spawns `s - 1` scoped workers and runs the first shard on
+// the calling thread.  Piece lists of same-shape ParamVecs split at the
+// same bounds align index-by-index, so zipping pieces pairs the same
+// flat ranges.  Workers re-apply the *caller's* resolved kernel backend
+// (the override is thread-local), so a forced-backend section — a
+// bit-equality test leg, a bench — runs that backend on every shard,
+// not just the calling thread's.
+
+/// Apply `f` to every shard piece of `out`.
+pub(crate) fn run1<F>(out: &mut ParamVec, s: usize, f: F)
+where
+    F: Fn(&mut [f32]) + Sync,
+{
+    let backend = kernels::active_backend();
+    let bounds = shard_bounds(out.num_elements(), s);
+    let shards = split_mut(out, &bounds);
+    std::thread::scope(|scope| {
+        let f = &f;
+        let mut iter = shards.into_iter();
+        let first = iter.next();
+        for pieces in iter {
+            scope.spawn(move || {
+                kernels::with_backend(backend, || {
+                    for p in pieces {
+                        f(p);
+                    }
+                })
+            });
+        }
+        if let Some(pieces) = first {
+            for p in pieces {
+                f(p);
+            }
+        }
+    });
+}
+
+/// Apply `f` to aligned (dst, src) shard pieces.
+pub(crate) fn run2<F>(dst: &mut ParamVec, src: &ParamVec, s: usize, f: F)
+where
+    F: Fn(&mut [f32], &[f32]) + Sync,
+{
+    let backend = kernels::active_backend();
+    let bounds = shard_bounds(dst.num_elements(), s);
+    let d = split_mut(dst, &bounds);
+    let r = split_ref(src, &bounds);
+    std::thread::scope(|scope| {
+        let f = &f;
+        let mut iter = d.into_iter().zip(r);
+        let first = iter.next();
+        for (dp, rp) in iter {
+            scope.spawn(move || {
+                kernels::with_backend(backend, || {
+                    for (a, b) in dp.into_iter().zip(rp) {
+                        f(a, b);
+                    }
+                })
+            });
+        }
+        if let Some((dp, rp)) = first {
+            for (a, b) in dp.into_iter().zip(rp) {
+                f(a, b);
+            }
+        }
+    });
+}
+
+/// Apply `f` to aligned (out, a, b) shard pieces.
+pub(crate) fn run3<F>(out: &mut ParamVec, a: &ParamVec, b: &ParamVec, s: usize, f: F)
+where
+    F: Fn(&mut [f32], &[f32], &[f32]) + Sync,
+{
+    let backend = kernels::active_backend();
+    let bounds = shard_bounds(out.num_elements(), s);
+    let o = split_mut(out, &bounds);
+    let av = split_ref(a, &bounds);
+    let bv = split_ref(b, &bounds);
+    std::thread::scope(|scope| {
+        let f = &f;
+        let mut iter = o.into_iter().zip(av).zip(bv);
+        let first = iter.next();
+        for ((op, ap), bp) in iter {
+            scope.spawn(move || {
+                kernels::with_backend(backend, || {
+                    for ((z, x), y) in op.into_iter().zip(ap).zip(bp) {
+                        f(z, x, y);
+                    }
+                })
+            });
+        }
+        if let Some(((op, ap), bp)) = first {
+            for ((z, x), y) in op.into_iter().zip(ap).zip(bp) {
+                f(z, x, y);
+            }
+        }
+    });
+}
+
+/// One fused SyncSGD round (Eq. 1) over `s` shards: per shard, zero the
+/// scratch, accumulate `w·gᵢ` in push order, then apply
+/// `params -= eta·scratch`.  Per-element this is the exact sequence of
+/// the sequential `fill` / `axpy`×K / `axpy` round, so the result is
+/// bit-identical for every shard count.
+pub fn par_sync_sgd(
+    params: &mut ParamVec,
+    scratch: &mut ParamVec,
+    grads: &[ParamVec],
+    w: f32,
+    eta: f32,
+    s: usize,
+) {
+    let n = params.num_elements();
+    assert!(
+        grads.iter().all(|g| g.num_elements() == n),
+        "gradient/param element-count mismatch"
+    );
+    let backend = kernels::active_backend();
+    let bounds = shard_bounds(n, s);
+    let p = split_mut(params, &bounds);
+    let a = split_mut(scratch, &bounds);
+    std::thread::scope(|scope| {
+        let bounds = &bounds;
+        let mut iter = p.into_iter().zip(a).enumerate();
+        let first = iter.next();
+        for (j, (pp, ap)) in iter {
+            let gj: Vec<Vec<&[f32]>> = grads
+                .iter()
+                .map(|g| pieces_in(g, bounds[j], bounds[j + 1]))
+                .collect();
+            scope.spawn(move || {
+                kernels::with_backend(backend, || sync_shard(pp, ap, &gj, w, eta))
+            });
+        }
+        if let Some((j, (pp, ap))) = first {
+            let gj: Vec<Vec<&[f32]>> = grads
+                .iter()
+                .map(|g| pieces_in(g, bounds[j], bounds[j + 1]))
+                .collect();
+            sync_shard(pp, ap, &gj, w, eta);
+        }
+    });
+}
+
+fn sync_shard(
+    mut pp: Vec<&mut [f32]>,
+    mut ap: Vec<&mut [f32]>,
+    gj: &[Vec<&[f32]>],
+    w: f32,
+    eta: f32,
+) {
+    for a in ap.iter_mut() {
+        kernels::fill(a, 0.0);
+    }
+    for g in gj {
+        for (a, gp) in ap.iter_mut().zip(g) {
+            kernels::axpy_in_place(a, w, gp);
+        }
+    }
+    for (p, a) in pp.iter_mut().zip(ap.iter()) {
+        kernels::axpy_in_place(p, -eta, a);
+    }
+}
+
+/// Parallel element→byte codec pass: split `src` at element bounds and
+/// `dst` at `bpe·bounds`, then run `f` (e.g. the dispatched f16 encode)
+/// on aligned range pairs.  `dst.len()` must equal `bpe * src.len()`.
+pub(crate) fn par_bytes<F>(dst: &mut [u8], src: &[f32], bpe: usize, s: usize, f: F)
+where
+    F: Fn(&[f32], &mut [u8]) + Sync,
+{
+    debug_assert_eq!(dst.len(), bpe * src.len());
+    let backend = kernels::active_backend();
+    let bounds = shard_bounds(src.len(), s);
+    let mut rest_d = dst;
+    let mut rest_s = src;
+    std::thread::scope(|scope| {
+        let f = &f;
+        for j in 1..bounds.len() {
+            let take = bounds[j] - bounds[j - 1];
+            let (sd, td) = std::mem::take(&mut rest_d).split_at_mut(take * bpe);
+            let (ss, ts) = rest_s.split_at(take);
+            rest_d = td;
+            rest_s = ts;
+            if j == bounds.len() - 1 {
+                f(ss, sd); // last shard runs on the calling thread
+            } else {
+                scope.spawn(move || kernels::with_backend(backend, || f(ss, sd)));
+            }
+        }
+    });
+}
+
+/// Parallel byte→element codec pass (e.g. the dispatched f16 decode).
+/// `src.len()` must equal `bpe * dst.len()`.
+pub(crate) fn par_from_bytes<F>(dst: &mut [f32], src: &[u8], bpe: usize, s: usize, f: F)
+where
+    F: Fn(&[u8], &mut [f32]) + Sync,
+{
+    debug_assert_eq!(src.len(), bpe * dst.len());
+    let backend = kernels::active_backend();
+    let bounds = shard_bounds(dst.len(), s);
+    let mut rest_d = dst;
+    let mut rest_s = src;
+    std::thread::scope(|scope| {
+        let f = &f;
+        for j in 1..bounds.len() {
+            let take = bounds[j] - bounds[j - 1];
+            let (sd, td) = std::mem::take(&mut rest_d).split_at_mut(take);
+            let (ss, ts) = rest_s.split_at(take * bpe);
+            rest_d = td;
+            rest_s = ts;
+            if j == bounds.len() - 1 {
+                f(ss, sd);
+            } else {
+                scope.spawn(move || kernels::with_backend(backend, || f(ss, sd)));
+            }
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::Tensor;
+    use super::*;
+
+    fn pv(lens: &[usize]) -> ParamVec {
+        let mut c = 0.0f32;
+        ParamVec {
+            tensors: lens
+                .iter()
+                .map(|&n| {
+                    Tensor::new(
+                        vec![n],
+                        (0..n)
+                            .map(|_| {
+                                c += 1.0;
+                                c
+                            })
+                            .collect(),
+                    )
+                })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn bounds_cover_exactly_once() {
+        for n in [0usize, 1, 7, 64, 65, 1000] {
+            for s in 1..=9 {
+                let b = shard_bounds(n, s);
+                assert_eq!(b.len(), s + 1);
+                assert_eq!(b[0], 0);
+                assert_eq!(*b.last().unwrap(), n);
+                assert!(b.windows(2).all(|w| w[0] <= w[1]));
+                // Even split: sizes differ by at most one.
+                let sizes: Vec<usize> = b.windows(2).map(|w| w[1] - w[0]).collect();
+                let (mn, mx) = (
+                    *sizes.iter().min().unwrap(),
+                    *sizes.iter().max().unwrap(),
+                );
+                assert!(mx - mn <= 1, "n={n} s={s} {sizes:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn split_mut_partitions_every_element_in_order() {
+        // Tensor lens include empty and single-element tensors; shard
+        // boundaries straddle tensors.
+        for lens in [&[0usize, 5, 1, 0, 9, 3][..], &[17][..], &[0, 0][..]] {
+            let total: usize = lens.iter().sum();
+            for s in 1..=5 {
+                let mut p = pv(lens);
+                let bounds = shard_bounds(total, s);
+                let shards = split_mut(&mut p, &bounds);
+                let flat: Vec<f32> = shards
+                    .iter()
+                    .flat_map(|pieces| pieces.iter().flat_map(|pc| pc.iter().copied()))
+                    .collect();
+                let want: Vec<f32> = (1..=total).map(|i| i as f32).collect();
+                assert_eq!(flat, want, "lens={lens:?} s={s}");
+                // Shard i holds exactly bounds[i+1]-bounds[i] elements.
+                for (i, pieces) in shards.iter().enumerate() {
+                    let got: usize = pieces.iter().map(|pc| pc.len()).sum();
+                    assert_eq!(got, bounds[i + 1] - bounds[i]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn split_ref_and_pieces_in_agree_with_split_mut() {
+        let lens = &[3usize, 0, 11, 6];
+        let total: usize = lens.iter().sum();
+        let p = pv(lens);
+        let bounds = shard_bounds(total, 3);
+        let refs = split_ref(&p, &bounds);
+        for (i, pieces) in refs.iter().enumerate() {
+            let direct = pieces_in(&p, bounds[i], bounds[i + 1]);
+            let a: Vec<f32> = pieces.iter().flat_map(|pc| pc.iter().copied()).collect();
+            let b: Vec<f32> = direct.iter().flat_map(|pc| pc.iter().copied()).collect();
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn with_shards_overrides_and_restores() {
+        let base = shard_count(10);
+        with_shards(5, || {
+            assert_eq!(shard_count(10), 5);
+            assert_eq!(shard_count(0), 5);
+        });
+        assert_eq!(shard_count(10), base);
+        // Auto policy: small buffers stay inline.
+        if std::env::var_os("HERMES_SHARDS").is_none() {
+            assert_eq!(shard_count(SHARD_MIN_ELEMS), 1);
+            assert!(shard_count(16 * SHARD_MIN_ELEMS) >= 1);
+        }
+    }
+
+    #[test]
+    fn par_runners_match_inline_for_any_shard_count() {
+        let lens = &[0usize, 13, 1, 300, 7];
+        let total: usize = lens.iter().sum();
+        let a = pv(lens);
+        let b = {
+            let mut b = pv(lens);
+            b.scale_in_place(0.5);
+            b
+        };
+        let mut want = pv(lens);
+        for (w, (x, y)) in want
+            .tensors
+            .iter_mut()
+            .flat_map(|t| t.data_mut().iter_mut())
+            .zip(
+                a.tensors
+                    .iter()
+                    .flat_map(|t| t.data())
+                    .zip(b.tensors.iter().flat_map(|t| t.data())),
+            )
+        {
+            *w = 0.3 * x + 0.7 * y;
+        }
+        for s in 1..=6 {
+            let mut out = pv(lens);
+            run3(&mut out, &a, &b, s, |z, x, y| {
+                kernels::weighted_sum(z, x, 0.3, y, 0.7)
+            });
+            assert_eq!(out, want, "s={s} total={total}");
+        }
+    }
+}

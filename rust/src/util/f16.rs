@@ -71,21 +71,30 @@ pub fn f16_bits_to_f32(h: u16) -> f32 {
     f32::from_bits(bits)
 }
 
-/// Conversion chunk: 256 elements staged on the stack per pass, so the
-/// output `Vec` sees one reserve and a few large extends instead of a
-/// 2-byte extend per element.
-const CHUNK: usize = 256;
-
 /// Encode a slice to little-endian f16 bytes, **appending** to `out` —
 /// the wire writer streams multiple tensors into one frame buffer.
+///
+/// The inner loop is the runtime-dispatched
+/// [`kernels::f16_encode`](crate::tensor::kernels::f16_encode)
+/// (hardware F16C when available, the scalar converter otherwise —
+/// byte-identical either way), and payloads big enough to clear the
+/// shard threshold convert on parallel
+/// [`shards`](crate::tensor::shards) workers over disjoint element
+/// ranges.
 pub fn encode_f16_into(xs: &[f32], out: &mut Vec<u8>) {
-    out.reserve(xs.len() * 2);
-    let mut staged = [0u8; CHUNK * 2];
-    for chunk in xs.chunks(CHUNK) {
-        for (i, &x) in chunk.iter().enumerate() {
-            staged[2 * i..2 * i + 2].copy_from_slice(&f32_to_f16_bits(x).to_le_bytes());
-        }
-        out.extend_from_slice(&staged[..2 * chunk.len()]);
+    use crate::tensor::{kernels, shards};
+    let start = out.len();
+    // resize-then-write: the zero-fill is one cheap sequential pass and
+    // the conversion stores land directly (and possibly sharded) in the
+    // frame buffer — total store traffic matches the old staged-chunk
+    // scheme (stack stage + memcpy), with the expensive pass parallel.
+    out.resize(start + 2 * xs.len(), 0);
+    let dst = &mut out[start..];
+    let s = shards::shard_count(xs.len());
+    if s > 1 {
+        shards::par_bytes(dst, xs, 2, s, kernels::f16_encode);
+    } else {
+        kernels::f16_encode(xs, dst);
     }
 }
 
@@ -96,20 +105,22 @@ pub fn encode_f16(xs: &[f32]) -> Vec<u8> {
     out
 }
 
-/// Decode little-endian f16 bytes into `out` (cleared first) — decode
-/// targets are per-connection scratch buffers reused across frames.
+/// Decode little-endian f16 bytes into `out` (fully overwritten; any
+/// previous contents are discarded) — decode targets are per-connection
+/// scratch buffers reused across frames.  Dispatched and sharded
+/// exactly like [`encode_f16_into`].  Note `resize` without a `clear`:
+/// every element below the new length is overwritten by the decode, and
+/// clearing first would re-memset the whole payload on every
+/// same-sized frame.
 pub fn decode_f16_into(bytes: &[u8], out: &mut Vec<f32>) {
+    use crate::tensor::{kernels, shards};
     assert!(bytes.len() % 2 == 0, "odd f16 byte length");
-    out.clear();
-    out.reserve(bytes.len() / 2);
-    let mut staged = [0f32; CHUNK];
-    for chunk in bytes.chunks(2 * CHUNK) {
-        let mut n = 0;
-        for c in chunk.chunks_exact(2) {
-            staged[n] = f16_bits_to_f32(u16::from_le_bytes([c[0], c[1]]));
-            n += 1;
-        }
-        out.extend_from_slice(&staged[..n]);
+    out.resize(bytes.len() / 2, 0.0);
+    let s = shards::shard_count(out.len());
+    if s > 1 {
+        shards::par_from_bytes(out, bytes, 2, s, kernels::f16_decode);
+    } else {
+        kernels::f16_decode(bytes, out);
     }
 }
 
@@ -239,6 +250,39 @@ mod tests {
         decode_f16_into(&enc[..xs.len() * 2], &mut dec);
         assert_eq!(dec, decode_f16(&encode_f16(&xs)));
         assert_eq!(dec.len(), xs.len());
+    }
+
+    #[test]
+    fn sharded_codec_is_byte_identical_to_inline() {
+        use crate::tensor::{kernels, shards};
+        let mut rng = crate::util::rng::Xoshiro256pp::seed_from_u64(31);
+        for n in [0usize, 1, 9, 1000, 4097] {
+            let xs: Vec<f32> = (0..n).map(|_| (rng.normal() * 4.0) as f32).collect();
+            let (want_enc, want_dec) = kernels::with_backend(
+                kernels::Backend::Scalar,
+                || {
+                    shards::with_shards(1, || {
+                        let enc = encode_f16(&xs);
+                        let mut dec = Vec::new();
+                        decode_f16_into(&enc, &mut dec);
+                        (enc, dec)
+                    })
+                },
+            );
+            for s in [2usize, 3, 5] {
+                shards::with_shards(s, || {
+                    let mut enc = b"prefix".to_vec(); // append semantics
+                    encode_f16_into(&xs, &mut enc);
+                    assert_eq!(&enc[6..], &want_enc[..], "n={n} s={s}");
+                    let mut dec = vec![7.0f32; 3]; // stale contents
+                    decode_f16_into(&enc[6..], &mut dec);
+                    assert_eq!(dec.len(), want_dec.len());
+                    for (a, b) in dec.iter().zip(&want_dec) {
+                        assert_eq!(a.to_bits(), b.to_bits(), "n={n} s={s}");
+                    }
+                });
+            }
+        }
     }
 
     #[test]

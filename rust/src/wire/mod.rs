@@ -5,7 +5,7 @@
 //! for byte accounting without paying for encoding on every virtual
 //! message.
 
-use crate::tensor::{ParamVec, Tensor};
+use crate::tensor::{kernels, shards, ParamVec, Tensor};
 use crate::util::f16;
 
 /// Everything that travels between a worker and the PS.
@@ -151,18 +151,18 @@ impl<'a> Writer<'a> {
             if fp16 {
                 f16::encode_f16_into(t.data(), self.buf);
             } else {
-                // Chunked pass through a stack staging buffer: one
-                // reserve + large extends instead of a 4-byte extend
-                // per element (same pattern as f16::encode_f16_into).
-                const CHUNK: usize = 256;
+                // Dispatched serialization (one memcpy on LE hosts),
+                // sharded over scope workers for frame-dominating
+                // tensors — same two-level scheme as the f16 codec.
                 let data = t.data();
-                self.buf.reserve(data.len() * 4);
-                let mut staged = [0u8; 4 * CHUNK];
-                for chunk in data.chunks(CHUNK) {
-                    for (i, &x) in chunk.iter().enumerate() {
-                        staged[4 * i..4 * i + 4].copy_from_slice(&x.to_le_bytes());
-                    }
-                    self.buf.extend_from_slice(&staged[..4 * chunk.len()]);
+                let start = self.buf.len();
+                self.buf.resize(start + 4 * data.len(), 0);
+                let dst = &mut self.buf[start..];
+                let s = shards::shard_count(data.len());
+                if s > 1 {
+                    shards::par_bytes(dst, data, 4, s, kernels::f32_write_le);
+                } else {
+                    kernels::f32_write_le(data, dst);
                 }
             }
         }
@@ -253,10 +253,15 @@ impl<'a> Reader<'a> {
                 f16::decode_f16_into(bytes, &mut v);
                 v
             } else {
-                self.take(4 * elems)?
-                    .chunks_exact(4)
-                    .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-                    .collect()
+                let bytes = self.take(4 * elems)?;
+                let mut v = vec![0.0f32; elems];
+                let s = shards::shard_count(elems);
+                if s > 1 {
+                    shards::par_from_bytes(&mut v, bytes, 4, s, kernels::f32_read_le);
+                } else {
+                    kernels::f32_read_le(bytes, &mut v);
+                }
+                v
             };
             tensors.push(Tensor::new(shape, data));
         }

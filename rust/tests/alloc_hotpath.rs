@@ -4,12 +4,25 @@
 //! heap allocations.  A counting global allocator wraps `System`; the
 //! single test in this binary runs on one thread, so the counter sees
 //! only the code under test.
+//!
+//! The SIMD dispatch layer (DESIGN.md §12) is active here — on an AVX2
+//! host the default backend is `Simd`, and the test additionally pins
+//! both forced backends to zero allocations.  The shard layer is
+//! likewise enabled in its production (auto) policy: at this model size
+//! it resolves to single-shard inline execution, which is exactly the
+//! claim — the zero-allocation regime and the scoped-thread regime meet
+//! at `SHARD_MIN_ELEMS`, below which no thread (and no piece list) is
+//! ever created.  Sharded execution above the threshold deliberately
+//! trades per-call scoped-thread setup for memory-bandwidth
+//! parallelism; its bit-identity (not allocation-freedom) is what the
+//! property tests assert.
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
 
 use hermes_dml::ps::PsState;
-use hermes_dml::tensor::{BufferPool, ParamVec, Tensor};
+use hermes_dml::tensor::kernels::{self, Backend};
+use hermes_dml::tensor::{shards, BufferPool, ParamVec, Tensor};
 use hermes_dml::util::f16;
 use hermes_dml::util::rng::Xoshiro256pp;
 
@@ -83,6 +96,13 @@ fn steady_state_aggregation_is_allocation_free() {
     };
     hot_path(&mut ps, &mut pool, &mut out, &mut enc, &mut dec);
 
+    // The shard layer is live and in auto mode; at this buffer size the
+    // policy keeps the hot path inline (no scoped threads) unless the
+    // environment explicitly forces sharding.
+    if std::env::var_os("HERMES_SHARDS").is_none() {
+        assert_eq!(shards::shard_count(dim), 1, "hot path left the inline regime");
+    }
+
     let before = ALLOC_CALLS.load(Ordering::Relaxed);
     for _ in 0..50 {
         hot_path(&mut ps, &mut pool, &mut out, &mut enc, &mut dec);
@@ -94,6 +114,26 @@ fn steady_state_aggregation_is_allocation_free() {
         "steady-state aggregation hot path performed {} heap allocations",
         after - before
     );
+
+    // Both kernel backends individually stay allocation-free too (on a
+    // non-AVX2 host the Simd request clamps to Scalar, which is fine —
+    // the claim is "whatever dispatches, nothing allocates").
+    for backend in [Backend::Scalar, Backend::Simd] {
+        kernels::with_backend(backend, || {
+            hot_path(&mut ps, &mut pool, &mut out, &mut enc, &mut dec); // warm
+            let before = ALLOC_CALLS.load(Ordering::Relaxed);
+            for _ in 0..20 {
+                hot_path(&mut ps, &mut pool, &mut out, &mut enc, &mut dec);
+            }
+            let after = ALLOC_CALLS.load(Ordering::Relaxed);
+            assert_eq!(
+                after - before,
+                0,
+                "hot path allocated {} times under {backend:?}",
+                after - before
+            );
+        });
+    }
 
     // Sanity: the math still ran (params moved off w0).
     assert!(ps.params != w0);

@@ -7,7 +7,8 @@ use hermes_dml::alloc::{dual_binary_search, modeled_time, MBS_DOMAIN};
 use hermes_dml::gup::Gup;
 use hermes_dml::ps::PsState;
 use hermes_dml::sim::{Ev, SimQueue};
-use hermes_dml::tensor::{ParamVec, Tensor};
+use hermes_dml::tensor::kernels::{self, Backend};
+use hermes_dml::tensor::{shards, ParamVec, Tensor};
 use hermes_dml::util::rng::Xoshiro256pp;
 use hermes_dml::util::stats;
 use hermes_dml::wire::{Message, TensorPayload};
@@ -200,6 +201,188 @@ fn prop_weighted_sum_is_convex() {
             assert!(*z >= lo && *z <= hi, "{z} outside [{lo}, {hi}]");
         }
     });
+}
+
+// --------------------------------------------- kernels & shard layer
+
+/// Random ParamVec whose tensor lengths hit the dispatch edges: empty
+/// tensors, single elements, exact 8-lane multiples and `% 8 != 0`
+/// remainders.
+fn edge_pv(rng: &mut Xoshiro256pp) -> ParamVec {
+    let n_tensors = 1 + rng.next_below(5) as usize;
+    ParamVec {
+        tensors: (0..n_tensors)
+            .map(|_| {
+                let n = match rng.next_below(6) {
+                    0 => 0,
+                    1 => 1,
+                    2 => 8,
+                    3 => 9,
+                    4 => 8 * (1 + rng.next_below(5) as usize),
+                    _ => 1 + rng.next_below(200) as usize,
+                };
+                Tensor::new(
+                    vec![n],
+                    (0..n).map(|_| (rng.normal() * 2.0) as f32).collect(),
+                )
+            })
+            .collect(),
+    }
+}
+
+fn pv_bits(p: &ParamVec) -> Vec<u32> {
+    p.tensors
+        .iter()
+        .flat_map(|t| t.data().iter().map(|x| x.to_bits()))
+        .collect()
+}
+
+#[test]
+fn prop_aggregation_algebra_bit_identical_scalar_simd_sharded() {
+    // The full in-place algebra + the f16/f32 wire codec, evaluated
+    // under every backend × shard-count combination, must produce the
+    // same bits as the scalar single-shard reference — including empty
+    // tensors, single-element tensors and remainder lanes.
+    forall(60, |rng| {
+        let a = edge_pv(rng);
+        let mut b = ParamVec::zeros_like(&a);
+        for t in &mut b.tensors {
+            for v in t.data_mut() {
+                *v = (rng.normal() * 2.0) as f32;
+            }
+        }
+        let alpha = rng.normal() as f32;
+        let eta = rng.uniform(0.01, 0.9) as f32;
+        let (wa, wb) = (rng.normal() as f32, rng.normal() as f32);
+
+        let eval = |backend: Backend, s: usize| -> (Vec<Vec<u32>>, Vec<u8>, Vec<u32>) {
+            kernels::with_backend(backend, || {
+                shards::with_shards(s, || {
+                    let mut outs = Vec::new();
+                    let mut o = ParamVec::default();
+                    a.axpy_into(alpha, &b, &mut o);
+                    outs.push(pv_bits(&o));
+                    ParamVec::weighted_sum_into(&a, wa, &b, wb, &mut o);
+                    outs.push(pv_bits(&o));
+                    a.delta_over_eta_into(&b, eta, &mut o);
+                    outs.push(pv_bits(&o));
+                    let mut x = a.clone();
+                    x.axpy(alpha, &b);
+                    x.scale_in_place(alpha);
+                    outs.push(pv_bits(&x));
+                    // Wire codec: f16 bytes and the decoded bits.
+                    let msg = Message::GlobalModel {
+                        version: 1,
+                        params: TensorPayload::new(a.clone(), true),
+                    };
+                    let enc = msg.encode();
+                    let dec = match Message::decode(&enc).unwrap() {
+                        Message::GlobalModel { params, .. } => pv_bits(&params.params),
+                        _ => unreachable!(),
+                    };
+                    (outs, enc, dec)
+                })
+            })
+        };
+        let want = eval(Backend::Scalar, 1);
+        for s in [1usize, 3, 4, 7] {
+            for backend in [Backend::Scalar, Backend::Simd] {
+                let got = eval(backend, s);
+                assert_eq!(want.0, got.0, "{backend:?} s={s}: algebra bits diverged");
+                assert_eq!(want.1, got.1, "{backend:?} s={s}: wire bytes diverged");
+                assert_eq!(want.2, got.2, "{backend:?} s={s}: decoded bits diverged");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_reductions_pinned_scalar() {
+    // l2_norm / relative_change are *excluded* from the SIMD and shard
+    // layers: splitting a sum reassociates it and changes the bits.
+    // This pin asserts their results are identical under
+    // HERMES_FORCE_SCALAR={0,1}-equivalent forcing and any shard count
+    // — i.e. the reductions never route through either layer.
+    forall(80, |rng| {
+        let a = edge_pv(rng);
+        let mut b = ParamVec::zeros_like(&a);
+        for t in &mut b.tensors {
+            for v in t.data_mut() {
+                *v = (rng.normal() * 2.0) as f32;
+            }
+        }
+        let want = (a.l2_norm().to_bits(), ParamVec::relative_change(&a, &b).to_bits());
+        for s in [1usize, 2, 5, 9] {
+            for backend in [Backend::Scalar, Backend::Simd] {
+                let got = kernels::with_backend(backend, || {
+                    shards::with_shards(s, || {
+                        (
+                            a.l2_norm().to_bits(),
+                            ParamVec::relative_change(&a, &b).to_bits(),
+                        )
+                    })
+                });
+                assert_eq!(want, got, "{backend:?} s={s}: reduction bits moved");
+            }
+        }
+    });
+}
+
+#[test]
+fn drivers_bit_identical_scalar_simd_sharded() {
+    // End-to-end acceptance: all six framework drivers, run under
+    // forced scalar/SIMD backends and ≥3 shard counts, reproduce the
+    // scalar single-shard run bit-for-bit (virtual time, accuracy,
+    // traffic, full loss curve).  Forcing is thread-local, so this test
+    // can run alongside the others without interference.
+    use hermes_dml::config::RunConfig;
+    use hermes_dml::frameworks::common::run_framework;
+    use hermes_dml::runtime::MockRuntime;
+
+    let run_one = |fw: &str, backend: Backend, s: usize| {
+        let mut cfg = RunConfig::new("mock", fw);
+        cfg.max_iters = 36;
+        cfg.dss0 = 96;
+        cfg.target_acc = 0.995; // don't stop early: exercise more pushes
+        kernels::with_backend(backend, || {
+            shards::with_shards(s, || {
+                run_framework(cfg, Box::new(MockRuntime::new())).unwrap()
+            })
+        })
+    };
+
+    for fw in ["bsp", "asp", "ssp", "ebsp", "selsync", "hermes"] {
+        let want = run_one(fw, Backend::Scalar, 1);
+        for s in [1usize, 3, 5] {
+            for backend in [Backend::Scalar, Backend::Simd] {
+                let got = run_one(fw, backend, s);
+                assert_eq!(
+                    want.virtual_time.to_bits(),
+                    got.virtual_time.to_bits(),
+                    "{fw} {backend:?} s={s}: virtual time diverged"
+                );
+                assert_eq!(
+                    want.final_accuracy.to_bits(),
+                    got.final_accuracy.to_bits(),
+                    "{fw} {backend:?} s={s}: accuracy diverged"
+                );
+                assert_eq!(want.iterations, got.iterations, "{fw} {backend:?} s={s}");
+                assert_eq!(want.bytes, got.bytes, "{fw} {backend:?} s={s}");
+                assert_eq!(
+                    want.curve.len(),
+                    got.curve.len(),
+                    "{fw} {backend:?} s={s}: curve length diverged"
+                );
+                for (i, (wc, gc)) in want.curve.iter().zip(&got.curve).enumerate() {
+                    assert_eq!(
+                        (wc.0.to_bits(), wc.1.to_bits(), wc.2.to_bits()),
+                        (gc.0.to_bits(), gc.1.to_bits(), gc.2.to_bits()),
+                        "{fw} {backend:?} s={s}: curve point {i} diverged"
+                    );
+                }
+            }
+        }
+    }
 }
 
 // ------------------------------------------------------------- wire

@@ -1,14 +1,22 @@
 #!/usr/bin/env bash
 # Regenerate the perf-trajectory reports at the repo root:
-#   BENCH_micro.json  — coordinator hot-path micro-benchmarks,
-#                       allocating baseline vs pooled in-place path
+#   BENCH_micro.json  — coordinator hot-path micro-benchmarks:
+#                       allocating baseline vs pooled in-place path,
+#                       plus scalar-vs-SIMD kernel dispatch (speedups
+#                       and GB/s per op)
+#   BENCH_shard.json  — 1-vs-N-shard scaling of axpy / weighted_sum /
+#                       sync_sgd / f16 codec (wall clock + GB/s per
+#                       shard count) — written by --record and --smoke
 #   BENCH_table3.json — Table III end-to-end sweep, sequential vs
 #                       parallel wall time
 #
-# Usage: scripts/bench.sh [--smoke]
-#   --smoke   CI mode: tiny budget, small model, one seed, one parallel
-#             table3 pass — fast enough for every PR, same JSON shape
-#             (uploaded as workflow artifacts by .github/workflows/ci.yml).
+# Usage: scripts/bench.sh [--smoke|--record]
+#   --smoke    CI mode: tiny budget, small model, one seed — fast
+#              enough for every PR, same JSON shapes (uploaded as
+#              workflow artifacts by .github/workflows/ci.yml).
+#   --record   full-budget run of every report including the shard
+#              scaling sweep; use this to refresh the versioned
+#              perf-trajectory datapoints.
 #
 # cargo runs bench binaries with the cwd set to the package root
 # (rust/), so the output paths are pinned to the repo root explicitly.
@@ -16,15 +24,32 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 root="$PWD"
 
-if [[ "${1:-}" == "--smoke" ]]; then
-  export HERMES_BENCH_SMOKE=1
-  export HERMES_BENCH_FAST=1
-  echo "== bench smoke mode (tiny model, 1 seed) =="
-fi
+mode="${1:-}"
+case "$mode" in
+  --smoke)
+    export HERMES_BENCH_SMOKE=1
+    export HERMES_BENCH_FAST=1
+    echo "== bench smoke mode (tiny model, 1 seed) =="
+    ;;
+  --record)
+    echo "== bench record mode (full budgets, all reports) =="
+    ;;
+  "") ;;
+  *)
+    echo "unknown flag '$mode' (expected --smoke or --record)" >&2
+    exit 2
+    ;;
+esac
 
+reports=("$root/BENCH_micro.json" "$root/BENCH_table3.json")
 BENCH_OUT="$root/BENCH_micro.json" cargo bench --bench micro_coordinator
 BENCH_TABLE3_OUT="$root/BENCH_table3.json" cargo bench --bench table3_end_to_end
 
+if [[ "$mode" == "--record" || "$mode" == "--smoke" ]]; then
+  BENCH_SHARD_OUT="$root/BENCH_shard.json" cargo bench --bench shard_scaling
+  reports+=("$root/BENCH_shard.json")
+fi
+
 echo
 echo "== perf reports =="
-ls -l "$root/BENCH_micro.json" "$root/BENCH_table3.json"
+ls -l "${reports[@]}"
