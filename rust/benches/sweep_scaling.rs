@@ -1,0 +1,118 @@
+//! Streaming-sweep scaling bench (DESIGN.md §13): drive 1k–10k-job
+//! seed×framework×churn grids through `exp::sweep` in both delivery
+//! modes — the bounded-memory streaming engine (rows handed to a sink
+//! in job order, ≤ window resident) and the collect-all baseline (every
+//! `RunMetrics` held until the end) — recording jobs/sec and a peak-RSS
+//! proxy (resident result rows × mean row footprint) per grid size.
+//! Results land in `BENCH_sweep.json` at the repo root (override with
+//! `BENCH_SWEEP_OUT`); run via `scripts/bench.sh --record`.
+//!
+//! `HERMES_BENCH_SMOKE` caps the grids (60/240 jobs) so the CI
+//! bench-smoke leg finishes in seconds while emitting the same JSON
+//! shape.
+
+use std::path::Path;
+use std::time::Instant;
+
+use hermes_dml::exp::{self, sweep};
+use hermes_dml::metrics::RunMetrics;
+use hermes_dml::runtime::{MockRuntime, ModelRuntime};
+use hermes_dml::util::json::Json;
+
+fn mock_rt(_job: &sweep::SweepJob) -> anyhow::Result<Box<dyn ModelRuntime>> {
+    Ok(Box::new(MockRuntime::new()))
+}
+
+/// Rough resident footprint of one result row: the struct plus its
+/// owned curves/series — the quantity the collect-all path multiplies
+/// by the grid size and the streaming path bounds by the window.
+fn row_bytes(m: &RunMetrics) -> usize {
+    let mut n = std::mem::size_of::<RunMetrics>();
+    n += m.curve.len() * std::mem::size_of::<(f64, f64, f64)>();
+    n += m.segments.len() * 40;
+    for w in &m.workers {
+        n += std::mem::size_of_val(w);
+        n += w.train_times.len() * 16;
+        n += w.allocations.len() * 24;
+        n += w.push_times.len() * 8;
+    }
+    n
+}
+
+fn main() {
+    let smoke = std::env::var("HERMES_BENCH_SMOKE").is_ok();
+    let grids: &[usize] = if smoke { &[60, 240] } else { &[1000, 10_000] };
+    let mut extra: Vec<(String, Json)> = Vec::new();
+    let threads = sweep::default_threads(usize::MAX);
+    extra.push(("threads".into(), Json::Num(threads as f64)));
+    extra.push(("smoke".into(), Json::Num(smoke as u8 as f64)));
+
+    for &n in grids {
+        println!("\n=== {n}-job grid ({threads} threads) ===");
+        let window = sweep::default_window(threads);
+
+        // Streaming: rows consumed (and dropped) as they arrive.
+        let jobs = exp::scale_jobs("mock", n);
+        let mut rows = 0usize;
+        let mut mean_row = 0f64;
+        let t0 = Instant::now();
+        let stats = sweep::run_sweep_streaming(&jobs, threads, window, mock_rt, |_i, m| {
+            rows += 1;
+            mean_row += (row_bytes(&m) as f64 - mean_row) / rows as f64;
+            std::hint::black_box(&m);
+            Ok(())
+        })
+        .expect("streaming sweep");
+        let stream_s = t0.elapsed().as_secs_f64();
+        assert_eq!(rows, n);
+        let stream_jps = n as f64 / stream_s.max(1e-9);
+        let stream_rss = stats.peak_buffered as f64 * mean_row;
+        println!(
+            "streaming : {stream_s:>7.2}s  {stream_jps:>8.1} jobs/s  \
+             peak {} resident rows (~{:.0} KB)",
+            stats.peak_buffered,
+            stream_rss / 1024.0
+        );
+
+        // Collect-all: the whole grid resident before anything is read.
+        let jobs = exp::scale_jobs("mock", n);
+        let t0 = Instant::now();
+        let all = sweep::run_sweep(jobs, threads, mock_rt).expect("collect sweep");
+        let collect_s = t0.elapsed().as_secs_f64();
+        let collect_rss: usize = all.iter().map(row_bytes).sum();
+        let collect_jps = n as f64 / collect_s.max(1e-9);
+        println!(
+            "collect   : {collect_s:>7.2}s  {collect_jps:>8.1} jobs/s  \
+             peak {} resident rows (~{:.0} KB)",
+            all.len(),
+            collect_rss as f64 / 1024.0
+        );
+        drop(all);
+
+        extra.push((format!("jobs_per_sec_streaming_{n}"), Json::Num(stream_jps)));
+        extra.push((format!("jobs_per_sec_collect_{n}"), Json::Num(collect_jps)));
+        extra.push((
+            format!("peak_rows_streaming_{n}"),
+            Json::Num(stats.peak_buffered as f64),
+        ));
+        extra.push((format!("peak_rows_collect_{n}"), Json::Num(n as f64)));
+        extra.push((format!("rss_proxy_bytes_streaming_{n}"), Json::Num(stream_rss)));
+        extra.push((
+            format!("rss_proxy_bytes_collect_{n}"),
+            Json::Num(collect_rss as f64),
+        ));
+        extra.push((
+            format!("rss_reduction_{n}"),
+            Json::Num(collect_rss as f64 / stream_rss.max(1.0)),
+        ));
+    }
+
+    let out_path = std::env::var("BENCH_SWEEP_OUT")
+        .unwrap_or_else(|_| "BENCH_sweep.json".to_string());
+    let fields: Vec<(&str, Json)> = std::iter::once(("title", Json::Str("sweep_scaling".into())))
+        .chain(extra.iter().map(|(k, v)| (k.as_str(), v.clone())))
+        .collect();
+    std::fs::write(Path::new(&out_path), Json::obj(fields).to_string())
+        .expect("writing bench json");
+    println!("\nwrote {out_path}");
+}

@@ -1,0 +1,223 @@
+//! Worker-side training fast-path micro-benchmarks (DESIGN.md §13):
+//! the mock runtime's train step on the allocating seed path vs the
+//! pooled in-place path, the probe eval, and a full
+//! `WorkerCore::local_iteration` — each under forced scalar and SIMD
+//! kernel backends, with GFLOP/s derived from the step's arithmetic
+//! count.  Results land in `BENCH_worker.json` at the repo root
+//! (override with `BENCH_WORKER_OUT`); run via `scripts/bench.sh`.
+//!
+//! With `HERMES_BENCH_ENFORCE_SIMD` set (the CI bench-smoke leg), the
+//! binary exits non-zero if the SIMD worker *step* benches are slower
+//! than scalar (geomean < 1.0×, or any single pair < 0.8× to absorb
+//! shared-runner jitter) — the same gate discipline as
+//! `micro_coordinator`.
+
+use std::path::Path;
+
+use hermes_dml::bench_harness::Bench;
+use hermes_dml::data::{partition_pools, DataKind, Dataset, Partition, Probe};
+use hermes_dml::gup::Gup;
+use hermes_dml::runtime::mock::{MOCK_CLASSES, MOCK_FEATURES};
+use hermes_dml::runtime::{init_params, MockRuntime, ModelRuntime};
+use hermes_dml::tensor::kernels::{self, Backend};
+use hermes_dml::tensor::{BufferPool, ParamVec};
+use hermes_dml::util::json::Json;
+use hermes_dml::util::rng::Xoshiro256pp;
+use hermes_dml::worker::WorkerCore;
+
+/// Arithmetic ops in one mock train step: forward GEMM (2·F·C per
+/// sample) + softmax/xent (~6·C per sample) + grad-logits (3·C) +
+/// rank-1 weight grad (2·F·C) + fused SGD(M) (4 per parameter).
+fn train_flops(mbs: usize) -> f64 {
+    let per_sample = 4 * MOCK_FEATURES * MOCK_CLASSES + 9 * MOCK_CLASSES;
+    let params = MOCK_FEATURES * MOCK_CLASSES + MOCK_CLASSES;
+    (mbs * per_sample + 4 * params) as f64
+}
+
+/// Arithmetic ops in one eval: forward GEMM + softmax/xent.
+fn eval_flops(batch: usize) -> f64 {
+    (batch * (2 * MOCK_FEATURES * MOCK_CLASSES + 6 * MOCK_CLASSES)) as f64
+}
+
+fn batch(n: usize, seed: u64) -> (Vec<f32>, Vec<i32>) {
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    let x = (0..n * MOCK_FEATURES).map(|_| rng.normal() as f32).collect();
+    let y = (0..n).map(|_| rng.next_below(MOCK_CLASSES as u64) as i32).collect();
+    (x, y)
+}
+
+fn main() {
+    let smoke = std::env::var("HERMES_BENCH_SMOKE").is_ok();
+    let mut b = if smoke {
+        Bench::new().with_budget(0.02).with_max_iters(60)
+    } else {
+        Bench::new().with_budget(0.5).with_max_iters(3000)
+    };
+    let mbs = 16usize;
+
+    // Shared fixtures: worker + dataset for the local-iteration leg.
+    let ds = Dataset::synth(DataKind::MockSet, 1200, 7);
+    let (train, test) = ds.split(0.85, 7);
+    let shard = partition_pools(&ds, &train, 1, Partition::Iid, 7).remove(0);
+
+    let mut simd_speedups: Vec<(String, f64)> = Vec::new();
+    let mut extra: Vec<(String, Json)> = Vec::new();
+    let backends: &[Backend] = if kernels::simd_available() {
+        &[Backend::Scalar, Backend::Simd]
+    } else {
+        &[Backend::Scalar]
+    };
+
+    for &backend in backends {
+        let bn = match backend {
+            Backend::Scalar => "scalar",
+            Backend::Simd => "simd",
+        };
+        Bench::report_header(&format!("worker fast path — {bn} backend"));
+        kernels::with_backend(backend, || {
+            let mut rt = MockRuntime::new();
+            let probe = Probe::build(&ds, &test, rt.meta().eval_batch, 7);
+            let init = init_params(rt.meta(), 7);
+            let (x, y) = batch(mbs, 1);
+
+            // Seed path: fresh param/momentum/grad buffers per step.
+            let params = init.clone();
+            let mom = ParamVec::zeros_like(&init);
+            b.run(&format!("train_step seed alloc {bn} b{mbs}"), || {
+                std::hint::black_box(
+                    rt.train_step(&params, &mom, &x, &y, mbs, 0.05, 0.9).unwrap(),
+                );
+            });
+
+            // Fast path: in-place update, pool-leased grad scratch.
+            let mut pool = BufferPool::new();
+            let mut p = init.clone();
+            let mut m = ParamVec::zeros_like(&init);
+            let mut grad = pool.acquire_like(&init);
+            b.run(&format!("train_step in place pooled {bn} b{mbs}"), || {
+                let st = rt
+                    .train_step_in_place(&mut p, &mut m, &mut grad, &x, &y, mbs, 0.05, 0.9)
+                    .unwrap();
+                std::hint::black_box(st);
+            });
+            pool.release(grad);
+
+            let eval_b = rt.meta().eval_batch;
+            b.run(&format!("eval_step {bn} b{eval_b}"), || {
+                std::hint::black_box(
+                    rt.eval_step(&p, &probe.x, &probe.y).unwrap(),
+                );
+            });
+
+            // Whole local iteration: 4 slab-fed steps + probe eval.
+            let gup = Gup::new(10, -1.3, 0.1, 5, true);
+            let mut core =
+                WorkerCore::new(0, init.clone(), gup, shard.clone(), 64, mbs, 7);
+            b.run(&format!("local_iteration {bn} (4 steps + eval)"), || {
+                let out = core
+                    .local_iteration(&mut rt, &ds, &probe, &mut pool, 1, 0.05, 0.9, 4)
+                    .unwrap();
+                std::hint::black_box(out);
+            });
+        });
+    }
+
+    // GFLOP/s per bench + scalar→SIMD speedups (the CI gate set is the
+    // *step* benches: seed, pooled, local_iteration — eval is reported
+    // but not gated, its softmax reductions are scalar by design).
+    let eval_b = MockRuntime::new().meta().eval_batch;
+    let flops_of = |name: &str| -> Option<f64> {
+        if name.starts_with("train_step") {
+            Some(train_flops(mbs))
+        } else if name.starts_with("eval_step") {
+            Some(eval_flops(eval_b))
+        } else if name.starts_with("local_iteration") {
+            Some(4.0 * train_flops(mbs) + eval_flops(eval_b))
+        } else {
+            None
+        }
+    };
+    for r in b.results() {
+        if let Some(fl) = flops_of(&r.name) {
+            extra.push((
+                format!("gflops_{}", r.name.replace(' ', "_")),
+                Json::Num(fl / r.mean_ns),
+            ));
+        }
+    }
+    for (key, base, new) in [
+        (
+            "speedup_simd_train_step_seed",
+            format!("train_step seed alloc scalar b{mbs}"),
+            format!("train_step seed alloc simd b{mbs}"),
+        ),
+        (
+            "speedup_simd_train_step_pooled",
+            format!("train_step in place pooled scalar b{mbs}"),
+            format!("train_step in place pooled simd b{mbs}"),
+        ),
+        (
+            "speedup_simd_local_iteration",
+            "local_iteration scalar (4 steps + eval)".to_string(),
+            "local_iteration simd (4 steps + eval)".to_string(),
+        ),
+        (
+            "speedup_simd_eval_step",
+            format!("eval_step scalar b{eval_b}"),
+            format!("eval_step simd b{eval_b}"),
+        ),
+    ] {
+        if let Some(sp) = b.speedup(&base, &new) {
+            println!("{key}: {sp:.2}x");
+            extra.push((key.to_string(), Json::Num(sp)));
+            if key != "speedup_simd_eval_step" {
+                simd_speedups.push((key.to_string(), sp));
+            }
+        }
+    }
+    // The pooled-vs-alloc before/after on the same backend.
+    for bn in ["scalar", "simd"] {
+        if let Some(sp) = b.speedup(
+            &format!("train_step seed alloc {bn} b{mbs}"),
+            &format!("train_step in place pooled {bn} b{mbs}"),
+        ) {
+            println!("speedup_pooled_vs_alloc_{bn}: {sp:.2}x");
+            extra.push((format!("speedup_pooled_vs_alloc_{bn}"), Json::Num(sp)));
+        }
+    }
+    extra.push((
+        "simd_available".to_string(),
+        Json::Num(kernels::simd_available() as u8 as f64),
+    ));
+
+    let out_path = std::env::var("BENCH_WORKER_OUT")
+        .unwrap_or_else(|_| "BENCH_worker.json".to_string());
+    let extra_refs: Vec<(&str, Json)> =
+        extra.iter().map(|(k, v)| (k.as_str(), v.clone())).collect();
+    b.write_json(Path::new(&out_path), "worker_fastpath", extra_refs)
+        .expect("writing bench json");
+    println!("\nwrote {out_path}");
+
+    // CI gate: SIMD worker steps must not be slower than scalar.
+    if std::env::var_os("HERMES_BENCH_ENFORCE_SIMD").is_some() {
+        if !kernels::simd_available() {
+            println!("simd-enforce: no AVX2 on this host, gate skipped");
+        } else if simd_speedups.is_empty() {
+            eprintln!("simd-enforce: no scalar-vs-SIMD step pairs recorded — failing");
+            std::process::exit(1);
+        } else {
+            let geomean = (simd_speedups.iter().map(|(_, s)| s.ln()).sum::<f64>()
+                / simd_speedups.len() as f64)
+                .exp();
+            let worst = simd_speedups
+                .iter()
+                .map(|(_, s)| *s)
+                .fold(f64::INFINITY, f64::min);
+            println!("simd-enforce: geomean {geomean:.2}x, worst {worst:.2}x");
+            if geomean < 1.0 || worst < 0.8 {
+                eprintln!("simd-enforce: SIMD worker step slower than scalar — failing");
+                std::process::exit(1);
+            }
+        }
+    }
+}

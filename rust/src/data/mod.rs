@@ -288,12 +288,36 @@ pub fn partition_pools(
 /// Draws mini-batches from a shard; `refill(dss)` emulates the PS
 /// sending a DSS-sized dataset which the worker then iterates (the
 /// prefetch path refills *before* the working set is exhausted).
+///
+/// **Batch slab (DESIGN.md §13).**  Besides the index list, the
+/// sampler owns a contiguous pre-gathered copy of the working set: the
+/// sample at epoch position `i` lives at `slab_x[i·elems..]` /
+/// `slab_y[i]`.  [`ensure_slab`] gathers it once per (re)assignment;
+/// [`next_batch_slices`] then serves a training step a borrowed
+/// contiguous `(&[f32], &[i32])` view — zero copies and zero
+/// allocations on the steady-state path.  Epoch reshuffles permute the
+/// index list and the slab blocks in lockstep with the *same* RNG draws
+/// as the index-only path, so both paths yield bit-identical batch
+/// sequences (tested below).
+///
+/// [`ensure_slab`]: BatchSampler::ensure_slab
+/// [`next_batch_slices`]: BatchSampler::next_batch_slices
 #[derive(Debug, Clone)]
 pub struct BatchSampler {
     rng: Xoshiro256pp,
     /// The DSS-sized working set (indices into the dataset).
     active: Vec<usize>,
     cursor: usize,
+    /// Contiguous pre-gathered working set (`active.len() · elems`).
+    slab_x: Vec<f32>,
+    slab_y: Vec<i32>,
+    /// Sample geometry of the slab (set by [`BatchSampler::ensure_slab`]).
+    elems: usize,
+    /// The slab no longer matches `active` (refill since last gather).
+    slab_dirty: bool,
+    /// Scratch for batches that straddle an epoch boundary.
+    batch_x: Vec<f32>,
+    batch_y: Vec<i32>,
 }
 
 impl BatchSampler {
@@ -302,6 +326,12 @@ impl BatchSampler {
             rng: Xoshiro256pp::stream(seed, 0xBA7C ^ ((worker as u64) << 17)),
             active: Vec::new(),
             cursor: 0,
+            slab_x: Vec::new(),
+            slab_y: Vec::new(),
+            elems: 0,
+            slab_dirty: true,
+            batch_x: Vec::new(),
+            batch_y: Vec::new(),
         }
     }
 
@@ -314,10 +344,55 @@ impl BatchSampler {
             self.active.push(pool[j]);
         }
         self.cursor = 0;
+        self.slab_dirty = true;
     }
 
     pub fn active_len(&self) -> usize {
         self.active.len()
+    }
+
+    /// Gather the working set into the contiguous slab (no-op when the
+    /// slab already matches the current assignment).  Called once per
+    /// local iteration by the worker fast path; only a (re)assignment
+    /// makes it re-gather.
+    pub fn ensure_slab(&mut self, ds: &Dataset) {
+        let e = ds.meta.elems();
+        if !self.slab_dirty && self.elems == e {
+            return;
+        }
+        self.elems = e;
+        self.slab_x.clear();
+        self.slab_y.clear();
+        self.slab_x.reserve(self.active.len() * e);
+        self.slab_y.reserve(self.active.len());
+        for &i in &self.active {
+            let (img, lbl) = ds.sample(i);
+            self.slab_x.extend_from_slice(img);
+            self.slab_y.push(lbl);
+        }
+        self.slab_dirty = false;
+    }
+
+    /// One epoch-boundary reshuffle: permutes `active` with the exact
+    /// RNG draw sequence of [`Xoshiro256pp::shuffle`], and applies the
+    /// same swaps to the slab blocks when a slab is attached — the
+    /// index path and the slab path stay in lockstep.
+    fn reshuffle(&mut self) {
+        let n = self.active.len();
+        let e = self.elems;
+        let sync = !self.slab_dirty
+            && self.slab_y.len() == n
+            && self.slab_x.len() == n * e;
+        for i in (1..n).rev() {
+            let j = self.rng.next_below(i as u64 + 1) as usize;
+            self.active.swap(i, j);
+            if sync && i != j {
+                self.slab_y.swap(i, j);
+                let (a, b) = if i < j { (i, j) } else { (j, i) };
+                let (lo, hi) = self.slab_x.split_at_mut(b * e);
+                lo[a * e..(a + 1) * e].swap_with_slice(&mut hi[..e]);
+            }
+        }
     }
 
     /// Next mini-batch of exactly `mbs` indices (wraps with reshuffle —
@@ -327,13 +402,59 @@ impl BatchSampler {
         let mut out = Vec::with_capacity(mbs);
         for _ in 0..mbs {
             if self.cursor >= self.active.len() {
-                self.rng.shuffle(&mut self.active);
+                self.reshuffle();
                 self.cursor = 0;
             }
             out.push(self.active[self.cursor]);
             self.cursor += 1;
         }
         out
+    }
+
+    /// Next mini-batch as contiguous `(x, y)` slices out of the
+    /// pre-gathered slab — the fast-path twin of
+    /// [`BatchSampler::next_batch`] + [`Dataset::gather_into`], with
+    /// identical sample sequence and contents.  Batches fully inside an
+    /// epoch borrow the slab directly (no copy); batches straddling a
+    /// reshuffle are assembled in a reused scratch.  Requires
+    /// [`BatchSampler::ensure_slab`] first.
+    pub fn next_batch_slices(&mut self, mbs: usize) -> (&[f32], &[i32]) {
+        assert!(!self.active.is_empty(), "sampler not refilled");
+        debug_assert!(!self.slab_dirty, "ensure_slab not called after refill");
+        let n = self.active.len();
+        let e = self.elems;
+        if self.cursor >= n {
+            self.reshuffle();
+            self.cursor = 0;
+        }
+        if self.cursor + mbs <= n {
+            let c = self.cursor;
+            self.cursor += mbs;
+            (&self.slab_x[c * e..(c + mbs) * e], &self.slab_y[c..c + mbs])
+        } else {
+            // Straddling batch (also covers mbs > DSS, which wraps more
+            // than once): contiguous runs copied into the scratch, with
+            // the wrap check before every run exactly as the index path
+            // checks before every draw.
+            self.batch_x.clear();
+            self.batch_y.clear();
+            self.batch_x.reserve(mbs * e);
+            self.batch_y.reserve(mbs);
+            let mut need = mbs;
+            while need > 0 {
+                if self.cursor >= n {
+                    self.reshuffle();
+                    self.cursor = 0;
+                }
+                let take = need.min(n - self.cursor);
+                let c = self.cursor;
+                self.batch_x.extend_from_slice(&self.slab_x[c * e..(c + take) * e]);
+                self.batch_y.extend_from_slice(&self.slab_y[c..c + take]);
+                self.cursor += take;
+                need -= take;
+            }
+            (&self.batch_x, &self.batch_y)
+        }
     }
 }
 
@@ -486,6 +607,56 @@ mod tests {
         for &i in b1.iter().chain(&b2) {
             assert!(i < 10);
         }
+    }
+
+    #[test]
+    fn slab_batches_match_index_path_bitwise() {
+        // The contiguous-slab fast path must serve the exact batch
+        // sequence of next_batch + gather_into — including straddling
+        // batches (mbs ∤ dss) and multi-wrap batches (mbs > dss).
+        let ds = Dataset::synth(DataKind::MockSet, 300, 12);
+        let (train, _) = ds.split(0.9, 12);
+        for (dss, mbs) in [(40usize, 8usize), (10, 6), (10, 16), (7, 7)] {
+            let mut idx_sampler = BatchSampler::new(3, 1);
+            let mut slab_sampler = BatchSampler::new(3, 1);
+            idx_sampler.refill(&train, dss);
+            slab_sampler.refill(&train, dss);
+            slab_sampler.ensure_slab(&ds);
+            let mut gx = Vec::new();
+            let mut gy = Vec::new();
+            for step in 0..25 {
+                let idx = idx_sampler.next_batch(mbs);
+                ds.gather_into(&idx, &mut gx, &mut gy);
+                let (sx, sy) = slab_sampler.next_batch_slices(mbs);
+                assert_eq!(gx.as_slice(), sx, "dss={dss} mbs={mbs} step={step}");
+                assert_eq!(gy.as_slice(), sy, "dss={dss} mbs={mbs} step={step}");
+            }
+        }
+    }
+
+    #[test]
+    fn ensure_slab_is_idempotent_and_refill_marks_dirty() {
+        let ds = Dataset::synth(DataKind::MockSet, 100, 13);
+        let (train, _) = ds.split(1.0, 13);
+        let mut s = BatchSampler::new(5, 0);
+        s.refill(&train, 8);
+        s.ensure_slab(&ds);
+        let ptr = {
+            let (x, _) = s.next_batch_slices(4);
+            x.as_ptr()
+        };
+        // No re-gather (and no reallocation) without a refill.
+        s.ensure_slab(&ds);
+        let (x2, _) = s.next_batch_slices(4);
+        assert_eq!(x2.as_ptr(), unsafe { ptr.add(4 * ds.meta.elems()) });
+        // A refill invalidates the slab; ensure_slab rebuilds it to the
+        // new assignment's size.
+        s.refill(&train, 16);
+        s.ensure_slab(&ds);
+        assert_eq!(s.active_len(), 16);
+        let (x3, y3) = s.next_batch_slices(16);
+        assert_eq!(x3.len(), 16 * ds.meta.elems());
+        assert_eq!(y3.len(), 16);
     }
 
     #[test]

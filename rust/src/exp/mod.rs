@@ -10,10 +10,16 @@
 //! Seed×framework grids (`table3`, `fig14`, the Fig. 1 timeline set)
 //! fan out over all cores through [`sweep::run_sweep`] — one DES
 //! instance per job, results bit-identical to the sequential order.
+//! Large grids (`hermes exp scale`, the churn sweep) go through the
+//! *streaming* engine ([`sweep::run_sweep_streaming`]): rows arrive at
+//! an incremental CSV writer in job order while at most a
+//! reorder-window of results is ever resident (DESIGN.md §13).
 
 pub mod sweep;
 
+use std::io::Write;
 use std::path::Path;
+use std::time::Instant;
 
 use anyhow::{bail, Result};
 
@@ -104,16 +110,15 @@ pub fn fig1_timelines(out: &Path, model: &str, artifacts: &Path) -> Result<()> {
     Ok(())
 }
 
-/// Shared sweep entry: `threads == 0` means one per core.  The runtime
-/// factory is rebuilt per job inside its worker thread (`ModelRuntime`
-/// is not `Send`).
+/// Shared sweep entry: `threads == 0` means one per core (resolved by
+/// the sweep engine).  The runtime factory is rebuilt per job inside
+/// its worker thread (`ModelRuntime` is not `Send`).
 fn run_jobs(
     jobs: Vec<SweepJob>,
     model: &str,
     artifacts: &Path,
     threads: usize,
 ) -> Result<Vec<RunMetrics>> {
-    let threads = if threads == 0 { sweep::default_threads(jobs.len()) } else { threads };
     let model = model.to_string();
     let artifacts = artifacts.to_path_buf();
     sweep::run_sweep(jobs, threads, move |_job| make_runtime(&model, &artifacts))
@@ -473,7 +478,9 @@ pub const FAULT_SWEEP_RATES: [f64; 3] = [0.0, 1.0, 2.5];
 
 /// `hermes exp faults` — the churn sweep (ISSUE 2): every framework ×
 /// churn rate on the same seed, reporting convergence, wall time and
-/// traffic under deterministic crash/rejoin cycles.  Writes
+/// traffic under deterministic crash/rejoin cycles.  Rows stream
+/// through the sink in job order — the CSV and the terminal table are
+/// built incrementally as results land.  Writes
 /// `faults_churn_{model}.csv`; returns rows in (rate-major, framework-
 /// minor) order.
 pub fn faults_churn_sweep(
@@ -492,7 +499,8 @@ pub fn faults_churn_sweep(
             jobs.push(SweepJob::new(format!("{fw}@churn{rate}"), cfg));
         }
     }
-    let rows = run_jobs(jobs, model, artifacts, threads)?;
+    let model_s = model.to_string();
+    let arts = artifacts.to_path_buf();
 
     let mut csv = String::from(
         "framework,churn_rate,crashes,rejoins,iterations,virtual_time_s,\
@@ -506,11 +514,19 @@ pub fn faults_churn_sweep(
         "Conv. Acc.",
         "Bytes",
     ]);
-    let mut i = 0usize;
-    for &rate in rates {
-        for fw in frameworks {
-            let r = &rows[i];
-            i += 1;
+    let mut rows: Vec<RunMetrics> = Vec::with_capacity(jobs.len());
+    sweep::run_sweep_streaming(
+        &jobs,
+        threads,
+        0, // auto window
+        move |_job| make_runtime(&model_s, &arts),
+        |i, r| {
+            // Labels come from the job itself, not re-derived index
+            // arithmetic — the grid layout can change without
+            // mislabeling a row.
+            let cfg = &jobs[i].cfg;
+            let rate = cfg.faults.churn_rate;
+            let fw = cfg.framework.as_str();
             csv += &format!(
                 "{fw},{rate},{},{},{},{:.3},{:.5},{:.5},{},{},{}\n",
                 r.fault_crashes,
@@ -531,12 +547,141 @@ pub fn faults_churn_sweep(
                 format!("{:.2}%", r.final_accuracy * 100.0),
                 r.bytes.to_string(),
             ]);
-        }
-    }
+            rows.push(r);
+            Ok(())
+        },
+    )?;
     let rendered = table.render();
     println!("\nChurn sweep ({model}):\n{rendered}");
     write_file(out, &format!("faults_churn_{model}.csv"), &csv)?;
     Ok(rows)
+}
+
+// ------------------------------------------------------------- scale
+
+/// Build an `n`-job seed×framework×churn grid for the streaming scale
+/// sweep: framework cycles fastest, then the churn rate, and every job
+/// gets its own seed — `n` distinct scenarios, deterministically.
+/// Budgets are kept tiny per job (the point is sweep throughput, not
+/// per-run convergence).
+pub fn scale_jobs(model: &str, n: usize) -> Vec<SweepJob> {
+    let fws = crate::frameworks::ALL;
+    (0..n)
+        .map(|i| {
+            let fw = fws[i % fws.len()];
+            let mut cfg = scaled_cfg(model, fw);
+            cfg.seed = 1000 + i as u64;
+            cfg.max_iters = 24;
+            cfg.dss0 = 64;
+            cfg.target_acc = 1.1; // never converge: fixed-size jobs
+            cfg.faults.churn_rate =
+                FAULT_SWEEP_RATES[(i / fws.len()) % FAULT_SWEEP_RATES.len()];
+            SweepJob::new(format!("{fw}#{i}"), cfg)
+        })
+        .collect()
+}
+
+/// What [`scale_sweep`] measured.
+#[derive(Debug, Clone, Copy)]
+pub struct ScaleReport {
+    pub jobs: usize,
+    pub seconds: f64,
+    pub jobs_per_sec: f64,
+    /// Peak result rows resident at once (streaming: ≤ the reorder
+    /// window; collect-all: the whole grid).
+    pub peak_resident_rows: usize,
+}
+
+/// `hermes exp scale` — the streaming 10k-job sweep (DESIGN.md §13):
+/// run an `n_jobs` seed×framework×churn grid, writing one CSV row per
+/// finished job **incrementally** (a `BufWriter` sink fed in job
+/// order), so memory stays bounded by the reorder window no matter the
+/// grid size.  `collect_all = true` runs the same grid through the
+/// collect-then-write path instead — the before/after comparison
+/// `benches/sweep_scaling.rs` records in `BENCH_sweep.json`.
+pub fn scale_sweep(
+    out: &Path,
+    model: &str,
+    artifacts: &Path,
+    n_jobs: usize,
+    threads: usize,
+    collect_all: bool,
+) -> Result<ScaleReport> {
+    let jobs = scale_jobs(model, n_jobs);
+    let model_s = model.to_string();
+    let arts = artifacts.to_path_buf();
+    let make_rt = move |_job: &SweepJob| make_runtime(&model_s, &arts);
+
+    std::fs::create_dir_all(out)?;
+    let path = out.join(format!("scale_{model}.csv"));
+    let mut w = std::io::BufWriter::new(std::fs::File::create(&path)?);
+    writeln!(
+        w,
+        "job,framework,seed,churn_rate,iterations,virtual_time_s,\
+         final_loss,final_accuracy,bytes,api_calls"
+    )?;
+    // Row labels come from the jobs themselves (the authoritative
+    // grid), not from re-derived index arithmetic — reordering or
+    // extending `scale_jobs` can never mislabel the CSV.
+    let labels: Vec<(String, f64)> = jobs
+        .iter()
+        .map(|j| (j.cfg.framework.clone(), j.cfg.faults.churn_rate))
+        .collect();
+    let write_row = |w: &mut dyn Write, i: usize, r: &RunMetrics| -> Result<()> {
+        let (fw, churn) = &labels[i];
+        writeln!(
+            w,
+            "{i},{fw},{},{churn},{},{:.3},{:.5},{:.5},{},{}",
+            r.seed,
+            r.iterations,
+            r.virtual_time,
+            r.final_loss,
+            r.final_accuracy,
+            r.bytes,
+            r.api_calls
+        )?;
+        Ok(())
+    };
+
+    let t0 = Instant::now();
+    let (jobs_done, peak) = if collect_all {
+        let rows = sweep::run_sweep(jobs, threads, make_rt)?;
+        let n = rows.len();
+        for (i, r) in rows.iter().enumerate() {
+            write_row(&mut w, i, r)?;
+        }
+        (n, n)
+    } else {
+        let stats =
+            sweep::run_sweep_streaming(&jobs, threads, 0, make_rt, |i, r| {
+                write_row(&mut w, i, &r)
+            })?;
+        (stats.jobs, stats.peak_buffered)
+    };
+    w.flush()?;
+    let seconds = t0.elapsed().as_secs_f64();
+    let report = ScaleReport {
+        jobs: jobs_done,
+        seconds,
+        jobs_per_sec: jobs_done as f64 / seconds.max(1e-9),
+        peak_resident_rows: peak,
+    };
+    let threads_desc = if threads == 0 {
+        "auto".to_string()
+    } else {
+        threads.to_string()
+    };
+    println!(
+        "[scale] {model}: {} jobs in {:.2}s — {:.1} jobs/s, {threads_desc} threads, \
+         peak {} resident rows ({}), rows → {}",
+        report.jobs,
+        report.seconds,
+        report.jobs_per_sec,
+        report.peak_resident_rows,
+        if collect_all { "collect-all" } else { "streaming" },
+        path.display()
+    );
+    Ok(report)
 }
 
 /// Run the complete experiment suite.
@@ -600,6 +745,48 @@ mod tests {
         let csv = std::fs::read_to_string(dir.join("faults_churn_mock.csv")).unwrap();
         assert_eq!(csv.lines().count(), 3, "{csv}");
         assert!(csv.lines().nth(1).unwrap().starts_with("hermes,0,"), "{csv}");
+    }
+
+    #[test]
+    fn scale_sweep_streaming_and_collect_write_identical_rows() {
+        let dir = std::env::temp_dir().join("hermes_exp_scale_test");
+        let rep = scale_sweep(&dir, "mock", Path::new("/nonexistent"), 8, 2, false)
+            .unwrap();
+        assert_eq!(rep.jobs, 8);
+        assert!(rep.jobs_per_sec > 0.0);
+        assert!(
+            rep.peak_resident_rows <= sweep::default_window(2),
+            "streaming must bound residency: {}",
+            rep.peak_resident_rows
+        );
+        let streamed =
+            std::fs::read_to_string(dir.join("scale_mock.csv")).unwrap();
+        assert_eq!(streamed.lines().count(), 9, "{streamed}");
+        assert!(streamed.lines().nth(1).unwrap().starts_with("0,bsp,1000,"));
+
+        // The collect-all baseline writes byte-identical rows (jobs are
+        // pure functions of their configs).
+        let rep2 = scale_sweep(&dir, "mock", Path::new("/nonexistent"), 8, 2, true)
+            .unwrap();
+        assert_eq!(rep2.peak_resident_rows, 8, "collect-all holds the grid");
+        let collected =
+            std::fs::read_to_string(dir.join("scale_mock.csv")).unwrap();
+        assert_eq!(streamed, collected);
+    }
+
+    #[test]
+    fn scale_jobs_cycle_frameworks_seeds_and_churn() {
+        let jobs = scale_jobs("mock", 14);
+        assert_eq!(jobs.len(), 14);
+        let fws = crate::frameworks::ALL;
+        for (i, j) in jobs.iter().enumerate() {
+            assert_eq!(j.cfg.framework, fws[i % fws.len()]);
+            assert_eq!(j.cfg.seed, 1000 + i as u64);
+            j.cfg.validate().unwrap();
+        }
+        // Second framework cycle advances the churn rate.
+        assert_eq!(jobs[0].cfg.faults.churn_rate, FAULT_SWEEP_RATES[0]);
+        assert_eq!(jobs[fws.len()].cfg.faults.churn_rate, FAULT_SWEEP_RATES[1]);
     }
 
     #[test]

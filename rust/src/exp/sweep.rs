@@ -2,9 +2,20 @@
 //! per seed×framework job, fanned out over the machine's cores
 //! (std-only — `std::thread::scope`, no rayon offline).
 //!
+//! **Streaming (DESIGN.md §13).**  The engine is a bounded-memory
+//! streaming runner: workers pull jobs from a shared index and deposit
+//! finished [`RunMetrics`] into a reorder buffer of at most `window`
+//! rows; the calling thread drains that buffer **in job order** into a
+//! caller-supplied sink (an incremental CSV/JSON writer, a collector, a
+//! progress printer).  A worker may only claim job `i` once
+//! `i < emitted + window`, so at no point are more than `window` result
+//! rows resident — a 10 000-job grid streams through a handful of rows
+//! instead of holding every loss curve in memory.  [`run_sweep`] is the
+//! collect-all convenience wrapper (window = job count).
+//!
 //! Determinism: every job is a pure function of its [`RunConfig`] — it
 //! owns a private runtime, RNG streams, event queue and metrics — so
-//! running jobs concurrently and slotting results back by job index is
+//! running jobs concurrently and delivering results by job index is
 //! **bit-identical** to running them sequentially (asserted by
 //! `parallel_sweep_matches_sequential_bitwise` below).  Only
 //! `sim_wall_time` (real wall clock) differs between schedules.
@@ -14,8 +25,8 @@
 //! not `Send` (the PJRT client wrapper is `Rc`-based); each thread owns
 //! its runtime end to end.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::collections::BTreeMap;
+use std::sync::{Condvar, Mutex};
 
 use anyhow::Result;
 
@@ -49,21 +60,65 @@ pub fn default_threads(jobs: usize) -> usize {
         .clamp(1, jobs.max(1))
 }
 
-/// Run every job and return results in job order.
+/// Default reorder-buffer bound for a streaming sweep: enough slack
+/// that no worker stalls on an in-order sink in the common case, still
+/// O(threads) memory.
+pub fn default_window(threads: usize) -> usize {
+    threads.max(1) * 2
+}
+
+/// What a streaming sweep observed about itself.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SweepStats {
+    /// Rows delivered to the sink.
+    pub jobs: usize,
+    /// High-water mark of finished-but-not-yet-emitted rows — the
+    /// actual peak result residency (≤ the requested window).
+    pub peak_buffered: usize,
+}
+
+/// Shared state of one streaming run (behind a mutex, signalled by a
+/// condvar): the claim cursor, the emit cursor, and the reorder buffer.
+struct Reorder {
+    /// Next unclaimed job index.
+    next: usize,
+    /// Rows already handed to the sink (all indices < emitted).
+    emitted: usize,
+    /// Finished jobs awaiting their in-order turn.
+    done: BTreeMap<usize, Result<RunMetrics>>,
+    peak: usize,
+    /// Set on sink error / first job error: workers stop claiming.
+    stop: bool,
+}
+
+/// Run every job, delivering results **in job order** to `sink` while
+/// holding at most `window` finished rows in memory.
 ///
+/// `threads == 0` means one per core ([`default_threads`]) and
+/// `window == 0` means [`default_window`] of the resolved thread count
+/// — resolved *here* so every caller shares one contract.
 /// `threads == 1` is the sequential reference path; anything larger
 /// fans jobs out over scoped threads pulling from a shared work index.
-/// The first job error (in job order) is returned after all threads
-/// finish.
-pub fn run_sweep<F>(jobs: Vec<SweepJob>, threads: usize, make_rt: F) -> Result<Vec<RunMetrics>>
+/// The first error in job order — whether from a job or from the sink —
+/// stops the sweep (in-flight jobs finish, nothing new is claimed) and
+/// is returned.
+pub fn run_sweep_streaming<F, S>(
+    jobs: &[SweepJob],
+    threads: usize,
+    window: usize,
+    make_rt: F,
+    mut sink: S,
+) -> Result<SweepStats>
 where
     F: Fn(&SweepJob) -> Result<Box<dyn ModelRuntime>> + Sync,
+    S: FnMut(usize, RunMetrics) -> Result<()>,
 {
     let n = jobs.len();
     if n == 0 {
-        return Ok(Vec::new());
+        return Ok(SweepStats { jobs: 0, peak_buffered: 0 });
     }
-    let threads = threads.clamp(1, n);
+    let threads = if threads == 0 { default_threads(n) } else { threads }.clamp(1, n);
+    let window = if window == 0 { default_window(threads) } else { window };
     let run_one = move |job: &SweepJob| -> Result<RunMetrics> {
         let rt = make_rt(job)?;
         let exec = || run_framework_opts(job.cfg.clone(), rt, job.record_timeline);
@@ -84,32 +139,123 @@ where
     };
 
     if threads == 1 {
-        return jobs.iter().map(|job| run_one(job)).collect();
+        for (i, job) in jobs.iter().enumerate() {
+            sink(i, run_one(job)?)?;
+        }
+        return Ok(SweepStats { jobs: n, peak_buffered: 1 });
     }
 
-    let next = AtomicUsize::new(0);
-    let slots: Vec<Mutex<Option<Result<RunMetrics>>>> =
-        (0..n).map(|_| Mutex::new(None)).collect();
-    let jobs = &jobs;
+    let state = Mutex::new(Reorder {
+        next: 0,
+        emitted: 0,
+        done: BTreeMap::new(),
+        peak: 0,
+        stop: false,
+    });
+    let cv = Condvar::new();
+    let state_ref = &state;
+    let cv_ref = &cv;
     let run_one = &run_one;
-    let slots_ref = &slots;
-    let next_ref = &next;
+    let mut first_err: Option<anyhow::Error> = None;
+    let mut emitted_rows = 0usize;
+
     std::thread::scope(|s| {
         for _ in 0..threads {
             s.spawn(move || loop {
-                let i = next_ref.fetch_add(1, Ordering::Relaxed);
-                if i >= n {
-                    break;
-                }
-                let res = run_one(&jobs[i]);
-                *slots_ref[i].lock().unwrap() = Some(res);
+                // Claim the next job, but never run more than `window`
+                // ahead of the sink — that bound is what makes the
+                // reorder buffer (and thus result residency) O(window).
+                let i = {
+                    let mut g = state_ref.lock().unwrap();
+                    loop {
+                        if g.stop || g.next >= n {
+                            return;
+                        }
+                        if g.next < g.emitted + window {
+                            let i = g.next;
+                            g.next += 1;
+                            break i;
+                        }
+                        g = cv_ref.wait(g).unwrap();
+                    }
+                };
+                // A panicking job must still produce a row — otherwise
+                // the sink would wait on this index forever and the
+                // panic would only surface at scope join.
+                let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                    || run_one(&jobs[i]),
+                ))
+                .unwrap_or_else(|_| Err(anyhow::anyhow!("sweep job {i} panicked")));
+                let mut g = state_ref.lock().unwrap();
+                g.done.insert(i, res);
+                g.peak = g.peak.max(g.done.len());
+                cv_ref.notify_all();
             });
         }
+
+        // The calling thread is the sink: drain the reorder buffer in
+        // job order, unlocking while each row is written.
+        let mut g = state.lock().unwrap();
+        while g.emitted < n {
+            let idx = g.emitted;
+            if let Some(res) = g.done.remove(&idx) {
+                g.emitted += 1;
+                cv.notify_all();
+                drop(g);
+                let row = match res {
+                    Ok(m) => {
+                        let r = sink(idx, m);
+                        if r.is_ok() {
+                            emitted_rows += 1;
+                        }
+                        r
+                    }
+                    Err(e) => Err(e),
+                };
+                g = state.lock().unwrap();
+                if let Err(e) = row {
+                    first_err = Some(e);
+                    g.stop = true;
+                    cv.notify_all();
+                    break;
+                }
+            } else {
+                g = cv.wait(g).unwrap();
+            }
+        }
+        g.stop = true;
+        drop(g);
+        cv.notify_all();
+        // Leaving the scope joins the workers: each finishes its
+        // in-flight job, sees `stop`, and exits.
     });
-    slots
+
+    if let Some(e) = first_err {
+        return Err(e);
+    }
+    let peak = state.into_inner().unwrap().peak;
+    Ok(SweepStats { jobs: emitted_rows, peak_buffered: peak })
+}
+
+/// Run every job and return results in job order — the collect-all
+/// wrapper over [`run_sweep_streaming`] (window = job count, so workers
+/// are never throttled; identical scheduling freedom to the original
+/// collect-all runner, bit-identical results either way).
+/// `threads == 0` means one per core.
+pub fn run_sweep<F>(jobs: Vec<SweepJob>, threads: usize, make_rt: F) -> Result<Vec<RunMetrics>>
+where
+    F: Fn(&SweepJob) -> Result<Box<dyn ModelRuntime>> + Sync,
+{
+    let mut out: Vec<Option<RunMetrics>> = Vec::new();
+    out.resize_with(jobs.len(), || None);
+    run_sweep_streaming(&jobs, threads, jobs.len().max(1), make_rt, |i, m| {
+        out[i] = Some(m);
+        Ok(())
+    })?;
+    Ok(out
         .into_iter()
-        .map(|slot| slot.into_inner().unwrap().expect("sweep job not executed"))
-        .collect()
+        .map(|slot| slot.expect("sweep job not executed"))
+        .collect())
 }
 
 #[cfg(test)]
@@ -170,6 +316,46 @@ mod tests {
     }
 
     #[test]
+    fn streaming_sink_sees_rows_in_order_with_bounded_buffer() {
+        let js = jobs();
+        let want = run_sweep(jobs(), 1, mock_rt).unwrap();
+        let mut seen: Vec<(usize, String, u64)> = Vec::new();
+        let stats = run_sweep_streaming(&js, 4, 2, mock_rt, |i, m| {
+            seen.push((i, m.framework.clone(), m.iterations));
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(stats.jobs, js.len());
+        assert!(
+            stats.peak_buffered <= 2,
+            "reorder buffer exceeded the window: {}",
+            stats.peak_buffered
+        );
+        // In order, complete, and bit-identical to the sequential path.
+        for (k, (i, fw, iters)) in seen.iter().enumerate() {
+            assert_eq!(*i, k, "rows out of order");
+            assert_eq!(fw, &want[k].framework);
+            assert_eq!(*iters, want[k].iterations);
+        }
+    }
+
+    #[test]
+    fn streaming_sink_error_stops_the_sweep() {
+        let js = jobs();
+        let mut rows = 0usize;
+        let err = run_sweep_streaming(&js, 3, 4, mock_rt, |i, _m| {
+            if i == 1 {
+                anyhow::bail!("sink full");
+            }
+            rows += 1;
+            Ok(())
+        })
+        .unwrap_err();
+        assert!(err.to_string().contains("sink full"), "{err}");
+        assert_eq!(rows, 1, "only the pre-error row was consumed");
+    }
+
+    #[test]
     fn empty_sweep_is_fine_and_errors_propagate() {
         assert!(run_sweep(Vec::new(), 4, mock_rt).unwrap().is_empty());
         let mut bad = jobs();
@@ -179,9 +365,11 @@ mod tests {
     }
 
     #[test]
-    fn default_threads_is_positive_and_capped() {
+    fn default_threads_and_window_are_positive_and_capped() {
         assert!(default_threads(0) >= 1);
         assert!(default_threads(1) == 1);
         assert!(default_threads(64) >= 1);
+        assert!(default_window(0) >= 1);
+        assert_eq!(default_window(4), 8);
     }
 }

@@ -139,7 +139,10 @@ impl SimEnv {
         let plan = cfg.faults.build_plan(n, cfg.seed);
         plan.validate(n).map_err(|e| anyhow::anyhow!(e))?;
         let faults = FaultTimeline::from_plan(&plan);
-        let mut queue = SimQueue::new();
+        // Pre-size the event heap from the worker count: drivers keep a
+        // few events in flight per worker (train/arrive/prefetch
+        // chains), so this covers the steady state without regrowth.
+        let mut queue = SimQueue::with_capacity(4 * n + 16);
         faults.schedule(&mut queue);
 
         Ok(SimEnv {
@@ -170,13 +173,17 @@ impl SimEnv {
     }
 
     /// Execute one local iteration on `w` (real compute) and return
-    /// (IterOut, virtual duration from the Eq. 3 cost model).
+    /// (IterOut, virtual duration from the Eq. 3 cost model).  The
+    /// worker leases its gradient scratch from the shared [`BufferPool`]
+    /// and steps through the in-place runtime fast path — zero
+    /// steady-state allocations (DESIGN.md §13).
     pub fn run_local_iteration(&mut self, w: usize) -> Result<(crate::worker::IterOut, f64)> {
         let hp = &self.cfg.hp;
         let out = self.workers[w].local_iteration(
             self.rt.as_mut(),
             &self.ds,
             &self.probe,
+            &mut self.pool,
             hp.epochs,
             hp.lr,
             hp.momentum,

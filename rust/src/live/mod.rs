@@ -32,7 +32,7 @@ use crate::data::{partition_pools, DataKind, Dataset, Partition, Probe};
 use crate::gup::Gup;
 use crate::ps::PsState;
 use crate::runtime::{init_params, MockRuntime, ModelRuntime};
-use crate::tensor::ParamVec;
+use crate::tensor::{BufferPool, ParamVec};
 use crate::wire::{read_frame_with, write_frame_with, Message, TensorPayload};
 use crate::worker::WorkerCore;
 
@@ -294,10 +294,11 @@ fn run_live_opts(
                 cfg.seed.wrapping_add(wid as u64),
             );
             let family = format!("fam{k}");
-            // One encode buffer and one frame-body buffer per worker,
-            // reused for every frame on every connection it opens.
+            // One encode buffer, one frame-body buffer and one scratch
+            // pool per worker, reused for every frame / train step.
             let mut enc_buf: Vec<u8> = Vec::new();
             let mut body_buf: Vec<u8> = Vec::new();
+            let mut step_pool = BufferPool::new();
             let (mut rd, mut wr, version, global) =
                 connect_worker(addr, wid, &family, &mut enc_buf, &mut body_buf)?;
             core.adopt_global(&global, version);
@@ -347,6 +348,7 @@ fn run_live_opts(
                     rt.as_mut(),
                     &ds,
                     &probe,
+                    &mut step_pool,
                     cfg.hp.epochs,
                     cfg.hp.lr,
                     cfg.hp.momentum,

@@ -35,13 +35,15 @@ fn usage() -> String {
      SUBCOMMANDS:\n\
        run   run one framework over the simulated 12-worker edge cluster\n\
        exp   regenerate a paper experiment: fig1 fig2 fig3 fig4 fig11\n\
-             fig12 fig13 fig14 table3 faults all\n\
+             fig12 fig13 fig14 table3 faults scale all\n\
        live  run the real threaded TCP parameter server + workers\n\
              (worker leases, heartbeat timeouts, reconnect resync)\n\
        info  show artifacts, cluster and hyper-parameter defaults\n\n\
      `hermes exp faults` sweeps every framework over deterministic\n\
      crash/rejoin churn (see DESIGN.md §10 and\n\
-     examples/straggler_mitigation.rs).\n\n\
+     examples/straggler_mitigation.rs).  `hermes exp scale --jobs 10000`\n\
+     streams a seed×framework×churn grid through the bounded-memory\n\
+     sweep engine (DESIGN.md §13).\n\n\
      Try `hermes <cmd> --help`."
         .to_string()
 }
@@ -145,11 +147,16 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
 
 fn cmd_exp(args: &[String]) -> Result<(), String> {
     let cmd = Command::new("hermes exp", "regenerate a paper table/figure")
-        .pos("which", "fig1 fig2 fig3 fig4 fig11 fig12 fig13 fig14 table3 faults all")
+        .pos(
+            "which",
+            "fig1 fig2 fig3 fig4 fig11 fig12 fig13 fig14 table3 faults scale all",
+        )
         .opt("model", "mock", "mock | cnn | alexnet (compute backend)")
         .opt("artifacts", "artifacts", "artifacts directory")
-        .opt("threads", "0", "sweep threads for table3 (0 = one per core)")
-        .opt("out", "results", "output directory");
+        .opt("threads", "0", "sweep threads for table3/faults/scale (0 = one per core)")
+        .opt("jobs", "1000", "grid size for `scale` (seed×framework×churn jobs)")
+        .opt("out", "results", "output directory")
+        .flag("collect", "scale: collect-all instead of streaming (A/B baseline)");
     let m = cmd.parse(args)?;
     let out = PathBuf::from(m.get("out"));
     let model = m.get("model");
@@ -172,6 +179,15 @@ fn cmd_exp(args: &[String]) -> Result<(), String> {
             threads,
             &exp::FAULT_SWEEP_RATES,
             &hermes_dml::frameworks::ALL,
+        )
+        .map(|_| ()),
+        "scale" => exp::scale_sweep(
+            &out,
+            model,
+            &arts,
+            m.get_usize("jobs")?,
+            threads,
+            m.has("collect"),
         )
         .map(|_| ()),
         "all" => exp::run_all(&out, model, &arts),

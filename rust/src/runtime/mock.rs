@@ -7,12 +7,25 @@
 //! this runtime: real learning dynamics, zero XLA dependency, ~µs per
 //! step.  The input is a flattened (4, 4, 2) "image" (32 features, 10
 //! classes ⇒ 330 parameters).
+//!
+//! **Fast path (DESIGN.md §13).**  The forward (logits GEMM), the
+//! rank-1 gradient accumulation and the fused SGD(M) update run through
+//! the runtime-dispatched [`kernels`] (scalar ↔ AVX2, bit-identical by
+//! construction, `HERMES_FORCE_SCALAR` respected), and every scratch
+//! buffer is reused: per-class probabilities live in a runtime-owned
+//! buffer, the gradient accumulator is a caller-leased [`ParamVec`]
+//! (see [`ModelRuntime::train_step_in_place`]).  Steady-state worker
+//! stepping therefore performs **zero heap allocations** — asserted by
+//! `tests/alloc_hotpath.rs`.  The allocating [`ModelRuntime::train_step`]
+//! remains as the seed path (fresh output buffers per call) and runs
+//! the exact same kernel sequence, so both paths produce identical
+//! bits.
 
 use anyhow::{bail, Result};
 
 use super::manifest::ModelMeta;
 use super::{EvalOut, ModelRuntime, TrainOut};
-use crate::tensor::{ParamVec, Tensor};
+use crate::tensor::{kernels, ParamVec};
 
 pub const MOCK_FEATURES: usize = 32;
 pub const MOCK_CLASSES: usize = 10;
@@ -21,6 +34,10 @@ pub const MOCK_CLASSES: usize = 10;
 pub struct MockRuntime {
     meta: ModelMeta,
     execs: u64,
+    /// Per-class probability scratch (`batch × MOCK_CLASSES`), reused
+    /// across steps and evals; doubles as the scaled grad-logits buffer
+    /// inside a train step.
+    probs: Vec<f32>,
 }
 
 impl Default for MockRuntime {
@@ -45,32 +62,32 @@ impl MockRuntime {
                 eval_batch: 128,
             },
             execs: 0,
+            probs: Vec::new(),
         }
     }
 
-    /// logits[b] = x[b]·W + bias; returns (mean xent loss, #correct,
-    /// per-class probabilities for the gradient).
-    fn forward(
+    /// logits\[b\] = x\[b\]·W + bias (dispatched GEMM), then softmax +
+    /// xent in place; returns (mean xent loss, #correct) with the
+    /// per-class probabilities left in `probs` for the gradient.
+    ///
+    /// The softmax/loss reductions stay scalar-ordered (row max, exp,
+    /// denominator sum, log) — reassociating them would change bits,
+    /// exactly as with `ParamVec::l2_norm` (DESIGN.md §12).
+    fn forward_into(
         params: &ParamVec,
         x: &[f32],
         y: &[i32],
         batch: usize,
-    ) -> (f32, f32, Vec<f32>) {
+        probs: &mut Vec<f32>,
+    ) -> (f32, f32) {
         let w = params.tensors[0].data();
         let b = params.tensors[1].data();
-        let mut probs = vec![0f32; batch * MOCK_CLASSES];
+        probs.resize(batch * MOCK_CLASSES, 0.0);
+        kernels::gemm_bias(probs, x, w, b, batch, MOCK_FEATURES, MOCK_CLASSES);
         let mut loss = 0f64;
         let mut correct = 0f32;
         for i in 0..batch {
-            let xi = &x[i * MOCK_FEATURES..(i + 1) * MOCK_FEATURES];
             let row = &mut probs[i * MOCK_CLASSES..(i + 1) * MOCK_CLASSES];
-            for (c, r) in row.iter_mut().enumerate() {
-                let mut z = b[c];
-                for (f, &xv) in xi.iter().enumerate() {
-                    z += xv * w[f * MOCK_CLASSES + c];
-                }
-                *r = z;
-            }
             // softmax + xent
             let max = row.iter().cloned().fold(f32::MIN, f32::max);
             let mut denom = 0f32;
@@ -93,7 +110,78 @@ impl MockRuntime {
                 correct += 1.0;
             }
         }
-        ((loss / batch as f64) as f32, correct, probs)
+        ((loss / batch as f64) as f32, correct)
+    }
+
+    /// The shared step body: forward, gradient accumulation into
+    /// `grad`, fused SGD(M) applied to `p`/`m` in place.  Both the
+    /// allocating seed path ([`ModelRuntime::train_step`]) and the
+    /// pooled fast path ([`ModelRuntime::train_step_in_place`]) call
+    /// this, which is what makes them bit-identical.
+    #[allow(clippy::too_many_arguments)]
+    fn step_core(
+        &mut self,
+        p: &mut ParamVec,
+        m: &mut ParamVec,
+        grad: &mut ParamVec,
+        x: &[f32],
+        y: &[i32],
+        mbs: usize,
+        lr: f32,
+        mu: f32,
+    ) -> (f32, f32) {
+        let (loss, correct) = Self::forward_into(p, x, y, mbs, &mut self.probs);
+
+        // grad_logits = probs − one_hot(y), scaled by 1/mbs in place
+        // (the probabilities are not needed after this), with the bias
+        // gradient accumulated in the same pass.
+        grad.resize_like(p);
+        grad.fill(0.0);
+        let (gw_t, gb_t) = grad.tensors.split_at_mut(1);
+        let gw = gw_t[0].data_mut();
+        let gb = gb_t[0].data_mut();
+        let inv = 1.0 / mbs as f32;
+        for i in 0..mbs {
+            let row = &mut self.probs[i * MOCK_CLASSES..(i + 1) * MOCK_CLASSES];
+            for (c, r) in row.iter_mut().enumerate() {
+                let mut g = *r;
+                if y[i] as usize == c {
+                    g -= 1.0;
+                }
+                g *= inv;
+                *r = g;
+                gb[c] += g;
+            }
+        }
+        // Weight gradient: one rank-1 update per sample, in sample
+        // order (fixes the per-element accumulation order).
+        for i in 0..mbs {
+            kernels::rank1_acc(
+                gw,
+                &x[i * MOCK_FEATURES..(i + 1) * MOCK_FEATURES],
+                &self.probs[i * MOCK_CLASSES..(i + 1) * MOCK_CLASSES],
+                MOCK_CLASSES,
+            );
+        }
+
+        // SGD with momentum, matching the L2 train step semantics:
+        // m ← mu·m + g;  p ← p − lr·m.
+        for ((pt, mt), gt) in p
+            .tensors
+            .iter_mut()
+            .zip(m.tensors.iter_mut())
+            .zip(&grad.tensors)
+        {
+            kernels::sgd_momentum(pt.data_mut(), mt.data_mut(), gt.data(), lr, mu);
+        }
+        (loss, correct)
+    }
+
+    fn check_batch(&self, x: &[f32], y: &[i32], mbs: usize) -> Result<()> {
+        if x.len() != mbs * MOCK_FEATURES || y.len() != mbs {
+            bail!("mock: bad batch ({} x, {} y, mbs {mbs})", x.len(), y.len());
+        }
+        Ok(())
     }
 }
 
@@ -112,61 +200,33 @@ impl ModelRuntime for MockRuntime {
         lr: f32,
         mu: f32,
     ) -> Result<TrainOut> {
-        if x.len() != mbs * MOCK_FEATURES || y.len() != mbs {
-            bail!("mock: bad batch ({} x, {} y, mbs {mbs})", x.len(), y.len());
-        }
+        self.check_batch(x, y, mbs)?;
         self.execs += 1;
-        let (loss, correct, probs) = Self::forward(params, x, y, mbs);
+        // Seed path: fresh output + gradient buffers every call.
+        let mut p = params.clone();
+        let mut m = momentum.clone();
+        let mut grad = ParamVec::zeros_like(params);
+        let (loss, correct) = self.step_core(&mut p, &mut m, &mut grad, x, y, mbs, lr, mu);
+        Ok(TrainOut { params: p, momentum: m, loss, correct })
+    }
 
-        // grad_logits = probs − one_hot(y), averaged over the batch.
-        let w = params.tensors[0].data();
-        let b = params.tensors[1].data();
-        let mut gw = vec![0f32; w.len()];
-        let mut gb = vec![0f32; b.len()];
-        let inv = 1.0 / mbs as f32;
-        for i in 0..mbs {
-            let xi = &x[i * MOCK_FEATURES..(i + 1) * MOCK_FEATURES];
-            for c in 0..MOCK_CLASSES {
-                let mut g = probs[i * MOCK_CLASSES + c];
-                if y[i] as usize == c {
-                    g -= 1.0;
-                }
-                g *= inv;
-                gb[c] += g;
-                for (f, &xv) in xi.iter().enumerate() {
-                    gw[f * MOCK_CLASSES + c] += g * xv;
-                }
-            }
-        }
-
-        // SGD with momentum, matching the L2 train step semantics.
-        let mw = momentum.tensors[0].data();
-        let mb = momentum.tensors[1].data();
-        let new_mw: Vec<f32> =
-            mw.iter().zip(&gw).map(|(m, g)| mu * m + g).collect();
-        let new_mb: Vec<f32> =
-            mb.iter().zip(&gb).map(|(m, g)| mu * m + g).collect();
-        let new_w: Vec<f32> =
-            w.iter().zip(&new_mw).map(|(p, v)| p - lr * v).collect();
-        let new_b: Vec<f32> =
-            b.iter().zip(&new_mb).map(|(p, v)| p - lr * v).collect();
-
-        Ok(TrainOut {
-            params: ParamVec {
-                tensors: vec![
-                    Tensor::new(vec![MOCK_FEATURES, MOCK_CLASSES], new_w),
-                    Tensor::new(vec![MOCK_CLASSES], new_b),
-                ],
-            },
-            momentum: ParamVec {
-                tensors: vec![
-                    Tensor::new(vec![MOCK_FEATURES, MOCK_CLASSES], new_mw),
-                    Tensor::new(vec![MOCK_CLASSES], new_mb),
-                ],
-            },
-            loss,
-            correct,
-        })
+    #[allow(clippy::too_many_arguments)]
+    fn train_step_in_place(
+        &mut self,
+        params: &mut ParamVec,
+        momentum: &mut ParamVec,
+        grad_scratch: &mut ParamVec,
+        x: &[f32],
+        y: &[i32],
+        mbs: usize,
+        lr: f32,
+        mu: f32,
+    ) -> Result<EvalOut> {
+        self.check_batch(x, y, mbs)?;
+        self.execs += 1;
+        let (loss, correct) =
+            self.step_core(params, momentum, grad_scratch, x, y, mbs, lr, mu);
+        Ok(EvalOut { loss, correct })
     }
 
     fn eval_step(&mut self, params: &ParamVec, x: &[f32], y: &[i32]) -> Result<EvalOut> {
@@ -175,7 +235,7 @@ impl ModelRuntime for MockRuntime {
             bail!("mock: bad eval batch");
         }
         self.execs += 1;
-        let (loss, correct, _) = Self::forward(params, x, y, b);
+        let (loss, correct) = Self::forward_into(params, x, y, b, &mut self.probs);
         Ok(EvalOut { loss, correct })
     }
 
@@ -188,6 +248,8 @@ impl ModelRuntime for MockRuntime {
 mod tests {
     use super::*;
     use crate::runtime::init_params;
+    use crate::tensor::kernels::{with_backend, Backend};
+    use crate::tensor::Tensor;
     use crate::util::rng::Xoshiro256pp;
 
     /// Linearly separable toy data: class templates + noise.
@@ -286,9 +348,55 @@ mod tests {
         let ev = rt.eval_step(&params, &x, &y).unwrap();
         // Train step with lr=0 on the same 128 wouldn't be allowed
         // (mbs 128 is compiled), so compare against forward directly.
-        let (loss, correct, _) = MockRuntime::forward(&params, &x, &y, 128);
+        let mut probs = Vec::new();
+        let (loss, correct) = MockRuntime::forward_into(&params, &x, &y, 128, &mut probs);
         assert_eq!(ev.loss, loss);
         assert_eq!(ev.correct, correct);
+    }
+
+    #[test]
+    fn in_place_step_bit_identical_to_allocating_step() {
+        // The pooled fast path and the allocating seed path must agree
+        // bit-for-bit on every backend — over multiple chained steps so
+        // divergence would compound and be caught.
+        for backend in [Backend::Scalar, Backend::Simd] {
+            with_backend(backend, || {
+                let mut rt_a = MockRuntime::new();
+                let mut rt_b = MockRuntime::new();
+                let mut rng = Xoshiro256pp::seed_from_u64(9);
+                let init = init_params(rt_a.meta(), 5);
+                // Seed path state.
+                let mut p_a = init.clone();
+                let mut m_a = ParamVec::zeros_like(&init);
+                // Fast path state (updated in place).
+                let mut p_b = init.clone();
+                let mut m_b = ParamVec::zeros_like(&init);
+                let mut grad = ParamVec::default();
+                for _ in 0..10 {
+                    let (x, y, _) = toy_batch(&mut rng, 16);
+                    let out = rt_a
+                        .train_step(&p_a, &m_a, &x, &y, 16, 0.4, 0.9)
+                        .unwrap();
+                    p_a = out.params;
+                    m_a = out.momentum;
+                    let st = rt_b
+                        .train_step_in_place(&mut p_b, &mut m_b, &mut grad, &x, &y, 16, 0.4, 0.9)
+                        .unwrap();
+                    assert_eq!(st.loss.to_bits(), out.loss.to_bits());
+                    assert_eq!(st.correct.to_bits(), out.correct.to_bits());
+                    for (ta, tb) in p_a.tensors.iter().zip(&p_b.tensors) {
+                        for (a, b) in ta.data().iter().zip(tb.data()) {
+                            assert_eq!(a.to_bits(), b.to_bits());
+                        }
+                    }
+                    for (ta, tb) in m_a.tensors.iter().zip(&m_b.tensors) {
+                        for (a, b) in ta.data().iter().zip(tb.data()) {
+                            assert_eq!(a.to_bits(), b.to_bits());
+                        }
+                    }
+                }
+            });
+        }
     }
 
     #[test]
@@ -298,6 +406,12 @@ mod tests {
         let mom = ParamVec::zeros_like(&params);
         assert!(rt
             .train_step(&params, &mom, &[0.0; 10], &[0; 2], 2, 0.1, 0.0)
+            .is_err());
+        let mut p = params.clone();
+        let mut m = mom.clone();
+        let mut g = ParamVec::default();
+        assert!(rt
+            .train_step_in_place(&mut p, &mut m, &mut g, &[0.0; 10], &[0; 2], 2, 0.1, 0.0)
             .is_err());
         assert!(rt.eval_step(&params, &[0.0; 10], &[0; 2]).is_err());
     }

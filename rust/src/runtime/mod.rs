@@ -70,6 +70,37 @@ pub trait ModelRuntime {
         mu: f32,
     ) -> Result<TrainOut>;
 
+    /// In-place train step — the worker fast path (DESIGN.md §13):
+    /// `params`/`momentum` are updated in place and `grad_scratch` (a
+    /// pool-leased buffer shaped like the params) absorbs the gradient
+    /// accumulation, so a steady-state step performs zero heap
+    /// allocations when the runtime supports it.
+    ///
+    /// The default implementation is the *allocating seed path*: it
+    /// delegates to [`ModelRuntime::train_step`] and copies the fresh
+    /// buffers back — bit-identical results by construction (the
+    /// property tests in `tests/coordinator_props.rs` pin this), just
+    /// slower.  Runtimes with a native in-place step (the mock)
+    /// override it.
+    #[allow(clippy::too_many_arguments)]
+    fn train_step_in_place(
+        &mut self,
+        params: &mut ParamVec,
+        momentum: &mut ParamVec,
+        grad_scratch: &mut ParamVec,
+        x: &[f32],
+        y: &[i32],
+        mbs: usize,
+        lr: f32,
+        mu: f32,
+    ) -> Result<EvalOut> {
+        let _ = grad_scratch;
+        let out = self.train_step(params, momentum, x, y, mbs, lr, mu)?;
+        params.copy_from(&out.params);
+        momentum.copy_from(&out.momentum);
+        Ok(EvalOut { loss: out.loss, correct: out.correct })
+    }
+
     /// Evaluate on one probe batch of exactly `meta().eval_batch`
     /// samples; returns mean loss and #correct.
     fn eval_step(&mut self, params: &ParamVec, x: &[f32], y: &[i32]) -> Result<EvalOut>;

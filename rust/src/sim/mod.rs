@@ -55,10 +55,15 @@ impl Eq for Scheduled {}
 impl Ord for Scheduled {
     fn cmp(&self, other: &Self) -> Ordering {
         // Min-heap: smaller time first, then smaller seq (FIFO ties).
+        // `total_cmp` keeps this a *total* order for every f64 bit
+        // pattern — the old `partial_cmp(..).unwrap_or(Equal)` made a
+        // NaN time compare Equal to everything, which is intransitive
+        // (NaN == a, NaN == b, a < b) and lets a BinaryHeap silently
+        // misplace events.  Non-finite times are additionally rejected
+        // at `push_at`; this is the defense in depth.
         other
             .time
-            .partial_cmp(&self.time)
-            .unwrap_or(Ordering::Equal)
+            .total_cmp(&self.time)
             .then(other.seq.cmp(&self.seq))
     }
 }
@@ -80,6 +85,14 @@ pub struct SimQueue {
 impl SimQueue {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// A queue whose heap is pre-sized for `events` concurrently
+    /// scheduled events — drivers keep roughly a handful of events in
+    /// flight per worker, so sizing from the cluster's worker count
+    /// avoids every heap regrowth on the hot path.
+    pub fn with_capacity(events: usize) -> Self {
+        SimQueue { heap: BinaryHeap::with_capacity(events), ..Self::default() }
     }
 
     /// Current virtual time (seconds).
@@ -105,8 +118,16 @@ impl SimQueue {
         self.push_at(self.now + delay, ev);
     }
 
-    /// Schedule `ev` at absolute virtual time `time` (≥ now).
+    /// Schedule `ev` at absolute virtual time `time` (≥ now, finite).
+    ///
+    /// Non-finite times are a driver bug (a cost model or fault plan
+    /// produced NaN/inf): rejected by a debug assertion; in release
+    /// builds the `max` below clamps NaN to `now` (IEEE max ignores
+    /// NaN) and `total_cmp` keeps the heap order well-defined even for
+    /// an infinite time, so a bad event can delay itself but never
+    /// corrupt the ordering of the others.
     pub fn push_at(&mut self, time: f64, ev: Ev) {
+        debug_assert!(time.is_finite(), "non-finite event time {time}");
         debug_assert!(time >= self.now, "time travel: {time} < {}", self.now);
         self.heap.push(Scheduled { time: time.max(self.now), seq: self.seq, ev });
         self.seq += 1;
@@ -180,6 +201,70 @@ mod tests {
             }
         }
         assert_eq!(n, 50);
+    }
+
+    #[test]
+    fn scheduled_ordering_is_total_even_for_nonfinite_times() {
+        // The heap order must be a total order for *every* time bit
+        // pattern — the old partial_cmp fallback made NaN Equal to
+        // everything, which is intransitive.  Antisymmetry, reflexive
+        // equality and sort-consistency over a worst-case set:
+        let times = [
+            f64::NEG_INFINITY,
+            -0.0,
+            0.0,
+            1.0,
+            f64::MAX,
+            f64::INFINITY,
+            f64::NAN,
+        ];
+        let evs: Vec<Scheduled> = times
+            .iter()
+            .enumerate()
+            .map(|(i, &t)| Scheduled {
+                time: t,
+                seq: i as u64,
+                ev: Ev::TrainDone { worker: i },
+            })
+            .collect();
+        for (i, a) in evs.iter().enumerate() {
+            for (j, b) in evs.iter().enumerate() {
+                assert_eq!(a.cmp(b), b.cmp(a).reverse(), "antisymmetry {i},{j}");
+                if i == j {
+                    assert_eq!(a.cmp(b), Ordering::Equal, "reflexivity {i}");
+                }
+            }
+        }
+        // Same time ⇒ seq breaks the tie (smaller seq = greater in the
+        // max-heap, i.e. popped first).
+        let x = Scheduled { time: 2.0, seq: 9, ev: Ev::TrainDone { worker: 0 } };
+        let y = Scheduled { time: 2.0, seq: 10, ev: Ev::TrainDone { worker: 1 } };
+        assert_eq!(x.cmp(&y), Ordering::Greater, "max-heap: smaller seq wins");
+        // A sort under this Ord must neither panic nor violate the
+        // comparator (std's sort detects inconsistent Ord in debug).
+        let mut v = evs;
+        v.sort();
+        for w in v.windows(2) {
+            assert_ne!(w[0].cmp(&w[1]), Ordering::Greater);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "non-finite event time")]
+    #[cfg(debug_assertions)]
+    fn push_at_rejects_non_finite_times_in_debug() {
+        let mut q = SimQueue::new();
+        q.push_at(f64::INFINITY, Ev::TrainDone { worker: 0 });
+    }
+
+    #[test]
+    fn with_capacity_behaves_like_new() {
+        let mut q = SimQueue::with_capacity(64);
+        assert!(q.is_empty());
+        assert_eq!(q.now(), 0.0);
+        q.push_in(1.0, Ev::TrainDone { worker: 3 });
+        assert_eq!(q.pop().unwrap().1.worker(), 3);
+        assert_eq!(q.processed(), 1);
     }
 
     #[test]

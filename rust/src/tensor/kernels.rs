@@ -1,10 +1,12 @@
 //! Runtime-dispatched compute kernels for the aggregation algebra
-//! (DESIGN.md §12).  Every elementwise hot op — `axpy`, `scale`,
-//! `weighted_sum`, `delta_over_eta`, `copy`, `fill`, and the f16/f32
-//! wire-codec inner loops — exists twice: a portable scalar loop and an
-//! x86_64 AVX2 (+F16C for the f16 encode) implementation selected once
-//! at runtime via `is_x86_feature_detected!`.  No new dependencies:
-//! only `std::arch`.
+//! (DESIGN.md §12) and the worker training fast path (DESIGN.md §13).
+//! Every elementwise hot op — `axpy`, `scale`, `weighted_sum`,
+//! `delta_over_eta`, `copy`, `fill`, the f16/f32 wire-codec inner
+//! loops, and the worker-compute trio `gemm_bias` / `rank1_acc` /
+//! `sgd_momentum` — exists twice: a portable scalar loop and an x86_64
+//! AVX2 (+F16C for the f16 encode) implementation selected once at
+//! runtime via `is_x86_feature_detected!`.  No new dependencies: only
+//! `std::arch`.
 //!
 //! **Bit-identity contract.**  The SIMD paths perform the *same*
 //! per-element operations in the same order as the scalar loops —
@@ -213,6 +215,64 @@ pub fn f16_decode(src: &[u8], dst: &mut [f32]) {
     }
 }
 
+// ------------------------------------------- worker-compute kernels
+//
+// The worker fast path (DESIGN.md §13): the softmax-regression forward,
+// the rank-1 gradient accumulation and the fused SGD(M) update of
+// `runtime::MockRuntime`.  SIMD lanes vectorize the *class/column*
+// axis; the per-element operation sequence (accumulation order over
+// features, mul-then-add, no FMA) is exactly the scalar reference's,
+// so backends are bit-identical like every other kernel in this file.
+
+/// out\[r·cols + c\] = bias\[c\] + Σ_f x\[r·feat + f\] · w\[f·cols + c\],
+/// accumulated in `f` index order (the scalar reference order of the
+/// softmax-regression forward).
+pub fn gemm_bias(
+    out: &mut [f32],
+    x: &[f32],
+    w: &[f32],
+    bias: &[f32],
+    rows: usize,
+    feat: usize,
+    cols: usize,
+) {
+    debug_assert_eq!(out.len(), rows * cols);
+    debug_assert_eq!(x.len(), rows * feat);
+    debug_assert_eq!(w.len(), feat * cols);
+    debug_assert_eq!(bias.len(), cols);
+    match active_backend() {
+        #[cfg(target_arch = "x86_64")]
+        Backend::Simd => unsafe { avx2::gemm_bias(out, x, w, bias, rows, feat, cols) },
+        _ => scalar::gemm_bias(out, x, w, bias, rows, feat, cols),
+    }
+}
+
+/// gw\[f·cols + c\] += g\[c\] · x\[f\] — one sample's rank-1 gradient
+/// update (`feat = x.len()`).  Each output element receives exactly one
+/// mul-then-add per call, so the caller's sample order fixes the
+/// accumulation order.
+pub fn rank1_acc(gw: &mut [f32], x: &[f32], g: &[f32], cols: usize) {
+    debug_assert_eq!(gw.len(), x.len() * cols);
+    debug_assert_eq!(g.len(), cols);
+    match active_backend() {
+        #[cfg(target_arch = "x86_64")]
+        Backend::Simd => unsafe { avx2::rank1_acc(gw, x, g, cols) },
+        _ => scalar::rank1_acc(gw, x, g, cols),
+    }
+}
+
+/// Fused SGD-with-momentum update, elementwise and in place:
+/// m\[i\] = mu·m\[i\] + g\[i\];  p\[i\] = p\[i\] − lr·m\[i\].
+pub fn sgd_momentum(p: &mut [f32], m: &mut [f32], g: &[f32], lr: f32, mu: f32) {
+    debug_assert_eq!(p.len(), m.len());
+    debug_assert_eq!(p.len(), g.len());
+    match active_backend() {
+        #[cfg(target_arch = "x86_64")]
+        Backend::Simd => unsafe { avx2::sgd_momentum(p, m, g, lr, mu) },
+        _ => scalar::sgd_momentum(p, m, g, lr, mu),
+    }
+}
+
 /// Serialize `xs` as little-endian f32 bytes (`dst.len() == 4*xs.len()`).
 /// On little-endian targets this is one memcpy regardless of backend;
 /// the portable loop only runs on big-endian hosts.
@@ -294,6 +354,44 @@ mod scalar {
     pub fn delta_over_eta(dst: &mut [f32], a: &[f32], b: &[f32], eta: f32) {
         for ((z, x), y) in dst.iter_mut().zip(a).zip(b) {
             *z = (x - y) / eta;
+        }
+    }
+
+    pub fn gemm_bias(
+        out: &mut [f32],
+        x: &[f32],
+        w: &[f32],
+        bias: &[f32],
+        rows: usize,
+        feat: usize,
+        cols: usize,
+    ) {
+        for r in 0..rows {
+            let xi = &x[r * feat..(r + 1) * feat];
+            let row = &mut out[r * cols..(r + 1) * cols];
+            row.copy_from_slice(bias);
+            for (f, &xv) in xi.iter().enumerate() {
+                let wr = &w[f * cols..(f + 1) * cols];
+                for (z, &wv) in row.iter_mut().zip(wr) {
+                    *z += xv * wv;
+                }
+            }
+        }
+    }
+
+    pub fn rank1_acc(gw: &mut [f32], x: &[f32], g: &[f32], cols: usize) {
+        for (f, &xv) in x.iter().enumerate() {
+            let row = &mut gw[f * cols..(f + 1) * cols];
+            for (z, &gv) in row.iter_mut().zip(g) {
+                *z += gv * xv;
+            }
+        }
+    }
+
+    pub fn sgd_momentum(p: &mut [f32], m: &mut [f32], g: &[f32], lr: f32, mu: f32) {
+        for ((p, m), &g) in p.iter_mut().zip(m.iter_mut()).zip(g) {
+            *m = mu * *m + g;
+            *p -= lr * *m;
         }
     }
 
@@ -450,6 +548,98 @@ mod avx2 {
         }
     }
 
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn gemm_bias(
+        out: &mut [f32],
+        x: &[f32],
+        w: &[f32],
+        bias: &[f32],
+        rows: usize,
+        feat: usize,
+        cols: usize,
+    ) {
+        let op = out.as_mut_ptr();
+        let xp = x.as_ptr();
+        let wp = w.as_ptr();
+        let bp = bias.as_ptr();
+        for r in 0..rows {
+            let xr = xp.add(r * feat);
+            let or = op.add(r * cols);
+            let mut c = 0;
+            while c + 8 <= cols {
+                // acc starts at the bias lane block; every feature adds
+                // x[f]·w[f][c..c+8] as an explicit mul then add — the
+                // same two roundings, in the same f order, as the
+                // scalar accumulation.
+                let mut acc = _mm256_loadu_ps(bp.add(c));
+                for f in 0..feat {
+                    let xv = _mm256_set1_ps(*xr.add(f));
+                    let wv = _mm256_loadu_ps(wp.add(f * cols + c));
+                    acc = _mm256_add_ps(acc, _mm256_mul_ps(xv, wv));
+                }
+                _mm256_storeu_ps(or.add(c), acc);
+                c += 8;
+            }
+            while c < cols {
+                let mut z = bias[c];
+                for f in 0..feat {
+                    z += *xr.add(f) * *wp.add(f * cols + c);
+                }
+                *or.add(c) = z;
+                c += 1;
+            }
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn rank1_acc(gw: &mut [f32], x: &[f32], g: &[f32], cols: usize) {
+        let gwp = gw.as_mut_ptr();
+        let gp = g.as_ptr();
+        for (f, &xv) in x.iter().enumerate() {
+            let base = f * cols;
+            let vx = _mm256_set1_ps(xv);
+            let mut c = 0;
+            while c + 8 <= cols {
+                let gv = _mm256_loadu_ps(gp.add(c));
+                let acc = _mm256_loadu_ps(gwp.add(base + c));
+                _mm256_storeu_ps(
+                    gwp.add(base + c),
+                    _mm256_add_ps(acc, _mm256_mul_ps(gv, vx)),
+                );
+                c += 8;
+            }
+            while c < cols {
+                *gwp.add(base + c) += g[c] * xv;
+                c += 1;
+            }
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn sgd_momentum(p: &mut [f32], m: &mut [f32], g: &[f32], lr: f32, mu: f32) {
+        let n = p.len().min(m.len()).min(g.len());
+        let vmu = _mm256_set1_ps(mu);
+        let vlr = _mm256_set1_ps(lr);
+        let pp = p.as_mut_ptr();
+        let mp = m.as_mut_ptr();
+        let gp = g.as_ptr();
+        let mut i = 0;
+        while i + 8 <= n {
+            let mv = _mm256_loadu_ps(mp.add(i));
+            let gv = _mm256_loadu_ps(gp.add(i));
+            let nm = _mm256_add_ps(_mm256_mul_ps(vmu, mv), gv);
+            _mm256_storeu_ps(mp.add(i), nm);
+            let pv = _mm256_loadu_ps(pp.add(i));
+            _mm256_storeu_ps(pp.add(i), _mm256_sub_ps(pv, _mm256_mul_ps(vlr, nm)));
+            i += 8;
+        }
+        while i < n {
+            m[i] = mu * m[i] + g[i];
+            p[i] -= lr * m[i];
+            i += 1;
+        }
+    }
+
     /// f16 → f32 via the exact "magic multiply": expand the 15
     /// value bits into the f32 exponent/mantissa position and multiply
     /// by 2¹¹² (a power of two — exact for normals *and* subnormals),
@@ -586,6 +776,71 @@ mod tests {
                 })
             };
             assert_eq!(run(Backend::Scalar), run(Backend::Simd), "n={n}");
+        }
+    }
+
+    #[test]
+    fn worker_kernels_bit_identical_scalar_vs_simd() {
+        if !simd_available() {
+            return;
+        }
+        let mut rng = Xoshiro256pp::seed_from_u64(0x90B5);
+        // Shapes cover single lanes, full 8-lane blocks and remainders
+        // on the vectorized (column) axis.
+        for &(rows, feat, cols) in &[
+            (1usize, 1usize, 1usize),
+            (3, 7, 8),
+            (16, 32, 10),
+            (2, 33, 17),
+            (5, 8, 9),
+        ] {
+            let x = rand_vec(&mut rng, rows * feat);
+            let w = rand_vec(&mut rng, feat * cols);
+            let bias = rand_vec(&mut rng, cols);
+            let g = rand_vec(&mut rng, cols);
+            let p0 = rand_vec(&mut rng, feat * cols);
+            let m0 = rand_vec(&mut rng, feat * cols);
+            let (lr, mu) = (0.05f32, 0.9f32);
+
+            let run = |backend: Backend| -> Vec<Vec<u32>> {
+                with_backend(backend, || {
+                    let mut fwd = vec![0.0f32; rows * cols];
+                    gemm_bias(&mut fwd, &x, &w, &bias, rows, feat, cols);
+                    let mut gw = vec![0.0f32; feat * cols];
+                    for r in 0..rows {
+                        rank1_acc(&mut gw, &x[r * feat..(r + 1) * feat], &g, cols);
+                    }
+                    let mut p = p0.clone();
+                    let mut m = m0.clone();
+                    sgd_momentum(&mut p, &mut m, &gw, lr, mu);
+                    vec![bits(&fwd), bits(&gw), bits(&p), bits(&m)]
+                })
+            };
+            assert_eq!(
+                run(Backend::Scalar),
+                run(Backend::Simd),
+                "rows={rows} feat={feat} cols={cols}"
+            );
+        }
+    }
+
+    #[test]
+    fn gemm_bias_matches_naive_reference() {
+        let mut rng = Xoshiro256pp::seed_from_u64(0x6E44);
+        let (rows, feat, cols) = (4usize, 6usize, 5usize);
+        let x = rand_vec(&mut rng, rows * feat);
+        let w = rand_vec(&mut rng, feat * cols);
+        let bias = rand_vec(&mut rng, cols);
+        let mut got = vec![0.0f32; rows * cols];
+        gemm_bias(&mut got, &x, &w, &bias, rows, feat, cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                let mut z = bias[c];
+                for f in 0..feat {
+                    z += x[r * feat + f] * w[f * cols + c];
+                }
+                assert_eq!(got[r * cols + c].to_bits(), z.to_bits(), "({r},{c})");
+            }
         }
     }
 

@@ -13,7 +13,7 @@ use crate::data::{BatchSampler, Dataset, Probe, Shard};
 use crate::gup::{GateDecision, Gup};
 use crate::model::ModelState;
 use crate::runtime::ModelRuntime;
-use crate::tensor::ParamVec;
+use crate::tensor::{BufferPool, ParamVec};
 
 /// Per-worker training state.
 #[derive(Debug, Clone)]
@@ -37,9 +37,6 @@ pub struct WorkerCore {
     /// Driver flag: the last iteration's gate fired and the push is in
     /// flight (set by event-driven drivers between compute and send).
     pub last_push_pending: bool,
-    // Hot-path scratch buffers (avoid per-batch allocation).
-    scratch_x: Vec<f32>,
-    scratch_y: Vec<i32>,
 }
 
 /// What one local iteration produced.
@@ -81,8 +78,6 @@ impl WorkerCore {
             last_loss: f32::INFINITY,
             last_correct: 0.0,
             last_push_pending: false,
-            scratch_x: Vec::new(),
-            scratch_y: Vec::new(),
         }
     }
 
@@ -102,12 +97,21 @@ impl WorkerCore {
 
     /// Run one local iteration: `min(E·DSS/MBS, steps_cap)` real train
     /// steps + one probe eval + the GUP decision.
+    ///
+    /// The fast path (DESIGN.md §13): every training step reads a
+    /// contiguous batch view out of the sampler's pre-gathered slab and
+    /// updates the model in place through
+    /// [`ModelRuntime::train_step_in_place`], with the gradient
+    /// accumulator leased from `pool` — after warmup the whole
+    /// iteration (steps + probe eval) performs **zero heap
+    /// allocations** (`tests/alloc_hotpath.rs`).
     #[allow(clippy::too_many_arguments)]
     pub fn local_iteration(
         &mut self,
         rt: &mut dyn ModelRuntime,
         ds: &Dataset,
         probe: &Probe,
+        pool: &mut BufferPool,
         epochs: usize,
         lr: f32,
         mu: f32,
@@ -118,22 +122,32 @@ impl WorkerCore {
             ((epochs * self.dss) as f64 / self.mbs as f64).ceil().max(1.0) as usize;
         let steps_run = steps_modeled.min(steps_cap).max(1);
 
+        self.sampler.ensure_slab(ds);
+        let mut grad = pool.acquire_like(&self.state.params);
         let mut train_loss = 0f32;
+        let mut step_err = None;
         for _ in 0..steps_run {
-            let idx = self.sampler.next_batch(exec_mbs);
-            ds.gather_into(&idx, &mut self.scratch_x, &mut self.scratch_y);
-            let out = rt.train_step(
-                &self.state.params,
-                &self.state.momentum,
-                &self.scratch_x,
-                &self.scratch_y,
+            let (x, y) = self.sampler.next_batch_slices(exec_mbs);
+            match rt.train_step_in_place(
+                &mut self.state.params,
+                &mut self.state.momentum,
+                &mut grad,
+                x,
+                y,
                 exec_mbs,
                 lr,
                 mu,
-            )?;
-            self.state.params = out.params;
-            self.state.momentum = out.momentum;
-            train_loss = out.loss;
+            ) {
+                Ok(st) => train_loss = st.loss,
+                Err(e) => {
+                    step_err = Some(e);
+                    break;
+                }
+            }
+        }
+        pool.release(grad);
+        if let Some(e) = step_err {
+            return Err(e);
         }
 
         let ev = rt.eval_step(&self.state.params, &probe.x, &probe.y)?;
@@ -178,7 +192,7 @@ mod tests {
     use crate::gup::Gup;
     use crate::runtime::{init_params, MockRuntime};
 
-    fn setup() -> (MockRuntime, Dataset, Probe, WorkerCore) {
+    fn setup() -> (MockRuntime, Dataset, Probe, BufferPool, WorkerCore) {
         let rt = MockRuntime::new();
         let ds = Dataset::synth(DataKind::MockSet, 1200, 21);
         let (train, test) = ds.split(0.85, 21);
@@ -188,17 +202,17 @@ mod tests {
         let init = init_params(rt.meta(), 21);
         let gup = Gup::new(10, -1.3, 0.1, 5, true);
         let w = WorkerCore::new(0, init, gup, shard, 256, 16, 21);
-        (rt, ds, probe, w)
+        (rt, ds, probe, BufferPool::new(), w)
     }
 
     #[test]
     fn iterations_learn_and_count() {
-        let (mut rt, ds, probe, mut w) = setup();
+        let (mut rt, ds, probe, mut pool, mut w) = setup();
         let mut first = 0f32;
         let mut last = 0f32;
         for i in 0..30 {
             let out = w
-                .local_iteration(&mut rt, &ds, &probe, 1, 0.5, 0.0, 4)
+                .local_iteration(&mut rt, &ds, &probe, &mut pool, 1, 0.5, 0.0, 4)
                 .unwrap();
             if i == 0 {
                 first = out.test_loss;
@@ -213,10 +227,10 @@ mod tests {
 
     #[test]
     fn assign_changes_step_budget() {
-        let (mut rt, ds, probe, mut w) = setup();
+        let (mut rt, ds, probe, mut pool, mut w) = setup();
         w.assign(64, 32);
         let out = w
-            .local_iteration(&mut rt, &ds, &probe, 1, 0.1, 0.0, 100)
+            .local_iteration(&mut rt, &ds, &probe, &mut pool, 1, 0.1, 0.0, 100)
             .unwrap();
         assert_eq!(out.steps_modeled, 2); // 64/32
         assert_eq!(out.steps_run, 2);
@@ -225,9 +239,10 @@ mod tests {
 
     #[test]
     fn adopt_global_counts_model_requests_and_wi() {
-        let (mut rt, ds, probe, mut w) = setup();
+        let (mut rt, ds, probe, mut pool, mut w) = setup();
         for _ in 0..6 {
-            w.local_iteration(&mut rt, &ds, &probe, 1, 0.2, 0.0, 2).unwrap();
+            w.local_iteration(&mut rt, &ds, &probe, &mut pool, 1, 0.2, 0.0, 2)
+                .unwrap();
         }
         let g = init_params(rt.meta(), 99);
         w.adopt_global(&g, 5);
@@ -238,11 +253,12 @@ mod tests {
 
     #[test]
     fn cumulative_g_reconstructs_params() {
-        let (mut rt, ds, probe, mut w) = setup();
+        let (mut rt, ds, probe, mut pool, mut w) = setup();
         let w0 = w.state.params.clone();
         let eta = 0.3f32;
         for _ in 0..5 {
-            w.local_iteration(&mut rt, &ds, &probe, 1, eta, 0.0, 3).unwrap();
+            w.local_iteration(&mut rt, &ds, &probe, &mut pool, 1, eta, 0.0, 3)
+                .unwrap();
         }
         let g = w.cumulative_g(&w0, eta);
         let rebuilt = ModelState::from_cumulative(&w0, &g, eta);
@@ -258,11 +274,11 @@ mod tests {
 
     #[test]
     fn gate_fires_during_early_learning() {
-        let (mut rt, ds, probe, mut w) = setup();
+        let (mut rt, ds, probe, mut pool, mut w) = setup();
         let mut pushes = 0;
         for _ in 0..40 {
             let out = w
-                .local_iteration(&mut rt, &ds, &probe, 1, 0.5, 0.0, 4)
+                .local_iteration(&mut rt, &ds, &probe, &mut pool, 1, 0.5, 0.0, 4)
                 .unwrap();
             if out.gate.push {
                 pushes += 1;
@@ -273,5 +289,17 @@ mod tests {
             pushes < 40,
             "GUP fired every iteration — gate not selective"
         );
+    }
+
+    #[test]
+    fn grad_scratch_is_pool_served_after_warmup() {
+        let (mut rt, ds, probe, mut pool, mut w) = setup();
+        w.local_iteration(&mut rt, &ds, &probe, &mut pool, 1, 0.3, 0.0, 2)
+            .unwrap();
+        // The leased gradient buffer was released back.
+        assert_eq!(pool.available(), 1);
+        w.local_iteration(&mut rt, &ds, &probe, &mut pool, 1, 0.3, 0.0, 2)
+            .unwrap();
+        assert_eq!(pool.available(), 1, "lease/release cycle must balance");
     }
 }

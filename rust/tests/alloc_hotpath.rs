@@ -1,9 +1,12 @@
-//! Proof of the zero-allocation acceptance criterion: after warmup,
-//! the PS aggregation algebra (SyncSGD rounds, the in-place `_into`
-//! operations, and buffer-pool lease/release cycles) performs **zero**
-//! heap allocations.  A counting global allocator wraps `System`; the
-//! single test in this binary runs on one thread, so the counter sees
-//! only the code under test.
+//! Proof of the zero-allocation acceptance criteria: after warmup,
+//! (a) the PS aggregation algebra (SyncSGD rounds, the in-place `_into`
+//! operations, and buffer-pool lease/release cycles) and (b) a worker's
+//! **entire local iteration** — slab batch reads, in-place train steps
+//! with a pool-leased gradient scratch, the probe eval and the GUP
+//! gate (DESIGN.md §13) — perform **zero** heap allocations.  A
+//! counting global allocator wraps `System`; the tests in this binary
+//! serialize on a mutex so the counter only ever sees the code under
+//! test.
 //!
 //! The SIMD dispatch layer (DESIGN.md §12) is active here — on an AVX2
 //! host the default backend is `Simd`, and the test additionally pins
@@ -19,12 +22,21 @@
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
 
+use hermes_dml::data::{partition_pools, DataKind, Dataset, Partition, Probe};
+use hermes_dml::gup::Gup;
 use hermes_dml::ps::PsState;
+use hermes_dml::runtime::{init_params, MockRuntime};
 use hermes_dml::tensor::kernels::{self, Backend};
 use hermes_dml::tensor::{shards, BufferPool, ParamVec, Tensor};
 use hermes_dml::util::f16;
 use hermes_dml::util::rng::Xoshiro256pp;
+use hermes_dml::worker::WorkerCore;
+
+/// The tests below watch a process-global counter; run them one at a
+/// time so neither sees the other's (warmup) allocations.
+static SERIAL: Mutex<()> = Mutex::new(());
 
 struct CountingAlloc;
 
@@ -63,6 +75,7 @@ fn params(n: usize, seed: u64) -> ParamVec {
 
 #[test]
 fn steady_state_aggregation_is_allocation_free() {
+    let _serial = SERIAL.lock().unwrap();
     let dim = 4096;
     let w0 = params(dim, 1);
     let grads: Vec<ParamVec> = (0..12).map(|i| params(dim, 2 + i)).collect();
@@ -137,4 +150,69 @@ fn steady_state_aggregation_is_allocation_free() {
 
     // Sanity: the math still ran (params moved off w0).
     assert!(ps.params != w0);
+}
+
+#[test]
+fn steady_state_worker_iteration_is_allocation_free() {
+    let _serial = SERIAL.lock().unwrap();
+    let mut rt = MockRuntime::new();
+    let ds = Dataset::synth(DataKind::MockSet, 1200, 21);
+    let (train, test) = ds.split(0.85, 21);
+    let probe = Probe::build(&ds, &test, 128, 21);
+    let shard = partition_pools(&ds, &train, 1, Partition::Iid, 21).remove(0);
+    let init = init_params(rt.meta(), 21);
+    let gup = Gup::new(10, -1.3, 0.1, 5, true);
+    // dss 64 / mbs 16: 4 steps per iteration, the epoch wraps exactly
+    // on a batch boundary — the steady state exercises slab reads,
+    // the in-place reshuffle, the pool lease cycle and the probe eval.
+    let mut w = WorkerCore::new(0, init, gup, shard, 64, 16, 21);
+    let mut pool = BufferPool::new();
+
+    let iterate = |w: &mut WorkerCore,
+                   rt: &mut MockRuntime,
+                   pool: &mut BufferPool| {
+        w.local_iteration(rt, &ds, &probe, pool, 1, 0.3, 0.0, 4).unwrap();
+    };
+
+    // Warmup: slab gather, grad-scratch lease sizing, eval/train probs
+    // buffers, the GUP window fill and at least one epoch reshuffle.
+    for _ in 0..12 {
+        iterate(&mut w, &mut rt, &mut pool);
+    }
+
+    let before = ALLOC_CALLS.load(Ordering::Relaxed);
+    for _ in 0..40 {
+        iterate(&mut w, &mut rt, &mut pool);
+    }
+    let after = ALLOC_CALLS.load(Ordering::Relaxed);
+    assert_eq!(
+        after - before,
+        0,
+        "steady-state worker local iteration performed {} heap allocations",
+        after - before
+    );
+
+    // Both forced kernel backends individually stay allocation-free
+    // too (on a non-AVX2 host the Simd request clamps to Scalar — the
+    // claim is "whatever dispatches, nothing allocates").
+    for backend in [Backend::Scalar, Backend::Simd] {
+        kernels::with_backend(backend, || {
+            iterate(&mut w, &mut rt, &mut pool); // warm
+            let before = ALLOC_CALLS.load(Ordering::Relaxed);
+            for _ in 0..20 {
+                iterate(&mut w, &mut rt, &mut pool);
+            }
+            let after = ALLOC_CALLS.load(Ordering::Relaxed);
+            assert_eq!(
+                after - before,
+                0,
+                "worker iteration allocated {} times under {backend:?}",
+                after - before
+            );
+        });
+    }
+
+    // Sanity: the worker actually trained and evaluated.
+    assert_eq!(w.iters, 12 + 40 + 2 * 21);
+    assert!(w.last_loss.is_finite());
 }

@@ -385,6 +385,109 @@ fn drivers_bit_identical_scalar_simd_sharded() {
     }
 }
 
+#[test]
+fn drivers_bit_identical_worker_fastpath_scalar_simd() {
+    // End-to-end acceptance for the worker fast path (DESIGN.md §13):
+    // all six framework drivers, run under {scalar, SIMD} worker
+    // compute × {allocating seed path, pooled in-place fast path},
+    // reproduce the scalar/seed-path reference bit-for-bit (virtual
+    // time, accuracy, traffic, full loss curve) — the worker twin of
+    // `drivers_bit_identical_scalar_simd_sharded`.
+    use hermes_dml::config::RunConfig;
+    use hermes_dml::frameworks::common::run_framework;
+    use hermes_dml::runtime::{
+        EvalOut, MockRuntime, ModelMeta, ModelRuntime, TrainOut,
+    };
+
+    /// Forwards everything to the mock *except*
+    /// `train_step_in_place`, so the trait's default — the allocating
+    /// seed path (clone-per-step `train_step` + copy-back) — runs
+    /// instead of the mock's pooled override.
+    struct SeedPath(MockRuntime);
+    impl ModelRuntime for SeedPath {
+        fn meta(&self) -> &ModelMeta {
+            self.0.meta()
+        }
+        #[allow(clippy::too_many_arguments)]
+        fn train_step(
+            &mut self,
+            params: &ParamVec,
+            momentum: &ParamVec,
+            x: &[f32],
+            y: &[i32],
+            mbs: usize,
+            lr: f32,
+            mu: f32,
+        ) -> anyhow::Result<TrainOut> {
+            self.0.train_step(params, momentum, x, y, mbs, lr, mu)
+        }
+        fn eval_step(
+            &mut self,
+            params: &ParamVec,
+            x: &[f32],
+            y: &[i32],
+        ) -> anyhow::Result<EvalOut> {
+            self.0.eval_step(params, x, y)
+        }
+        fn exec_count(&self) -> u64 {
+            self.0.exec_count()
+        }
+    }
+
+    let run_one = |fw: &str, backend: Backend, fast_path: bool| {
+        let mut cfg = RunConfig::new("mock", fw);
+        cfg.max_iters = 36;
+        cfg.dss0 = 96;
+        cfg.target_acc = 0.995; // don't stop early: exercise more pushes
+        let rt: Box<dyn ModelRuntime> = if fast_path {
+            Box::new(MockRuntime::new())
+        } else {
+            Box::new(SeedPath(MockRuntime::new()))
+        };
+        kernels::with_backend(backend, || run_framework(cfg, rt).unwrap())
+    };
+
+    for fw in ["bsp", "asp", "ssp", "ebsp", "selsync", "hermes"] {
+        let want = run_one(fw, Backend::Scalar, false);
+        for backend in [Backend::Scalar, Backend::Simd] {
+            for fast_path in [false, true] {
+                let got = run_one(fw, backend, fast_path);
+                let tag = format!("{fw} {backend:?} fast={fast_path}");
+                assert_eq!(
+                    want.virtual_time.to_bits(),
+                    got.virtual_time.to_bits(),
+                    "{tag}: virtual time diverged"
+                );
+                assert_eq!(
+                    want.final_accuracy.to_bits(),
+                    got.final_accuracy.to_bits(),
+                    "{tag}: accuracy diverged"
+                );
+                assert_eq!(
+                    want.final_loss.to_bits(),
+                    got.final_loss.to_bits(),
+                    "{tag}: loss diverged"
+                );
+                assert_eq!(want.iterations, got.iterations, "{tag}");
+                assert_eq!(want.bytes, got.bytes, "{tag}");
+                assert_eq!(want.api_calls, got.api_calls, "{tag}");
+                assert_eq!(
+                    want.curve.len(),
+                    got.curve.len(),
+                    "{tag}: curve length diverged"
+                );
+                for (i, (wc, gc)) in want.curve.iter().zip(&got.curve).enumerate() {
+                    assert_eq!(
+                        (wc.0.to_bits(), wc.1.to_bits(), wc.2.to_bits()),
+                        (gc.0.to_bits(), gc.1.to_bits(), gc.2.to_bits()),
+                        "{tag}: curve point {i} diverged"
+                    );
+                }
+            }
+        }
+    }
+}
+
 // ------------------------------------------------------------- wire
 
 #[test]

@@ -4,18 +4,26 @@
 #                       allocating baseline vs pooled in-place path,
 #                       plus scalar-vs-SIMD kernel dispatch (speedups
 #                       and GB/s per op)
+#   BENCH_worker.json — worker training fast path: seed (allocating)
+#                       vs pooled in-place train step, eval, and a full
+#                       local iteration, scalar vs SIMD, with GFLOP/s
+#                       (written in every mode)
 #   BENCH_shard.json  — 1-vs-N-shard scaling of axpy / weighted_sum /
 #                       sync_sgd / f16 codec (wall clock + GB/s per
 #                       shard count) — written by --record and --smoke
+#   BENCH_sweep.json  — streaming vs collect-all sweep engine at
+#                       1k/10k jobs (jobs/sec + peak-RSS proxy) —
+#                       written by --record and --smoke (smoke caps the
+#                       grids at 60/240 jobs so CI stays fast)
 #   BENCH_table3.json — Table III end-to-end sweep, sequential vs
 #                       parallel wall time
 #
 # Usage: scripts/bench.sh [--smoke|--record]
-#   --smoke    CI mode: tiny budget, small model, one seed — fast
+#   --smoke    CI mode: tiny budget, small model, capped grids — fast
 #              enough for every PR, same JSON shapes (uploaded as
 #              workflow artifacts by .github/workflows/ci.yml).
-#   --record   full-budget run of every report including the shard
-#              scaling sweep; use this to refresh the versioned
+#   --record   full-budget run of every report including the shard and
+#              sweep scaling grids; use this to refresh the versioned
 #              perf-trajectory datapoints.
 #
 # cargo runs bench binaries with the cwd set to the package root
@@ -29,7 +37,7 @@ case "$mode" in
   --smoke)
     export HERMES_BENCH_SMOKE=1
     export HERMES_BENCH_FAST=1
-    echo "== bench smoke mode (tiny model, 1 seed) =="
+    echo "== bench smoke mode (tiny model, 1 seed, capped grids) =="
     ;;
   --record)
     echo "== bench record mode (full budgets, all reports) =="
@@ -41,13 +49,15 @@ case "$mode" in
     ;;
 esac
 
-reports=("$root/BENCH_micro.json" "$root/BENCH_table3.json")
+reports=("$root/BENCH_micro.json" "$root/BENCH_worker.json" "$root/BENCH_table3.json")
 BENCH_OUT="$root/BENCH_micro.json" cargo bench --bench micro_coordinator
+BENCH_WORKER_OUT="$root/BENCH_worker.json" cargo bench --bench worker_fastpath
 BENCH_TABLE3_OUT="$root/BENCH_table3.json" cargo bench --bench table3_end_to_end
 
 if [[ "$mode" == "--record" || "$mode" == "--smoke" ]]; then
   BENCH_SHARD_OUT="$root/BENCH_shard.json" cargo bench --bench shard_scaling
-  reports+=("$root/BENCH_shard.json")
+  BENCH_SWEEP_OUT="$root/BENCH_sweep.json" cargo bench --bench sweep_scaling
+  reports+=("$root/BENCH_shard.json" "$root/BENCH_sweep.json")
 fi
 
 echo

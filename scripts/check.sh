@@ -1,5 +1,9 @@
 #!/usr/bin/env bash
-# Repo gate: formatting, lints, then the tier-1 command.
+# Repo gate: formatting, lints, then the tier-1 command, then the
+# zero-allocation hot-path pins re-run under both kernel backends —
+# the worker fast path and the PS aggregation path must stay
+# allocation-free whether the kernels dispatch scalar or SIMD
+# (DESIGN.md §8, §12, §13).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -7,3 +11,8 @@ cargo fmt --check
 cargo clippy --all-targets -- -D warnings
 cargo build --release
 cargo test -q
+
+echo "== alloc hot-path pin (HERMES_FORCE_SCALAR=0) =="
+HERMES_FORCE_SCALAR=0 cargo test -q --test alloc_hotpath
+echo "== alloc hot-path pin (HERMES_FORCE_SCALAR=1) =="
+HERMES_FORCE_SCALAR=1 cargo test -q --test alloc_hotpath
