@@ -35,8 +35,11 @@ fn main() -> anyhow::Result<()> {
     println!("  bytes on wire    : {}", run.bytes);
     println!("  converged        : {}", run.converged);
 
-    // The same API runs every baseline — swap the framework name:
-    for fw in ["bsp", "asp", "ssp", "ebsp", "selsync"] {
+    // The same API runs every baseline — and, since the policy
+    // redesign (DESIGN.md §14), any *composition* of the three axes:
+    // `bsp+dynalloc` (hard barrier + Hermes reallocation), `ssp+gup`
+    // (bounded staleness + the GUP gate), `selsync+dynalloc`, …
+    for fw in ["bsp", "asp", "ssp", "ebsp", "selsync", "ssp+gup"] {
         let mut cfg = RunConfig::new("mock", fw);
         cfg.hp.lr = 0.5;
         cfg.hp.ssp_staleness = 6;

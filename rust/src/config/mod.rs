@@ -3,6 +3,7 @@
 //! per-run experiment settings — with JSON round-trip and validation.
 
 use crate::faults::{FaultEvent, FaultKind, FaultPlan};
+use crate::frameworks::policy::FrameworkSpec;
 use crate::util::json::Json;
 
 /// One node family from Table II of the paper.
@@ -293,7 +294,11 @@ impl FaultConfig {
 #[derive(Debug, Clone, PartialEq)]
 pub struct RunConfig {
     pub model: String,
-    pub framework: String,
+    /// The typed framework-policy spec (DESIGN.md §14): a canonical
+    /// preset (`bsp asp ssp ebsp selsync hermes`) or any composition
+    /// `<preset>[+<gate>][+<alloc>]`.  Parsed/validated at config time
+    /// — unknown names never reach the drivers.
+    pub framework: FrameworkSpec,
     pub seed: u64,
     pub hp: HyperParams,
     pub cluster: ClusterConfig,
@@ -326,10 +331,19 @@ pub struct RunConfig {
 }
 
 impl RunConfig {
+    /// Build a config for a spec string.  Panics on an invalid spec —
+    /// this is the programmer-facing constructor; user-supplied names
+    /// go through [`FrameworkSpec::from_str`] (CLI) or
+    /// [`RunConfig::from_json`], both of which return the typed
+    /// [`crate::frameworks::SpecError`] instead.
+    ///
+    /// [`FrameworkSpec::from_str`]: std::str::FromStr::from_str
     pub fn new(model: &str, framework: &str) -> Self {
         RunConfig {
             model: model.to_string(),
-            framework: framework.to_string(),
+            framework: framework
+                .parse::<FrameworkSpec>()
+                .unwrap_or_else(|e| panic!("{e}")),
             seed: 42,
             hp: HyperParams::for_model(model),
             cluster: ClusterConfig::paper_testbed(),
@@ -345,6 +359,19 @@ impl RunConfig {
             alpha_relax: true,
             faults: FaultConfig::default(),
         }
+    }
+
+    /// Shared baseline for the driver tests: the mock backend with the
+    /// fast-converging hyper-parameters every driver test used to
+    /// copy-paste (lr 0.5, DSS₀ 128, 85% target, 400-iteration cap).
+    /// Tests override the per-discipline knobs they exercise.
+    pub fn preset_test(framework: &str) -> Self {
+        let mut cfg = RunConfig::new("mock", framework);
+        cfg.hp.lr = 0.5; // the mock model likes a big step
+        cfg.dss0 = 128;
+        cfg.target_acc = 0.85;
+        cfg.max_iters = 400;
+        cfg
     }
 
     pub fn validate(&self) -> Result<(), String> {
@@ -383,7 +410,7 @@ impl RunConfig {
         };
         Json::obj(vec![
             ("model", Json::Str(self.model.clone())),
-            ("framework", Json::Str(self.framework.clone())),
+            ("framework", Json::Str(self.framework.to_string())),
             ("seed", Json::Num(self.seed as f64)),
             (
                 "hp",
@@ -497,9 +524,14 @@ impl RunConfig {
                 faults.plan.events.push(fault_event_from_json(e)?);
             }
         }
+        // Typed spec validation at parse time: a bad name fails here
+        // with the full list of valid specs, not deep inside a driver.
+        let framework: FrameworkSpec = s("framework")?
+            .parse()
+            .map_err(|e: crate::frameworks::SpecError| e.to_string())?;
         let cfg = RunConfig {
             model: s("model")?,
-            framework: s("framework")?,
+            framework,
             seed: n("seed")? as u64,
             hp: HyperParams {
                 lr: n("hp/lr")? as f32,
@@ -692,5 +724,57 @@ mod tests {
     fn from_json_rejects_missing_fields() {
         let j = Json::parse(r#"{"model":"cnn"}"#).unwrap();
         assert!(RunConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn from_json_rejects_unknown_framework_listing_valid_specs() {
+        let mut rc = RunConfig::new("cnn", "hermes");
+        rc.seed = 9;
+        let j = rc.to_json();
+        let mut m = match j {
+            Json::Obj(m) => m,
+            _ => unreachable!(),
+        };
+        m.insert("framework".into(), Json::Str("bspp".into()));
+        let err = RunConfig::from_json(&Json::Obj(m)).unwrap_err();
+        assert!(err.contains("bspp"), "{err}");
+        for name in crate::frameworks::PRESETS {
+            assert!(err.contains(name), "error must list '{name}': {err}");
+        }
+        assert!(err.contains("dynalloc"), "{err}");
+    }
+
+    #[test]
+    fn hybrid_specs_round_trip_through_json() {
+        let mut rc = RunConfig::new("mock", "ssp+gup");
+        rc.seed = 77;
+        let j = rc.to_json().to_string();
+        let back = RunConfig::from_json(&Json::parse(&j).unwrap()).unwrap();
+        assert_eq!(back, rc);
+        assert_eq!(back.framework.to_string(), "ssp+gup");
+    }
+
+    #[test]
+    fn preset_test_is_a_valid_shared_baseline() {
+        for fw in crate::frameworks::PRESETS {
+            let cfg = RunConfig::preset_test(fw);
+            cfg.validate().unwrap();
+            assert_eq!(cfg.model, "mock");
+            assert_eq!(cfg.framework.to_string(), fw);
+            assert_eq!((cfg.dss0, cfg.max_iters), (128, 400));
+            assert!((cfg.hp.lr - 0.5).abs() < 1e-9);
+            assert!((cfg.target_acc - 0.85).abs() < 1e-12);
+        }
+        // Hybrid specs get the same baseline.
+        assert_eq!(
+            RunConfig::preset_test("bsp+dynalloc").framework,
+            "bsp+dynalloc".parse().unwrap()
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid framework spec")]
+    fn new_panics_on_a_bad_spec_with_the_typed_message() {
+        let _ = RunConfig::new("mock", "nope");
     }
 }

@@ -24,7 +24,7 @@ use std::time::Instant;
 use anyhow::{bail, Result};
 
 use crate::config::{ClusterConfig, RunConfig};
-use crate::frameworks::run_framework;
+use crate::frameworks::{policy, run_framework, PRESETS};
 use crate::metrics::{write_file, RunMetrics, TableFmt};
 use crate::runtime::{Manifest, MockRuntime, ModelRuntime, XlaRuntime};
 use crate::util::fmt_duration;
@@ -526,7 +526,7 @@ pub fn faults_churn_sweep(
             // mislabeling a row.
             let cfg = &jobs[i].cfg;
             let rate = cfg.faults.churn_rate;
-            let fw = cfg.framework.as_str();
+            let fw = cfg.framework.to_string();
             csv += &format!(
                 "{fw},{rate},{},{},{},{:.3},{:.5},{:.5},{},{},{}\n",
                 r.fault_crashes,
@@ -559,16 +559,52 @@ pub fn faults_churn_sweep(
 
 // ------------------------------------------------------------- scale
 
+/// Which framework axis a scale sweep fans over.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScaleGrid {
+    /// The six canonical presets (the pre-policy-API behaviour).
+    Preset,
+    /// The full 24-spec composition grid (sync × gate × alloc,
+    /// DESIGN.md §14) — every hybrid becomes a sweep axis point.
+    Hybrid,
+}
+
+impl ScaleGrid {
+    pub fn parse(s: &str) -> Result<ScaleGrid, String> {
+        match s {
+            "preset" => Ok(ScaleGrid::Preset),
+            "hybrid" => Ok(ScaleGrid::Hybrid),
+            other => Err(format!("unknown grid '{other}' (preset | hybrid)")),
+        }
+    }
+
+    /// The framework-spec axis of this grid, as spec strings.
+    pub fn specs(&self) -> Vec<String> {
+        match self {
+            ScaleGrid::Preset => PRESETS.iter().map(|s| s.to_string()).collect(),
+            ScaleGrid::Hybrid => {
+                policy::grid_specs().iter().map(|s| s.to_string()).collect()
+            }
+        }
+    }
+}
+
 /// Build an `n`-job seed×framework×churn grid for the streaming scale
-/// sweep: framework cycles fastest, then the churn rate, and every job
-/// gets its own seed — `n` distinct scenarios, deterministically.
-/// Budgets are kept tiny per job (the point is sweep throughput, not
-/// per-run convergence).
+/// sweep: the framework spec cycles fastest, then the churn rate, and
+/// every job gets its own seed — `n` distinct scenarios,
+/// deterministically.  Budgets are kept tiny per job (the point is
+/// sweep throughput, not per-run convergence).
 pub fn scale_jobs(model: &str, n: usize) -> Vec<SweepJob> {
-    let fws = crate::frameworks::ALL;
+    scale_jobs_grid(model, n, ScaleGrid::Preset)
+}
+
+/// [`scale_jobs`] over an explicit framework axis — `--grid hybrid`
+/// fans the whole composition grid through the streaming sweep.
+pub fn scale_jobs_grid(model: &str, n: usize, grid: ScaleGrid) -> Vec<SweepJob> {
+    let fws = grid.specs();
     (0..n)
         .map(|i| {
-            let fw = fws[i % fws.len()];
+            let fw = &fws[i % fws.len()];
             let mut cfg = scaled_cfg(model, fw);
             cfg.seed = 1000 + i as u64;
             cfg.max_iters = 24;
@@ -606,8 +642,9 @@ pub fn scale_sweep(
     n_jobs: usize,
     threads: usize,
     collect_all: bool,
+    grid: ScaleGrid,
 ) -> Result<ScaleReport> {
-    let jobs = scale_jobs(model, n_jobs);
+    let jobs = scale_jobs_grid(model, n_jobs, grid);
     let model_s = model.to_string();
     let arts = artifacts.to_path_buf();
     let make_rt = move |_job: &SweepJob| make_runtime(&model_s, &arts);
@@ -625,7 +662,7 @@ pub fn scale_sweep(
     // extending `scale_jobs` can never mislabel the CSV.
     let labels: Vec<(String, f64)> = jobs
         .iter()
-        .map(|j| (j.cfg.framework.clone(), j.cfg.faults.churn_rate))
+        .map(|j| (j.cfg.framework.to_string(), j.cfg.faults.churn_rate))
         .collect();
     let write_row = |w: &mut dyn Write, i: usize, r: &RunMetrics| -> Result<()> {
         let (fw, churn) = &labels[i];
@@ -695,14 +732,7 @@ pub fn run_all(out: &Path, model: &str, artifacts: &Path) -> Result<()> {
     fig13_major_updates(out, model, artifacts)?;
     fig14_alpha_beta(out, model, artifacts)?;
     table3(out, model, artifacts)?;
-    faults_churn_sweep(
-        out,
-        model,
-        artifacts,
-        0,
-        &FAULT_SWEEP_RATES,
-        &crate::frameworks::ALL,
-    )?;
+    faults_churn_sweep(out, model, artifacts, 0, &FAULT_SWEEP_RATES, &PRESETS)?;
     println!("\nAll experiment outputs in {}", out.display());
     Ok(())
 }
@@ -714,8 +744,12 @@ mod tests {
     #[test]
     fn scaled_cfgs_are_valid() {
         for model in ["mock", "cnn", "alexnet"] {
-            for fw in crate::frameworks::ALL {
+            for fw in PRESETS {
                 scaled_cfg(model, fw).validate().unwrap();
+            }
+            // Hybrid specs get the same scaled budgets.
+            for spec in policy::hybrid_specs() {
+                scaled_cfg(model, &spec.to_string()).validate().unwrap();
             }
         }
     }
@@ -750,8 +784,16 @@ mod tests {
     #[test]
     fn scale_sweep_streaming_and_collect_write_identical_rows() {
         let dir = std::env::temp_dir().join("hermes_exp_scale_test");
-        let rep = scale_sweep(&dir, "mock", Path::new("/nonexistent"), 8, 2, false)
-            .unwrap();
+        let rep = scale_sweep(
+            &dir,
+            "mock",
+            Path::new("/nonexistent"),
+            8,
+            2,
+            false,
+            ScaleGrid::Preset,
+        )
+        .unwrap();
         assert_eq!(rep.jobs, 8);
         assert!(rep.jobs_per_sec > 0.0);
         assert!(
@@ -766,8 +808,16 @@ mod tests {
 
         // The collect-all baseline writes byte-identical rows (jobs are
         // pure functions of their configs).
-        let rep2 = scale_sweep(&dir, "mock", Path::new("/nonexistent"), 8, 2, true)
-            .unwrap();
+        let rep2 = scale_sweep(
+            &dir,
+            "mock",
+            Path::new("/nonexistent"),
+            8,
+            2,
+            true,
+            ScaleGrid::Preset,
+        )
+        .unwrap();
         assert_eq!(rep2.peak_resident_rows, 8, "collect-all holds the grid");
         let collected =
             std::fs::read_to_string(dir.join("scale_mock.csv")).unwrap();
@@ -778,15 +828,61 @@ mod tests {
     fn scale_jobs_cycle_frameworks_seeds_and_churn() {
         let jobs = scale_jobs("mock", 14);
         assert_eq!(jobs.len(), 14);
-        let fws = crate::frameworks::ALL;
+        let fws = PRESETS;
         for (i, j) in jobs.iter().enumerate() {
-            assert_eq!(j.cfg.framework, fws[i % fws.len()]);
+            assert_eq!(j.cfg.framework.to_string(), fws[i % fws.len()]);
             assert_eq!(j.cfg.seed, 1000 + i as u64);
             j.cfg.validate().unwrap();
         }
         // Second framework cycle advances the churn rate.
         assert_eq!(jobs[0].cfg.faults.churn_rate, FAULT_SWEEP_RATES[0]);
         assert_eq!(jobs[fws.len()].cfg.faults.churn_rate, FAULT_SWEEP_RATES[1]);
+    }
+
+    #[test]
+    fn hybrid_grid_cycles_all_24_specs_through_the_streaming_sweep() {
+        let specs = ScaleGrid::Hybrid.specs();
+        assert_eq!(specs.len(), 24);
+        let jobs = scale_jobs_grid("mock", 26, ScaleGrid::Hybrid);
+        assert_eq!(jobs.len(), 26);
+        for (i, j) in jobs.iter().enumerate() {
+            assert_eq!(j.cfg.framework.to_string(), specs[i % specs.len()]);
+            j.cfg.validate().unwrap();
+        }
+        // The named hybrid scenarios are reachable grid points.
+        for named in ["bsp+dynalloc", "ssp+gup", "selsync+dynalloc"] {
+            assert!(specs.iter().any(|s| s == named), "{named} not in the grid");
+        }
+        // Job 25 wraps: same spec axis as job 1, a different seed.
+        assert_eq!(
+            jobs[24].cfg.framework.to_string(),
+            jobs[0].cfg.framework.to_string()
+        );
+        assert_ne!(jobs[24].cfg.seed, jobs[0].cfg.seed);
+    }
+
+    #[test]
+    fn scale_sweep_hybrid_grid_streams_end_to_end() {
+        let dir = std::env::temp_dir().join("hermes_exp_scale_hybrid_test");
+        let rep = scale_sweep(
+            &dir,
+            "mock",
+            Path::new("/nonexistent"),
+            24,
+            2,
+            false,
+            ScaleGrid::Hybrid,
+        )
+        .unwrap();
+        assert_eq!(rep.jobs, 24);
+        let csv = std::fs::read_to_string(dir.join("scale_mock.csv")).unwrap();
+        assert_eq!(csv.lines().count(), 25, "{csv}");
+        for named in ["bsp+dynalloc", "ssp+gup", "selsync+dynalloc"] {
+            assert!(
+                csv.lines().any(|l| l.contains(&format!(",{named},"))),
+                "{named} row missing:\n{csv}"
+            );
+        }
     }
 
     #[test]

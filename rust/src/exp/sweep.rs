@@ -264,7 +264,7 @@ mod tests {
     use crate::runtime::MockRuntime;
 
     fn jobs() -> Vec<SweepJob> {
-        crate::frameworks::ALL
+        crate::frameworks::PRESETS
             .iter()
             .map(|fw| {
                 let mut cfg = crate::exp::scaled_cfg("mock", fw);
@@ -312,7 +312,7 @@ mod tests {
     fn results_preserve_job_order_and_labels() {
         let out = run_sweep(jobs(), 3, mock_rt).unwrap();
         let labels: Vec<&str> = out.iter().map(|r| r.framework.as_str()).collect();
-        assert_eq!(labels, crate::frameworks::ALL.to_vec());
+        assert_eq!(labels, crate::frameworks::PRESETS.to_vec());
     }
 
     #[test]
@@ -358,10 +358,12 @@ mod tests {
     #[test]
     fn empty_sweep_is_fine_and_errors_propagate() {
         assert!(run_sweep(Vec::new(), 4, mock_rt).unwrap().is_empty());
+        // Framework names are typed now (bad ones can't be built), so
+        // the in-sweep failure mode left is config validation.
         let mut bad = jobs();
-        bad[2].cfg.framework = "nope".into();
+        bad[2].cfg.dss0 = 0;
         let err = run_sweep(bad, 4, mock_rt).unwrap_err();
-        assert!(err.to_string().contains("unknown framework"), "{err}");
+        assert!(err.to_string().contains("dss0"), "{err}");
     }
 
     #[test]

@@ -3,6 +3,11 @@
 //! applies every gradient the moment it arrives (Eq. 2).  High hardware
 //! efficiency, stale gradients and the oscillation of Fig. 3 emerge
 //! naturally from the event interleaving.
+//!
+//! *Reference driver*: frozen executable specification of the `asp`
+//! preset.  Production dispatch runs the same discipline through the
+//! generic policy driver ([`super::driver`], DESIGN.md §14), proven
+//! bit-identical in `tests/coordinator_props.rs`.
 
 use anyhow::Result;
 
@@ -101,12 +106,7 @@ mod tests {
     use crate::runtime::MockRuntime;
 
     fn cfg() -> RunConfig {
-        let mut cfg = RunConfig::new("mock", "asp");
-        cfg.hp.lr = 0.5;
-        cfg.max_iters = 400;
-        cfg.dss0 = 128;
-        cfg.target_acc = 0.85;
-        cfg
+        RunConfig::preset_test("asp")
     }
 
     #[test]
@@ -134,7 +134,7 @@ mod tests {
     fn asp_finishes_faster_than_bsp_in_virtual_time_per_iteration() {
         let asp = run_framework(cfg(), Box::new(MockRuntime::new())).unwrap();
         let mut bcfg = cfg();
-        bcfg.framework = "bsp".into();
+        bcfg.framework = "bsp".parse().unwrap();
         let bsp = run_framework(bcfg, Box::new(MockRuntime::new())).unwrap();
         let asp_rate = asp.virtual_time / asp.iterations.max(1) as f64;
         let bsp_rate = bsp.virtual_time / bsp.iterations.max(1) as f64;

@@ -3,6 +3,11 @@
 //! dataset, all workers run one local training pass, the barrier waits
 //! for the slowest (the straggler tax of Figs. 4/5), then SyncSGD
 //! (Eq. 1) aggregates the round's gradients.
+//!
+//! *Reference driver*: frozen executable specification of the `bsp`
+//! preset.  Production dispatch runs the same discipline through the
+//! generic policy driver ([`super::driver`], DESIGN.md §14), proven
+//! bit-identical in `tests/coordinator_props.rs`.
 
 use anyhow::Result;
 
@@ -89,11 +94,8 @@ mod tests {
     use crate::runtime::MockRuntime;
 
     fn cfg() -> RunConfig {
-        let mut cfg = RunConfig::new("mock", "bsp");
-        cfg.hp.lr = 0.5; // the mock model likes a big step
+        let mut cfg = RunConfig::preset_test("bsp");
         cfg.max_iters = 240;
-        cfg.dss0 = 128;
-        cfg.target_acc = 0.85;
         cfg
     }
 

@@ -102,7 +102,7 @@ impl SimEnv {
 
         let mut workers = Vec::with_capacity(n);
         let mut run = RunMetrics {
-            framework: cfg.framework.clone(),
+            framework: cfg.framework.to_string(),
             model: cfg.model.clone(),
             seed: cfg.seed,
             ..Default::default()
@@ -435,22 +435,53 @@ pub fn run_framework(cfg: RunConfig, rt: Box<dyn ModelRuntime>) -> Result<RunMet
     run_framework_opts(cfg, rt, false)
 }
 
+/// Run any composable [`FrameworkSpec`] — preset or hybrid — through
+/// the generic policy driver (DESIGN.md §14).  The spec is typed in
+/// [`RunConfig`], so unknown names can no longer reach this point:
+/// they fail at config-parse/CLI time with a [`SpecError`] listing the
+/// valid specs.
+///
+/// [`FrameworkSpec`]: super::policy::FrameworkSpec
+/// [`SpecError`]: super::policy::SpecError
 pub fn run_framework_opts(
     cfg: RunConfig,
     rt: Box<dyn ModelRuntime>,
     record_timeline: bool,
 ) -> Result<RunMetrics> {
-    let framework = cfg.framework.clone();
+    let spec = cfg.framework;
     let mut env = SimEnv::build(cfg, rt)?;
     env.record_timeline = record_timeline;
-    match framework.as_str() {
-        "bsp" => super::bsp::run(&mut env)?,
-        "asp" => super::asp::run(&mut env)?,
-        "ssp" => super::ssp::run(&mut env)?,
-        "ebsp" => super::ebsp::run(&mut env)?,
-        "selsync" => super::selsync::run(&mut env)?,
-        "hermes" => super::hermes::run(&mut env)?,
-        other => anyhow::bail!("unknown framework '{other}'"),
+    super::driver::run_spec(&mut env, spec)?;
+    Ok(env.finish())
+}
+
+/// Run a canonical preset through its pre-refactor hand-written driver
+/// (`frameworks::{bsp,asp,ssp,ebsp,selsync,hermes}`).  These are kept
+/// as the *executable specification* of the six disciplines: the
+/// generic driver is proven bit-identical to them per seed, backend,
+/// shard count and churn plan
+/// (`tests/coordinator_props.rs::presets_bit_identical_to_reference_drivers`).
+/// Hybrid specs have no reference driver and error here.
+pub fn run_reference(cfg: RunConfig, rt: Box<dyn ModelRuntime>) -> Result<RunMetrics> {
+    run_reference_opts(cfg, rt, false)
+}
+
+pub fn run_reference_opts(
+    cfg: RunConfig,
+    rt: Box<dyn ModelRuntime>,
+    record_timeline: bool,
+) -> Result<RunMetrics> {
+    let spec = cfg.framework;
+    let mut env = SimEnv::build(cfg, rt)?;
+    env.record_timeline = record_timeline;
+    match super::policy::preset_name(&spec) {
+        Some("bsp") => super::bsp::run(&mut env)?,
+        Some("asp") => super::asp::run(&mut env)?,
+        Some("ssp") => super::ssp::run(&mut env)?,
+        Some("ebsp") => super::ebsp::run(&mut env)?,
+        Some("selsync") => super::selsync::run(&mut env)?,
+        Some("hermes") => super::hermes::run(&mut env)?,
+        _ => anyhow::bail!("no reference driver for hybrid spec '{spec}'"),
     }
     Ok(env.finish())
 }
@@ -574,11 +605,18 @@ mod tests {
     }
 
     #[test]
-    fn unknown_framework_is_an_error() {
+    fn hybrid_specs_have_no_reference_driver() {
+        // Unknown framework *names* are now rejected at config-parse
+        // time (`FrameworkSpec::from_str`, see `policy::tests`); the
+        // only spec-level error left at run time is asking the frozen
+        // reference dispatch for a composition it never implemented.
         let mut cfg = mock_cfg();
-        cfg.framework = "nope".into();
+        cfg.framework = "bsp+dynalloc".parse().unwrap();
         let err =
-            run_framework(cfg, Box::new(MockRuntime::new())).unwrap_err();
-        assert!(err.to_string().contains("unknown framework"));
+            run_reference(cfg.clone(), Box::new(MockRuntime::new())).unwrap_err();
+        assert!(err.to_string().contains("no reference driver"), "{err}");
+        // The generic driver runs the same spec fine.
+        cfg.max_iters = 24;
+        run_framework(cfg, Box::new(MockRuntime::new())).unwrap();
     }
 }

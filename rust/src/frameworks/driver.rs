@@ -1,0 +1,1013 @@
+//! The generic policy-composed driver (DESIGN.md §14).
+//!
+//! One driver executes every [`FrameworkSpec`] in the composition grid.
+//! The sync axis picks the loop *shape* — an event loop for the
+//! asynchronous disciplines (`asp`/`ssp`), a lockstep superstep loop
+//! for the hard barrier (`bsp`), a gated-round loop for the
+//! δ-synchronized discipline (`selsync`), and the elastic-barrier loop
+//! (`ebsp`) — while the gate and allocation axes plug into fixed hook
+//! points inside each shape:
+//!
+//! * **gate** — decides which finished iterations push.  `every`
+//!   pushes delta gradients aggregated by Sync/AsyncSGD; `delta`
+//!   pushes on relative parameter change > δ; `gup` runs HermesGUP
+//!   (Alg. 1) and pushes the cumulative gradient G aggregated by
+//!   loss-based SGD (Alg. 2 — the aggregator follows the gate, as in
+//!   the paper's protocol).
+//! * **alloc** — `dynalloc` activates the §IV-A monitoring plane:
+//!   per-iteration time recording (plus TimeReport heartbeats in event
+//!   mode), IQR outlier detection and the dual-binary-search retarget.
+//!
+//! For each of the six canonical presets the hooks reduce to exactly
+//! the operation sequence of the original hand-written driver in this
+//! directory — same transfers, same RNG draw order, same event-queue
+//! pushes — so preset runs are **bit-identical** to the reference
+//! drivers (proven per seed, backend, shard count and churn plan by
+//! `tests/coordinator_props.rs::presets_bit_identical_to_reference_drivers`).
+
+use anyhow::Result;
+
+use super::common::SimEnv;
+use super::ebsp::{BENCH_OVERHEAD, CRASH_CAPACITY, HEAVY_PARAMS};
+use super::hermes::REBALANCE_EVERY;
+use super::policy::{AllocPolicy, FrameworkSpec, GatePolicy, SyncPolicy};
+use super::ssp::{active_min_clock, release_unblocked};
+use crate::alloc::{rebalance_pass, Allocation, Rebalance, TimeMonitor, MBS_DOMAIN};
+use crate::data::{partition_pools, Partition};
+use crate::metrics::SegmentKind;
+use crate::sim::Ev;
+use crate::tensor::ParamVec;
+
+/// The event-driven shapes' "start next iteration" wake-up tag (same
+/// value as the reference drivers').
+const START: u32 = 0;
+
+/// Run `spec` over a built environment — the single entry point the
+/// registry dispatches through.
+pub fn run_spec(env: &mut SimEnv, spec: FrameworkSpec) -> Result<()> {
+    match spec.sync {
+        SyncPolicy::Barrier => {
+            if spec.gate == GatePolicy::Delta {
+                run_gated_rounds(env, spec)
+            } else {
+                run_lockstep(env, spec)
+            }
+        }
+        SyncPolicy::Elastic => run_elastic(env, spec),
+        SyncPolicy::Staleness | SyncPolicy::Async => run_event(env, spec),
+    }
+}
+
+/// Per-worker memory caps for the allocator (§IV step 1); empty when
+/// the allocation plane is off.
+fn alloc_caps(env: &SimEnv, monitored: bool) -> Vec<usize> {
+    if !monitored {
+        return Vec::new();
+    }
+    let model_bytes = env.rt.meta().param_count * 4;
+    let sample_bytes = env.ds.meta.sample_bytes();
+    (0..env.n_workers())
+        .map(|w| {
+            env.cluster
+                .memory_limit_dss(w, model_bytes, sample_bytes)
+                .max(env.cfg.mbs0)
+        })
+        .collect()
+}
+
+/// Is a §IV-A rebalancing pass due?  One shared predicate for every
+/// loop shape: the ablation flag, a full monitor, and the rate limit.
+fn rebalance_due(env: &SimEnv, monitor: &TimeMonitor, last_rebalance: f64) -> bool {
+    env.cfg.dynamic_alloc
+        && monitor.have_all()
+        && env.queue.now() - last_rebalance >= REBALANCE_EVERY
+}
+
+/// The shape-independent core of one §IV-A pass: compute retargets,
+/// skip crashed nodes (their monitor entries are stale), update the
+/// PS-side allocation table, charge the DatasetAssign control message
+/// and record the metric — then hand each rebalance to the shape's
+/// `deliver` (the event shape stages + prefetches; round shapes assign
+/// immediately).
+fn for_each_rebalance(
+    env: &mut SimEnv,
+    monitor: &TimeMonitor,
+    dss_caps: &[usize],
+    now: f64,
+    mut deliver: impl FnMut(&mut SimEnv, Rebalance),
+) {
+    let rbs = rebalance_pass(
+        monitor,
+        env.cfg.hp.epochs,
+        &env.allocs,
+        dss_caps,
+        &MBS_DOMAIN,
+    );
+    for rb in rbs {
+        if env.is_crashed(rb.worker) {
+            continue;
+        }
+        env.allocs[rb.worker] = rb.alloc;
+        env.transfer(rb.worker, env.ctl_bytes());
+        env.run.workers[rb.worker]
+            .allocations
+            .push((now, rb.alloc.dss, rb.alloc.mbs));
+        deliver(env, rb);
+    }
+}
+
+/// Round-boundary rebalancing for the `*+dynalloc` hybrids: one §IV-A
+/// pass applied immediately (round drivers have no in-flight iteration
+/// to overlap with).  `ship_data` charges the data plane for drivers
+/// that do not re-ship the working set each round (gated/elastic); the
+/// lockstep driver re-broadcasts datasets every superstep, so only the
+/// DatasetAssign control message is charged there.
+fn rebalance_round(
+    env: &mut SimEnv,
+    monitor: &TimeMonitor,
+    dss_caps: &[usize],
+    last_rebalance: &mut f64,
+    ship_data: bool,
+) {
+    if !rebalance_due(env, monitor, *last_rebalance) {
+        return;
+    }
+    let now = env.queue.now();
+    *last_rebalance = now;
+    for_each_rebalance(env, monitor, dss_caps, now, |env, rb| {
+        if ship_data {
+            env.transfer(rb.worker, env.dataset_bytes(rb.alloc.dss));
+        }
+        env.workers[rb.worker].assign(rb.alloc.dss, rb.alloc.mbs.min(256));
+    });
+}
+
+// ================================================================ event
+
+/// Resolved per-run knobs of the event shape (copied out of the spec
+/// and hyper-parameters once, so the hot loop only branches on locals).
+#[derive(Clone, Copy)]
+struct EventMode {
+    eta: f32,
+    /// `Some(s)` in bounded-staleness mode.
+    staleness: Option<u64>,
+    /// `Some(δ)` when the relative-change gate is active.
+    delta: Option<f64>,
+    gup: bool,
+    monitored: bool,
+}
+
+/// Mutable per-worker planes of the event shape.  Only the planes the
+/// mode activates are ever touched after construction.
+struct EventPlanes {
+    /// Delta-gradient scratch cycling through the pool (`every`/`delta`
+    /// gates; the GUP gate ships cumulative G instead).
+    pending_grad: Vec<Option<ParamVec>>,
+    /// δ-gate decision computed with the iteration.
+    pending_push: Vec<bool>,
+    /// δ-gate anchor: each worker's parameters at its last adopted
+    /// global.  The gate and the pushed gradient span *all* local
+    /// iterations since then, so gated-off progress accumulates
+    /// instead of being discarded at the next adopt.
+    anchor: Vec<Option<ParamVec>>,
+    /// Iteration clocks + blocked set (bounded staleness).
+    clock: Vec<u64>,
+    blocked: Vec<Option<f64>>,
+    /// §IV-A monitoring plane (dynalloc).
+    monitor: TimeMonitor,
+    pending_alloc: Vec<Option<Allocation>>,
+    pending_stall: Vec<f64>,
+    last_rebalance: f64,
+    dss_caps: Vec<usize>,
+}
+
+/// Event-loop shape: `asp`/`ssp`/`hermes` and every hybrid on the
+/// `asp`/`ssp` sync axis.
+fn run_event(env: &mut SimEnv, spec: FrameworkSpec) -> Result<()> {
+    let n = env.n_workers();
+    let mode = EventMode {
+        eta: env.cfg.hp.lr,
+        staleness: match spec.sync {
+            SyncPolicy::Staleness => Some(env.cfg.hp.ssp_staleness as u64),
+            _ => None,
+        },
+        delta: match spec.gate {
+            GatePolicy::Delta => Some(env.cfg.hp.selsync_delta),
+            _ => None,
+        },
+        gup: spec.gate == GatePolicy::Gup,
+        monitored: spec.alloc == AllocPolicy::Dynamic,
+    };
+    let mut planes = EventPlanes {
+        pending_grad: (0..n).map(|_| None).collect(),
+        pending_push: vec![false; n],
+        anchor: (0..n).map(|_| None).collect(),
+        clock: vec![0; n],
+        blocked: vec![None; n],
+        monitor: TimeMonitor::new(n),
+        pending_alloc: vec![None; n],
+        pending_stall: vec![0.0; n],
+        last_rebalance: f64::MIN,
+        dss_caps: alloc_caps(env, spec.alloc == AllocPolicy::Dynamic),
+    };
+    // Snapshot scratch for delta gradients + the Alg. 2 cumulative-G
+    // buffer, leased once (pool bookkeeping only — no metrics effect).
+    let mut before = env.pool.acquire_like(&env.ps.params);
+    let mut g_scratch = env.pool.acquire_like(&env.ps.params);
+
+    // Bootstrap: model + dataset to every worker, then first iteration.
+    let model_b = env.model_bytes();
+    for w in 0..n {
+        let dss = env.workers[w].dss;
+        let comm = env.transfer(w, model_b) + env.transfer(w, env.dataset_bytes(dss));
+        env.workers[w].adopt_global(&env.ps.params, env.ps.version);
+        if mode.delta.is_some() {
+            let mut a = env.pool.acquire_like(&env.ps.params);
+            a.copy_from(&env.workers[w].state.params);
+            planes.anchor[w] = Some(a);
+        }
+        env.queue.push_at(comm, Ev::Tag { worker: w, tag: START });
+    }
+
+    while let Some((t, ev)) = env.queue.pop() {
+        if env.has_faults() {
+            let fd = env.apply_faults_up_to(t);
+            if let Some(s) = mode.staleness {
+                if fd.membership_changed {
+                    // Crashes move the *active* clock floor up (and
+                    // rejoins drag it down): re-check every blocked
+                    // worker so the bound can't wedge on a dead laggard.
+                    release_unblocked(env, &planes.clock, &mut planes.blocked, s, t);
+                }
+            }
+            if mode.delta.is_some() {
+                // A rejoin resync replaced the worker's model: its
+                // δ-gate span restarts from the adopted global.
+                for &w in &fd.rejoined {
+                    if let Some(a) = planes.anchor[w].as_mut() {
+                        a.copy_from(&env.workers[w].state.params);
+                    }
+                }
+            }
+            if env.is_crashed(ev.worker()) && !crate::faults::is_fault_tag(&ev) {
+                env.defer_to_rejoin(ev); // dead worker: chain resumes at rejoin
+                continue;
+            }
+        }
+        match ev {
+            Ev::Tag { worker: w, tag: START } => {
+                event_start_iteration(env, w, t, mode, &mut planes, &mut before)?;
+            }
+            Ev::TrainDone { worker: w } => {
+                if mode.staleness.is_some() {
+                    planes.clock[w] += 1;
+                }
+                let push = match spec.gate {
+                    GatePolicy::Every => true,
+                    GatePolicy::Delta => planes.pending_push[w],
+                    GatePolicy::Gup => env.workers[w].last_push_pending,
+                };
+                if push {
+                    if mode.gup {
+                        env.workers[w].last_push_pending = false;
+                    }
+                    let d = env.transfer(w, env.push_bytes());
+                    env.segment(w, t, t + d, SegmentKind::Comm);
+                    env.run.workers[w].push_times.push(t + d);
+                    env.queue.push_in(d, Ev::ArriveAtPs { worker: w });
+                } else {
+                    // Full independence: next iteration immediately.
+                    if env.iterations_exhausted() {
+                        break;
+                    }
+                    if let Some(s) = mode.staleness {
+                        // This worker's clock advanced without a PS
+                        // round trip: laggard progress may release
+                        // blocked peers, and this worker itself may now
+                        // be too far ahead.
+                        release_unblocked(env, &planes.clock, &mut planes.blocked, s, t);
+                        if planes.clock[w] > active_min_clock(env, &planes.clock) + s {
+                            planes.blocked[w] = Some(t);
+                            continue;
+                        }
+                    }
+                    event_start_iteration(env, w, t, mode, &mut planes, &mut before)?;
+                }
+            }
+            Ev::ArriveAtPs { worker: w } => {
+                if mode.gup {
+                    // Alg. 2 over the reused G buffer; the eval inside
+                    // loss-based SGD refreshed loss/acc — record it.
+                    env.workers[w].cumulative_g_into(&env.ps.w0, mode.eta, &mut g_scratch);
+                    let t_w = env.workers[w].last_loss;
+                    env.ps
+                        .loss_based_sgd(&g_scratch, t_w, env.rt.as_mut(), &env.probe)?;
+                    let now = env.queue.now();
+                    env.run
+                        .curve
+                        .push((now, env.ps.loss as f64, env.ps.accuracy));
+                    if env.check_convergence_after_external_eval()? {
+                        break;
+                    }
+                } else {
+                    let g = planes.pending_grad[w].take().expect("push without gradient");
+                    env.ps.async_sgd(&g);
+                    env.pool.release(g);
+                    if env.ps.updates % env.cfg.global_eval_every as u64 == 0
+                        && env.eval_global_and_check()?
+                    {
+                        break;
+                    }
+                }
+
+                // Asynchronous monitoring + dynamic allocation (§IV-A).
+                if mode.monitored && rebalance_due(env, &planes.monitor, planes.last_rebalance) {
+                    let now = env.queue.now();
+                    rebalance_event(env, &mut planes, now);
+                }
+
+                // Reply with the fresh global model.
+                let d = env.transfer(w, env.model_bytes());
+                env.queue.push_in(d, Ev::ArriveAtWorker { worker: w });
+                if let Some(s) = mode.staleness {
+                    // A slow worker advancing may release blocked ones.
+                    release_unblocked(env, &planes.clock, &mut planes.blocked, s, t);
+                }
+            }
+            Ev::ArriveAtWorker { worker: w } => {
+                env.workers[w].adopt_global(&env.ps.params, env.ps.version);
+                if mode.delta.is_some() {
+                    // Fresh global adopted: the δ-gate span restarts.
+                    if let Some(a) = planes.anchor[w].as_mut() {
+                        a.copy_from(&env.workers[w].state.params);
+                    }
+                }
+                if env.iterations_exhausted() {
+                    break;
+                }
+                if let Some(s) = mode.staleness {
+                    if planes.clock[w] > active_min_clock(env, &planes.clock) + s {
+                        // Too far ahead: block until the laggards catch up.
+                        planes.blocked[w] = Some(t);
+                        continue;
+                    }
+                }
+                event_start_iteration(env, w, t, mode, &mut planes, &mut before)?;
+            }
+            Ev::PrefetchDone { .. } => { /* data landed; alloc already staged */ }
+            Ev::Tag { .. } => {}
+        }
+    }
+    for slot in planes.anchor.iter_mut() {
+        if let Some(a) = slot.take() {
+            env.pool.release(a);
+        }
+    }
+    env.pool.release(g_scratch);
+    env.pool.release(before);
+    Ok(())
+}
+
+/// One local iteration in the event shape: stage any rebalanced
+/// allocation, run the compute, feed the monitoring plane, compute the
+/// gate's decision/gradient, and schedule the TrainDone.
+fn event_start_iteration(
+    env: &mut SimEnv,
+    w: usize,
+    t: f64,
+    mode: EventMode,
+    planes: &mut EventPlanes,
+    before: &mut ParamVec,
+) -> Result<()> {
+    if mode.monitored {
+        // Stage any prefetched allocation before the iteration.
+        if let Some(a) = planes.pending_alloc[w].take() {
+            env.workers[w].assign(a.dss, a.mbs.min(256));
+        }
+    }
+    let stall = if mode.monitored {
+        std::mem::take(&mut planes.pending_stall[w])
+    } else {
+        0.0
+    };
+    if !mode.gup && mode.delta.is_none() {
+        before.copy_from(&env.workers[w].state.params);
+    }
+    let (out, mut dur) = env.run_local_iteration(w)?;
+    if mode.monitored {
+        dur += stall; // synchronous dataset wait lands on the critical path
+        planes.monitor.record(w, dur);
+        env.allocs[w].modeled = dur;
+        // Lightweight TimeReport heartbeat (the PS's monitoring plane).
+        env.transfer(w, env.ctl_bytes());
+    }
+    if let Some(delta) = mode.delta {
+        // δ-gate: both the decision and the gradient span every local
+        // iteration since the last adopted global (the anchor), so the
+        // progress of gated-off iterations accumulates into the next
+        // push instead of being erased by the post-push adopt.
+        let anchor = planes.anchor[w].as_ref().expect("delta gate without anchor");
+        let rel = ParamVec::relative_change(&env.workers[w].state.params, anchor);
+        planes.pending_push[w] = rel > delta;
+        let mut g = planes.pending_grad[w]
+            .take()
+            .unwrap_or_else(|| env.pool.acquire_like(&env.ps.params));
+        anchor.delta_over_eta_into(&env.workers[w].state.params, mode.eta, &mut g);
+        planes.pending_grad[w] = Some(g);
+    } else if !mode.gup {
+        let mut g = planes.pending_grad[w]
+            .take()
+            .unwrap_or_else(|| env.pool.acquire_like(&env.ps.params));
+        before.delta_over_eta_into(&env.workers[w].state.params, mode.eta, &mut g);
+        planes.pending_grad[w] = Some(g);
+    }
+    env.segment(w, t, t + dur, SegmentKind::Train);
+    if mode.gup {
+        env.workers[w].last_push_pending = out.gate.push;
+    }
+    env.queue.push_in(dur, Ev::TrainDone { worker: w });
+    Ok(())
+}
+
+/// The §IV-A rebalancing pass of the event shape — staging + prefetch
+/// semantics identical to the reference Hermes driver.
+fn rebalance_event(env: &mut SimEnv, planes: &mut EventPlanes, now: f64) {
+    planes.last_rebalance = now;
+    let EventPlanes { monitor, dss_caps, pending_alloc, pending_stall, .. } = planes;
+    for_each_rebalance(env, monitor, dss_caps, now, |env, rb| {
+        // The data plane: prefetched (overlapped) or synchronous
+        // (stall charged on arrival).
+        let data_d = env.transfer(rb.worker, env.dataset_bytes(rb.alloc.dss));
+        pending_alloc[rb.worker] = Some(rb.alloc);
+        if env.cfg.prefetch {
+            // Overlapped: lands while the worker trains.
+            env.queue
+                .push_in(data_d, Ev::PrefetchDone { worker: rb.worker });
+        } else {
+            // Synchronous shipping: the worker stalls for the transfer
+            // before its next start.
+            env.charge_wait(rb.worker, data_d, now);
+            pending_stall[rb.worker] += data_d;
+        }
+    });
+}
+
+// ============================================================= lockstep
+
+/// Hard-barrier superstep shape: `bsp` and its `+gup`/`+dynalloc`
+/// hybrids.  Every round the PS broadcasts model + dataset, all active
+/// workers run one local iteration, the barrier waits for the slowest,
+/// and the gate's survivors push.
+fn run_lockstep(env: &mut SimEnv, spec: FrameworkSpec) -> Result<()> {
+    let eta = env.cfg.hp.lr;
+    let gup = spec.gate == GatePolicy::Gup;
+    let monitored = spec.alloc == AllocPolicy::Dynamic;
+    let n = env.n_workers();
+    let mut monitor = TimeMonitor::new(n);
+    let mut last_rebalance = f64::MIN;
+    let dss_caps = alloc_caps(env, monitored);
+    // Round-scoped scratch leased once and reused every round: the
+    // pre-iteration parameter snapshot, the per-worker gradients, and
+    // the Alg. 2 cumulative-G buffer for the GUP hybrid.
+    let mut before = env.pool.acquire_like(&env.ps.params);
+    let mut g_scratch = env.pool.acquire_like(&env.ps.params);
+    let mut grads: Vec<ParamVec> = Vec::with_capacity(n);
+    let mut pushers: Vec<usize> = Vec::new();
+    loop {
+        let t0 = env.queue.now();
+        // Crash/rejoin churn lands at superstep granularity: rejoined
+        // workers re-enter `active` and adopt the model in the round
+        // broadcast below (the barrier re-ships model + dataset).
+        if env.has_faults() {
+            env.apply_faults_up_to(t0);
+        }
+        let active = env.cluster.active_ids();
+        if active.is_empty() {
+            break;
+        }
+
+        // PS → workers: model + dataset (Fig. 2's "receive" components).
+        let model_b = env.model_bytes();
+        let mut starts = vec![0.0; n];
+        for &w in &active {
+            let dss = env.workers[w].dss;
+            let comm =
+                env.transfer(w, model_b) + env.transfer(w, env.dataset_bytes(dss));
+            starts[w] = t0 + comm;
+            env.segment(w, t0, starts[w], SegmentKind::Comm);
+            env.workers[w].adopt_global(&env.ps.params, env.ps.version);
+        }
+
+        // Local compute (real XLA steps; virtual duration via Eq. 3).
+        let mut finishes = vec![0.0; n];
+        pushers.clear();
+        for &w in &active {
+            if !gup {
+                before.copy_from(&env.workers[w].state.params);
+            }
+            let (out, dur) = env.run_local_iteration(w)?;
+            if monitored {
+                monitor.record(w, dur);
+                env.allocs[w].modeled = dur;
+            }
+            finishes[w] = starts[w] + dur;
+            env.segment(w, starts[w], finishes[w], SegmentKind::Train);
+            if gup {
+                if out.gate.push {
+                    pushers.push(w);
+                }
+            } else {
+                let mut g = env.pool.acquire_like(&env.ps.params);
+                before.delta_over_eta_into(&env.workers[w].state.params, eta, &mut g);
+                grads.push(g);
+            }
+        }
+
+        // Barrier: wait for the straggler.
+        let barrier = active.iter().map(|&w| finishes[w]).fold(0.0, f64::max);
+        for &w in &active {
+            env.charge_wait(w, barrier - finishes[w], finishes[w]);
+        }
+
+        // Workers → PS: the gate's survivors push; PS waits for all of
+        // them (under `every` that is the whole active set).
+        let push_set: &[usize] = if gup { &pushers } else { &active };
+        let push_b = env.push_bytes();
+        let mut ps_ready = barrier;
+        for &w in push_set {
+            let arr = barrier + env.transfer(w, push_b);
+            env.segment(w, barrier, arr, SegmentKind::Comm);
+            env.run.workers[w].push_times.push(arr);
+            ps_ready = ps_ready.max(arr);
+        }
+        env.queue.advance_to(ps_ready);
+
+        if gup {
+            for &w in &pushers {
+                env.workers[w].cumulative_g_into(&env.ps.w0, eta, &mut g_scratch);
+                let t_w = env.workers[w].last_loss;
+                env.ps
+                    .loss_based_sgd(&g_scratch, t_w, env.rt.as_mut(), &env.probe)?;
+            }
+        } else {
+            env.ps.sync_sgd(&grads);
+            for g in grads.drain(..) {
+                env.pool.release(g);
+            }
+        }
+        if monitored {
+            // The barrier re-ships the (re-sized) working set in the
+            // next round broadcast: only the assign message is charged.
+            rebalance_round(env, &monitor, &dss_caps, &mut last_rebalance, false);
+        }
+        if env.eval_global_and_check()? || env.iterations_exhausted() {
+            break;
+        }
+    }
+    env.pool.release(g_scratch);
+    env.pool.release(before);
+    Ok(())
+}
+
+// ========================================================= gated rounds
+
+/// δ-gated round shape: `selsync` and `selsync+dynalloc`.  Workers
+/// proceed at their own pace; a round synchronizes (barrier + SyncSGD +
+/// broadcast) only when some worker's relative parameter change exceeds
+/// δ, otherwise updates stay local and no communication happens.
+fn run_gated_rounds(env: &mut SimEnv, spec: FrameworkSpec) -> Result<()> {
+    let eta = env.cfg.hp.lr;
+    let delta = env.cfg.hp.selsync_delta;
+    let monitored = spec.alloc == AllocPolicy::Dynamic;
+    let n = env.n_workers();
+    let mut monitor = TimeMonitor::new(n);
+    let mut last_rebalance = f64::MIN;
+    let dss_caps = alloc_caps(env, monitored);
+
+    // SelDP re-partition: one global shuffle, disjoint slices (§II-E).
+    let (train_idx, _) = env.ds.split(0.85, env.cfg.seed);
+    let shards =
+        partition_pools(&env.ds, &train_idx, n, Partition::SelDp, env.cfg.seed);
+    for (w, shard) in shards.into_iter().enumerate() {
+        env.workers[w].shard = shard;
+        let dss = env.workers[w].dss;
+        let mbs = env.workers[w].mbs;
+        env.workers[w].assign(dss, mbs);
+    }
+
+    // Initial broadcast.
+    let t0 = env.queue.now();
+    let model_b = env.model_bytes();
+    let mut ready = vec![t0; n];
+    for w in 0..n {
+        let dss = env.workers[w].dss;
+        let comm = env.transfer(w, model_b) + env.transfer(w, env.dataset_bytes(dss));
+        ready[w] = t0 + comm;
+        env.workers[w].adopt_global(&env.ps.params, env.ps.version);
+    }
+
+    // Pool-leased round scratch (snapshot + per-worker gradients).
+    let mut before = env.pool.acquire_like(&env.ps.params);
+    let mut grads: Vec<ParamVec> = Vec::with_capacity(n);
+    loop {
+        // Churn lands at round granularity: rejoined workers restart
+        // from now (resync traffic is charged by the fault engine).
+        if env.has_faults() {
+            let fd = env.apply_faults_up_to(env.queue.now());
+            for &w in &fd.rejoined {
+                ready[w] = env.queue.now();
+            }
+        }
+        let active = env.cluster.active_ids();
+        if active.is_empty() {
+            break;
+        }
+
+        // One local iteration on every active worker; measure the
+        // relative change.
+        let mut finishes = vec![0.0; n];
+        let mut rels = vec![0.0f64; n];
+        for &w in &active {
+            before.copy_from(&env.workers[w].state.params);
+            let (_out, dur) = env.run_local_iteration(w)?;
+            if monitored {
+                monitor.record(w, dur);
+                env.allocs[w].modeled = dur;
+            }
+            finishes[w] = ready[w] + dur;
+            env.segment(w, ready[w], finishes[w], SegmentKind::Train);
+            rels[w] =
+                ParamVec::relative_change(&env.workers[w].state.params, &before);
+            let mut g = env.pool.acquire_like(&env.ps.params);
+            before.delta_over_eta_into(&env.workers[w].state.params, eta, &mut g);
+            grads.push(g);
+        }
+
+        let sync_round = active.iter().any(|&w| rels[w] > delta);
+        if sync_round {
+            // Barrier + push + SyncSGD + broadcast.
+            let barrier = active
+                .iter()
+                .map(|&w| finishes[w])
+                .fold(env.queue.now(), f64::max);
+            let push_b = env.push_bytes();
+            let mut ps_ready = barrier;
+            for &w in &active {
+                env.charge_wait(w, barrier - finishes[w], finishes[w]);
+                let arr = barrier + env.transfer(w, push_b);
+                env.run.workers[w].push_times.push(arr);
+                ps_ready = ps_ready.max(arr);
+            }
+            env.queue.advance_to(ps_ready);
+            env.ps.sync_sgd(&grads);
+            for g in grads.drain(..) {
+                env.pool.release(g);
+            }
+            let t1 = env.queue.now();
+            for &w in &active {
+                let comm = env.transfer(w, model_b);
+                ready[w] = t1 + comm;
+                env.workers[w].adopt_global(&env.ps.params, env.ps.version);
+            }
+            if monitored {
+                // Sync rounds are the only time the PS hears from the
+                // workers: rebalance here, shipping the re-sized data.
+                rebalance_round(env, &monitor, &dss_caps, &mut last_rebalance, true);
+            }
+            if env.eval_global_and_check()? {
+                break;
+            }
+        } else {
+            // Local round: no communication, everyone proceeds.
+            for g in grads.drain(..) {
+                env.pool.release(g);
+            }
+            for &w in &active {
+                ready[w] = finishes[w];
+            }
+            // The PS model is unchanged; advance the clock to the
+            // median progress point so the curve stays time-indexed.
+            let mut fs: Vec<f64> = active.iter().map(|&w| finishes[w]).collect();
+            fs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            env.queue.advance_to(fs[fs.len() / 2].max(env.queue.now()));
+        }
+        if env.iterations_exhausted() {
+            break;
+        }
+    }
+    env.pool.release(before);
+    Ok(())
+}
+
+// ============================================================== elastic
+
+/// Elastic-barrier shape: `ebsp` and its hybrids.  The PS benchmarks
+/// every node, then each round places the barrier (within lookahead R)
+/// where predicted waiting is minimized; fast workers run several local
+/// iterations per round.  Under `delta`/`gup` only gated workers push
+/// at the barrier.
+fn run_elastic(env: &mut SimEnv, spec: FrameworkSpec) -> Result<()> {
+    let eta = env.cfg.hp.lr;
+    let lookahead = env.cfg.hp.ebsp_lookahead;
+    let delta = env.cfg.hp.selsync_delta;
+    let gup = spec.gate == GatePolicy::Gup;
+    let gate_every = spec.gate == GatePolicy::Every;
+    let monitored = spec.alloc == AllocPolicy::Dynamic;
+    let n = env.n_workers();
+    let mut monitor = TimeMonitor::new(n);
+    let mut last_rebalance = f64::MIN;
+    let dss_caps = alloc_caps(env, monitored);
+
+    // ---- Benchmark phase: one profiled iteration per node.
+    if env.has_faults() {
+        env.apply_faults_up_to(0.0); // faults planned at t=0 pre-empt the bench
+    }
+    let heavy = env.rt.meta().param_count >= HEAVY_PARAMS;
+    let mut bench_end = 0.0f64;
+    let mut predicted = vec![0.0f64; n];
+    for w in 0..n {
+        if env.is_crashed(w) {
+            continue;
+        }
+        let node = env.cluster.node(w);
+        if heavy && (node.vcpu as f64 * node.ram_gb) < CRASH_CAPACITY {
+            // Benchmarking overload: the node dies (Table III footnote).
+            env.cluster.crash(w);
+            continue;
+        }
+        let (_out, dur) = env.run_local_iteration(w)?;
+        let t = dur * BENCH_OVERHEAD;
+        predicted[w] = dur;
+        env.segment(w, 0.0, t, SegmentKind::Train);
+        bench_end = bench_end.max(t);
+    }
+    env.queue.advance_to(bench_end);
+
+    // If benchmarking killed a meaningful share of the cluster, the
+    // run is effectively failed (the paper reports "-" for this cell);
+    // we still train with the survivors so the metrics show the wreck.
+    let active = env.cluster.active_ids();
+    if active.is_empty() {
+        return Ok(());
+    }
+
+    // ---- Elastic rounds.
+    // Pool-leased round scratch (snapshot + per-worker gradients + the
+    // Alg. 2 cumulative-G buffer for the GUP hybrid).
+    let mut before = env.pool.acquire_like(&env.ps.params);
+    let mut g_scratch = env.pool.acquire_like(&env.ps.params);
+    let mut grads: Vec<ParamVec> = Vec::with_capacity(n);
+    let mut pushers: Vec<usize> = Vec::new();
+    loop {
+        let t0 = env.queue.now();
+        // Churn lands at round granularity; rejoined workers get a
+        // fresh Eq. 3 prediction so the barrier placement stays sane.
+        if env.has_faults() {
+            let fd = env.apply_faults_up_to(t0);
+            for &w in &fd.rejoined {
+                predicted[w] = env.cluster.predict_time(
+                    w,
+                    env.cfg.hp.epochs,
+                    env.workers[w].dss,
+                    env.workers[w].mbs,
+                );
+            }
+        }
+        let active = env.cluster.active_ids();
+        if active.is_empty() {
+            break;
+        }
+
+        // PS → workers: model broadcast.
+        let model_b = env.model_bytes();
+        let mut starts = vec![t0; n];
+        for &w in &active {
+            let comm = env.transfer(w, model_b);
+            starts[w] = t0 + comm;
+            env.workers[w].adopt_global(&env.ps.params, env.ps.version);
+        }
+
+        // Choose the barrier: candidates are each worker's k-th finish
+        // time within the lookahead; minimize total waiting (Zipline).
+        let mut candidates: Vec<f64> = Vec::new();
+        for &w in &active {
+            let d = predicted[w].max(1e-6);
+            let mut k = 1;
+            while starts[w] + k as f64 * d <= t0 + lookahead && k < 16 {
+                candidates.push(starts[w] + k as f64 * d);
+                k += 1;
+            }
+        }
+        // Ensure at least one candidate: everyone's first finish.
+        let first_all = active
+            .iter()
+            .map(|&w| starts[w] + predicted[w])
+            .fold(0.0, f64::max);
+        candidates.push(first_all);
+        let wait_at = |barrier: f64| -> f64 {
+            active
+                .iter()
+                .map(|&w| {
+                    let d = predicted[w].max(1e-6);
+                    if barrier < starts[w] + d {
+                        return f64::INFINITY; // someone can't finish once
+                    }
+                    let k = ((barrier - starts[w]) / d).floor();
+                    barrier - (starts[w] + k * d)
+                })
+                .sum()
+        };
+        let barrier = candidates
+            .iter()
+            .copied()
+            .min_by(|a, b| wait_at(*a).partial_cmp(&wait_at(*b)).unwrap())
+            .unwrap_or(first_all)
+            .max(first_all.min(t0 + lookahead));
+
+        // Workers run as many local iterations as fit before the
+        // barrier (real compute per iteration), then wait.
+        pushers.clear();
+        for &w in &active {
+            before.copy_from(&env.workers[w].state.params);
+            let mut t = starts[w];
+            let mut ran = 0;
+            let mut fired = false;
+            loop {
+                // Always run at least one iteration.
+                let (out, dur) = env.run_local_iteration(w)?;
+                if monitored {
+                    monitor.record(w, dur);
+                    env.allocs[w].modeled = dur;
+                }
+                env.segment(w, t, t + dur, SegmentKind::Train);
+                t += dur;
+                ran += 1;
+                fired |= out.gate.push;
+                predicted[w] = 0.7 * predicted[w] + 0.3 * dur; // EWMA refresh
+                if t + predicted[w] > barrier || ran >= 16 {
+                    break;
+                }
+            }
+            env.charge_wait(w, barrier - t, t);
+            if gup {
+                if fired {
+                    pushers.push(w);
+                }
+            } else {
+                // `every` pushes unconditionally — the O(params) δ
+                // reduction runs only when the δ gate is active.
+                let push = gate_every
+                    || ParamVec::relative_change(&env.workers[w].state.params, &before) > delta;
+                if push {
+                    let mut g = env.pool.acquire_like(&env.ps.params);
+                    before.delta_over_eta_into(&env.workers[w].state.params, eta, &mut g);
+                    pushers.push(w);
+                    grads.push(g);
+                }
+            }
+        }
+
+        // Push + aggregate: under `every` the whole active set pushes
+        // (and `pushers == active`); otherwise only the gated subset.
+        let push_set: &[usize] = if gate_every { &active } else { &pushers };
+        let push_b = env.push_bytes();
+        let mut ps_ready = barrier;
+        for &w in push_set {
+            let arr = barrier + env.transfer(w, push_b);
+            env.run.workers[w].push_times.push(arr);
+            ps_ready = ps_ready.max(arr);
+        }
+        env.queue.advance_to(ps_ready);
+        if gup {
+            for &w in &pushers {
+                env.workers[w].cumulative_g_into(&env.ps.w0, eta, &mut g_scratch);
+                let t_w = env.workers[w].last_loss;
+                env.ps
+                    .loss_based_sgd(&g_scratch, t_w, env.rt.as_mut(), &env.probe)?;
+            }
+        } else if !grads.is_empty() {
+            env.ps.sync_sgd(&grads);
+            for g in grads.drain(..) {
+                env.pool.release(g);
+            }
+        }
+        if monitored {
+            // EBSP never re-ships datasets: charge the data plane here.
+            rebalance_round(env, &monitor, &dss_caps, &mut last_rebalance, true);
+        }
+        if env.eval_global_and_check()? || env.iterations_exhausted() {
+            break;
+        }
+    }
+    env.pool.release(g_scratch);
+    env.pool.release(before);
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::config::RunConfig;
+    use crate::frameworks::common::run_framework;
+    use crate::frameworks::policy;
+    use crate::metrics::RunMetrics;
+    use crate::runtime::MockRuntime;
+
+    fn long_cfg(spec: &str) -> RunConfig {
+        let mut cfg = RunConfig::preset_test(spec);
+        // Don't converge early: exercise the monitoring/gating planes.
+        cfg.target_acc = 0.9999;
+        cfg.hp.patience = 1000;
+        cfg.max_iters = 400;
+        cfg
+    }
+
+    fn run(cfg: RunConfig) -> RunMetrics {
+        run_framework(cfg, Box::new(MockRuntime::new())).unwrap()
+    }
+
+    #[test]
+    fn every_hybrid_spec_completes_on_mock() {
+        for spec in policy::hybrid_specs() {
+            let mut cfg = RunConfig::preset_test(&spec.to_string());
+            cfg.max_iters = 24;
+            cfg.dss0 = 64;
+            cfg.target_acc = 1.1;
+            cfg.hp.patience = 1000;
+            let r = run(cfg);
+            assert!(r.iterations > 0, "{spec}: no iterations");
+            assert!(r.final_loss.is_finite(), "{spec}: loss");
+            assert!(r.virtual_time > 0.0, "{spec}: no time");
+        }
+    }
+
+    fn realloc_count(r: &RunMetrics) -> usize {
+        r.workers.iter().map(|w| w.allocations.len()).sum()
+    }
+
+    #[test]
+    fn bsp_dynalloc_rebalances_while_keeping_lockstep_wi() {
+        let plain = run(long_cfg("bsp"));
+        let hybrid = run(long_cfg("bsp+dynalloc"));
+        assert_eq!(realloc_count(&plain), 0, "static bsp must never rebalance");
+        assert!(realloc_count(&hybrid) > 0, "bsp+dynalloc never rebalanced");
+        // The hard barrier is untouched: one model adopt per iteration.
+        let wi = hybrid.wi_avg();
+        assert!((wi - 1.0).abs() < 1e-9, "WI {wi}");
+    }
+
+    #[test]
+    fn ssp_gup_pushes_sparsely_and_respects_the_bound() {
+        let mut cfg = long_cfg("ssp+gup");
+        cfg.hp.ssp_staleness = 4;
+        let r = run(cfg);
+        assert!(r.iterations > 0);
+        // The GUP gate is selective: pushes ≪ iterations, WI ≫ 1.
+        assert!(
+            r.total_pushes() * 2 < r.iterations,
+            "pushes {} vs iters {}",
+            r.total_pushes(),
+            r.iterations
+        );
+        assert!(r.wi_avg() > 1.5, "WI {}", r.wi_avg());
+        // The staleness bound still limits the iteration spread.
+        let iters: Vec<u64> = r.workers.iter().map(|w| w.iterations).collect();
+        let spread = iters.iter().max().unwrap() - iters.iter().min().unwrap();
+        assert!(spread <= 4 + 8, "spread {spread} exceeds the bound");
+    }
+
+    #[test]
+    fn selsync_dynalloc_rebalances_only_in_the_hybrid() {
+        let plain = run(long_cfg("selsync"));
+        let hybrid = run(long_cfg("selsync+dynalloc"));
+        assert_eq!(realloc_count(&plain), 0);
+        assert!(realloc_count(&hybrid) > 0, "selsync+dynalloc never rebalanced");
+    }
+
+    #[test]
+    fn asp_delta_gates_pushes_but_accumulates_progress() {
+        let mut cfg = long_cfg("asp+delta");
+        cfg.hp.selsync_delta = 0.02;
+        let r = run(cfg);
+        assert!(r.iterations > 0);
+        // The δ gate is selective once learning flattens…
+        assert!(
+            r.total_pushes() < r.iterations,
+            "pushes {} vs iters {}",
+            r.total_pushes(),
+            r.iterations
+        );
+        // …and pushes span all local iterations since the last adopt,
+        // so the PS still learns from gated-off progress.
+        assert!(r.final_loss < 2.0, "loss {}", r.final_loss);
+    }
+
+    #[test]
+    fn bsp_gup_filters_pushes_at_the_barrier() {
+        let r = run(long_cfg("bsp+gup"));
+        assert!(r.iterations > 0);
+        assert!(
+            r.total_pushes() < r.iterations,
+            "gated lockstep must push less than once per iteration"
+        );
+    }
+}

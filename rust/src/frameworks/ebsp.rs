@@ -9,6 +9,11 @@
 //! * on the heavy model it overloads weak nodes — Table III's footnote
 //!   ("several workers crashing") — which we inject deterministically
 //!   for nodes with `vcpu · ram_gb` below the heavy-model threshold.
+//!
+//! *Reference driver*: frozen executable specification of the `ebsp`
+//! preset.  Production dispatch runs the same discipline through the
+//! generic policy driver ([`super::driver`], DESIGN.md §14), proven
+//! bit-identical in `tests/coordinator_props.rs`.
 
 use anyhow::Result;
 
@@ -18,12 +23,13 @@ use crate::tensor::ParamVec;
 
 /// Benchmarking runs the full workload with profiling instrumentation:
 /// the paper calls out its "high compute power required"; we charge 2×.
-const BENCH_OVERHEAD: f64 = 2.0;
+/// Shared with the generic driver's elastic mode (DESIGN.md §14).
+pub(crate) const BENCH_OVERHEAD: f64 = 2.0;
 
 /// Heavy-model crash rule: nodes with vcpu·ram_gb below this crash
 /// during benchmarking when the model has ≥ 0.5M parameters.
-const CRASH_CAPACITY: f64 = 4.0;
-const HEAVY_PARAMS: usize = 500_000;
+pub(crate) const CRASH_CAPACITY: f64 = 4.0;
+pub(crate) const HEAVY_PARAMS: usize = 500_000;
 
 pub fn run(env: &mut SimEnv) -> Result<()> {
     let eta = env.cfg.hp.lr;
@@ -184,12 +190,8 @@ mod tests {
     use crate::runtime::MockRuntime;
 
     fn cfg() -> RunConfig {
-        let mut cfg = RunConfig::new("mock", "ebsp");
-        cfg.hp.lr = 0.5;
+        let mut cfg = RunConfig::preset_test("ebsp");
         cfg.hp.ebsp_lookahead = 20.0;
-        cfg.max_iters = 400;
-        cfg.dss0 = 128;
-        cfg.target_acc = 0.85;
         cfg
     }
 
@@ -215,7 +217,7 @@ mod tests {
     fn ebsp_waits_less_than_bsp() {
         let e = run_framework(cfg(), Box::new(MockRuntime::new())).unwrap();
         let mut bcfg = cfg();
-        bcfg.framework = "bsp".into();
+        bcfg.framework = "bsp".parse().unwrap();
         let b = run_framework(bcfg, Box::new(MockRuntime::new())).unwrap();
         let wait = |r: &crate::metrics::RunMetrics| {
             r.workers.iter().map(|w| w.wait_time).sum::<f64>()

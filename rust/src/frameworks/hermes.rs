@@ -10,6 +10,11 @@
 //!   the cluster-median time via the **dual binary search** (§IV-A),
 //!   prefetching the re-sized dataset so nobody stalls (§IV-D).
 //! * Tensor traffic is fp16-compressed when `net.fp16_wire` is on.
+//!
+//! *Reference driver*: frozen executable specification of the `hermes`
+//! preset.  Production dispatch runs the same discipline through the
+//! generic policy driver ([`super::driver`], DESIGN.md §14), proven
+//! bit-identical in `tests/coordinator_props.rs`.
 
 use anyhow::Result;
 
@@ -20,8 +25,9 @@ use crate::sim::Ev;
 
 const START: u32 = 0;
 
-/// Minimum virtual seconds between PS rebalancing passes.
-const REBALANCE_EVERY: f64 = 4.0;
+/// Minimum virtual seconds between PS rebalancing passes.  Shared with
+/// the generic driver's dynamic-allocation plane (DESIGN.md §14).
+pub(crate) const REBALANCE_EVERY: f64 = 4.0;
 
 pub fn run(env: &mut SimEnv) -> Result<()> {
     let eta = env.cfg.hp.lr;
@@ -202,12 +208,9 @@ mod tests {
     use crate::runtime::MockRuntime;
 
     fn cfg() -> RunConfig {
-        let mut cfg = RunConfig::new("mock", "hermes");
-        cfg.hp.lr = 0.5;
+        let mut cfg = RunConfig::preset_test("hermes");
         cfg.hp.alpha = -1.0;
         cfg.max_iters = 500;
-        cfg.dss0 = 128;
-        cfg.target_acc = 0.85;
         cfg
     }
 
@@ -235,7 +238,7 @@ mod tests {
     fn hermes_communicates_less_than_asp() {
         let h = run_framework(cfg(), Box::new(MockRuntime::new())).unwrap();
         let mut acfg = cfg();
-        acfg.framework = "asp".into();
+        acfg.framework = "asp".parse().unwrap();
         let a = run_framework(acfg, Box::new(MockRuntime::new())).unwrap();
         let h_rate = h.bytes as f64 / h.iterations.max(1) as f64;
         let a_rate = a.bytes as f64 / a.iterations.max(1) as f64;

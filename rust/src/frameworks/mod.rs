@@ -1,25 +1,38 @@
 //! Framework drivers: the paper's Hermes plus every baseline it
-//! evaluates against, all explicit state machines over the shared
+//! evaluates against, factored into three composable policy axes
+//! (DESIGN.md §14) executed by one generic driver over the shared
 //! [`common::SimEnv`] (real XLA compute, virtual Eq. 3 time).
 //!
-//! | driver    | paper section | sync discipline                        |
+//! | preset    | paper section | spec (sync × gate × alloc)             |
 //! |-----------|---------------|----------------------------------------|
-//! | `bsp`     | §II-A         | hard barrier every round (Eq. 1)       |
-//! | `asp`     | §II-B         | none (Eq. 2)                           |
-//! | `ssp`     | §II-C         | bounded staleness `s`                  |
-//! | `ebsp`    | §II-D         | elastic barrier within lookahead `R`   |
-//! | `selsync` | §II-E         | relative-gradient-change gate `δ`      |
-//! | `hermes`  | §IV           | GUP gate + loss-based SGD + dual search|
+//! | `bsp`     | §II-A         | hard barrier × every × static          |
+//! | `asp`     | §II-B         | async × every × static                 |
+//! | `ssp`     | §II-C         | bounded staleness × every × static     |
+//! | `ebsp`    | §II-D         | elastic barrier × every × static       |
+//! | `selsync` | §II-E         | hard barrier × δ-gate × static         |
+//! | `hermes`  | §IV           | async × GUP × dynalloc                 |
+//!
+//! Any other grid point — `bsp+dynalloc`, `ssp+gup`,
+//! `selsync+dynalloc`, … — is a first-class [`FrameworkSpec`] the same
+//! driver executes ([`driver`]).  The per-preset modules in this
+//! directory are the *reference drivers*: frozen executable
+//! specifications the generic driver is proven bit-identical against
+//! (`tests/coordinator_props.rs`); production dispatch goes through
+//! [`run_framework`] → [`driver::run_spec`].
 
 pub mod asp;
 pub mod bsp;
 pub mod common;
+pub mod driver;
 pub mod ebsp;
 pub mod hermes;
+pub mod policy;
 pub mod selsync;
 pub mod ssp;
 
-pub use common::{run_framework, run_framework_opts, SimEnv};
-
-/// All framework names, in the paper's presentation order.
-pub const ALL: [&str; 6] = ["bsp", "asp", "ssp", "ebsp", "selsync", "hermes"];
+pub use common::{
+    run_framework, run_framework_opts, run_reference, run_reference_opts, SimEnv,
+};
+pub use policy::{
+    AllocPolicy, FrameworkSpec, GatePolicy, SpecError, SyncPolicy, PRESETS,
+};

@@ -1,0 +1,388 @@
+//! Composable framework-policy specs (DESIGN.md §14).
+//!
+//! The paper's design space factors into three independently tunable
+//! disciplines: *how* the cluster synchronizes ([`SyncPolicy`], §II),
+//! *when* a worker pushes ([`GatePolicy`], Alg. 1), and *how* data is
+//! (re)allocated across heterogeneous nodes ([`AllocPolicy`], §IV-A).
+//! A [`FrameworkSpec`] picks one point per axis; the six canonical
+//! frameworks are named presets over the same grid, and every other
+//! composition (`bsp+dynalloc`, `ssp+gup`, `selsync+dynalloc`, …) is a
+//! first-class spec the generic driver ([`super::driver`]) executes.
+//!
+//! Spec grammar (`FromStr`): `<first>[+<gate>][+<alloc>]` where
+//! `<first>` is a preset name (`bsp asp ssp ebsp selsync hermes`),
+//! `<gate>` ∈ {`every`, `delta`, `gup`} and `<alloc>` ∈ {`static`,
+//! `dynalloc`}.  The preset seeds all three axes; later tokens
+//! override one axis each (at most once).  `Display` renders the
+//! preset name when the spec matches one, else the canonical
+//! `<sync>[+<gate>][+<alloc>]` form — `FromStr ∘ Display` is the
+//! identity on every spec in the grid.
+
+use std::fmt;
+use std::str::FromStr;
+
+/// Barrier discipline: how workers synchronize with the PS (§II).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum SyncPolicy {
+    /// Hard barrier every superstep (BSP, §II-A).
+    Barrier,
+    /// Elastic barrier within the lookahead limit R (EBSP, §II-D).
+    Elastic,
+    /// Bounded staleness `s` over an async event loop (SSP, §II-C).
+    Staleness,
+    /// No barrier at all (ASP, §II-B / Hermes, §IV).
+    Async,
+}
+
+/// Push decision: when a worker's local progress travels to the PS.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum GatePolicy {
+    /// Push after every local iteration (the §II baselines).
+    Every,
+    /// Relative-gradient-change gate δ (SelSync, §II-E).  Under a hard
+    /// barrier this gates whole rounds (sync vs local); in event-driven
+    /// mode it gates each worker's own pushes on the relative change
+    /// since its last adopted global (so gated-off local progress
+    /// accumulates into the next push); in elastic mode it gates each
+    /// worker's round-end push.
+    Delta,
+    /// HermesGUP z-score gate (Alg. 1).  Gated pushes carry the
+    /// cumulative gradient G and aggregate via loss-based SGD (Alg. 2)
+    /// — the paper treats Alg. 1/2 as one protocol, so the aggregator
+    /// follows the gate.
+    Gup,
+}
+
+/// Dataset (re)allocation across heterogeneous nodes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum AllocPolicy {
+    /// The bootstrap split stays fixed for the whole run.
+    Static,
+    /// Hermes monitoring plane + dual binary search (§IV-A): TimeReport
+    /// heartbeats, IQR outlier detection, DSS/MBS retargeting.
+    Dynamic,
+}
+
+/// One point in the composition grid: sync × gate × alloc.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct FrameworkSpec {
+    pub sync: SyncPolicy,
+    pub gate: GatePolicy,
+    pub alloc: AllocPolicy,
+}
+
+/// The six canonical frameworks, in the paper's presentation order.
+pub const PRESETS: [&str; 6] = ["bsp", "asp", "ssp", "ebsp", "selsync", "hermes"];
+
+/// Resolve a preset name to its spec.
+pub fn preset(name: &str) -> Option<FrameworkSpec> {
+    use AllocPolicy::*;
+    use GatePolicy::*;
+    use SyncPolicy::*;
+    let spec = |sync, gate, alloc| FrameworkSpec { sync, gate, alloc };
+    match name {
+        "bsp" => Some(spec(Barrier, Every, Static)),
+        "asp" => Some(spec(Async, Every, Static)),
+        "ssp" => Some(spec(Staleness, Every, Static)),
+        "ebsp" => Some(spec(Elastic, Every, Static)),
+        "selsync" => Some(spec(Barrier, Delta, Static)),
+        "hermes" => Some(spec(Async, Gup, Dynamic)),
+        _ => None,
+    }
+}
+
+/// The preset name of `spec`, when it is one of the canonical six.
+pub fn preset_name(spec: &FrameworkSpec) -> Option<&'static str> {
+    PRESETS.iter().copied().find(|name| preset(name) == Some(*spec))
+}
+
+impl SyncPolicy {
+    /// The grammar token (also the preset that carries this sync).
+    pub fn token(&self) -> &'static str {
+        match self {
+            SyncPolicy::Barrier => "bsp",
+            SyncPolicy::Elastic => "ebsp",
+            SyncPolicy::Staleness => "ssp",
+            SyncPolicy::Async => "asp",
+        }
+    }
+}
+
+impl GatePolicy {
+    pub fn token(&self) -> &'static str {
+        match self {
+            GatePolicy::Every => "every",
+            GatePolicy::Delta => "delta",
+            GatePolicy::Gup => "gup",
+        }
+    }
+}
+
+impl AllocPolicy {
+    pub fn token(&self) -> &'static str {
+        match self {
+            AllocPolicy::Static => "static",
+            AllocPolicy::Dynamic => "dynalloc",
+        }
+    }
+}
+
+fn gate_token(tok: &str) -> Option<GatePolicy> {
+    match tok {
+        "every" => Some(GatePolicy::Every),
+        "delta" => Some(GatePolicy::Delta),
+        "gup" => Some(GatePolicy::Gup),
+        _ => None,
+    }
+}
+
+fn alloc_token(tok: &str) -> Option<AllocPolicy> {
+    match tok {
+        "static" => Some(AllocPolicy::Static),
+        "dynalloc" => Some(AllocPolicy::Dynamic),
+        _ => None,
+    }
+}
+
+/// One line describing every valid spec — appended to parse errors so
+/// a typo at the CLI or in a JSON config lists its alternatives.
+pub fn spec_help() -> String {
+    format!(
+        "valid specs: presets {} or compositions \
+         <preset>[+<gate>][+<alloc>] with gate one of every|delta|gup \
+         and alloc one of static|dynalloc (e.g. bsp+dynalloc, ssp+gup, \
+         selsync+dynalloc)",
+        PRESETS.join(" ")
+    )
+}
+
+/// Typed parse error for framework specs: what was rejected, why, and
+/// what would have been accepted.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SpecError {
+    /// The full input being parsed.
+    pub input: String,
+    /// The offending token (may equal `input`).
+    pub token: String,
+    /// What went wrong with it.
+    pub reason: String,
+}
+
+impl SpecError {
+    fn new(input: &str, token: &str, reason: impl Into<String>) -> SpecError {
+        SpecError {
+            input: input.to_string(),
+            token: token.to_string(),
+            reason: reason.into(),
+        }
+    }
+}
+
+impl fmt::Display for SpecError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "invalid framework spec '{}': {} ('{}'); {}",
+            self.input,
+            self.reason,
+            self.token,
+            spec_help()
+        )
+    }
+}
+
+impl std::error::Error for SpecError {}
+
+impl FromStr for FrameworkSpec {
+    type Err = SpecError;
+
+    fn from_str(s: &str) -> Result<Self, SpecError> {
+        let input = s.trim();
+        if input.is_empty() {
+            return Err(SpecError::new(s, s, "empty spec"));
+        }
+        let mut toks = input.split('+');
+        let first = toks.next().unwrap_or_default().trim();
+        let mut spec = preset(first)
+            .ok_or_else(|| SpecError::new(input, first, "unknown preset"))?;
+        let (mut gate_set, mut alloc_set) = (false, false);
+        for tok in toks {
+            let tok = tok.trim();
+            if let Some(g) = gate_token(tok) {
+                if gate_set {
+                    return Err(SpecError::new(input, tok, "gate set twice"));
+                }
+                spec.gate = g;
+                gate_set = true;
+            } else if let Some(a) = alloc_token(tok) {
+                if alloc_set {
+                    return Err(SpecError::new(input, tok, "alloc set twice"));
+                }
+                spec.alloc = a;
+                alloc_set = true;
+            } else {
+                return Err(SpecError::new(input, tok, "unknown axis token"));
+            }
+        }
+        Ok(spec)
+    }
+}
+
+impl fmt::Display for FrameworkSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if let Some(name) = preset_name(self) {
+            return f.write_str(name);
+        }
+        f.write_str(self.sync.token())?;
+        if self.gate != GatePolicy::Every {
+            write!(f, "+{}", self.gate.token())?;
+        }
+        if self.alloc != AllocPolicy::Static {
+            write!(f, "+{}", self.alloc.token())?;
+        }
+        Ok(())
+    }
+}
+
+/// The full composition grid (sync-major, then gate, then alloc):
+/// 4 × 3 × 2 = 24 specs, the six presets included, in a deterministic
+/// order — the `hermes exp scale --grid hybrid` axis.
+pub fn grid_specs() -> Vec<FrameworkSpec> {
+    let mut out = Vec::with_capacity(24);
+    for sync in [
+        SyncPolicy::Barrier,
+        SyncPolicy::Async,
+        SyncPolicy::Staleness,
+        SyncPolicy::Elastic,
+    ] {
+        for gate in [GatePolicy::Every, GatePolicy::Delta, GatePolicy::Gup] {
+            for alloc in [AllocPolicy::Static, AllocPolicy::Dynamic] {
+                out.push(FrameworkSpec { sync, gate, alloc });
+            }
+        }
+    }
+    out
+}
+
+/// [`grid_specs`] minus the six presets: the 18 compositions no seed
+/// driver ever covered.
+pub fn hybrid_specs() -> Vec<FrameworkSpec> {
+    grid_specs()
+        .into_iter()
+        .filter(|s| preset_name(s).is_none())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_resolve_and_roundtrip() {
+        for name in PRESETS {
+            let spec = preset(name).unwrap();
+            assert_eq!(preset_name(&spec), Some(name));
+            assert_eq!(spec.to_string(), name);
+            assert_eq!(name.parse::<FrameworkSpec>().unwrap(), spec);
+        }
+    }
+
+    #[test]
+    fn canonical_presets_match_the_paper_table() {
+        let bsp = preset("bsp").unwrap();
+        assert_eq!(
+            (bsp.sync, bsp.gate, bsp.alloc),
+            (SyncPolicy::Barrier, GatePolicy::Every, AllocPolicy::Static)
+        );
+        let selsync = preset("selsync").unwrap();
+        assert_eq!(selsync.gate, GatePolicy::Delta);
+        let hermes = preset("hermes").unwrap();
+        assert_eq!(
+            (hermes.sync, hermes.gate, hermes.alloc),
+            (SyncPolicy::Async, GatePolicy::Gup, AllocPolicy::Dynamic)
+        );
+    }
+
+    #[test]
+    fn hybrid_specs_parse_and_compose() {
+        let s: FrameworkSpec = "bsp+dynalloc".parse().unwrap();
+        assert_eq!(
+            s,
+            FrameworkSpec {
+                sync: SyncPolicy::Barrier,
+                gate: GatePolicy::Every,
+                alloc: AllocPolicy::Dynamic,
+            }
+        );
+        let s: FrameworkSpec = "ssp+gup".parse().unwrap();
+        assert_eq!((s.sync, s.gate), (SyncPolicy::Staleness, GatePolicy::Gup));
+        assert_eq!(s.alloc, AllocPolicy::Static);
+        let s: FrameworkSpec = "selsync+dynalloc".parse().unwrap();
+        assert_eq!((s.gate, s.alloc), (GatePolicy::Delta, AllocPolicy::Dynamic));
+        // Composing hermes by hand lands on the same spec.
+        assert_eq!(
+            "asp+gup+dynalloc".parse::<FrameworkSpec>().unwrap(),
+            "hermes".parse::<FrameworkSpec>().unwrap()
+        );
+        // Explicit default tokens are accepted.
+        let explicit: FrameworkSpec = "bsp+every+static".parse().unwrap();
+        assert_eq!(explicit, preset("bsp").unwrap());
+    }
+
+    #[test]
+    fn display_fromstr_is_the_identity_on_the_grid() {
+        for spec in grid_specs() {
+            let rendered = spec.to_string();
+            assert_eq!(
+                rendered.parse::<FrameworkSpec>().unwrap(),
+                spec,
+                "{rendered} did not round-trip"
+            );
+        }
+    }
+
+    #[test]
+    fn grid_covers_everything_once() {
+        let grid = grid_specs();
+        assert_eq!(grid.len(), 24);
+        let mut seen = std::collections::HashSet::new();
+        for s in &grid {
+            assert!(seen.insert(*s), "duplicate spec {s}");
+        }
+        assert_eq!(hybrid_specs().len(), 24 - PRESETS.len());
+        for name in PRESETS {
+            assert!(grid.contains(&preset(name).unwrap()), "{name} missing");
+        }
+    }
+
+    #[test]
+    fn parse_errors_are_typed_and_list_valid_specs() {
+        let err = "bspp".parse::<FrameworkSpec>().unwrap_err();
+        assert_eq!(err.token, "bspp");
+        let msg = err.to_string();
+        for name in PRESETS {
+            assert!(msg.contains(name), "error must suggest '{name}': {msg}");
+        }
+        assert!(msg.contains("dynalloc"), "{msg}");
+        assert!(msg.contains("gup"), "{msg}");
+
+        let err = "bsp+warp".parse::<FrameworkSpec>().unwrap_err();
+        assert_eq!(err.token, "warp");
+        assert!(err.to_string().contains("unknown axis token"));
+
+        let err = "bsp+gup+delta".parse::<FrameworkSpec>().unwrap_err();
+        assert!(err.reason.contains("gate set twice"), "{err}");
+        assert!("".parse::<FrameworkSpec>().is_err());
+        // Axis tokens cannot lead: the sync axis must come from the
+        // preset in first position.
+        assert!("gup+bsp".parse::<FrameworkSpec>().is_err());
+    }
+
+    #[test]
+    fn whitespace_is_tolerated() {
+        assert_eq!(
+            " ssp + gup ".parse::<FrameworkSpec>().unwrap(),
+            "ssp+gup".parse::<FrameworkSpec>().unwrap()
+        );
+    }
+}

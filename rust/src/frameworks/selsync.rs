@@ -8,6 +8,11 @@
 //! The paper's critique — relative gradients are noisy, so the gate is
 //! unreliable — is measurable here: the `ablate_gate` bench compares
 //! this gate against HermesGUP on identical runs.
+//!
+//! *Reference driver*: frozen executable specification of the
+//! `selsync` preset.  Production dispatch runs the same discipline
+//! through the generic policy driver ([`super::driver`], DESIGN.md
+//! §14), proven bit-identical in `tests/coordinator_props.rs`.
 
 use anyhow::Result;
 
@@ -134,12 +139,9 @@ mod tests {
     use crate::runtime::MockRuntime;
 
     fn cfg(delta: f64) -> RunConfig {
-        let mut cfg = RunConfig::new("mock", "selsync");
-        cfg.hp.lr = 0.5;
+        let mut cfg = RunConfig::preset_test("selsync");
         cfg.hp.selsync_delta = delta;
         cfg.max_iters = 360;
-        cfg.dss0 = 128;
-        cfg.target_acc = 0.85;
         cfg
     }
 

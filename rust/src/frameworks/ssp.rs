@@ -1,6 +1,11 @@
 //! **SSP** (Stale Synchronous Parallel, §II-C): ASP plus a staleness
 //! bound — a worker may run at most `s` iterations ahead of the slowest
 //! worker; crossing the bound blocks it until the laggard catches up.
+//!
+//! *Reference driver*: frozen executable specification of the `ssp`
+//! preset.  Production dispatch runs the same discipline through the
+//! generic policy driver ([`super::driver`], DESIGN.md §14), proven
+//! bit-identical in `tests/coordinator_props.rs`.
 
 use anyhow::Result;
 
@@ -90,8 +95,9 @@ pub fn run(env: &mut SimEnv) -> Result<()> {
 }
 
 /// Minimum iteration clock over the *active* membership (crashed
-/// workers must not freeze the staleness floor).
-fn active_min_clock(env: &SimEnv, clock: &[u64]) -> u64 {
+/// workers must not freeze the staleness floor).  Shared with the
+/// generic driver's bounded-staleness mode (DESIGN.md §14).
+pub(crate) fn active_min_clock(env: &SimEnv, clock: &[u64]) -> u64 {
     clock
         .iter()
         .enumerate()
@@ -102,8 +108,9 @@ fn active_min_clock(env: &SimEnv, clock: &[u64]) -> u64 {
 }
 
 /// Unblock every worker back inside the staleness bound, charging its
-/// barrier wait and rescheduling its next iteration at `t`.
-fn release_unblocked(
+/// barrier wait and rescheduling its next iteration at `t`.  Shared
+/// with the generic driver's bounded-staleness mode (DESIGN.md §14).
+pub(crate) fn release_unblocked(
     env: &mut SimEnv,
     clock: &[u64],
     blocked: &mut [Option<f64>],
@@ -148,11 +155,8 @@ mod tests {
     use crate::runtime::MockRuntime;
 
     fn cfg(s: usize) -> RunConfig {
-        let mut cfg = RunConfig::new("mock", "ssp");
-        cfg.hp.lr = 0.5;
+        let mut cfg = RunConfig::preset_test("ssp");
         cfg.hp.ssp_staleness = s;
-        cfg.max_iters = 400;
-        cfg.dss0 = 128;
         // Don't let the run converge before the staleness gap builds.
         cfg.target_acc = 0.9999;
         cfg.hp.patience = 1000;

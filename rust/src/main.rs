@@ -12,6 +12,7 @@ use std::time::Duration;
 use hermes_dml::cli::Command;
 use hermes_dml::config::{ClusterConfig, HyperParams, RunConfig};
 use hermes_dml::exp;
+use hermes_dml::frameworks::FrameworkSpec;
 use hermes_dml::live::run_live;
 use hermes_dml::metrics::write_file;
 use hermes_dml::runtime::Manifest;
@@ -43,7 +44,10 @@ fn usage() -> String {
      crash/rejoin churn (see DESIGN.md §10 and\n\
      examples/straggler_mitigation.rs).  `hermes exp scale --jobs 10000`\n\
      streams a seed×framework×churn grid through the bounded-memory\n\
-     sweep engine (DESIGN.md §13).\n\n\
+     sweep engine (DESIGN.md §13); `--grid hybrid` fans the full\n\
+     24-spec policy-composition grid (DESIGN.md §14) instead of the six\n\
+     presets.  Frameworks are composable specs: `hermes run ssp+gup`,\n\
+     `bsp+dynalloc`, `selsync+dynalloc`, …\n\n\
      Try `hermes <cmd> --help`."
         .to_string()
 }
@@ -69,7 +73,11 @@ fn artifacts_dir(m: &hermes_dml::cli::Matches) -> PathBuf {
 
 fn cmd_run(args: &[String]) -> Result<(), String> {
     let cmd = Command::new("hermes run", "run one framework in the simulator")
-        .pos("framework", "bsp | asp | ssp | ebsp | selsync | hermes")
+        .pos(
+            "framework",
+            "bsp | asp | ssp | ebsp | selsync | hermes | a composed spec \
+             like ssp+gup or bsp+dynalloc",
+        )
         .opt("model", "mock", "mock | cnn | alexnet")
         .opt("seed", "42", "rng seed")
         .opt("alpha", "", "GUP α (default: per-model Table I)")
@@ -91,6 +99,9 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
 
     let model = m.get("model").to_string();
     let fw = m.get("framework").to_string();
+    // Validate the spec against the registry *before* building
+    // anything: a typo fails here with the full list of valid specs.
+    fw.parse::<FrameworkSpec>().map_err(|e| e.to_string())?;
     let mut cfg = exp::scaled_cfg(&model, &fw);
     cfg.seed = m.get_u64("seed")?;
     let setf = |v: Option<&str>, dst: &mut f64| -> Result<(), String> {
@@ -155,6 +166,12 @@ fn cmd_exp(args: &[String]) -> Result<(), String> {
         .opt("artifacts", "artifacts", "artifacts directory")
         .opt("threads", "0", "sweep threads for table3/faults/scale (0 = one per core)")
         .opt("jobs", "1000", "grid size for `scale` (seed×framework×churn jobs)")
+        .opt(
+            "grid",
+            "preset",
+            "scale: framework axis — preset (6 canonical) | hybrid (24-spec \
+             composition grid)",
+        )
         .opt("out", "results", "output directory")
         .flag("collect", "scale: collect-all instead of streaming (A/B baseline)");
     let m = cmd.parse(args)?;
@@ -178,7 +195,7 @@ fn cmd_exp(args: &[String]) -> Result<(), String> {
             &arts,
             threads,
             &exp::FAULT_SWEEP_RATES,
-            &hermes_dml::frameworks::ALL,
+            &hermes_dml::frameworks::PRESETS,
         )
         .map(|_| ()),
         "scale" => exp::scale_sweep(
@@ -188,6 +205,7 @@ fn cmd_exp(args: &[String]) -> Result<(), String> {
             m.get_usize("jobs")?,
             threads,
             m.has("collect"),
+            exp::ScaleGrid::parse(m.get("grid"))?,
         )
         .map(|_| ()),
         "all" => exp::run_all(&out, model, &arts),

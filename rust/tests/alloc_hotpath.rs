@@ -216,3 +216,45 @@ fn steady_state_worker_iteration_is_allocation_free() {
     assert_eq!(w.iters, 12 + 40 + 2 * 21);
     assert!(w.last_loss.is_finite());
 }
+
+#[test]
+fn generic_driver_adds_zero_steady_state_allocations() {
+    // The policy-composed generic driver (DESIGN.md §14) must not
+    // allocate more than the hand-written reference drivers once the
+    // run is in steady state.  Bootstrap differs by a handful of
+    // fixed-size policy-plane vectors, so we compare *growth*: the
+    // allocation-count delta between a long and a short run of the
+    // same spec.  Preset runs are bit-identical generic-vs-reference,
+    // so their per-iteration allocation patterns (metrics-vec growth,
+    // pool cycling) must match; any extra steady-state allocation in
+    // the generic driver shows up as a larger delta.
+    let _serial = SERIAL.lock().unwrap();
+    use hermes_dml::config::RunConfig;
+    use hermes_dml::frameworks::{run_framework, run_reference};
+
+    let measure = |fw: &str, iters: usize, generic: bool| -> u64 {
+        let mut cfg = RunConfig::new("mock", fw);
+        cfg.max_iters = iters;
+        cfg.dss0 = 64;
+        cfg.target_acc = 1.1; // fixed-length run
+        cfg.hp.patience = 1000;
+        let before = ALLOC_CALLS.load(Ordering::Relaxed);
+        let run = if generic {
+            run_framework(cfg, Box::new(MockRuntime::new())).unwrap()
+        } else {
+            run_reference(cfg, Box::new(MockRuntime::new())).unwrap()
+        };
+        assert_eq!(run.iterations, iters as u64, "{fw}: run length drifted");
+        ALLOC_CALLS.load(Ordering::Relaxed) - before
+    };
+
+    for fw in ["bsp", "hermes"] {
+        let ref_delta = measure(fw, 180, false) - measure(fw, 60, false);
+        let gen_delta = measure(fw, 180, true) - measure(fw, 60, true);
+        assert!(
+            gen_delta <= ref_delta,
+            "{fw}: generic driver allocates in steady state \
+             (generic Δ{gen_delta} > reference Δ{ref_delta})"
+        );
+    }
+}

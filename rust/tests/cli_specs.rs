@@ -1,0 +1,107 @@
+//! CLI-level contract of the composable framework-policy API
+//! (DESIGN.md §14): unknown specs fail *before* anything is built,
+//! with a typed error listing every valid spec, and hybrid
+//! compositions run end-to-end from the command line.
+
+use std::path::PathBuf;
+use std::process::Command;
+
+fn hermes() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_hermes"))
+}
+
+fn tmp_out(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("hermes_cli_specs_{name}"))
+}
+
+#[test]
+fn unknown_framework_fails_fast_with_the_full_suggestion_list() {
+    let out = hermes().args(["run", "bspp"]).output().unwrap();
+    assert!(!out.status.success(), "a bad spec must not run");
+    let err = String::from_utf8_lossy(&out.stderr);
+    // The typed SpecError names the offender…
+    assert!(err.contains("bspp"), "{err}");
+    assert!(err.contains("invalid framework spec"), "{err}");
+    // …and lists every valid preset plus the axis tokens.
+    for name in ["bsp", "asp", "ssp", "ebsp", "selsync", "hermes"] {
+        assert!(err.contains(name), "missing suggestion '{name}': {err}");
+    }
+    for tok in ["every", "delta", "gup", "static", "dynalloc"] {
+        assert!(err.contains(tok), "missing axis token '{tok}': {err}");
+    }
+}
+
+#[test]
+fn bad_axis_token_is_reported_with_the_token_itself() {
+    let out = hermes().args(["run", "bsp+warp"]).output().unwrap();
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("warp"), "{err}");
+    assert!(err.contains("unknown axis token"), "{err}");
+}
+
+#[test]
+fn hybrid_specs_run_end_to_end_from_the_cli() {
+    for spec in ["bsp+dynalloc", "ssp+gup", "selsync+dynalloc"] {
+        let dir = tmp_out(&spec.replace('+', "_"));
+        let out = hermes()
+            .args([
+                "run",
+                spec,
+                "--max-iters",
+                "24",
+                "--dss0",
+                "64",
+                "--out",
+                dir.to_str().unwrap(),
+            ])
+            .output()
+            .unwrap();
+        let stderr = String::from_utf8_lossy(&out.stderr);
+        assert!(out.status.success(), "{spec} failed: {stderr}");
+        let stdout = String::from_utf8_lossy(&out.stdout);
+        assert!(stdout.contains(spec), "{spec} not in summary: {stdout}");
+        assert!(
+            dir.join(format!("run_{spec}_mock_curve.csv")).exists(),
+            "{spec}: curve CSV not written"
+        );
+    }
+}
+
+#[test]
+fn exp_scale_grid_hybrid_is_reachable_from_the_cli() {
+    let dir = tmp_out("scale_hybrid");
+    let out = hermes()
+        .args([
+            "exp",
+            "scale",
+            "--jobs",
+            "24",
+            "--grid",
+            "hybrid",
+            "--threads",
+            "2",
+            "--out",
+            dir.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(out.status.success(), "exp scale --grid hybrid failed: {stderr}");
+    let csv = std::fs::read_to_string(dir.join("scale_mock.csv")).unwrap();
+    assert_eq!(csv.lines().count(), 25, "{csv}");
+    for named in ["bsp+dynalloc", "ssp+gup", "selsync+dynalloc"] {
+        assert!(
+            csv.lines().any(|l| l.contains(&format!(",{named},"))),
+            "{named} row missing:\n{csv}"
+        );
+    }
+    // An invalid grid value is rejected with its alternatives.
+    let out = hermes()
+        .args(["exp", "scale", "--jobs", "2", "--grid", "bogus"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("preset | hybrid"), "{err}");
+}

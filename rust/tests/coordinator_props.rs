@@ -488,6 +488,143 @@ fn drivers_bit_identical_worker_fastpath_scalar_simd() {
     }
 }
 
+// ------------------------------------- policy API (generic driver)
+
+/// Full bitwise RunMetrics comparison (everything except
+/// `sim_wall_time`, which is real wall clock).
+fn assert_same_run(
+    tag: &str,
+    a: &hermes_dml::metrics::RunMetrics,
+    b: &hermes_dml::metrics::RunMetrics,
+) {
+    assert_eq!(a.iterations, b.iterations, "{tag}: iterations");
+    let (vt_a, vt_b) = (a.virtual_time.to_bits(), b.virtual_time.to_bits());
+    assert_eq!(vt_a, vt_b, "{tag}: virtual time");
+    let (acc_a, acc_b) = (a.final_accuracy.to_bits(), b.final_accuracy.to_bits());
+    assert_eq!(acc_a, acc_b, "{tag}: accuracy");
+    let (loss_a, loss_b) = (a.final_loss.to_bits(), b.final_loss.to_bits());
+    assert_eq!(loss_a, loss_b, "{tag}: loss");
+    assert_eq!(a.converged, b.converged, "{tag}: converged");
+    assert_eq!(a.bytes, b.bytes, "{tag}: bytes");
+    assert_eq!(a.api_calls, b.api_calls, "{tag}: api calls");
+    assert_eq!(a.global_updates, b.global_updates, "{tag}: updates");
+    assert_eq!(a.fault_crashes, b.fault_crashes, "{tag}: crashes");
+    assert_eq!(a.fault_rejoins, b.fault_rejoins, "{tag}: rejoins");
+    assert_eq!(a.crashed_workers, b.crashed_workers, "{tag}: crashed set");
+    assert_eq!(a.curve.len(), b.curve.len(), "{tag}: curve length");
+    for (i, (x, y)) in a.curve.iter().zip(&b.curve).enumerate() {
+        let xc = (x.0.to_bits(), x.1.to_bits(), x.2.to_bits());
+        let yc = (y.0.to_bits(), y.1.to_bits(), y.2.to_bits());
+        assert_eq!(xc, yc, "{tag}: curve point {i}");
+    }
+    assert_eq!(a.workers.len(), b.workers.len(), "{tag}: worker count");
+    for (i, (x, y)) in a.workers.iter().zip(&b.workers).enumerate() {
+        let wtag = format!("{tag} worker {i}");
+        assert_eq!(x.family, y.family, "{wtag}: family");
+        assert_eq!(x.iterations, y.iterations, "{wtag}: iterations");
+        assert_eq!(x.model_requests, y.model_requests, "{wtag}: requests");
+        assert_eq!(x.pushes, y.pushes, "{wtag}: pushes");
+        assert_eq!(x.bytes, y.bytes, "{wtag}: bytes");
+        assert_eq!(x.api_calls, y.api_calls, "{wtag}: api calls");
+        let tx = (x.train_time.to_bits(), x.wait_time.to_bits(), x.comm_time.to_bits());
+        let ty = (y.train_time.to_bits(), y.wait_time.to_bits(), y.comm_time.to_bits());
+        assert_eq!(tx, ty, "{wtag}: train/wait/comm times");
+        assert_eq!(x.push_times.len(), y.push_times.len(), "{wtag}: push count");
+        for (j, (p, q)) in x.push_times.iter().zip(&y.push_times).enumerate() {
+            assert_eq!(p.to_bits(), q.to_bits(), "{wtag}: push {j}");
+        }
+        assert_eq!(x.allocations.len(), y.allocations.len(), "{wtag}: allocs");
+        for (j, (p, q)) in x.allocations.iter().zip(&y.allocations).enumerate() {
+            let pa = (p.0.to_bits(), p.1, p.2);
+            let qa = (q.0.to_bits(), q.1, q.2);
+            assert_eq!(pa, qa, "{wtag}: alloc {j}");
+        }
+    }
+}
+
+#[test]
+fn presets_bit_identical_to_reference_drivers() {
+    // THE acceptance test of the policy-API redesign (DESIGN.md §14):
+    // for every canonical preset — fault-free and under crash/rejoin
+    // churn — the generic policy driver reproduces the pre-refactor
+    // hand-written driver bit-for-bit, under {scalar, SIMD} kernel
+    // backends × shard counts.  The reference run is pinned to
+    // scalar/1-shard; the §12 property tests already prove the
+    // reference drivers are backend/shard invariant.
+    use hermes_dml::config::RunConfig;
+    use hermes_dml::frameworks::{run_framework, run_reference, PRESETS};
+    use hermes_dml::runtime::MockRuntime;
+
+    let mk = |fw: &str, churn: f64| {
+        let mut cfg = RunConfig::new("mock", fw);
+        cfg.max_iters = 60;
+        cfg.dss0 = 96;
+        cfg.target_acc = 0.995; // don't stop early: exercise more pushes
+        cfg.faults.churn_rate = churn;
+        cfg
+    };
+
+    for fw in PRESETS {
+        for churn in [0.0, 2.5] {
+            let want = kernels::with_backend(Backend::Scalar, || {
+                shards::with_shards(1, || {
+                    let rt = Box::new(MockRuntime::new());
+                    run_reference(mk(fw, churn), rt).unwrap()
+                })
+            });
+            for s in [1usize, 3] {
+                for backend in [Backend::Scalar, Backend::Simd] {
+                    let got = kernels::with_backend(backend, || {
+                        shards::with_shards(s, || {
+                            let rt = Box::new(MockRuntime::new());
+                            run_framework(mk(fw, churn), rt).unwrap()
+                        })
+                    });
+                    assert_same_run(
+                        &format!("{fw} churn={churn} {backend:?} s={s}"),
+                        &want,
+                        &got,
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn hybrid_grid_bit_identical_across_runs_seeds_and_backends() {
+    // Determinism property for the whole composition grid: every
+    // composable spec × seeds {7, 11} is bit-identical across two runs
+    // and across the {scalar, SIMD} kernel backends.
+    use hermes_dml::config::RunConfig;
+    use hermes_dml::frameworks::{policy, run_framework};
+    use hermes_dml::runtime::MockRuntime;
+
+    for spec in policy::grid_specs() {
+        for seed in [7u64, 11] {
+            let mk = || {
+                let mut cfg = RunConfig::new("mock", &spec.to_string());
+                cfg.seed = seed;
+                cfg.max_iters = 24;
+                cfg.dss0 = 64;
+                cfg.target_acc = 0.995;
+                cfg
+            };
+            let run_with = |backend: Backend| {
+                kernels::with_backend(backend, || {
+                    run_framework(mk(), Box::new(MockRuntime::new())).unwrap()
+                })
+            };
+            let a = run_with(Backend::Scalar);
+            let b = run_with(Backend::Scalar);
+            assert_same_run(&format!("{spec} seed={seed} rerun"), &a, &b);
+            let c = run_with(Backend::Simd);
+            assert_same_run(&format!("{spec} seed={seed} simd"), &a, &c);
+            assert!(a.iterations > 0, "{spec} seed={seed}: empty run");
+        }
+    }
+}
+
 // ------------------------------------------------------------- wire
 
 #[test]

@@ -6,7 +6,7 @@
 use hermes_dml::config::RunConfig;
 use hermes_dml::exp::scaled_cfg;
 use hermes_dml::faults::FaultPlan;
-use hermes_dml::frameworks::{run_framework, ALL};
+use hermes_dml::frameworks::{run_framework, PRESETS};
 use hermes_dml::metrics::RunMetrics;
 use hermes_dml::runtime::MockRuntime;
 
@@ -34,7 +34,7 @@ fn run(cfg: RunConfig) -> RunMetrics {
 
 #[test]
 fn churned_runs_are_bit_identical_per_seed_for_every_framework() {
-    for fw in ALL {
+    for fw in PRESETS {
         let a = run(churned_cfg(fw));
         let b = run(churned_cfg(fw));
         assert!(a.fault_crashes >= 1, "{fw}: crash never applied");
@@ -56,6 +56,25 @@ fn churned_runs_are_bit_identical_per_seed_for_every_framework() {
             c.virtual_time != a.virtual_time || c.iterations != a.iterations,
             "{fw}: seed had no effect under faults"
         );
+    }
+}
+
+#[test]
+fn churned_hybrid_specs_are_bit_identical_per_seed() {
+    // The composable hybrids (DESIGN.md §14) inherit the fault engine's
+    // determinism: churned runs replay bit-identically per seed.
+    for fw in ["bsp+dynalloc", "ssp+gup", "selsync+dynalloc"] {
+        let mut cfg = churned_cfg(fw);
+        cfg.max_iters = 120;
+        let a = run(cfg.clone());
+        let b = run(cfg);
+        assert!(a.fault_crashes >= 1, "{fw}: crash never applied");
+        assert_eq!(a.iterations, b.iterations, "{fw}");
+        assert_eq!(a.virtual_time.to_bits(), b.virtual_time.to_bits(), "{fw}");
+        assert_eq!(a.final_loss.to_bits(), b.final_loss.to_bits(), "{fw}");
+        assert_eq!(a.bytes, b.bytes, "{fw}");
+        assert_eq!(a.api_calls, b.api_calls, "{fw}");
+        assert_eq!(a.curve, b.curve, "{fw}");
     }
 }
 

@@ -7,7 +7,7 @@ use std::path::{Path, PathBuf};
 
 use hermes_dml::config::RunConfig;
 use hermes_dml::exp::{make_runtime, scaled_cfg};
-use hermes_dml::frameworks::{run_framework, ALL};
+use hermes_dml::frameworks::{run_framework, PRESETS};
 use hermes_dml::runtime::MockRuntime;
 
 fn artifacts() -> PathBuf {
@@ -22,7 +22,7 @@ fn mock_cfg(fw: &str) -> RunConfig {
 
 #[test]
 fn every_framework_completes_on_mock_with_consistent_metrics() {
-    for fw in ALL {
+    for fw in PRESETS {
         let run =
             run_framework(mock_cfg(fw), Box::new(MockRuntime::new())).unwrap();
         assert!(run.iterations > 0, "{fw}: no iterations");

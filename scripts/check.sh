@@ -16,3 +16,16 @@ echo "== alloc hot-path pin (HERMES_FORCE_SCALAR=0) =="
 HERMES_FORCE_SCALAR=0 cargo test -q --test alloc_hotpath
 echo "== alloc hot-path pin (HERMES_FORCE_SCALAR=1) =="
 HERMES_FORCE_SCALAR=1 cargo test -q --test alloc_hotpath
+
+# Hybrid-grid smoke (DESIGN.md §14): the three named hybrid scenarios
+# end-to-end from the CLI, then the full 24-spec composition grid
+# through the streaming sweep engine.  CI uploads the resulting
+# scale_mock.csv as a per-push artifact.
+echo "== hybrid-grid smoke (composable specs) =="
+for spec in bsp+dynalloc ssp+gup selsync+dynalloc; do
+  cargo run --quiet --release --bin hermes -- \
+    run "$spec" --max-iters 24 --dss0 64 --out results_smoke
+done
+cargo run --quiet --release --bin hermes -- \
+  exp scale --jobs 24 --grid hybrid --threads 2 --out results_smoke
+test -s results_smoke/scale_mock.csv
