@@ -2,8 +2,8 @@
 //! hyper-parameters (Table I), network model, fault/churn scenario, and
 //! per-run experiment settings — with JSON round-trip and validation.
 
-use crate::faults::{FaultEvent, FaultKind, FaultPlan};
-use crate::frameworks::policy::FrameworkSpec;
+use crate::faults::{CorruptKind, FaultEvent, FaultKind, FaultPlan};
+use crate::frameworks::policy::{AggPolicy, FrameworkSpec};
 use crate::util::json::Json;
 
 /// One node family from Table II of the paper.
@@ -253,7 +253,11 @@ impl FaultConfig {
 
     /// Merge the explicit plan with the seeded churn generator.  Churn
     /// cycles drawn for a worker the explicit plan removes for good are
-    /// dropped — a generated rejoin must not resurrect it.
+    /// dropped — a generated rejoin must not resurrect it — and so are
+    /// cycles overlapping one of the worker's explicit crash windows
+    /// (the merged plan must pass `FaultPlan::validate`'s overlap
+    /// rejection).  Both filters are pure functions of the inputs, so
+    /// the merged plan stays seed-deterministic.
     pub fn build_plan(&self, n_workers: usize, seed: u64) -> FaultPlan {
         let mut plan = self.plan.clone();
         if self.churn_rate > 0.0 {
@@ -264,12 +268,25 @@ impl FaultConfig {
                 self.rejoin_after,
                 seed,
             );
-            plan.events.extend(
-                churn
-                    .events
-                    .into_iter()
-                    .filter(|e| !self.plan.permanently_crashes(e.worker)),
-            );
+            // `churn` is built exclusively from crash_rejoin pairs:
+            // events come in (crash, rejoin) order per cycle.
+            let mut it = churn.events.into_iter();
+            while let Some(crash) = it.next() {
+                let Some(rejoin) = it.next() else { break };
+                if self.plan.permanently_crashes(crash.worker) {
+                    continue;
+                }
+                let overlaps = self
+                    .plan
+                    .crash_windows(crash.worker)
+                    .iter()
+                    .any(|&(a, b)| crash.at < b && rejoin.at > a);
+                if overlaps {
+                    continue;
+                }
+                plan.events.push(crash);
+                plan.events.push(rejoin);
+            }
         }
         plan
     }
@@ -287,6 +304,81 @@ impl FaultConfig {
         // Worker bounds are checked against the instantiated cluster in
         // `SimEnv::build`; here only the time/factor sanity.
         self.plan.validate(usize::MAX)
+    }
+}
+
+/// Failure-domain defenses + round-commit discipline (ISSUE 6,
+/// DESIGN.md §15).  Everything here defaults *off*: with the default
+/// `RobustConfig` every driver takes byte-identical code paths to the
+/// pre-robustness engine, which is what keeps defenses-off runs
+/// bit-identical to the reference drivers.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RobustConfig {
+    /// PS-side `UpdateGuard`: finite-check + relative-norm bound
+    /// against recent-update statistics; offenders are quarantined
+    /// before `sync_sgd`/`loss_based_sgd`.
+    pub guard: bool,
+    /// Coordinate-wise trimmed-mean aggregation over the round's
+    /// surviving deltas (the `RobustAgg` fallback for sync rounds).
+    pub robust_agg: bool,
+    /// Fraction trimmed from *each* side per coordinate (robust_agg).
+    pub trim_fraction: f64,
+    /// Quarantine when an update's L2 norm exceeds this multiple of
+    /// the recent accepted-update mean norm.
+    pub norm_bound: f64,
+    /// Round commits with ≥ ceil(quorum · |active|) updates; 1.0 = the
+    /// classic full barrier (quorum path disabled).
+    pub quorum: f64,
+    /// Round deadline in virtual seconds after round start; 0 = none.
+    /// Stragglers' late deltas fold into the next round.
+    pub round_deadline_s: f64,
+    /// Live-mode worker lease timeout (was the hardcoded 250 ms
+    /// `live::LEASE_TIMEOUT`); the heartbeat interval derives from it.
+    pub lease_timeout_ms: u64,
+}
+
+impl Default for RobustConfig {
+    fn default() -> Self {
+        RobustConfig {
+            guard: false,
+            robust_agg: false,
+            trim_fraction: 0.2,
+            norm_bound: 8.0,
+            quorum: 1.0,
+            round_deadline_s: 0.0,
+            lease_timeout_ms: 250,
+        }
+    }
+}
+
+impl RobustConfig {
+    /// Any PS-side defense on? (Gates the guard/trimmed-mean paths.)
+    pub fn defenses_on(&self) -> bool {
+        self.guard || self.robust_agg
+    }
+
+    /// Quorum/deadline round-commit discipline on?
+    pub fn quorum_on(&self) -> bool {
+        self.quorum < 1.0 || self.round_deadline_s > 0.0
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if !(0.0..0.5).contains(&self.trim_fraction) {
+            return Err("trim_fraction must be in [0, 0.5)".into());
+        }
+        if !(self.norm_bound.is_finite() && self.norm_bound > 1.0) {
+            return Err("norm_bound must be finite and > 1".into());
+        }
+        if !(self.quorum.is_finite() && self.quorum > 0.0 && self.quorum <= 1.0) {
+            return Err("quorum must be in (0, 1]".into());
+        }
+        if !(self.round_deadline_s.is_finite() && self.round_deadline_s >= 0.0) {
+            return Err("round_deadline_s must be finite and ≥ 0".into());
+        }
+        if self.lease_timeout_ms == 0 || self.lease_timeout_ms > 60_000 {
+            return Err("lease_timeout_ms must be in [1, 60000]".into());
+        }
+        Ok(())
     }
 }
 
@@ -328,6 +420,9 @@ pub struct RunConfig {
     /// Fault-injection scenario (crash/rejoin churn, link degradation,
     /// K spikes) — empty by default (DESIGN.md §10).
     pub faults: FaultConfig,
+    /// Failure-domain defenses + quorum rounds — all off by default
+    /// (DESIGN.md §15).
+    pub robust: RobustConfig,
 }
 
 impl RunConfig {
@@ -358,6 +453,7 @@ impl RunConfig {
             prefetch: true,
             alpha_relax: true,
             faults: FaultConfig::default(),
+            robust: RobustConfig::default(),
         }
     }
 
@@ -374,10 +470,23 @@ impl RunConfig {
         cfg
     }
 
+    /// The effective failure-domain settings: the config's `robust`
+    /// block, with the guard + trimmed mean forced on when the spec
+    /// carries the `+robust` policy token.
+    pub fn robust_effective(&self) -> RobustConfig {
+        let mut r = self.robust.clone();
+        if self.framework.agg == AggPolicy::Robust {
+            r.guard = true;
+            r.robust_agg = true;
+        }
+        r
+    }
+
     pub fn validate(&self) -> Result<(), String> {
         self.hp.validate()?;
         self.cluster.validate()?;
         self.faults.validate()?;
+        self.robust.validate()?;
         if self.dss0 == 0 || self.mbs0 == 0 {
             return Err("dss0/mbs0 must be ≥ 1".into());
         }
@@ -466,6 +575,21 @@ impl RunConfig {
                     ),
                 ]),
             ),
+            (
+                "robust",
+                Json::obj(vec![
+                    ("guard", Json::Bool(self.robust.guard)),
+                    ("robust_agg", Json::Bool(self.robust.robust_agg)),
+                    ("trim_fraction", Json::Num(self.robust.trim_fraction)),
+                    ("norm_bound", Json::Num(self.robust.norm_bound)),
+                    ("quorum", Json::Num(self.robust.quorum)),
+                    ("round_deadline_s", Json::Num(self.robust.round_deadline_s)),
+                    (
+                        "lease_timeout_ms",
+                        Json::Num(self.robust.lease_timeout_ms as f64),
+                    ),
+                ]),
+            ),
             ("dss0", Json::Num(self.dss0 as f64)),
             ("mbs0", Json::Num(self.mbs0 as f64)),
             ("target_acc", Json::Num(self.target_acc)),
@@ -524,6 +648,32 @@ impl RunConfig {
                 faults.plan.events.push(fault_event_from_json(e)?);
             }
         }
+        // Optional for older configs: missing `robust` = defenses off.
+        let mut robust = RobustConfig::default();
+        if let Some(rj) = j.at("robust") {
+            robust.guard =
+                rj.get("guard").and_then(Json::as_bool).ok_or("robust/guard")?;
+            robust.robust_agg = rj
+                .get("robust_agg")
+                .and_then(Json::as_bool)
+                .ok_or("robust/robust_agg")?;
+            robust.trim_fraction = rj
+                .get("trim_fraction")
+                .and_then(Json::as_f64)
+                .ok_or("robust/trim_fraction")?;
+            robust.norm_bound =
+                rj.get("norm_bound").and_then(Json::as_f64).ok_or("robust/norm_bound")?;
+            robust.quorum =
+                rj.get("quorum").and_then(Json::as_f64).ok_or("robust/quorum")?;
+            robust.round_deadline_s = rj
+                .get("round_deadline_s")
+                .and_then(Json::as_f64)
+                .ok_or("robust/round_deadline_s")?;
+            robust.lease_timeout_ms = rj
+                .get("lease_timeout_ms")
+                .and_then(Json::as_u64)
+                .ok_or("robust/lease_timeout_ms")?;
+        }
         // Typed spec validation at parse time: a bad name fails here
         // with the full list of valid specs, not deep inside a driver.
         let framework: FrameworkSpec = s("framework")?
@@ -566,6 +716,7 @@ impl RunConfig {
             prefetch: b("prefetch")?,
             alpha_relax: b("alpha_relax")?,
             faults,
+            robust,
         };
         cfg.validate()?;
         Ok(cfg)
@@ -578,6 +729,11 @@ fn fault_event_json(e: &FaultEvent) -> Json {
         FaultKind::Rejoin => ("rejoin", 0.0, 0.0),
         FaultKind::LinkDegrade { factor, duration } => ("link", factor, duration),
         FaultKind::KSpike { factor, duration } => ("kspike", factor, duration),
+        FaultKind::CorruptUpdate { kind } => match kind {
+            CorruptKind::NanInject => ("corrupt_nan", 0.0, 0.0),
+            CorruptKind::Blowup { factor } => ("corrupt_blowup", factor as f64, 0.0),
+            CorruptKind::StaleReplay => ("corrupt_stale", 0.0, 0.0),
+        },
     };
     Json::obj(vec![
         ("kind", Json::Str(kind.to_string())),
@@ -599,6 +755,11 @@ fn fault_event_from_json(e: &Json) -> Result<FaultEvent, String> {
         "rejoin" => FaultKind::Rejoin,
         "link" => FaultKind::LinkDegrade { factor, duration },
         "kspike" => FaultKind::KSpike { factor, duration },
+        "corrupt_nan" => FaultKind::CorruptUpdate { kind: CorruptKind::NanInject },
+        "corrupt_blowup" => FaultKind::CorruptUpdate {
+            kind: CorruptKind::Blowup { factor: factor as f32 },
+        },
+        "corrupt_stale" => FaultKind::CorruptUpdate { kind: CorruptKind::StaleReplay },
         other => return Err(format!("unknown fault kind '{other}'")),
     };
     Ok(FaultEvent { at, worker, kind })
@@ -718,6 +879,81 @@ mod tests {
             .events
             .iter()
             .any(|e| e.worker == 1 && e.kind == FaultKind::Rejoin));
+    }
+
+    #[test]
+    fn robust_and_corrupt_events_round_trip_through_json() {
+        let mut rc = RunConfig::new("mock", "hermes");
+        rc.robust.guard = true;
+        rc.robust.robust_agg = true;
+        rc.robust.trim_fraction = 0.25;
+        rc.robust.norm_bound = 6.0;
+        rc.robust.quorum = 0.75;
+        rc.robust.round_deadline_s = 3.5;
+        rc.robust.lease_timeout_ms = 400;
+        rc.faults.plan = FaultPlan::new()
+            .corrupt_nan(0, 1.0)
+            .corrupt_blowup(1, 2.0, 1e5)
+            .corrupt_stale(2, 3.0);
+        let j = rc.to_json().to_string();
+        let back = RunConfig::from_json(&Json::parse(&j).unwrap()).unwrap();
+        assert_eq!(back, rc);
+
+        // A `+robust` spec round-trips and forces the defenses on.
+        let rr = RunConfig::new("mock", "hermes+robust");
+        assert!(!rr.robust.defenses_on(), "config block itself stays default");
+        let eff = rr.robust_effective();
+        assert!(eff.guard && eff.robust_agg);
+        let j = rr.to_json().to_string();
+        let back = RunConfig::from_json(&Json::parse(&j).unwrap()).unwrap();
+        assert_eq!(back.framework.to_string(), "hermes+robust");
+    }
+
+    #[test]
+    fn robust_block_is_optional_in_json_and_validated() {
+        // A config serialized before ISSUE 6 still parses: defenses off.
+        let rc = RunConfig::new("cnn", "hermes");
+        let mut m = match rc.to_json() {
+            Json::Obj(m) => m,
+            _ => unreachable!(),
+        };
+        m.remove("robust");
+        let back = RunConfig::from_json(&Json::Obj(m)).unwrap();
+        assert_eq!(back.robust, RobustConfig::default());
+        assert!(!back.robust.defenses_on());
+        assert!(!back.robust.quorum_on());
+
+        // Each validation rejection fires.
+        let bad = |f: fn(&mut RobustConfig)| {
+            let mut rc = RunConfig::new("cnn", "hermes");
+            f(&mut rc.robust);
+            rc.validate().unwrap_err()
+        };
+        assert!(bad(|r| r.trim_fraction = 0.5).contains("trim_fraction"));
+        assert!(bad(|r| r.norm_bound = 1.0).contains("norm_bound"));
+        assert!(bad(|r| r.quorum = 0.0).contains("quorum"));
+        assert!(bad(|r| r.quorum = 1.5).contains("quorum"));
+        assert!(bad(|r| r.round_deadline_s = -1.0).contains("round_deadline_s"));
+        assert!(bad(|r| r.lease_timeout_ms = 0).contains("lease_timeout_ms"));
+        // Quorum-on detection.
+        let r = RobustConfig { quorum: 0.7, ..RobustConfig::default() };
+        assert!(r.quorum_on());
+        let r = RobustConfig { round_deadline_s: 2.0, ..RobustConfig::default() };
+        assert!(r.quorum_on());
+    }
+
+    #[test]
+    fn churn_merging_drops_cycles_overlapping_explicit_windows() {
+        // The merged plan must pass the overlap rejection even when
+        // generated churn collides with explicit crash windows.
+        let mut fc = FaultConfig::default();
+        fc.plan = FaultPlan::new().crash_rejoin(0, 3.0, 30.0);
+        fc.churn_rate = 40.0;
+        fc.churn_horizon = 60.0;
+        let plan = fc.build_plan(2, 7);
+        plan.validate(2).unwrap();
+        // Determinism of the sanitized merge.
+        assert_eq!(plan, fc.build_plan(2, 7));
     }
 
     #[test]

@@ -19,12 +19,14 @@ pub mod sweep;
 
 use std::io::Write;
 use std::path::Path;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
 use crate::config::{ClusterConfig, RunConfig};
+use crate::faults::FaultPlan;
 use crate::frameworks::{policy, run_framework, PRESETS};
+use crate::live::{run_live_full, LiveOpts};
 use crate::metrics::{write_file, RunMetrics, TableFmt};
 use crate::runtime::{Manifest, MockRuntime, ModelRuntime, XlaRuntime};
 use crate::util::fmt_duration;
@@ -554,6 +556,156 @@ pub fn faults_churn_sweep(
     let rendered = table.render();
     println!("\nChurn sweep ({model}):\n{rendered}");
     write_file(out, &format!("faults_churn_{model}.csv"), &csv)?;
+    Ok(rows)
+}
+
+// ------------------------------------------------------------ robust
+
+/// Chaos sweep over the failure-domain axes (DESIGN.md §15): every
+/// corrupt-update species × defenses {off, on} × quorum {1.0, 0.67} on
+/// the barrier (`bsp`) and elastic (`ebsp`) shapes, streamed to
+/// `robust_{model}.csv`.  A live kill+restore leg — coordinator killed
+/// mid-run, restored from snapshot + journal while workers reconnect
+/// with backoff — is appended as the final `kill=true` row.
+pub fn robust_sweep(
+    out: &Path,
+    model: &str,
+    artifacts: &Path,
+    threads: usize,
+) -> Result<Vec<RunMetrics>> {
+    const SPECIES: [&str; 4] = ["none", "nan", "blowup", "stale"];
+    let mut jobs = Vec::new();
+    let mut species_of = Vec::new();
+    for fw in ["bsp", "ebsp"] {
+        for &sp in &SPECIES {
+            for robust in [false, true] {
+                for quorum in [1.0f64, 0.67] {
+                    let mut cfg = scaled_cfg(model, fw);
+                    // Two injections on distinct workers, early enough
+                    // that every shape still has most of its run left
+                    // to recover in.
+                    cfg.faults.plan = match sp {
+                        "nan" => {
+                            FaultPlan::new().corrupt_nan(1, 2.0).corrupt_nan(3, 4.0)
+                        }
+                        "blowup" => FaultPlan::new()
+                            .corrupt_blowup(1, 2.0, 50.0)
+                            .corrupt_blowup(3, 4.0, 50.0),
+                        "stale" => FaultPlan::new()
+                            .corrupt_stale(1, 2.0)
+                            .corrupt_stale(3, 4.0),
+                        _ => FaultPlan::new(),
+                    };
+                    cfg.robust.guard = robust;
+                    cfg.robust.robust_agg = robust;
+                    cfg.robust.quorum = quorum;
+                    let label = format!(
+                        "{fw}+{sp}{}{}",
+                        if robust { "+robust" } else { "" },
+                        if quorum < 1.0 { "+q67" } else { "" }
+                    );
+                    jobs.push(SweepJob::new(label, cfg));
+                    species_of.push(sp);
+                }
+            }
+        }
+    }
+    let model_s = model.to_string();
+    let arts = artifacts.to_path_buf();
+
+    let mut csv = String::from(
+        "framework,corrupt,robust,quorum,kill,corrupt_injected,quarantined,\
+         quorum_commits,restarts,dedup_skips,recovery_time_s,iterations,\
+         virtual_time_s,final_loss,final_accuracy,converged\n",
+    );
+    let mut table = TableFmt::new(&[
+        "Config",
+        "Inject",
+        "Quar.",
+        "Q-commits",
+        "Recovery",
+        "Conv. Acc.",
+        "Conv",
+    ]);
+    let mut rows: Vec<RunMetrics> = Vec::with_capacity(jobs.len());
+    sweep::run_sweep_streaming(
+        &jobs,
+        threads,
+        0, // auto window
+        move |_job| make_runtime(&model_s, &arts),
+        |i, r| {
+            let cfg = &jobs[i].cfg;
+            csv += &format!(
+                "{},{},{},{},false,{},{},{},0,0,{:.3},{},{:.3},{:.5},{:.5},{}\n",
+                cfg.framework,
+                species_of[i],
+                cfg.robust.guard,
+                cfg.robust.quorum,
+                r.corrupt_injected,
+                r.quarantined,
+                r.quorum_commits,
+                r.recovery_time.unwrap_or(-1.0),
+                r.iterations,
+                r.virtual_time,
+                r.final_loss,
+                r.final_accuracy,
+                r.converged
+            );
+            table.row(vec![
+                jobs[i].label.clone(),
+                format!("{}", r.corrupt_injected),
+                format!("{}", r.quarantined),
+                format!("{}", r.quorum_commits),
+                r.recovery_time
+                    .map(|t| format!("{t:.1}s"))
+                    .unwrap_or_else(|| "-".into()),
+                format!("{:.2}%", r.final_accuracy * 100.0),
+                format!("{}", r.converged),
+            ]);
+            rows.push(r);
+            Ok(())
+        },
+    )?;
+
+    // Live kill+restore leg: the coordinator is killed mid-run and
+    // restored from its snapshot + journal on a fresh port; workers
+    // reconnect with bounded backoff and retried pushes are
+    // dedup-skipped (applied at most once).
+    let mut lcfg = RunConfig::new("mock", "hermes");
+    lcfg.hp.lr = 0.5;
+    lcfg.hp.alpha = -0.9;
+    lcfg.hp.window = 8;
+    lcfg.seed = 42;
+    let opts = LiveOpts {
+        kill_coordinator_at: Some(Duration::from_millis(500)),
+        stop_after_pushes: Some(10),
+        ..Default::default()
+    };
+    let rep = run_live_full(&lcfg, 2, Duration::from_secs(8), opts)?;
+    csv += &format!(
+        "live-kill,none,false,1,true,0,{},0,{},{},-1.000,{},{:.3},{:.5},{:.5},{}\n",
+        rep.quarantined,
+        rep.coordinator_restarts,
+        rep.dedup_skips,
+        rep.iterations,
+        rep.wall_time_s,
+        rep.final_loss,
+        rep.final_accuracy,
+        rep.final_loss.is_finite()
+    );
+    println!(
+        "[robust] live kill+restore: {} restarts, {} dedup skips, \
+         {} reconnects, {} pushes, digest {:016x}",
+        rep.coordinator_restarts,
+        rep.dedup_skips,
+        rep.reconnects,
+        rep.pushes,
+        rep.model_digest
+    );
+
+    let rendered = table.render();
+    println!("\nRobustness sweep ({model}):\n{rendered}");
+    write_file(out, &format!("robust_{model}.csv"), &csv)?;
     Ok(rows)
 }
 

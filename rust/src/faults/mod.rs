@@ -40,6 +40,21 @@ pub fn is_fault_tag(ev: &Ev) -> bool {
     matches!(ev, Ev::Tag { tag, .. } if *tag >= FAULT_TAG_BASE)
 }
 
+/// How a poisoned update is corrupted (seeded species, ISSUE 6).  The
+/// corruption itself is applied at push time by the driver (DES) or the
+/// worker loop (live mode) from a seed-derived RNG stream, so every
+/// species is bit-identical per seed across kernel backends.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum CorruptKind {
+    /// A seeded subset of coordinates becomes NaN, plus one +Inf.
+    NanInject,
+    /// Every coordinate multiplies by `factor` (magnitude blow-up).
+    Blowup { factor: f32 },
+    /// The worker re-sends its previously pushed delta instead of the
+    /// fresh one (stale replay); a no-op if nothing was pushed yet.
+    StaleReplay,
+}
+
 /// What happens to a worker, declaratively.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum FaultKind {
@@ -54,6 +69,9 @@ pub enum FaultKind {
     /// The worker's Eq. 3 coefficient K multiplies by `factor` for
     /// `duration` seconds (progressive-slowdown spike, §III-C).
     KSpike { factor: f64, duration: f64 },
+    /// The worker's *next* push after `at` carries a poisoned payload
+    /// (the PS-side `UpdateGuard` is what should catch it).
+    CorruptUpdate { kind: CorruptKind },
 }
 
 /// One declarative fault.
@@ -127,15 +145,53 @@ impl FaultPlan {
         self
     }
 
+    /// Poison `worker`'s next push after `at` with `kind`.
+    pub fn corrupt(mut self, worker: usize, at: f64, kind: CorruptKind) -> FaultPlan {
+        self.events.push(FaultEvent {
+            at,
+            worker,
+            kind: FaultKind::CorruptUpdate { kind },
+        });
+        self
+    }
+
+    /// NaN/Inf injection into `worker`'s next push after `at`.
+    pub fn corrupt_nan(self, worker: usize, at: f64) -> FaultPlan {
+        self.corrupt(worker, at, CorruptKind::NanInject)
+    }
+
+    /// Magnitude blow-up of `worker`'s next push after `at`.
+    pub fn corrupt_blowup(self, worker: usize, at: f64, factor: f32) -> FaultPlan {
+        self.corrupt(worker, at, CorruptKind::Blowup { factor })
+    }
+
+    /// Stale replay of `worker`'s previous delta after `at`.
+    pub fn corrupt_stale(self, worker: usize, at: f64) -> FaultPlan {
+        self.corrupt(worker, at, CorruptKind::StaleReplay)
+    }
+
     /// Append every event of `other`.
     pub fn extend(&mut self, other: FaultPlan) {
         self.events.extend(other.events);
+    }
+
+    /// Does this plan contain any `CorruptUpdate` event?
+    pub fn has_corruption(&self) -> bool {
+        self.events
+            .iter()
+            .any(|e| matches!(e.kind, FaultKind::CorruptUpdate { .. }))
     }
 
     /// Does this plan remove `worker` for good — a crash with no rejoin
     /// at or after it?  (Plan composition uses this so generated churn
     /// can't resurrect an explicitly departed worker.)
     pub fn permanently_crashes(&self, worker: usize) -> bool {
+        self.permanent_crash_time(worker).is_some()
+    }
+
+    /// The instant `worker` departs for good, if any: its last crash
+    /// with no rejoin at or after it.
+    pub fn permanent_crash_time(&self, worker: usize) -> Option<f64> {
         let last_crash = self
             .events
             .iter()
@@ -143,12 +199,48 @@ impl FaultPlan {
             .map(|e| e.at)
             .fold(f64::NEG_INFINITY, f64::max);
         if last_crash == f64::NEG_INFINITY {
-            return false;
+            return None;
         }
-        !self
+        let revived = self
             .events
             .iter()
-            .any(|e| e.worker == worker && e.kind == FaultKind::Rejoin && e.at >= last_crash)
+            .any(|e| e.worker == worker && e.kind == FaultKind::Rejoin && e.at >= last_crash);
+        (!revived).then_some(last_crash)
+    }
+
+    /// `worker`'s crash windows `[crash, rejoin)` in time order; a
+    /// terminal crash yields `[crash, +inf)`.  Used by plan composition
+    /// (churn merging) and by `validate`'s overlap rejection.
+    pub fn crash_windows(&self, worker: usize) -> Vec<(f64, f64)> {
+        let mut marks: Vec<(f64, bool)> = self
+            .events
+            .iter()
+            .filter(|e| e.worker == worker)
+            .filter_map(|e| match e.kind {
+                FaultKind::Crash => Some((e.at, true)),
+                FaultKind::Rejoin => Some((e.at, false)),
+                _ => None,
+            })
+            .collect();
+        marks.sort_by(|a, b| a.0.total_cmp(&b.0).then(b.1.cmp(&a.1)));
+        let mut windows = Vec::new();
+        let mut open: Option<f64> = None;
+        for (t, is_crash) in marks {
+            match (is_crash, open) {
+                (true, None) => open = Some(t),
+                (false, Some(c)) => {
+                    windows.push((c, t));
+                    open = None;
+                }
+                // Overlaps (crash-while-down) and orphan rejoins are
+                // reported by `validate`; here the first mark wins.
+                _ => {}
+            }
+        }
+        if let Some(c) = open {
+            windows.push((c, f64::INFINITY));
+        }
+        windows
     }
 
     /// Seeded churn generator: roughly `rate_per_100s` crash/rejoin
@@ -208,7 +300,59 @@ impl FaultPlan {
                         return Err(format!("fault duration {duration} invalid"));
                     }
                 }
+                FaultKind::CorruptUpdate { kind } => {
+                    if let CorruptKind::Blowup { factor } = kind {
+                        if !(factor.is_finite() && factor != 0.0) {
+                            return Err(format!(
+                                "corrupt blow-up factor {factor} invalid"
+                            ));
+                        }
+                    }
+                }
                 FaultKind::Crash | FaultKind::Rejoin => {}
+            }
+        }
+        // Per-worker crash windows must not overlap: a crash while the
+        // worker is already down (or after a terminal crash) is a plan
+        // bug, not a new outage.
+        let workers: std::collections::BTreeSet<usize> =
+            self.events.iter().map(|e| e.worker).collect();
+        for &w in &workers {
+            let mut marks: Vec<(f64, bool)> = self
+                .events
+                .iter()
+                .filter(|e| e.worker == w)
+                .filter_map(|e| match e.kind {
+                    FaultKind::Crash => Some((e.at, true)),
+                    FaultKind::Rejoin => Some((e.at, false)),
+                    _ => None,
+                })
+                .collect();
+            marks.sort_by(|a, b| a.0.total_cmp(&b.0).then(b.1.cmp(&a.1)));
+            let mut down = false;
+            for (t, is_crash) in marks {
+                if is_crash && down {
+                    return Err(format!(
+                        "worker {w}: overlapping crash windows (crash at {t} \
+                         while already down)"
+                    ));
+                }
+                down = is_crash;
+            }
+        }
+        // Corrupt-update events aimed at a worker that is permanently
+        // gone by then can never fire — reject them as plan bugs.
+        for e in &self.events {
+            if let FaultKind::CorruptUpdate { .. } = e.kind {
+                if let Some(gone_at) = self.permanent_crash_time(e.worker) {
+                    if e.at >= gone_at {
+                        return Err(format!(
+                            "worker {}: corrupt-update at {} targets a worker \
+                             permanently crashed at {gone_at}",
+                            e.worker, e.at
+                        ));
+                    }
+                }
             }
         }
         Ok(())
@@ -224,6 +368,8 @@ pub enum FaultAction {
     LinkDegradeEnd { worker: usize, factor: f64 },
     KSpikeStart { worker: usize, factor: f64 },
     KSpikeEnd { worker: usize, factor: f64 },
+    /// Arm a poisoned payload: the worker's next push is corrupted.
+    Corrupt { worker: usize, kind: CorruptKind },
 }
 
 impl FaultAction {
@@ -234,7 +380,8 @@ impl FaultAction {
             | FaultAction::LinkDegradeStart { worker, .. }
             | FaultAction::LinkDegradeEnd { worker, .. }
             | FaultAction::KSpikeStart { worker, .. }
-            | FaultAction::KSpikeEnd { worker, .. } => worker,
+            | FaultAction::KSpikeEnd { worker, .. }
+            | FaultAction::Corrupt { worker, .. } => worker,
         }
     }
 }
@@ -270,6 +417,9 @@ impl FaultTimeline {
                         e.at + duration,
                         FaultAction::KSpikeEnd { worker: w, factor },
                     ));
+                }
+                FaultKind::CorruptUpdate { kind } => {
+                    actions.push((e.at, FaultAction::Corrupt { worker: w, kind }))
                 }
             }
         }
@@ -443,5 +593,93 @@ mod tests {
             .is_err());
         assert!(FaultPlan::new().k_spike(0, 1.0, -2.0, 3.0).validate(4).is_err());
         assert!(FaultPlan::new().crash_rejoin(0, 1.0, 2.0).validate(4).is_ok());
+    }
+
+    #[test]
+    fn corrupt_events_compile_and_validate() {
+        let plan = FaultPlan::new()
+            .corrupt_nan(0, 1.0)
+            .corrupt_blowup(1, 2.0, 1e6)
+            .corrupt_stale(2, 3.0);
+        plan.validate(4).unwrap();
+        assert!(plan.has_corruption());
+        assert!(!FaultPlan::new().crash(0, 1.0).has_corruption());
+        let tl = FaultTimeline::from_plan(&plan);
+        assert_eq!(tl.len(), 3);
+        assert_eq!(
+            tl.actions[0],
+            (1.0, FaultAction::Corrupt { worker: 0, kind: CorruptKind::NanInject })
+        );
+        assert_eq!(
+            tl.actions[1],
+            (
+                2.0,
+                FaultAction::Corrupt {
+                    worker: 1,
+                    kind: CorruptKind::Blowup { factor: 1e6 },
+                }
+            )
+        );
+    }
+
+    #[test]
+    fn validate_rejects_bad_blowup_factors() {
+        assert!(FaultPlan::new().corrupt_blowup(0, 1.0, f32::NAN).validate(4).is_err());
+        assert!(FaultPlan::new()
+            .corrupt_blowup(0, 1.0, f32::INFINITY)
+            .validate(4)
+            .is_err());
+        assert!(FaultPlan::new().corrupt_blowup(0, 1.0, 0.0).validate(4).is_err());
+        // Negative blow-ups (sign flips) are a legal species.
+        assert!(FaultPlan::new().corrupt_blowup(0, 1.0, -50.0).validate(4).is_ok());
+    }
+
+    #[test]
+    fn validate_rejects_overlapping_crash_windows() {
+        // Crash inside an open crash/rejoin window.
+        let err = FaultPlan::new()
+            .crash_rejoin(0, 1.0, 4.0)
+            .crash(0, 2.0)
+            .validate(4)
+            .unwrap_err();
+        assert!(err.contains("overlapping"), "{err}");
+        // Second crash after a terminal (never-rejoined) crash.
+        let err = FaultPlan::new().crash(1, 1.0).crash(1, 5.0).validate(4).unwrap_err();
+        assert!(err.contains("overlapping"), "{err}");
+        // Back-to-back windows that merely touch are fine.
+        FaultPlan::new()
+            .crash_rejoin(0, 1.0, 2.0)
+            .crash_rejoin(0, 3.0, 2.0)
+            .validate(4)
+            .unwrap();
+        // Different workers never interact.
+        FaultPlan::new().crash(0, 1.0).crash(1, 1.0).validate(4).unwrap();
+    }
+
+    #[test]
+    fn validate_rejects_corruption_of_permanently_crashed_workers() {
+        // Corrupt event at/after a terminal crash can never fire.
+        let err = FaultPlan::new()
+            .crash(0, 2.0)
+            .corrupt_nan(0, 3.0)
+            .validate(4)
+            .unwrap_err();
+        assert!(err.contains("permanently crashed"), "{err}");
+        // Before the terminal crash is fine (it still fires).
+        FaultPlan::new().crash(0, 2.0).corrupt_nan(0, 1.0).validate(4).unwrap();
+        // A crash the worker rejoins from does not block corruption.
+        FaultPlan::new()
+            .crash_rejoin(0, 2.0, 1.0)
+            .corrupt_blowup(0, 5.0, 100.0)
+            .validate(4)
+            .unwrap();
+    }
+
+    #[test]
+    fn crash_windows_reports_intervals() {
+        let p = FaultPlan::new().crash_rejoin(0, 1.0, 2.0).crash(0, 9.0);
+        assert_eq!(p.crash_windows(0), vec![(1.0, 3.0), (9.0, f64::INFINITY)]);
+        assert_eq!(p.permanent_crash_time(0), Some(9.0));
+        assert!(p.crash_windows(1).is_empty());
     }
 }

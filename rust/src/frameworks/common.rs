@@ -9,16 +9,17 @@ use anyhow::Result;
 
 use crate::alloc::Allocation;
 use crate::cluster::Cluster;
-use crate::config::RunConfig;
+use crate::config::{RobustConfig, RunConfig};
 use crate::data::{partition_pools, DataKind, Dataset, Partition, Probe, Shard};
-use crate::faults::{FaultAction, FaultDelta, FaultTimeline};
+use crate::faults::{CorruptKind, FaultAction, FaultDelta, FaultTimeline};
 use crate::gup::Gup;
 use crate::metrics::{RunMetrics, Segment, SegmentKind, WorkerMetrics};
 use crate::net::SimNet;
-use crate::ps::PsState;
+use crate::ps::{PsState, UpdateGuard};
 use crate::runtime::{init_params, ModelRuntime};
 use crate::sim::{Ev, SimQueue};
-use crate::tensor::BufferPool;
+use crate::tensor::{BufferPool, ParamVec};
+use crate::util::rng::Xoshiro256pp;
 use crate::worker::WorkerCore;
 
 /// Default synthetic-dataset size (train+test pool).
@@ -70,6 +71,27 @@ pub struct SimEnv {
     train_idx: Vec<usize>,
     /// Pool re-splits performed (perturbs the re-split seed stream).
     resplits: u64,
+    /// Effective robustness config — the spec's `+robust` token folded
+    /// into `cfg.robust` (DESIGN.md §15).  All defenses default off.
+    pub robust: RobustConfig,
+    /// PS-side admission guard (`Some` only when the guard is enabled).
+    guard: Option<UpdateGuard>,
+    /// Armed corruption per worker, consumed at its next actual push.
+    corrupt_pending: Vec<Option<CorruptKind>>,
+    /// Last wire payload per worker — the stale-replay source.  Only
+    /// tracked when the fault plan carries corruption.
+    last_push: Vec<Option<ParamVec>>,
+    /// Seeded corruption stream (NaN/Inf coordinate draws); advances
+    /// only when a corruption is applied, so runs stay pure functions
+    /// of seed + plan.
+    corrupt_rng: Xoshiro256pp,
+    /// Does the plan carry `CorruptUpdate` events at all?  When false
+    /// every corruption hook is a no-op with zero float ops.
+    track_corruption: bool,
+    /// Virtual time of the first applied corruption + the best
+    /// accuracy at that instant (recovery-time metric).
+    first_corrupt_t: Option<f64>,
+    acc_at_corrupt: f64,
 }
 
 impl SimEnv {
@@ -145,6 +167,15 @@ impl SimEnv {
         let mut queue = SimQueue::with_capacity(4 * n + 16);
         faults.schedule(&mut queue);
 
+        let robust = cfg.robust_effective();
+        let guard = if robust.guard {
+            Some(UpdateGuard::new(robust.norm_bound))
+        } else {
+            None
+        };
+        let track_corruption = plan.has_corruption();
+        let corrupt_rng = Xoshiro256pp::stream(cfg.seed, 0xC0DE);
+
         Ok(SimEnv {
             cfg,
             cluster,
@@ -165,6 +196,14 @@ impl SimEnv {
             faults,
             train_idx,
             resplits: 0,
+            robust,
+            guard,
+            corrupt_pending: vec![None; n],
+            last_push: (0..n).map(|_| None).collect(),
+            corrupt_rng,
+            track_corruption,
+            first_corrupt_t: None,
+            acc_at_corrupt: 0.0,
         })
     }
 
@@ -259,6 +298,11 @@ impl SimEnv {
                 FaultAction::KSpikeEnd { worker, factor } => {
                     self.cluster.unscale_k(worker, factor);
                 }
+                FaultAction::Corrupt { worker, kind } => {
+                    // Arm the species; the driver's push hook consumes
+                    // it when the worker next actually sends a payload.
+                    self.corrupt_pending[worker] = Some(kind);
+                }
             }
         }
         if delta.membership_changed {
@@ -319,6 +363,135 @@ impl SimEnv {
         }
     }
 
+    // --------------------------------------- robustness (DESIGN.md §15)
+
+    /// Quorum-deadline rounds enabled?  (False keeps the barrier and
+    /// elastic shapes on their exact legacy paths.)
+    pub fn quorum_on(&self) -> bool {
+        self.robust.quorum_on()
+    }
+
+    /// Apply any armed corruption species to worker `w`'s outgoing
+    /// payload, then record the wire payload as the worker's last push
+    /// (the stale-replay source).  A no-op — zero float ops, zero RNG
+    /// draws — unless the fault plan carries corruption, which keeps
+    /// corruption-free runs bit-identical to today's drivers.
+    pub fn corrupt_outgoing(&mut self, w: usize, g: &mut ParamVec) {
+        if !self.track_corruption {
+            return;
+        }
+        if let Some(kind) = self.corrupt_pending[w].take() {
+            let applied = match kind {
+                CorruptKind::NanInject => {
+                    // A seeded handful of coordinates go NaN plus one
+                    // +Inf: index draws depend only on seed + element
+                    // count, so every backend corrupts identically.
+                    let n_el = g.num_elements().max(1);
+                    for _ in 0..8usize.min(n_el) {
+                        let i = self.corrupt_rng.next_below(n_el as u64) as usize;
+                        set_flat(g, i, f32::NAN);
+                    }
+                    let i = self.corrupt_rng.next_below(n_el as u64) as usize;
+                    set_flat(g, i, f32::INFINITY);
+                    true
+                }
+                CorruptKind::Blowup { factor } => {
+                    for t in &mut g.tensors {
+                        for x in t.data_mut() {
+                            *x *= factor;
+                        }
+                    }
+                    true
+                }
+                CorruptKind::StaleReplay => {
+                    if let Some(prev) = self.last_push[w].as_ref() {
+                        g.copy_from(prev);
+                        true
+                    } else {
+                        // Nothing pushed yet: the replay has no source.
+                        false
+                    }
+                }
+            };
+            if applied {
+                self.run.corrupt_injected += 1;
+                if self.first_corrupt_t.is_none() {
+                    self.first_corrupt_t = Some(self.queue.now());
+                    self.acc_at_corrupt = self.best_acc;
+                }
+            }
+        }
+        let slot = self.last_push[w].get_or_insert_with(ParamVec::default);
+        slot.copy_from(g);
+    }
+
+    /// PS admission check — `true` admits `g` to aggregation, `false`
+    /// quarantines it (counted).  Always `true` when the guard is off.
+    pub fn guard_admits(&mut self, g: &ParamVec) -> bool {
+        match self.guard.as_mut() {
+            Some(guard) => {
+                if guard.admit(g) {
+                    true
+                } else {
+                    self.run.quarantined += 1;
+                    false
+                }
+            }
+            None => true,
+        }
+    }
+
+    /// One synchronous round's aggregation with the ISSUE 6 defenses.
+    /// Defenses-off takes the exact legacy SyncSGD path (bit-identical
+    /// to the pre-robustness drivers); otherwise the guard filters the
+    /// round's deltas and the configured aggregator — plain mean or
+    /// coordinate-wise trimmed mean — runs over the survivors.  An
+    /// all-quarantined round leaves the global model untouched.
+    /// Consumes and releases every buffer in `grads`.
+    pub fn aggregate_round(&mut self, grads: &mut Vec<ParamVec>) {
+        if grads.is_empty() {
+            return;
+        }
+        if !self.robust.defenses_on() {
+            self.ps.sync_sgd(grads);
+            for g in grads.drain(..) {
+                self.pool.release(g);
+            }
+            return;
+        }
+        let mut survivors: Vec<ParamVec> = Vec::with_capacity(grads.len());
+        for g in grads.drain(..) {
+            if self.guard_admits(&g) {
+                survivors.push(g);
+            } else {
+                self.pool.release(g);
+            }
+        }
+        if !survivors.is_empty() {
+            if self.robust.robust_agg {
+                self.ps.robust_sync_sgd(&survivors, self.robust.trim_fraction);
+            } else {
+                self.ps.sync_sgd(&survivors);
+            }
+        }
+        for g in survivors.drain(..) {
+            self.pool.release(g);
+        }
+    }
+
+    /// Recovery-time bookkeeping: once a corruption has fired, the run
+    /// has "recovered" when the global accuracy regains its
+    /// pre-injection best (DESIGN.md §15).
+    fn note_recovery(&mut self) {
+        if let Some(t0) = self.first_corrupt_t {
+            if self.run.recovery_time.is_none()
+                && self.ps.accuracy >= self.acc_at_corrupt
+            {
+                self.run.recovery_time = Some(self.queue.now() - t0);
+            }
+        }
+    }
+
     /// Charge `dt` of barrier wait time to worker `w`.
     pub fn charge_wait(&mut self, w: usize, dt: f64, at: f64) {
         if dt <= 0.0 {
@@ -352,6 +525,7 @@ impl SimEnv {
         } else {
             self.stale_evals += 1;
         }
+        self.note_recovery();
         if self.ps.accuracy >= self.cfg.target_acc {
             self.run.converged = true;
             return Ok(true);
@@ -374,6 +548,7 @@ impl SimEnv {
         } else {
             self.stale_evals += 1;
         }
+        self.note_recovery();
         if self.ps.accuracy >= self.cfg.target_acc {
             self.run.converged = true;
             return Ok(true);
@@ -427,6 +602,19 @@ impl SimEnv {
     /// Small control message (requests, time reports, assigns).
     pub fn ctl_bytes(&self) -> usize {
         24
+    }
+}
+
+/// Set flat element `idx` across a [`ParamVec`]'s tensors (corruption
+/// injection target addressing).
+fn set_flat(g: &mut ParamVec, mut idx: usize, v: f32) {
+    for t in &mut g.tensors {
+        let d = t.data_mut();
+        if idx < d.len() {
+            d[idx] = v;
+            return;
+        }
+        idx -= d.len();
     }
 }
 

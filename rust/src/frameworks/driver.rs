@@ -298,22 +298,31 @@ fn run_event(env: &mut SimEnv, spec: FrameworkSpec) -> Result<()> {
                 if mode.gup {
                     // Alg. 2 over the reused G buffer; the eval inside
                     // loss-based SGD refreshed loss/acc — record it.
+                    // A quarantined push is dropped before Alg. 2 runs.
                     env.workers[w].cumulative_g_into(&env.ps.w0, mode.eta, &mut g_scratch);
+                    env.corrupt_outgoing(w, &mut g_scratch);
                     let t_w = env.workers[w].last_loss;
-                    env.ps
-                        .loss_based_sgd(&g_scratch, t_w, env.rt.as_mut(), &env.probe)?;
-                    let now = env.queue.now();
-                    env.run
-                        .curve
-                        .push((now, env.ps.loss as f64, env.ps.accuracy));
-                    if env.check_convergence_after_external_eval()? {
-                        break;
+                    if env.guard_admits(&g_scratch) {
+                        env.ps
+                            .loss_based_sgd(&g_scratch, t_w, env.rt.as_mut(), &env.probe)?;
+                        let now = env.queue.now();
+                        env.run
+                            .curve
+                            .push((now, env.ps.loss as f64, env.ps.accuracy));
+                        if env.check_convergence_after_external_eval()? {
+                            break;
+                        }
                     }
                 } else {
-                    let g = planes.pending_grad[w].take().expect("push without gradient");
-                    env.ps.async_sgd(&g);
+                    let mut g = planes.pending_grad[w].take().expect("push without gradient");
+                    env.corrupt_outgoing(w, &mut g);
+                    let admitted = env.guard_admits(&g);
+                    if admitted {
+                        env.ps.async_sgd(&g);
+                    }
                     env.pool.release(g);
-                    if env.ps.updates % env.cfg.global_eval_every as u64 == 0
+                    if admitted
+                        && env.ps.updates % env.cfg.global_eval_every as u64 == 0
                         && env.eval_global_and_check()?
                     {
                         break;
@@ -458,10 +467,17 @@ fn rebalance_event(env: &mut SimEnv, planes: &mut EventPlanes, now: f64) {
 /// hybrids.  Every round the PS broadcasts model + dataset, all active
 /// workers run one local iteration, the barrier waits for the slowest,
 /// and the gate's survivors push.
+///
+/// With quorum-deadline rounds enabled (DESIGN.md §15) the barrier
+/// instead commits once the ⌈Q·K⌉-th update is in — held open to the
+/// round deadline when one is set, never past the full barrier — and
+/// stragglers' late deltas fold into the next round's aggregation
+/// while they stay busy past the commit.
 fn run_lockstep(env: &mut SimEnv, spec: FrameworkSpec) -> Result<()> {
     let eta = env.cfg.hp.lr;
     let gup = spec.gate == GatePolicy::Gup;
     let monitored = spec.alloc == AllocPolicy::Dynamic;
+    let quorum = env.quorum_on();
     let n = env.n_workers();
     let mut monitor = TimeMonitor::new(n);
     let mut last_rebalance = f64::MIN;
@@ -473,6 +489,12 @@ fn run_lockstep(env: &mut SimEnv, spec: FrameworkSpec) -> Result<()> {
     let mut g_scratch = env.pool.acquire_like(&env.ps.params);
     let mut grads: Vec<ParamVec> = Vec::with_capacity(n);
     let mut pushers: Vec<usize> = Vec::new();
+    // Quorum-deadline state: stragglers stay busy past the commit
+    // (`free_at`), their deltas carry into the next round
+    // (`late_grads`), and deferred GUP pushes re-fire next round.
+    let mut free_at = vec![0.0f64; n];
+    let mut late_grads: Vec<(usize, ParamVec, f64)> = Vec::new();
+    let mut late_fired = vec![false; n];
     loop {
         let t0 = env.queue.now();
         // Crash/rejoin churn lands at superstep granularity: rejoined
@@ -493,7 +515,8 @@ fn run_lockstep(env: &mut SimEnv, spec: FrameworkSpec) -> Result<()> {
             let dss = env.workers[w].dss;
             let comm =
                 env.transfer(w, model_b) + env.transfer(w, env.dataset_bytes(dss));
-            starts[w] = t0 + comm;
+            let base = if quorum { free_at[w].max(t0) } else { t0 };
+            starts[w] = base + comm;
             env.segment(w, t0, starts[w], SegmentKind::Comm);
             env.workers[w].adopt_global(&env.ps.params, env.ps.version);
         }
@@ -513,47 +536,104 @@ fn run_lockstep(env: &mut SimEnv, spec: FrameworkSpec) -> Result<()> {
             finishes[w] = starts[w] + dur;
             env.segment(w, starts[w], finishes[w], SegmentKind::Train);
             if gup {
-                if out.gate.push {
+                if out.gate.push || late_fired[w] {
+                    late_fired[w] = false;
                     pushers.push(w);
                 }
             } else {
                 let mut g = env.pool.acquire_like(&env.ps.params);
                 before.delta_over_eta_into(&env.workers[w].state.params, eta, &mut g);
+                env.corrupt_outgoing(w, &mut g);
                 grads.push(g);
             }
         }
 
-        // Barrier: wait for the straggler.
-        let barrier = active.iter().map(|&w| finishes[w]).fold(0.0, f64::max);
-        for &w in &active {
-            env.charge_wait(w, barrier - finishes[w], finishes[w]);
-        }
-
-        // Workers → PS: the gate's survivors push; PS waits for all of
-        // them (under `every` that is the whole active set).
-        let push_set: &[usize] = if gup { &pushers } else { &active };
-        let push_b = env.push_bytes();
-        let mut ps_ready = barrier;
-        for &w in push_set {
-            let arr = barrier + env.transfer(w, push_b);
-            env.segment(w, barrier, arr, SegmentKind::Comm);
-            env.run.workers[w].push_times.push(arr);
-            ps_ready = ps_ready.max(arr);
-        }
-        env.queue.advance_to(ps_ready);
-
-        if gup {
-            for &w in &pushers {
-                env.workers[w].cumulative_g_into(&env.ps.w0, eta, &mut g_scratch);
-                let t_w = env.workers[w].last_loss;
-                env.ps
-                    .loss_based_sgd(&g_scratch, t_w, env.rt.as_mut(), &env.probe)?;
+        // Barrier: wait for the straggler — or, under quorum, commit
+        // at the ⌈Q·K⌉-th finish.
+        let commit = if quorum {
+            let k = active.len();
+            let needed =
+                ((env.robust.quorum * k as f64).ceil() as usize).clamp(1, k);
+            let mut fs: Vec<f64> = active.iter().map(|&w| finishes[w]).collect();
+            fs.sort_unstable_by(|a, b| a.total_cmp(b));
+            let dl = env.robust.round_deadline_s;
+            if dl > 0.0 {
+                fs[needed - 1].max((t0 + dl).min(fs[k - 1]))
+            } else {
+                fs[needed - 1]
             }
         } else {
-            env.ps.sync_sgd(&grads);
-            for g in grads.drain(..) {
-                env.pool.release(g);
+            active.iter().map(|&w| finishes[w]).fold(0.0, f64::max)
+        };
+        let mut n_late = 0usize;
+        for &w in &active {
+            if finishes[w] <= commit {
+                env.charge_wait(w, commit - finishes[w], finishes[w]);
+            } else {
+                n_late += 1;
+                free_at[w] = free_at[w].max(finishes[w]);
             }
+        }
+        if n_late > 0 {
+            env.run.quorum_commits += 1;
+        }
+
+        // Workers → PS: the gate's survivors push; the PS waits for
+        // every committed push (under `every` that is the whole active
+        // set unless quorum deferred stragglers).
+        let push_b = env.push_bytes();
+        let mut ps_ready = commit;
+        if gup {
+            let mut committed: Vec<usize> = Vec::with_capacity(pushers.len());
+            for &w in &pushers {
+                if finishes[w] <= commit {
+                    let arr = commit + env.transfer(w, push_b);
+                    env.segment(w, commit, arr, SegmentKind::Comm);
+                    env.run.workers[w].push_times.push(arr);
+                    ps_ready = ps_ready.max(arr);
+                    committed.push(w);
+                } else {
+                    // The fired push re-fires next round over the
+                    // then-current cumulative G.
+                    late_fired[w] = true;
+                }
+            }
+            env.queue.advance_to(ps_ready);
+            for &w in &committed {
+                env.workers[w].cumulative_g_into(&env.ps.w0, eta, &mut g_scratch);
+                env.corrupt_outgoing(w, &mut g_scratch);
+                let t_w = env.workers[w].last_loss;
+                if env.guard_admits(&g_scratch) {
+                    env.ps
+                        .loss_based_sgd(&g_scratch, t_w, env.rt.as_mut(), &env.probe)?;
+                }
+            }
+        } else {
+            // Late deltas carried from earlier rounds fold in first,
+            // then this round's committed pushes in active order.
+            let mut round: Vec<ParamVec> =
+                Vec::with_capacity(late_grads.len() + grads.len());
+            for (_w, g, arr) in late_grads.drain(..) {
+                ps_ready = ps_ready.max(arr);
+                round.push(g);
+            }
+            for (g, &w) in grads.drain(..).zip(&active) {
+                if finishes[w] <= commit {
+                    let arr = commit + env.transfer(w, push_b);
+                    env.segment(w, commit, arr, SegmentKind::Comm);
+                    env.run.workers[w].push_times.push(arr);
+                    ps_ready = ps_ready.max(arr);
+                    round.push(g);
+                } else {
+                    let arr = finishes[w] + env.transfer(w, push_b);
+                    env.segment(w, finishes[w], arr, SegmentKind::Comm);
+                    env.run.workers[w].push_times.push(arr);
+                    free_at[w] = free_at[w].max(arr);
+                    late_grads.push((w, g, arr));
+                }
+            }
+            env.queue.advance_to(ps_ready);
+            env.aggregate_round(&mut round);
         }
         if monitored {
             // The barrier re-ships the (re-sized) working set in the
@@ -563,6 +643,9 @@ fn run_lockstep(env: &mut SimEnv, spec: FrameworkSpec) -> Result<()> {
         if env.eval_global_and_check()? || env.iterations_exhausted() {
             break;
         }
+    }
+    for (_w, g, _arr) in late_grads.drain(..) {
+        env.pool.release(g);
     }
     env.pool.release(g_scratch);
     env.pool.release(before);
@@ -659,10 +742,10 @@ fn run_gated_rounds(env: &mut SimEnv, spec: FrameworkSpec) -> Result<()> {
                 ps_ready = ps_ready.max(arr);
             }
             env.queue.advance_to(ps_ready);
-            env.ps.sync_sgd(&grads);
-            for g in grads.drain(..) {
-                env.pool.release(g);
+            for (g, &w) in grads.iter_mut().zip(&active) {
+                env.corrupt_outgoing(w, g);
             }
+            env.aggregate_round(&mut grads);
             let t1 = env.queue.now();
             for &w in &active {
                 let comm = env.transfer(w, model_b);
@@ -758,6 +841,12 @@ fn run_elastic(env: &mut SimEnv, spec: FrameworkSpec) -> Result<()> {
     let mut g_scratch = env.pool.acquire_like(&env.ps.params);
     let mut grads: Vec<ParamVec> = Vec::with_capacity(n);
     let mut pushers: Vec<usize> = Vec::new();
+    // Quorum-deadline state (DESIGN.md §15): stragglers past the chosen
+    // barrier defer their deltas to the next round instead of holding
+    // the commit open.
+    let quorum = env.quorum_on();
+    let mut late_grads: Vec<(usize, ParamVec, f64)> = Vec::new();
+    let mut late_fired = vec![false; n];
     loop {
         let t0 = env.queue.now();
         // Churn lands at round granularity; rejoined workers get a
@@ -777,6 +866,10 @@ fn run_elastic(env: &mut SimEnv, spec: FrameworkSpec) -> Result<()> {
         if active.is_empty() {
             break;
         }
+        // Late deltas deferred by the previous quorum commit fold into
+        // this round's aggregation.
+        let carried: Vec<(usize, ParamVec, f64)> = std::mem::take(&mut late_grads);
+        let mut deferred = false;
 
         // PS → workers: model broadcast.
         let model_b = env.model_bytes();
@@ -817,12 +910,56 @@ fn run_elastic(env: &mut SimEnv, spec: FrameworkSpec) -> Result<()> {
                 })
                 .sum()
         };
-        let barrier = candidates
-            .iter()
-            .copied()
-            .min_by(|a, b| wait_at(*a).partial_cmp(&wait_at(*b)).unwrap())
-            .unwrap_or(first_all)
-            .max(first_all.min(t0 + lookahead));
+        let barrier = if quorum {
+            // Quorum placement: a barrier is feasible once ⌈Q·K⌉
+            // workers can finish at least one iteration; predicted
+            // stragglers contribute no wait (their deltas defer).
+            let k = active.len();
+            let needed =
+                ((env.robust.quorum * k as f64).ceil() as usize).clamp(1, k);
+            let mut firsts: Vec<f64> = active
+                .iter()
+                .map(|&w| starts[w] + predicted[w].max(1e-6))
+                .collect();
+            firsts.sort_unstable_by(|a, b| a.total_cmp(b));
+            let first_q = firsts[needed - 1];
+            let wait_q = |barrier: f64| -> f64 {
+                let mut done = 0usize;
+                let mut total = 0.0;
+                for &w in &active {
+                    let d = predicted[w].max(1e-6);
+                    if barrier < starts[w] + d {
+                        continue; // predicted straggler: defers, no wait
+                    }
+                    done += 1;
+                    let steps = ((barrier - starts[w]) / d).floor();
+                    total += barrier - (starts[w] + steps * d);
+                }
+                if done < needed {
+                    f64::INFINITY
+                } else {
+                    total
+                }
+            };
+            let mut b = candidates
+                .iter()
+                .copied()
+                .min_by(|a, b| wait_q(*a).partial_cmp(&wait_q(*b)).unwrap())
+                .unwrap_or(first_q)
+                .max(first_q.min(t0 + lookahead));
+            let dl = env.robust.round_deadline_s;
+            if dl > 0.0 {
+                b = b.min((t0 + dl).max(first_q));
+            }
+            b
+        } else {
+            candidates
+                .iter()
+                .copied()
+                .min_by(|a, b| wait_at(*a).partial_cmp(&wait_at(*b)).unwrap())
+                .unwrap_or(first_all)
+                .max(first_all.min(t0 + lookahead))
+        };
 
         // Workers run as many local iterations as fit before the
         // barrier (real compute per iteration), then wait.
@@ -850,8 +987,16 @@ fn run_elastic(env: &mut SimEnv, spec: FrameworkSpec) -> Result<()> {
             }
             env.charge_wait(w, barrier - t, t);
             if gup {
-                if fired {
-                    pushers.push(w);
+                if fired || late_fired[w] {
+                    if quorum && t > barrier {
+                        // Straggler past the quorum commit: the fired
+                        // push re-fires at the next barrier.
+                        late_fired[w] = true;
+                        deferred = true;
+                    } else {
+                        late_fired[w] = false;
+                        pushers.push(w);
+                    }
                 }
             } else {
                 // `every` pushes unconditionally — the O(params) δ
@@ -861,15 +1006,31 @@ fn run_elastic(env: &mut SimEnv, spec: FrameworkSpec) -> Result<()> {
                 if push {
                     let mut g = env.pool.acquire_like(&env.ps.params);
                     before.delta_over_eta_into(&env.workers[w].state.params, eta, &mut g);
-                    pushers.push(w);
-                    grads.push(g);
+                    env.corrupt_outgoing(w, &mut g);
+                    if quorum && t > barrier {
+                        // Late delta: arrives after the commit, folds
+                        // into the next round's aggregation.
+                        let arr = t + env.transfer(w, env.push_bytes());
+                        env.run.workers[w].push_times.push(arr);
+                        late_grads.push((w, g, arr));
+                        deferred = true;
+                    } else {
+                        pushers.push(w);
+                        grads.push(g);
+                    }
                 }
             }
         }
 
         // Push + aggregate: under `every` the whole active set pushes
         // (and `pushers == active`); otherwise only the gated subset.
-        let push_set: &[usize] = if gate_every { &active } else { &pushers };
+        // Under quorum the straggler subset already deferred, so only
+        // the committed pushers transfer at the barrier.
+        let push_set: &[usize] = if gate_every && !quorum {
+            &active
+        } else {
+            &pushers
+        };
         let push_b = env.push_bytes();
         let mut ps_ready = barrier;
         for &w in push_set {
@@ -877,19 +1038,32 @@ fn run_elastic(env: &mut SimEnv, spec: FrameworkSpec) -> Result<()> {
             env.run.workers[w].push_times.push(arr);
             ps_ready = ps_ready.max(arr);
         }
+        if deferred {
+            env.run.quorum_commits += 1;
+        }
         env.queue.advance_to(ps_ready);
         if gup {
             for &w in &pushers {
                 env.workers[w].cumulative_g_into(&env.ps.w0, eta, &mut g_scratch);
+                env.corrupt_outgoing(w, &mut g_scratch);
                 let t_w = env.workers[w].last_loss;
-                env.ps
-                    .loss_based_sgd(&g_scratch, t_w, env.rt.as_mut(), &env.probe)?;
+                if env.guard_admits(&g_scratch) {
+                    env.ps
+                        .loss_based_sgd(&g_scratch, t_w, env.rt.as_mut(), &env.probe)?;
+                }
             }
-        } else if !grads.is_empty() {
-            env.ps.sync_sgd(&grads);
-            for g in grads.drain(..) {
-                env.pool.release(g);
+        } else {
+            // Carried late deltas fold in ahead of this round's pushes.
+            let mut round: Vec<ParamVec> =
+                Vec::with_capacity(carried.len() + grads.len());
+            let mut ready2 = ps_ready;
+            for (_w, g, arr) in carried {
+                ready2 = ready2.max(arr);
+                round.push(g);
             }
+            round.extend(grads.drain(..));
+            env.queue.advance_to(ready2);
+            env.aggregate_round(&mut round);
         }
         if monitored {
             // EBSP never re-ships datasets: charge the data plane here.
@@ -898,6 +1072,9 @@ fn run_elastic(env: &mut SimEnv, spec: FrameworkSpec) -> Result<()> {
         if env.eval_global_and_check()? || env.iterations_exhausted() {
             break;
         }
+    }
+    for (_w, g, _arr) in late_grads.drain(..) {
+        env.pool.release(g);
     }
     env.pool.release(g_scratch);
     env.pool.release(before);

@@ -34,5 +34,6 @@ pub use common::{
     run_framework, run_framework_opts, run_reference, run_reference_opts, SimEnv,
 };
 pub use policy::{
-    AllocPolicy, FrameworkSpec, GatePolicy, SpecError, SyncPolicy, PRESETS,
+    AggPolicy, AllocPolicy, FrameworkSpec, GatePolicy, SpecError, SyncPolicy,
+    PRESETS,
 };

@@ -63,12 +63,29 @@ pub enum AllocPolicy {
     Dynamic,
 }
 
-/// One point in the composition grid: sync × gate × alloc.
+/// How the PS treats incoming deltas (ISSUE 6 failure-domain axis).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum AggPolicy {
+    /// Trust every delta: plain mean / loss-based aggregation (the
+    /// pre-robustness behaviour, and the default on every preset).
+    Mean,
+    /// `UpdateGuard` screening (finite check + relative-norm bound)
+    /// with a coordinate-wise trimmed-mean fallback over the round's
+    /// surviving deltas (DESIGN.md §15).
+    Robust,
+}
+
+/// One point in the composition grid: sync × gate × alloc (× agg).
+///
+/// The `agg` axis defaults to [`AggPolicy::Mean`] everywhere — the
+/// 24-spec grid and the six presets are unchanged — and is opted into
+/// per spec with the `+robust` token (`bsp+robust`, `hermes+robust`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct FrameworkSpec {
     pub sync: SyncPolicy,
     pub gate: GatePolicy,
     pub alloc: AllocPolicy,
+    pub agg: AggPolicy,
 }
 
 /// The six canonical frameworks, in the paper's presentation order.
@@ -79,7 +96,8 @@ pub fn preset(name: &str) -> Option<FrameworkSpec> {
     use AllocPolicy::*;
     use GatePolicy::*;
     use SyncPolicy::*;
-    let spec = |sync, gate, alloc| FrameworkSpec { sync, gate, alloc };
+    let spec =
+        |sync, gate, alloc| FrameworkSpec { sync, gate, alloc, agg: AggPolicy::Mean };
     match name {
         "bsp" => Some(spec(Barrier, Every, Static)),
         "asp" => Some(spec(Async, Every, Static)),
@@ -127,6 +145,23 @@ impl AllocPolicy {
     }
 }
 
+impl AggPolicy {
+    pub fn token(&self) -> &'static str {
+        match self {
+            AggPolicy::Mean => "mean",
+            AggPolicy::Robust => "robust",
+        }
+    }
+}
+
+fn agg_token(tok: &str) -> Option<AggPolicy> {
+    match tok {
+        "mean" => Some(AggPolicy::Mean),
+        "robust" => Some(AggPolicy::Robust),
+        _ => None,
+    }
+}
+
 fn gate_token(tok: &str) -> Option<GatePolicy> {
     match tok {
         "every" => Some(GatePolicy::Every),
@@ -149,9 +184,10 @@ fn alloc_token(tok: &str) -> Option<AllocPolicy> {
 pub fn spec_help() -> String {
     format!(
         "valid specs: presets {} or compositions \
-         <preset>[+<gate>][+<alloc>] with gate one of every|delta|gup \
-         and alloc one of static|dynalloc (e.g. bsp+dynalloc, ssp+gup, \
-         selsync+dynalloc)",
+         <preset>[+<gate>][+<alloc>][+<agg>] with gate one of \
+         every|delta|gup, alloc one of static|dynalloc and agg one of \
+         mean|robust (e.g. bsp+dynalloc, ssp+gup, selsync+dynalloc, \
+         hermes+robust)",
         PRESETS.join(" ")
     )
 }
@@ -205,7 +241,7 @@ impl FromStr for FrameworkSpec {
         let first = toks.next().unwrap_or_default().trim();
         let mut spec = preset(first)
             .ok_or_else(|| SpecError::new(input, first, "unknown preset"))?;
-        let (mut gate_set, mut alloc_set) = (false, false);
+        let (mut gate_set, mut alloc_set, mut agg_set) = (false, false, false);
         for tok in toks {
             let tok = tok.trim();
             if let Some(g) = gate_token(tok) {
@@ -220,6 +256,12 @@ impl FromStr for FrameworkSpec {
                 }
                 spec.alloc = a;
                 alloc_set = true;
+            } else if let Some(a) = agg_token(tok) {
+                if agg_set {
+                    return Err(SpecError::new(input, tok, "agg set twice"));
+                }
+                spec.agg = a;
+                agg_set = true;
             } else {
                 return Err(SpecError::new(input, tok, "unknown axis token"));
             }
@@ -233,12 +275,23 @@ impl fmt::Display for FrameworkSpec {
         if let Some(name) = preset_name(self) {
             return f.write_str(name);
         }
+        // A robust variant of a preset renders as `<preset>+robust`
+        // (so `hermes+robust` round-trips), else the canonical form.
+        if self.agg == AggPolicy::Robust {
+            let mean = FrameworkSpec { agg: AggPolicy::Mean, ..*self };
+            if let Some(name) = preset_name(&mean) {
+                return write!(f, "{name}+robust");
+            }
+        }
         f.write_str(self.sync.token())?;
         if self.gate != GatePolicy::Every {
             write!(f, "+{}", self.gate.token())?;
         }
         if self.alloc != AllocPolicy::Static {
             write!(f, "+{}", self.alloc.token())?;
+        }
+        if self.agg != AggPolicy::Mean {
+            write!(f, "+{}", self.agg.token())?;
         }
         Ok(())
     }
@@ -257,7 +310,7 @@ pub fn grid_specs() -> Vec<FrameworkSpec> {
     ] {
         for gate in [GatePolicy::Every, GatePolicy::Delta, GatePolicy::Gup] {
             for alloc in [AllocPolicy::Static, AllocPolicy::Dynamic] {
-                out.push(FrameworkSpec { sync, gate, alloc });
+                out.push(FrameworkSpec { sync, gate, alloc, agg: AggPolicy::Mean });
             }
         }
     }
@@ -312,6 +365,7 @@ mod tests {
                 sync: SyncPolicy::Barrier,
                 gate: GatePolicy::Every,
                 alloc: AllocPolicy::Dynamic,
+                agg: AggPolicy::Mean,
             }
         );
         let s: FrameworkSpec = "ssp+gup".parse().unwrap();
@@ -376,6 +430,35 @@ mod tests {
         // Axis tokens cannot lead: the sync axis must come from the
         // preset in first position.
         assert!("gup+bsp".parse::<FrameworkSpec>().is_err());
+    }
+
+    #[test]
+    fn robust_agg_axis_parses_renders_and_defaults_off() {
+        // Every preset and grid spec defaults to Mean aggregation.
+        for name in PRESETS {
+            assert_eq!(preset(name).unwrap().agg, AggPolicy::Mean);
+        }
+        for spec in grid_specs() {
+            assert_eq!(spec.agg, AggPolicy::Mean);
+        }
+        // `+robust` composes with any spec and round-trips.
+        for base in ["bsp", "hermes", "ssp+gup", "selsync+dynalloc"] {
+            let s: FrameworkSpec = format!("{base}+robust").parse().unwrap();
+            assert_eq!(s.agg, AggPolicy::Robust);
+            let mean = FrameworkSpec { agg: AggPolicy::Mean, ..s };
+            assert_eq!(mean, base.parse().unwrap());
+            let rendered = s.to_string();
+            assert_eq!(rendered.parse::<FrameworkSpec>().unwrap(), s, "{rendered}");
+        }
+        assert_eq!("hermes+robust".parse::<FrameworkSpec>().unwrap().to_string(),
+            "hermes+robust");
+        // Robust specs are never presets.
+        assert_eq!(preset_name(&"bsp+robust".parse::<FrameworkSpec>().unwrap()), None);
+        // Explicit `mean` is accepted and renders back to the preset.
+        assert_eq!("bsp+mean".parse::<FrameworkSpec>().unwrap().to_string(), "bsp");
+        // Double agg tokens are rejected.
+        let err = "bsp+robust+mean".parse::<FrameworkSpec>().unwrap_err();
+        assert!(err.reason.contains("agg set twice"), "{err}");
     }
 
     #[test]

@@ -11,33 +11,58 @@
 //! per-worker pacing delays derived from Table II's K coefficients.
 //!
 //! **Elasticity (DESIGN.md §10):** the PS keeps a per-worker *lease*
-//! renewed by every message; a lease that misses heartbeats for
-//! [`LEASE_TIMEOUT`] is reaped (the worker leaves the live membership
-//! set).  Every `Register` — first connect or reconnect after a kill —
-//! is answered with a `GlobalModel` state resync, so a killed worker
-//! process rejoins the run instead of wedging it.  [`run_live_churn`]
-//! drives both failure modes (socket kill + reconnect, heartbeat stall)
-//! deterministically for tests and demos.
+//! renewed by every message; a lease that misses heartbeats for the
+//! configured timeout (default [`LEASE_TIMEOUT`]) is reaped (the worker
+//! leaves the live membership set).  Every `Register` — first connect
+//! or reconnect after a kill — is answered with a `GlobalModel` state
+//! resync, so a killed worker process rejoins the run instead of
+//! wedging it.  [`run_live_churn`] drives both failure modes (socket
+//! kill + reconnect, heartbeat stall) deterministically for tests and
+//! demos.
+//!
+//! **Failure domains (DESIGN.md §15):** the coordinator itself is now a
+//! failure domain.  Every applied update is journaled (append-only wire
+//! frames) and the PS state is periodically checkpointed via
+//! [`PsState::encode_snapshot`]; [`LiveOpts::kill_coordinator_at`]
+//! kills the coordinator mid-run and restores it from snapshot +
+//! journal on a fresh port.  Workers survive the outage with bounded
+//! exponential-backoff reconnects and resend their unacked push; a
+//! per-worker iteration high-water mark at the PS makes the retry
+//! idempotent (each update is applied at most once).  Incoming deltas
+//! pass through the same [`UpdateGuard`] quarantine as the simulator's
+//! aggregation path, and [`LiveOpts::corrupt`] injects the simulator's
+//! poisoned-update species onto the real wire.
 
 use std::io::{BufReader, BufWriter};
-use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
-use crate::config::RunConfig;
+use crate::config::{RobustConfig, RunConfig};
 use crate::data::{partition_pools, DataKind, Dataset, Partition, Probe};
+use crate::faults::CorruptKind;
 use crate::gup::Gup;
-use crate::ps::PsState;
+use crate::ps::{PsState, UpdateGuard};
 use crate::runtime::{init_params, MockRuntime, ModelRuntime};
 use crate::tensor::{BufferPool, ParamVec};
 use crate::wire::{read_frame_with, write_frame_with, Message, TensorPayload};
 use crate::worker::WorkerCore;
 
-/// How long a worker may go silent before the PS reaps its lease.
+/// Default lease timeout — overridable per run via
+/// `RunConfig::robust.lease_timeout_ms`.
 pub const LEASE_TIMEOUT: Duration = Duration::from_millis(250);
+
+/// Applied updates between coordinator checkpoints; the journal holds
+/// at most this many frames before it folds into the next snapshot.
+const SNAPSHOT_EVERY: u32 = 8;
+
+/// Magic prefixing the live coordinator's checkpoint sidecar (the
+/// [`PsState`] snapshot plus dedup + guard state).
+const LIVE_SNAP_MAGIC: [u8; 4] = *b"LSNP";
 
 /// Outcome of a live run.
 #[derive(Debug, Clone)]
@@ -54,6 +79,15 @@ pub struct LiveReport {
     pub reconnects: u64,
     /// Leases reaped by the heartbeat timeout.
     pub lease_expirations: u64,
+    /// Retried pushes the PS recognized and skipped (at-most-once).
+    pub dedup_skips: u64,
+    /// Coordinator kill + restore cycles performed.
+    pub coordinator_restarts: u64,
+    /// Updates quarantined by the PS-side [`UpdateGuard`].
+    pub quarantined: u64,
+    /// FNV-1a digest of the final global parameters — cheap cross-run
+    /// parity checks (killed vs unkilled coordinator).
+    pub model_digest: u64,
 }
 
 /// How a churned live worker fails.
@@ -78,6 +112,36 @@ pub struct LiveChurn {
     pub kind: ChurnKind,
 }
 
+/// Deterministic poisoned-update injection for one live worker — the
+/// wire twin of the simulator's `CorruptUpdate` fault species.
+#[derive(Debug, Clone, Copy)]
+pub struct LiveCorrupt {
+    pub worker: usize,
+    /// Pushes with ordinal > `after_pushes` carry corrupted payloads.
+    pub after_pushes: u64,
+    pub kind: CorruptKind,
+}
+
+/// Everything beyond the basic (cfg, workers, duration) triple a live
+/// run can be asked to do.
+#[derive(Debug, Clone, Default)]
+pub struct LiveOpts {
+    /// One deterministic worker fault (kill+reconnect or stall).
+    pub churn: Option<LiveChurn>,
+    /// Poisoned-update injection on one worker's outgoing pushes.
+    pub corrupt: Option<LiveCorrupt>,
+    /// Kill the coordinator this long after start, then restore it from
+    /// snapshot + journal on a fresh port.
+    pub kill_coordinator_at: Option<Duration>,
+    /// Where checkpoints + the update journal live.  Defaults to a
+    /// per-process temp dir when a coordinator kill is scheduled;
+    /// `None` without a kill means no persistence (zero overhead).
+    pub state_dir: Option<PathBuf>,
+    /// Each worker exits after this many gated pushes — makes runs a
+    /// deterministic function of the seed for parity tests.
+    pub stop_after_pushes: Option<u64>,
+}
+
 /// Per-worker lease at the PS.
 #[derive(Debug, Clone)]
 struct Lease {
@@ -88,16 +152,48 @@ struct Lease {
     epoch: u64,
 }
 
+/// Coordinator state behind one lock: the PS, its runtime, the
+/// admission guard, the per-worker dedup high-water marks and the
+/// update journal — one lock so an applied update and its journal
+/// entry are atomic with respect to checkpoints and crash-restore.
+struct Coord {
+    ps: PsState,
+    rt: Box<dyn ModelRuntime + Send>,
+    guard: Option<UpdateGuard>,
+    /// Highest processed iteration per worker; a resent frame (lost
+    /// ack) lands at or below this mark and is skipped, so a retried
+    /// update is applied at most once.
+    last_seen: Vec<u64>,
+    journal: Option<Journal>,
+}
+
+/// Append-only update journal: length-prefixed `PushUpdate` wire
+/// frames (fp32 payloads, so replay applies exactly what was applied).
+struct Journal {
+    dir: PathBuf,
+    file: std::fs::File,
+    since_snapshot: u32,
+    enc_buf: Vec<u8>,
+}
+
 /// Shared server-side state.
 struct PsShared {
-    state: Mutex<(PsState, Box<dyn ModelRuntime + Send>)>,
+    state: Mutex<Coord>,
     probe: Probe,
     leases: Mutex<Vec<Lease>>,
+    /// Live handler sockets, severed wholesale on a coordinator kill.
+    conns: Mutex<Vec<TcpStream>>,
     iterations: AtomicU64,
     pushes: AtomicU64,
     bytes: AtomicU64,
     reconnects: AtomicU64,
     lease_expirations: AtomicU64,
+    dedup_skips: AtomicU64,
+    quarantined: AtomicU64,
+    coordinator_restarts: AtomicU64,
+    /// Set once every worker thread has exited; unblocks the acceptor.
+    shutdown: AtomicBool,
+    lease_timeout: Duration,
     deadline: Instant,
 }
 
@@ -167,7 +263,7 @@ impl PsShared {
 /// the demo light; pass artifact-backed runtimes via
 /// [`run_live_with`] for the full-model deployment.
 pub fn run_live(cfg: &RunConfig, n_workers: usize, duration: Duration) -> Result<LiveReport> {
-    run_live_opts(cfg, n_workers, duration, None, Arc::new(mock_rt))
+    run_live_opts(cfg, n_workers, duration, LiveOpts::default(), Arc::new(mock_rt))
 }
 
 /// [`run_live`] with one deterministic fault injected (kill+reconnect
@@ -178,7 +274,8 @@ pub fn run_live_churn(
     duration: Duration,
     churn: LiveChurn,
 ) -> Result<LiveReport> {
-    run_live_opts(cfg, n_workers, duration, Some(churn), Arc::new(mock_rt))
+    let opts = LiveOpts { churn: Some(churn), ..LiveOpts::default() };
+    run_live_opts(cfg, n_workers, duration, opts, Arc::new(mock_rt))
 }
 
 pub fn run_live_with<F>(
@@ -190,7 +287,18 @@ pub fn run_live_with<F>(
 where
     F: Fn() -> Box<dyn ModelRuntime + Send> + Send + Sync + 'static,
 {
-    run_live_opts(cfg, n_workers, duration, None, Arc::new(make_rt))
+    run_live_opts(cfg, n_workers, duration, LiveOpts::default(), Arc::new(make_rt))
+}
+
+/// The everything-dial entry point: worker churn, poisoned updates,
+/// coordinator kill + crash-restore, deterministic stop conditions.
+pub fn run_live_full(
+    cfg: &RunConfig,
+    n_workers: usize,
+    duration: Duration,
+    opts: LiveOpts,
+) -> Result<LiveReport> {
+    run_live_opts(cfg, n_workers, duration, opts, Arc::new(mock_rt))
 }
 
 fn mock_rt() -> Box<dyn ModelRuntime + Send> {
@@ -199,13 +307,30 @@ fn mock_rt() -> Box<dyn ModelRuntime + Send> {
 
 type RtFactory = Arc<dyn Fn() -> Box<dyn ModelRuntime + Send> + Send + Sync>;
 
+/// FNV-1a over the parameter bit patterns — stable across runs of the
+/// same seed, cheap enough to compute at every run end.
+pub fn params_digest(p: &ParamVec) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for t in &p.tensors {
+        for &x in t.data() {
+            for b in x.to_bits().to_le_bytes() {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x100_0000_01b3);
+            }
+        }
+    }
+    h
+}
+
 fn run_live_opts(
     cfg: &RunConfig,
     n_workers: usize,
     duration: Duration,
-    churn: Option<LiveChurn>,
+    opts: LiveOpts,
     make_rt: RtFactory,
 ) -> Result<LiveReport> {
+    let robust = cfg.robust_effective();
+    let lease_timeout = Duration::from_millis(robust.lease_timeout_ms.max(1));
     let ps_rt = make_rt();
     let kind = DataKind::for_model(ps_rt.meta().name.as_str());
     let ds = Arc::new(Dataset::synth(kind, 3000, cfg.seed));
@@ -216,46 +341,143 @@ fn run_live_opts(
     let w0 = init_params(ps_rt.meta(), cfg.seed);
     let ps = PsState::new(w0.clone(), cfg.hp.lr);
 
+    // Crash-recovery persistence: on whenever a state dir is given or a
+    // coordinator kill is scheduled (the kill path restores from disk).
+    let state_dir: Option<PathBuf> = opts.state_dir.clone().or_else(|| {
+        opts.kill_coordinator_at.map(|_| {
+            std::env::temp_dir().join(format!(
+                "hermes-live-{}-{}",
+                std::process::id(),
+                cfg.seed
+            ))
+        })
+    });
+    let journal = match &state_dir {
+        Some(dir) => {
+            // Stale state from an earlier run in the same dir must not
+            // leak into this one.
+            std::fs::create_dir_all(dir)?;
+            let _ = std::fs::remove_file(dir.join("ps.snap"));
+            let _ = std::fs::remove_file(dir.join("journal.bin"));
+            Some(open_journal(dir)?)
+        }
+        None => None,
+    };
+    let guard = if robust.guard {
+        Some(UpdateGuard::new(robust.norm_bound))
+    } else {
+        None
+    };
+
     let listener = TcpListener::bind("127.0.0.1:0")?;
     let addr = listener.local_addr()?;
     let start = Instant::now();
     let shared = Arc::new(PsShared {
-        state: Mutex::new((ps, ps_rt)),
+        state: Mutex::new(Coord {
+            ps,
+            rt: ps_rt,
+            guard,
+            last_seen: vec![0; n_workers],
+            journal,
+        }),
         probe: probe.clone(),
         leases: Mutex::new(Vec::new()),
+        conns: Mutex::new(Vec::new()),
         iterations: AtomicU64::new(0),
         pushes: AtomicU64::new(0),
         bytes: AtomicU64::new(0),
         reconnects: AtomicU64::new(0),
         lease_expirations: AtomicU64::new(0),
+        dedup_skips: AtomicU64::new(0),
+        quarantined: AtomicU64::new(0),
+        coordinator_restarts: AtomicU64::new(0),
+        shutdown: AtomicBool::new(false),
+        lease_timeout,
         deadline: start + duration,
     });
+    let addr_cell = Arc::new(Mutex::new(addr));
 
     // ---- PS acceptor thread: non-blocking accept loop so reconnects
     // after the initial N connections are served too, doubling as the
-    // lease reaper; one handler thread per connection.
+    // lease reaper and the coordinator kill/restore supervisor; one
+    // handler thread per connection.
     let srv = shared.clone();
     let fp16 = cfg.net.fp16_wire;
+    let acceptor_w0 = w0.clone();
+    let lr = cfg.hp.lr;
+    let acceptor_robust = robust.clone();
+    let acceptor_dir = state_dir.clone();
+    let acceptor_rt = make_rt.clone();
+    let acceptor_addr = addr_cell.clone();
+    let mut kill_at = opts.kill_coordinator_at.map(|d| start + d);
     listener.set_nonblocking(true)?;
     let acceptor = std::thread::spawn(move || {
         let grace = Duration::from_millis(400);
         let mut handlers = Vec::new();
+        let mut listener = listener;
         loop {
+            // Scheduled coordinator crash: sever every connection, lose
+            // the in-memory state, restore from snapshot + journal on a
+            // fresh port, and republish the address.
+            if let Some(t) = kill_at {
+                if Instant::now() >= t {
+                    kill_at = None;
+                    srv.coordinator_restarts.fetch_add(1, Ordering::Relaxed);
+                    for c in srv.conns.lock().unwrap().drain(..) {
+                        let _ = c.shutdown(Shutdown::Both);
+                    }
+                    for h in handlers.drain(..) {
+                        let _: std::thread::Result<()> = h.join();
+                    }
+                    if let Some(dir) = acceptor_dir.as_deref() {
+                        if let Ok(coord) = restore_coord(
+                            dir,
+                            &acceptor_w0,
+                            lr,
+                            &acceptor_robust,
+                            &srv.probe,
+                            &acceptor_rt,
+                        ) {
+                            *srv.state.lock().unwrap() = coord;
+                        }
+                    }
+                    // Every lease died with the coordinator; workers
+                    // re-register on reconnect.
+                    srv.leases.lock().unwrap().clear();
+                    if let Ok(nl) = TcpListener::bind("127.0.0.1:0") {
+                        if nl.set_nonblocking(true).is_ok() {
+                            if let Ok(a) = nl.local_addr() {
+                                *acceptor_addr.lock().unwrap() = a;
+                                listener = nl;
+                            }
+                        }
+                    }
+                }
+            }
             match listener.accept() {
                 Ok((stream, _)) => {
-                    let srv = srv.clone();
+                    // Track sockets only while a kill is pending — the
+                    // clone exists to sever them, nothing else.
+                    if kill_at.is_some() {
+                        if let Ok(c) = stream.try_clone() {
+                            srv.conns.lock().unwrap().push(c);
+                        }
+                    }
+                    let srv2 = srv.clone();
                     handlers.push(std::thread::spawn(move || {
-                        let _ = serve_worker(stream, srv, fp16);
+                        let _ = serve_worker(stream, srv2, fp16);
                     }));
                 }
                 // WouldBlock is the idle tick; everything else (e.g. a
                 // churned client resetting mid-accept, EINTR) is
                 // transient — the acceptor must outlive it or rejoins
-                // and lease reaping die with it.  Only the deadline
-                // ends the loop.
+                // and lease reaping die with it.  Only the deadline or
+                // the all-workers-done signal ends the loop.
                 Err(e) => {
-                    srv.reap_expired(LEASE_TIMEOUT);
-                    if Instant::now() > srv.deadline + grace {
+                    srv.reap_expired(srv.lease_timeout);
+                    if srv.shutdown.load(Ordering::Relaxed)
+                        || Instant::now() > srv.deadline + grace
+                    {
                         break;
                     }
                     if e.kind() == std::io::ErrorKind::WouldBlock {
@@ -278,9 +500,15 @@ fn run_live_opts(
         let w0 = w0.clone();
         let make_rt = make_rt.clone();
         let deadline = shared.deadline;
+        let addr_cell = addr_cell.clone();
+        let my_churn = opts.churn.filter(|c| c.worker == wid);
+        let my_corrupt = opts.corrupt.filter(|c| c.worker == wid);
+        let stop_after = opts.stop_after_pushes;
         // Table II pacing: keep the family heterogeneity visible in
-        // wall time without hour-long runs (K ms per modeled second).
+        // wall time without hour-long runs (K ms per modeled second);
+        // capped so the lease sees several heartbeats per timeout.
         let k = cfg.cluster.families[wid % cfg.cluster.families.len()].k_coeff;
+        let heartbeat = lease_timeout / 5;
         joins.push(std::thread::spawn(move || -> Result<(u64, u64)> {
             let mut rt = make_rt();
             let gup = Gup::from_hp(&cfg.hp, cfg.alpha_relax);
@@ -299,15 +527,21 @@ fn run_live_opts(
             let mut enc_buf: Vec<u8> = Vec::new();
             let mut body_buf: Vec<u8> = Vec::new();
             let mut step_pool = BufferPool::new();
-            let (mut rd, mut wr, version, global) =
-                connect_worker(addr, wid, &family, &mut enc_buf, &mut body_buf)?;
+            let (mut rd, mut wr, version, global) = connect_backoff(
+                &addr_cell,
+                wid,
+                &family,
+                &mut enc_buf,
+                &mut body_buf,
+                deadline,
+            )?;
             core.adopt_global(&global, version);
 
-            let my_churn = churn.filter(|c| c.worker == wid);
             let mut churned = false;
             let mut iters = 0u64;
             let mut pushes = 0u64;
-            while Instant::now() < deadline {
+            let mut prev_payload: Option<ParamVec> = None;
+            'run: while Instant::now() < deadline {
                 if let Some(c) = my_churn {
                     if !churned && start.elapsed() >= c.at {
                         churned = true;
@@ -322,12 +556,13 @@ fn run_live_opts(
                                 if Instant::now() >= deadline {
                                     return Ok((iters, pushes));
                                 }
-                                let (nrd, nwr, version, global) = connect_worker(
-                                    addr,
+                                let (nrd, nwr, version, global) = connect_backoff(
+                                    &addr_cell,
                                     wid,
                                     &family,
                                     &mut enc_buf,
                                     &mut body_buf,
+                                    deadline,
                                 )?;
                                 rd = nrd;
                                 wr = nwr;
@@ -356,43 +591,110 @@ fn run_live_opts(
                 )?;
                 iters += 1;
                 // Pace to the family's heterogeneity (ms-scale).
-                std::thread::sleep(Duration::from_micros((k * 2000.0) as u64));
+                std::thread::sleep(
+                    Duration::from_micros((k * 2000.0) as u64).min(heartbeat),
+                );
                 let train_time = t0.elapsed().as_secs_f64();
-                write_frame_with(
+                if write_frame_with(
                     &mut wr,
                     &Message::TimeReport { worker: wid as u32, iter: iters, train_time },
                     &mut enc_buf,
-                )?;
+                )
+                .is_err()
+                {
+                    // Coordinator gone mid-heartbeat: rejoin with
+                    // backoff.  The resync payload is *ignored* — the
+                    // worker survived, so its local state is intact and
+                    // this iteration's gate decision must still fire
+                    // (heartbeats are lossy; gated pushes are not).
+                    match connect_backoff(
+                        &addr_cell,
+                        wid,
+                        &family,
+                        &mut enc_buf,
+                        &mut body_buf,
+                        deadline,
+                    ) {
+                        Ok((nrd, nwr, _v, _g)) => {
+                            rd = nrd;
+                            wr = nwr;
+                        }
+                        Err(_) => break,
+                    }
+                }
                 if out.gate.push {
                     pushes += 1;
                     // The worker ships its local parameters; the PS
                     // recovers G = (w₀ − w_local)/η (Alg. 2) so the
                     // wire carries a single tensor payload.
-                    let g = core.state.params.clone();
-                    write_frame_with(
-                        &mut wr,
-                        &Message::PushUpdate {
-                            worker: wid as u32,
-                            iter: iters,
-                            test_loss: out.test_loss,
-                            train_time,
-                            grads: TensorPayload::new(g, cfg.net.fp16_wire),
-                        },
-                        &mut enc_buf,
-                    )?;
-                    // Wait for the global model (Alg. 1 line 7).
-                    match read_frame_with(&mut rd, &mut body_buf)? {
-                        Message::GlobalModel { version, params } => {
-                            core.adopt_global(&params.params, version);
+                    let mut g = core.state.params.clone();
+                    if let Some(c) = my_corrupt {
+                        if pushes > c.after_pushes {
+                            corrupt_payload(&mut g, c.kind, prev_payload.as_ref());
                         }
-                        Message::Control { stop: true } => break,
-                        other => {
-                            return Err(anyhow!("unexpected reply {other:?}"))
+                    }
+                    if my_corrupt.is_some() {
+                        let prev = prev_payload.get_or_insert_with(ParamVec::default);
+                        prev.copy_from(&g);
+                    }
+                    // At-most-once retry: resend the same (worker, iter)
+                    // frame until a coordinator acks it; the PS dedup
+                    // high-water mark makes retries idempotent.
+                    let mut attempts = 0u32;
+                    loop {
+                        let ack = write_frame_with(
+                            &mut wr,
+                            &Message::PushUpdate {
+                                worker: wid as u32,
+                                iter: iters,
+                                test_loss: out.test_loss,
+                                train_time,
+                                grads: TensorPayload::new(g.clone(), cfg.net.fp16_wire),
+                            },
+                            &mut enc_buf,
+                        )
+                        .and_then(|_| read_frame_with(&mut rd, &mut body_buf));
+                        match ack {
+                            Ok(Message::GlobalModel { version, params }) => {
+                                core.adopt_global(&params.params, version);
+                                break;
+                            }
+                            Ok(Message::Control { stop: true }) => break 'run,
+                            Ok(other) => {
+                                return Err(anyhow!("unexpected reply {other:?}"))
+                            }
+                            Err(_) => {
+                                attempts += 1;
+                                if attempts > 50 || Instant::now() >= deadline {
+                                    break 'run;
+                                }
+                                match connect_backoff(
+                                    &addr_cell,
+                                    wid,
+                                    &family,
+                                    &mut enc_buf,
+                                    &mut body_buf,
+                                    deadline,
+                                ) {
+                                    Ok((nrd, nwr, _v, _g)) => {
+                                        // Keep the pre-push model: the
+                                        // pending frame is resent as-is.
+                                        rd = nrd;
+                                        wr = nwr;
+                                    }
+                                    Err(_) => break 'run,
+                                }
+                            }
+                        }
+                    }
+                    if let Some(lim) = stop_after {
+                        if pushes >= lim {
+                            break;
                         }
                     }
                 }
             }
-            write_frame_with(&mut wr, &Message::Control { stop: true }, &mut enc_buf)?;
+            let _ = write_frame_with(&mut wr, &Message::Control { stop: true }, &mut enc_buf);
             Ok((iters, pushes))
         }));
     }
@@ -404,21 +706,61 @@ fn run_live_opts(
         iterations += i;
         pushes += p;
     }
+    shared.shutdown.store(true, Ordering::Relaxed);
     let _ = acceptor.join();
 
-    let (ps, _) = &mut *shared.state.lock().unwrap();
+    let coord = &mut *shared.state.lock().unwrap();
+    // Final checkpoint so a state_dir always reflects run end.
+    if coord.journal.is_some() {
+        let _ = write_snapshot(coord);
+    }
     Ok(LiveReport {
         workers: n_workers,
         iterations,
         pushes,
-        global_updates: ps.updates,
-        final_loss: ps.loss as f64,
-        final_accuracy: ps.accuracy,
+        global_updates: coord.ps.updates,
+        final_loss: coord.ps.loss as f64,
+        final_accuracy: coord.ps.accuracy,
         wall_time_s: start.elapsed().as_secs_f64(),
         bytes_received: shared.bytes.load(Ordering::Relaxed),
         reconnects: shared.reconnects.load(Ordering::Relaxed),
         lease_expirations: shared.lease_expirations.load(Ordering::Relaxed),
+        dedup_skips: shared.dedup_skips.load(Ordering::Relaxed),
+        coordinator_restarts: shared.coordinator_restarts.load(Ordering::Relaxed),
+        quarantined: shared.quarantined.load(Ordering::Relaxed),
+        model_digest: params_digest(&coord.ps.params),
     })
+}
+
+/// Apply one of the simulator's poisoned-update species to an outgoing
+/// live payload (the worker's local parameters).
+fn corrupt_payload(g: &mut ParamVec, kind: CorruptKind, prev: Option<&ParamVec>) {
+    match kind {
+        CorruptKind::NanInject => {
+            if let Some(t) = g.tensors.first_mut() {
+                let d = t.data_mut();
+                let n = d.len().min(8);
+                for x in d.iter_mut().take(n) {
+                    *x = f32::NAN;
+                }
+                if let Some(x) = d.get_mut(n) {
+                    *x = f32::INFINITY;
+                }
+            }
+        }
+        CorruptKind::Blowup { factor } => {
+            for t in &mut g.tensors {
+                for x in t.data_mut() {
+                    *x *= factor;
+                }
+            }
+        }
+        CorruptKind::StaleReplay => {
+            if let Some(p) = prev {
+                g.copy_from(p);
+            }
+        }
+    }
 }
 
 /// Connect + register + read the PS's `GlobalModel` state resync —
@@ -445,17 +787,318 @@ fn connect_worker(
     }
 }
 
+/// [`connect_worker`] with bounded exponential backoff (10 ms doubling
+/// to a 200 ms cap, ≤ 50 attempts) — the *current* coordinator address
+/// is re-read on every attempt, so workers follow the PS across a
+/// crash-restart rebind.
+fn connect_backoff(
+    addr: &Arc<Mutex<SocketAddr>>,
+    wid: usize,
+    family: &str,
+    enc_buf: &mut Vec<u8>,
+    body_buf: &mut Vec<u8>,
+    deadline: Instant,
+) -> Result<(BufReader<TcpStream>, BufWriter<TcpStream>, u64, ParamVec)> {
+    let mut delay = Duration::from_millis(10);
+    let mut last_err = anyhow!("no attempt made");
+    for _ in 0..50 {
+        let a = *addr.lock().unwrap();
+        match connect_worker(a, wid, family, enc_buf, body_buf) {
+            Ok(conn) => return Ok(conn),
+            Err(e) => last_err = e,
+        }
+        if Instant::now() >= deadline {
+            break;
+        }
+        std::thread::sleep(delay);
+        delay = (delay * 2).min(Duration::from_millis(200));
+    }
+    Err(anyhow!("worker {wid}: reconnect failed: {last_err}"))
+}
+
+// ----------------------------------------- checkpoint / journal / replay
+
+fn open_journal(dir: &Path) -> Result<Journal> {
+    std::fs::create_dir_all(dir)?;
+    let file = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(dir.join("journal.bin"))?;
+    Ok(Journal {
+        dir: dir.to_path_buf(),
+        file,
+        since_snapshot: 0,
+        enc_buf: Vec::new(),
+    })
+}
+
+/// Append one applied update to the journal (no-op without
+/// persistence).  Entries are ordinary wire frames with fp32 payloads:
+/// replay decodes exactly the parameters the coordinator applied.
+fn journal_push(
+    coord: &mut Coord,
+    worker: usize,
+    iter: u64,
+    test_loss: f32,
+    train_time: f64,
+    pushed: &ParamVec,
+) -> Result<()> {
+    if let Some(j) = coord.journal.as_mut() {
+        let msg = Message::PushUpdate {
+            worker: worker as u32,
+            iter,
+            test_loss,
+            train_time,
+            grads: TensorPayload::new(pushed.clone(), false),
+        };
+        let Journal { file, enc_buf, since_snapshot, .. } = j;
+        write_frame_with(file, &msg, enc_buf)?;
+        *since_snapshot += 1;
+    }
+    Ok(())
+}
+
+/// Checkpoint the coordinator: sidecar = magic + [`PsState`] snapshot +
+/// dedup high-water marks + guard history, written tmp-then-rename so a
+/// crash mid-checkpoint leaves the previous snapshot intact; the
+/// journal's folded-in prefix is then truncated.
+fn write_snapshot(coord: &mut Coord) -> Result<()> {
+    let dir = match coord.journal.as_ref() {
+        Some(j) => j.dir.clone(),
+        None => return Ok(()),
+    };
+    let mut side: Vec<u8> = Vec::new();
+    side.extend_from_slice(&LIVE_SNAP_MAGIC);
+    let snap = coord.ps.encode_snapshot();
+    side.extend_from_slice(&(snap.len() as u32).to_le_bytes());
+    side.extend_from_slice(&snap);
+    side.extend_from_slice(&(coord.last_seen.len() as u32).to_le_bytes());
+    for &it in &coord.last_seen {
+        side.extend_from_slice(&it.to_le_bytes());
+    }
+    match &coord.guard {
+        Some(g) => {
+            side.push(1);
+            let (ring, next) = g.history();
+            side.extend_from_slice(&(ring.len() as u32).to_le_bytes());
+            for &n in ring {
+                side.extend_from_slice(&n.to_le_bytes());
+            }
+            side.extend_from_slice(&(next as u32).to_le_bytes());
+            side.extend_from_slice(&g.accepted.to_le_bytes());
+            side.extend_from_slice(&g.quarantined.to_le_bytes());
+        }
+        None => side.push(0),
+    }
+    let tmp = dir.join("ps.snap.tmp");
+    std::fs::write(&tmp, &side)?;
+    std::fs::rename(&tmp, dir.join("ps.snap"))?;
+    if let Some(j) = coord.journal.as_mut() {
+        j.file.set_len(0)?;
+        j.since_snapshot = 0;
+    }
+    Ok(())
+}
+
+struct GuardSnap {
+    ring: Vec<f64>,
+    next: usize,
+    accepted: u64,
+    quarantined: u64,
+}
+
+/// Decode the checkpoint sidecar written by [`write_snapshot`].
+fn decode_live_snapshot(side: &[u8]) -> Result<(PsState, Vec<u64>, Option<GuardSnap>)> {
+    fn take<'a>(buf: &'a [u8], pos: &mut usize, n: usize) -> Result<&'a [u8]> {
+        if buf.len() - *pos < n {
+            return Err(anyhow!("live snapshot truncated at {}", *pos));
+        }
+        let s = &buf[*pos..*pos + n];
+        *pos += n;
+        Ok(s)
+    }
+    let mut pos = 0usize;
+    if take(side, &mut pos, 4)? != LIVE_SNAP_MAGIC {
+        return Err(anyhow!("bad live snapshot magic"));
+    }
+    let b = take(side, &mut pos, 4)?;
+    let snap_len = u32::from_le_bytes([b[0], b[1], b[2], b[3]]) as usize;
+    let ps = PsState::decode_snapshot(take(side, &mut pos, snap_len)?)?;
+    let b = take(side, &mut pos, 4)?;
+    let n_workers = u32::from_le_bytes([b[0], b[1], b[2], b[3]]) as usize;
+    if n_workers > MAX_LEASED_WORKER {
+        return Err(anyhow!("live snapshot dedup table too large"));
+    }
+    let mut last_seen = Vec::with_capacity(n_workers);
+    for _ in 0..n_workers {
+        let b = take(side, &mut pos, 8)?;
+        last_seen.push(u64::from_le_bytes([
+            b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
+        ]));
+    }
+    let has_guard = take(side, &mut pos, 1)?[0];
+    let guard = if has_guard == 1 {
+        let b = take(side, &mut pos, 4)?;
+        let m = u32::from_le_bytes([b[0], b[1], b[2], b[3]]) as usize;
+        if m > 1024 {
+            return Err(anyhow!("live snapshot guard ring too large"));
+        }
+        let mut ring = Vec::with_capacity(m);
+        for _ in 0..m {
+            let b = take(side, &mut pos, 8)?;
+            ring.push(f64::from_le_bytes([
+                b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
+            ]));
+        }
+        let b = take(side, &mut pos, 4)?;
+        let next = u32::from_le_bytes([b[0], b[1], b[2], b[3]]) as usize;
+        let b = take(side, &mut pos, 8)?;
+        let accepted =
+            u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]);
+        let b = take(side, &mut pos, 8)?;
+        let quarantined =
+            u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]);
+        Some(GuardSnap { ring, next, accepted, quarantined })
+    } else {
+        None
+    };
+    if pos != side.len() {
+        return Err(anyhow!("live snapshot trailing bytes"));
+    }
+    Ok((ps, last_seen, guard))
+}
+
+/// Rebuild the coordinator from `state_dir`: decode the last snapshot
+/// (falling back to the run's initial state when none was written yet),
+/// then replay the journal's post-snapshot suffix through the exact
+/// live apply path — dedup, guard, Alg. 2 — so the restored PS is
+/// bit-compatible with the one that crashed.
+fn restore_coord(
+    dir: &Path,
+    w0: &ParamVec,
+    lr: f32,
+    robust: &RobustConfig,
+    probe: &Probe,
+    make_rt: &RtFactory,
+) -> Result<Coord> {
+    let (ps, last_seen, guard_snap) = match std::fs::read(dir.join("ps.snap")) {
+        Ok(side) => decode_live_snapshot(&side)?,
+        Err(_) => (PsState::new(w0.clone(), lr), Vec::new(), None),
+    };
+    let mut guard = if robust.guard {
+        Some(UpdateGuard::new(robust.norm_bound))
+    } else {
+        None
+    };
+    if let (Some(g), Some(snap)) = (guard.as_mut(), guard_snap) {
+        g.restore_history(snap.ring, snap.next);
+        g.accepted = snap.accepted;
+        g.quarantined = snap.quarantined;
+    }
+    let mut coord = Coord {
+        ps,
+        rt: make_rt(),
+        guard,
+        last_seen,
+        journal: None,
+    };
+    let mut g_scratch = ParamVec::default();
+    if let Ok(f) = std::fs::File::open(dir.join("journal.bin")) {
+        let mut rd = BufReader::new(f);
+        let mut body: Vec<u8> = Vec::new();
+        // A torn tail (crash mid-append) decodes as an error and simply
+        // ends the replay at the last complete frame.
+        while let Ok(msg) = read_frame_with(&mut rd, &mut body) {
+            if let Message::PushUpdate { worker, iter, test_loss, train_time, grads } =
+                msg
+            {
+                apply_push(
+                    &mut coord,
+                    probe,
+                    None,
+                    worker as usize,
+                    iter,
+                    test_loss,
+                    train_time,
+                    &grads.params,
+                    &mut g_scratch,
+                )?;
+            }
+        }
+    }
+    coord.journal = Some(open_journal(dir)?);
+    Ok(coord)
+}
+
+/// The one true apply path: dedup by per-worker iteration high-water
+/// mark, recover G, run the admission guard, journal, then Alg. 2.
+/// Both the live handler and crash-recovery replay call this, which is
+/// what makes a restored coordinator behave exactly like the one that
+/// crashed.  `counters` is `None` during replay (those pushes were
+/// already counted when they first arrived).
+#[allow(clippy::too_many_arguments)]
+fn apply_push(
+    coord: &mut Coord,
+    probe: &Probe,
+    counters: Option<&PsShared>,
+    worker: usize,
+    iter: u64,
+    test_loss: f32,
+    train_time: f64,
+    pushed: &ParamVec,
+    g_scratch: &mut ParamVec,
+) -> Result<()> {
+    if worker > MAX_LEASED_WORKER {
+        return Ok(());
+    }
+    if coord.last_seen.len() <= worker {
+        coord.last_seen.resize(worker + 1, 0);
+    }
+    if iter <= coord.last_seen[worker] {
+        // A resend of a frame whose ack was lost: applied at most once.
+        if let Some(c) = counters {
+            c.dedup_skips.fetch_add(1, Ordering::Relaxed);
+        }
+        return Ok(());
+    }
+    coord.last_seen[worker] = iter;
+    // Recover G from the pushed local parameters:
+    // G = (w₀ − w_local)/η (Alg. 2 Worker-SGD).
+    coord.ps.w0.delta_over_eta_into(pushed, coord.ps.eta, g_scratch);
+    if let Some(guard) = coord.guard.as_mut() {
+        if !guard.admit(g_scratch) {
+            if let Some(c) = counters {
+                c.quarantined.fetch_add(1, Ordering::Relaxed);
+            }
+            return Ok(());
+        }
+    }
+    journal_push(coord, worker, iter, test_loss, train_time, pushed)?;
+    coord
+        .ps
+        .loss_based_sgd(g_scratch, test_loss, coord.rt.as_mut(), probe)?;
+    if coord
+        .journal
+        .as_ref()
+        .map(|j| j.since_snapshot >= SNAPSHOT_EVERY)
+        .unwrap_or(false)
+    {
+        write_snapshot(coord)?;
+    }
+    Ok(())
+}
+
 /// Per-connection PS handler: lease bookkeeping on every frame, a
-/// `GlobalModel` resync on (re-)registration, Alg. 2 on pushes.  The
-/// frame-body, encode and recovered-G buffers are connection-scoped and
-/// reused across pushes; the reply still clones `ps.params` into its
-/// owned payload (the one remaining live-mode copy — removing it needs
-/// a borrowed `TensorPayload`, see DESIGN.md §8).  Frame encode/decode
-/// (f16 and f32 tensor payloads) and the `delta_over_eta_into` G
-/// recovery below run through the SIMD-dispatched, auto-sharded tensor
-/// kernels (DESIGN.md §12), so a big-model push parallelizes across
-/// cores while the PS mutex is held for the same (bit-identical)
-/// result.
+/// `GlobalModel` resync on (re-)registration, the dedup + guard +
+/// journal + Alg. 2 apply path on pushes.  The frame-body, encode and
+/// recovered-G buffers are connection-scoped and reused across pushes;
+/// the reply still clones `ps.params` into its owned payload (the one
+/// remaining live-mode copy — removing it needs a borrowed
+/// `TensorPayload`, see DESIGN.md §8).  Frame encode/decode (f16 and
+/// f32 tensor payloads) and the `delta_over_eta_into` G recovery run
+/// through the SIMD-dispatched, auto-sharded tensor kernels
+/// (DESIGN.md §12), so a big-model push parallelizes across cores while
+/// the PS mutex is held for the same (bit-identical) result.
 fn serve_worker(stream: TcpStream, srv: Arc<PsShared>, fp16: bool) -> Result<()> {
     // The listener is non-blocking (accept loop); handler sockets must
     // block on reads regardless of what they inherited.
@@ -471,7 +1114,7 @@ fn serve_worker(stream: TcpStream, srv: Arc<PsShared>, fp16: bool) -> Result<()>
     loop {
         let msg = match read_frame_with(&mut rd, &mut body_buf) {
             Ok(m) => m,
-            Err(_) => break, // peer closed (or died)
+            Err(_) => break, // peer closed (or died, or was severed)
         };
         srv.bytes.fetch_add(msg.wire_size() as u64, Ordering::Relaxed);
         match msg {
@@ -481,10 +1124,10 @@ fn serve_worker(stream: TcpStream, srv: Arc<PsShared>, fp16: bool) -> Result<()>
                 me = Some((wid, epoch));
                 // State resync: first connect and rejoin look the same.
                 let reply = {
-                    let (ps, _) = &mut *srv.state.lock().unwrap();
+                    let coord = &mut *srv.state.lock().unwrap();
                     Message::GlobalModel {
-                        version: ps.version,
-                        params: TensorPayload::new(ps.params.clone(), fp16),
+                        version: coord.ps.version,
+                        params: TensorPayload::new(coord.ps.params.clone(), fp16),
                     }
                 };
                 // Break (don't return) on write failure so the lease
@@ -497,22 +1140,32 @@ fn serve_worker(stream: TcpStream, srv: Arc<PsShared>, fp16: bool) -> Result<()>
                 srv.iterations.fetch_add(1, Ordering::Relaxed);
                 srv.lease_renew(worker as usize);
             }
-            Message::PushUpdate { worker, test_loss, grads, .. } => {
+            Message::PushUpdate { worker, iter, test_loss, train_time, grads } => {
                 srv.pushes.fetch_add(1, Ordering::Relaxed);
                 srv.lease_renew(worker as usize);
-                let (ps, rt) = &mut *srv.state.lock().unwrap();
-                // Recover G from the pushed local parameters:
-                // G = (w₀ − w_local)/η (Alg. 2 Worker-SGD).
-                ps.w0.delta_over_eta_into(&grads.params, ps.eta, &mut g_scratch);
-                if ps
-                    .loss_based_sgd(&g_scratch, test_loss, rt.as_mut(), &srv.probe)
+                let reply = {
+                    let coord = &mut *srv.state.lock().unwrap();
+                    if apply_push(
+                        coord,
+                        &srv.probe,
+                        Some(&srv),
+                        worker as usize,
+                        iter,
+                        test_loss,
+                        train_time,
+                        &grads.params,
+                        &mut g_scratch,
+                    )
                     .is_err()
-                {
-                    break;
-                }
-                let reply = Message::GlobalModel {
-                    version: ps.version,
-                    params: TensorPayload::new(ps.params.clone(), fp16),
+                    {
+                        break;
+                    }
+                    // Duplicates and quarantined pushes still get the
+                    // current model back — the worker must unblock.
+                    Message::GlobalModel {
+                        version: coord.ps.version,
+                        params: TensorPayload::new(coord.ps.params.clone(), fp16),
+                    }
                 };
                 if write_frame_with(&mut wr, &reply, &mut enc_buf).is_err() {
                     break;

@@ -36,7 +36,7 @@ fn usage() -> String {
      SUBCOMMANDS:\n\
        run   run one framework over the simulated 12-worker edge cluster\n\
        exp   regenerate a paper experiment: fig1 fig2 fig3 fig4 fig11\n\
-             fig12 fig13 fig14 table3 faults scale all\n\
+             fig12 fig13 fig14 table3 faults robust scale all\n\
        live  run the real threaded TCP parameter server + workers\n\
              (worker leases, heartbeat timeouts, reconnect resync)\n\
        info  show artifacts, cluster and hyper-parameter defaults\n\n\
@@ -160,7 +160,8 @@ fn cmd_exp(args: &[String]) -> Result<(), String> {
     let cmd = Command::new("hermes exp", "regenerate a paper table/figure")
         .pos(
             "which",
-            "fig1 fig2 fig3 fig4 fig11 fig12 fig13 fig14 table3 faults scale all",
+            "fig1 fig2 fig3 fig4 fig11 fig12 fig13 fig14 table3 faults robust \
+             scale all",
         )
         .opt("model", "mock", "mock | cnn | alexnet (compute backend)")
         .opt("artifacts", "artifacts", "artifacts directory")
@@ -198,6 +199,9 @@ fn cmd_exp(args: &[String]) -> Result<(), String> {
             &hermes_dml::frameworks::PRESETS,
         )
         .map(|_| ()),
+        "robust" => {
+            exp::robust_sweep(&out, model, &arts, threads).map(|_| ())
+        }
         "scale" => exp::scale_sweep(
             &out,
             model,
@@ -219,13 +223,19 @@ fn cmd_live(args: &[String]) -> Result<(), String> {
         .opt("workers", "4", "number of worker threads")
         .opt("seconds", "5", "wall-clock run duration")
         .opt("alpha", "-0.9", "GUP α")
-        .opt("seed", "42", "rng seed");
+        .opt("seed", "42", "rng seed")
+        .opt(
+            "lease-ms",
+            "250",
+            "worker lease timeout in ms (heartbeat interval = lease/5)",
+        );
     let m = cmd.parse(args)?;
     let mut cfg = RunConfig::new("mock", "hermes");
     cfg.hp.lr = 0.5;
     cfg.hp.alpha = m.get_f64("alpha")?;
     cfg.hp.window = 8;
     cfg.seed = m.get_u64("seed")?;
+    cfg.robust.lease_timeout_ms = m.get_u64("lease-ms")?;
     let n = m.get_usize("workers")?;
     let secs = m.get_f64("seconds")?;
     println!("starting live PS + {n} workers for {secs}s …");

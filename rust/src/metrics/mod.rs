@@ -102,6 +102,17 @@ pub struct RunMetrics {
     pub fault_crashes: u64,
     /// Fault-injected rejoins applied during the run.
     pub fault_rejoins: u64,
+    /// Poisoned payloads actually injected (ISSUE 6 fault species).
+    pub corrupt_injected: u64,
+    /// Updates quarantined by the PS-side `UpdateGuard`.
+    pub quarantined: u64,
+    /// Rounds committed at quorum with stragglers deferred to the next
+    /// round (quorum-deadline shapes).
+    pub quorum_commits: u64,
+    /// Seconds from the first corrupt injection until the global
+    /// accuracy regained its pre-injection best; `None` when no
+    /// corruption fired or the model never recovered.
+    pub recovery_time: Option<f64>,
 }
 
 impl RunMetrics {
@@ -164,6 +175,13 @@ impl RunMetrics {
             ("pushes", Json::Num(self.total_pushes() as f64)),
             ("fault_crashes", Json::Num(self.fault_crashes as f64)),
             ("fault_rejoins", Json::Num(self.fault_rejoins as f64)),
+            ("corrupt_injected", Json::Num(self.corrupt_injected as f64)),
+            ("quarantined", Json::Num(self.quarantined as f64)),
+            ("quorum_commits", Json::Num(self.quorum_commits as f64)),
+            (
+                "recovery_time_s",
+                Json::Num(self.recovery_time.unwrap_or(-1.0)),
+            ),
             (
                 "crashed_workers",
                 Json::Arr(

@@ -110,6 +110,42 @@ impl PsState {
         self.bump();
     }
 
+    /// **RobustAgg** — coordinate-wise trimmed mean over a round's
+    /// surviving gradients (DESIGN.md §15).  `trim_fraction` of the
+    /// per-coordinate samples is discarded from *each* tail before
+    /// averaging, so up to that fraction of blown-up or sign-flipped
+    /// deltas cannot move the mean arbitrarily.  Deliberately
+    /// **scalar-ordered** like every reduction (DESIGN.md §12): the
+    /// per-coordinate sort + sum runs in one fixed order, so the
+    /// result is bit-identical across SIMD backends and shard counts.
+    /// Never called on the defenses-off path, which keeps those runs
+    /// byte-identical to [`PsState::sync_sgd`] rounds.
+    pub fn robust_sync_sgd(&mut self, grads: &[ParamVec], trim_fraction: f64) {
+        assert!(!grads.is_empty());
+        let k = grads.len();
+        let trim_k =
+            (((k as f64) * trim_fraction).floor() as usize).min((k - 1) / 2);
+        self.scratch_a.resize_like(&self.params);
+        let w = 1.0 / (k - 2 * trim_k) as f32;
+        let mut vals = vec![0.0f32; k];
+        for (ti, out_t) in self.scratch_a.tensors.iter_mut().enumerate() {
+            let out = out_t.data_mut();
+            for (i, slot) in out.iter_mut().enumerate() {
+                for (v, g) in vals.iter_mut().zip(grads) {
+                    *v = g.tensors[ti].data()[i];
+                }
+                vals.sort_unstable_by(|a, b| a.total_cmp(b));
+                let mut s = 0.0f32;
+                for &v in &vals[trim_k..k - trim_k] {
+                    s += v;
+                }
+                *slot = s * w;
+            }
+        }
+        self.params.axpy(-self.eta, &self.scratch_a);
+        self.bump();
+    }
+
     /// **AsyncSGD** (Eq. 2): apply one worker's gradient immediately.
     pub fn async_sgd(&mut self, grad: &ParamVec) {
         self.params.axpy(-self.eta, grad);
@@ -262,6 +298,110 @@ impl PsState {
             scratch_a: ParamVec::default(),
             scratch_b: ParamVec::default(),
         })
+    }
+}
+
+/// How many accepted update norms the guard remembers; the median of
+/// this ring is the reference scale for the relative-norm bound.
+const GUARD_WINDOW: usize = 32;
+
+/// PS-side admission control for incoming deltas (DESIGN.md §15).
+///
+/// Two checks, both deterministic and scalar-ordered:
+///
+/// 1. **Finite check** — any NaN/Inf coordinate quarantines the update
+///    outright (a single poisoned coordinate would otherwise infect
+///    every global parameter through the mean).
+/// 2. **Relative-norm bound** — the update's L2 norm may not exceed
+///    `norm_bound ×` the median of the last [`GUARD_WINDOW`] *accepted*
+///    norms.  Using accepted history only means a blow-up can't widen
+///    its own admission window; using the median (not the mean) means
+///    one borderline-large accepted update barely moves the reference.
+///
+/// With no history yet (or an all-zero history) only the finite check
+/// applies — the first pushes of a run define the scale.
+#[derive(Debug, Clone)]
+pub struct UpdateGuard {
+    norm_bound: f64,
+    recent: Vec<f64>,
+    next: usize,
+    /// Updates admitted to aggregation.
+    pub accepted: u64,
+    /// Updates rejected (quarantined) by either check.
+    pub quarantined: u64,
+}
+
+impl UpdateGuard {
+    pub fn new(norm_bound: f64) -> Self {
+        UpdateGuard {
+            norm_bound,
+            recent: Vec::with_capacity(GUARD_WINDOW),
+            next: 0,
+            accepted: 0,
+            quarantined: 0,
+        }
+    }
+
+    /// Median of the accepted-norm ring (0.0 while empty).
+    fn reference_norm(&self) -> f64 {
+        if self.recent.is_empty() {
+            return 0.0;
+        }
+        let mut sorted = self.recent.clone();
+        sorted.sort_unstable_by(|a, b| a.total_cmp(b));
+        let mid = sorted.len() / 2;
+        if sorted.len() % 2 == 1 {
+            sorted[mid]
+        } else {
+            0.5 * (sorted[mid - 1] + sorted[mid])
+        }
+    }
+
+    /// Admit or quarantine one incoming update.  Returns `true` when
+    /// the update may be aggregated; `false` quarantines it (the
+    /// caller drops the delta and counts it).
+    pub fn admit(&mut self, g: &ParamVec) -> bool {
+        let finite =
+            g.tensors.iter().all(|t| t.data().iter().all(|x| x.is_finite()));
+        if !finite {
+            self.quarantined += 1;
+            return false;
+        }
+        let n = g.l2_norm();
+        let reference = self.reference_norm();
+        if reference > 0.0 && n > self.norm_bound * reference {
+            self.quarantined += 1;
+            return false;
+        }
+        if self.recent.len() < GUARD_WINDOW {
+            self.recent.push(n);
+        } else {
+            self.recent[self.next] = n;
+            self.next = (self.next + 1) % GUARD_WINDOW;
+        }
+        self.accepted += 1;
+        true
+    }
+
+    /// The accepted-norm ring and its write cursor — live-mode
+    /// checkpoints persist these so a restored coordinator's guard
+    /// makes the same admission decisions as the one that crashed.
+    pub fn history(&self) -> (&[f64], usize) {
+        (&self.recent, self.next)
+    }
+
+    /// Restore the ring persisted by [`UpdateGuard::history`].
+    /// Oversized or inconsistent inputs are clamped, never trusted.
+    pub fn restore_history(&mut self, recent: Vec<f64>, next: usize) {
+        self.recent = recent;
+        self.recent.truncate(GUARD_WINDOW);
+        // A ring that never wrapped keeps its cursor at 0 (matching a
+        // guard that grew the same history without a restart).
+        self.next = if self.recent.len() < GUARD_WINDOW {
+            0
+        } else {
+            next % GUARD_WINDOW
+        };
     }
 }
 
@@ -447,6 +587,81 @@ mod tests {
         let mut v2 = snap;
         v2[4] = 99;
         assert!(PsState::decode_snapshot(&v2).is_err());
+    }
+
+    #[test]
+    fn robust_trimmed_mean_discards_outliers() {
+        // k = 4, trim 0.25 ⇒ one sample trimmed per tail; the blown-up
+        // delta and the zero delta both fall away, leaving mean(1, 1).
+        let mut ps = PsState::new(pv(&[1.0, 1.0]), 0.5);
+        ps.robust_sync_sgd(
+            &[
+                pv(&[1.0, 1.0]),
+                pv(&[1.0, 1.0]),
+                pv(&[0.0, 0.0]),
+                pv(&[1.0e6, -1.0e6]),
+            ],
+            0.25,
+        );
+        // w = 1 − 0.5·1 = 0.5 on both coordinates, untouched by the 1e6.
+        assert_eq!(ps.params, pv(&[0.5, 0.5]));
+        assert_eq!(ps.version, 1);
+    }
+
+    #[test]
+    fn robust_trimmed_mean_with_zero_trim_matches_plain_mean() {
+        let mut a = PsState::new(pv(&[2.0, -1.0]), 0.25);
+        a.robust_sync_sgd(&[pv(&[1.0, 3.0]), pv(&[3.0, 1.0])], 0.0);
+        // mean g = [2, 2]; w = [2 − 0.25·2, −1 − 0.25·2] = [1.5, −1.5].
+        assert_eq!(a.params, pv(&[1.5, -1.5]));
+    }
+
+    #[test]
+    fn robust_trimmed_mean_caps_trim_to_keep_one_sample() {
+        // trim 0.49 of k = 2 would trim zero per tail; trim 0.9 is
+        // clamped so at least one sample survives.
+        let mut ps = PsState::new(pv(&[0.0]), 1.0);
+        ps.robust_sync_sgd(&[pv(&[2.0]), pv(&[4.0])], 0.9);
+        // trim_k = min(floor(2·0.9), (2−1)/2) = 0 ⇒ plain mean 3.
+        assert_eq!(ps.params, pv(&[-3.0]));
+    }
+
+    #[test]
+    fn update_guard_quarantines_nonfinite_updates() {
+        let mut guard = UpdateGuard::new(8.0);
+        assert!(guard.admit(&pv(&[1.0, 0.0])));
+        assert!(!guard.admit(&pv(&[f32::NAN, 0.0])));
+        assert!(!guard.admit(&pv(&[0.0, f32::INFINITY])));
+        assert_eq!(guard.accepted, 1);
+        assert_eq!(guard.quarantined, 2);
+    }
+
+    #[test]
+    fn update_guard_bounds_norm_against_accepted_history() {
+        let mut guard = UpdateGuard::new(8.0);
+        // Build up a unit-norm history.
+        for _ in 0..5 {
+            assert!(guard.admit(&pv(&[1.0, 0.0])));
+        }
+        // 100× the median is quarantined; 2× passes.
+        assert!(!guard.admit(&pv(&[100.0, 0.0])));
+        assert!(guard.admit(&pv(&[2.0, 0.0])));
+        assert_eq!(guard.accepted, 6);
+        assert_eq!(guard.quarantined, 1);
+        // The quarantined norm never entered the history: the median
+        // is still ~1, so a follow-up blow-up is also rejected.
+        assert!(!guard.admit(&pv(&[50.0, 0.0])));
+    }
+
+    #[test]
+    fn update_guard_first_push_defines_the_scale() {
+        // No history ⇒ only the finite check applies, whatever the norm.
+        let mut guard = UpdateGuard::new(2.0);
+        assert!(guard.admit(&pv(&[1000.0])));
+        // An all-zero history must not divide-by-zero or reject.
+        let mut zg = UpdateGuard::new(2.0);
+        assert!(zg.admit(&pv(&[0.0, 0.0])));
+        assert!(zg.admit(&pv(&[5.0, 0.0])));
     }
 
     #[test]

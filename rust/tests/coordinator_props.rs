@@ -511,6 +511,14 @@ fn assert_same_run(
     assert_eq!(a.fault_crashes, b.fault_crashes, "{tag}: crashes");
     assert_eq!(a.fault_rejoins, b.fault_rejoins, "{tag}: rejoins");
     assert_eq!(a.crashed_workers, b.crashed_workers, "{tag}: crashed set");
+    assert_eq!(a.corrupt_injected, b.corrupt_injected, "{tag}: injected");
+    assert_eq!(a.quarantined, b.quarantined, "{tag}: quarantined");
+    assert_eq!(a.quorum_commits, b.quorum_commits, "{tag}: quorum commits");
+    assert_eq!(
+        a.recovery_time.map(f64::to_bits),
+        b.recovery_time.map(f64::to_bits),
+        "{tag}: recovery time"
+    );
     assert_eq!(a.curve.len(), b.curve.len(), "{tag}: curve length");
     for (i, (x, y)) in a.curve.iter().zip(&b.curve).enumerate() {
         let xc = (x.0.to_bits(), x.1.to_bits(), x.2.to_bits());
@@ -587,6 +595,50 @@ fn presets_bit_identical_to_reference_drivers() {
                     );
                 }
             }
+        }
+    }
+}
+
+#[test]
+fn corrupt_and_quorum_runs_bit_identical_across_backends_and_reruns() {
+    // Seeded fault species must stay pure functions of (seed, plan):
+    // every preset under a mixed NaN/blow-up/stale corruption plan with
+    // the full defense stack + quorum-deadline rounds reproduces itself
+    // exactly across reruns and the {scalar, SIMD} kernel backends
+    // (DESIGN.md §15 bit-identity discipline).
+    use hermes_dml::config::RunConfig;
+    use hermes_dml::faults::FaultPlan;
+    use hermes_dml::frameworks::{run_framework, PRESETS};
+    use hermes_dml::runtime::MockRuntime;
+
+    for fw in PRESETS {
+        for seed in [7u64, 11] {
+            let mk = || {
+                let mut cfg = RunConfig::new("mock", fw);
+                cfg.seed = seed;
+                cfg.max_iters = 60;
+                cfg.dss0 = 96;
+                cfg.target_acc = 1.5; // run the full budget
+                cfg.faults.plan = FaultPlan::new()
+                    .corrupt_nan(1, 2.0)
+                    .corrupt_blowup(2, 4.0, 100.0)
+                    .corrupt_stale(3, 6.0);
+                cfg.robust.guard = true;
+                cfg.robust.robust_agg = true;
+                cfg.robust.quorum = 0.67;
+                cfg.robust.round_deadline_s = 3.0;
+                cfg
+            };
+            let run_with = |backend: Backend| {
+                kernels::with_backend(backend, || {
+                    run_framework(mk(), Box::new(MockRuntime::new())).unwrap()
+                })
+            };
+            let a = run_with(Backend::Scalar);
+            let b = run_with(Backend::Scalar);
+            assert_same_run(&format!("{fw} corrupt seed={seed} rerun"), &a, &b);
+            let c = run_with(Backend::Simd);
+            assert_same_run(&format!("{fw} corrupt seed={seed} simd"), &a, &c);
         }
     }
 }

@@ -5,8 +5,12 @@
 
 use std::time::Duration;
 
-use hermes_dml::config::RunConfig;
-use hermes_dml::live::{run_live, run_live_churn, ChurnKind, LiveChurn};
+use hermes_dml::config::{ClusterConfig, NodeFamily, RunConfig};
+use hermes_dml::faults::CorruptKind;
+use hermes_dml::live::{
+    run_live, run_live_churn, run_live_full, ChurnKind, LiveChurn, LiveCorrupt,
+    LiveOpts,
+};
 
 #[test]
 fn live_cluster_trains_over_tcp() {
@@ -86,5 +90,161 @@ fn live_cluster_single_worker_is_stable() {
     cfg.hp.window = 4;
     let report = run_live(&cfg, 1, Duration::from_millis(600)).unwrap();
     assert_eq!(report.workers, 1);
+    assert!(report.iterations > 0);
+}
+
+// ------------------------------------------ coordinator crash-recovery
+
+#[test]
+fn coordinator_kill_restore_matches_unkilled_run() {
+    // THE crash-recovery acceptance test (DESIGN.md §15): a single
+    // worker pushes a fixed number of gated updates; run B kills the
+    // coordinator mid-run and restores it from snapshot + journal on a
+    // fresh port.  The worker reconnects with backoff and re-sends any
+    // unacknowledged push; per-worker sequence dedup applies each
+    // update at most once — so both lineages aggregate the identical
+    // update sequence and land on bit-identical global parameters.
+    const PUSHES: u64 = 20;
+    let mk_cfg = || {
+        let mut cfg = RunConfig::new("mock", "hermes");
+        cfg.hp.lr = 0.5;
+        cfg.hp.alpha = -0.9;
+        cfg.hp.window = 6;
+        cfg.steps_cap = 2;
+        cfg.seed = 7;
+        // One deliberately slow family: live pacing sleeps
+        // min(K × 2 ms, heartbeat) per local iteration, so K = 10 puts
+        // a hard ≥ 20 ms floor under every iteration.  The gate can
+        // fire at most once per iteration and is mute through the
+        // 6-iteration warmup, so 20 pushes take ≥ 26 × 20 ms = 520 ms —
+        // the 300 ms kill below provably lands mid-run.
+        cfg.cluster = ClusterConfig {
+            families: vec![NodeFamily {
+                name: "slow-edge".into(),
+                count: 1,
+                vcpu: 2,
+                ram_gb: 4.0,
+                k_coeff: 10.0,
+                jitter: 0.0,
+            }],
+            degrade_fraction: 0.0,
+            degrade_rate: 1.0,
+        };
+        cfg
+    };
+    let base = run_live_full(
+        &mk_cfg(),
+        1,
+        Duration::from_secs(60),
+        LiveOpts { stop_after_pushes: Some(PUSHES), ..Default::default() },
+    )
+    .unwrap();
+    assert_eq!(base.coordinator_restarts, 0);
+    assert_eq!(base.pushes, PUSHES, "{base:?}");
+    assert_eq!(base.global_updates, PUSHES, "{base:?}");
+
+    let killed = run_live_full(
+        &mk_cfg(),
+        1,
+        Duration::from_secs(60),
+        LiveOpts {
+            stop_after_pushes: Some(PUSHES),
+            kill_coordinator_at: Some(Duration::from_millis(300)),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    assert_eq!(killed.coordinator_restarts, 1, "{killed:?}");
+    assert_eq!(killed.pushes, PUSHES, "{killed:?}");
+    // At-most-once: every push applied exactly once across the kill —
+    // a double-applied retry would show up as extra global updates.
+    assert_eq!(killed.global_updates, PUSHES, "update applied twice: {killed:?}");
+    assert_eq!(
+        killed.model_digest, base.model_digest,
+        "restored lineage diverged from the unkilled run"
+    );
+    assert_eq!(killed.iterations, base.iterations, "{killed:?}");
+    assert!(killed.final_loss.is_finite());
+}
+
+#[test]
+fn coordinator_kill_multiworker_cluster_survives() {
+    let mut cfg = RunConfig::new("mock", "hermes");
+    cfg.hp.lr = 0.5;
+    cfg.hp.alpha = -0.9;
+    cfg.hp.window = 6;
+    cfg.steps_cap = 2;
+    let rep = run_live_full(
+        &cfg,
+        3,
+        Duration::from_millis(2500),
+        LiveOpts {
+            kill_coordinator_at: Some(Duration::from_millis(600)),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    assert_eq!(rep.coordinator_restarts, 1, "{rep:?}");
+    assert!(rep.iterations > 10, "cluster wedged: {rep:?}");
+    assert!(rep.pushes > 0);
+    // Dedup skips + applied updates account for every acked push; a
+    // worker that gave up mid-retry may leave pushes slightly ahead.
+    assert!(rep.global_updates <= rep.pushes, "{rep:?}");
+    assert!(rep.global_updates > 0, "{rep:?}");
+    assert!(rep.final_loss.is_finite());
+}
+
+// -------------------------------------------------- live quarantine
+
+#[test]
+fn live_guard_quarantines_poisoned_worker() {
+    let mut cfg = RunConfig::new("mock", "hermes");
+    cfg.hp.lr = 0.5;
+    cfg.hp.alpha = -0.5;
+    cfg.hp.window = 4;
+    cfg.steps_cap = 2;
+    cfg.robust.guard = true;
+    let rep = run_live_full(
+        &cfg,
+        2,
+        Duration::from_millis(2500),
+        LiveOpts {
+            corrupt: Some(LiveCorrupt {
+                worker: 0,
+                after_pushes: 0, // every push from worker 0 is poisoned
+                kind: CorruptKind::NanInject,
+            }),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    assert!(rep.quarantined >= 1, "guard never fired: {rep:?}");
+    // The NaN payloads never reached aggregation.
+    assert!(rep.final_loss.is_finite(), "{rep:?}");
+}
+
+// ---------------------------------------------- configurable leases
+
+#[test]
+fn lease_timeout_is_configurable() {
+    // Satellite: the hardcoded 250 ms LEASE_TIMEOUT is now
+    // `RunConfig::robust.lease_timeout_ms`; a 100 ms lease must reap a
+    // 400 ms stall that the old default would have survived marginally.
+    let mut cfg = RunConfig::new("mock", "hermes");
+    cfg.hp.lr = 0.5;
+    cfg.hp.alpha = -0.9;
+    cfg.hp.window = 6;
+    cfg.steps_cap = 2;
+    cfg.robust.lease_timeout_ms = 100;
+    let churn = LiveChurn {
+        worker: 0,
+        at: Duration::from_millis(400),
+        down_for: Duration::from_millis(400),
+        kind: ChurnKind::Stall,
+    };
+    let report =
+        run_live_churn(&cfg, 2, Duration::from_millis(1800), churn).unwrap();
+    assert!(report.lease_expirations >= 1, "{report:?}");
+    assert_eq!(report.reconnects, 0);
     assert!(report.iterations > 0);
 }

@@ -1,0 +1,227 @@
+//! Failure-domain acceptance tests (DESIGN.md §15): poisoned-update
+//! quarantine efficacy, quorum-deadline round semantics, and the
+//! degenerate-config bit-identity guarantees.
+//!
+//! The efficacy pair is the headline: a seeded NaN/blow-up plan must
+//! destroy a defenses-off run while the same plan under
+//! `UpdateGuard` + trimmed-mean leaves the model finite and still
+//! learning, with the quarantine and recovery-time counters reporting
+//! what happened.
+
+use hermes_dml::config::RunConfig;
+use hermes_dml::faults::FaultPlan;
+use hermes_dml::frameworks::run_framework;
+use hermes_dml::metrics::RunMetrics;
+use hermes_dml::runtime::MockRuntime;
+
+fn run(cfg: RunConfig) -> RunMetrics {
+    run_framework(cfg, Box::new(MockRuntime::new())).unwrap()
+}
+
+/// Scaled mock config that never stops early — corruption timing can't
+/// race convergence, so every seeded fault demonstrably fires.
+fn scaled(fw: &str) -> RunConfig {
+    let mut cfg = RunConfig::new("mock", fw);
+    cfg.hp.lr = 0.5;
+    cfg.max_iters = 400;
+    cfg.dss0 = 128;
+    cfg.target_acc = 2.0; // unreachable: run the full budget
+    cfg
+}
+
+fn defend(cfg: &mut RunConfig) {
+    cfg.robust.guard = true;
+    cfg.robust.robust_agg = true;
+}
+
+/// Key run outcomes, bitwise (determinism checks).
+fn assert_bits_equal(tag: &str, a: &RunMetrics, b: &RunMetrics) {
+    assert_eq!(a.iterations, b.iterations, "{tag}: iterations");
+    assert_eq!(
+        a.virtual_time.to_bits(),
+        b.virtual_time.to_bits(),
+        "{tag}: virtual time"
+    );
+    assert_eq!(
+        a.final_loss.to_bits(),
+        b.final_loss.to_bits(),
+        "{tag}: final loss"
+    );
+    assert_eq!(
+        a.final_accuracy.to_bits(),
+        b.final_accuracy.to_bits(),
+        "{tag}: final accuracy"
+    );
+    assert_eq!(a.bytes, b.bytes, "{tag}: bytes");
+    assert_eq!(a.global_updates, b.global_updates, "{tag}: updates");
+    assert_eq!(a.corrupt_injected, b.corrupt_injected, "{tag}: injected");
+    assert_eq!(a.quarantined, b.quarantined, "{tag}: quarantined");
+    assert_eq!(a.quorum_commits, b.quorum_commits, "{tag}: quorum commits");
+    assert_eq!(a.curve.len(), b.curve.len(), "{tag}: curve length");
+    for (i, (x, y)) in a.curve.iter().zip(&b.curve).enumerate() {
+        assert_eq!(
+            (x.0.to_bits(), x.1.to_bits(), x.2.to_bits()),
+            (y.0.to_bits(), y.1.to_bits(), y.2.to_bits()),
+            "{tag}: curve point {i}"
+        );
+    }
+}
+
+// ------------------------------------------------- quarantine efficacy
+
+#[test]
+fn nan_injection_destroys_undefended_run() {
+    let mut cfg = scaled("bsp");
+    cfg.faults.plan = FaultPlan::new().corrupt_nan(1, 2.0).corrupt_nan(3, 5.0);
+    let r = run(cfg);
+    assert!(r.corrupt_injected >= 1, "no corruption fired: {r:?}");
+    assert_eq!(r.quarantined, 0, "no guard, nothing may be quarantined");
+    // One NaN coordinate through the mean poisons every parameter.
+    assert!(
+        !r.final_loss.is_finite(),
+        "NaN should have poisoned the global model: loss {}",
+        r.final_loss
+    );
+    assert!(!r.converged);
+}
+
+#[test]
+fn guard_quarantines_nan_and_model_stays_finite() {
+    let mut cfg = scaled("bsp");
+    cfg.faults.plan = FaultPlan::new().corrupt_nan(1, 2.0).corrupt_nan(3, 5.0);
+    defend(&mut cfg);
+    let r = run(cfg);
+    assert!(r.corrupt_injected >= 1, "no corruption fired: {r:?}");
+    assert!(r.quarantined >= 1, "guard never fired: {r:?}");
+    assert!(r.final_loss.is_finite(), "loss {}", r.final_loss);
+    assert!(
+        r.final_accuracy > 0.8,
+        "defended run stopped learning: acc {}",
+        r.final_accuracy
+    );
+    assert!(
+        r.recovery_time.is_some(),
+        "recovery time untracked after injection"
+    );
+}
+
+#[test]
+fn blowup_wrecks_undefended_run_but_is_quarantined_with_guard() {
+    // Inject late enough (≈10 rounds in) that the guard's accepted-norm
+    // ring has a reference scale — exactly how it would deploy.
+    let plan = || {
+        FaultPlan::new()
+            .corrupt_blowup(1, 30.0, 1e6)
+            .corrupt_blowup(3, 40.0, 1e6)
+    };
+    let mut off = scaled("bsp");
+    off.faults.plan = plan();
+    let off = run(off);
+    assert!(off.corrupt_injected >= 1, "no corruption fired: {off:?}");
+    assert!(
+        !off.final_loss.is_finite() || off.final_accuracy < 0.5,
+        "1e6 blow-up left the model healthy: {off:?}"
+    );
+    assert!(!off.converged);
+
+    let mut on = scaled("bsp");
+    on.faults.plan = plan();
+    defend(&mut on);
+    let on = run(on);
+    assert!(on.corrupt_injected >= 1);
+    assert!(on.quarantined >= 1, "guard missed the blow-up: {on:?}");
+    assert!(on.final_loss.is_finite());
+    assert!(
+        on.final_accuracy > 0.8,
+        "defended run stopped learning: acc {}",
+        on.final_accuracy
+    );
+}
+
+#[test]
+fn stale_replay_is_injected_and_survivable_under_defenses() {
+    let mut cfg = scaled("bsp");
+    cfg.faults.plan = FaultPlan::new().corrupt_stale(1, 30.0);
+    defend(&mut cfg);
+    let r = run(cfg);
+    assert!(r.corrupt_injected >= 1, "stale replay never fired: {r:?}");
+    assert!(r.final_loss.is_finite());
+    // A replayed old delta is well-scaled — the guard may legitimately
+    // admit it; trimmed-mean absorbs it either way.
+    assert!(
+        r.final_accuracy > 0.8,
+        "stale replay derailed the run: acc {}",
+        r.final_accuracy
+    );
+}
+
+// ----------------------------------------------- quorum-deadline rounds
+
+#[test]
+fn quorum_commits_rounds_with_stragglers_deferred() {
+    let mut cfg = scaled("bsp");
+    cfg.robust.quorum = 0.5;
+    let a = run(cfg.clone());
+    assert!(
+        a.quorum_commits > 0,
+        "q=0.5 over a heterogeneous cluster never deferred: {a:?}"
+    );
+    assert!(a.final_loss.is_finite());
+    assert!(
+        a.final_accuracy > 0.8,
+        "quorum rounds stopped learning: acc {}",
+        a.final_accuracy
+    );
+    // Bit-determinism of the quorum path across reruns.
+    let b = run(cfg);
+    assert_bits_equal("bsp q=0.5 rerun", &a, &b);
+}
+
+#[test]
+fn elastic_quorum_deadline_is_deterministic_and_learns() {
+    let mut cfg = scaled("ebsp");
+    cfg.robust.quorum = 0.67;
+    cfg.robust.round_deadline_s = 2.0;
+    let a = run(cfg.clone());
+    assert!(a.final_loss.is_finite());
+    assert!(
+        a.final_accuracy > 0.8,
+        "elastic quorum stopped learning: acc {}",
+        a.final_accuracy
+    );
+    let b = run(cfg);
+    assert_bits_equal("ebsp q=0.67 dl=2 rerun", &a, &b);
+}
+
+#[test]
+fn full_quorum_with_slack_deadline_matches_legacy_barrier_bitwise() {
+    // quorum = 1.0 with a deadline no round can miss routes through the
+    // quorum-aware commit formula, which must degenerate to the exact
+    // legacy barrier — same bits, zero deferred rounds.
+    let legacy = run(scaled("bsp"));
+    let mut cfg = scaled("bsp");
+    cfg.robust.round_deadline_s = 1e6;
+    let quorum = run(cfg);
+    assert_eq!(quorum.quorum_commits, 0, "slack deadline deferred a round");
+    assert_bits_equal("bsp dl=1e6 vs legacy", &legacy, &quorum);
+}
+
+// -------------------------------------------------- defenses-off parity
+
+#[test]
+fn corruption_counters_do_not_perturb_defenseless_clean_runs() {
+    // A plan-free config with the robustness struct present (all
+    // defaults) must equal a second identical run bit-for-bit and
+    // report zero activity on every new counter.
+    for fw in ["bsp", "asp", "ssp", "ebsp", "selsync", "hermes"] {
+        let mut cfg = scaled(fw);
+        cfg.max_iters = 80; // keep the 6-preset loop cheap
+        let a = run(cfg.clone());
+        let b = run(cfg);
+        assert_bits_equal(&format!("{fw} clean rerun"), &a, &b);
+        assert_eq!(a.corrupt_injected, 0, "{fw}");
+        assert_eq!(a.quarantined, 0, "{fw}");
+        assert_eq!(a.quorum_commits, 0, "{fw}");
+        assert_eq!(a.recovery_time, None, "{fw}");
+    }
+}

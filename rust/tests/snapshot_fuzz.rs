@@ -1,0 +1,109 @@
+//! Fuzz-style hardening for `PsState::decode_snapshot` (DESIGN.md §15):
+//! truncated prefixes, seeded bit flips, wrong magic/version bytes and
+//! random garbage must all return `WireError` or a valid state — never
+//! panic, never allocate unboundedly.  The decoder's length fields are
+//! validated against the remaining buffer before any allocation, so a
+//! flipped length byte fails cheaply instead of OOMing.
+
+use hermes_dml::ps::PsState;
+use hermes_dml::tensor::{ParamVec, Tensor};
+use hermes_dml::util::rng::Xoshiro256pp;
+
+/// A snapshot with both tensors and the optional ς present, so every
+/// decoder branch is on the fuzzed path.
+fn sample_snapshot() -> Vec<u8> {
+    let w0 = ParamVec {
+        tensors: vec![
+            Tensor::new(vec![4, 3], (0..12).map(|i| i as f32 * 0.25 - 1.0).collect()),
+            Tensor::new(vec![5], (0..5).map(|i| (i as f32).sin()).collect()),
+        ],
+    };
+    let mut ps = PsState::new(w0, 0.3);
+    let g = ParamVec {
+        tensors: vec![
+            Tensor::new(vec![4, 3], vec![0.1; 12]),
+            Tensor::new(vec![5], vec![-0.2; 5]),
+        ],
+    };
+    ps.sync_sgd(&[g.clone()]);
+    ps.sigma = Some(g);
+    ps.encode_snapshot()
+}
+
+#[test]
+fn snapshot_roundtrips() {
+    let buf = sample_snapshot();
+    let ps = PsState::decode_snapshot(&buf).unwrap();
+    assert_eq!(ps.eta, 0.3);
+    assert!(ps.sigma.is_some());
+    // Re-encoding the decoded state must reproduce the bytes exactly.
+    assert_eq!(ps.encode_snapshot(), buf);
+}
+
+#[test]
+fn every_truncated_prefix_errors() {
+    let buf = sample_snapshot();
+    for n in 0..buf.len() {
+        assert!(
+            PsState::decode_snapshot(&buf[..n]).is_err(),
+            "prefix of {n}/{} bytes decoded",
+            buf.len()
+        );
+    }
+}
+
+#[test]
+fn trailing_bytes_error() {
+    let mut buf = sample_snapshot();
+    buf.push(0);
+    assert!(PsState::decode_snapshot(&buf).is_err());
+}
+
+#[test]
+fn wrong_magic_and_version_error() {
+    let good = sample_snapshot();
+    let mut bad = good.clone();
+    bad[..4].copy_from_slice(b"NOPE");
+    assert!(PsState::decode_snapshot(&bad).is_err());
+    let mut bad = good;
+    bad[4..8].copy_from_slice(&999u32.to_le_bytes());
+    assert!(PsState::decode_snapshot(&bad).is_err());
+}
+
+#[test]
+fn seeded_bit_flips_never_panic() {
+    let good = sample_snapshot();
+    let mut rng = Xoshiro256pp::stream(0xF422, 0x51AF);
+    for _ in 0..4000 {
+        let mut buf = good.clone();
+        // 1–3 independent single-bit flips per case.
+        for _ in 0..=rng.next_below(2) {
+            let byte = rng.next_below(buf.len() as u64) as usize;
+            let bit = rng.next_below(8) as u32;
+            buf[byte] ^= 1u8 << bit;
+        }
+        // A payload-float flip may still decode; anything structural
+        // must error.  Either way: no panic, no unbounded allocation.
+        let _ = PsState::decode_snapshot(&buf);
+    }
+}
+
+#[test]
+fn random_garbage_never_panics() {
+    let mut rng = Xoshiro256pp::stream(0xF422, 0x6A4B);
+    for _ in 0..2000 {
+        let n = rng.next_below(512) as usize;
+        let buf: Vec<u8> = (0..n).map(|_| rng.next_below(256) as u8).collect();
+        let _ = PsState::decode_snapshot(&buf);
+    }
+    // Garbage that keeps the magic/version header but scrambles the
+    // rest exercises the tensor decoder's length checks.
+    for _ in 0..2000 {
+        let n = rng.next_below(256) as usize;
+        let mut buf = Vec::with_capacity(8 + n);
+        buf.extend_from_slice(b"PSNP");
+        buf.extend_from_slice(&1u32.to_le_bytes());
+        buf.extend((0..n).map(|_| rng.next_below(256) as u8));
+        let _ = PsState::decode_snapshot(&buf);
+    }
+}

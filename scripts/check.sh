@@ -29,3 +29,12 @@ done
 cargo run --quiet --release --bin hermes -- \
   exp scale --jobs 24 --grid hybrid --threads 2 --out results_smoke
 test -s results_smoke/scale_mock.csv
+
+# Chaos smoke (DESIGN.md §15): the failure-domain sweep — corruption
+# species × defenses × quorum through the streaming engine, plus a live
+# coordinator kill+restore leg — end-to-end from the CLI.  CI uploads
+# the resulting robust_mock.csv per kernel backend.
+echo "== chaos smoke (failure-domain sweep + live kill/restore) =="
+cargo run --quiet --release --bin hermes -- \
+  exp robust --threads 2 --out results_smoke
+test -s results_smoke/robust_mock.csv
