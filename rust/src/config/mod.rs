@@ -2,8 +2,9 @@
 //! hyper-parameters (Table I), network model, fault/churn scenario, and
 //! per-run experiment settings — with JSON round-trip and validation.
 
+use crate::data::stream::{RateCurve, StreamPlan, StreamSpec};
 use crate::faults::{CorruptKind, FaultEvent, FaultKind, FaultPlan};
-use crate::frameworks::policy::{AggPolicy, FrameworkSpec};
+use crate::frameworks::policy::{AggPolicy, DataMode, FrameworkSpec};
 use crate::util::json::Json;
 
 /// One node family from Table II of the paper.
@@ -382,6 +383,91 @@ impl RobustConfig {
     }
 }
 
+/// Streaming-data scenario for one run (DESIGN.md §16): either an
+/// explicit per-worker [`StreamPlan`] or the generator knobs a
+/// [`DataMode`] compiles into one at `SimEnv::build` — like
+/// [`FaultConfig`], a streamed run stays a pure function of
+/// seed + config.  Ignored (and empty) when the spec's data axis is
+/// `Static`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StreamConfig {
+    /// Explicit per-worker rate curves.  Empty = generate from the
+    /// spec's data mode and the rate/spread knobs below.
+    pub plan: StreamPlan,
+    /// Base arrival rate, samples per virtual second per worker.
+    pub rate: f64,
+    /// Rate heterogeneity: worker `w` of `n` streams at
+    /// `rate / spread^(w/(n-1))` — 1.0 = uniform, larger = slower tail.
+    pub spread: f64,
+    /// Dirichlet α for the label-skew partition streamed runs use.
+    pub alpha: f64,
+    /// Bounded replay-buffer capacity per worker, in samples.
+    pub capacity: usize,
+}
+
+impl Default for StreamConfig {
+    fn default() -> Self {
+        StreamConfig {
+            plan: StreamPlan::default(),
+            rate: 24.0,
+            spread: 1.0,
+            alpha: 0.3,
+            capacity: 256,
+        }
+    }
+}
+
+impl StreamConfig {
+    /// Compile the scenario into the per-worker plan `SimEnv::build`
+    /// schedules: the explicit plan verbatim when one is given, else
+    /// one generated curve per worker from the data mode.  `Static`
+    /// always yields the empty plan (no stream events at all).
+    pub fn build_plan(&self, n_workers: usize, mode: DataMode) -> StreamPlan {
+        if mode == DataMode::Static {
+            return StreamPlan::default();
+        }
+        if !self.plan.is_empty() {
+            return self.plan.clone();
+        }
+        let mut plan = StreamPlan::new();
+        let ramp_over = plan.horizon * 0.5;
+        for w in 0..n_workers {
+            let frac = if n_workers > 1 {
+                w as f64 / (n_workers - 1) as f64
+            } else {
+                0.0
+            };
+            let r = self.rate / self.spread.powf(frac);
+            plan = match mode {
+                DataMode::Static => unreachable!("handled above"),
+                DataMode::Steady => plan.constant(w, r),
+                DataMode::Ramp => plan.ramp(w, 0.2 * r, r, ramp_over),
+                DataMode::Burst => plan.burst(w, 0.3 * r, 2.0 * r, 12.0, 0.35),
+                DataMode::Trickle => plan.constant(w, 0.15 * r),
+            };
+        }
+        plan
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if !(self.rate.is_finite() && self.rate >= 0.0) {
+            return Err("stream rate must be finite and ≥ 0".into());
+        }
+        if !(self.spread.is_finite() && self.spread >= 1.0) {
+            return Err("stream spread must be finite and ≥ 1".into());
+        }
+        if !(self.alpha.is_finite() && self.alpha > 0.0) {
+            return Err("stream alpha must be finite and > 0".into());
+        }
+        if self.capacity == 0 {
+            return Err("stream capacity must be ≥ 1".into());
+        }
+        // Worker bounds are checked against the instantiated cluster in
+        // `SimEnv::build`; here only the curve/time sanity.
+        self.plan.validate(usize::MAX)
+    }
+}
+
 /// One end-to-end run of a framework over a cluster.
 #[derive(Debug, Clone, PartialEq)]
 pub struct RunConfig {
@@ -423,6 +509,9 @@ pub struct RunConfig {
     /// Failure-domain defenses + quorum rounds — all off by default
     /// (DESIGN.md §15).
     pub robust: RobustConfig,
+    /// Streaming-data scenario — only consulted when the spec's data
+    /// axis streams (`@steady @ramp @burst @trickle`, DESIGN.md §16).
+    pub stream: StreamConfig,
 }
 
 impl RunConfig {
@@ -454,6 +543,7 @@ impl RunConfig {
             alpha_relax: true,
             faults: FaultConfig::default(),
             robust: RobustConfig::default(),
+            stream: StreamConfig::default(),
         }
     }
 
@@ -487,6 +577,14 @@ impl RunConfig {
         self.cluster.validate()?;
         self.faults.validate()?;
         self.robust.validate()?;
+        self.stream.validate()?;
+        if self.framework.is_streaming() && self.stream.capacity < self.mbs0 {
+            return Err(
+                "stream capacity must be ≥ mbs0 (the replay buffer must \
+                 hold at least one mini-batch)"
+                    .into(),
+            );
+        }
         if self.dss0 == 0 || self.mbs0 == 0 {
             return Err("dss0/mbs0 must be ≥ 1".into());
         }
@@ -590,6 +688,28 @@ impl RunConfig {
                     ),
                 ]),
             ),
+            (
+                "stream",
+                Json::obj(vec![
+                    ("rate", Json::Num(self.stream.rate)),
+                    ("spread", Json::Num(self.stream.spread)),
+                    ("alpha", Json::Num(self.stream.alpha)),
+                    ("capacity", Json::Num(self.stream.capacity as f64)),
+                    ("horizon", Json::Num(self.stream.plan.horizon)),
+                    ("tick", Json::Num(self.stream.plan.tick)),
+                    (
+                        "specs",
+                        Json::Arr(
+                            self.stream
+                                .plan
+                                .specs
+                                .iter()
+                                .map(stream_spec_json)
+                                .collect(),
+                        ),
+                    ),
+                ]),
+            ),
             ("dss0", Json::Num(self.dss0 as f64)),
             ("mbs0", Json::Num(self.mbs0 as f64)),
             ("target_acc", Json::Num(self.target_acc)),
@@ -674,6 +794,27 @@ impl RunConfig {
                 .and_then(Json::as_u64)
                 .ok_or("robust/lease_timeout_ms")?;
         }
+        // Optional for older configs: missing `stream` = static data.
+        let mut stream = StreamConfig::default();
+        if let Some(sj) = j.at("stream") {
+            stream.rate =
+                sj.get("rate").and_then(Json::as_f64).ok_or("stream/rate")?;
+            stream.spread =
+                sj.get("spread").and_then(Json::as_f64).ok_or("stream/spread")?;
+            stream.alpha =
+                sj.get("alpha").and_then(Json::as_f64).ok_or("stream/alpha")?;
+            stream.capacity = sj
+                .get("capacity")
+                .and_then(Json::as_usize)
+                .ok_or("stream/capacity")?;
+            stream.plan.horizon =
+                sj.get("horizon").and_then(Json::as_f64).ok_or("stream/horizon")?;
+            stream.plan.tick =
+                sj.get("tick").and_then(Json::as_f64).ok_or("stream/tick")?;
+            for e in sj.get("specs").and_then(Json::as_arr).ok_or("stream/specs")? {
+                stream.plan.specs.push(stream_spec_from_json(e)?);
+            }
+        }
         // Typed spec validation at parse time: a bad name fails here
         // with the full list of valid specs, not deep inside a driver.
         let framework: FrameworkSpec = s("framework")?
@@ -717,10 +858,48 @@ impl RunConfig {
             alpha_relax: b("alpha_relax")?,
             faults,
             robust,
+            stream,
         };
         cfg.validate()?;
         Ok(cfg)
     }
+}
+
+/// Flat curve encoding, mirroring [`fault_event_json`]: `base` doubles
+/// as the constant rate / ramp start, `peak` as the ramp target,
+/// `period` as the ramp duration.
+fn stream_spec_json(s: &StreamSpec) -> Json {
+    let (kind, base, peak, period, duty) = match s.curve {
+        RateCurve::Constant { rate } => ("constant", rate, 0.0, 0.0, 0.0),
+        RateCurve::Ramp { from, to, over } => ("ramp", from, to, over, 0.0),
+        RateCurve::Burst { base, peak, period, duty } => {
+            ("burst", base, peak, period, duty)
+        }
+    };
+    Json::obj(vec![
+        ("kind", Json::Str(kind.to_string())),
+        ("worker", Json::Num(s.worker as f64)),
+        ("base", Json::Num(base)),
+        ("peak", Json::Num(peak)),
+        ("period", Json::Num(period)),
+        ("duty", Json::Num(duty)),
+    ])
+}
+
+fn stream_spec_from_json(e: &Json) -> Result<StreamSpec, String> {
+    let kind = e.get("kind").and_then(Json::as_str).ok_or("stream kind")?;
+    let worker = e.get("worker").and_then(Json::as_usize).ok_or("stream worker")?;
+    let base = e.get("base").and_then(Json::as_f64).ok_or("stream base")?;
+    let peak = e.get("peak").and_then(Json::as_f64).ok_or("stream peak")?;
+    let period = e.get("period").and_then(Json::as_f64).ok_or("stream period")?;
+    let duty = e.get("duty").and_then(Json::as_f64).ok_or("stream duty")?;
+    let curve = match kind {
+        "constant" => RateCurve::Constant { rate: base },
+        "ramp" => RateCurve::Ramp { from: base, to: peak, over: period },
+        "burst" => RateCurve::Burst { base, peak, period, duty },
+        other => return Err(format!("unknown stream curve '{other}'")),
+    };
+    Ok(StreamSpec { worker, curve })
 }
 
 fn fault_event_json(e: &FaultEvent) -> Json {
@@ -988,6 +1167,102 @@ mod tests {
         let back = RunConfig::from_json(&Json::parse(&j).unwrap()).unwrap();
         assert_eq!(back, rc);
         assert_eq!(back.framework.to_string(), "ssp+gup");
+    }
+
+    #[test]
+    fn stream_block_round_trips_and_is_optional() {
+        // All three curve kinds plus the generator knobs survive JSON.
+        let mut rc = RunConfig::new("mock", "hermes+streamalloc@burst");
+        rc.stream.rate = 18.0;
+        rc.stream.spread = 4.0;
+        rc.stream.alpha = 0.7;
+        rc.stream.capacity = 128;
+        rc.stream.plan = StreamPlan::new()
+            .with_horizon(90.0)
+            .with_tick(0.5)
+            .constant(0, 12.0)
+            .ramp(1, 2.0, 20.0, 30.0)
+            .burst(2, 3.0, 40.0, 10.0, 0.25);
+        let j = rc.to_json().to_string();
+        let back = RunConfig::from_json(&Json::parse(&j).unwrap()).unwrap();
+        assert_eq!(back, rc);
+        assert_eq!(back.framework.to_string(), "hermes+streamalloc@burst");
+        assert!(back.framework.is_streaming());
+
+        // A config serialized before the stream subsystem still parses.
+        let rc = RunConfig::new("cnn", "hermes");
+        let mut m = match rc.to_json() {
+            Json::Obj(m) => m,
+            _ => unreachable!(),
+        };
+        m.remove("stream");
+        let back = RunConfig::from_json(&Json::Obj(m)).unwrap();
+        assert_eq!(back.stream, StreamConfig::default());
+        assert!(back.stream.plan.is_empty());
+    }
+
+    #[test]
+    fn stream_validation_rejects_bad_scenarios() {
+        let bad = |f: fn(&mut RunConfig)| {
+            let mut rc = RunConfig::new("mock", "bsp@steady");
+            f(&mut rc);
+            rc.validate().unwrap_err()
+        };
+        assert!(bad(|rc| rc.stream.rate = -1.0).contains("rate"));
+        assert!(bad(|rc| rc.stream.rate = f64::NAN).contains("rate"));
+        assert!(bad(|rc| rc.stream.spread = 0.5).contains("spread"));
+        assert!(bad(|rc| rc.stream.alpha = 0.0).contains("alpha"));
+        assert!(bad(|rc| rc.stream.capacity = 0).contains("capacity"));
+        // The replay buffer must hold one mini-batch — but only
+        // streamed runs care.
+        assert!(bad(|rc| rc.stream.capacity = 8).contains("mbs0"));
+        let mut rc = RunConfig::new("mock", "bsp");
+        rc.stream.capacity = 8;
+        rc.validate().unwrap();
+        // Bad explicit plans are rejected through the same gate.
+        assert!(bad(|rc| {
+            rc.stream.plan = StreamPlan::new().constant(0, -2.0);
+        })
+        .contains("rate"));
+    }
+
+    #[test]
+    fn stream_build_plan_follows_mode_spread_and_explicit_plans() {
+        let sc = StreamConfig { spread: 8.0, ..StreamConfig::default() };
+        // Static mode never generates arrivals.
+        assert!(sc.build_plan(4, DataMode::Static).is_empty());
+        // Generated plans cover every worker, slowest last.
+        let steady = sc.build_plan(4, DataMode::Steady);
+        assert_eq!(steady.len(), 4);
+        let rate_of = |p: &StreamPlan, w: usize| match p.specs[w].curve {
+            RateCurve::Constant { rate } => rate,
+            _ => panic!("expected constant curve"),
+        };
+        assert!((rate_of(&steady, 0) - sc.rate).abs() < 1e-12);
+        assert!(rate_of(&steady, 3) < rate_of(&steady, 0) / 4.0);
+        // Trickle is a slow constant; ramp/burst carry their shapes.
+        let trickle = sc.build_plan(2, DataMode::Trickle);
+        assert!((rate_of(&trickle, 0) - 0.15 * sc.rate).abs() < 1e-12);
+        assert!(matches!(
+            sc.build_plan(2, DataMode::Ramp).specs[0].curve,
+            RateCurve::Ramp { .. }
+        ));
+        assert!(matches!(
+            sc.build_plan(2, DataMode::Burst).specs[1].curve,
+            RateCurve::Burst { .. }
+        ));
+        // Deterministic, and validated against the cluster size.
+        assert_eq!(sc.build_plan(4, DataMode::Steady), steady);
+        steady.validate(4).unwrap();
+        // An explicit plan wins over the generator.
+        let explicit = StreamConfig {
+            plan: StreamPlan::new().constant(1, 5.0),
+            ..StreamConfig::default()
+        };
+        assert_eq!(
+            explicit.build_plan(6, DataMode::Steady),
+            explicit.plan
+        );
     }
 
     #[test]

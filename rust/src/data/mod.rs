@@ -9,6 +9,14 @@
 //! * `edgecifar` — 32×32×3, 10 classes, served non-IID per worker via
 //!   Dirichlet(0.3) class skew.
 //! * `mockset`  — 4×4×2 features for [`crate::runtime::MockRuntime`].
+//!
+//! Data access is lifted behind the [`DataSource`] trait (DESIGN.md
+//! §16): [`StaticSource`] wraps the classic PS-shipped working set,
+//! [`StreamSource`] drains a bounded replay buffer fed by a
+//! [`stream::StreamPlan`].  Workers consume the trait — never raw
+//! pools.
+
+pub mod stream;
 
 use crate::util::rng::Xoshiro256pp;
 
@@ -347,6 +355,17 @@ impl BatchSampler {
         self.slab_dirty = true;
     }
 
+    /// Replace the working set with `idx` verbatim (no RNG draws) —
+    /// the streaming path, where the buffer already decided *which*
+    /// samples the worker holds.  Reuses the existing capacity, so the
+    /// steady-state stream iteration stays allocation-free once warm.
+    pub fn load(&mut self, idx: &[usize]) {
+        self.active.clear();
+        self.active.extend_from_slice(idx);
+        self.cursor = 0;
+        self.slab_dirty = true;
+    }
+
     pub fn active_len(&self) -> usize {
         self.active.len()
     }
@@ -454,6 +473,285 @@ impl BatchSampler {
                 need -= take;
             }
             (&self.batch_x, &self.batch_y)
+        }
+    }
+}
+
+// -------------------------------------------------------- data sources
+
+/// Where a worker's training samples come from (DESIGN.md §16).  The
+/// contract `WorkerCore::local_iteration` consumes:
+///
+/// 1. the driver checks [`DataSource::ready`] before scheduling an
+///    iteration (a streamed worker skips when under-filled);
+/// 2. the worker calls [`DataSource::begin_iteration`] once, then
+///    [`DataSource::next_batch`] per training step, then
+///    [`DataSource::end_iteration`] once;
+/// 3. every method is allocation-free in steady state (pinned by
+///    `tests/alloc_hotpath.rs` for both impls).
+pub trait DataSource {
+    /// (Re)bind the source to a shard pool at a DSS-sized working set
+    /// — PS reassignment (static) or a re-partition (both).
+    fn assign_pool(&mut self, pool: &[usize], dss: usize);
+
+    /// Can the worker train right now?  Static sources always can;
+    /// a stream source needs its buffer filled to the iteration's
+    /// working-set size.
+    fn ready(&self, dss: usize, mbs: usize) -> bool;
+
+    /// Stage the iteration's working set (gathering the batch slab).
+    fn begin_iteration(&mut self, ds: &Dataset, dss: usize, mbs: usize);
+
+    /// Next contiguous mini-batch view out of the staged slab.
+    fn next_batch(&mut self, mbs: usize) -> (&[f32], &[i32]);
+
+    /// The iteration finished: a stream source consumes the samples it
+    /// trained on; a static set is reusable and keeps everything.
+    fn end_iteration(&mut self, dss: usize, mbs: usize);
+
+    /// Samples in the currently staged working set.
+    fn active_len(&self) -> usize;
+}
+
+/// The classic static path: a PS-shipped DSS-sized working set redrawn
+/// from the shard pool on every assignment.  Pure delegation to
+/// [`BatchSampler`] — bit-identical to the pre-trait behaviour.
+#[derive(Debug, Clone)]
+pub struct StaticSource {
+    sampler: BatchSampler,
+}
+
+impl StaticSource {
+    pub fn new(sampler: BatchSampler) -> Self {
+        StaticSource { sampler }
+    }
+}
+
+impl DataSource for StaticSource {
+    fn assign_pool(&mut self, pool: &[usize], dss: usize) {
+        self.sampler.refill(pool, dss);
+    }
+
+    fn ready(&self, _dss: usize, _mbs: usize) -> bool {
+        true
+    }
+
+    fn begin_iteration(&mut self, ds: &Dataset, _dss: usize, _mbs: usize) {
+        self.sampler.ensure_slab(ds);
+    }
+
+    fn next_batch(&mut self, mbs: usize) -> (&[f32], &[i32]) {
+        self.sampler.next_batch_slices(mbs)
+    }
+
+    fn end_iteration(&mut self, _dss: usize, _mbs: usize) {}
+
+    fn active_len(&self) -> usize {
+        self.sampler.active_len()
+    }
+}
+
+/// Streaming path (ScaDLES semantics): samples from the shard pool
+/// arrive over virtual time in a seeded order, land in a bounded
+/// replay buffer with seeded random eviction, and each iteration
+/// *consumes* its working set from the buffer front.  A worker whose
+/// buffer is under-filled reports `!ready()` and skips the iteration.
+#[derive(Debug, Clone)]
+pub struct StreamSource {
+    sampler: BatchSampler,
+    rng: Xoshiro256pp,
+    /// Arrival order: a seeded shuffle of the shard pool, replayed as
+    /// epochs (reshuffled on wrap).
+    order: Vec<usize>,
+    cursor: usize,
+    /// Bounded replay buffer (never exceeds `capacity`; allocated once).
+    buffer: Vec<usize>,
+    capacity: usize,
+    arrived: u64,
+    evicted: u64,
+}
+
+impl StreamSource {
+    pub fn new(seed: u64, worker: usize, pool: &[usize], capacity: usize) -> Self {
+        let mut rng =
+            Xoshiro256pp::stream(seed, 0x57E0 ^ ((worker as u64) << 17));
+        let mut order = pool.to_vec();
+        rng.shuffle(&mut order);
+        StreamSource {
+            sampler: BatchSampler::new(seed, worker),
+            rng,
+            order,
+            cursor: 0,
+            buffer: Vec::with_capacity(capacity.max(1)),
+            capacity: capacity.max(1),
+            arrived: 0,
+            evicted: 0,
+        }
+    }
+
+    /// Samples one iteration stages and then consumes.  Clamped to the
+    /// buffer capacity, floored at one mini-batch.
+    fn need(&self, dss: usize, mbs: usize) -> usize {
+        dss.min(self.capacity).max(mbs).max(1)
+    }
+
+    /// `count` samples land from the device's stream.  A full buffer
+    /// evicts a seeded-random resident entry per arrival — bounded
+    /// memory, deterministic contents.
+    pub fn arrive(&mut self, count: u32) {
+        if self.order.is_empty() {
+            return;
+        }
+        for _ in 0..count {
+            let idx = self.order[self.cursor];
+            self.cursor += 1;
+            if self.cursor == self.order.len() {
+                self.cursor = 0;
+                self.rng.shuffle(&mut self.order);
+            }
+            if self.buffer.len() < self.capacity {
+                self.buffer.push(idx);
+            } else {
+                let j = self.rng.next_below(self.capacity as u64) as usize;
+                self.buffer[j] = idx;
+                self.evicted += 1;
+            }
+            self.arrived += 1;
+        }
+    }
+
+    pub fn buffered(&self) -> usize {
+        self.buffer.len()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Total samples that ever arrived.
+    pub fn arrived(&self) -> u64 {
+        self.arrived
+    }
+
+    /// Samples displaced from the full buffer before being trained on.
+    pub fn evicted(&self) -> u64 {
+        self.evicted
+    }
+}
+
+impl DataSource for StreamSource {
+    fn assign_pool(&mut self, pool: &[usize], _dss: usize) {
+        // DSS changes never touch the arrival stream; only a
+        // re-partition (different pool size, e.g. after churn) resets
+        // the arrival order.  Already-buffered samples stay valid —
+        // they are indices into the immutable dataset.
+        if self.order.len() != pool.len() {
+            self.order = pool.to_vec();
+            self.rng.shuffle(&mut self.order);
+            self.cursor = 0;
+        }
+    }
+
+    fn ready(&self, dss: usize, mbs: usize) -> bool {
+        self.buffer.len() >= self.need(dss, mbs)
+    }
+
+    fn begin_iteration(&mut self, ds: &Dataset, dss: usize, mbs: usize) {
+        let need = self.need(dss, mbs).min(self.buffer.len());
+        self.sampler.load(&self.buffer[..need]);
+        self.sampler.ensure_slab(ds);
+    }
+
+    fn next_batch(&mut self, mbs: usize) -> (&[f32], &[i32]) {
+        self.sampler.next_batch_slices(mbs)
+    }
+
+    fn end_iteration(&mut self, dss: usize, mbs: usize) {
+        // Consume the staged front of the buffer in place (no alloc).
+        let n = self.need(dss, mbs).min(self.buffer.len());
+        let len = self.buffer.len();
+        self.buffer.copy_within(n.., 0);
+        self.buffer.truncate(len - n);
+    }
+
+    fn active_len(&self) -> usize {
+        self.sampler.active_len()
+    }
+}
+
+/// A worker's data source: closed enum over the two impls, so
+/// `WorkerCore` stays `Clone` and dispatch stays static (zero-cost) —
+/// the trait is the contract, the enum is the storage.
+#[derive(Debug, Clone)]
+pub enum Source {
+    Static(StaticSource),
+    Stream(StreamSource),
+}
+
+impl Source {
+    /// The streaming view, when this source streams.
+    pub fn stream(&self) -> Option<&StreamSource> {
+        match self {
+            Source::Stream(s) => Some(s),
+            Source::Static(_) => None,
+        }
+    }
+
+    pub fn stream_mut(&mut self) -> Option<&mut StreamSource> {
+        match self {
+            Source::Stream(s) => Some(s),
+            Source::Static(_) => None,
+        }
+    }
+
+    /// Convenience for the DES: deliver arrivals (no-op when static).
+    pub fn arrive(&mut self, count: u32) {
+        if let Source::Stream(s) = self {
+            s.arrive(count);
+        }
+    }
+}
+
+impl DataSource for Source {
+    fn assign_pool(&mut self, pool: &[usize], dss: usize) {
+        match self {
+            Source::Static(s) => s.assign_pool(pool, dss),
+            Source::Stream(s) => s.assign_pool(pool, dss),
+        }
+    }
+
+    fn ready(&self, dss: usize, mbs: usize) -> bool {
+        match self {
+            Source::Static(s) => s.ready(dss, mbs),
+            Source::Stream(s) => s.ready(dss, mbs),
+        }
+    }
+
+    fn begin_iteration(&mut self, ds: &Dataset, dss: usize, mbs: usize) {
+        match self {
+            Source::Static(s) => s.begin_iteration(ds, dss, mbs),
+            Source::Stream(s) => s.begin_iteration(ds, dss, mbs),
+        }
+    }
+
+    fn next_batch(&mut self, mbs: usize) -> (&[f32], &[i32]) {
+        match self {
+            Source::Static(s) => s.next_batch(mbs),
+            Source::Stream(s) => s.next_batch(mbs),
+        }
+    }
+
+    fn end_iteration(&mut self, dss: usize, mbs: usize) {
+        match self {
+            Source::Static(s) => s.end_iteration(dss, mbs),
+            Source::Stream(s) => s.end_iteration(dss, mbs),
+        }
+    }
+
+    fn active_len(&self) -> usize {
+        match self {
+            Source::Static(s) => s.active_len(),
+            Source::Stream(s) => s.active_len(),
         }
     }
 }
@@ -681,5 +979,113 @@ mod tests {
         ds.gather_into(&idx, &mut x2, &mut y2);
         assert_eq!(x1, x2);
         assert_eq!(y1, y2);
+    }
+
+    #[test]
+    fn static_source_matches_raw_sampler_bitwise() {
+        // The DataSource lift must not perturb the static path: every
+        // batch served through the trait equals the raw-sampler batch.
+        let ds = Dataset::synth(DataKind::MockSet, 300, 14);
+        let (train, _) = ds.split(0.9, 14);
+        let mut raw = BatchSampler::new(3, 1);
+        let mut src = Source::Static(StaticSource::new(BatchSampler::new(3, 1)));
+        raw.refill(&train, 40);
+        src.assign_pool(&train, 40);
+        assert!(src.ready(40, 8));
+        raw.ensure_slab(&ds);
+        src.begin_iteration(&ds, 40, 8);
+        for step in 0..25 {
+            let (rx, ry) = raw.next_batch_slices(8);
+            let rx = rx.to_vec();
+            let ry = ry.to_vec();
+            let (sx, sy) = src.next_batch(8);
+            assert_eq!(rx.as_slice(), sx, "step={step}");
+            assert_eq!(ry.as_slice(), sy, "step={step}");
+        }
+        src.end_iteration(40, 8);
+        assert_eq!(src.active_len(), 40);
+    }
+
+    #[test]
+    fn stream_source_gates_drains_and_evicts_deterministically() {
+        let ds = Dataset::synth(DataKind::MockSet, 400, 15);
+        let (train, _) = ds.split(0.9, 15);
+        let mut s = StreamSource::new(21, 2, &train, 32);
+        // Under-filled buffer: not ready for dss=24, mbs=8 (need=24).
+        assert!(!s.ready(24, 8));
+        s.arrive(10);
+        assert!(!s.ready(24, 8));
+        s.arrive(14);
+        assert!(s.ready(24, 8));
+        assert_eq!(s.buffered(), 24);
+        // One iteration consumes exactly `need` samples off the front.
+        s.begin_iteration(&ds, 24, 8);
+        assert_eq!(s.active_len(), 24);
+        let _ = s.next_batch(8);
+        s.end_iteration(24, 8);
+        assert_eq!(s.buffered(), 0);
+        assert!(!s.ready(24, 8));
+        // Overfilling a bounded buffer evicts instead of growing.
+        s.arrive(100);
+        assert_eq!(s.buffered(), 32);
+        assert_eq!(s.evicted(), 68);
+        assert_eq!(s.arrived(), 124);
+        // need is clamped to capacity and floored at one mini-batch.
+        assert!(s.ready(512, 8));
+        assert!(!StreamSource::new(21, 2, &train, 32).ready(2, 8));
+        // Same seed → identical buffers, arrival order, and evictions.
+        let mut a = StreamSource::new(9, 0, &train, 16);
+        let mut b = StreamSource::new(9, 0, &train, 16);
+        for _ in 0..5 {
+            a.arrive(13);
+            b.arrive(13);
+            assert_eq!(a.buffer, b.buffer);
+        }
+        assert_eq!(a.evicted(), b.evicted());
+        let mut c = StreamSource::new(10, 0, &train, 16);
+        c.arrive(65);
+        assert_ne!(a.buffer, c.buffer);
+    }
+
+    #[test]
+    fn stream_assign_pool_resets_only_on_repartition() {
+        let ds = Dataset::synth(DataKind::MockSet, 200, 16);
+        let (train, _) = ds.split(0.9, 16);
+        let mut s = StreamSource::new(4, 1, &train, 64);
+        s.arrive(20);
+        let buf = s.buffer.clone();
+        // Same pool size (a DSS rebalance): stream untouched.
+        s.assign_pool(&train, 48);
+        assert_eq!(s.buffer, buf);
+        let cursor_before = s.cursor;
+        assert!(cursor_before > 0);
+        // Different pool size (a re-partition): arrival order resets,
+        // buffered samples survive (they index the immutable dataset).
+        s.assign_pool(&train[..100], 48);
+        assert_eq!(s.cursor, 0);
+        assert_eq!(s.order.len(), 100);
+        assert_eq!(s.buffer, buf);
+    }
+
+    #[test]
+    fn dirichlet_partition_is_reproducible_and_label_complete() {
+        let ds = Dataset::synth(DataKind::MockSet, 2000, 17);
+        let (train, _) = ds.split(0.85, 17);
+        let a =
+            partition_pools(&ds, &train, 6, Partition::Dirichlet { alpha: 0.3 }, 11);
+        let b =
+            partition_pools(&ds, &train, 6, Partition::Dirichlet { alpha: 0.3 }, 11);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.worker, y.worker);
+            assert_eq!(x.pool, y.pool);
+        }
+        // Label-complete: every class appears in the union of pools.
+        let mut seen = [false; 10];
+        for s in &a {
+            for &i in &s.pool {
+                seen[ds.label(i) as usize] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "missing class: {seen:?}");
     }
 }

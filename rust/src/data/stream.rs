@@ -1,0 +1,449 @@
+//! Declarative streaming-data plans compiled into DES events
+//! (DESIGN.md §16): per-worker arrival-rate curves — constant, ramp,
+//! burst — that compile into a time-sorted arrival timeline exactly
+//! like `FaultPlan` → `FaultTimeline`, so streamed runs stay a pure
+//! function of seed + config.  Arrival *times* are RNG-free (a carry
+//! accumulator over a fixed tick grid); only the sample *order* and
+//! buffer eviction draw from the worker's seeded stream
+//! ([`StreamSource`](super::StreamSource) in the parent module).
+
+use crate::sim::{Ev, SimQueue};
+
+/// Tag base for stream wake-ups injected into the DES queue.  The
+/// stream range sits strictly below [`crate::faults::FAULT_TAG_BASE`],
+/// so `is_fault_tag` and `is_stream_tag` can never both match.
+pub const STREAM_TAG_BASE: u32 = 0x5DA0_0000;
+
+/// Does this queue event carry a stream-arrival tag?
+pub fn is_stream_tag(ev: &Ev) -> bool {
+    matches!(ev, Ev::Tag { tag, .. } if is_stream_tag_value(*tag))
+}
+
+/// Tag-value form of [`is_stream_tag`] (usable in match guards).
+pub fn is_stream_tag_value(tag: u32) -> bool {
+    (STREAM_TAG_BASE..crate::faults::FAULT_TAG_BASE).contains(&tag)
+}
+
+/// Arrival-rate shape for one worker's stream, in samples per virtual
+/// second.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum RateCurve {
+    /// Fixed rate for the whole horizon.
+    Constant { rate: f64 },
+    /// Linear ramp `from → to` over the first `over` seconds, then
+    /// holds at `to`.
+    Ramp { from: f64, to: f64, over: f64 },
+    /// Square wave: `peak` for the first `duty` fraction of each
+    /// `period`, `base` for the rest.
+    Burst { base: f64, peak: f64, period: f64, duty: f64 },
+}
+
+impl RateCurve {
+    /// Instantaneous rate at virtual time `t`.
+    pub fn rate_at(&self, t: f64) -> f64 {
+        match *self {
+            RateCurve::Constant { rate } => rate,
+            RateCurve::Ramp { from, to, over } => {
+                let f = (t / over).clamp(0.0, 1.0);
+                from + (to - from) * f
+            }
+            RateCurve::Burst { base, peak, period, duty } => {
+                if (t / period).fract() < duty {
+                    peak
+                } else {
+                    base
+                }
+            }
+        }
+    }
+}
+
+/// One worker's stream: which device, and how fast its data arrives.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StreamSpec {
+    pub worker: usize,
+    pub curve: RateCurve,
+}
+
+/// Declarative streaming scenario for one run: at most one rate curve
+/// per worker, compiled over a bounded horizon on a fixed tick grid.
+/// The DES analog of [`crate::faults::FaultPlan`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct StreamPlan {
+    pub specs: Vec<StreamSpec>,
+    /// Virtual-time window arrivals are compiled over; every stream
+    /// runs dry past it.
+    pub horizon: f64,
+    /// Grid granularity arrival events are emitted on (seconds).
+    pub tick: f64,
+}
+
+impl Default for StreamPlan {
+    fn default() -> Self {
+        StreamPlan { specs: Vec::new(), horizon: 120.0, tick: 0.25 }
+    }
+}
+
+impl StreamPlan {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.specs.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.specs.len()
+    }
+
+    pub fn with_horizon(mut self, horizon: f64) -> Self {
+        self.horizon = horizon;
+        self
+    }
+
+    pub fn with_tick(mut self, tick: f64) -> Self {
+        self.tick = tick;
+        self
+    }
+
+    /// Worker `w` receives `rate` samples/s for the whole horizon.
+    pub fn constant(mut self, worker: usize, rate: f64) -> Self {
+        self.specs.push(StreamSpec { worker, curve: RateCurve::Constant { rate } });
+        self
+    }
+
+    /// Worker `w` ramps linearly `from → to` over `over` seconds.
+    pub fn ramp(mut self, worker: usize, from: f64, to: f64, over: f64) -> Self {
+        self.specs
+            .push(StreamSpec { worker, curve: RateCurve::Ramp { from, to, over } });
+        self
+    }
+
+    /// Worker `w` bursts to `peak` for `duty` of every `period`.
+    pub fn burst(
+        mut self,
+        worker: usize,
+        base: f64,
+        peak: f64,
+        period: f64,
+        duty: f64,
+    ) -> Self {
+        self.specs.push(StreamSpec {
+            worker,
+            curve: RateCurve::Burst { base, peak, period, duty },
+        });
+        self
+    }
+
+    /// Reject plans that reference nonexistent workers, carry
+    /// non-finite or negative rates, or use degenerate shapes — the
+    /// mirror of [`crate::faults::FaultPlan::validate`].
+    pub fn validate(&self, n_workers: usize) -> Result<(), String> {
+        if self.specs.len() > 10_000 {
+            return Err(format!("stream plan too large ({} specs)", self.specs.len()));
+        }
+        if !(self.tick.is_finite() && self.tick > 0.0) {
+            return Err("stream tick must be finite and positive".into());
+        }
+        if !(self.horizon.is_finite() && self.horizon > 0.0) {
+            return Err("stream horizon must be finite and positive".into());
+        }
+        if self.tick > self.horizon {
+            return Err("stream tick exceeds the horizon".into());
+        }
+        let rate_ok = |r: f64, what: &str| -> Result<(), String> {
+            if !(r.is_finite() && (0.0..=1e6).contains(&r)) {
+                return Err(format!("stream {what} must be finite, ≥ 0 and ≤ 1e6"));
+            }
+            Ok(())
+        };
+        let mut seen = std::collections::BTreeSet::new();
+        for s in &self.specs {
+            if s.worker >= n_workers {
+                return Err(format!(
+                    "stream targets worker {} but the cluster has {n_workers}",
+                    s.worker
+                ));
+            }
+            if !seen.insert(s.worker) {
+                return Err(format!("worker {} has two stream specs", s.worker));
+            }
+            match s.curve {
+                RateCurve::Constant { rate } => rate_ok(rate, "rate")?,
+                RateCurve::Ramp { from, to, over } => {
+                    rate_ok(from, "ramp start rate")?;
+                    rate_ok(to, "ramp end rate")?;
+                    if !(over.is_finite() && over > 0.0) {
+                        return Err("ramp duration must be positive".into());
+                    }
+                }
+                RateCurve::Burst { base, peak, period, duty } => {
+                    rate_ok(base, "burst base rate")?;
+                    rate_ok(peak, "burst peak rate")?;
+                    if peak < base {
+                        return Err("burst peak must be ≥ its base".into());
+                    }
+                    if !(period.is_finite() && period > 0.0) {
+                        return Err("burst period must be positive".into());
+                    }
+                    if !(duty.is_finite() && duty > 0.0 && duty <= 1.0) {
+                        return Err("burst duty must be in (0, 1]".into());
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// One compiled arrival event: `count` samples land at `worker`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StreamArrival {
+    pub worker: usize,
+    pub count: u32,
+}
+
+/// A [`StreamPlan`] compiled to a time-sorted arrival sequence — the
+/// DES analog of `FaultTimeline`.  The timeline is the source of
+/// truth: queue tags are pure wake-ups, arrivals are applied via
+/// [`Self::pop_due`] whenever the clock advances.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct StreamTimeline {
+    arrivals: Vec<(f64, StreamArrival)>,
+    next: usize,
+}
+
+impl StreamTimeline {
+    /// RNG-free compilation: integrate each worker's rate curve over
+    /// the tick grid with a carry accumulator, emitting an arrival
+    /// event whenever at least one whole sample has accumulated.  Per
+    /// plan the result is bit-identical across reruns, backends and
+    /// shard counts — only `f64` arithmetic on the grid, in spec order.
+    pub fn from_plan(plan: &StreamPlan) -> Self {
+        let mut arrivals: Vec<(f64, StreamArrival)> = Vec::new();
+        let steps = (plan.horizon / plan.tick).ceil() as usize;
+        for spec in &plan.specs {
+            let mut carry = 0.0_f64;
+            for k in 1..=steps {
+                let t = k as f64 * plan.tick;
+                carry += spec.curve.rate_at(t - plan.tick) * plan.tick;
+                let n = carry.floor();
+                if n >= 1.0 {
+                    carry -= n;
+                    arrivals.push((
+                        t,
+                        StreamArrival { worker: spec.worker, count: n as u32 },
+                    ));
+                }
+            }
+        }
+        // Stable by construction: ties keep spec order, like the fault
+        // timeline's action sort.
+        arrivals.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        StreamTimeline { arrivals, next: 0 }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.arrivals.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.arrivals.len()
+    }
+
+    /// Arrivals not yet consumed by [`Self::pop_due`].
+    pub fn remaining(&self) -> usize {
+        self.arrivals.len() - self.next
+    }
+
+    /// Inject one wake-up tag per arrival event (mirrors
+    /// `FaultTimeline::schedule`).  Drivers react to the *timeline*,
+    /// not the tags — a tag only guarantees the queue wakes up at the
+    /// arrival time so a data-blocked worker can resume.
+    pub fn schedule(&self, q: &mut SimQueue) {
+        for (i, &(t, a)) in self.arrivals.iter().enumerate() {
+            q.push_at(
+                t.max(q.now()),
+                Ev::Tag { worker: a.worker, tag: STREAM_TAG_BASE + i as u32 },
+            );
+        }
+    }
+
+    /// Next arrival at or before `t`, if any (front-to-back, once).
+    pub fn pop_due(&mut self, t: f64) -> Option<(f64, StreamArrival)> {
+        let &(at, a) = self.arrivals.get(self.next)?;
+        if at <= t {
+            self.next += 1;
+            Some((at, a))
+        } else {
+            None
+        }
+    }
+
+    /// Time of the next still-pending arrival (any worker); `None`
+    /// once the plan has run dry.
+    pub fn next_time(&self) -> Option<f64> {
+        self.arrivals.get(self.next).map(|&(t, _)| t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_builders_compile_to_sorted_arrivals() {
+        let plan = StreamPlan::new()
+            .constant(0, 2.0)
+            .ramp(1, 0.0, 4.0, 10.0)
+            .burst(2, 1.0, 8.0, 4.0, 0.5)
+            .with_horizon(10.0);
+        plan.validate(3).unwrap();
+        let tl = StreamTimeline::from_plan(&plan);
+        assert!(!tl.is_empty());
+        for w in tl.arrivals.windows(2) {
+            assert!(w[0].0 <= w[1].0, "timeline must be time-sorted");
+        }
+        for &(t, a) in &tl.arrivals {
+            assert!(t > 0.0 && t <= 10.0 + 1e-9);
+            assert!(a.count >= 1);
+            assert!(a.worker < 3);
+        }
+    }
+
+    #[test]
+    fn carry_accumulator_conserves_mass() {
+        // A constant 3.7 samples/s over 20 s must deliver ⌊74⌋ ± 1
+        // samples regardless of the tick grid.
+        for tick in [0.1, 0.25, 0.5] {
+            let plan = StreamPlan::new()
+                .constant(0, 3.7)
+                .with_horizon(20.0)
+                .with_tick(tick);
+            let tl = StreamTimeline::from_plan(&plan);
+            let total: u64 = tl.arrivals.iter().map(|&(_, a)| a.count as u64).sum();
+            assert!(
+                (73..=75).contains(&total),
+                "tick {tick}: {total} samples, expected ≈ 74"
+            );
+        }
+    }
+
+    #[test]
+    fn ramp_accelerates_and_burst_pulses() {
+        let ramp = StreamTimeline::from_plan(
+            &StreamPlan::new().ramp(0, 0.5, 8.0, 20.0).with_horizon(20.0),
+        );
+        let half = |lo: f64, hi: f64| -> u64 {
+            ramp.arrivals
+                .iter()
+                .filter(|&&(t, _)| t > lo && t <= hi)
+                .map(|&(_, a)| a.count as u64)
+                .sum()
+        };
+        assert!(
+            half(10.0, 20.0) > 2 * half(0.0, 10.0),
+            "ramp back half must dominate: {} vs {}",
+            half(10.0, 20.0),
+            half(0.0, 10.0)
+        );
+
+        // Burst with base 0: arrivals only inside the duty windows.
+        let burst = StreamTimeline::from_plan(
+            &StreamPlan::new().burst(0, 0.0, 8.0, 4.0, 0.25).with_horizon(16.0),
+        );
+        assert!(!burst.is_empty());
+        for &(t, _) in &burst.arrivals {
+            // Integrating over ticks, mass lands at most one tick past
+            // the duty window's edge.
+            let phase = ((t - 0.25) / 4.0).fract();
+            assert!(phase < 0.25 + 1e-9, "arrival at {t} outside the duty window");
+        }
+    }
+
+    #[test]
+    fn pop_due_consumes_in_order_and_respects_time() {
+        let plan = StreamPlan::new().constant(0, 4.0).with_horizon(2.0);
+        let mut tl = StreamTimeline::from_plan(&plan);
+        let n = tl.len();
+        assert_eq!(tl.remaining(), n);
+        assert!(tl.pop_due(0.0).is_none(), "nothing due at t=0");
+        let first = tl.next_time().unwrap();
+        let (t0, a0) = tl.pop_due(first).unwrap();
+        assert_eq!(t0, first);
+        assert_eq!(a0.worker, 0);
+        assert_eq!(tl.remaining(), n - 1);
+        // Draining at the horizon consumes everything, in time order.
+        let mut last = t0;
+        while let Some((t, _)) = tl.pop_due(1e9) {
+            assert!(t >= last);
+            last = t;
+        }
+        assert_eq!(tl.remaining(), 0);
+        assert!(tl.next_time().is_none());
+    }
+
+    #[test]
+    fn schedule_injects_stream_tags() {
+        let plan = StreamPlan::new().constant(1, 2.0).with_horizon(3.0);
+        let tl = StreamTimeline::from_plan(&plan);
+        let mut q = SimQueue::with_capacity(16);
+        tl.schedule(&mut q);
+        assert_eq!(q.len(), tl.len());
+        let mut n = 0;
+        while let Some((_, ev)) = q.pop() {
+            assert!(is_stream_tag(&ev), "{ev:?}");
+            assert!(!crate::faults::is_fault_tag(&ev), "{ev:?}");
+            assert_eq!(ev.worker(), 1);
+            n += 1;
+        }
+        assert_eq!(n, tl.len());
+    }
+
+    #[test]
+    fn validate_rejects_bad_plans() {
+        let bad = [
+            StreamPlan::new().constant(9, 1.0), // worker out of bounds
+            StreamPlan::new().constant(0, 1.0).constant(0, 2.0), // duplicate
+            StreamPlan::new().constant(0, -1.0), // negative rate
+            StreamPlan::new().constant(0, f64::NAN), // non-finite rate
+            StreamPlan::new().ramp(0, 1.0, 2.0, 0.0), // degenerate ramp
+            StreamPlan::new().burst(0, 4.0, 1.0, 2.0, 0.5), // peak < base
+            StreamPlan::new().burst(0, 1.0, 4.0, 0.0, 0.5), // bad period
+            StreamPlan::new().burst(0, 1.0, 4.0, 2.0, 1.5), // bad duty
+            StreamPlan::new().constant(0, 1.0).with_tick(0.0), // bad tick
+            StreamPlan::new().constant(0, 1.0).with_horizon(-1.0), // bad horizon
+            StreamPlan::new().constant(0, 1.0).with_horizon(0.1), // tick > horizon
+        ];
+        for plan in bad {
+            assert!(plan.validate(3).is_err(), "{plan:?} must be rejected");
+        }
+        StreamPlan::new()
+            .constant(0, 0.0)
+            .ramp(1, 0.0, 3.0, 5.0)
+            .burst(2, 0.5, 2.0, 6.0, 0.3)
+            .validate(3)
+            .unwrap();
+    }
+
+    #[test]
+    fn compilation_is_deterministic() {
+        let plan = StreamPlan::new()
+            .constant(0, 1.7)
+            .ramp(1, 0.3, 5.0, 15.0)
+            .burst(2, 0.2, 6.0, 5.0, 0.4);
+        assert_eq!(
+            StreamTimeline::from_plan(&plan),
+            StreamTimeline::from_plan(&plan)
+        );
+    }
+
+    #[test]
+    fn stream_and_fault_tag_ranges_are_disjoint() {
+        assert!(is_stream_tag_value(STREAM_TAG_BASE));
+        assert!(is_stream_tag_value(crate::faults::FAULT_TAG_BASE - 1));
+        assert!(!is_stream_tag_value(crate::faults::FAULT_TAG_BASE));
+        assert!(!is_stream_tag_value(0));
+    }
+}

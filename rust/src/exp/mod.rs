@@ -559,6 +559,116 @@ pub fn faults_churn_sweep(
     Ok(rows)
 }
 
+// ------------------------------------------------------------- stream
+
+/// Rate-spread axis of `hermes exp stream`: the fastest worker's
+/// arrival rate divided by the slowest's (1.0 = uniform streams, 6.0 =
+/// strongly skewed edge deployment).
+pub const STREAM_SWEEP_SPREADS: [f64; 2] = [1.0, 6.0];
+
+/// Dirichlet label-skew axis (α → 0 approaches single-class shards,
+/// larger α approaches IID).
+pub const STREAM_SWEEP_ALPHAS: [f64; 2] = [0.3, 1.0];
+
+/// Framework axis: static-allocation baselines against their
+/// stream-aware `streamalloc` counterparts, all on the trickle curve
+/// where the under-filled-buffer degradation is sharpest.
+pub const STREAM_SWEEP_FRAMEWORKS: [&str; 4] = [
+    "bsp@trickle",
+    "bsp+streamalloc@trickle",
+    "hermes@trickle",
+    "hermes+streamalloc@trickle",
+];
+
+/// `hermes exp stream` — the streaming-data sweep (DESIGN.md §16):
+/// framework × rate-spread × Dirichlet-α, every run fed by the seeded
+/// `StreamPlan` compiler instead of a static pool.  Rows stream
+/// through the sink in job order into `stream_{model}.csv`; the
+/// headline contrast is a static-alloc framework starving on a trickle
+/// while `streamalloc` shrinks the working set to the observed arrival
+/// rate and recovers iteration throughput.
+pub fn stream_sweep(
+    out: &Path,
+    model: &str,
+    artifacts: &Path,
+    threads: usize,
+    spreads: &[f64],
+    alphas: &[f64],
+    frameworks: &[&str],
+) -> Result<Vec<RunMetrics>> {
+    let mut jobs = Vec::new();
+    for &spread in spreads {
+        for &alpha in alphas {
+            for fw in frameworks {
+                let mut cfg = scaled_cfg(model, fw);
+                cfg.stream.spread = spread;
+                cfg.stream.alpha = alpha;
+                cfg.target_acc = 1.1; // fixed budget: compare throughput
+                cfg.max_iters = 240;
+                jobs.push(SweepJob::new(format!("{fw}|s{spread}|a{alpha}"), cfg));
+            }
+        }
+    }
+    let model_s = model.to_string();
+    let arts = artifacts.to_path_buf();
+
+    let mut csv = String::from(
+        "framework,spread,alpha,iterations,virtual_time_s,iters_per_vs,\
+         final_loss,final_accuracy,arrivals,skips,evictions,bytes,converged\n",
+    );
+    let mut table = TableFmt::new(&[
+        "Framework",
+        "Spread",
+        "Alpha",
+        "Iters",
+        "Iters/s",
+        "Arrivals",
+        "Skips",
+        "Evicted",
+    ]);
+    let mut rows: Vec<RunMetrics> = Vec::with_capacity(jobs.len());
+    sweep::run_sweep_streaming(
+        &jobs,
+        threads,
+        0, // auto window
+        move |_job| make_runtime(&model_s, &arts),
+        |i, r| {
+            let cfg = &jobs[i].cfg;
+            let fw = cfg.framework.to_string();
+            let (spread, alpha) = (cfg.stream.spread, cfg.stream.alpha);
+            let rate = r.iterations as f64 / r.virtual_time.max(1e-9);
+            csv += &format!(
+                "{fw},{spread},{alpha},{},{:.3},{rate:.4},{:.5},{:.5},{},{},{},{},{}\n",
+                r.iterations,
+                r.virtual_time,
+                r.final_loss,
+                r.final_accuracy,
+                r.stream_arrivals,
+                r.stream_skips,
+                r.stream_evictions,
+                r.bytes,
+                r.converged
+            );
+            table.row(vec![
+                fw,
+                format!("{spread}"),
+                format!("{alpha}"),
+                r.iterations.to_string(),
+                format!("{rate:.2}"),
+                r.stream_arrivals.to_string(),
+                r.stream_skips.to_string(),
+                r.stream_evictions.to_string(),
+            ]);
+            rows.push(r);
+            Ok(())
+        },
+    )?;
+    let rendered = table.render();
+    println!("\nStream sweep ({model}):\n{rendered}");
+    write_file(out, &format!("stream_{model}.csv"), &csv)?;
+    Ok(rows)
+}
+
 // ------------------------------------------------------------ robust
 
 /// Chaos sweep over the failure-domain axes (DESIGN.md §15): every
@@ -885,6 +995,15 @@ pub fn run_all(out: &Path, model: &str, artifacts: &Path) -> Result<()> {
     fig14_alpha_beta(out, model, artifacts)?;
     table3(out, model, artifacts)?;
     faults_churn_sweep(out, model, artifacts, 0, &FAULT_SWEEP_RATES, &PRESETS)?;
+    stream_sweep(
+        out,
+        model,
+        artifacts,
+        0,
+        &STREAM_SWEEP_SPREADS,
+        &STREAM_SWEEP_ALPHAS,
+        &STREAM_SWEEP_FRAMEWORKS,
+    )?;
     println!("\nAll experiment outputs in {}", out.display());
     Ok(())
 }
@@ -931,6 +1050,42 @@ mod tests {
         let csv = std::fs::read_to_string(dir.join("faults_churn_mock.csv")).unwrap();
         assert_eq!(csv.lines().count(), 3, "{csv}");
         assert!(csv.lines().nth(1).unwrap().starts_with("hermes,0,"), "{csv}");
+    }
+
+    #[test]
+    fn stream_sweep_writes_csv_and_streamalloc_recovers_throughput() {
+        let dir = std::env::temp_dir().join("hermes_exp_stream_test");
+        let rows = stream_sweep(
+            &dir,
+            "mock",
+            Path::new("/nonexistent"),
+            0,
+            &[1.0],
+            &[0.3],
+            &["bsp@trickle", "bsp+streamalloc@trickle"],
+        )
+        .unwrap();
+        assert_eq!(rows.len(), 2);
+        for r in &rows {
+            assert!(r.stream_arrivals > 0, "{}: no arrivals", r.framework);
+            assert!(r.iterations > 0, "{}: no iterations", r.framework);
+        }
+        // The headline contrast (ISSUE 7 acceptance): the stream-aware
+        // allocator out-iterates the static allocation on the same
+        // trickle, because it shrinks DSS to the observed arrival rate
+        // instead of waiting for a full static working set each round.
+        assert!(
+            rows[1].iterations > rows[0].iterations,
+            "streamalloc {} iters vs static {}",
+            rows[1].iterations,
+            rows[0].iterations
+        );
+        let csv = std::fs::read_to_string(dir.join("stream_mock.csv")).unwrap();
+        assert_eq!(csv.lines().count(), 3, "{csv}");
+        assert!(
+            csv.lines().nth(1).unwrap().starts_with("bsp@trickle,1,0.3,"),
+            "{csv}"
+        );
     }
 
     #[test]

@@ -10,6 +10,7 @@ use anyhow::Result;
 use crate::alloc::Allocation;
 use crate::cluster::Cluster;
 use crate::config::{RobustConfig, RunConfig};
+use crate::data::stream::StreamTimeline;
 use crate::data::{partition_pools, DataKind, Dataset, Partition, Probe, Shard};
 use crate::faults::{CorruptKind, FaultAction, FaultDelta, FaultTimeline};
 use crate::gup::Gup;
@@ -67,6 +68,9 @@ pub struct SimEnv {
     /// Compiled fault timeline (crash/rejoin/degradation actions in
     /// virtual-time order; empty for fault-free runs — DESIGN.md §10).
     faults: FaultTimeline,
+    /// Compiled stream-arrival timeline (per-worker sample deliveries
+    /// in virtual-time order; empty for static runs — DESIGN.md §16).
+    stream: StreamTimeline,
     /// Training indices retained for membership-change re-splits.
     train_idx: Vec<usize>,
     /// Pool re-splits performed (perturbs the re-split seed stream).
@@ -108,7 +112,7 @@ impl SimEnv {
             &ds,
             &train_idx,
             n,
-            Partition::for_kind(kind),
+            partition_for(&cfg, kind),
             cfg.seed,
         );
 
@@ -131,7 +135,7 @@ impl SimEnv {
         };
         for (i, shard) in shards.into_iter().enumerate() {
             let gup = Gup::from_hp(&cfg.hp, cfg.alpha_relax);
-            workers.push(WorkerCore::new(
+            let mut wc = WorkerCore::new(
                 i,
                 w0.clone(),
                 gup,
@@ -139,7 +143,16 @@ impl SimEnv {
                 dss0,
                 cfg.mbs0,
                 cfg.seed.wrapping_add(i as u64),
-            ));
+            );
+            // Streamed runs start with an *empty* bounded buffer: the
+            // worker's first iteration waits for arrivals.
+            if cfg.framework.is_streaming() {
+                wc.make_streaming(
+                    cfg.stream.capacity,
+                    cfg.seed.wrapping_add(i as u64),
+                );
+            }
+            workers.push(wc);
             run.workers.push(WorkerMetrics {
                 family: cluster.node(i).family.clone(),
                 ..Default::default()
@@ -166,6 +179,16 @@ impl SimEnv {
         // chains), so this covers the steady state without regrowth.
         let mut queue = SimQueue::with_capacity(4 * n + 16);
         faults.schedule(&mut queue);
+
+        // Compile the streaming scenario exactly like the fault plan:
+        // seeded config → per-worker arrival timeline → one wake-up tag
+        // per arrival batch.  Static runs compile to the empty timeline
+        // (zero events), keeping the queue bit-identical to the
+        // pre-stream engine.
+        let splan = cfg.stream.build_plan(n, cfg.framework.data);
+        splan.validate(n).map_err(|e| anyhow::anyhow!(e))?;
+        let stream = StreamTimeline::from_plan(&splan);
+        stream.schedule(&mut queue);
 
         let robust = cfg.robust_effective();
         let guard = if robust.guard {
@@ -194,6 +217,7 @@ impl SimEnv {
             stale_evals: 0,
             wall_start: Instant::now(),
             faults,
+            stream,
             train_idx,
             resplits: 0,
             robust,
@@ -350,7 +374,7 @@ impl SimEnv {
             &self.ds,
             &self.train_idx,
             active.len(),
-            Partition::for_kind(kind),
+            partition_for(&self.cfg, kind),
             self.cfg.seed.wrapping_add(self.resplits),
         );
         let ctl = self.ctl_bytes();
@@ -360,6 +384,62 @@ impl SimEnv {
             let mbs = self.workers[w].mbs;
             self.workers[w].assign(dss, mbs);
             self.transfer(w, ctl);
+        }
+    }
+
+    // ----------------------------------- streaming data (DESIGN.md §16)
+
+    /// Does this run stream its dataset at all?  Static runs skip
+    /// every per-event stream check (bit-identical to the pre-stream
+    /// engine).
+    pub fn has_stream(&self) -> bool {
+        self.cfg.framework.is_streaming()
+    }
+
+    /// Deliver every stream arrival due at or before `t` into the
+    /// owning workers' replay buffers.  Event drivers call this on
+    /// every pop (next to [`SimEnv::apply_faults_up_to`]); round
+    /// drivers at round boundaries.  Crashed workers keep receiving —
+    /// the device's sensors don't stop sampling while the trainer is
+    /// down, and the bounded buffer evicts as usual.
+    pub fn apply_stream_up_to(&mut self, t: f64) {
+        while let Some((_, a)) = self.stream.pop_due(t) {
+            self.workers[a.worker].source.arrive(a.count);
+            self.run.stream_arrivals += a.count as u64;
+        }
+    }
+
+    /// Virtual time of the next scheduled arrival (`None` once the
+    /// timeline is drained) — round drivers advance the clock here
+    /// when no worker has enough data to train.
+    pub fn stream_next_time(&self) -> Option<f64> {
+        self.stream.next_time()
+    }
+
+    /// Observed per-worker arrival rate (samples per virtual second
+    /// since t=0) — the `StreamDriven` alloc policy's signal.  Static
+    /// sources report `+inf` (no cap).
+    pub fn observed_rate(&self, w: usize) -> f64 {
+        let now = self.queue.now();
+        match self.workers[w].source.stream() {
+            Some(s) if now > 0.0 => s.arrived() as f64 / now,
+            _ => f64::INFINITY,
+        }
+    }
+
+    /// SelDP re-partition: one global shuffle, disjoint slices (§II-E).
+    /// The δ-gated barrier drivers call this once at startup; streamed
+    /// runs skip it and keep their Dirichlet arrival pools.
+    pub fn reshard_seldp(&mut self) {
+        let n = self.n_workers();
+        let (train_idx, _) = self.ds.split(0.85, self.cfg.seed);
+        let shards =
+            partition_pools(&self.ds, &train_idx, n, Partition::SelDp, self.cfg.seed);
+        for (w, shard) in shards.into_iter().enumerate() {
+            self.workers[w].shard = shard;
+            let dss = self.workers[w].dss;
+            let mbs = self.workers[w].mbs;
+            self.workers[w].assign(dss, mbs);
         }
     }
 
@@ -581,6 +661,9 @@ impl SimEnv {
             wm.pushes = w.gup.pushes;
             wm.bytes = self.net.worker(i).bytes;
             wm.api_calls = self.net.worker(i).api_calls;
+            if let Some(s) = w.source.stream() {
+                self.run.stream_evictions += s.evicted();
+            }
         }
         self.run
     }
@@ -602,6 +685,17 @@ impl SimEnv {
     /// Small control message (requests, time reports, assigns).
     pub fn ctl_bytes(&self) -> usize {
         24
+    }
+}
+
+/// The partition discipline for this run: streamed runs always use the
+/// Dirichlet(α) label-skew split (DESIGN.md §16 — non-IID device
+/// streams), static runs keep the per-dataset default.
+fn partition_for(cfg: &RunConfig, kind: DataKind) -> Partition {
+    if cfg.framework.is_streaming() {
+        Partition::Dirichlet { alpha: cfg.stream.alpha }
+    } else {
+        Partition::for_kind(kind)
     }
 }
 
@@ -806,5 +900,29 @@ mod tests {
         // The generic driver runs the same spec fine.
         cfg.max_iters = 24;
         run_framework(cfg, Box::new(MockRuntime::new())).unwrap();
+    }
+
+    #[test]
+    fn stream_plan_compiles_schedules_and_delivers() {
+        let mut cfg = mock_cfg();
+        cfg.framework = "bsp@steady".parse().unwrap();
+        cfg.stream.rate = 8.0;
+        let mut env = SimEnv::build(cfg, Box::new(MockRuntime::new())).unwrap();
+        assert!(env.has_stream());
+        assert!(env.queue.len() > 0, "arrival wake-ups must be queued");
+        // Streamed workers start with empty buffers: not ready.
+        assert!(!env.workers[0].data_ready());
+        let t1 = env.stream_next_time().unwrap();
+        env.apply_stream_up_to(t1 + 10.0);
+        assert!(env.run.stream_arrivals > 0);
+        assert!(env.workers[0].source.stream().unwrap().buffered() > 0);
+        // A static run compiles the empty timeline: zero queue events,
+        // bit-identical to the pre-stream engine.
+        let env2 =
+            SimEnv::build(mock_cfg(), Box::new(MockRuntime::new())).unwrap();
+        assert!(!env2.has_stream());
+        assert_eq!(env2.queue.len(), 0);
+        assert!(env2.stream_next_time().is_none());
+        assert!(env2.workers[0].data_ready(), "static sources always ready");
     }
 }

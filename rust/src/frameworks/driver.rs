@@ -33,7 +33,7 @@ use super::hermes::REBALANCE_EVERY;
 use super::policy::{AllocPolicy, FrameworkSpec, GatePolicy, SyncPolicy};
 use super::ssp::{active_min_clock, release_unblocked};
 use crate::alloc::{rebalance_pass, Allocation, Rebalance, TimeMonitor, MBS_DOMAIN};
-use crate::data::{partition_pools, Partition};
+use crate::data::stream::{is_stream_tag, is_stream_tag_value};
 use crate::metrics::SegmentKind;
 use crate::sim::Ev;
 use crate::tensor::ParamVec;
@@ -96,13 +96,16 @@ fn for_each_rebalance(
     now: f64,
     mut deliver: impl FnMut(&mut SimEnv, Rebalance),
 ) {
-    let rbs = rebalance_pass(
+    let mut rbs = rebalance_pass(
         monitor,
         env.cfg.hp.epochs,
         &env.allocs,
         dss_caps,
         &MBS_DOMAIN,
     );
+    if env.cfg.framework.alloc == AllocPolicy::StreamDriven {
+        clamp_stream_targets(env, &mut rbs);
+    }
     for rb in rbs {
         if env.is_crashed(rb.worker) {
             continue;
@@ -113,6 +116,34 @@ fn for_each_rebalance(
             .allocations
             .push((now, rb.alloc.dss, rb.alloc.mbs));
         deliver(env, rb);
+    }
+}
+
+/// The `streamalloc` policy (DESIGN.md §16): cap every worker's DSS at
+/// what its observed arrival rate can refill between §IV-A passes.  The
+/// IQR retargets are clamped in place, and a clamp-only rebalance is
+/// emitted for any worker whose *standing* allocation outruns its
+/// stream — a slow trickle must shrink the working set even when the
+/// straggler detector sees nothing (all workers equally wait-bound).
+fn clamp_stream_targets(env: &SimEnv, rbs: &mut Vec<Rebalance>) {
+    for w in 0..env.n_workers() {
+        if env.is_crashed(w) {
+            continue;
+        }
+        let rate = env.observed_rate(w);
+        if !rate.is_finite() {
+            continue;
+        }
+        let cap = ((rate * REBALANCE_EVERY) as usize).max(env.allocs[w].mbs);
+        if let Some(rb) = rbs.iter_mut().find(|rb| rb.worker == w) {
+            rb.alloc.dss = rb.alloc.dss.min(cap.max(rb.alloc.mbs));
+            continue;
+        }
+        if env.allocs[w].dss > cap {
+            let mut alloc = env.allocs[w];
+            alloc.dss = cap;
+            rbs.push(Rebalance { worker: w, alloc, was_straggler: false });
+        }
     }
 }
 
@@ -173,6 +204,11 @@ struct EventPlanes {
     /// Iteration clocks + blocked set (bounded staleness).
     clock: Vec<u64>,
     blocked: Vec<Option<f64>>,
+    /// Streamed-data plane (DESIGN.md §16): workers parked on an
+    /// under-filled replay buffer, and when each one parked (the span
+    /// is charged as wait time on restart).
+    data_blocked: Vec<bool>,
+    data_since: Vec<f64>,
     /// §IV-A monitoring plane (dynalloc).
     monitor: TimeMonitor,
     pending_alloc: Vec<Option<Allocation>>,
@@ -196,7 +232,7 @@ fn run_event(env: &mut SimEnv, spec: FrameworkSpec) -> Result<()> {
             _ => None,
         },
         gup: spec.gate == GatePolicy::Gup,
-        monitored: spec.alloc == AllocPolicy::Dynamic,
+        monitored: spec.alloc != AllocPolicy::Static,
     };
     let mut planes = EventPlanes {
         pending_grad: (0..n).map(|_| None).collect(),
@@ -204,11 +240,13 @@ fn run_event(env: &mut SimEnv, spec: FrameworkSpec) -> Result<()> {
         anchor: (0..n).map(|_| None).collect(),
         clock: vec![0; n],
         blocked: vec![None; n],
+        data_blocked: vec![false; n],
+        data_since: vec![0.0; n],
         monitor: TimeMonitor::new(n),
         pending_alloc: vec![None; n],
         pending_stall: vec![0.0; n],
         last_rebalance: f64::MIN,
-        dss_caps: alloc_caps(env, spec.alloc == AllocPolicy::Dynamic),
+        dss_caps: alloc_caps(env, spec.alloc != AllocPolicy::Static),
     };
     // Snapshot scratch for delta gradients + the Alg. 2 cumulative-G
     // buffer, leased once (pool bookkeeping only — no metrics effect).
@@ -230,6 +268,11 @@ fn run_event(env: &mut SimEnv, spec: FrameworkSpec) -> Result<()> {
     }
 
     while let Some((t, ev)) = env.queue.pop() {
+        if env.has_stream() {
+            // Deliver every arrival due by `t` before handling the
+            // event, so ready checks see the current buffer fill.
+            env.apply_stream_up_to(t);
+        }
         if env.has_faults() {
             let fd = env.apply_faults_up_to(t);
             if let Some(s) = mode.staleness {
@@ -249,7 +292,10 @@ fn run_event(env: &mut SimEnv, spec: FrameworkSpec) -> Result<()> {
                     }
                 }
             }
-            if env.is_crashed(ev.worker()) && !crate::faults::is_fault_tag(&ev) {
+            if env.is_crashed(ev.worker())
+                && !crate::faults::is_fault_tag(&ev)
+                && !is_stream_tag(&ev)
+            {
                 env.defer_to_rejoin(ev); // dead worker: chain resumes at rejoin
                 continue;
             }
@@ -364,6 +410,34 @@ fn run_event(env: &mut SimEnv, spec: FrameworkSpec) -> Result<()> {
                 event_start_iteration(env, w, t, mode, &mut planes, &mut before)?;
             }
             Ev::PrefetchDone { .. } => { /* data landed; alloc already staged */ }
+            Ev::Tag { tag, .. } if is_stream_tag_value(tag) => {
+                // Stream wake-up: the arrivals due by `t` were already
+                // delivered at the top of the loop; restart every
+                // worker parked on a buffer that is now full enough.
+                // The parked span is wait time (the ScaDLES stream
+                // stall), and restarts respect the staleness bound.
+                for w in 0..n {
+                    if !planes.data_blocked[w]
+                        || env.is_crashed(w)
+                        || !env.workers[w].data_ready()
+                    {
+                        continue;
+                    }
+                    planes.data_blocked[w] = false;
+                    let since = planes.data_since[w];
+                    env.charge_wait(w, t - since, since);
+                    if env.iterations_exhausted() {
+                        continue;
+                    }
+                    if let Some(s) = mode.staleness {
+                        if planes.clock[w] > active_min_clock(env, &planes.clock) + s {
+                            planes.blocked[w] = Some(t);
+                            continue;
+                        }
+                    }
+                    event_start_iteration(env, w, t, mode, &mut planes, &mut before)?;
+                }
+            }
             Ev::Tag { .. } => {}
         }
     }
@@ -388,6 +462,15 @@ fn event_start_iteration(
     planes: &mut EventPlanes,
     before: &mut ParamVec,
 ) -> Result<()> {
+    if env.has_stream() && !env.workers[w].data_ready() {
+        // ScaDLES semantics: an under-filled replay buffer skips the
+        // iteration.  The worker parks until a stream wake-up finds
+        // its buffer refilled (or the run ends with the stream dry).
+        env.run.stream_skips += 1;
+        planes.data_blocked[w] = true;
+        planes.data_since[w] = t;
+        return Ok(());
+    }
     if mode.monitored {
         // Stage any prefetched allocation before the iteration.
         if let Some(a) = planes.pending_alloc[w].take() {
@@ -476,7 +559,7 @@ fn rebalance_event(env: &mut SimEnv, planes: &mut EventPlanes, now: f64) {
 fn run_lockstep(env: &mut SimEnv, spec: FrameworkSpec) -> Result<()> {
     let eta = env.cfg.hp.lr;
     let gup = spec.gate == GatePolicy::Gup;
-    let monitored = spec.alloc == AllocPolicy::Dynamic;
+    let monitored = spec.alloc != AllocPolicy::Static;
     let quorum = env.quorum_on();
     let n = env.n_workers();
     let mut monitor = TimeMonitor::new(n);
@@ -503,9 +586,32 @@ fn run_lockstep(env: &mut SimEnv, spec: FrameworkSpec) -> Result<()> {
         if env.has_faults() {
             env.apply_faults_up_to(t0);
         }
-        let active = env.cluster.active_ids();
+        let mut active = env.cluster.active_ids();
         if active.is_empty() {
             break;
+        }
+        if env.has_stream() {
+            env.apply_stream_up_to(t0);
+            let all = active.clone();
+            active.retain(|&w| env.workers[w].data_ready());
+            env.run.stream_skips += (all.len() - active.len()) as u64;
+            if active.is_empty() {
+                // Nobody has a full mini-batch buffered: the round
+                // waits for the next arrival, or the run ends when the
+                // stream has run dry.
+                match env.stream_next_time() {
+                    Some(tn) => {
+                        let tn = tn.max(t0);
+                        for &w in &all {
+                            env.charge_wait(w, tn - t0, t0);
+                        }
+                        env.queue.advance_to(tn);
+                        env.apply_stream_up_to(tn);
+                        continue;
+                    }
+                    None => break,
+                }
+            }
         }
 
         // PS → workers: model + dataset (Fig. 2's "receive" components).
@@ -661,21 +767,17 @@ fn run_lockstep(env: &mut SimEnv, spec: FrameworkSpec) -> Result<()> {
 fn run_gated_rounds(env: &mut SimEnv, spec: FrameworkSpec) -> Result<()> {
     let eta = env.cfg.hp.lr;
     let delta = env.cfg.hp.selsync_delta;
-    let monitored = spec.alloc == AllocPolicy::Dynamic;
+    let monitored = spec.alloc != AllocPolicy::Static;
     let n = env.n_workers();
     let mut monitor = TimeMonitor::new(n);
     let mut last_rebalance = f64::MIN;
     let dss_caps = alloc_caps(env, monitored);
 
     // SelDP re-partition: one global shuffle, disjoint slices (§II-E).
-    let (train_idx, _) = env.ds.split(0.85, env.cfg.seed);
-    let shards =
-        partition_pools(&env.ds, &train_idx, n, Partition::SelDp, env.cfg.seed);
-    for (w, shard) in shards.into_iter().enumerate() {
-        env.workers[w].shard = shard;
-        let dss = env.workers[w].dss;
-        let mbs = env.workers[w].mbs;
-        env.workers[w].assign(dss, mbs);
+    // Streamed runs keep their Dirichlet shards — the replay buffer,
+    // not the shard, is what workers train on (DESIGN.md §16).
+    if !env.has_stream() {
+        env.reshard_seldp();
     }
 
     // Initial broadcast.
@@ -701,9 +803,38 @@ fn run_gated_rounds(env: &mut SimEnv, spec: FrameworkSpec) -> Result<()> {
                 ready[w] = env.queue.now();
             }
         }
-        let active = env.cluster.active_ids();
+        let mut active = env.cluster.active_ids();
         if active.is_empty() {
             break;
+        }
+        if env.has_stream() {
+            let now = env.queue.now();
+            env.apply_stream_up_to(now);
+            let all = active.clone();
+            active.retain(|&w| env.workers[w].data_ready());
+            env.run.stream_skips += (all.len() - active.len()) as u64;
+            for &w in &all {
+                if !env.workers[w].data_ready() {
+                    // A parked worker restarts from the present, not
+                    // from its stale pre-park ready point.
+                    ready[w] = ready[w].max(now);
+                }
+            }
+            if active.is_empty() {
+                match env.stream_next_time() {
+                    Some(tn) => {
+                        let tn = tn.max(now);
+                        for &w in &all {
+                            env.charge_wait(w, tn - now, now);
+                            ready[w] = ready[w].max(tn);
+                        }
+                        env.queue.advance_to(tn);
+                        env.apply_stream_up_to(tn);
+                        continue;
+                    }
+                    None => break,
+                }
+            }
         }
 
         // One local iteration on every active worker; measure the
@@ -795,7 +926,7 @@ fn run_elastic(env: &mut SimEnv, spec: FrameworkSpec) -> Result<()> {
     let delta = env.cfg.hp.selsync_delta;
     let gup = spec.gate == GatePolicy::Gup;
     let gate_every = spec.gate == GatePolicy::Every;
-    let monitored = spec.alloc == AllocPolicy::Dynamic;
+    let monitored = spec.alloc != AllocPolicy::Static;
     let n = env.n_workers();
     let mut monitor = TimeMonitor::new(n);
     let mut last_rebalance = f64::MIN;
@@ -804,6 +935,9 @@ fn run_elastic(env: &mut SimEnv, spec: FrameworkSpec) -> Result<()> {
     // ---- Benchmark phase: one profiled iteration per node.
     if env.has_faults() {
         env.apply_faults_up_to(0.0); // faults planned at t=0 pre-empt the bench
+    }
+    if env.has_stream() {
+        env.apply_stream_up_to(0.0);
     }
     let heavy = env.rt.meta().param_count >= HEAVY_PARAMS;
     let mut bench_end = 0.0f64;
@@ -818,7 +952,20 @@ fn run_elastic(env: &mut SimEnv, spec: FrameworkSpec) -> Result<()> {
             env.cluster.crash(w);
             continue;
         }
-        let (_out, dur) = env.run_local_iteration(w)?;
+        let dur = if env.has_stream() && !env.workers[w].data_ready() {
+            // A streamed worker whose buffer hasn't filled yet can't
+            // run the profiled iteration — fall back to the Eq. 3
+            // prediction so the barrier placement still covers it.
+            env.cluster.predict_time(
+                w,
+                env.cfg.hp.epochs,
+                env.workers[w].dss,
+                env.workers[w].mbs,
+            )
+        } else {
+            let (_out, d) = env.run_local_iteration(w)?;
+            d
+        };
         let t = dur * BENCH_OVERHEAD;
         predicted[w] = dur;
         env.segment(w, 0.0, t, SegmentKind::Train);
@@ -862,9 +1009,25 @@ fn run_elastic(env: &mut SimEnv, spec: FrameworkSpec) -> Result<()> {
                 );
             }
         }
-        let active = env.cluster.active_ids();
+        let mut active = env.cluster.active_ids();
         if active.is_empty() {
             break;
+        }
+        if env.has_stream() {
+            env.apply_stream_up_to(t0);
+            let all = active.len();
+            active.retain(|&w| env.workers[w].data_ready());
+            env.run.stream_skips += (all - active.len()) as u64;
+            if active.is_empty() {
+                match env.stream_next_time() {
+                    Some(tn) => {
+                        env.queue.advance_to(tn.max(t0));
+                        env.apply_stream_up_to(env.queue.now());
+                        continue;
+                    }
+                    None => break,
+                }
+            }
         }
         // Late deltas deferred by the previous quorum commit fold into
         // this round's aggregation.
@@ -970,7 +1133,13 @@ fn run_elastic(env: &mut SimEnv, spec: FrameworkSpec) -> Result<()> {
             let mut ran = 0;
             let mut fired = false;
             loop {
-                // Always run at least one iteration.
+                // Always run at least one iteration (the round gate
+                // above guarantees the first one has data); later laps
+                // stop early when the replay buffer runs out.
+                if env.has_stream() && !env.workers[w].data_ready() {
+                    env.run.stream_skips += 1;
+                    break;
+                }
                 let (out, dur) = env.run_local_iteration(w)?;
                 if monitored {
                     monitor.record(w, dur);

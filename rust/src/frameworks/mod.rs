@@ -34,6 +34,6 @@ pub use common::{
     run_framework, run_framework_opts, run_reference, run_reference_opts, SimEnv,
 };
 pub use policy::{
-    AggPolicy, AllocPolicy, FrameworkSpec, GatePolicy, SpecError, SyncPolicy,
-    PRESETS,
+    AggPolicy, AllocPolicy, DataMode, FrameworkSpec, GatePolicy, SpecError,
+    SyncPolicy, PRESETS, STREAM_MODES,
 };

@@ -9,14 +9,18 @@
 //! composition (`bsp+dynalloc`, `ssp+gup`, `selsync+dynalloc`, …) is a
 //! first-class spec the generic driver ([`super::driver`]) executes.
 //!
-//! Spec grammar (`FromStr`): `<first>[+<gate>][+<alloc>]` where
-//! `<first>` is a preset name (`bsp asp ssp ebsp selsync hermes`),
-//! `<gate>` ∈ {`every`, `delta`, `gup`} and `<alloc>` ∈ {`static`,
-//! `dynalloc`}.  The preset seeds all three axes; later tokens
-//! override one axis each (at most once).  `Display` renders the
-//! preset name when the spec matches one, else the canonical
-//! `<sync>[+<gate>][+<alloc>]` form — `FromStr ∘ Display` is the
-//! identity on every spec in the grid.
+//! Spec grammar (`FromStr`): `<first>[+<gate>][+<alloc>][@<stream>]`
+//! where `<first>` is a preset name (`bsp asp ssp ebsp selsync
+//! hermes`), `<gate>` ∈ {`every`, `delta`, `gup`}, `<alloc>` ∈
+//! {`static`, `dynalloc`, `streamalloc`} and the optional `@<stream>`
+//! suffix ([`DataMode`]) swaps the static dataset for a streaming one
+//! (`steady ramp burst trickle`, DESIGN.md §16) — e.g.
+//! `bsp@trickle`, `hermes+streamalloc@burst`.  The preset seeds all
+//! axes; later tokens override one axis each (at most once).
+//! `Display` renders the preset name when the spec matches one, else
+//! the canonical `<sync>[+<gate>][+<alloc>]` form, with `@<stream>`
+//! appended when streaming — `FromStr ∘ Display` is the identity on
+//! every spec in the grid.
 
 use std::fmt;
 use std::str::FromStr;
@@ -61,7 +65,34 @@ pub enum AllocPolicy {
     /// Hermes monitoring plane + dual binary search (§IV-A): TimeReport
     /// heartbeats, IQR outlier detection, DSS/MBS retargeting.
     Dynamic,
+    /// Stream-aware reallocation (DESIGN.md §16): the Dynamic plane,
+    /// plus a per-worker DSS cap at the observed arrival rate so slow
+    /// streams never stage more data than they receive — a starved
+    /// worker trains small-and-often instead of waiting for a full
+    /// static working set.
+    StreamDriven,
 }
+
+/// The data axis (DESIGN.md §16): where a worker's samples come from.
+/// Everything but `Static` compiles a per-worker `StreamPlan` rate
+/// curve into DES arrival events (ScaDLES-style streaming).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DataMode {
+    /// The classic preloaded dataset: every sample available up front.
+    Static,
+    /// Constant arrival rate at the configured samples/s.
+    Steady,
+    /// Linear ramp from a fraction of the rate up to the full rate.
+    Ramp,
+    /// Periodic bursts: a high peak over a low base rate.
+    Burst,
+    /// A slow constant trickle — the straggler-species stress case.
+    Trickle,
+}
+
+/// The streaming data modes, in grammar order (excludes `static`,
+/// which is the implicit default when no `@<stream>` suffix appears).
+pub const STREAM_MODES: [&str; 4] = ["steady", "ramp", "burst", "trickle"];
 
 /// How the PS treats incoming deltas (ISSUE 6 failure-domain axis).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -75,17 +106,28 @@ pub enum AggPolicy {
     Robust,
 }
 
-/// One point in the composition grid: sync × gate × alloc (× agg).
+/// One point in the composition grid: sync × gate × alloc (× agg ×
+/// data).
 ///
 /// The `agg` axis defaults to [`AggPolicy::Mean`] everywhere — the
 /// 24-spec grid and the six presets are unchanged — and is opted into
 /// per spec with the `+robust` token (`bsp+robust`, `hermes+robust`).
+/// The `data` axis likewise defaults to [`DataMode::Static`] and is
+/// opted into with the `@<stream>` suffix (`bsp@trickle`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct FrameworkSpec {
     pub sync: SyncPolicy,
     pub gate: GatePolicy,
     pub alloc: AllocPolicy,
     pub agg: AggPolicy,
+    pub data: DataMode,
+}
+
+impl FrameworkSpec {
+    /// Does this spec stream its dataset over virtual time?
+    pub fn is_streaming(&self) -> bool {
+        self.data != DataMode::Static
+    }
 }
 
 /// The six canonical frameworks, in the paper's presentation order.
@@ -96,8 +138,13 @@ pub fn preset(name: &str) -> Option<FrameworkSpec> {
     use AllocPolicy::*;
     use GatePolicy::*;
     use SyncPolicy::*;
-    let spec =
-        |sync, gate, alloc| FrameworkSpec { sync, gate, alloc, agg: AggPolicy::Mean };
+    let spec = |sync, gate, alloc| FrameworkSpec {
+        sync,
+        gate,
+        alloc,
+        agg: AggPolicy::Mean,
+        data: DataMode::Static,
+    };
     match name {
         "bsp" => Some(spec(Barrier, Every, Static)),
         "asp" => Some(spec(Async, Every, Static)),
@@ -141,7 +188,30 @@ impl AllocPolicy {
         match self {
             AllocPolicy::Static => "static",
             AllocPolicy::Dynamic => "dynalloc",
+            AllocPolicy::StreamDriven => "streamalloc",
         }
+    }
+}
+
+impl DataMode {
+    pub fn token(&self) -> &'static str {
+        match self {
+            DataMode::Static => "static",
+            DataMode::Steady => "steady",
+            DataMode::Ramp => "ramp",
+            DataMode::Burst => "burst",
+            DataMode::Trickle => "trickle",
+        }
+    }
+}
+
+fn data_mode_token(tok: &str) -> Option<DataMode> {
+    match tok {
+        "steady" => Some(DataMode::Steady),
+        "ramp" => Some(DataMode::Ramp),
+        "burst" => Some(DataMode::Burst),
+        "trickle" => Some(DataMode::Trickle),
+        _ => None,
     }
 }
 
@@ -175,6 +245,7 @@ fn alloc_token(tok: &str) -> Option<AllocPolicy> {
     match tok {
         "static" => Some(AllocPolicy::Static),
         "dynalloc" => Some(AllocPolicy::Dynamic),
+        "streamalloc" => Some(AllocPolicy::StreamDriven),
         _ => None,
     }
 }
@@ -184,11 +255,13 @@ fn alloc_token(tok: &str) -> Option<AllocPolicy> {
 pub fn spec_help() -> String {
     format!(
         "valid specs: presets {} or compositions \
-         <preset>[+<gate>][+<alloc>][+<agg>] with gate one of \
-         every|delta|gup, alloc one of static|dynalloc and agg one of \
-         mean|robust (e.g. bsp+dynalloc, ssp+gup, selsync+dynalloc, \
-         hermes+robust)",
-        PRESETS.join(" ")
+         <preset>[+<gate>][+<alloc>][+<agg>][@<stream>] with gate one \
+         of every|delta|gup, alloc one of static|dynalloc|streamalloc, \
+         agg one of mean|robust and stream one of {} (e.g. \
+         bsp+dynalloc, ssp+gup, selsync+dynalloc, hermes+robust, \
+         bsp@trickle, hermes+streamalloc@burst)",
+        PRESETS.join(" "),
+        STREAM_MODES.join("|")
     )
 }
 
@@ -237,7 +310,20 @@ impl FromStr for FrameworkSpec {
         if input.is_empty() {
             return Err(SpecError::new(s, s, "empty spec"));
         }
-        let mut toks = input.split('+');
+        // The data axis rides as an `@<stream>` suffix — split it off
+        // before the `+` axis tokens so `hermes+streamalloc@burst`
+        // parses as (hermes+streamalloc, burst).
+        let (core, data) = match input.split_once('@') {
+            None => (input, DataMode::Static),
+            Some((core, mode)) => {
+                let mode = mode.trim();
+                let data = data_mode_token(mode).ok_or_else(|| {
+                    SpecError::new(input, mode, "unknown stream mode")
+                })?;
+                (core.trim(), data)
+            }
+        };
+        let mut toks = core.split('+');
         let first = toks.next().unwrap_or_default().trim();
         let mut spec = preset(first)
             .ok_or_else(|| SpecError::new(input, first, "unknown preset"))?;
@@ -266,12 +352,17 @@ impl FromStr for FrameworkSpec {
                 return Err(SpecError::new(input, tok, "unknown axis token"));
             }
         }
+        spec.data = data;
         Ok(spec)
     }
 }
 
 impl fmt::Display for FrameworkSpec {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.is_streaming() {
+            let core = FrameworkSpec { data: DataMode::Static, ..*self };
+            return write!(f, "{core}@{}", self.data.token());
+        }
         if let Some(name) = preset_name(self) {
             return f.write_str(name);
         }
@@ -310,7 +401,13 @@ pub fn grid_specs() -> Vec<FrameworkSpec> {
     ] {
         for gate in [GatePolicy::Every, GatePolicy::Delta, GatePolicy::Gup] {
             for alloc in [AllocPolicy::Static, AllocPolicy::Dynamic] {
-                out.push(FrameworkSpec { sync, gate, alloc, agg: AggPolicy::Mean });
+                out.push(FrameworkSpec {
+                    sync,
+                    gate,
+                    alloc,
+                    agg: AggPolicy::Mean,
+                    data: DataMode::Static,
+                });
             }
         }
     }
@@ -366,6 +463,7 @@ mod tests {
                 gate: GatePolicy::Every,
                 alloc: AllocPolicy::Dynamic,
                 agg: AggPolicy::Mean,
+                data: DataMode::Static,
             }
         );
         let s: FrameworkSpec = "ssp+gup".parse().unwrap();
@@ -467,5 +565,66 @@ mod tests {
             " ssp + gup ".parse::<FrameworkSpec>().unwrap(),
             "ssp+gup".parse::<FrameworkSpec>().unwrap()
         );
+        assert_eq!(
+            " bsp + streamalloc @ trickle ".parse::<FrameworkSpec>().unwrap(),
+            "bsp+streamalloc@trickle".parse::<FrameworkSpec>().unwrap()
+        );
+    }
+
+    #[test]
+    fn stream_axis_parses_renders_and_defaults_static() {
+        // Every preset and grid spec stays on static data.
+        for name in PRESETS {
+            let s = preset(name).unwrap();
+            assert_eq!(s.data, DataMode::Static);
+            assert!(!s.is_streaming());
+        }
+        for spec in grid_specs() {
+            assert_eq!(spec.data, DataMode::Static);
+        }
+        // `@<stream>` composes with any spec and round-trips.
+        for base in ["bsp", "hermes", "ssp+gup", "hermes+streamalloc"] {
+            for mode in STREAM_MODES {
+                let s: FrameworkSpec = format!("{base}@{mode}").parse().unwrap();
+                assert!(s.is_streaming());
+                assert_eq!(s.data.token(), mode);
+                let core = FrameworkSpec { data: DataMode::Static, ..s };
+                assert_eq!(core, base.parse().unwrap());
+                let rendered = s.to_string();
+                assert_eq!(
+                    rendered.parse::<FrameworkSpec>().unwrap(),
+                    s,
+                    "{rendered}"
+                );
+            }
+        }
+        assert_eq!(
+            "bsp@trickle".parse::<FrameworkSpec>().unwrap().to_string(),
+            "bsp@trickle"
+        );
+        // Streaming specs are never presets.
+        assert_eq!(
+            preset_name(&"hermes@steady".parse::<FrameworkSpec>().unwrap()),
+            None
+        );
+        // The streamalloc token is a plain alloc axis value.
+        let s: FrameworkSpec = "bsp+streamalloc".parse().unwrap();
+        assert_eq!(s.alloc, AllocPolicy::StreamDriven);
+        assert_eq!(s.to_string(), "bsp+streamalloc");
+    }
+
+    #[test]
+    fn stream_parse_errors_list_valid_modes() {
+        let err = "bsp@warp".parse::<FrameworkSpec>().unwrap_err();
+        assert_eq!(err.token, "warp");
+        assert!(err.reason.contains("unknown stream mode"), "{err}");
+        let msg = err.to_string();
+        for mode in STREAM_MODES {
+            assert!(msg.contains(mode), "error must suggest '{mode}': {msg}");
+        }
+        // The core before '@' is still fully validated.
+        assert!("bspp@steady".parse::<FrameworkSpec>().is_err());
+        assert!("bsp+warp@steady".parse::<FrameworkSpec>().is_err());
+        assert!("bsp@".parse::<FrameworkSpec>().is_err());
     }
 }

@@ -17,7 +17,6 @@
 use anyhow::Result;
 
 use super::common::SimEnv;
-use crate::data::{partition_pools, Partition};
 use crate::metrics::SegmentKind;
 use crate::tensor::ParamVec;
 
@@ -27,15 +26,7 @@ pub fn run(env: &mut SimEnv) -> Result<()> {
     let n = env.n_workers();
 
     // SelDP re-partition: one global shuffle, disjoint slices (§II-E).
-    let (train_idx, _) = env.ds.split(0.85, env.cfg.seed);
-    let shards =
-        partition_pools(&env.ds, &train_idx, n, Partition::SelDp, env.cfg.seed);
-    for (w, shard) in shards.into_iter().enumerate() {
-        env.workers[w].shard = shard;
-        let dss = env.workers[w].dss;
-        let mbs = env.workers[w].mbs;
-        env.workers[w].assign(dss, mbs);
-    }
+    env.reshard_seldp();
 
     // Initial broadcast.
     let t0 = env.queue.now();

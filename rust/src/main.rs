@@ -46,8 +46,11 @@ fn usage() -> String {
      streams a seed×framework×churn grid through the bounded-memory\n\
      sweep engine (DESIGN.md §13); `--grid hybrid` fans the full\n\
      24-spec policy-composition grid (DESIGN.md §14) instead of the six\n\
-     presets.  Frameworks are composable specs: `hermes run ssp+gup`,\n\
-     `bsp+dynalloc`, `selsync+dynalloc`, …\n\n\
+     presets.  `hermes exp stream` sweeps the streaming non-IID data\n\
+     engine (DESIGN.md §16): seeded per-worker arrival curves ×\n\
+     Dirichlet label skew × framework.  Frameworks are composable\n\
+     specs: `hermes run ssp+gup`, `bsp+dynalloc`, or with a data axis\n\
+     `bsp+streamalloc@trickle`, `hermes@burst`, …\n\n\
      Try `hermes <cmd> --help`."
         .to_string()
 }
@@ -76,7 +79,7 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
         .pos(
             "framework",
             "bsp | asp | ssp | ebsp | selsync | hermes | a composed spec \
-             like ssp+gup or bsp+dynalloc",
+             like ssp+gup, bsp+dynalloc or bsp+streamalloc@trickle",
         )
         .opt("model", "mock", "mock | cnn | alexnet")
         .opt("seed", "42", "rng seed")
@@ -161,7 +164,7 @@ fn cmd_exp(args: &[String]) -> Result<(), String> {
         .pos(
             "which",
             "fig1 fig2 fig3 fig4 fig11 fig12 fig13 fig14 table3 faults robust \
-             scale all",
+             stream scale all",
         )
         .opt("model", "mock", "mock | cnn | alexnet (compute backend)")
         .opt("artifacts", "artifacts", "artifacts directory")
@@ -202,6 +205,16 @@ fn cmd_exp(args: &[String]) -> Result<(), String> {
         "robust" => {
             exp::robust_sweep(&out, model, &arts, threads).map(|_| ())
         }
+        "stream" => exp::stream_sweep(
+            &out,
+            model,
+            &arts,
+            threads,
+            &exp::STREAM_SWEEP_SPREADS,
+            &exp::STREAM_SWEEP_ALPHAS,
+            &exp::STREAM_SWEEP_FRAMEWORKS,
+        )
+        .map(|_| ()),
         "scale" => exp::scale_sweep(
             &out,
             model,

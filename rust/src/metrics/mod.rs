@@ -113,6 +113,14 @@ pub struct RunMetrics {
     /// accuracy regained its pre-injection best; `None` when no
     /// corruption fired or the model never recovered.
     pub recovery_time: Option<f64>,
+    /// Samples delivered into replay buffers (streamed runs, §16).
+    pub stream_arrivals: u64,
+    /// Local iterations skipped because a worker's replay buffer was
+    /// under-filled (the ScaDLES slow-stream straggler signal).
+    pub stream_skips: u64,
+    /// Samples evicted from full replay buffers before being trained on
+    /// (the fast-stream overflow signal).
+    pub stream_evictions: u64,
 }
 
 impl RunMetrics {
@@ -182,6 +190,9 @@ impl RunMetrics {
                 "recovery_time_s",
                 Json::Num(self.recovery_time.unwrap_or(-1.0)),
             ),
+            ("stream_arrivals", Json::Num(self.stream_arrivals as f64)),
+            ("stream_skips", Json::Num(self.stream_skips as f64)),
+            ("stream_evictions", Json::Num(self.stream_evictions as f64)),
             (
                 "crashed_workers",
                 Json::Arr(

@@ -9,7 +9,10 @@
 
 use anyhow::Result;
 
-use crate::data::{BatchSampler, Dataset, Probe, Shard};
+use crate::data::{
+    BatchSampler, DataSource, Dataset, Probe, Shard, Source, StaticSource,
+    StreamSource,
+};
 use crate::gup::{GateDecision, Gup};
 use crate::model::ModelState;
 use crate::runtime::ModelRuntime;
@@ -21,7 +24,9 @@ pub struct WorkerCore {
     pub id: usize,
     pub state: ModelState,
     pub gup: Gup,
-    pub sampler: BatchSampler,
+    /// Where training samples come from (DESIGN.md §16): the static
+    /// PS-shipped working set, or a bounded streaming replay buffer.
+    pub source: Source,
     pub shard: Shard,
     /// Current allocation.
     pub dss: usize,
@@ -69,7 +74,7 @@ impl WorkerCore {
             id,
             state: ModelState::new(init),
             gup,
-            sampler,
+            source: Source::Static(StaticSource::new(sampler)),
             shard,
             dss,
             mbs,
@@ -82,11 +87,28 @@ impl WorkerCore {
     }
 
     /// Apply a (re)allocation from the PS: new DSS/MBS and a fresh
-    /// working set (the prefetched dataset).
+    /// working set (static) or a rebound shard stream (streaming).
     pub fn assign(&mut self, dss: usize, mbs: usize) {
         self.dss = dss.max(1);
         self.mbs = mbs.max(1);
-        self.sampler.refill(&self.shard.pool, self.dss);
+        self.source.assign_pool(&self.shard.pool, self.dss);
+    }
+
+    /// Swap the static source for a streaming one: samples now arrive
+    /// over virtual time into a bounded buffer, and the worker only
+    /// trains when [`WorkerCore::data_ready`] holds.
+    pub fn make_streaming(&mut self, capacity: usize, seed: u64) {
+        self.source = Source::Stream(StreamSource::new(
+            seed,
+            self.id,
+            &self.shard.pool,
+            capacity,
+        ));
+    }
+
+    /// Does the source hold enough samples for one local iteration?
+    pub fn data_ready(&self) -> bool {
+        self.source.ready(self.dss, self.mbs)
     }
 
     /// Adopt the global model.
@@ -122,12 +144,12 @@ impl WorkerCore {
             ((epochs * self.dss) as f64 / self.mbs as f64).ceil().max(1.0) as usize;
         let steps_run = steps_modeled.min(steps_cap).max(1);
 
-        self.sampler.ensure_slab(ds);
+        self.source.begin_iteration(ds, self.dss, self.mbs);
         let mut grad = pool.acquire_like(&self.state.params);
         let mut train_loss = 0f32;
         let mut step_err = None;
         for _ in 0..steps_run {
-            let (x, y) = self.sampler.next_batch_slices(exec_mbs);
+            let (x, y) = self.source.next_batch(exec_mbs);
             match rt.train_step_in_place(
                 &mut self.state.params,
                 &mut self.state.momentum,
@@ -149,6 +171,7 @@ impl WorkerCore {
         if let Some(e) = step_err {
             return Err(e);
         }
+        self.source.end_iteration(self.dss, self.mbs);
 
         let ev = rt.eval_step(&self.state.params, &probe.x, &probe.y)?;
         self.last_loss = ev.loss;
@@ -234,7 +257,39 @@ mod tests {
             .unwrap();
         assert_eq!(out.steps_modeled, 2); // 64/32
         assert_eq!(out.steps_run, 2);
-        assert_eq!(w.sampler.active_len(), 64);
+        assert_eq!(w.source.active_len(), 64);
+    }
+
+    #[test]
+    fn streaming_worker_gates_on_arrivals_and_consumes_them() {
+        let (mut rt, ds, probe, mut pool, mut w) = setup();
+        w.assign(64, 16);
+        w.make_streaming(128, 21);
+        assert!(!w.data_ready(), "empty buffer must gate the iteration");
+        w.source.arrive(64);
+        assert!(w.data_ready());
+        w.local_iteration(&mut rt, &ds, &probe, &mut pool, 1, 0.3, 0.0, 4)
+            .unwrap();
+        assert_eq!(w.iters, 1);
+        // The iteration consumed its working set: gated again.
+        assert!(!w.data_ready());
+        assert_eq!(w.source.stream().unwrap().buffered(), 0);
+        // Deterministic: a clone fed the same arrivals trains on the
+        // same samples bit-for-bit.
+        let mut a = setup().4;
+        a.assign(64, 16);
+        a.make_streaming(128, 21);
+        let mut b = a.clone();
+        a.source.arrive(70);
+        b.source.arrive(70);
+        let oa = a
+            .local_iteration(&mut rt, &ds, &probe, &mut pool, 1, 0.3, 0.0, 4)
+            .unwrap();
+        let ob = b
+            .local_iteration(&mut rt, &ds, &probe, &mut pool, 1, 0.3, 0.0, 4)
+            .unwrap();
+        assert_eq!(oa.test_loss.to_bits(), ob.test_loss.to_bits());
+        assert_eq!(oa.train_loss.to_bits(), ob.train_loss.to_bits());
     }
 
     #[test]

@@ -218,6 +218,72 @@ fn steady_state_worker_iteration_is_allocation_free() {
 }
 
 #[test]
+fn steady_state_stream_source_iteration_is_allocation_free() {
+    // The §16 streamed path must preserve the §13 pin: once the replay
+    // buffer, shuffled order, slab and pool scratch are sized, a full
+    // arrive → gate → drain → train iteration allocates nothing.
+    let _serial = SERIAL.lock().unwrap();
+    let mut rt = MockRuntime::new();
+    let ds = Dataset::synth(DataKind::MockSet, 1200, 21);
+    let (train, test) = ds.split(0.85, 21);
+    let probe = Probe::build(&ds, &test, 128, 21);
+    let shard = partition_pools(&ds, &train, 1, Partition::Iid, 21).remove(0);
+    let init = init_params(rt.meta(), 21);
+    let gup = Gup::new(10, -1.3, 0.1, 5, true);
+    let mut w = WorkerCore::new(0, init, gup, shard, 64, 16, 21);
+    // dss 64 / capacity 256: each iteration drains need = 64 samples,
+    // refilled by `arrive` exactly like the DES delivers stream tags.
+    w.make_streaming(256, 21);
+    let mut pool = BufferPool::new();
+
+    let iterate = |w: &mut WorkerCore,
+                   rt: &mut MockRuntime,
+                   pool: &mut BufferPool| {
+        w.source.arrive(64);
+        assert!(w.data_ready(), "buffer under-filled mid-test");
+        w.local_iteration(rt, &ds, &probe, pool, 1, 0.3, 0.0, 4).unwrap();
+    };
+
+    // Warmup: buffer fill, order shuffle, slab gather, pool leases and
+    // at least one wrap of the seeded arrival order.
+    for _ in 0..12 {
+        iterate(&mut w, &mut rt, &mut pool);
+    }
+
+    let before = ALLOC_CALLS.load(Ordering::Relaxed);
+    for _ in 0..40 {
+        iterate(&mut w, &mut rt, &mut pool);
+    }
+    let after = ALLOC_CALLS.load(Ordering::Relaxed);
+    assert_eq!(
+        after - before,
+        0,
+        "steady-state streamed local iteration performed {} heap allocations",
+        after - before
+    );
+
+    // Both forced kernel backends stay allocation-free on the streamed
+    // path too.
+    for backend in [Backend::Scalar, Backend::Simd] {
+        kernels::with_backend(backend, || {
+            iterate(&mut w, &mut rt, &mut pool); // warm
+            let before = ALLOC_CALLS.load(Ordering::Relaxed);
+            for _ in 0..20 {
+                iterate(&mut w, &mut rt, &mut pool);
+            }
+            let after = ALLOC_CALLS.load(Ordering::Relaxed);
+            assert_eq!(
+                after - before,
+                0,
+                "streamed iteration allocated {} times under {backend:?}",
+                after - before
+            );
+        });
+    }
+    assert!(w.last_loss.is_finite());
+}
+
+#[test]
 fn generic_driver_adds_zero_steady_state_allocations() {
     // The policy-composed generic driver (DESIGN.md §14) must not
     // allocate more than the hand-written reference drivers once the

@@ -69,6 +69,76 @@ fn hybrid_specs_run_end_to_end_from_the_cli() {
 }
 
 #[test]
+fn bad_stream_mode_lists_the_valid_modes() {
+    let out = hermes().args(["run", "bsp@warp"]).output().unwrap();
+    assert!(!out.status.success(), "a bad stream mode must not run");
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("warp"), "{err}");
+    assert!(err.contains("unknown stream mode"), "{err}");
+    for mode in ["steady", "ramp", "burst", "trickle"] {
+        assert!(err.contains(mode), "missing stream mode '{mode}': {err}");
+    }
+}
+
+#[test]
+fn streamed_specs_run_end_to_end_from_the_cli() {
+    for spec in ["bsp@steady", "hermes+streamalloc@trickle"] {
+        let dir = tmp_out(&spec.replace(['+', '@'], "_"));
+        let out = hermes()
+            .args([
+                "run",
+                spec,
+                "--max-iters",
+                "48",
+                "--target-acc",
+                "1.1",
+                "--out",
+                dir.to_str().unwrap(),
+            ])
+            .output()
+            .unwrap();
+        let stderr = String::from_utf8_lossy(&out.stderr);
+        assert!(out.status.success(), "{spec} failed: {stderr}");
+        let stdout = String::from_utf8_lossy(&out.stdout);
+        assert!(stdout.contains(spec), "{spec} not in summary: {stdout}");
+        // The summary JSON carries the streaming counters.
+        assert!(stdout.contains("stream_arrivals"), "{spec}: {stdout}");
+        assert!(
+            dir.join(format!("run_{spec}_mock_curve.csv")).exists(),
+            "{spec}: curve CSV not written"
+        );
+    }
+}
+
+#[test]
+fn exp_stream_writes_the_sweep_csv_from_the_cli() {
+    let dir = tmp_out("exp_stream");
+    let out = hermes()
+        .args([
+            "exp",
+            "stream",
+            "--threads",
+            "2",
+            "--out",
+            dir.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(out.status.success(), "exp stream failed: {stderr}");
+    let csv = std::fs::read_to_string(dir.join("stream_mock.csv")).unwrap();
+    // Header + 2 spreads × 2 alphas × 4 frameworks.
+    assert_eq!(csv.lines().count(), 17, "{csv}");
+    assert!(csv.starts_with("framework,spread,alpha,"), "{csv}");
+    for fw in ["bsp@trickle", "bsp+streamalloc@trickle"] {
+        assert!(
+            csv.lines().any(|l| l.starts_with(&format!("{fw},"))),
+            "{fw} row missing:\n{csv}"
+        );
+    }
+}
+
+#[test]
 fn exp_scale_grid_hybrid_is_reachable_from_the_cli() {
     let dir = tmp_out("scale_hybrid");
     let out = hermes()

@@ -519,6 +519,9 @@ fn assert_same_run(
         b.recovery_time.map(f64::to_bits),
         "{tag}: recovery time"
     );
+    assert_eq!(a.stream_arrivals, b.stream_arrivals, "{tag}: stream arrivals");
+    assert_eq!(a.stream_skips, b.stream_skips, "{tag}: stream skips");
+    assert_eq!(a.stream_evictions, b.stream_evictions, "{tag}: stream evictions");
     assert_eq!(a.curve.len(), b.curve.len(), "{tag}: curve length");
     for (i, (x, y)) in a.curve.iter().zip(&b.curve).enumerate() {
         let xc = (x.0.to_bits(), x.1.to_bits(), x.2.to_bits());
@@ -672,6 +675,44 @@ fn hybrid_grid_bit_identical_across_runs_seeds_and_backends() {
             assert_same_run(&format!("{spec} seed={seed} rerun"), &a, &b);
             let c = run_with(Backend::Simd);
             assert_same_run(&format!("{spec} seed={seed} simd"), &a, &c);
+            assert!(a.iterations > 0, "{spec} seed={seed}: empty run");
+        }
+    }
+}
+
+#[test]
+fn streamed_runs_bit_identical_across_reruns_and_backends() {
+    // ISSUE 7 acceptance (DESIGN.md §16): a streamed run is a pure
+    // function of (seed, StreamPlan) — per-worker arrival curves,
+    // Dirichlet label skew, bounded-buffer eviction and data-gated
+    // scheduling all replay bit-identically across reruns and the
+    // {scalar, SIMD} kernel backends, and the whole RunMetrics record
+    // (including the stream counters) matches exactly.
+    use hermes_dml::config::RunConfig;
+    use hermes_dml::frameworks::common::run_framework;
+    use hermes_dml::runtime::MockRuntime;
+
+    for spec in ["bsp@steady", "ssp+gup@burst", "hermes+streamalloc@trickle"] {
+        for seed in [7u64, 11] {
+            let mk = || {
+                let mut cfg = RunConfig::new("mock", spec);
+                cfg.seed = seed;
+                cfg.max_iters = 48;
+                cfg.dss0 = 128;
+                cfg.target_acc = 1.1; // run the full budget
+                cfg
+            };
+            let run_with = |backend: Backend| {
+                kernels::with_backend(backend, || {
+                    run_framework(mk(), Box::new(MockRuntime::new())).unwrap()
+                })
+            };
+            let a = run_with(Backend::Scalar);
+            let b = run_with(Backend::Scalar);
+            assert_same_run(&format!("{spec} seed={seed} rerun"), &a, &b);
+            let c = run_with(Backend::Simd);
+            assert_same_run(&format!("{spec} seed={seed} simd"), &a, &c);
+            assert!(a.stream_arrivals > 0, "{spec} seed={seed}: no arrivals");
             assert!(a.iterations > 0, "{spec} seed={seed}: empty run");
         }
     }

@@ -79,6 +79,43 @@ fn churned_hybrid_specs_are_bit_identical_per_seed() {
 }
 
 #[test]
+fn streamed_runs_stay_bit_identical_under_churn() {
+    // ISSUE 7 acceptance: composing a StreamPlan with a FaultPlan keeps
+    // the whole run deterministic — arrivals, skips, evictions, churn
+    // and the training trajectory replay bit-identically per seed.
+    for fw in ["bsp@steady", "hermes+streamalloc@trickle"] {
+        let mut cfg = scaled_cfg("mock", fw);
+        cfg.max_iters = 160;
+        cfg.target_acc = 1.1;
+        cfg.faults.plan = busy_plan();
+        let a = run(cfg.clone());
+        let b = run(cfg.clone());
+        assert!(a.stream_arrivals > 0, "{fw}: stream never delivered");
+        assert!(a.fault_crashes >= 1, "{fw}: crash never applied");
+        assert!(a.iterations > 0, "{fw}: no iterations");
+        assert_eq!(a.iterations, b.iterations, "{fw}");
+        assert_eq!(a.virtual_time.to_bits(), b.virtual_time.to_bits(), "{fw}");
+        assert_eq!(a.final_loss.to_bits(), b.final_loss.to_bits(), "{fw}");
+        assert_eq!(a.final_accuracy.to_bits(), b.final_accuracy.to_bits(), "{fw}");
+        assert_eq!(a.bytes, b.bytes, "{fw}");
+        assert_eq!(a.api_calls, b.api_calls, "{fw}");
+        assert_eq!(a.curve, b.curve, "{fw}");
+        assert_eq!(a.stream_arrivals, b.stream_arrivals, "{fw}");
+        assert_eq!(a.stream_skips, b.stream_skips, "{fw}");
+        assert_eq!(a.stream_evictions, b.stream_evictions, "{fw}");
+        // A different seed reshapes the streamed run too.
+        cfg.seed = 4242;
+        let c = run(cfg);
+        assert!(
+            c.virtual_time != a.virtual_time
+                || c.iterations != a.iterations
+                || c.stream_arrivals != a.stream_arrivals,
+            "{fw}: seed had no effect on the streamed run"
+        );
+    }
+}
+
+#[test]
 fn crashed_worker_rejoins_and_keeps_iterating() {
     for fw in ["hermes", "asp", "bsp"] {
         // Fixed-length run (no convergence stop) so every framework is

@@ -38,3 +38,14 @@ echo "== chaos smoke (failure-domain sweep + live kill/restore) =="
 cargo run --quiet --release --bin hermes -- \
   exp robust --threads 2 --out results_smoke
 test -s results_smoke/robust_mock.csv
+
+# Stream smoke (DESIGN.md §16): the streaming non-IID data engine —
+# rate-spread × Dirichlet-α × framework, with the streamalloc recovery
+# contrast — end-to-end from the CLI under both kernel backends.  CI
+# uploads the resulting stream_mock.csv per backend.
+echo "== stream smoke (streaming data engine) =="
+for scalar in 0 1; do
+  HERMES_FORCE_SCALAR=$scalar cargo run --quiet --release --bin hermes -- \
+    exp stream --threads 2 --out results_smoke
+  test -s results_smoke/stream_mock.csv
+done
