@@ -3,9 +3,10 @@
 //! per-run experiment settings — with JSON round-trip and validation.
 
 use crate::data::stream::{RateCurve, StreamPlan, StreamSpec};
-use crate::faults::{CorruptKind, FaultEvent, FaultKind, FaultPlan};
+use crate::faults::{CorruptKind, FaultEvent, FaultKind, FaultPlan, NetFault};
 use crate::frameworks::policy::{AggPolicy, DataMode, FrameworkSpec};
 use crate::util::json::Json;
+use crate::util::rng::Xoshiro256pp;
 
 /// One node family from Table II of the paper.
 #[derive(Debug, Clone, PartialEq)]
@@ -468,6 +469,133 @@ impl StreamConfig {
     }
 }
 
+/// Network-chaos scenario for one run (DESIGN.md §17): seeded
+/// frame-level fault windows the chaos compiler turns into
+/// `FaultKind::Net` events on every worker's link, plus an optional
+/// seeded 2-way partition.  Like [`FaultConfig`] and [`StreamConfig`]
+/// everything defaults *off*: the empty config compiles to the empty
+/// plan, the `ChaosLink` builds disabled, and every run is bit-identical
+/// to the pre-chaos engine.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ChaosConfig {
+    /// Per-frame drop probability in [0, 0.95] (0 = off).  Dropped
+    /// frames retransmit with jittered exponential backoff.
+    pub drop: f64,
+    /// Per-frame duplicate probability in [0, 1] (0 = off).
+    pub dup: f64,
+    /// Per-frame reorder probability in [0, 1] (0 = off).
+    pub reorder: f64,
+    /// Constant extra one-way delay per frame, seconds (0 = off).
+    pub delay_s: f64,
+    /// Virtual time the chaos window opens on every link.
+    pub at: f64,
+    /// Chaos window length, seconds.
+    pub duration: f64,
+    /// Virtual time a 2-way partition starts (0 = no partition).  A
+    /// seeded half of the cluster loses PS connectivity.
+    pub partition_at: f64,
+    /// Partition length, seconds.
+    pub partition_for: f64,
+}
+
+impl Default for ChaosConfig {
+    fn default() -> Self {
+        ChaosConfig {
+            drop: 0.0,
+            dup: 0.0,
+            reorder: 0.0,
+            delay_s: 0.0,
+            at: 1.0,
+            duration: 20.0,
+            partition_at: 0.0,
+            partition_for: 2.0,
+        }
+    }
+}
+
+impl ChaosConfig {
+    pub fn is_empty(&self) -> bool {
+        self.drop <= 0.0
+            && self.dup <= 0.0
+            && self.reorder <= 0.0
+            && self.delay_s <= 0.0
+            && self.partition_at <= 0.0
+    }
+
+    /// Compile the scenario into net-fault events, one window per armed
+    /// species per worker, plus the seeded partition: `floor(n/2)`
+    /// distinct workers (max 1) drawn by partial Fisher–Yates from an
+    /// independent RNG stream — a pure function of `(seed, n_workers)`,
+    /// so reruns, backends and shard counts see the same plan.
+    pub fn build_plan(&self, n_workers: usize, seed: u64) -> FaultPlan {
+        let mut plan = FaultPlan::new();
+        if self.is_empty() || n_workers == 0 {
+            return plan;
+        }
+        for w in 0..n_workers {
+            if self.drop > 0.0 {
+                plan = plan.net_drop(w, self.at, self.drop, self.duration);
+            }
+            if self.dup > 0.0 {
+                plan = plan.net_duplicate(w, self.at, self.dup, self.duration);
+            }
+            if self.reorder > 0.0 {
+                plan = plan.net_reorder(w, self.at, self.reorder, self.duration);
+            }
+            if self.delay_s > 0.0 {
+                plan = plan.net_delay(w, self.at, self.delay_s, self.duration);
+            }
+        }
+        if self.partition_at > 0.0 {
+            let mut rng = Xoshiro256pp::stream(seed, 0xC4A1);
+            let k = (n_workers / 2).max(1);
+            let mut ids: Vec<usize> = (0..n_workers).collect();
+            for i in 0..k {
+                let j = i + rng.next_below((n_workers - i) as u64) as usize;
+                ids.swap(i, j);
+            }
+            let mut dark = ids[..k].to_vec();
+            dark.sort_unstable();
+            for w in dark {
+                plan = plan.net_partition(w, self.partition_at, self.partition_for);
+            }
+        }
+        plan
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        for (name, v) in [("drop", self.drop), ("dup", self.dup), ("reorder", self.reorder)] {
+            if !v.is_finite() || v < 0.0 {
+                return Err(format!("chaos {name} rate must be finite and ≥ 0"));
+            }
+        }
+        if self.drop > 0.95 {
+            return Err("chaos drop rate must be ≤ 0.95 (termination)".into());
+        }
+        if self.dup > 1.0 || self.reorder > 1.0 {
+            return Err("chaos dup/reorder rates must be ≤ 1".into());
+        }
+        if !(self.delay_s.is_finite() && self.delay_s >= 0.0) {
+            return Err("chaos delay_s must be finite and ≥ 0".into());
+        }
+        if !(self.at.is_finite() && self.at >= 0.0) {
+            return Err("chaos at must be finite and ≥ 0".into());
+        }
+        if !self.is_empty() && !(self.duration.is_finite() && self.duration > 0.0) {
+            return Err("chaos duration must be positive".into());
+        }
+        if !(self.partition_at.is_finite() && self.partition_at >= 0.0) {
+            return Err("chaos partition_at must be finite and ≥ 0".into());
+        }
+        if self.partition_at > 0.0
+            && !(self.partition_for.is_finite() && self.partition_for > 0.0)
+        {
+            return Err("chaos partition_for must be positive".into());
+        }
+        Ok(())
+    }
+}
+
 /// One end-to-end run of a framework over a cluster.
 #[derive(Debug, Clone, PartialEq)]
 pub struct RunConfig {
@@ -512,6 +640,9 @@ pub struct RunConfig {
     /// Streaming-data scenario — only consulted when the spec's data
     /// axis streams (`@steady @ramp @burst @trickle`, DESIGN.md §16).
     pub stream: StreamConfig,
+    /// Network-chaos scenario (frame drops/dups/reorders/delays and
+    /// partitions) — empty by default (DESIGN.md §17).
+    pub chaos: ChaosConfig,
 }
 
 impl RunConfig {
@@ -544,6 +675,7 @@ impl RunConfig {
             faults: FaultConfig::default(),
             robust: RobustConfig::default(),
             stream: StreamConfig::default(),
+            chaos: ChaosConfig::default(),
         }
     }
 
@@ -578,6 +710,7 @@ impl RunConfig {
         self.faults.validate()?;
         self.robust.validate()?;
         self.stream.validate()?;
+        self.chaos.validate()?;
         if self.framework.is_streaming() && self.stream.capacity < self.mbs0 {
             return Err(
                 "stream capacity must be ≥ mbs0 (the replay buffer must \
@@ -710,6 +843,19 @@ impl RunConfig {
                     ),
                 ]),
             ),
+            (
+                "chaos",
+                Json::obj(vec![
+                    ("drop", Json::Num(self.chaos.drop)),
+                    ("dup", Json::Num(self.chaos.dup)),
+                    ("reorder", Json::Num(self.chaos.reorder)),
+                    ("delay_s", Json::Num(self.chaos.delay_s)),
+                    ("at", Json::Num(self.chaos.at)),
+                    ("duration", Json::Num(self.chaos.duration)),
+                    ("partition_at", Json::Num(self.chaos.partition_at)),
+                    ("partition_for", Json::Num(self.chaos.partition_for)),
+                ]),
+            ),
             ("dss0", Json::Num(self.dss0 as f64)),
             ("mbs0", Json::Num(self.mbs0 as f64)),
             ("target_acc", Json::Num(self.target_acc)),
@@ -815,6 +961,27 @@ impl RunConfig {
                 stream.plan.specs.push(stream_spec_from_json(e)?);
             }
         }
+        // Optional for older configs: missing `chaos` = clean network.
+        let mut chaos = ChaosConfig::default();
+        if let Some(cj) = j.at("chaos") {
+            chaos.drop = cj.get("drop").and_then(Json::as_f64).ok_or("chaos/drop")?;
+            chaos.dup = cj.get("dup").and_then(Json::as_f64).ok_or("chaos/dup")?;
+            chaos.reorder =
+                cj.get("reorder").and_then(Json::as_f64).ok_or("chaos/reorder")?;
+            chaos.delay_s =
+                cj.get("delay_s").and_then(Json::as_f64).ok_or("chaos/delay_s")?;
+            chaos.at = cj.get("at").and_then(Json::as_f64).ok_or("chaos/at")?;
+            chaos.duration =
+                cj.get("duration").and_then(Json::as_f64).ok_or("chaos/duration")?;
+            chaos.partition_at = cj
+                .get("partition_at")
+                .and_then(Json::as_f64)
+                .ok_or("chaos/partition_at")?;
+            chaos.partition_for = cj
+                .get("partition_for")
+                .and_then(Json::as_f64)
+                .ok_or("chaos/partition_for")?;
+        }
         // Typed spec validation at parse time: a bad name fails here
         // with the full list of valid specs, not deep inside a driver.
         let framework: FrameworkSpec = s("framework")?
@@ -859,6 +1026,7 @@ impl RunConfig {
             faults,
             robust,
             stream,
+            chaos,
         };
         cfg.validate()?;
         Ok(cfg)
@@ -913,6 +1081,13 @@ fn fault_event_json(e: &FaultEvent) -> Json {
             CorruptKind::Blowup { factor } => ("corrupt_blowup", factor as f64, 0.0),
             CorruptKind::StaleReplay => ("corrupt_stale", 0.0, 0.0),
         },
+        FaultKind::Net(nf) => match nf {
+            NetFault::Drop { rate, duration } => ("net_drop", rate, duration),
+            NetFault::Duplicate { rate, duration } => ("net_dup", rate, duration),
+            NetFault::Reorder { rate, duration } => ("net_reorder", rate, duration),
+            NetFault::Delay { extra_s, duration } => ("net_delay", extra_s, duration),
+            NetFault::Partition { duration } => ("net_partition", 0.0, duration),
+        },
     };
     Json::obj(vec![
         ("kind", Json::Str(kind.to_string())),
@@ -939,6 +1114,11 @@ fn fault_event_from_json(e: &Json) -> Result<FaultEvent, String> {
             kind: CorruptKind::Blowup { factor: factor as f32 },
         },
         "corrupt_stale" => FaultKind::CorruptUpdate { kind: CorruptKind::StaleReplay },
+        "net_drop" => FaultKind::Net(NetFault::Drop { rate: factor, duration }),
+        "net_dup" => FaultKind::Net(NetFault::Duplicate { rate: factor, duration }),
+        "net_reorder" => FaultKind::Net(NetFault::Reorder { rate: factor, duration }),
+        "net_delay" => FaultKind::Net(NetFault::Delay { extra_s: factor, duration }),
+        "net_partition" => FaultKind::Net(NetFault::Partition { duration }),
         other => return Err(format!("unknown fault kind '{other}'")),
     };
     Ok(FaultEvent { at, worker, kind })
@@ -1009,10 +1189,78 @@ mod tests {
             .crash_rejoin(0, 2.0, 4.0)
             .degrade_link(3, 1.0, 2.0, 8.0)
             .k_spike(5, 3.0, 2.5, 3.0)
-            .crash(7, 10.0);
+            .crash(7, 10.0)
+            .net_drop(1, 1.0, 0.3, 5.0)
+            .net_duplicate(2, 1.0, 0.2, 5.0)
+            .net_reorder(2, 1.0, 0.1, 5.0)
+            .net_delay(4, 2.0, 0.05, 3.0)
+            .net_partition(6, 3.0, 2.0);
+        rc.chaos.drop = 0.3;
+        rc.chaos.partition_at = 4.0;
+        rc.chaos.partition_for = 1.5;
         let j = rc.to_json().to_string();
         let back = RunConfig::from_json(&Json::parse(&j).unwrap()).unwrap();
         assert_eq!(back, rc);
+    }
+
+    #[test]
+    fn chaos_config_compiles_seeded_deterministic_plan() {
+        // Default = off: empty plan, nothing scheduled.
+        let off = ChaosConfig::default();
+        assert!(off.is_empty());
+        assert!(off.build_plan(12, 42).is_empty());
+
+        // Armed: one window per species per worker + a seeded 2-way
+        // partition over floor(n/2) distinct workers.
+        let mut c = ChaosConfig::default();
+        c.drop = 0.3;
+        c.dup = 0.15;
+        c.partition_at = 3.0;
+        c.partition_for = 2.0;
+        let plan = c.build_plan(6, 42);
+        assert!(plan.has_net_chaos());
+        let parts: Vec<usize> = plan
+            .events
+            .iter()
+            .filter(|e| matches!(e.kind, FaultKind::Net(NetFault::Partition { .. })))
+            .map(|e| e.worker)
+            .collect();
+        assert_eq!(parts.len(), 3);
+        let mut uniq = parts.clone();
+        uniq.dedup();
+        assert_eq!(uniq.len(), 3, "partitioned workers must be distinct");
+        // 6 workers × 2 window species + 3 partitions.
+        assert_eq!(plan.events.len(), 15);
+        // Pure function of (seed, n): reruns replay the exact plan.
+        assert_eq!(plan, c.build_plan(6, 42));
+        plan.validate(6).unwrap();
+    }
+
+    #[test]
+    fn chaos_config_validation_bounds() {
+        let mut c = ChaosConfig::default();
+        c.drop = 0.96; // beyond the termination cap
+        assert!(c.validate().is_err());
+        c.drop = f64::NAN;
+        assert!(c.validate().is_err());
+        c = ChaosConfig::default();
+        c.dup = 1.5;
+        assert!(c.validate().is_err());
+        c = ChaosConfig::default();
+        c.drop = 0.2;
+        c.duration = 0.0;
+        assert!(c.validate().is_err());
+        c = ChaosConfig::default();
+        c.partition_at = 2.0;
+        c.partition_for = 0.0;
+        assert!(c.validate().is_err());
+        c = ChaosConfig::default();
+        c.drop = 0.3;
+        c.dup = 0.15;
+        c.reorder = 0.15;
+        c.delay_s = 0.01;
+        c.partition_at = 3.0;
+        c.validate().unwrap();
     }
 
     #[test]

@@ -26,7 +26,7 @@ use anyhow::{bail, Result};
 use crate::config::{ClusterConfig, RunConfig};
 use crate::faults::FaultPlan;
 use crate::frameworks::{policy, run_framework, PRESETS};
-use crate::live::{run_live_full, LiveOpts};
+use crate::live::{run_live_full, LiveChaos, LiveOpts, LivePartition};
 use crate::metrics::{write_file, RunMetrics, TableFmt};
 use crate::runtime::{Manifest, MockRuntime, ModelRuntime, XlaRuntime};
 use crate::util::fmt_duration;
@@ -816,6 +816,154 @@ pub fn robust_sweep(
     let rendered = table.render();
     println!("\nRobustness sweep ({model}):\n{rendered}");
     write_file(out, &format!("robust_{model}.csv"), &csv)?;
+    Ok(rows)
+}
+
+// ------------------------------------------------------------- chaos
+
+/// Network-chaos sweep (DESIGN.md §17): seeded frame-level fault
+/// profiles — 30% drop, a drop+dup+reorder mix, and the mix plus a
+/// mid-run two-way partition — over the barrier (`bsp`), elastic
+/// (`ebsp`) and gated (`hermes`) shapes, streamed to
+/// `chaos_{model}.csv` with the retransmit/ack/byte-ledger counters.
+/// A live kill-link leg — frame drop + dup + reorder plus a real
+/// partition on worker 1's TCP session, healed through the jittered
+/// reconnect path — is appended as the final `live=true` row.
+pub fn chaos_sweep(
+    out: &Path,
+    model: &str,
+    artifacts: &Path,
+    threads: usize,
+) -> Result<Vec<RunMetrics>> {
+    const PROFILES: [(&str, f64, f64, f64, f64); 4] = [
+        ("none", 0.0, 0.0, 0.0, 0.0),
+        ("drop30", 0.3, 0.0, 0.0, 0.0),
+        ("mix", 0.2, 0.15, 0.15, 0.0),
+        ("mix+part", 0.2, 0.15, 0.15, 3.0),
+    ];
+    let mut jobs = Vec::new();
+    let mut profile_of = Vec::new();
+    for fw in ["bsp", "ebsp", "hermes"] {
+        for &(name, drop, dup, reorder, part_at) in &PROFILES {
+            let mut cfg = scaled_cfg(model, fw);
+            cfg.chaos.drop = drop;
+            cfg.chaos.dup = dup;
+            cfg.chaos.reorder = reorder;
+            cfg.chaos.partition_at = part_at;
+            jobs.push(SweepJob::new(format!("{fw}+{name}"), cfg));
+            profile_of.push(name);
+        }
+    }
+    let model_s = model.to_string();
+    let arts = artifacts.to_path_buf();
+
+    let mut csv = String::from(
+        "framework,profile,live,frames_dropped,frames_retransmitted,\
+         frames_duplicated,acks_sent,chaos_bytes,iterations,virtual_time_s,\
+         final_loss,final_accuracy,converged\n",
+    );
+    let mut table = TableFmt::new(&[
+        "Config",
+        "Dropped",
+        "Retx",
+        "Dup",
+        "Acks",
+        "Iters",
+        "Conv. Acc.",
+        "Conv",
+    ]);
+    let mut rows: Vec<RunMetrics> = Vec::with_capacity(jobs.len());
+    sweep::run_sweep_streaming(
+        &jobs,
+        threads,
+        0, // auto window
+        move |_job| make_runtime(&model_s, &arts),
+        |i, r| {
+            let cfg = &jobs[i].cfg;
+            csv += &format!(
+                "{},{},false,{},{},{},{},{},{},{:.3},{:.5},{:.5},{}\n",
+                cfg.framework,
+                profile_of[i],
+                r.frames_dropped,
+                r.frames_retransmitted,
+                r.frames_duplicated,
+                r.acks_sent,
+                r.chaos_bytes,
+                r.iterations,
+                r.virtual_time,
+                r.final_loss,
+                r.final_accuracy,
+                r.converged
+            );
+            table.row(vec![
+                jobs[i].label.clone(),
+                r.frames_dropped.to_string(),
+                r.frames_retransmitted.to_string(),
+                r.frames_duplicated.to_string(),
+                r.acks_sent.to_string(),
+                r.iterations.to_string(),
+                format!("{:.2}%", r.final_accuracy * 100.0),
+                format!("{}", r.converged),
+            ]);
+            rows.push(r);
+            Ok(())
+        },
+    )?;
+
+    // Live kill-link leg: seeded frame chaos on real TCP sessions plus
+    // a hard partition on worker 1; the dropped pushes feed the
+    // retransmit loop, the RxDedup window kills the injected dups, and
+    // the partitioned worker parks then rejoins through the jittered
+    // reconnect path.
+    let mut lcfg = RunConfig::new("mock", "hermes");
+    lcfg.hp.lr = 0.5;
+    lcfg.hp.alpha = -0.9;
+    lcfg.hp.window = 8;
+    lcfg.seed = 42;
+    let opts = LiveOpts {
+        stop_after_pushes: Some(8),
+        chaos: Some(LiveChaos {
+            seed: 42,
+            drop: 0.2,
+            dup: 0.1,
+            reorder: 0.1,
+            partition: Some(LivePartition {
+                worker: 1,
+                at: Duration::from_millis(400),
+                down_for: Duration::from_millis(500),
+            }),
+        }),
+        ..Default::default()
+    };
+    let rep = run_live_full(&lcfg, 2, Duration::from_secs(10), opts)?;
+    csv += &format!(
+        "live-chaos,mix+part,true,{},{},{},{},{},{},{:.3},{:.5},{:.5},{}\n",
+        rep.frames_dropped,
+        rep.frames_retransmitted,
+        rep.frames_duplicated,
+        rep.acks_sent,
+        rep.bytes_received,
+        rep.iterations,
+        rep.wall_time_s,
+        rep.final_loss,
+        rep.final_accuracy,
+        rep.final_loss.is_finite()
+    );
+    println!(
+        "[chaos] live kill-link: {} dropped, {} retransmitted, {} dup'd, \
+         {} transport dups, {} acks, {} reconnects, digest {:016x}",
+        rep.frames_dropped,
+        rep.frames_retransmitted,
+        rep.frames_duplicated,
+        rep.transport_dups,
+        rep.acks_sent,
+        rep.reconnects,
+        rep.model_digest
+    );
+
+    let rendered = table.render();
+    println!("\nNetwork-chaos sweep ({model}):\n{rendered}");
+    write_file(out, &format!("chaos_{model}.csv"), &csv)?;
     Ok(rows)
 }
 

@@ -55,6 +55,42 @@ pub enum CorruptKind {
     StaleReplay,
 }
 
+/// Frame-level network-chaos species (ISSUE 8), applied by the
+/// `ChaosLink` to every frame a worker's link carries while the window
+/// `[at, at+duration)` is open.  All decisions are drawn from seeded
+/// per-worker RNG streams keyed by frame ordinal, never wall time, so
+/// chaosed runs stay bit-identical per seed (DESIGN.md §17).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum NetFault {
+    /// Each frame is lost with probability `rate` and retransmitted
+    /// with jittered exponential backoff (bounded attempts).
+    Drop { rate: f64, duration: f64 },
+    /// Each frame is duplicated on the wire with probability `rate`;
+    /// the receiver's sequence dedup applies it at most once.
+    Duplicate { rate: f64, duration: f64 },
+    /// Each frame is held back past its successor with probability
+    /// `rate` (delivery-order inversion).
+    Reorder { rate: f64, duration: f64 },
+    /// Every frame's delivery gains `extra_s` seconds of latency.
+    Delay { extra_s: f64, duration: f64 },
+    /// The link is fully severed for `duration` seconds; the worker is
+    /// parked and resynced from the global model on heal.
+    Partition { duration: f64 },
+}
+
+impl NetFault {
+    /// The window length the species is armed for.
+    pub fn duration(&self) -> f64 {
+        match *self {
+            NetFault::Drop { duration, .. }
+            | NetFault::Duplicate { duration, .. }
+            | NetFault::Reorder { duration, .. }
+            | NetFault::Delay { duration, .. }
+            | NetFault::Partition { duration } => duration,
+        }
+    }
+}
+
 /// What happens to a worker, declaratively.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum FaultKind {
@@ -72,6 +108,9 @@ pub enum FaultKind {
     /// The worker's *next* push after `at` carries a poisoned payload
     /// (the PS-side `UpdateGuard` is what should catch it).
     CorruptUpdate { kind: CorruptKind },
+    /// Frame-level network chaos on the worker's link over
+    /// `[at, at+duration)` (ISSUE 8).
+    Net(NetFault),
 }
 
 /// One declarative fault.
@@ -170,6 +209,46 @@ impl FaultPlan {
         self.corrupt(worker, at, CorruptKind::StaleReplay)
     }
 
+    /// Arm a network-chaos species on `worker`'s link at `at`.
+    pub fn net(mut self, worker: usize, at: f64, fault: NetFault) -> FaultPlan {
+        self.events.push(FaultEvent { at, worker, kind: FaultKind::Net(fault) });
+        self
+    }
+
+    /// Drop each of `worker`'s frames with probability `rate` over
+    /// `[at, at+duration)`.
+    pub fn net_drop(self, worker: usize, at: f64, rate: f64, duration: f64) -> FaultPlan {
+        self.net(worker, at, NetFault::Drop { rate, duration })
+    }
+
+    /// Duplicate each of `worker`'s frames with probability `rate`.
+    pub fn net_duplicate(
+        self,
+        worker: usize,
+        at: f64,
+        rate: f64,
+        duration: f64,
+    ) -> FaultPlan {
+        self.net(worker, at, NetFault::Duplicate { rate, duration })
+    }
+
+    /// Reorder (hold back) each of `worker`'s frames with probability
+    /// `rate`.
+    pub fn net_reorder(self, worker: usize, at: f64, rate: f64, duration: f64) -> FaultPlan {
+        self.net(worker, at, NetFault::Reorder { rate, duration })
+    }
+
+    /// Add `extra_s` seconds of latency to every frame on `worker`'s
+    /// link over `[at, at+duration)`.
+    pub fn net_delay(self, worker: usize, at: f64, extra_s: f64, duration: f64) -> FaultPlan {
+        self.net(worker, at, NetFault::Delay { extra_s, duration })
+    }
+
+    /// Sever `worker`'s link for `duration` seconds starting at `at`.
+    pub fn net_partition(self, worker: usize, at: f64, duration: f64) -> FaultPlan {
+        self.net(worker, at, NetFault::Partition { duration })
+    }
+
     /// Append every event of `other`.
     pub fn extend(&mut self, other: FaultPlan) {
         self.events.extend(other.events);
@@ -180,6 +259,16 @@ impl FaultPlan {
         self.events
             .iter()
             .any(|e| matches!(e.kind, FaultKind::CorruptUpdate { .. }))
+    }
+
+    /// Does this plan contain any network-chaos event?  The chaos link
+    /// stays fully inert (zero RNG draws, zero float ops, no ack
+    /// modeling) when this is false — chaos-off runs are bit-identical
+    /// to the frozen reference drivers.
+    pub fn has_net_chaos(&self) -> bool {
+        self.events
+            .iter()
+            .any(|e| matches!(e.kind, FaultKind::Net(_)))
     }
 
     /// Does this plan remove `worker` for good — a crash with no rejoin
@@ -309,6 +398,40 @@ impl FaultPlan {
                         }
                     }
                 }
+                FaultKind::Net(nf) => {
+                    if !(nf.duration().is_finite() && nf.duration() > 0.0) {
+                        return Err(format!(
+                            "net-chaos duration {} invalid",
+                            nf.duration()
+                        ));
+                    }
+                    match nf {
+                        NetFault::Drop { rate, .. } => {
+                            // A drop rate near 1 makes the bounded
+                            // retransmit loop give up on most frames;
+                            // cap it so chaosed runs still terminate.
+                            if !(rate.is_finite() && rate > 0.0 && rate <= 0.95) {
+                                return Err(format!(
+                                    "net drop rate {rate} invalid (want 0 < rate ≤ 0.95)"
+                                ));
+                            }
+                        }
+                        NetFault::Duplicate { rate, .. }
+                        | NetFault::Reorder { rate, .. } => {
+                            if !(rate.is_finite() && rate > 0.0 && rate <= 1.0) {
+                                return Err(format!(
+                                    "net chaos rate {rate} invalid (want 0 < rate ≤ 1)"
+                                ));
+                            }
+                        }
+                        NetFault::Delay { extra_s, .. } => {
+                            if !(extra_s.is_finite() && extra_s > 0.0) {
+                                return Err(format!("net delay {extra_s} invalid"));
+                            }
+                        }
+                        NetFault::Partition { .. } => {}
+                    }
+                }
                 FaultKind::Crash | FaultKind::Rejoin => {}
             }
         }
@@ -370,6 +493,10 @@ pub enum FaultAction {
     KSpikeEnd { worker: usize, factor: f64 },
     /// Arm a poisoned payload: the worker's next push is corrupted.
     Corrupt { worker: usize, kind: CorruptKind },
+    /// Arm a network-chaos species on the worker's link.
+    NetStart { worker: usize, fault: NetFault },
+    /// Disarm a network-chaos species on the worker's link.
+    NetEnd { worker: usize, fault: NetFault },
 }
 
 impl FaultAction {
@@ -381,7 +508,9 @@ impl FaultAction {
             | FaultAction::LinkDegradeEnd { worker, .. }
             | FaultAction::KSpikeStart { worker, .. }
             | FaultAction::KSpikeEnd { worker, .. }
-            | FaultAction::Corrupt { worker, .. } => worker,
+            | FaultAction::Corrupt { worker, .. }
+            | FaultAction::NetStart { worker, .. }
+            | FaultAction::NetEnd { worker, .. } => worker,
         }
     }
 }
@@ -420,6 +549,13 @@ impl FaultTimeline {
                 }
                 FaultKind::CorruptUpdate { kind } => {
                     actions.push((e.at, FaultAction::Corrupt { worker: w, kind }))
+                }
+                FaultKind::Net(fault) => {
+                    actions.push((e.at, FaultAction::NetStart { worker: w, fault }));
+                    actions.push((
+                        e.at + fault.duration(),
+                        FaultAction::NetEnd { worker: w, fault },
+                    ));
                 }
             }
         }
@@ -671,6 +807,72 @@ mod tests {
         FaultPlan::new()
             .crash_rejoin(0, 2.0, 1.0)
             .corrupt_blowup(0, 5.0, 100.0)
+            .validate(4)
+            .unwrap();
+    }
+
+    #[test]
+    fn net_chaos_events_compile_to_start_end_pairs() {
+        let plan = FaultPlan::new()
+            .net_drop(0, 2.0, 0.3, 4.0)
+            .net_duplicate(1, 1.0, 0.2, 2.0)
+            .net_reorder(2, 3.0, 0.1, 1.0)
+            .net_delay(0, 5.0, 0.5, 2.0)
+            .net_partition(3, 4.0, 2.0);
+        plan.validate(4).unwrap();
+        assert!(plan.has_net_chaos());
+        assert!(!FaultPlan::new().crash(0, 1.0).has_net_chaos());
+        let tl = FaultTimeline::from_plan(&plan);
+        assert_eq!(tl.len(), 10); // every species expands to start+end
+        let times: Vec<f64> = tl.actions.iter().map(|&(t, _)| t).collect();
+        let mut sorted = times.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(times, sorted);
+        assert_eq!(
+            tl.actions[0],
+            (
+                1.0,
+                FaultAction::NetStart {
+                    worker: 1,
+                    fault: NetFault::Duplicate { rate: 0.2, duration: 2.0 },
+                }
+            )
+        );
+        // The partition's end lands exactly at at + duration.
+        assert!(tl.actions.iter().any(|&(t, a)| t == 6.0
+            && a == FaultAction::NetEnd {
+                worker: 3,
+                fault: NetFault::Partition { duration: 2.0 },
+            }));
+    }
+
+    #[test]
+    fn validate_rejects_bad_net_chaos() {
+        // Drop rate above the termination cap.
+        assert!(FaultPlan::new().net_drop(0, 1.0, 0.99, 2.0).validate(4).is_err());
+        assert!(FaultPlan::new().net_drop(0, 1.0, 0.0, 2.0).validate(4).is_err());
+        assert!(FaultPlan::new().net_drop(0, 1.0, f64::NAN, 2.0).validate(4).is_err());
+        // Dup/reorder rates must be probabilities.
+        assert!(FaultPlan::new()
+            .net_duplicate(0, 1.0, 1.5, 2.0)
+            .validate(4)
+            .is_err());
+        assert!(FaultPlan::new().net_reorder(0, 1.0, -0.1, 2.0).validate(4).is_err());
+        // Durations and delays must be finite and positive.
+        assert!(FaultPlan::new().net_partition(0, 1.0, 0.0).validate(4).is_err());
+        assert!(FaultPlan::new()
+            .net_delay(0, 1.0, f64::INFINITY, 2.0)
+            .validate(4)
+            .is_err());
+        assert!(FaultPlan::new().net_delay(0, 1.0, 0.5, -1.0).validate(4).is_err());
+        // Worker bounds apply to net species too.
+        assert!(FaultPlan::new().net_drop(9, 1.0, 0.3, 2.0).validate(4).is_err());
+        // A legal mixed chaos plan passes.
+        FaultPlan::new()
+            .net_drop(0, 1.0, 0.3, 5.0)
+            .net_duplicate(0, 1.0, 0.2, 5.0)
+            .net_reorder(1, 1.0, 0.15, 5.0)
+            .net_partition(2, 3.0, 2.0)
             .validate(4)
             .unwrap();
     }

@@ -15,7 +15,7 @@ use crate::data::{partition_pools, DataKind, Dataset, Partition, Probe, Shard};
 use crate::faults::{CorruptKind, FaultAction, FaultDelta, FaultTimeline};
 use crate::gup::Gup;
 use crate::metrics::{RunMetrics, Segment, SegmentKind, WorkerMetrics};
-use crate::net::SimNet;
+use crate::net::{ChaosLink, SimNet};
 use crate::ps::{PsState, UpdateGuard};
 use crate::runtime::{init_params, ModelRuntime};
 use crate::sim::{Ev, SimQueue};
@@ -35,6 +35,10 @@ pub struct SimEnv {
     pub cfg: RunConfig,
     pub cluster: Cluster,
     pub net: SimNet,
+    /// Frame-level network-chaos injector wrapping `net` (DESIGN.md
+    /// §17).  Chaos-free runs construct it disabled, and every
+    /// transfer then reduces to the plain [`SimNet`] arithmetic.
+    pub chaos: ChaosLink,
     pub queue: SimQueue,
     pub ds: Dataset,
     pub probe: Probe,
@@ -171,8 +175,13 @@ impl SimEnv {
 
         // Compile the fault scenario and inject one wake-up event per
         // action, so event-driven drivers pop at every fault time.
-        let plan = cfg.faults.build_plan(n, cfg.seed);
+        // The chaos config compiles into the *same* plan/timeline as
+        // crashes and corruption — one sorted action stream, one
+        // wake-up tag per action (DESIGN.md §17).
+        let mut plan = cfg.faults.build_plan(n, cfg.seed);
+        plan.extend(cfg.chaos.build_plan(n, cfg.seed));
         plan.validate(n).map_err(|e| anyhow::anyhow!(e))?;
+        let chaos = ChaosLink::new(n, cfg.seed, plan.has_net_chaos());
         let faults = FaultTimeline::from_plan(&plan);
         // Pre-size the event heap from the worker count: drivers keep a
         // few events in flight per worker (train/arrive/prefetch
@@ -203,6 +212,7 @@ impl SimEnv {
             cfg,
             cluster,
             net,
+            chaos,
             queue,
             ds,
             probe,
@@ -267,8 +277,13 @@ impl SimEnv {
     }
 
     /// Account a worker→PS (or PS→worker) transfer; returns its delay.
+    /// Every driver byte flows through the chaos layer here, so the
+    /// chaos ledger equals the SimNet byte ledger by construction;
+    /// with chaos off (or the link clean) this is exactly
+    /// [`SimNet::transfer_bytes`] — same floats, zero RNG draws.
     pub fn transfer(&mut self, w: usize, bytes: usize) -> f64 {
-        let t = self.net.transfer_bytes(w, bytes);
+        let now = self.queue.now();
+        let t = self.chaos.transfer(&mut self.net, w, bytes, now);
         self.run.workers[w].comm_time += t;
         t
     }
@@ -292,7 +307,7 @@ impl SimEnv {
     /// on every pop; round drivers at round boundaries.
     pub fn apply_faults_up_to(&mut self, t: f64) -> FaultDelta {
         let mut delta = FaultDelta::default();
-        while let Some((_, action)) = self.faults.pop_due(t) {
+        while let Some((ta, action)) = self.faults.pop_due(t) {
             match action {
                 FaultAction::Crash { worker } => {
                     if !self.cluster.node(worker).crashed {
@@ -327,6 +342,23 @@ impl SimEnv {
                     // it when the worker next actually sends a payload.
                     self.corrupt_pending[worker] = Some(kind);
                 }
+                FaultAction::NetStart { worker, fault } => {
+                    self.chaos.start(worker, fault, ta);
+                }
+                FaultAction::NetEnd { worker, fault } => {
+                    let healed = matches!(
+                        fault,
+                        crate::faults::NetFault::Partition { .. }
+                    );
+                    self.chaos.end(worker, fault);
+                    if healed {
+                        // The partition's NetEnd is the heal instant:
+                        // resync the parked worker through the same
+                        // model-adoption path a rejoin uses (it never
+                        // crashed, so it keeps its dataset and lease).
+                        self.partition_resync(worker);
+                    }
+                }
             }
         }
         if delta.membership_changed {
@@ -343,6 +375,34 @@ impl SimEnv {
         if let Some(t) = self.faults.next_rejoin_time(ev.worker()) {
             self.queue.push_at(t.max(self.queue.now()), ev);
         }
+    }
+
+    /// Is `w` currently inside a network partition window?  Partitioned
+    /// workers keep training locally (they never crashed) but the
+    /// drivers park their PS-facing events until the heal.
+    pub fn is_partitioned(&self, w: usize) -> bool {
+        self.chaos.is_partitioned(w, self.queue.now())
+    }
+
+    /// A popped event belonging to a partitioned worker: requeue it at
+    /// the heal instant — the partition twin of
+    /// [`SimEnv::defer_to_rejoin`].  The event chain survives; the
+    /// worker resumes through [`SimEnv::partition_resync`] on heal.
+    pub fn defer_to_partition_heal(&mut self, ev: Ev) {
+        let t = self.chaos.partition_until(ev.worker());
+        self.queue.push_at(t.max(self.queue.now()), ev);
+    }
+
+    /// Resync a worker whose partition healed: ship the current global
+    /// model (accounted traffic), adopt it, restart the GUP window.
+    /// Unlike [`SimEnv::rejoin_resync`] the worker kept its dataset —
+    /// only model state can be stale.
+    fn partition_resync(&mut self, w: usize) {
+        let model_b = self.model_bytes();
+        self.transfer(w, model_b);
+        self.workers[w].adopt_global(&self.ps.params, self.ps.version);
+        self.workers[w].gup.reset_window();
+        self.workers[w].last_push_pending = false;
     }
 
     /// State resync for a rejoining worker: ship the global model and
@@ -652,6 +712,12 @@ impl SimEnv {
         self.run.api_calls = self.net.total().api_calls;
         self.run.bytes = self.net.total().bytes;
         self.run.global_updates = self.ps.updates;
+        let ct = self.chaos.total_stats();
+        self.run.frames_dropped = ct.frames_dropped;
+        self.run.frames_retransmitted = ct.frames_retransmitted;
+        self.run.frames_duplicated = ct.frames_duplicated;
+        self.run.acks_sent = ct.acks_sent;
+        self.run.chaos_bytes = ct.bytes_charged;
         self.run.crashed_workers = (0..self.cluster.len())
             .filter(|&i| self.cluster.node(i).crashed)
             .collect();
@@ -661,6 +727,10 @@ impl SimEnv {
             wm.pushes = w.gup.pushes;
             wm.bytes = self.net.worker(i).bytes;
             wm.api_calls = self.net.worker(i).api_calls;
+            let cs = self.chaos.stats(i);
+            wm.frames_dropped = cs.frames_dropped;
+            wm.frames_retransmitted = cs.frames_retransmitted;
+            wm.acks_sent = cs.acks_sent;
             if let Some(s) = w.source.stream() {
                 self.run.stream_evictions += s.evicted();
             }
@@ -884,6 +954,63 @@ mod tests {
         assert_eq!(env.queue.len(), base + 1, "event deferred to rejoin");
         env.defer_to_rejoin(Ev::TrainDone { worker: 2 });
         assert_eq!(env.queue.len(), base + 1, "no rejoin planned: swallowed");
+    }
+
+    #[test]
+    fn net_chaos_plan_arms_link_parks_and_resyncs() {
+        use crate::faults::FaultPlan;
+        let mut cfg = mock_cfg();
+        cfg.faults.plan = FaultPlan::new()
+            .net_drop(0, 1.0, 0.5, 4.0)
+            .net_partition(2, 2.0, 3.0);
+        let mut env = SimEnv::build(cfg, Box::new(MockRuntime::new())).unwrap();
+        assert!(env.chaos.enabled());
+        // Two net events compile to four timeline actions/wake-ups.
+        assert_eq!(env.queue.len(), 4);
+
+        // t=2.5: drop armed on 0, partition armed on 2.
+        env.apply_faults_up_to(2.5);
+        assert!(env.is_partitioned(2));
+        assert!(!env.is_partitioned(0));
+
+        // Partitioned worker's events park at the heal instant.
+        let base = env.queue.len();
+        env.defer_to_partition_heal(Ev::TrainDone { worker: 2 });
+        assert_eq!(env.queue.len(), base + 1);
+
+        // Chaosed transfer on worker 0 draws + acks deterministically.
+        let t1 = env.transfer(0, 10_000);
+        assert!(t1 > 0.0);
+        assert!(env.chaos.stats(0).acks_sent >= 1);
+
+        // Drain the queue the way a driver would — pop, advance the
+        // clock, apply due actions — past the t=5.0 heal.  The heal
+        // fires the partition resync: model traffic + adoption.
+        let bytes_before = env.net.total().bytes;
+        env.queue.push_at(5.5, Ev::TrainDone { worker: 0 });
+        while let Some((t, _)) = env.queue.pop() {
+            env.apply_faults_up_to(t);
+            if t >= 5.5 {
+                break;
+            }
+        }
+        assert!(!env.is_partitioned(2));
+        assert!(env.net.total().bytes > bytes_before);
+        assert!(env.workers[2].model_requests > 0);
+
+        // The chaos ledger equals the SimNet ledger: every byte —
+        // resyncs included — was charged through the chaos layer.
+        let run = env.finish();
+        assert_eq!(run.chaos_bytes, run.bytes);
+        assert_eq!(run.acks_sent, run.workers[0].acks_sent);
+    }
+
+    #[test]
+    fn chaos_free_runs_build_with_disabled_link_and_empty_queue() {
+        let env =
+            SimEnv::build(mock_cfg(), Box::new(MockRuntime::new())).unwrap();
+        assert!(!env.chaos.enabled());
+        assert_eq!(env.queue.len(), 0);
     }
 
     #[test]

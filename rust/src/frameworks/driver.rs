@@ -299,6 +299,17 @@ fn run_event(env: &mut SimEnv, spec: FrameworkSpec) -> Result<()> {
                 env.defer_to_rejoin(ev); // dead worker: chain resumes at rejoin
                 continue;
             }
+            if env.is_partitioned(ev.worker())
+                && !crate::faults::is_fault_tag(&ev)
+                && !is_stream_tag(&ev)
+            {
+                // Partitioned worker: park its chain at the heal
+                // instant (DESIGN.md §17).  The worker never crashed,
+                // so no rejoin — the heal's resync refreshes its model
+                // and the parked event resumes the chain.
+                env.defer_to_partition_heal(ev);
+                continue;
+            }
         }
         match ev {
             Ev::Tag { worker: w, tag: START } => {

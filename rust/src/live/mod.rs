@@ -32,8 +32,21 @@
 //! pass through the same [`UpdateGuard`] quarantine as the simulator's
 //! aggregation path, and [`LiveOpts::corrupt`] injects the simulator's
 //! poisoned-update species onto the real wire.
+//!
+//! **Network chaos (DESIGN.md §17):** every worker↔PS TCP stream now
+//! carries *sequenced* frames (`u32 len | u64 seq | u64 ack | body`),
+//! so the transport survives frame-level faults instead of merely
+//! observing them.  [`LiveOpts::chaos`] arms a worker-side
+//! `ChaosTx` shim that deterministically drops, duplicates, or
+//! reorders outgoing frames from a per-worker seeded stream; the PS
+//! runs an IPsec-style [`RxDedup`] sliding window so a duplicated
+//! frame is applied at most once (a duplicate `PushUpdate` is still
+//! re-acked — the worker must unblock), a dropped push surfaces as a
+//! read timeout feeding a bounded retransmit loop with jittered
+//! backoff ([`reconnect_delay`]), and a partitioned worker parks,
+//! then resyncs through the ordinary reconnect path on heal.
 
-use std::io::{BufReader, BufWriter};
+use std::io::{BufReader, BufWriter, Write};
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -49,7 +62,11 @@ use crate::gup::Gup;
 use crate::ps::{PsState, UpdateGuard};
 use crate::runtime::{init_params, MockRuntime, ModelRuntime};
 use crate::tensor::{BufferPool, ParamVec};
-use crate::wire::{read_frame_with, write_frame_with, Message, TensorPayload};
+use crate::util::rng::Xoshiro256pp;
+use crate::wire::{
+    read_frame_with, read_seq_frame_with, write_frame_with, write_seq_frame_with,
+    Message, TensorPayload, WireError, SEQ_FRAME_OVERHEAD,
+};
 use crate::worker::WorkerCore;
 
 /// Default lease timeout — overridable per run via
@@ -63,6 +80,23 @@ const SNAPSHOT_EVERY: u32 = 8;
 /// Magic prefixing the live coordinator's checkpoint sidecar (the
 /// [`PsState`] snapshot plus dedup + guard state).
 const LIVE_SNAP_MAGIC: [u8; 4] = *b"LSNP";
+
+/// Worker-side socket read timeout armed when chaos frame drop is on:
+/// a dropped push (or its lost ack) surfaces as a timeout that feeds
+/// the bounded retransmit loop instead of wedging the worker forever.
+const CHAOS_READ_TIMEOUT: Duration = Duration::from_millis(150);
+
+/// Reconnect backoff base: doubled per attempt up to
+/// [`RECONNECT_CAP_MS`], then jittered by [`reconnect_delay`].
+const RECONNECT_BASE_MS: u64 = 10;
+
+/// Reconnect backoff ceiling (milliseconds, pre-jitter).
+const RECONNECT_CAP_MS: u64 = 200;
+
+/// Most reorder-held heartbeat frames a worker buffers; past this the
+/// reorder species stops holding (frames go out in order) until the
+/// next non-reorderable frame flushes the queue.
+const MAX_HELD_FRAMES: usize = 4;
 
 /// Outcome of a live run.
 #[derive(Debug, Clone)]
@@ -85,6 +119,20 @@ pub struct LiveReport {
     pub coordinator_restarts: u64,
     /// Updates quarantined by the PS-side [`UpdateGuard`].
     pub quarantined: u64,
+    /// Outgoing frames eaten by the worker-side chaos shim.
+    pub frames_dropped: u64,
+    /// Outgoing frames the chaos shim sent twice.
+    pub frames_duplicated: u64,
+    /// Heartbeat frames the chaos shim held back past a later frame.
+    pub frames_reordered: u64,
+    /// Push frames resent after a timeout or reconnect (each resend
+    /// counted once; the PS dedup layers keep the apply at-most-once).
+    pub frames_retransmitted: u64,
+    /// Sequenced ack-carrying reply frames the PS wrote.
+    pub acks_sent: u64,
+    /// Inbound frames the PS [`RxDedup`] window rejected as transport
+    /// duplicates (injected dups and retransmit races).
+    pub transport_dups: u64,
     /// FNV-1a digest of the final global parameters — cheap cross-run
     /// parity checks (killed vs unkilled coordinator).
     pub model_digest: u64,
@@ -122,6 +170,35 @@ pub struct LiveCorrupt {
     pub kind: CorruptKind,
 }
 
+/// One live network partition: worker `worker`'s link goes dark `at`
+/// after run start for `down_for` — the worker severs its session,
+/// parks its local state, and rejoins through the reconnect path on
+/// heal (the live twin of `NetFault::Partition`).
+#[derive(Debug, Clone, Copy)]
+pub struct LivePartition {
+    pub worker: usize,
+    pub at: Duration,
+    pub down_for: Duration,
+}
+
+/// Seeded frame-level network chaos for a live run — the wire twin of
+/// the simulator's `FaultKind::Net` species.  Rates are per outgoing
+/// frame, decided from a per-worker deterministic stream
+/// (`stream(seed, 0xC4A0 ^ wid)`, the same salt family as the DES
+/// `ChaosLink`).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LiveChaos {
+    pub seed: u64,
+    /// Probability an outgoing frame is silently eaten.
+    pub drop: f64,
+    /// Probability an outgoing frame is sent twice.
+    pub dup: f64,
+    /// Probability a heartbeat frame is held back past a later frame.
+    pub reorder: f64,
+    /// Optional hard partition on one worker's link.
+    pub partition: Option<LivePartition>,
+}
+
 /// Everything beyond the basic (cfg, workers, duration) triple a live
 /// run can be asked to do.
 #[derive(Debug, Clone, Default)]
@@ -140,6 +217,231 @@ pub struct LiveOpts {
     /// Each worker exits after this many gated pushes — makes runs a
     /// deterministic function of the seed for parity tests.
     pub stop_after_pushes: Option<u64>,
+    /// Seeded frame-level network chaos (drop / dup / reorder /
+    /// partition) on the real TCP streams.
+    pub chaos: Option<LiveChaos>,
+}
+
+/// IPsec-style anti-replay window over per-connection sequence
+/// numbers: the highest seq seen plus a 64-frame bitmask of its
+/// predecessors.  `admit` returns `true` exactly once per seq — late
+/// (reordered) frames inside the window are admitted, exact
+/// duplicates and frames older than the window are rejected.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RxDedup {
+    max_seq: u64,
+    window: u64,
+}
+
+impl RxDedup {
+    /// Admit `seq` if this is the first time it has been seen.
+    pub fn admit(&mut self, seq: u64) -> bool {
+        if seq == 0 {
+            // Sequenced frames are 1-based; 0 is never valid.
+            return false;
+        }
+        if seq > self.max_seq {
+            let shift = seq - self.max_seq;
+            self.window = if shift >= 64 { 0 } else { self.window << shift };
+            self.window |= 1;
+            self.max_seq = seq;
+            return true;
+        }
+        let behind = self.max_seq - seq;
+        if behind >= 64 {
+            // Too stale to track — treat as a duplicate (safe: a frame
+            // 64 seqs behind a live connection is a replay, not loss).
+            return false;
+        }
+        let bit = 1u64 << behind;
+        if self.window & bit != 0 {
+            return false;
+        }
+        self.window |= bit;
+        true
+    }
+
+    /// Highest sequence number admitted — the cumulative ack value.
+    pub fn max_seq(&self) -> u64 {
+        self.max_seq
+    }
+}
+
+/// Jittered exponential reconnect backoff: base 10 ms doubling to a
+/// 200 ms cap, scaled by a seeded uniform draw in `[0.5, 1.0)` so a
+/// herd of workers chasing a restarted coordinator (or healing from
+/// the same partition) spreads out instead of stampeding in lockstep.
+/// Pure in `(attempt, rng)` — same seed, same delays.
+pub fn reconnect_delay(attempt: u32, rng: &mut Xoshiro256pp) -> Duration {
+    let base_ms = (RECONNECT_BASE_MS << attempt.min(5)).min(RECONNECT_CAP_MS);
+    let ms = base_ms as f64 * rng.uniform(0.5, 1.0);
+    Duration::from_micros((ms * 1000.0) as u64)
+}
+
+/// One worker-side sequenced TCP session: buffered reader/writer plus
+/// the per-connection tx sequence counter and the highest peer seq
+/// seen (attached as the cumulative ack on every outgoing frame).
+struct SeqConn {
+    rd: BufReader<TcpStream>,
+    wr: BufWriter<TcpStream>,
+    tx_seq: u64,
+    rx_max: u64,
+}
+
+impl SeqConn {
+    /// Send one sequenced frame, chaos-free.
+    fn send(&mut self, msg: &Message, enc: &mut Vec<u8>) -> Result<u64, WireError> {
+        self.tx_seq += 1;
+        write_seq_frame_with(&mut self.wr, self.tx_seq, self.rx_max, msg, enc)?;
+        Ok(self.tx_seq)
+    }
+
+    /// Send one sequenced frame through the chaos shim (if armed).
+    /// `reorderable` marks frames the reorder species may hold back
+    /// (lossy heartbeats); held frames are flushed — *after* the
+    /// current frame, so they really do arrive out of order — whenever
+    /// a non-reorderable frame goes out.
+    fn send_chaos(
+        &mut self,
+        msg: &Message,
+        enc: &mut Vec<u8>,
+        chaos: Option<&mut ChaosTx>,
+        reorderable: bool,
+    ) -> Result<u64, WireError> {
+        let cx = match chaos {
+            Some(cx) if cx.armed() => cx,
+            _ => return self.send(msg, enc),
+        };
+        self.tx_seq += 1;
+        let seq = self.tx_seq;
+        let mut frame: Vec<u8> = Vec::new();
+        write_seq_frame_with(&mut frame, seq, self.rx_max, msg, enc)?;
+        if cx.drop > 0.0 && cx.rng.uniform(0.0, 1.0) < cx.drop {
+            cx.dropped += 1;
+        } else if cx.dup > 0.0 && cx.rng.uniform(0.0, 1.0) < cx.dup {
+            cx.duplicated += 1;
+            self.wr.write_all(&frame)?;
+            self.wr.write_all(&frame)?;
+        } else if reorderable
+            && cx.reorder > 0.0
+            && cx.rng.uniform(0.0, 1.0) < cx.reorder
+            && cx.held.len() < MAX_HELD_FRAMES
+        {
+            cx.reordered += 1;
+            cx.held.push(frame);
+        } else {
+            self.wr.write_all(&frame)?;
+        }
+        if !reorderable {
+            for f in cx.held.drain(..) {
+                self.wr.write_all(&f)?;
+            }
+        }
+        self.wr.flush()?;
+        Ok(seq)
+    }
+
+    /// Read one sequenced frame, tracking the peer's highest seq.
+    fn recv(&mut self, body: &mut Vec<u8>) -> Result<(u64, u64, Message), WireError> {
+        let (seq, ack, msg) = read_seq_frame_with(&mut self.rd, body)?;
+        if seq > self.rx_max {
+            self.rx_max = seq;
+        }
+        Ok((seq, ack, msg))
+    }
+}
+
+/// Worker-side chaos shim: per-frame drop / duplicate / reorder
+/// decisions from a deterministic per-worker stream.  Only armed
+/// species draw from the rng, so a zero-rate shim is wire-inert.
+struct ChaosTx {
+    drop: f64,
+    dup: f64,
+    reorder: f64,
+    rng: Xoshiro256pp,
+    /// Fully-encoded reorder-held frames awaiting flush.
+    held: Vec<Vec<u8>>,
+    dropped: u64,
+    duplicated: u64,
+    reordered: u64,
+}
+
+impl ChaosTx {
+    fn new(chaos: &LiveChaos, wid: usize) -> ChaosTx {
+        ChaosTx {
+            drop: chaos.drop,
+            dup: chaos.dup,
+            reorder: chaos.reorder,
+            rng: Xoshiro256pp::stream(chaos.seed, 0xC4A0 ^ wid as u64),
+            held: Vec::new(),
+            dropped: 0,
+            duplicated: 0,
+            reordered: 0,
+        }
+    }
+
+    fn armed(&self) -> bool {
+        self.drop > 0.0 || self.dup > 0.0 || self.reorder > 0.0
+    }
+}
+
+/// Per-worker chaos counters a worker thread reports back on exit.
+#[derive(Debug, Clone, Copy, Default)]
+struct ChaosTally {
+    dropped: u64,
+    duplicated: u64,
+    reordered: u64,
+    retransmitted: u64,
+}
+
+/// Snapshot a worker's chaos counters for its exit report.
+fn tally_of(cx: &Option<ChaosTx>, retransmitted: u64) -> ChaosTally {
+    ChaosTally {
+        dropped: cx.as_ref().map_or(0, |c| c.dropped),
+        duplicated: cx.as_ref().map_or(0, |c| c.duplicated),
+        reordered: cx.as_ref().map_or(0, |c| c.reordered),
+        retransmitted,
+    }
+}
+
+/// What a push's ack-wait resolved to.
+enum AckReply {
+    Model { version: u64, params: ParamVec },
+    Stop,
+}
+
+/// Drain reply frames until one acks `seq` (cumulative: `ack >= seq`).
+/// Stale re-acks from duplicated or retransmitted earlier pushes are
+/// discarded here — this is what keeps the worker's view of the reply
+/// stream consistent no matter how many extra acks chaos provoked.
+fn wait_ack(
+    conn: &mut SeqConn,
+    seq: u64,
+    body: &mut Vec<u8>,
+) -> Result<AckReply, WireError> {
+    loop {
+        let (_s, ack, msg) = conn.recv(body)?;
+        match msg {
+            Message::GlobalModel { version, params } if ack >= seq => {
+                return Ok(AckReply::Model { version, params: params.params });
+            }
+            Message::GlobalModel { .. } => {} // stale re-ack: drain
+            Message::Control { stop: true } => return Ok(AckReply::Stop),
+            _ => {}
+        }
+    }
+}
+
+/// A read timeout (vs. a dead peer): the retransmit loop stays on the
+/// same connection for these instead of paying a full reconnect.
+fn is_timeout(e: &WireError) -> bool {
+    matches!(
+        e,
+        WireError::Io(io) if matches!(
+            io.kind(),
+            std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+        )
+    )
 }
 
 /// Per-worker lease at the PS.
@@ -191,6 +493,10 @@ struct PsShared {
     dedup_skips: AtomicU64,
     quarantined: AtomicU64,
     coordinator_restarts: AtomicU64,
+    /// Sequenced ack-carrying reply frames written by PS handlers.
+    acks_sent: AtomicU64,
+    /// Inbound frames rejected by a handler's [`RxDedup`] window.
+    transport_dups: AtomicU64,
     /// Set once every worker thread has exited; unblocks the acceptor.
     shutdown: AtomicBool,
     lease_timeout: Duration,
@@ -391,6 +697,8 @@ fn run_live_opts(
         dedup_skips: AtomicU64::new(0),
         quarantined: AtomicU64::new(0),
         coordinator_restarts: AtomicU64::new(0),
+        acks_sent: AtomicU64::new(0),
+        transport_dups: AtomicU64::new(0),
         shutdown: AtomicBool::new(false),
         lease_timeout,
         deadline: start + duration,
@@ -503,13 +811,16 @@ fn run_live_opts(
         let addr_cell = addr_cell.clone();
         let my_churn = opts.churn.filter(|c| c.worker == wid);
         let my_corrupt = opts.corrupt.filter(|c| c.worker == wid);
+        let my_chaos = opts.chaos;
+        let my_partition =
+            my_chaos.and_then(|c| c.partition).filter(|p| p.worker == wid);
         let stop_after = opts.stop_after_pushes;
         // Table II pacing: keep the family heterogeneity visible in
         // wall time without hour-long runs (K ms per modeled second);
         // capped so the lease sees several heartbeats per timeout.
         let k = cfg.cluster.families[wid % cfg.cluster.families.len()].k_coeff;
         let heartbeat = lease_timeout / 5;
-        joins.push(std::thread::spawn(move || -> Result<(u64, u64)> {
+        joins.push(std::thread::spawn(move || -> Result<(u64, u64, ChaosTally)> {
             let mut rt = make_rt();
             let gup = Gup::from_hp(&cfg.hp, cfg.alpha_relax);
             let mut core = WorkerCore::new(
@@ -527,19 +838,34 @@ fn run_live_opts(
             let mut enc_buf: Vec<u8> = Vec::new();
             let mut body_buf: Vec<u8> = Vec::new();
             let mut step_pool = BufferPool::new();
-            let (mut rd, mut wr, version, global) = connect_backoff(
+            // Chaos shim + per-worker seeded backoff jitter; the read
+            // timeout is armed only when frames can vanish (drop or
+            // partition), so chaos-free runs keep blocking reads.
+            let mut chaos_tx = my_chaos
+                .as_ref()
+                .map(|c| ChaosTx::new(c, wid))
+                .filter(|c| c.armed());
+            let mut jitter = Xoshiro256pp::stream(cfg.seed, 0xBACC ^ wid as u64);
+            let read_timeout = my_chaos
+                .filter(|c| c.drop > 0.0)
+                .map(|_| CHAOS_READ_TIMEOUT);
+            let (mut conn, version, global) = connect_backoff(
                 &addr_cell,
                 wid,
                 &family,
                 &mut enc_buf,
                 &mut body_buf,
                 deadline,
+                &mut jitter,
+                read_timeout,
             )?;
             core.adopt_global(&global, version);
 
             let mut churned = false;
+            let mut parted = false;
             let mut iters = 0u64;
             let mut pushes = 0u64;
+            let mut retransmits = 0u64;
             let mut prev_payload: Option<ParamVec> = None;
             'run: while Instant::now() < deadline {
                 if let Some(c) = my_churn {
@@ -550,22 +876,29 @@ fn run_live_opts(
                                 // The process dies: sockets drop, local
                                 // state is lost for the outage, then it
                                 // reconnects and resyncs.
-                                drop(rd);
-                                drop(wr);
+                                drop(conn);
                                 std::thread::sleep(c.down_for);
                                 if Instant::now() >= deadline {
-                                    return Ok((iters, pushes));
+                                    return Ok((
+                                        iters,
+                                        pushes,
+                                        tally_of(&chaos_tx, retransmits),
+                                    ));
                                 }
-                                let (nrd, nwr, version, global) = connect_backoff(
+                                let (nc, version, global) = connect_backoff(
                                     &addr_cell,
                                     wid,
                                     &family,
                                     &mut enc_buf,
                                     &mut body_buf,
                                     deadline,
+                                    &mut jitter,
+                                    read_timeout,
                                 )?;
-                                rd = nrd;
-                                wr = nwr;
+                                conn = nc;
+                                if let Some(cx) = chaos_tx.as_mut() {
+                                    cx.held.clear();
+                                }
                                 core.adopt_global(&global, version);
                                 continue;
                             }
@@ -576,6 +909,42 @@ fn run_live_opts(
                                 std::thread::sleep(c.down_for);
                             }
                         }
+                    }
+                }
+                if let Some(p) = my_partition {
+                    if !parted && start.elapsed() >= p.at {
+                        parted = true;
+                        // Link goes dark: sever the session, park the
+                        // local state intact, then rejoin through the
+                        // ordinary reconnect path on heal — lease
+                        // re-acquired, model resynced (the live twin of
+                        // `NetFault::Partition`).
+                        drop(conn);
+                        std::thread::sleep(p.down_for);
+                        if Instant::now() >= deadline {
+                            return Ok((
+                                iters,
+                                pushes,
+                                tally_of(&chaos_tx, retransmits),
+                            ));
+                        }
+                        let (nc, version, global) = connect_backoff(
+                            &addr_cell,
+                            wid,
+                            &family,
+                            &mut enc_buf,
+                            &mut body_buf,
+                            deadline,
+                            &mut jitter,
+                            read_timeout,
+                        )?;
+                        conn = nc;
+                        if let Some(cx) = chaos_tx.as_mut() {
+                            // Frames held in a dark link are lost.
+                            cx.held.clear();
+                        }
+                        core.adopt_global(&global, version);
+                        continue;
                     }
                 }
                 let t0 = Instant::now();
@@ -595,12 +964,18 @@ fn run_live_opts(
                     Duration::from_micros((k * 2000.0) as u64).min(heartbeat),
                 );
                 let train_time = t0.elapsed().as_secs_f64();
-                if write_frame_with(
-                    &mut wr,
-                    &Message::TimeReport { worker: wid as u32, iter: iters, train_time },
-                    &mut enc_buf,
-                )
-                .is_err()
+                if conn
+                    .send_chaos(
+                        &Message::TimeReport {
+                            worker: wid as u32,
+                            iter: iters,
+                            train_time,
+                        },
+                        &mut enc_buf,
+                        chaos_tx.as_mut(),
+                        true,
+                    )
+                    .is_err()
                 {
                     // Coordinator gone mid-heartbeat: rejoin with
                     // backoff.  The resync payload is *ignored* — the
@@ -614,10 +989,14 @@ fn run_live_opts(
                         &mut enc_buf,
                         &mut body_buf,
                         deadline,
+                        &mut jitter,
+                        read_timeout,
                     ) {
-                        Ok((nrd, nwr, _v, _g)) => {
-                            rd = nrd;
-                            wr = nwr;
+                        Ok((nc, _v, _g)) => {
+                            conn = nc;
+                            if let Some(cx) = chaos_tx.as_mut() {
+                                cx.held.clear();
+                            }
                         }
                         Err(_) => break,
                     }
@@ -638,35 +1017,51 @@ fn run_live_opts(
                         prev.copy_from(&g);
                     }
                     // At-most-once retry: resend the same (worker, iter)
-                    // frame until a coordinator acks it; the PS dedup
-                    // high-water mark makes retries idempotent.
+                    // payload until a coordinator ack covers its seq;
+                    // the RxDedup window kills transport duplicates and
+                    // the PS iteration high-water mark makes content
+                    // retries idempotent.
+                    let msg = Message::PushUpdate {
+                        worker: wid as u32,
+                        iter: iters,
+                        test_loss: out.test_loss,
+                        train_time,
+                        grads: TensorPayload::new(g, cfg.net.fp16_wire),
+                    };
                     let mut attempts = 0u32;
                     loop {
-                        let ack = write_frame_with(
-                            &mut wr,
-                            &Message::PushUpdate {
-                                worker: wid as u32,
-                                iter: iters,
-                                test_loss: out.test_loss,
-                                train_time,
-                                grads: TensorPayload::new(g.clone(), cfg.net.fp16_wire),
-                            },
-                            &mut enc_buf,
-                        )
-                        .and_then(|_| read_frame_with(&mut rd, &mut body_buf));
-                        match ack {
-                            Ok(Message::GlobalModel { version, params }) => {
-                                core.adopt_global(&params.params, version);
+                        let res = conn
+                            .send_chaos(
+                                &msg,
+                                &mut enc_buf,
+                                chaos_tx.as_mut(),
+                                false,
+                            )
+                            .and_then(|seq| {
+                                wait_ack(&mut conn, seq, &mut body_buf)
+                            });
+                        match res {
+                            Ok(AckReply::Model { version, params }) => {
+                                core.adopt_global(&params, version);
                                 break;
                             }
-                            Ok(Message::Control { stop: true }) => break 'run,
-                            Ok(other) => {
-                                return Err(anyhow!("unexpected reply {other:?}"))
-                            }
-                            Err(_) => {
+                            Ok(AckReply::Stop) => break 'run,
+                            Err(e) => {
                                 attempts += 1;
+                                retransmits += 1;
                                 if attempts > 50 || Instant::now() >= deadline {
                                     break 'run;
+                                }
+                                if is_timeout(&e) {
+                                    // An injected drop ate the frame (or
+                                    // its ack): jittered backoff, then
+                                    // resend on the same connection with
+                                    // a fresh seq.
+                                    std::thread::sleep(reconnect_delay(
+                                        attempts,
+                                        &mut jitter,
+                                    ));
+                                    continue;
                                 }
                                 match connect_backoff(
                                     &addr_cell,
@@ -675,12 +1070,16 @@ fn run_live_opts(
                                     &mut enc_buf,
                                     &mut body_buf,
                                     deadline,
+                                    &mut jitter,
+                                    read_timeout,
                                 ) {
-                                    Ok((nrd, nwr, _v, _g)) => {
+                                    Ok((nc, _v, _g)) => {
                                         // Keep the pre-push model: the
                                         // pending frame is resent as-is.
-                                        rd = nrd;
-                                        wr = nwr;
+                                        conn = nc;
+                                        if let Some(cx) = chaos_tx.as_mut() {
+                                            cx.held.clear();
+                                        }
                                     }
                                     Err(_) => break 'run,
                                 }
@@ -694,17 +1093,25 @@ fn run_live_opts(
                     }
                 }
             }
-            let _ = write_frame_with(&mut wr, &Message::Control { stop: true }, &mut enc_buf);
-            Ok((iters, pushes))
+            let _ = conn.send(&Message::Control { stop: true }, &mut enc_buf);
+            Ok((iters, pushes, tally_of(&chaos_tx, retransmits)))
         }));
     }
 
     let mut iterations = 0u64;
     let mut pushes = 0u64;
+    let mut frames_dropped = 0u64;
+    let mut frames_duplicated = 0u64;
+    let mut frames_reordered = 0u64;
+    let mut frames_retransmitted = 0u64;
     for j in joins {
-        let (i, p) = j.join().map_err(|_| anyhow!("worker panicked"))??;
+        let (i, p, t) = j.join().map_err(|_| anyhow!("worker panicked"))??;
         iterations += i;
         pushes += p;
+        frames_dropped += t.dropped;
+        frames_duplicated += t.duplicated;
+        frames_reordered += t.reordered;
+        frames_retransmitted += t.retransmitted;
     }
     shared.shutdown.store(true, Ordering::Relaxed);
     let _ = acceptor.join();
@@ -728,6 +1135,12 @@ fn run_live_opts(
         dedup_skips: shared.dedup_skips.load(Ordering::Relaxed),
         coordinator_restarts: shared.coordinator_restarts.load(Ordering::Relaxed),
         quarantined: shared.quarantined.load(Ordering::Relaxed),
+        frames_dropped,
+        frames_duplicated,
+        frames_reordered,
+        frames_retransmitted,
+        acks_sent: shared.acks_sent.load(Ordering::Relaxed),
+        transport_dups: shared.transport_dups.load(Ordering::Relaxed),
         model_digest: params_digest(&coord.ps.params),
     })
 }
@@ -764,33 +1177,44 @@ fn corrupt_payload(g: &mut ParamVec, kind: CorruptKind, prev: Option<&ParamVec>)
 }
 
 /// Connect + register + read the PS's `GlobalModel` state resync —
-/// used for both the first connect and every rejoin after a kill.
+/// used for both the first connect and every rejoin after a kill or a
+/// partition heal.  Each connection is a fresh sequenced session: the
+/// `Register` goes out as seq 1 and the resync reply seeds the ack
+/// state.  `read_timeout` is armed by the chaos drop species so a lost
+/// frame surfaces as a timeout rather than a wedge.
 fn connect_worker(
     addr: SocketAddr,
     wid: usize,
     family: &str,
     enc_buf: &mut Vec<u8>,
     body_buf: &mut Vec<u8>,
-) -> Result<(BufReader<TcpStream>, BufWriter<TcpStream>, u64, ParamVec)> {
+    read_timeout: Option<Duration>,
+) -> Result<(SeqConn, u64, ParamVec)> {
     let stream = TcpStream::connect(addr)?;
     stream.set_nodelay(true)?;
-    let mut rd = BufReader::new(stream.try_clone()?);
-    let mut wr = BufWriter::new(stream);
-    write_frame_with(
-        &mut wr,
+    stream.set_read_timeout(read_timeout)?;
+    let rd = BufReader::new(stream.try_clone()?);
+    let wr = BufWriter::new(stream);
+    let mut conn = SeqConn { rd, wr, tx_seq: 0, rx_max: 0 };
+    conn.send(
         &Message::Register { worker: wid as u32, family: family.to_string() },
         enc_buf,
     )?;
-    match read_frame_with(&mut rd, body_buf)? {
-        Message::GlobalModel { version, params } => Ok((rd, wr, version, params.params)),
-        other => Err(anyhow!("unexpected resync reply {other:?}")),
+    match conn.recv(body_buf)? {
+        (_s, _a, Message::GlobalModel { version, params }) => {
+            Ok((conn, version, params.params))
+        }
+        (_s, _a, other) => Err(anyhow!("unexpected resync reply {other:?}")),
     }
 }
 
-/// [`connect_worker`] with bounded exponential backoff (10 ms doubling
-/// to a 200 ms cap, ≤ 50 attempts) — the *current* coordinator address
-/// is re-read on every attempt, so workers follow the PS across a
-/// crash-restart rebind.
+/// [`connect_worker`] with bounded, seeded-jitter exponential backoff
+/// ([`reconnect_delay`]: 10 ms doubling to a 200 ms cap scaled by a
+/// per-worker uniform draw, ≤ 50 attempts) — the *current* coordinator
+/// address is re-read on every attempt, so workers follow the PS
+/// across a crash-restart rebind, and the jitter keeps a healing herd
+/// from stampeding the fresh listener in lockstep.
+#[allow(clippy::too_many_arguments)]
 fn connect_backoff(
     addr: &Arc<Mutex<SocketAddr>>,
     wid: usize,
@@ -798,20 +1222,20 @@ fn connect_backoff(
     enc_buf: &mut Vec<u8>,
     body_buf: &mut Vec<u8>,
     deadline: Instant,
-) -> Result<(BufReader<TcpStream>, BufWriter<TcpStream>, u64, ParamVec)> {
-    let mut delay = Duration::from_millis(10);
+    jitter: &mut Xoshiro256pp,
+    read_timeout: Option<Duration>,
+) -> Result<(SeqConn, u64, ParamVec)> {
     let mut last_err = anyhow!("no attempt made");
-    for _ in 0..50 {
+    for attempt in 0..50u32 {
         let a = *addr.lock().unwrap();
-        match connect_worker(a, wid, family, enc_buf, body_buf) {
+        match connect_worker(a, wid, family, enc_buf, body_buf, read_timeout) {
             Ok(conn) => return Ok(conn),
             Err(e) => last_err = e,
         }
         if Instant::now() >= deadline {
             break;
         }
-        std::thread::sleep(delay);
-        delay = (delay * 2).min(Duration::from_millis(200));
+        std::thread::sleep(reconnect_delay(attempt, jitter));
     }
     Err(anyhow!("worker {wid}: reconnect failed: {last_err}"))
 }
@@ -1111,12 +1535,26 @@ fn serve_worker(stream: TcpStream, srv: Arc<PsShared>, fp16: bool) -> Result<()>
     let mut g_scratch = ParamVec::default();
     // (worker id, lease epoch) once registered on this connection.
     let mut me: Option<(usize, u64)> = None;
+    // Per-connection transport state: the anti-replay window over
+    // inbound seqs and the outbound reply seq counter.  Every reply
+    // frame carries `rx.max_seq()` as its cumulative ack.
+    let mut rx = RxDedup::default();
+    let mut tx_seq = 0u64;
     loop {
-        let msg = match read_frame_with(&mut rd, &mut body_buf) {
-            Ok(m) => m,
+        let (seq, _ack, msg) = match read_seq_frame_with(&mut rd, &mut body_buf) {
+            Ok(t) => t,
             Err(_) => break, // peer closed (or died, or was severed)
         };
-        srv.bytes.fetch_add(msg.wire_size() as u64, Ordering::Relaxed);
+        srv.bytes.fetch_add(
+            msg.wire_size() as u64 + SEQ_FRAME_OVERHEAD as u64,
+            Ordering::Relaxed,
+        );
+        // At-most-once at the transport layer: a duplicated or replayed
+        // frame is recognized here, *before* any state changes.
+        let fresh = rx.admit(seq);
+        if !fresh {
+            srv.transport_dups.fetch_add(1, Ordering::Relaxed);
+        }
         match msg {
             Message::Register { worker, .. } => {
                 let wid = worker as usize;
@@ -1132,44 +1570,59 @@ fn serve_worker(stream: TcpStream, srv: Arc<PsShared>, fp16: bool) -> Result<()>
                 };
                 // Break (don't return) on write failure so the lease
                 // release below still runs for a peer that died mid-reply.
-                if write_frame_with(&mut wr, &reply, &mut enc_buf).is_err() {
+                tx_seq += 1;
+                if write_seq_frame_with(&mut wr, tx_seq, rx.max_seq(), &reply, &mut enc_buf)
+                    .is_err()
+                {
                     break;
                 }
+                srv.acks_sent.fetch_add(1, Ordering::Relaxed);
             }
-            Message::TimeReport { worker, .. } => {
+            Message::TimeReport { worker, .. } if fresh => {
                 srv.iterations.fetch_add(1, Ordering::Relaxed);
                 srv.lease_renew(worker as usize);
             }
+            // Duplicated heartbeats die here, silently — they carry no
+            // state and get no reply.
+            Message::TimeReport { .. } => {}
             Message::PushUpdate { worker, iter, test_loss, train_time, grads } => {
-                srv.pushes.fetch_add(1, Ordering::Relaxed);
                 srv.lease_renew(worker as usize);
                 let reply = {
                     let coord = &mut *srv.state.lock().unwrap();
-                    if apply_push(
-                        coord,
-                        &srv.probe,
-                        Some(&srv),
-                        worker as usize,
-                        iter,
-                        test_loss,
-                        train_time,
-                        &grads.params,
-                        &mut g_scratch,
-                    )
-                    .is_err()
-                    {
-                        break;
+                    if fresh {
+                        srv.pushes.fetch_add(1, Ordering::Relaxed);
+                        if apply_push(
+                            coord,
+                            &srv.probe,
+                            Some(&srv),
+                            worker as usize,
+                            iter,
+                            test_loss,
+                            train_time,
+                            &grads.params,
+                            &mut g_scratch,
+                        )
+                        .is_err()
+                        {
+                            break;
+                        }
                     }
-                    // Duplicates and quarantined pushes still get the
-                    // current model back — the worker must unblock.
+                    // Transport duplicates skip the apply but are still
+                    // re-acked; content duplicates and quarantined
+                    // pushes likewise get the current model back — the
+                    // worker must unblock.
                     Message::GlobalModel {
                         version: coord.ps.version,
                         params: TensorPayload::new(coord.ps.params.clone(), fp16),
                     }
                 };
-                if write_frame_with(&mut wr, &reply, &mut enc_buf).is_err() {
+                tx_seq += 1;
+                if write_seq_frame_with(&mut wr, tx_seq, rx.max_seq(), &reply, &mut enc_buf)
+                    .is_err()
+                {
                     break;
                 }
+                srv.acks_sent.fetch_add(1, Ordering::Relaxed);
             }
             Message::Control { stop: true } => break,
             _ => {}
@@ -1179,4 +1632,70 @@ fn serve_worker(stream: TcpStream, srv: Arc<PsShared>, fp16: bool) -> Result<()>
         srv.lease_drop(wid, epoch);
     }
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rx_dedup_admits_each_seq_once_in_and_out_of_order() {
+        let mut rx = RxDedup::default();
+        assert!(rx.admit(1));
+        assert!(!rx.admit(1)); // exact duplicate
+        assert!(rx.admit(3)); // gap: 2 still in flight
+        assert!(rx.admit(2)); // late (reordered) arrival admitted once
+        assert!(!rx.admit(2));
+        assert!(!rx.admit(3));
+        assert_eq!(rx.max_seq(), 3);
+        // A big forward jump resets the window but keeps dedup: the
+        // jump target and its in-window predecessors admit once each,
+        // anything older than 64 seqs is a replay.
+        assert!(rx.admit(100));
+        assert!(!rx.admit(100));
+        assert!(rx.admit(99));
+        assert!(!rx.admit(99));
+        assert!(!rx.admit(3));
+    }
+
+    #[test]
+    fn rx_dedup_rejects_zero_and_window_edge_exactly() {
+        let mut rx = RxDedup::default();
+        assert!(!rx.admit(0)); // seqs are 1-based
+        assert!(rx.admit(70));
+        assert!(!rx.admit(6)); // 64 behind: outside the window
+        assert!(rx.admit(7)); // 63 behind: last in-window slot
+        assert!(!rx.admit(7));
+    }
+
+    #[test]
+    fn reconnect_delay_is_jitter_bounded_and_capped() {
+        let mut rng = Xoshiro256pp::stream(9, 0xBACC);
+        for attempt in 0..12u32 {
+            let base_ms = (RECONNECT_BASE_MS << attempt.min(5)).min(RECONNECT_CAP_MS);
+            for _ in 0..64 {
+                let d = reconnect_delay(attempt, &mut rng);
+                // uniform(0.5, 1.0) scaling: [base/2, base], never above
+                // the 200 ms cap.
+                assert!(d >= Duration::from_micros(base_ms * 500), "{attempt} {d:?}");
+                assert!(d <= Duration::from_millis(base_ms), "{attempt} {d:?}");
+                assert!(d <= Duration::from_millis(RECONNECT_CAP_MS));
+            }
+        }
+    }
+
+    #[test]
+    fn reconnect_delay_is_deterministic_per_seed_and_spread_per_worker() {
+        let seq = |wid: u64| -> Vec<Duration> {
+            let mut rng = Xoshiro256pp::stream(42, 0xBACC ^ wid);
+            (0..8).map(|a| reconnect_delay(a, &mut rng)).collect()
+        };
+        // Same worker, same seed → identical backoff schedule.
+        assert_eq!(seq(0), seq(0));
+        assert_eq!(seq(3), seq(3));
+        // Different workers draw from different streams, so a healing
+        // herd spreads out instead of stampeding in lockstep.
+        assert_ne!(seq(0), seq(1));
+        assert_ne!(seq(1), seq(2));
+    }
 }

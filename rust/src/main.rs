@@ -36,7 +36,7 @@ fn usage() -> String {
      SUBCOMMANDS:\n\
        run   run one framework over the simulated 12-worker edge cluster\n\
        exp   regenerate a paper experiment: fig1 fig2 fig3 fig4 fig11\n\
-             fig12 fig13 fig14 table3 faults robust scale all\n\
+             fig12 fig13 fig14 table3 faults robust chaos scale all\n\
        live  run the real threaded TCP parameter server + workers\n\
              (worker leases, heartbeat timeouts, reconnect resync)\n\
        info  show artifacts, cluster and hyper-parameter defaults\n\n\
@@ -164,7 +164,7 @@ fn cmd_exp(args: &[String]) -> Result<(), String> {
         .pos(
             "which",
             "fig1 fig2 fig3 fig4 fig11 fig12 fig13 fig14 table3 faults robust \
-             stream scale all",
+             chaos stream scale all",
         )
         .opt("model", "mock", "mock | cnn | alexnet (compute backend)")
         .opt("artifacts", "artifacts", "artifacts directory")
@@ -204,6 +204,9 @@ fn cmd_exp(args: &[String]) -> Result<(), String> {
         .map(|_| ()),
         "robust" => {
             exp::robust_sweep(&out, model, &arts, threads).map(|_| ())
+        }
+        "chaos" => {
+            exp::chaos_sweep(&out, model, &arts, threads).map(|_| ())
         }
         "stream" => exp::stream_sweep(
             &out,

@@ -54,6 +54,14 @@ pub struct WorkerMetrics {
     pub allocations: Vec<(f64, usize, usize)>,
     /// Virtual times of gradient pushes — Fig. 4b (update gaps).
     pub push_times: Vec<f64>,
+    /// Frames the chaos layer dropped on this worker's link (each one
+    /// triggers a retransmit — DESIGN.md §17).
+    pub frames_dropped: u64,
+    /// Retransmits this worker's link performed after drops.
+    pub frames_retransmitted: u64,
+    /// Cumulative acks the receiver sent back on this worker's link
+    /// (chaosed windows only; clean links carry no ack traffic).
+    pub acks_sent: u64,
 }
 
 impl WorkerMetrics {
@@ -121,6 +129,20 @@ pub struct RunMetrics {
     /// Samples evicted from full replay buffers before being trained on
     /// (the fast-stream overflow signal).
     pub stream_evictions: u64,
+    /// Frames the network-chaos layer dropped (then retransmitted) —
+    /// zero unless the run carries a chaos plan (DESIGN.md §17).
+    pub frames_dropped: u64,
+    /// Frame retransmits after drops (equals `frames_dropped` in the
+    /// DES, where every drop retries immediately after backoff).
+    pub frames_retransmitted: u64,
+    /// Duplicate frames the chaos layer injected (receiver dedups).
+    pub frames_duplicated: u64,
+    /// Cumulative acks sent for frames delivered through chaos windows.
+    pub acks_sent: u64,
+    /// Bytes charged through the chaos layer — equals `bytes` after
+    /// any run, since every driver transfer routes through it (the
+    /// SimNet-ledger reconciliation invariant).
+    pub chaos_bytes: u64,
 }
 
 impl RunMetrics {
@@ -193,6 +215,14 @@ impl RunMetrics {
             ("stream_arrivals", Json::Num(self.stream_arrivals as f64)),
             ("stream_skips", Json::Num(self.stream_skips as f64)),
             ("stream_evictions", Json::Num(self.stream_evictions as f64)),
+            ("frames_dropped", Json::Num(self.frames_dropped as f64)),
+            (
+                "frames_retransmitted",
+                Json::Num(self.frames_retransmitted as f64),
+            ),
+            ("frames_duplicated", Json::Num(self.frames_duplicated as f64)),
+            ("acks_sent", Json::Num(self.acks_sent as f64)),
+            ("chaos_bytes", Json::Num(self.chaos_bytes as f64)),
             (
                 "crashed_workers",
                 Json::Arr(

@@ -6,8 +6,10 @@
 //! agree by construction.
 
 use crate::config::NetConfig;
+use crate::faults::NetFault;
 use crate::runtime::ModelMeta;
 use crate::tensor::ParamVec;
+use crate::util::rng::Xoshiro256pp;
 use crate::wire::{Message, TensorPayload};
 
 /// Per-worker and aggregate traffic counters.
@@ -110,6 +112,209 @@ impl SimNet {
     /// model/gradient tensors are fp16-compressed (§IV-D).
     pub fn dataset_bytes(&self, sample_bytes: usize, dss: usize) -> usize {
         18 + sample_bytes * dss
+    }
+}
+
+// ===================================================== chaos layer
+
+/// Give up after this many retransmits of one frame; the frame is then
+/// delivered anyway (the sim models a reliable link underneath, so a
+/// bounded retry never livelocks a run).
+pub const MAX_RETRANSMITS: u32 = 16;
+/// First retransmit backoff; doubles per attempt (exponent capped at 6)
+/// with multiplicative jitter in [0.5, 1.0).
+pub const RETRANSMIT_BASE_S: f64 = 0.05;
+/// Extra hold applied to a frame the link decides to reorder: the DES
+/// delivers in timestamp order, so "reordered" means "delivered late".
+pub const REORDER_HOLD_S: f64 = 0.02;
+/// Wire bytes of one cumulative ack (a small control frame; matches the
+/// control-message size the drivers already charge).
+pub const ACK_BYTES: usize = 24;
+
+/// Per-link armed chaos species.  All-zero means the link is clean and
+/// [`ChaosLink::transfer`] takes the plain passthrough path with zero
+/// RNG draws — the bit-identity hinge for chaos-off runs.
+#[derive(Debug, Clone, Copy, Default)]
+struct LinkState {
+    drop: f64,
+    dup: f64,
+    reorder: f64,
+    delay_s: f64,
+    /// Sim time at which the current partition heals (0.0 = none).
+    partition_until: f64,
+}
+
+impl LinkState {
+    fn idle(&self, now: f64) -> bool {
+        self.drop == 0.0
+            && self.dup == 0.0
+            && self.reorder == 0.0
+            && self.delay_s == 0.0
+            && now >= self.partition_until
+    }
+}
+
+/// Frame-level chaos counters, per worker and aggregate.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ChaosStats {
+    pub frames_sent: u64,
+    pub frames_dropped: u64,
+    pub frames_retransmitted: u64,
+    pub frames_duplicated: u64,
+    pub acks_sent: u64,
+    /// Every byte this link charged to the [`SimNet`] ledger (original
+    /// sends, retransmits, duplicates, acks).  Routing all transfers
+    /// through the chaos layer makes this equal `SimNet::total().bytes`
+    /// by construction — asserted after chaosed runs.
+    pub bytes_charged: u64,
+}
+
+/// Deterministic frame-level fault injector wrapping [`SimNet`].
+///
+/// Chaos decisions are drawn from one seeded RNG stream per worker
+/// (salt `0xC4A0 ^ w`), keyed only by that worker's frame ordinal —
+/// never by wall order across workers — so runs are bit-identical per
+/// seed across reruns, scalar/SIMD backends, and shard counts, the
+/// same discipline as `FaultPlan` and `StreamPlan`.  Species arm and
+/// disarm via the compiled `FaultTimeline`'s `NetStart`/`NetEnd`
+/// actions; only armed species consume draws, so chaos-off windows
+/// stay bit-identical to chaos-off runs.
+#[derive(Debug, Clone)]
+pub struct ChaosLink {
+    enabled: bool,
+    links: Vec<LinkState>,
+    rngs: Vec<Xoshiro256pp>,
+    per_worker: Vec<ChaosStats>,
+    total: ChaosStats,
+}
+
+impl ChaosLink {
+    pub fn new(n_workers: usize, seed: u64, enabled: bool) -> ChaosLink {
+        ChaosLink {
+            enabled,
+            links: vec![LinkState::default(); n_workers],
+            rngs: (0..n_workers)
+                .map(|w| Xoshiro256pp::stream(seed, 0xC4A0 ^ w as u64))
+                .collect(),
+            per_worker: vec![ChaosStats::default(); n_workers],
+            total: ChaosStats::default(),
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Arm `fault` on `worker`'s link at sim time `at` (a `NetStart`).
+    pub fn start(&mut self, worker: usize, fault: NetFault, at: f64) {
+        let link = &mut self.links[worker];
+        match fault {
+            NetFault::Drop { rate, .. } => link.drop = rate,
+            NetFault::Duplicate { rate, .. } => link.dup = rate,
+            NetFault::Reorder { rate, .. } => link.reorder = rate,
+            NetFault::Delay { extra_s, .. } => link.delay_s = extra_s,
+            NetFault::Partition { duration } => {
+                link.partition_until = link.partition_until.max(at + duration);
+            }
+        }
+    }
+
+    /// Disarm `fault` on `worker`'s link (a `NetEnd`).  Partitions end
+    /// by the clock (`partition_until`), so their end is a no-op here —
+    /// overlapping partitions extend rather than truncate each other.
+    pub fn end(&mut self, worker: usize, fault: NetFault) {
+        let link = &mut self.links[worker];
+        match fault {
+            NetFault::Drop { .. } => link.drop = 0.0,
+            NetFault::Duplicate { .. } => link.dup = 0.0,
+            NetFault::Reorder { .. } => link.reorder = 0.0,
+            NetFault::Delay { .. } => link.delay_s = 0.0,
+            NetFault::Partition { .. } => {}
+        }
+    }
+
+    pub fn is_partitioned(&self, worker: usize, now: f64) -> bool {
+        now < self.links[worker].partition_until
+    }
+
+    pub fn partition_until(&self, worker: usize) -> f64 {
+        self.links[worker].partition_until
+    }
+
+    pub fn stats(&self, worker: usize) -> &ChaosStats {
+        &self.per_worker[worker]
+    }
+
+    pub fn total_stats(&self) -> &ChaosStats {
+        &self.total
+    }
+
+    fn charge(&mut self, net: &mut SimNet, worker: usize, bytes: usize) -> f64 {
+        self.per_worker[worker].bytes_charged += bytes as u64;
+        self.total.bytes_charged += bytes as u64;
+        net.transfer_bytes(worker, bytes)
+    }
+
+    /// Account one frame of `bytes` to/from `worker` at sim time `now`,
+    /// applying whatever chaos species are armed; returns the total
+    /// time until the frame is delivered *and acknowledged*.
+    ///
+    /// Clean links (chaos disabled, or no species armed on this worker
+    /// right now) reduce exactly to [`SimNet::transfer_bytes`]: same
+    /// float arithmetic, zero RNG draws, no ack traffic.
+    pub fn transfer(&mut self, net: &mut SimNet, worker: usize, bytes: usize, now: f64) -> f64 {
+        self.per_worker[worker].frames_sent += 1;
+        self.total.frames_sent += 1;
+        if !self.enabled || self.links[worker].idle(now) {
+            return self.charge(net, worker, bytes);
+        }
+        let link = self.links[worker];
+        let mut t = 0.0;
+        // A frame sent into a partition parks until the heal instant,
+        // then goes out on the first usable link slot.
+        if now < link.partition_until {
+            t += link.partition_until - now;
+        }
+        // Original send.
+        t += self.charge(net, worker, bytes);
+        // Drop → bounded retransmit with jittered exponential backoff.
+        if link.drop > 0.0 {
+            let mut attempt = 0u32;
+            while attempt < MAX_RETRANSMITS {
+                if self.rngs[worker].uniform(0.0, 1.0) >= link.drop {
+                    break; // this attempt got through
+                }
+                self.per_worker[worker].frames_dropped += 1;
+                self.total.frames_dropped += 1;
+                self.per_worker[worker].frames_retransmitted += 1;
+                self.total.frames_retransmitted += 1;
+                let backoff = RETRANSMIT_BASE_S
+                    * (1u64 << attempt.min(6)) as f64
+                    * self.rngs[worker].uniform(0.5, 1.0);
+                t += backoff;
+                t += self.charge(net, worker, bytes);
+                attempt += 1;
+            }
+        }
+        // Duplicate: the copy burns link serialization time and bytes;
+        // the receiver's dedup high-water mark discards it.
+        if link.dup > 0.0 && self.rngs[worker].uniform(0.0, 1.0) < link.dup {
+            self.per_worker[worker].frames_duplicated += 1;
+            self.total.frames_duplicated += 1;
+            t += self.charge(net, worker, bytes);
+        }
+        // Reorder: DES events deliver in timestamp order, so a
+        // "reordered" frame is simply held for a deterministic beat.
+        if link.reorder > 0.0 && self.rngs[worker].uniform(0.0, 1.0) < link.reorder {
+            t += REORDER_HOLD_S;
+        }
+        t += link.delay_s;
+        // Cumulative ack for the delivered frame (chaosed windows only;
+        // clean links never pay ack traffic, preserving bit-identity).
+        self.per_worker[worker].acks_sent += 1;
+        self.total.acks_sent += 1;
+        t += self.charge(net, worker, ACK_BYTES);
+        t
     }
 }
 
@@ -273,6 +478,145 @@ mod tests {
         assert!((restored - healthy).abs() < 1e-15, "{restored} vs {healthy}");
         // The untouched worker never saw a penalty.
         assert_eq!(net.link_penalty(1), 1.0);
+    }
+
+    #[test]
+    fn chaos_idle_link_is_bit_identical_passthrough() {
+        // Chaos enabled but no species armed: every transfer must be
+        // the exact same float arithmetic as the plain SimNet path,
+        // with zero drops/dups/acks charged.
+        let mut plain = SimNet::new(NetConfig::default(), 3);
+        let mut net = SimNet::new(NetConfig::default(), 3);
+        let mut chaos = ChaosLink::new(3, 42, true);
+        for i in 0..40usize {
+            let w = i % 3;
+            let bytes = 100 + 13 * i;
+            let t_plain = plain.transfer_bytes(w, bytes);
+            let t_chaos = chaos.transfer(&mut net, w, bytes, i as f64 * 0.1);
+            assert_eq!(t_plain.to_bits(), t_chaos.to_bits(), "frame {i}");
+        }
+        assert_eq!(net.total().bytes, plain.total().bytes);
+        assert_eq!(chaos.total_stats().bytes_charged, net.total().bytes);
+        assert_eq!(chaos.total_stats().frames_sent, 40);
+        assert_eq!(chaos.total_stats().frames_dropped, 0);
+        assert_eq!(chaos.total_stats().frames_retransmitted, 0);
+        assert_eq!(chaos.total_stats().frames_duplicated, 0);
+        assert_eq!(chaos.total_stats().acks_sent, 0);
+    }
+
+    #[test]
+    fn chaos_decisions_deterministic_per_seed() {
+        let run = |seed: u64| -> (Vec<u64>, u64, u64) {
+            let mut net = SimNet::new(NetConfig::default(), 2);
+            let mut chaos = ChaosLink::new(2, seed, true);
+            chaos.start(0, NetFault::Drop { rate: 0.5, duration: 100.0 }, 0.0);
+            chaos.start(0, NetFault::Duplicate { rate: 0.3, duration: 100.0 }, 0.0);
+            chaos.start(0, NetFault::Reorder { rate: 0.3, duration: 100.0 }, 0.0);
+            let mut times = Vec::new();
+            for i in 0..60usize {
+                let t = chaos.transfer(&mut net, 0, 500, i as f64 * 0.05);
+                times.push(t.to_bits());
+            }
+            (
+                times,
+                chaos.total_stats().frames_dropped,
+                chaos.total_stats().frames_duplicated,
+            )
+        };
+        let a = run(7);
+        let b = run(7);
+        assert_eq!(a, b, "same seed must replay bit-identically");
+        // With 60 frames at 50% drop / 30% dup, some chaos must fire.
+        assert!(a.1 > 0, "no drops at 50% over 60 frames");
+        assert!(a.2 > 0, "no dups at 30% over 60 frames");
+        let c = run(8);
+        assert_ne!(a.0, c.0, "different seeds should diverge");
+    }
+
+    #[test]
+    fn chaos_ledger_matches_simnet_bytes_and_worker_sums() {
+        let mut net = SimNet::new(NetConfig::default(), 3);
+        let mut chaos = ChaosLink::new(3, 11, true);
+        chaos.start(1, NetFault::Drop { rate: 0.4, duration: 100.0 }, 0.0);
+        chaos.start(2, NetFault::Duplicate { rate: 0.5, duration: 100.0 }, 0.0);
+        chaos.start(2, NetFault::Delay { extra_s: 0.01, duration: 100.0 }, 0.0);
+        for i in 0..90usize {
+            chaos.transfer(&mut net, i % 3, 200 + i, i as f64 * 0.02);
+        }
+        // Every byte SimNet saw was charged through the chaos layer.
+        assert_eq!(chaos.total_stats().bytes_charged, net.total().bytes);
+        // Per-worker counters sum to the aggregate.
+        let (mut sent, mut dropped, mut retx, mut dup, mut acks, mut bytes) =
+            (0u64, 0u64, 0u64, 0u64, 0u64, 0u64);
+        for w in 0..3 {
+            let s = chaos.stats(w);
+            sent += s.frames_sent;
+            dropped += s.frames_dropped;
+            retx += s.frames_retransmitted;
+            dup += s.frames_duplicated;
+            acks += s.acks_sent;
+            bytes += s.bytes_charged;
+        }
+        let t = chaos.total_stats();
+        assert_eq!(sent, t.frames_sent);
+        assert_eq!(dropped, t.frames_dropped);
+        assert_eq!(retx, t.frames_retransmitted);
+        assert_eq!(dup, t.frames_duplicated);
+        assert_eq!(acks, t.acks_sent);
+        assert_eq!(bytes, t.bytes_charged);
+        // Worker 0 is clean: no chaos traffic, no acks.
+        assert_eq!(chaos.stats(0).acks_sent, 0);
+        assert_eq!(chaos.stats(0).frames_dropped, 0);
+        // In the sim every drop triggers exactly one retransmit.
+        assert_eq!(t.frames_dropped, t.frames_retransmitted);
+        assert!(t.frames_dropped > 0);
+        assert!(t.frames_duplicated > 0);
+    }
+
+    #[test]
+    fn partition_parks_frames_until_heal_and_disarm_restores_passthrough() {
+        let cfg = NetConfig { latency_s: 0.01, bandwidth_bps: 1000.0, fp16_wire: false };
+        let mut net = SimNet::new(cfg.clone(), 2);
+        let mut chaos = ChaosLink::new(2, 5, true);
+        chaos.start(0, NetFault::Partition { duration: 2.0 }, 1.0);
+        assert!(chaos.is_partitioned(0, 1.5));
+        assert!(!chaos.is_partitioned(0, 3.0));
+        assert!(!chaos.is_partitioned(1, 1.5));
+        assert_eq!(chaos.partition_until(0), 3.0);
+        // A frame sent mid-partition waits for the heal instant plus
+        // the normal transfer time plus the ack.
+        let t = chaos.transfer(&mut net, 0, 500, 1.5);
+        let base = 0.01 + 0.5;
+        let ack = 0.01 + ACK_BYTES as f64 / 1000.0;
+        assert!((t - (1.5 + base + ack)).abs() < 1e-12, "{t}");
+        // Overlapping partition extends, never truncates.
+        chaos.start(0, NetFault::Partition { duration: 0.5 }, 1.2);
+        assert_eq!(chaos.partition_until(0), 3.0);
+        chaos.start(0, NetFault::Partition { duration: 9.0 }, 1.2);
+        assert_eq!(chaos.partition_until(0), 10.2);
+        // After every species disarms and the partition heals, the
+        // link is bit-identical passthrough again.
+        chaos.end(0, NetFault::Partition { duration: 9.0 });
+        let mut plain = SimNet::new(cfg, 2);
+        let t_plain = plain.transfer_bytes(0, 321);
+        let t_chaos = chaos.transfer(&mut net, 0, 321, 11.0);
+        assert_eq!(t_plain.to_bits(), t_chaos.to_bits());
+    }
+
+    #[test]
+    fn chaos_disabled_never_draws_or_acks() {
+        let mut net = SimNet::new(NetConfig::default(), 2);
+        let mut chaos = ChaosLink::new(2, 3, false);
+        // Arming species on a disabled link is inert.
+        chaos.start(0, NetFault::Drop { rate: 0.9, duration: 100.0 }, 0.0);
+        let mut plain = SimNet::new(NetConfig::default(), 2);
+        for i in 0..20usize {
+            let a = plain.transfer_bytes(0, 400);
+            let b = chaos.transfer(&mut net, 0, 400, i as f64);
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(chaos.total_stats().acks_sent, 0);
+        assert_eq!(chaos.total_stats().frames_dropped, 0);
     }
 
     #[test]

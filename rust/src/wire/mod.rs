@@ -435,6 +435,44 @@ pub fn read_frame<R: std::io::Read>(r: &mut R) -> Result<Message, WireError> {
 /// so long-lived connections don't pin peak-frame memory.
 const MAX_RETAINED_FRAME_BUF: usize = 16 << 20;
 
+/// Hard cap on a declared frame length.  A corrupted or adversarial
+/// length header beyond this errors immediately instead of driving the
+/// reader toward a multi-gigabyte allocation.
+pub const MAX_FRAME_BYTES: usize = 256 << 20;
+
+/// Fill `scratch[..n]` from `r` in bounded steps, growing the buffer
+/// only as bytes actually arrive.  A header that *lies* about its
+/// length (declares 200 MB, carries 50 bytes) fails at EOF having
+/// allocated at most one chunk beyond the real payload — the second
+/// half of the oversize defense next to [`MAX_FRAME_BYTES`].
+fn read_body_into<R: std::io::Read>(
+    r: &mut R,
+    scratch: &mut Vec<u8>,
+    n: usize,
+) -> Result<(), WireError> {
+    const CHUNK: usize = 1 << 20;
+    let mut filled = 0usize;
+    while filled < n {
+        let step = (n - filled).min(CHUNK);
+        // Grow-only: read_exact overwrites the prefix anyway, so never
+        // pay a zero-fill memset for bytes about to be replaced.
+        if scratch.len() < filled + step {
+            scratch.resize(filled + step, 0);
+        }
+        r.read_exact(&mut scratch[filled..filled + step])?;
+        filled += step;
+    }
+    Ok(())
+}
+
+/// Trim a one-off oversized body buffer back to the retained cap.
+fn trim_retained(scratch: &mut Vec<u8>) {
+    if scratch.capacity() > MAX_RETAINED_FRAME_BUF {
+        scratch.truncate(MAX_RETAINED_FRAME_BUF);
+        scratch.shrink_to(MAX_RETAINED_FRAME_BUF);
+    }
+}
+
 /// Read one length-prefixed frame into a reusable body buffer.
 pub fn read_frame_with<R: std::io::Read>(
     r: &mut R,
@@ -443,21 +481,71 @@ pub fn read_frame_with<R: std::io::Read>(
     let mut len = [0u8; 4];
     r.read_exact(&mut len)?;
     let n = u32::from_le_bytes(len) as usize;
-    if n > 1 << 30 {
+    if n > MAX_FRAME_BYTES {
         return Err(WireError::Malformed("frame too large"));
     }
-    // Grow-only: read_exact overwrites the prefix anyway, so never pay
-    // a zero-fill memset for bytes about to be replaced.
-    if scratch.len() < n {
-        scratch.resize(n, 0);
-    }
-    r.read_exact(&mut scratch[..n])?;
+    read_body_into(r, scratch, n)?;
     let msg = Message::decode(&scratch[..n]);
-    if scratch.capacity() > MAX_RETAINED_FRAME_BUF {
-        scratch.truncate(MAX_RETAINED_FRAME_BUF);
-        scratch.shrink_to(MAX_RETAINED_FRAME_BUF);
-    }
+    trim_retained(scratch);
     msg
+}
+
+// ---------------------------------------------- sequenced transport
+
+/// Bytes the seq/ack header adds to a sequenced frame's declared
+/// length: `u64 seq` + `u64 ack`, both little-endian, placed between
+/// the `u32` length prefix and the message body.
+pub const SEQ_FRAME_OVERHEAD: usize = 16;
+
+/// Write one sequenced frame: `u32 len | u64 seq | u64 ack | body`,
+/// where `len` covers the seq/ack header plus the body.  `seq` numbers
+/// this frame on its connection (1-based, strictly increasing); `ack`
+/// is cumulative — the highest contiguous `seq` received from the
+/// peer.  The live transport sends these on every TCP stream so drops,
+/// duplicates and reorders injected by the chaos layer are detectable
+/// and survivable (DESIGN.md §17).
+pub fn write_seq_frame_with<W: std::io::Write>(
+    w: &mut W,
+    seq: u64,
+    ack: u64,
+    msg: &Message,
+    scratch: &mut Vec<u8>,
+) -> Result<(), WireError> {
+    msg.encode_into(scratch);
+    let n = (scratch.len() + SEQ_FRAME_OVERHEAD) as u32;
+    w.write_all(&n.to_le_bytes())?;
+    w.write_all(&seq.to_le_bytes())?;
+    w.write_all(&ack.to_le_bytes())?;
+    w.write_all(scratch)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read one sequenced frame; returns `(seq, ack, message)`.  Applies
+/// the same [`MAX_FRAME_BYTES`] bound and chunked body fill as
+/// [`read_frame_with`].
+pub fn read_seq_frame_with<R: std::io::Read>(
+    r: &mut R,
+    scratch: &mut Vec<u8>,
+) -> Result<(u64, u64, Message), WireError> {
+    let mut len = [0u8; 4];
+    r.read_exact(&mut len)?;
+    let n = u32::from_le_bytes(len) as usize;
+    if n > MAX_FRAME_BYTES {
+        return Err(WireError::Malformed("frame too large"));
+    }
+    if n < SEQ_FRAME_OVERHEAD {
+        return Err(WireError::Malformed("sequenced frame too short"));
+    }
+    let mut hdr = [0u8; SEQ_FRAME_OVERHEAD];
+    r.read_exact(&mut hdr)?;
+    let seq = u64::from_le_bytes(hdr[..8].try_into().unwrap());
+    let ack = u64::from_le_bytes(hdr[8..].try_into().unwrap());
+    let body = n - SEQ_FRAME_OVERHEAD;
+    read_body_into(r, scratch, body)?;
+    let msg = Message::decode(&scratch[..body]);
+    trim_retained(scratch);
+    msg.map(|m| (seq, ack, m))
 }
 
 #[cfg(test)]
@@ -679,6 +767,96 @@ mod tests {
         for msg in all_messages() {
             let got = read_frame_with(&mut cursor, &mut body).unwrap();
             assert_eq!(std::mem::discriminant(&msg), std::mem::discriminant(&got));
+        }
+    }
+
+    #[test]
+    fn oversized_length_headers_error_without_huge_allocation() {
+        // Declared length beyond the hard cap: rejected before any
+        // body read, on both the plain and the sequenced reader.
+        let mut over = Vec::new();
+        over.extend_from_slice(&((MAX_FRAME_BYTES as u32) + 1).to_le_bytes());
+        over.extend_from_slice(&[0u8; 64]);
+        let mut scratch = Vec::new();
+        let mut cur = std::io::Cursor::new(over.clone());
+        assert!(matches!(
+            read_frame_with(&mut cur, &mut scratch),
+            Err(WireError::Malformed("frame too large"))
+        ));
+        let mut cur = std::io::Cursor::new(over);
+        assert!(matches!(
+            read_seq_frame_with(&mut cur, &mut scratch),
+            Err(WireError::Malformed("frame too large"))
+        ));
+
+        // A header that lies *within* the cap (declares 32 MB, carries
+        // 50 bytes) fails at EOF with the scratch buffer grown at most
+        // one ~1 MB chunk — never the declared 32 MB.
+        let mut lying = Vec::new();
+        lying.extend_from_slice(&(32u32 << 20).to_le_bytes());
+        lying.extend_from_slice(&[7u8; 50]);
+        let mut scratch = Vec::new();
+        let mut cur = std::io::Cursor::new(lying);
+        assert!(matches!(
+            read_frame_with(&mut cur, &mut scratch),
+            Err(WireError::Io(_))
+        ));
+        assert!(scratch.capacity() <= 2 << 20, "{}", scratch.capacity());
+    }
+
+    #[test]
+    fn seq_frames_roundtrip_and_carry_seq_ack() {
+        let mut buf = Vec::new();
+        let mut scratch = Vec::new();
+        for (i, msg) in all_messages().into_iter().enumerate() {
+            write_seq_frame_with(&mut buf, i as u64 + 1, i as u64, &msg, &mut scratch)
+                .unwrap();
+        }
+        let mut cur = std::io::Cursor::new(buf);
+        let mut body = Vec::new();
+        for (i, msg) in all_messages().into_iter().enumerate() {
+            let (seq, ack, got) = read_seq_frame_with(&mut cur, &mut body).unwrap();
+            assert_eq!(seq, i as u64 + 1);
+            assert_eq!(ack, i as u64);
+            assert_eq!(std::mem::discriminant(&msg), std::mem::discriminant(&got));
+        }
+    }
+
+    #[test]
+    fn sequenced_frame_shorter_than_its_header_errors() {
+        // len = 8 < SEQ_FRAME_OVERHEAD: not even room for seq + ack.
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&8u32.to_le_bytes());
+        buf.extend_from_slice(&[0u8; 8]);
+        let mut scratch = Vec::new();
+        let mut cur = std::io::Cursor::new(buf);
+        assert!(matches!(
+            read_seq_frame_with(&mut cur, &mut scratch),
+            Err(WireError::Malformed("sequenced frame too short"))
+        ));
+    }
+
+    #[test]
+    fn fuzzed_garbage_seq_frames_error_instead_of_panicking() {
+        // Same discipline as the message-level fuzz: byte salad through
+        // the framed readers must return Err, never panic or blow up an
+        // allocation.  Lengths are drawn small enough that a "valid"
+        // declared length can exceed the available bytes (Io error) or
+        // decode garbage (Malformed/UnknownTag) — both fine.
+        use crate::util::rng::Xoshiro256pp;
+        let mut rng = Xoshiro256pp::seed_from_u64(0xF423);
+        let mut frame = Vec::new();
+        let mut scratch = Vec::new();
+        for _ in 0..2000 {
+            let len = rng.next_below(160) as usize;
+            frame.clear();
+            for _ in 0..len {
+                frame.push((rng.next_u64() & 0xFF) as u8);
+            }
+            let mut cur = std::io::Cursor::new(frame.clone());
+            let _ = read_frame_with(&mut cur, &mut scratch);
+            let mut cur = std::io::Cursor::new(frame.clone());
+            let _ = read_seq_frame_with(&mut cur, &mut scratch);
         }
     }
 

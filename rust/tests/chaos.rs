@@ -1,0 +1,225 @@
+//! Network-chaos acceptance tests (DESIGN.md §17): seeded frame-level
+//! drop/dup/reorder/partition injection must be *survivable* — every
+//! preset still terminates with finite loss — and *deterministic* —
+//! chaosed runs are bit-identical per seed across reruns, the
+//! {scalar, SIMD} kernel backends and shard counts, while chaos-off
+//! runs remain bit-identical to the frozen reference drivers.
+
+use hermes_dml::config::RunConfig;
+use hermes_dml::frameworks::{run_framework, run_reference, PRESETS};
+use hermes_dml::metrics::RunMetrics;
+use hermes_dml::runtime::MockRuntime;
+use hermes_dml::tensor::kernels::{self, Backend};
+use hermes_dml::tensor::shards;
+
+/// Bitwise RunMetrics comparison over everything deterministic
+/// (excludes `sim_wall_time`), including the chaos transport counters.
+fn assert_same_run(tag: &str, a: &RunMetrics, b: &RunMetrics) {
+    assert_eq!(a.iterations, b.iterations, "{tag}: iterations");
+    assert_eq!(
+        a.virtual_time.to_bits(),
+        b.virtual_time.to_bits(),
+        "{tag}: virtual time"
+    );
+    assert_eq!(
+        a.final_accuracy.to_bits(),
+        b.final_accuracy.to_bits(),
+        "{tag}: accuracy"
+    );
+    assert_eq!(a.final_loss.to_bits(), b.final_loss.to_bits(), "{tag}: loss");
+    assert_eq!(a.converged, b.converged, "{tag}: converged");
+    assert_eq!(a.bytes, b.bytes, "{tag}: bytes");
+    assert_eq!(a.api_calls, b.api_calls, "{tag}: api calls");
+    assert_eq!(a.global_updates, b.global_updates, "{tag}: updates");
+    assert_eq!(a.frames_dropped, b.frames_dropped, "{tag}: dropped");
+    assert_eq!(
+        a.frames_retransmitted,
+        b.frames_retransmitted,
+        "{tag}: retransmitted"
+    );
+    assert_eq!(a.frames_duplicated, b.frames_duplicated, "{tag}: duplicated");
+    assert_eq!(a.acks_sent, b.acks_sent, "{tag}: acks");
+    assert_eq!(a.chaos_bytes, b.chaos_bytes, "{tag}: chaos bytes");
+    assert_eq!(a.curve.len(), b.curve.len(), "{tag}: curve length");
+    for (i, (x, y)) in a.curve.iter().zip(&b.curve).enumerate() {
+        let xc = (x.0.to_bits(), x.1.to_bits(), x.2.to_bits());
+        let yc = (y.0.to_bits(), y.1.to_bits(), y.2.to_bits());
+        assert_eq!(xc, yc, "{tag}: curve point {i}");
+    }
+    assert_eq!(a.workers.len(), b.workers.len(), "{tag}: worker count");
+    for (i, (x, y)) in a.workers.iter().zip(&b.workers).enumerate() {
+        let wtag = format!("{tag} worker {i}");
+        assert_eq!(x.iterations, y.iterations, "{wtag}: iterations");
+        assert_eq!(x.pushes, y.pushes, "{wtag}: pushes");
+        assert_eq!(x.bytes, y.bytes, "{wtag}: bytes");
+        assert_eq!(x.frames_dropped, y.frames_dropped, "{wtag}: dropped");
+        assert_eq!(
+            x.frames_retransmitted,
+            y.frames_retransmitted,
+            "{wtag}: retransmitted"
+        );
+        assert_eq!(x.acks_sent, y.acks_sent, "{wtag}: acks");
+        assert_eq!(
+            x.comm_time.to_bits(),
+            y.comm_time.to_bits(),
+            "{wtag}: comm time"
+        );
+        assert_eq!(
+            x.wait_time.to_bits(),
+            y.wait_time.to_bits(),
+            "{wtag}: wait time"
+        );
+    }
+}
+
+/// The seeded chaos plans of the ISSUE acceptance matrix, as
+/// (name, drop, dup, reorder, partition_at) tuples.
+const PROFILES: [(&str, f64, f64, f64, f64); 4] = [
+    ("drop30", 0.3, 0.0, 0.0, 0.0),
+    ("dup", 0.0, 0.5, 0.0, 0.0),
+    ("reorder", 0.0, 0.0, 0.5, 0.0),
+    ("mix+part", 0.3, 0.25, 0.25, 3.0),
+];
+
+fn chaosed_cfg(fw: &str, profile: (&str, f64, f64, f64, f64), seed: u64) -> RunConfig {
+    let (_, drop, dup, reorder, part_at) = profile;
+    let mut cfg = RunConfig::new("mock", fw);
+    cfg.seed = seed;
+    cfg.max_iters = 40;
+    cfg.dss0 = 96;
+    cfg.target_acc = 1.5; // run the full budget under fire
+    cfg.chaos.drop = drop;
+    cfg.chaos.dup = dup;
+    cfg.chaos.reorder = reorder;
+    cfg.chaos.at = 1.0;
+    cfg.chaos.duration = 10.0;
+    cfg.chaos.partition_at = part_at;
+    cfg.chaos.partition_for = 2.0;
+    cfg
+}
+
+#[test]
+fn chaos_off_presets_bit_identical_to_reference_drivers() {
+    // A default (all-zero) ChaosConfig must be wire-inert: the generic
+    // driver with the chaos layer compiled in reproduces the frozen
+    // reference drivers bit-for-bit, with every transport counter zero.
+    for fw in PRESETS {
+        let mk = || {
+            let mut cfg = RunConfig::new("mock", fw);
+            cfg.max_iters = 40;
+            cfg.dss0 = 96;
+            cfg.target_acc = 0.995;
+            cfg
+        };
+        let want = kernels::with_backend(Backend::Scalar, || {
+            run_reference(mk(), Box::new(MockRuntime::new())).unwrap()
+        });
+        let got = kernels::with_backend(Backend::Scalar, || {
+            run_framework(mk(), Box::new(MockRuntime::new())).unwrap()
+        });
+        assert_same_run(&format!("{fw} chaos-off"), &want, &got);
+        assert_eq!(got.frames_dropped, 0, "{fw}: idle link dropped frames");
+        assert_eq!(got.frames_retransmitted, 0, "{fw}: idle link retransmitted");
+        assert_eq!(got.frames_duplicated, 0, "{fw}: idle link duplicated");
+        assert_eq!(got.acks_sent, 0, "{fw}: idle link charged acks");
+    }
+}
+
+#[test]
+fn presets_survive_every_chaos_plan_with_finite_loss() {
+    // Satellite 4: every framework preset × chaos plan (drop ≤ 30%,
+    // dup, reorder, mix + two-way partition) still terminates, with
+    // finite loss and the transport counters proving the species fired.
+    for fw in PRESETS {
+        for profile in PROFILES {
+            let tag = format!("{fw}+{}", profile.0);
+            let r = kernels::with_backend(Backend::Scalar, || {
+                run_framework(
+                    chaosed_cfg(fw, profile, 11),
+                    Box::new(MockRuntime::new()),
+                )
+                .unwrap()
+            });
+            assert!(r.iterations > 0, "{tag}: no progress under chaos");
+            assert!(r.final_loss.is_finite(), "{tag}: loss diverged");
+            assert!(r.acks_sent > 0, "{tag}: chaos windows never armed");
+            if profile.1 > 0.0 {
+                assert!(r.frames_dropped > 0, "{tag}: drop species never fired");
+            }
+            if profile.2 > 0.0 {
+                assert!(r.frames_duplicated > 0, "{tag}: dup species never fired");
+            }
+            // Bounded retransmit: every injected drop was re-sent.
+            assert_eq!(
+                r.frames_dropped, r.frames_retransmitted,
+                "{tag}: drop/retransmit ledger skew"
+            );
+        }
+    }
+}
+
+#[test]
+fn chaos_counters_agree_with_byte_ledger_and_per_worker_sums() {
+    // Satellite 3: the ChaosLink byte ledger covers *every* simulated
+    // transfer (original sends, retransmits, duplicates, acks), so it
+    // must equal the SimNet byte total exactly, and the per-worker
+    // counters must sum to the run totals.
+    for fw in ["bsp", "hermes"] {
+        for profile in [PROFILES[0], PROFILES[3]] {
+            let tag = format!("{fw}+{}", profile.0);
+            let r = kernels::with_backend(Backend::Scalar, || {
+                run_framework(
+                    chaosed_cfg(fw, profile, 7),
+                    Box::new(MockRuntime::new()),
+                )
+                .unwrap()
+            });
+            assert_eq!(r.chaos_bytes, r.bytes, "{tag}: byte ledger skew");
+            assert_eq!(
+                r.workers.iter().map(|w| w.frames_dropped).sum::<u64>(),
+                r.frames_dropped,
+                "{tag}: per-worker drop sum"
+            );
+            assert_eq!(
+                r.workers.iter().map(|w| w.frames_retransmitted).sum::<u64>(),
+                r.frames_retransmitted,
+                "{tag}: per-worker retransmit sum"
+            );
+            assert_eq!(
+                r.workers.iter().map(|w| w.acks_sent).sum::<u64>(),
+                r.acks_sent,
+                "{tag}: per-worker ack sum"
+            );
+        }
+    }
+}
+
+#[test]
+fn chaosed_runs_bit_identical_across_reruns_backends_and_shards() {
+    // The ISSUE's bit-identity discipline: a chaosed run is a pure
+    // function of (seed, ChaosConfig) — identical across reruns, the
+    // {scalar, SIMD} kernel backends, and shard counts.
+    for fw in PRESETS {
+        for profile in [PROFILES[0], PROFILES[3]] {
+            let tag = format!("{fw}+{}", profile.0);
+            let run_with = |backend: Backend, s: usize| {
+                kernels::with_backend(backend, || {
+                    shards::with_shards(s, || {
+                        run_framework(
+                            chaosed_cfg(fw, profile, 13),
+                            Box::new(MockRuntime::new()),
+                        )
+                        .unwrap()
+                    })
+                })
+            };
+            let a = run_with(Backend::Scalar, 1);
+            let b = run_with(Backend::Scalar, 1);
+            assert_same_run(&format!("{tag} rerun"), &a, &b);
+            let c = run_with(Backend::Simd, 1);
+            assert_same_run(&format!("{tag} simd"), &a, &c);
+            let d = run_with(Backend::Simd, 3);
+            assert_same_run(&format!("{tag} simd s=3"), &a, &d);
+        }
+    }
+}

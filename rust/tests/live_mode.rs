@@ -8,8 +8,8 @@ use std::time::Duration;
 use hermes_dml::config::{ClusterConfig, NodeFamily, RunConfig};
 use hermes_dml::faults::CorruptKind;
 use hermes_dml::live::{
-    run_live, run_live_churn, run_live_full, ChurnKind, LiveChurn, LiveCorrupt,
-    LiveOpts,
+    run_live, run_live_churn, run_live_full, ChurnKind, LiveChaos, LiveChurn,
+    LiveCorrupt, LiveOpts, LivePartition,
 };
 
 #[test]
@@ -220,6 +220,93 @@ fn live_guard_quarantines_poisoned_worker() {
     .unwrap();
     assert!(rep.quarantined >= 1, "guard never fired: {rep:?}");
     // The NaN payloads never reached aggregation.
+    assert!(rep.final_loss.is_finite(), "{rep:?}");
+}
+
+// ---------------------------------------------- network chaos (§17)
+
+#[test]
+fn live_run_survives_frame_drop_dup_and_reorder() {
+    // Seeded chaos on every worker's real TCP session: drops feed the
+    // timeout-driven retransmit loop, dups are killed by the PS RxDedup
+    // window (but still re-acked), reordered heartbeats land late.
+    // Every gated push must still be applied exactly once.
+    let mut cfg = RunConfig::new("mock", "hermes");
+    cfg.hp.lr = 0.5;
+    cfg.hp.alpha = -0.9;
+    cfg.hp.window = 6;
+    cfg.steps_cap = 2;
+    cfg.seed = 42;
+    let rep = run_live_full(
+        &cfg,
+        2,
+        Duration::from_secs(12),
+        LiveOpts {
+            stop_after_pushes: Some(4),
+            chaos: Some(LiveChaos {
+                seed: 42,
+                drop: 0.25,
+                dup: 0.25,
+                reorder: 0.4,
+                partition: None,
+            }),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    assert!(rep.frames_dropped > 0, "drop species never fired: {rep:?}");
+    assert!(rep.frames_duplicated > 0, "dup species never fired: {rep:?}");
+    assert!(
+        rep.frames_retransmitted > 0,
+        "dropped pushes were never resent: {rep:?}"
+    );
+    assert!(
+        rep.transport_dups > 0,
+        "RxDedup never rejected an injected duplicate: {rep:?}"
+    );
+    assert!(rep.acks_sent > 0, "{rep:?}");
+    // At-most-once under fire: every gated push applied exactly once,
+    // no matter how many copies and retries the chaos layer provoked.
+    assert_eq!(rep.pushes, 8, "{rep:?}");
+    assert_eq!(rep.global_updates, rep.pushes, "duplicate apply: {rep:?}");
+    assert!(rep.final_loss.is_finite(), "{rep:?}");
+}
+
+#[test]
+fn partitioned_worker_parks_then_resyncs_on_heal() {
+    // A hard partition on worker 1's link: the worker severs its
+    // session, parks its local state for the outage, then rejoins
+    // through the jittered reconnect path — re-registering (a resync)
+    // instead of wedging the run.
+    let mut cfg = RunConfig::new("mock", "hermes");
+    cfg.hp.lr = 0.5;
+    cfg.hp.alpha = -0.9;
+    cfg.hp.window = 6;
+    cfg.steps_cap = 2;
+    let rep = run_live_full(
+        &cfg,
+        2,
+        Duration::from_millis(2500),
+        LiveOpts {
+            chaos: Some(LiveChaos {
+                seed: 7,
+                partition: Some(LivePartition {
+                    worker: 1,
+                    at: Duration::from_millis(500),
+                    down_for: Duration::from_millis(500),
+                }),
+                ..Default::default()
+            }),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    // The healed worker re-registered exactly once and the run ended
+    // with every thread joined.
+    assert_eq!(rep.reconnects, 1, "{rep:?}");
+    assert!(rep.iterations > 10, "cluster wedged: {rep:?}");
+    assert!(rep.pushes > 0, "{rep:?}");
+    assert_eq!(rep.global_updates, rep.pushes, "{rep:?}");
     assert!(rep.final_loss.is_finite(), "{rep:?}");
 }
 

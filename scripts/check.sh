@@ -39,6 +39,16 @@ cargo run --quiet --release --bin hermes -- \
   exp robust --threads 2 --out results_smoke
 test -s results_smoke/robust_mock.csv
 
+# Net-chaos smoke (DESIGN.md §17): the network-chaos sweep — seeded
+# frame drop/dup/reorder/partition profiles × frameworks through the
+# streaming engine, plus a live kill-link leg (real TCP partition healed
+# through the jittered reconnect path) — end-to-end from the CLI.  CI
+# uploads the resulting chaos_mock.csv per kernel backend.
+echo "== net-chaos smoke (frame-level fault injection + live kill-link) =="
+cargo run --quiet --release --bin hermes -- \
+  exp chaos --threads 2 --out results_smoke
+test -s results_smoke/chaos_mock.csv
+
 # Stream smoke (DESIGN.md §16): the streaming non-IID data engine —
 # rate-spread × Dirichlet-α × framework, with the streamalloc recovery
 # contrast — end-to-end from the CLI under both kernel backends.  CI
