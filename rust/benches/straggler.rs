@@ -1,0 +1,91 @@
+//! Straggler-supervision bench (DESIGN.md §18): a mid-run ×100
+//! compute slowdown on worker 0 under bsp and ebsp, with supervision
+//! off vs on.  Records virtual time, speculation/eviction counters,
+//! and the supervised-over-unsupervised speedup per framework into
+//! `BENCH_straggler.json` at the repo root (override with
+//! `BENCH_STRAGGLER_OUT`); run via `scripts/bench.sh --record`.
+//!
+//! `HERMES_BENCH_SMOKE` shrinks the iteration budget so the CI
+//! bench-smoke leg finishes in seconds while emitting the same JSON
+//! shape.
+
+use std::path::Path;
+
+use hermes_dml::bench_harness::Bench;
+use hermes_dml::config::RunConfig;
+use hermes_dml::faults::FaultPlan;
+use hermes_dml::frameworks::run_framework;
+use hermes_dml::metrics::RunMetrics;
+use hermes_dml::runtime::MockRuntime;
+use hermes_dml::util::fmt_duration;
+use hermes_dml::util::json::Json;
+
+fn base(fw: &str, iters: usize, supervise: bool) -> RunConfig {
+    let mut cfg = RunConfig::new("mock", fw);
+    cfg.hp.lr = 0.5;
+    cfg.hp.ebsp_lookahead = 4.0;
+    cfg.max_iters = iters;
+    cfg.target_acc = 1.1; // never reached: fixed-budget timing
+    cfg.faults.plan = FaultPlan::new().k_spike(0, 8.0, 1e9, 100.0);
+    cfg.supervisor.enabled = supervise;
+    if supervise {
+        cfg.supervisor.probe_after_s = 20.0;
+    }
+    cfg
+}
+
+fn row(label: &str, r: &RunMetrics) {
+    println!(
+        "{label:<26} iters {:>5}  vt {:>8}  spec {:>4} (wins {:>4})  evict {:>2}  readmit {:>2}",
+        r.iterations,
+        fmt_duration(r.virtual_time),
+        r.sup_speculations,
+        r.sup_spec_wins,
+        r.sup_evictions,
+        r.sup_readmissions,
+    );
+}
+
+fn main() {
+    let smoke = std::env::var("HERMES_BENCH_SMOKE").is_ok();
+    let iters: usize = if smoke { 60 } else { 200 };
+    let mut extra: Vec<(String, Json)> = Vec::new();
+    extra.push(("smoke".into(), Json::Num(smoke as u8 as f64)));
+
+    Bench::report_header("straggler: ×100 mid-run slowdown, supervision off/on");
+    for fw in ["bsp", "ebsp"] {
+        let mut vt = [0f64; 2];
+        for (i, supervise) in [false, true].into_iter().enumerate() {
+            let cfg = base(fw, iters, supervise);
+            let r = run_framework(cfg, Box::new(MockRuntime::new())).unwrap();
+            row(&format!("{fw} sup={}", u8::from(supervise)), &r);
+            vt[i] = r.virtual_time;
+            let tag = if supervise { "sup" } else { "nosup" };
+            extra.push((format!("vt_{fw}_{tag}"), Json::Num(r.virtual_time)));
+            extra.push((
+                format!("speculations_{fw}_{tag}"),
+                Json::Num(r.sup_speculations as f64),
+            ));
+            extra.push((
+                format!("evictions_{fw}_{tag}"),
+                Json::Num(r.sup_evictions as f64),
+            ));
+            extra.push((
+                format!("readmissions_{fw}_{tag}"),
+                Json::Num(r.sup_readmissions as f64),
+            ));
+        }
+        let speedup = vt[0] / vt[1].max(1e-9);
+        println!("{fw:<26} supervised speedup ×{speedup:.2}");
+        extra.push((format!("speedup_{fw}"), Json::Num(speedup)));
+    }
+
+    let out_path = std::env::var("BENCH_STRAGGLER_OUT")
+        .unwrap_or_else(|_| "BENCH_straggler.json".to_string());
+    let fields: Vec<(&str, Json)> = std::iter::once(("title", Json::Str("straggler".into())))
+        .chain(extra.iter().map(|(k, v)| (k.as_str(), v.clone())))
+        .collect();
+    std::fs::write(Path::new(&out_path), Json::obj(fields).to_string())
+        .expect("writing bench json");
+    println!("\nwrote {out_path}");
+}

@@ -6,6 +6,7 @@
 
 use crate::config::ClusterConfig;
 use crate::util::rng::Xoshiro256pp;
+use crate::util::salts;
 
 /// One simulated worker node.
 #[derive(Debug, Clone)]
@@ -34,7 +35,7 @@ impl Cluster {
     /// Expand a [`ClusterConfig`] into concrete nodes.  The degrading
     /// subset is chosen deterministically from `seed`.
     pub fn build(cfg: &ClusterConfig, seed: u64) -> Cluster {
-        let mut rng = Xoshiro256pp::stream(seed, 0xC1u64);
+        let mut rng = Xoshiro256pp::stream(seed, salts::CLUSTER);
         let mut nodes = Vec::new();
         for fam in &cfg.families {
             for _ in 0..fam.count {

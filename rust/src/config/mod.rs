@@ -384,6 +384,153 @@ impl RobustConfig {
     }
 }
 
+/// Straggler-supervision subsystem (ISSUE 9, DESIGN.md §18): the
+/// per-worker health model, the hysteresis lifecycle state machine,
+/// speculative chunk re-execution and the degraded-mode auto-tuner.
+/// Like [`RobustConfig`] everything defaults *off*: with `enabled =
+/// false` no supervisor is constructed, no RNG stream is drawn and
+/// every driver takes byte-identical code paths to the pre-supervision
+/// engine.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SupervisorConfig {
+    /// Master switch.  Off = bit-invisible.
+    pub enabled: bool,
+    /// EWMA smoothing factor for the latency / push-gap scores.
+    pub ewma_alpha: f64,
+    /// A worker whose health score exceeds this multiple of the fleet
+    /// median counts an unhealthy observation.
+    pub suspect_factor: f64,
+    /// A score below this multiple of the fleet median counts a
+    /// healthy observation; between the two factors nothing changes
+    /// (the hysteresis band).
+    pub recover_factor: f64,
+    /// Consecutive unhealthy observations before Healthy → Suspect.
+    pub suspect_after: u64,
+    /// Further unhealthy observations per downgrade step
+    /// (Suspect → Probation → Evicted).
+    pub evict_after: u64,
+    /// Consecutive healthy observations per upgrade step back toward
+    /// Healthy (the anti-flap dwell).
+    pub readmit_after: u64,
+    /// Virtual seconds an evicted worker sits out before the probe
+    /// readmission; doubles per successive eviction (backoff).
+    pub probe_after_s: f64,
+    /// Fractional per-worker threshold jitter in [0, 0.5], drawn once
+    /// from the supervisor's own seeded stream (de-synchronizes
+    /// simultaneous state flips without breaking determinism).
+    pub jitter: f64,
+    /// Speculatively re-execute Suspect stragglers' chunks on the
+    /// healthiest idle worker at barrier/quorum commits.
+    pub speculate: bool,
+    /// Evict sustained stragglers (pool re-split) and readmit them
+    /// after the probe backoff.
+    pub evict: bool,
+    /// Auto-tune `RobustConfig` under sustained fleet-wide unhealth.
+    pub degrade: bool,
+    /// Fraction of the known fleet unhealthy that arms degraded mode.
+    pub degrade_frac: f64,
+    /// Quorum Q degraded mode tightens to (min with the configured Q).
+    pub degraded_quorum: f64,
+    /// Round deadline degraded mode installs when none is set
+    /// (seconds; 0 = leave the deadline alone).
+    pub degraded_deadline_s: f64,
+    /// §IV-A rebalance cadence in degraded mode (seconds between
+    /// passes; the healthy cadence is the Hermes default).
+    pub degraded_rebalance_s: f64,
+}
+
+impl Default for SupervisorConfig {
+    fn default() -> Self {
+        SupervisorConfig {
+            enabled: false,
+            ewma_alpha: 0.35,
+            suspect_factor: 3.0,
+            recover_factor: 1.5,
+            suspect_after: 2,
+            evict_after: 3,
+            readmit_after: 4,
+            probe_after_s: 40.0,
+            jitter: 0.1,
+            speculate: true,
+            evict: true,
+            degrade: true,
+            degrade_frac: 0.5,
+            degraded_quorum: 0.75,
+            degraded_deadline_s: 0.0,
+            degraded_rebalance_s: 1.0,
+        }
+    }
+}
+
+/// The knob list quoted by every supervisor parse/validation error, so
+/// a typo'd config names its valid alternatives (ISSUE 9 CLI polish).
+pub const SUPERVISOR_KNOBS: &str = "enabled, ewma_alpha, suspect_factor, \
+     recover_factor, suspect_after, evict_after, readmit_after, \
+     probe_after_s, jitter, speculate, evict, degrade, degrade_frac, \
+     degraded_quorum, degraded_deadline_s, degraded_rebalance_s";
+
+impl SupervisorConfig {
+    /// Supervision on at all?  (False = no supervisor is built.)
+    pub fn on(&self) -> bool {
+        self.enabled
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        let bad = |knob: &str, want: &str| {
+            Err(format!(
+                "supervisor {knob} must be {want} \
+                 (valid supervisor knobs: {SUPERVISOR_KNOBS})"
+            ))
+        };
+        if !(self.ewma_alpha.is_finite()
+            && self.ewma_alpha > 0.0
+            && self.ewma_alpha <= 1.0)
+        {
+            return bad("ewma_alpha", "in (0, 1]");
+        }
+        if !(self.suspect_factor.is_finite() && self.suspect_factor > 1.0) {
+            return bad("suspect_factor", "finite and > 1");
+        }
+        if !(self.recover_factor.is_finite()
+            && self.recover_factor >= 1.0
+            && self.recover_factor < self.suspect_factor)
+        {
+            return bad("recover_factor", "in [1, suspect_factor)");
+        }
+        if self.suspect_after == 0 || self.evict_after == 0 || self.readmit_after == 0
+        {
+            return bad("suspect_after/evict_after/readmit_after", "≥ 1");
+        }
+        if !(self.probe_after_s.is_finite() && self.probe_after_s > 0.0) {
+            return bad("probe_after_s", "finite and > 0");
+        }
+        if !(self.jitter.is_finite() && (0.0..=0.5).contains(&self.jitter)) {
+            return bad("jitter", "in [0, 0.5]");
+        }
+        if !(self.degrade_frac.is_finite()
+            && self.degrade_frac > 0.0
+            && self.degrade_frac <= 1.0)
+        {
+            return bad("degrade_frac", "in (0, 1]");
+        }
+        if !(self.degraded_quorum.is_finite()
+            && self.degraded_quorum > 0.0
+            && self.degraded_quorum <= 1.0)
+        {
+            return bad("degraded_quorum", "in (0, 1]");
+        }
+        if !(self.degraded_deadline_s.is_finite() && self.degraded_deadline_s >= 0.0)
+        {
+            return bad("degraded_deadline_s", "finite and ≥ 0");
+        }
+        if !(self.degraded_rebalance_s.is_finite() && self.degraded_rebalance_s > 0.0)
+        {
+            return bad("degraded_rebalance_s", "finite and > 0");
+        }
+        Ok(())
+    }
+}
+
 /// Streaming-data scenario for one run (DESIGN.md §16): either an
 /// explicit per-worker [`StreamPlan`] or the generator knobs a
 /// [`DataMode`] compiles into one at `SimEnv::build` — like
@@ -547,7 +694,11 @@ impl ChaosConfig {
             }
         }
         if self.partition_at > 0.0 {
-            let mut rng = Xoshiro256pp::stream(seed, 0xC4A1);
+            // Salt pinned in the ISSUE 9 registry: the old literal
+            // 0xC4A1 collided with worker 1's chaos-link stream
+            // (`salts::CHAOS_LINK ^ 1`).
+            let mut rng =
+                Xoshiro256pp::stream(seed, crate::util::salts::CHAOS_PARTITION);
             let k = (n_workers / 2).max(1);
             let mut ids: Vec<usize> = (0..n_workers).collect();
             for i in 0..k {
@@ -643,6 +794,10 @@ pub struct RunConfig {
     /// Network-chaos scenario (frame drops/dups/reorders/delays and
     /// partitions) — empty by default (DESIGN.md §17).
     pub chaos: ChaosConfig,
+    /// Straggler supervision (health-scored worker lifecycle,
+    /// speculative re-execution, degraded-mode auto-tuning) — off by
+    /// default (DESIGN.md §18).
+    pub supervisor: SupervisorConfig,
 }
 
 impl RunConfig {
@@ -676,6 +831,7 @@ impl RunConfig {
             robust: RobustConfig::default(),
             stream: StreamConfig::default(),
             chaos: ChaosConfig::default(),
+            supervisor: SupervisorConfig::default(),
         }
     }
 
@@ -711,6 +867,7 @@ impl RunConfig {
         self.robust.validate()?;
         self.stream.validate()?;
         self.chaos.validate()?;
+        self.supervisor.validate()?;
         if self.framework.is_streaming() && self.stream.capacity < self.mbs0 {
             return Err(
                 "stream capacity must be ≥ mbs0 (the replay buffer must \
@@ -856,6 +1013,42 @@ impl RunConfig {
                     ("partition_for", Json::Num(self.chaos.partition_for)),
                 ]),
             ),
+            (
+                "supervisor",
+                Json::obj(vec![
+                    ("enabled", Json::Bool(self.supervisor.enabled)),
+                    ("ewma_alpha", Json::Num(self.supervisor.ewma_alpha)),
+                    ("suspect_factor", Json::Num(self.supervisor.suspect_factor)),
+                    ("recover_factor", Json::Num(self.supervisor.recover_factor)),
+                    (
+                        "suspect_after",
+                        Json::Num(self.supervisor.suspect_after as f64),
+                    ),
+                    ("evict_after", Json::Num(self.supervisor.evict_after as f64)),
+                    (
+                        "readmit_after",
+                        Json::Num(self.supervisor.readmit_after as f64),
+                    ),
+                    ("probe_after_s", Json::Num(self.supervisor.probe_after_s)),
+                    ("jitter", Json::Num(self.supervisor.jitter)),
+                    ("speculate", Json::Bool(self.supervisor.speculate)),
+                    ("evict", Json::Bool(self.supervisor.evict)),
+                    ("degrade", Json::Bool(self.supervisor.degrade)),
+                    ("degrade_frac", Json::Num(self.supervisor.degrade_frac)),
+                    (
+                        "degraded_quorum",
+                        Json::Num(self.supervisor.degraded_quorum),
+                    ),
+                    (
+                        "degraded_deadline_s",
+                        Json::Num(self.supervisor.degraded_deadline_s),
+                    ),
+                    (
+                        "degraded_rebalance_s",
+                        Json::Num(self.supervisor.degraded_rebalance_s),
+                    ),
+                ]),
+            ),
             ("dss0", Json::Num(self.dss0 as f64)),
             ("mbs0", Json::Num(self.mbs0 as f64)),
             ("target_acc", Json::Num(self.target_acc)),
@@ -982,6 +1175,43 @@ impl RunConfig {
                 .and_then(Json::as_f64)
                 .ok_or("chaos/partition_for")?;
         }
+        // Optional for older configs: missing `supervisor` = off.  A
+        // present-but-malformed block fails with the offending knob
+        // *and* the full knob list (ISSUE 9 CLI polish).
+        let mut supervisor = SupervisorConfig::default();
+        if let Some(uj) = j.at("supervisor") {
+            let knob = |f: &str| {
+                format!(
+                    "supervisor/{f} missing or mistyped \
+                     (valid supervisor knobs: {SUPERVISOR_KNOBS})"
+                )
+            };
+            let ub = |f: &str| -> Result<bool, String> {
+                uj.get(f).and_then(Json::as_bool).ok_or_else(|| knob(f))
+            };
+            let un = |f: &str| -> Result<f64, String> {
+                uj.get(f).and_then(Json::as_f64).ok_or_else(|| knob(f))
+            };
+            let uu = |f: &str| -> Result<u64, String> {
+                uj.get(f).and_then(Json::as_u64).ok_or_else(|| knob(f))
+            };
+            supervisor.enabled = ub("enabled")?;
+            supervisor.ewma_alpha = un("ewma_alpha")?;
+            supervisor.suspect_factor = un("suspect_factor")?;
+            supervisor.recover_factor = un("recover_factor")?;
+            supervisor.suspect_after = uu("suspect_after")?;
+            supervisor.evict_after = uu("evict_after")?;
+            supervisor.readmit_after = uu("readmit_after")?;
+            supervisor.probe_after_s = un("probe_after_s")?;
+            supervisor.jitter = un("jitter")?;
+            supervisor.speculate = ub("speculate")?;
+            supervisor.evict = ub("evict")?;
+            supervisor.degrade = ub("degrade")?;
+            supervisor.degrade_frac = un("degrade_frac")?;
+            supervisor.degraded_quorum = un("degraded_quorum")?;
+            supervisor.degraded_deadline_s = un("degraded_deadline_s")?;
+            supervisor.degraded_rebalance_s = un("degraded_rebalance_s")?;
+        }
         // Typed spec validation at parse time: a bad name fails here
         // with the full list of valid specs, not deep inside a driver.
         let framework: FrameworkSpec = s("framework")?
@@ -1027,6 +1257,7 @@ impl RunConfig {
             robust,
             stream,
             chaos,
+            supervisor,
         };
         cfg.validate()?;
         Ok(cfg)
@@ -1367,6 +1598,40 @@ mod tests {
         assert!(r.quorum_on());
         let r = RobustConfig { round_deadline_s: 2.0, ..RobustConfig::default() };
         assert!(r.quorum_on());
+    }
+
+    #[test]
+    fn supervisor_block_is_optional_in_json_and_validated() {
+        // A config serialized before ISSUE 9 still parses: off.
+        let rc = RunConfig::new("cnn", "hermes");
+        let mut m = match rc.to_json() {
+            Json::Obj(m) => m,
+            _ => unreachable!(),
+        };
+        m.remove("supervisor");
+        let back = RunConfig::from_json(&Json::Obj(m)).unwrap();
+        assert_eq!(back.supervisor, SupervisorConfig::default());
+        assert!(!back.supervisor.on());
+
+        // Each validation rejection fires and quotes the knob list.
+        let bad = |f: fn(&mut SupervisorConfig)| {
+            let mut rc = RunConfig::new("cnn", "hermes");
+            f(&mut rc.supervisor);
+            let err = rc.validate().unwrap_err();
+            assert!(err.contains(SUPERVISOR_KNOBS), "{err}");
+            err
+        };
+        assert!(bad(|s| s.ewma_alpha = 0.0).contains("ewma_alpha"));
+        assert!(bad(|s| s.ewma_alpha = 1.5).contains("ewma_alpha"));
+        assert!(bad(|s| s.suspect_factor = 1.0).contains("suspect_factor"));
+        assert!(bad(|s| s.recover_factor = 5.0).contains("recover_factor"));
+        assert!(bad(|s| s.suspect_after = 0).contains("suspect_after"));
+        assert!(bad(|s| s.probe_after_s = 0.0).contains("probe_after_s"));
+        assert!(bad(|s| s.jitter = 0.6).contains("jitter"));
+        assert!(bad(|s| s.degrade_frac = 0.0).contains("degrade_frac"));
+        assert!(bad(|s| s.degraded_quorum = 1.5).contains("degraded_quorum"));
+        assert!(bad(|s| s.degraded_rebalance_s = 0.0)
+            .contains("degraded_rebalance_s"));
     }
 
     #[test]

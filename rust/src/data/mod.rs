@@ -19,6 +19,7 @@
 pub mod stream;
 
 use crate::util::rng::Xoshiro256pp;
+use crate::util::salts;
 
 /// Static description of a dataset's sample geometry.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -96,7 +97,7 @@ impl Dataset {
     pub fn synth(kind: DataKind, n: usize, seed: u64) -> Dataset {
         let meta = kind.meta();
         let elems = meta.elems();
-        let mut trng = Xoshiro256pp::stream(seed, 0xDA7A);
+        let mut trng = Xoshiro256pp::stream(seed, salts::DATA_TEMPLATES);
         // Build class templates.
         let mut templates = vec![0f32; meta.classes * elems];
         for cls in 0..meta.classes {
@@ -126,7 +127,7 @@ impl Dataset {
             }
         }
         let noise = kind.noise();
-        let mut rng = Xoshiro256pp::stream(seed, 0x5A3B);
+        let mut rng = Xoshiro256pp::stream(seed, salts::DATA_NOISE);
         let mut images = Vec::with_capacity(n * elems);
         let mut labels = Vec::with_capacity(n);
         for _ in 0..n {
@@ -189,7 +190,7 @@ impl Dataset {
     pub fn split(&self, train_frac: f64, seed: u64) -> (Vec<usize>, Vec<usize>) {
         assert!((0.0..=1.0).contains(&train_frac));
         let mut idx: Vec<usize> = (0..self.len()).collect();
-        let mut rng = Xoshiro256pp::stream(seed, 0x59171);
+        let mut rng = Xoshiro256pp::stream(seed, salts::DATA_SPLIT);
         rng.shuffle(&mut idx);
         let cut = (self.len() as f64 * train_frac).round() as usize;
         let test = idx.split_off(cut.min(idx.len()));
@@ -237,7 +238,7 @@ pub fn partition_pools(
     partition: Partition,
     seed: u64,
 ) -> Vec<Shard> {
-    let mut rng = Xoshiro256pp::stream(seed, 0x9A27);
+    let mut rng = Xoshiro256pp::stream(seed, salts::DATA_PARTITION);
     match partition {
         Partition::Iid => (0..n_workers)
             .map(|w| Shard { worker: w, pool: train_idx.to_vec() })
@@ -331,7 +332,7 @@ pub struct BatchSampler {
 impl BatchSampler {
     pub fn new(seed: u64, worker: usize) -> Self {
         BatchSampler {
-            rng: Xoshiro256pp::stream(seed, 0xBA7C ^ ((worker as u64) << 17)),
+            rng: Xoshiro256pp::stream(seed, salts::DATA_BATCH ^ ((worker as u64) << 17)),
             active: Vec::new(),
             cursor: 0,
             slab_x: Vec::new(),
@@ -574,7 +575,7 @@ pub struct StreamSource {
 impl StreamSource {
     pub fn new(seed: u64, worker: usize, pool: &[usize], capacity: usize) -> Self {
         let mut rng =
-            Xoshiro256pp::stream(seed, 0x57E0 ^ ((worker as u64) << 17));
+            Xoshiro256pp::stream(seed, salts::DATA_STREAM_ORDER ^ ((worker as u64) << 17));
         let mut order = pool.to_vec();
         rng.shuffle(&mut order);
         StreamSource {
@@ -767,7 +768,7 @@ pub struct Probe {
 
 impl Probe {
     pub fn build(ds: &Dataset, test_idx: &[usize], n: usize, seed: u64) -> Probe {
-        let mut rng = Xoshiro256pp::stream(seed, 0x9120B);
+        let mut rng = Xoshiro256pp::stream(seed, salts::DATA_PROBE);
         let mut idx = Vec::with_capacity(n);
         for _ in 0..n {
             idx.push(test_idx[rng.next_below(test_idx.len() as u64) as usize]);

@@ -967,6 +967,121 @@ pub fn chaos_sweep(
     Ok(rows)
 }
 
+// --------------------------------------------------------- straggler
+
+/// Mid-run slowdown factors the straggler sweep injects on worker 0
+/// (×1 is the no-fault control).
+pub const STRAGGLER_SLOWDOWNS: [f64; 3] = [1.0, 10.0, 100.0];
+
+/// Straggler-supervision sweep (DESIGN.md §18): a mid-run K spike on
+/// worker 0 — ×1 (control), ×10 and ×100, held to run end — over the
+/// barrier (`bsp`) and elastic (`ebsp`) shapes, each with supervision
+/// off and on, streamed to `straggler_{model}.csv` with the
+/// health-lifecycle counters.  Fixed iteration budgets (no convergence
+/// target) make the virtual-time columns an honest bounded-time
+/// comparison: unsupervised barriers inherit the spike every round,
+/// supervised runs cut it via speculation and eventually eviction.
+pub fn straggler_sweep(
+    out: &Path,
+    model: &str,
+    artifacts: &Path,
+    threads: usize,
+) -> Result<Vec<RunMetrics>> {
+    let mut jobs = Vec::new();
+    let mut slow_of = Vec::new();
+    let mut sup_of = Vec::new();
+    for fw in ["bsp", "ebsp"] {
+        for &slow in &STRAGGLER_SLOWDOWNS {
+            for supervise in [false, true] {
+                let mut cfg = scaled_cfg(model, fw);
+                cfg.max_iters = 160;
+                cfg.target_acc = 1.1; // fixed budget: compare times
+                if slow > 1.0 {
+                    // §III-C's progressive-slowdown spike, held to the
+                    // end of the run (duration far past any budget).
+                    cfg.faults.plan = FaultPlan::new().k_spike(0, 8.0, 1e9, slow);
+                }
+                cfg.supervisor.enabled = supervise;
+                if supervise {
+                    // Sweep-scale tuning: probe readmission fast enough
+                    // to matter within the scaled budget.
+                    cfg.supervisor.probe_after_s = 20.0;
+                }
+                jobs.push(SweepJob::new(
+                    format!("{fw} x{slow:.0} sup={}", u8::from(supervise)),
+                    cfg,
+                ));
+                slow_of.push(slow);
+                sup_of.push(supervise);
+            }
+        }
+    }
+    let model_s = model.to_string();
+    let arts = artifacts.to_path_buf();
+
+    let mut csv = String::from(
+        "framework,slowdown,supervise,iterations,virtual_time_s,final_loss,\
+         final_accuracy,sup_speculations,sup_spec_wins,sup_spec_dedup,\
+         sup_evictions,sup_readmissions,sup_degraded_enters,\
+         sup_degraded_exits,quorum_commits\n",
+    );
+    let mut table = TableFmt::new(&[
+        "Config",
+        "VT",
+        "Iters",
+        "Spec",
+        "Wins",
+        "Evict",
+        "Readmit",
+        "Degraded",
+    ]);
+    let mut rows: Vec<RunMetrics> = Vec::with_capacity(jobs.len());
+    sweep::run_sweep_streaming(
+        &jobs,
+        threads,
+        0, // auto window
+        move |_job| make_runtime(&model_s, &arts),
+        |i, r| {
+            let cfg = &jobs[i].cfg;
+            csv += &format!(
+                "{},{},{},{},{:.3},{:.5},{:.5},{},{},{},{},{},{},{},{}\n",
+                cfg.framework,
+                slow_of[i],
+                sup_of[i],
+                r.iterations,
+                r.virtual_time,
+                r.final_loss,
+                r.final_accuracy,
+                r.sup_speculations,
+                r.sup_spec_wins,
+                r.sup_spec_dedup,
+                r.sup_evictions,
+                r.sup_readmissions,
+                r.sup_degraded_enters,
+                r.sup_degraded_exits,
+                r.quorum_commits
+            );
+            table.row(vec![
+                jobs[i].label.clone(),
+                format!("{:.1}", r.virtual_time),
+                r.iterations.to_string(),
+                r.sup_speculations.to_string(),
+                r.sup_spec_wins.to_string(),
+                r.sup_evictions.to_string(),
+                r.sup_readmissions.to_string(),
+                r.sup_degraded_enters.to_string(),
+            ]);
+            rows.push(r);
+            Ok(())
+        },
+    )?;
+
+    let rendered = table.render();
+    println!("\nStraggler-supervision sweep ({model}):\n{rendered}");
+    write_file(out, &format!("straggler_{model}.csv"), &csv)?;
+    Ok(rows)
+}
+
 // ------------------------------------------------------------- scale
 
 /// Which framework axis a scale sweep fans over.
@@ -1143,6 +1258,7 @@ pub fn run_all(out: &Path, model: &str, artifacts: &Path) -> Result<()> {
     fig14_alpha_beta(out, model, artifacts)?;
     table3(out, model, artifacts)?;
     faults_churn_sweep(out, model, artifacts, 0, &FAULT_SWEEP_RATES, &PRESETS)?;
+    straggler_sweep(out, model, artifacts, 0)?;
     stream_sweep(
         out,
         model,
@@ -1198,6 +1314,43 @@ mod tests {
         let csv = std::fs::read_to_string(dir.join("faults_churn_mock.csv")).unwrap();
         assert_eq!(csv.lines().count(), 3, "{csv}");
         assert!(csv.lines().nth(1).unwrap().starts_with("hermes,0,"), "{csv}");
+    }
+
+    #[test]
+    fn straggler_sweep_writes_csv_with_lifecycle_counters() {
+        let dir = std::env::temp_dir().join("hermes_exp_straggler_test");
+        let rows = straggler_sweep(&dir, "mock", Path::new("/nonexistent"), 0).unwrap();
+        // {bsp, ebsp} × {×1, ×10, ×100} × {off, on}.
+        assert_eq!(rows.len(), 12);
+        let csv = std::fs::read_to_string(dir.join("straggler_mock.csv")).unwrap();
+        assert_eq!(csv.lines().count(), 13, "{csv}");
+        assert!(csv.lines().nth(1).unwrap().starts_with("bsp,1,false,"), "{csv}");
+        for r in &rows {
+            assert!(r.iterations > 0, "{}: no iterations", r.framework);
+            assert!(r.final_loss.is_finite(), "{}: loss", r.framework);
+        }
+        // Unsupervised rows never touch the supervisor counters.
+        for (i, r) in rows.iter().enumerate() {
+            if i % 2 == 0 {
+                assert_eq!(r.sup_speculations, 0, "row {i}");
+                assert_eq!(r.sup_evictions, 0, "row {i}");
+            }
+        }
+        // Headline contrast (ISSUE 9 acceptance): under the ×100 spike
+        // the supervised barrier run is bounded well below the
+        // unsupervised one, which inherits the spike every round.
+        let unsup = &rows[4]; // bsp ×100 sup=off
+        let sup = &rows[5]; // bsp ×100 sup=on
+        assert!(
+            sup.virtual_time < unsup.virtual_time,
+            "supervised {} vs unsupervised {}",
+            sup.virtual_time,
+            unsup.virtual_time
+        );
+        assert!(
+            sup.sup_speculations > 0 || sup.sup_evictions > 0,
+            "supervision never intervened"
+        );
     }
 
     #[test]

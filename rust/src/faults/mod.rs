@@ -29,6 +29,7 @@
 
 use crate::sim::{Ev, SimQueue};
 use crate::util::rng::Xoshiro256pp;
+use crate::util::salts;
 
 /// Tag range reserved for fault wake-ups; `tag - FAULT_TAG_BASE` is the
 /// action index in the compiled timeline.  Driver-defined tags are tiny
@@ -349,7 +350,7 @@ impl FaultPlan {
             return plan;
         }
         let n_events = ((rate_per_100s * horizon / 100.0).round() as usize).max(1);
-        let mut rng = Xoshiro256pp::stream(seed, 0xFA17);
+        let mut rng = Xoshiro256pp::stream(seed, salts::FAULT_CHURN);
         let mut free_at = vec![0.0f64; n_workers];
         let down = down_for.max(0.5);
         for _ in 0..n_events {

@@ -19,8 +19,10 @@ use crate::net::{ChaosLink, SimNet};
 use crate::ps::{PsState, UpdateGuard};
 use crate::runtime::{init_params, ModelRuntime};
 use crate::sim::{Ev, SimQueue};
+use crate::supervisor::{SupDelta, Supervisor, SUP_TAG_BASE};
 use crate::tensor::{BufferPool, ParamVec};
 use crate::util::rng::Xoshiro256pp;
+use crate::util::salts;
 use crate::worker::WorkerCore;
 
 /// Default synthetic-dataset size (train+test pool).
@@ -81,7 +83,21 @@ pub struct SimEnv {
     resplits: u64,
     /// Effective robustness config — the spec's `+robust` token folded
     /// into `cfg.robust` (DESIGN.md §15).  All defenses default off.
+    /// The degraded-mode controller tightens `quorum` /
+    /// `round_deadline_s` in place and restores them from
+    /// `base_robust` on recovery (DESIGN.md §18).
     pub robust: RobustConfig,
+    /// Pristine copy of `robust` for the degraded-mode restore.
+    base_robust: RobustConfig,
+    /// Straggler supervisor (DESIGN.md §18) — `Some` only when
+    /// `cfg.supervisor.enabled`.  Disabled runs never construct it,
+    /// make zero supervisor RNG draws and zero extra float ops, so
+    /// supervision-off stays bit-identical to the frozen drivers.
+    pub sup: Option<Supervisor>,
+    /// Effective §IV-A rebalance cadence (virtual seconds):
+    /// [`REBALANCE_EVERY`](super::hermes::REBALANCE_EVERY) until the
+    /// degraded-mode controller tightens it.
+    pub rebalance_every: f64,
     /// PS-side admission guard (`Some` only when the guard is enabled).
     guard: Option<UpdateGuard>,
     /// Armed corruption per worker, consumed at its next actual push.
@@ -206,7 +222,12 @@ impl SimEnv {
             None
         };
         let track_corruption = plan.has_corruption();
-        let corrupt_rng = Xoshiro256pp::stream(cfg.seed, 0xC0DE);
+        let corrupt_rng = Xoshiro256pp::stream(cfg.seed, salts::CORRUPT);
+        let sup = if cfg.supervisor.on() {
+            Some(Supervisor::new(&cfg.supervisor, n, cfg.seed))
+        } else {
+            None
+        };
 
         Ok(SimEnv {
             cfg,
@@ -230,7 +251,10 @@ impl SimEnv {
             stream,
             train_idx,
             resplits: 0,
+            base_robust: robust.clone(),
             robust,
+            sup,
+            rebalance_every: super::hermes::REBALANCE_EVERY,
             guard,
             corrupt_pending: vec![None; n],
             last_push: (0..n).map(|_| None).collect(),
@@ -273,6 +297,9 @@ impl SimEnv {
         wm.train_time += t;
         wm.train_times.push((self.queue.now(), t));
         self.run.iterations += 1;
+        if let Some(sup) = self.sup.as_mut() {
+            sup.observe_iter(w, t);
+        }
         Ok((out, t))
     }
 
@@ -511,6 +538,105 @@ impl SimEnv {
         self.robust.quorum_on()
     }
 
+    // --------------------------- straggler supervision (DESIGN.md §18)
+
+    /// Is the straggler supervisor active?  When false every
+    /// supervision hook is a no-op with zero float ops and zero RNG
+    /// draws — supervision-off runs are bit-identical to the frozen
+    /// reference drivers.
+    pub fn supervised(&self) -> bool {
+        self.sup.is_some()
+    }
+
+    /// Record a push arrival in the metrics and feed the supervisor's
+    /// inter-push-gap EWMA — the drivers' single push-instant hook.
+    pub fn note_push(&mut self, w: usize, arr: f64) {
+        self.run.workers[w].push_times.push(arr);
+        if let Some(sup) = self.sup.as_mut() {
+            sup.observe_push(w, arr);
+        }
+    }
+
+    /// One supervision step at virtual time `t`: tick the health model
+    /// over the live fleet, apply evictions (the worker leaves the
+    /// cluster and its chunk re-splits over the survivors, exactly as
+    /// a fault-plan crash does), readmit recovered workers (model +
+    /// dataset resync through the rejoin path), and auto-tune the
+    /// degraded-mode knobs.  Each eviction schedules a readmission
+    /// probe wake-up tag so event shapes can resume the worker's
+    /// chain.  Returns the decisions for the calling shape to apply
+    /// to its own planes; a no-op when supervision is off.
+    pub fn supervise(&mut self, t: f64) -> SupDelta {
+        let Some(mut sup) = self.sup.take() else {
+            return SupDelta::default();
+        };
+        let n = self.n_workers();
+        let alive: Vec<bool> = (0..n).map(|w| !self.is_crashed(w)).collect();
+        let delta = sup.tick(&alive, t);
+        let mut membership = false;
+        for &w in &delta.evict {
+            if self.is_crashed(w) {
+                continue;
+            }
+            // Never evict the last live worker: a fully evicted fleet
+            // trains nothing, which is worse than one slow straggler.
+            if (0..n).filter(|&x| !self.is_crashed(x)).count() <= 1 {
+                break;
+            }
+            self.cluster.crash(w);
+            self.run.sup_evictions += 1;
+            self.run.workers[w].sup_evictions += 1;
+            membership = true;
+            self.queue.push_at(
+                sup.readmit_at(w).max(t),
+                Ev::Tag { worker: w, tag: SUP_TAG_BASE + w as u32 },
+            );
+        }
+        for &w in &delta.readmit {
+            if !self.is_crashed(w) {
+                continue;
+            }
+            self.cluster.revive(w);
+            self.run.sup_readmissions += 1;
+            self.run.workers[w].sup_readmissions += 1;
+            membership = true;
+            self.rejoin_resync(w);
+        }
+        if membership {
+            self.resplit_pools();
+        }
+        if delta.enter_degraded {
+            // Sustained fleet-wide unhealth: tighten the quorum /
+            // deadline knobs (never loosen ones already tighter) and
+            // speed up the §IV-A rebalance cadence (DESIGN.md §18).
+            self.run.sup_degraded_enters += 1;
+            let s = &self.cfg.supervisor;
+            if s.degraded_quorum < 1.0 {
+                self.robust.quorum = self.robust.quorum.min(s.degraded_quorum);
+            }
+            if s.degraded_deadline_s > 0.0 {
+                self.robust.round_deadline_s = if self.robust.round_deadline_s > 0.0 {
+                    self.robust.round_deadline_s.min(s.degraded_deadline_s)
+                } else {
+                    s.degraded_deadline_s
+                };
+            }
+            if s.degraded_rebalance_s > 0.0 {
+                self.rebalance_every =
+                    self.rebalance_every.min(s.degraded_rebalance_s);
+            }
+        }
+        if delta.exit_degraded {
+            // Fleet recovered: restore the pristine knobs.
+            self.run.sup_degraded_exits += 1;
+            self.robust.quorum = self.base_robust.quorum;
+            self.robust.round_deadline_s = self.base_robust.round_deadline_s;
+            self.rebalance_every = super::hermes::REBALANCE_EVERY;
+        }
+        self.sup = Some(sup);
+        delta
+    }
+
     /// Apply any armed corruption species to worker `w`'s outgoing
     /// payload, then record the wire payload as the worker's last push
     /// (the stale-replay source).  A no-op — zero float ops, zero RNG
@@ -733,6 +859,15 @@ impl SimEnv {
             wm.acks_sent = cs.acks_sent;
             if let Some(s) = w.source.stream() {
                 self.run.stream_evictions += s.evicted();
+            }
+        }
+        if let Some(sup) = self.sup.as_ref() {
+            self.run.sup_speculations = sup.speculations;
+            self.run.sup_spec_wins = sup.spec_wins;
+            self.run.sup_spec_dedup = sup.spec_dedup;
+            for i in 0..self.run.workers.len() {
+                self.run.workers[i].spec_covered = sup.spec_covered[i];
+                self.run.workers[i].spec_backups = sup.spec_backups[i];
             }
         }
         self.run

@@ -29,18 +29,23 @@ use anyhow::Result;
 
 use super::common::SimEnv;
 use super::ebsp::{BENCH_OVERHEAD, CRASH_CAPACITY, HEAVY_PARAMS};
-use super::hermes::REBALANCE_EVERY;
 use super::policy::{AllocPolicy, FrameworkSpec, GatePolicy, SyncPolicy};
 use super::ssp::{active_min_clock, release_unblocked};
 use crate::alloc::{rebalance_pass, Allocation, Rebalance, TimeMonitor, MBS_DOMAIN};
 use crate::data::stream::{is_stream_tag, is_stream_tag_value};
 use crate::metrics::SegmentKind;
 use crate::sim::Ev;
+use crate::supervisor::{is_sup_ev, is_sup_tag};
 use crate::tensor::ParamVec;
 
 /// The event-driven shapes' "start next iteration" wake-up tag (same
 /// value as the reference drivers').
 const START: u32 = 0;
+
+/// Event-shape supervision cadence (virtual seconds): the event loop
+/// has no round boundary, so health ticks are rate-limited by virtual
+/// time instead of firing on every pop (DESIGN.md §18).
+const SUP_TICK_EVERY: f64 = 1.0;
 
 /// Run `spec` over a built environment — the single entry point the
 /// registry dispatches through.
@@ -78,9 +83,11 @@ fn alloc_caps(env: &SimEnv, monitored: bool) -> Vec<usize> {
 /// Is a §IV-A rebalancing pass due?  One shared predicate for every
 /// loop shape: the ablation flag, a full monitor, and the rate limit.
 fn rebalance_due(env: &SimEnv, monitor: &TimeMonitor, last_rebalance: f64) -> bool {
+    // `env.rebalance_every` equals the constant cadence unless the
+    // degraded-mode controller tightened it (DESIGN.md §18).
     env.cfg.dynamic_alloc
         && monitor.have_all()
-        && env.queue.now() - last_rebalance >= REBALANCE_EVERY
+        && env.queue.now() - last_rebalance >= env.rebalance_every
 }
 
 /// The shape-independent core of one §IV-A pass: compute retargets,
@@ -134,7 +141,7 @@ fn clamp_stream_targets(env: &SimEnv, rbs: &mut Vec<Rebalance>) {
         if !rate.is_finite() {
             continue;
         }
-        let cap = ((rate * REBALANCE_EVERY) as usize).max(env.allocs[w].mbs);
+        let cap = ((rate * env.rebalance_every) as usize).max(env.allocs[w].mbs);
         if let Some(rb) = rbs.iter_mut().find(|rb| rb.worker == w) {
             rb.alloc.dss = rb.alloc.dss.min(cap.max(rb.alloc.mbs));
             continue;
@@ -252,6 +259,9 @@ fn run_event(env: &mut SimEnv, spec: FrameworkSpec) -> Result<()> {
     // buffer, leased once (pool bookkeeping only — no metrics effect).
     let mut before = env.pool.acquire_like(&env.ps.params);
     let mut g_scratch = env.pool.acquire_like(&env.ps.params);
+    // Last supervision tick (rate-limited — the event shape has no
+    // round boundary to hang the health model on).
+    let mut last_sup = f64::MIN;
 
     // Bootstrap: model + dataset to every worker, then first iteration.
     let model_b = env.model_bytes();
@@ -295,6 +305,7 @@ fn run_event(env: &mut SimEnv, spec: FrameworkSpec) -> Result<()> {
             if env.is_crashed(ev.worker())
                 && !crate::faults::is_fault_tag(&ev)
                 && !is_stream_tag(&ev)
+                && !is_sup_ev(&ev)
             {
                 env.defer_to_rejoin(ev); // dead worker: chain resumes at rejoin
                 continue;
@@ -302,6 +313,7 @@ fn run_event(env: &mut SimEnv, spec: FrameworkSpec) -> Result<()> {
             if env.is_partitioned(ev.worker())
                 && !crate::faults::is_fault_tag(&ev)
                 && !is_stream_tag(&ev)
+                && !is_sup_ev(&ev)
             {
                 // Partitioned worker: park its chain at the heal
                 // instant (DESIGN.md §17).  The worker never crashed,
@@ -311,11 +323,39 @@ fn run_event(env: &mut SimEnv, spec: FrameworkSpec) -> Result<()> {
                 continue;
             }
         }
+        if env.supervised()
+            && env.is_crashed(ev.worker())
+            && !crate::faults::is_fault_tag(&ev)
+            && !is_stream_tag(&ev)
+            && !is_sup_ev(&ev)
+        {
+            // A supervisor-evicted worker has no fault-plan rejoin:
+            // its chain parks here and resumes from the readmission
+            // probe tag scheduled at eviction (DESIGN.md §18).
+            continue;
+        }
         match ev {
             Ev::Tag { worker: w, tag: START } => {
                 event_start_iteration(env, w, t, mode, &mut planes, &mut before)?;
             }
             Ev::TrainDone { worker: w } => {
+                if env.supervised() && t - last_sup >= SUP_TICK_EVERY {
+                    last_sup = t;
+                    let sd = env.supervise(t);
+                    if !sd.evict.is_empty() {
+                        if let Some(s) = mode.staleness {
+                            // Evictions raise the active clock floor:
+                            // re-check every blocked worker, exactly
+                            // like a fault-plan crash does.
+                            release_unblocked(env, &planes.clock, &mut planes.blocked, s, t);
+                        }
+                    }
+                    if env.is_crashed(w) {
+                        // This worker was just evicted: its chain
+                        // parks until the readmission probe.
+                        continue;
+                    }
+                }
                 if mode.staleness.is_some() {
                     planes.clock[w] += 1;
                 }
@@ -330,7 +370,7 @@ fn run_event(env: &mut SimEnv, spec: FrameworkSpec) -> Result<()> {
                     }
                     let d = env.transfer(w, env.push_bytes());
                     env.segment(w, t, t + d, SegmentKind::Comm);
-                    env.run.workers[w].push_times.push(t + d);
+                    env.note_push(w, t + d);
                     env.queue.push_in(d, Ev::ArriveAtPs { worker: w });
                 } else {
                     // Full independence: next iteration immediately.
@@ -448,6 +488,36 @@ fn run_event(env: &mut SimEnv, spec: FrameworkSpec) -> Result<()> {
                     }
                     event_start_iteration(env, w, t, mode, &mut planes, &mut before)?;
                 }
+            }
+            Ev::Tag { worker: w, tag } if is_sup_tag(tag) => {
+                // Readmission probe (DESIGN.md §18): tick the
+                // supervisor at the probe time — it readmits the
+                // worker (revive + model/dataset resync + pool
+                // re-split) once the backoff has elapsed — then
+                // restart the worker's event chain.
+                last_sup = t;
+                env.supervise(t);
+                if env.is_crashed(w) {
+                    continue; // probe refused (e.g. fault-plan crash)
+                }
+                if mode.delta.is_some() {
+                    // The resync replaced the worker's model: its
+                    // δ-gate span restarts from the adopted global.
+                    if let Some(a) = planes.anchor[w].as_mut() {
+                        a.copy_from(&env.workers[w].state.params);
+                    }
+                }
+                if env.iterations_exhausted() {
+                    continue;
+                }
+                if let Some(s) = mode.staleness {
+                    // The readmitted laggard drags the clock floor
+                    // down: blocked peers stay blocked, but re-check
+                    // so the bound can't wedge; the worker itself
+                    // restarts behind the floor, never blocked.
+                    release_unblocked(env, &planes.clock, &mut planes.blocked, s, t);
+                }
+                event_start_iteration(env, w, t, mode, &mut planes, &mut before)?;
             }
             Ev::Tag { .. } => {}
         }
@@ -571,7 +641,6 @@ fn run_lockstep(env: &mut SimEnv, spec: FrameworkSpec) -> Result<()> {
     let eta = env.cfg.hp.lr;
     let gup = spec.gate == GatePolicy::Gup;
     let monitored = spec.alloc != AllocPolicy::Static;
-    let quorum = env.quorum_on();
     let n = env.n_workers();
     let mut monitor = TimeMonitor::new(n);
     let mut last_rebalance = f64::MIN;
@@ -589,8 +658,10 @@ fn run_lockstep(env: &mut SimEnv, spec: FrameworkSpec) -> Result<()> {
     let mut free_at = vec![0.0f64; n];
     let mut late_grads: Vec<(usize, ParamVec, f64)> = Vec::new();
     let mut late_fired = vec![false; n];
+    let mut round_no: u64 = 0;
     loop {
         let t0 = env.queue.now();
+        round_no += 1;
         // Crash/rejoin churn lands at superstep granularity: rejoined
         // workers re-enter `active` and adopt the model in the round
         // broadcast below (the barrier re-ships model + dataset).
@@ -624,6 +695,31 @@ fn run_lockstep(env: &mut SimEnv, spec: FrameworkSpec) -> Result<()> {
                 }
             }
         }
+
+        // Straggler supervision at superstep granularity (DESIGN.md
+        // §18): evictions leave `active` exactly like crashes, and
+        // readmitted workers restart clean at this round's broadcast.
+        if env.supervised() {
+            let sd = env.supervise(t0);
+            for &w in &sd.readmit {
+                free_at[w] = t0;
+                late_fired[w] = false;
+            }
+            if !sd.evict.is_empty() || !sd.readmit.is_empty() {
+                active = env.cluster.active_ids();
+                if env.has_stream() {
+                    active.retain(|&w| env.workers[w].data_ready());
+                }
+                if active.is_empty() {
+                    break;
+                }
+            }
+        }
+        // Re-read per round: the degraded-mode controller can switch
+        // quorum-deadline commits on/off mid-run.  Unsupervised runs
+        // see the same value every round — bit-identical to the
+        // hoisted read.
+        let quorum = env.quorum_on();
 
         // PS → workers: model + dataset (Fig. 2's "receive" components).
         let model_b = env.model_bytes();
@@ -663,6 +759,15 @@ fn run_lockstep(env: &mut SimEnv, spec: FrameworkSpec) -> Result<()> {
                 env.corrupt_outgoing(w, &mut g);
                 grads.push(g);
             }
+        }
+
+        // Speculative chunk re-execution (DESIGN.md §18): each
+        // Suspect/Probation straggler's round is also run by the
+        // healthiest peer, and the earlier of the two finish times
+        // stands in at the barrier.  Both copies race through the
+        // per-worker high-water mark: exactly one is admitted.
+        if env.supervised() && env.cfg.supervisor.speculate {
+            speculate_lockstep(env, &active, &mut finishes, round_no);
         }
 
         // Barrier: wait for the straggler — or, under quorum, commit
@@ -706,7 +811,7 @@ fn run_lockstep(env: &mut SimEnv, spec: FrameworkSpec) -> Result<()> {
                 if finishes[w] <= commit {
                     let arr = commit + env.transfer(w, push_b);
                     env.segment(w, commit, arr, SegmentKind::Comm);
-                    env.run.workers[w].push_times.push(arr);
+                    env.note_push(w, arr);
                     ps_ready = ps_ready.max(arr);
                     committed.push(w);
                 } else {
@@ -738,13 +843,13 @@ fn run_lockstep(env: &mut SimEnv, spec: FrameworkSpec) -> Result<()> {
                 if finishes[w] <= commit {
                     let arr = commit + env.transfer(w, push_b);
                     env.segment(w, commit, arr, SegmentKind::Comm);
-                    env.run.workers[w].push_times.push(arr);
+                    env.note_push(w, arr);
                     ps_ready = ps_ready.max(arr);
                     round.push(g);
                 } else {
                     let arr = finishes[w] + env.transfer(w, push_b);
                     env.segment(w, finishes[w], arr, SegmentKind::Comm);
-                    env.run.workers[w].push_times.push(arr);
+                    env.note_push(w, arr);
                     free_at[w] = free_at[w].max(arr);
                     late_grads.push((w, g, arr));
                 }
@@ -767,6 +872,60 @@ fn run_lockstep(env: &mut SimEnv, spec: FrameworkSpec) -> Result<()> {
     env.pool.release(g_scratch);
     env.pool.release(before);
     Ok(())
+}
+
+/// Lockstep speculation (DESIGN.md §18): for every Suspect/Probation
+/// straggler in `active`, ship its chunk to the healthiest Healthy
+/// peer, charge the backup's re-execution at the Eq. 3 prediction
+/// (deterministic — no RNG draws), and let the earlier of the two
+/// results stand in at the barrier.  Both the straggler's own result
+/// and the backup's copy race through the supervisor's per-worker
+/// high-water mark: exactly one is admitted per round (at-most-once
+/// by construction), the loser is counted as a dedup rejection.
+fn speculate_lockstep(
+    env: &mut SimEnv,
+    active: &[usize],
+    finishes: &mut [f64],
+    round: u64,
+) {
+    let Some(sup) = env.sup.as_ref() else { return };
+    let stragglers: Vec<usize> = active
+        .iter()
+        .copied()
+        .filter(|&w| sup.state(w).speculate())
+        .collect();
+    if stragglers.is_empty() {
+        return;
+    }
+    let mut eligible = vec![false; env.n_workers()];
+    for &w in active {
+        eligible[w] = true;
+    }
+    for w in stragglers {
+        let Some(b) = env.sup.as_ref().and_then(|s| s.pick_backup(&eligible, w))
+        else {
+            continue;
+        };
+        let dss = env.workers[w].dss;
+        let mbs = env.workers[w].mbs;
+        // Chunk handoff + re-execution on the backup, charged after
+        // the backup's own round work.
+        let comm = env.transfer(b, env.dataset_bytes(dss));
+        let redo = env.cluster.predict_time(b, env.cfg.hp.epochs, dss, mbs);
+        let backup_finish = finishes[b] + comm + redo;
+        let sup = env.sup.as_mut().expect("supervised");
+        sup.speculations += 1;
+        sup.spec_covered[w] += 1;
+        sup.spec_backups[b] += 1;
+        // First result wins; the duplicate is rejected by the mark.
+        let admitted = sup.admit(w, round);
+        debug_assert!(admitted, "rounds are monotone: the first copy admits");
+        sup.admit(w, round);
+        if backup_finish < finishes[w] {
+            sup.spec_wins += 1;
+            finishes[w] = backup_finish;
+        }
+    }
 }
 
 // ========================================================= gated rounds
@@ -811,6 +970,16 @@ fn run_gated_rounds(env: &mut SimEnv, spec: FrameworkSpec) -> Result<()> {
         if env.has_faults() {
             let fd = env.apply_faults_up_to(env.queue.now());
             for &w in &fd.rejoined {
+                ready[w] = env.queue.now();
+            }
+        }
+        // Straggler supervision at round granularity (DESIGN.md §18).
+        // No speculation here: a local round has nothing to hand off —
+        // only sync rounds communicate, and those barrier on `active`
+        // which the tick has already shrunk/grown below.
+        if env.supervised() {
+            let sd = env.supervise(env.queue.now());
+            for &w in &sd.readmit {
                 ready[w] = env.queue.now();
             }
         }
@@ -880,7 +1049,7 @@ fn run_gated_rounds(env: &mut SimEnv, spec: FrameworkSpec) -> Result<()> {
             for &w in &active {
                 env.charge_wait(w, barrier - finishes[w], finishes[w]);
                 let arr = barrier + env.transfer(w, push_b);
-                env.run.workers[w].push_times.push(arr);
+                env.note_push(w, arr);
                 ps_ready = ps_ready.max(arr);
             }
             env.queue.advance_to(ps_ready);
@@ -1002,11 +1171,12 @@ fn run_elastic(env: &mut SimEnv, spec: FrameworkSpec) -> Result<()> {
     // Quorum-deadline state (DESIGN.md §15): stragglers past the chosen
     // barrier defer their deltas to the next round instead of holding
     // the commit open.
-    let quorum = env.quorum_on();
     let mut late_grads: Vec<(usize, ParamVec, f64)> = Vec::new();
     let mut late_fired = vec![false; n];
+    let mut round_no: u64 = 0;
     loop {
         let t0 = env.queue.now();
+        round_no += 1;
         // Churn lands at round granularity; rejoined workers get a
         // fresh Eq. 3 prediction so the barrier placement stays sane.
         if env.has_faults() {
@@ -1020,6 +1190,26 @@ fn run_elastic(env: &mut SimEnv, spec: FrameworkSpec) -> Result<()> {
                 );
             }
         }
+        // Straggler supervision at round granularity (DESIGN.md §18):
+        // readmitted workers get a fresh Eq. 3 prediction exactly like
+        // fault rejoins so the barrier placement stays sane.
+        if env.supervised() {
+            let sd = env.supervise(t0);
+            for &w in &sd.readmit {
+                predicted[w] = env.cluster.predict_time(
+                    w,
+                    env.cfg.hp.epochs,
+                    env.workers[w].dss,
+                    env.workers[w].mbs,
+                );
+                late_fired[w] = false;
+            }
+        }
+        // Re-read per round: the degraded-mode controller can switch
+        // quorum-deadline commits on/off mid-run.  Unsupervised runs
+        // see the same value every round — bit-identical to the
+        // hoisted read.
+        let quorum = env.quorum_on();
         let mut active = env.cluster.active_ids();
         if active.is_empty() {
             break;
@@ -1135,6 +1325,26 @@ fn run_elastic(env: &mut SimEnv, spec: FrameworkSpec) -> Result<()> {
                 .max(first_all.min(t0 + lookahead))
         };
 
+        // Speculative cover (DESIGN.md §18): Suspect/Probation workers
+        // predicted to miss the barrier entirely get their chunk
+        // re-run by the healthiest peer; when the backup's copy lands
+        // by the barrier, the straggler's update commits on time
+        // instead of deferring.  Only quorum rounds can defer, so
+        // speculation only arms there.
+        let mut spec_cover = vec![false; n];
+        if quorum && env.supervised() && env.cfg.supervisor.speculate {
+            speculate_elastic(
+                env,
+                &active,
+                &starts,
+                &predicted,
+                barrier,
+                t0,
+                round_no,
+                &mut spec_cover,
+            );
+        }
+
         // Workers run as many local iterations as fit before the
         // barrier (real compute per iteration), then wait.
         pushers.clear();
@@ -1168,7 +1378,7 @@ fn run_elastic(env: &mut SimEnv, spec: FrameworkSpec) -> Result<()> {
             env.charge_wait(w, barrier - t, t);
             if gup {
                 if fired || late_fired[w] {
-                    if quorum && t > barrier {
+                    if quorum && t > barrier && !spec_cover[w] {
                         // Straggler past the quorum commit: the fired
                         // push re-fires at the next barrier.
                         late_fired[w] = true;
@@ -1187,11 +1397,11 @@ fn run_elastic(env: &mut SimEnv, spec: FrameworkSpec) -> Result<()> {
                     let mut g = env.pool.acquire_like(&env.ps.params);
                     before.delta_over_eta_into(&env.workers[w].state.params, eta, &mut g);
                     env.corrupt_outgoing(w, &mut g);
-                    if quorum && t > barrier {
+                    if quorum && t > barrier && !spec_cover[w] {
                         // Late delta: arrives after the commit, folds
                         // into the next round's aggregation.
                         let arr = t + env.transfer(w, env.push_bytes());
-                        env.run.workers[w].push_times.push(arr);
+                        env.note_push(w, arr);
                         late_grads.push((w, g, arr));
                         deferred = true;
                     } else {
@@ -1215,7 +1425,7 @@ fn run_elastic(env: &mut SimEnv, spec: FrameworkSpec) -> Result<()> {
         let mut ps_ready = barrier;
         for &w in push_set {
             let arr = barrier + env.transfer(w, push_b);
-            env.run.workers[w].push_times.push(arr);
+            env.note_push(w, arr);
             ps_ready = ps_ready.max(arr);
         }
         if deferred {
@@ -1259,6 +1469,67 @@ fn run_elastic(env: &mut SimEnv, spec: FrameworkSpec) -> Result<()> {
     env.pool.release(g_scratch);
     env.pool.release(before);
     Ok(())
+}
+
+/// Elastic speculation (DESIGN.md §18): a Suspect/Probation worker
+/// predicted to miss the barrier entirely — it would defer under the
+/// quorum commit — has its chunk handed to the healthiest Healthy
+/// peer.  When the backup's re-execution (dataset transfer plus the
+/// Eq. 3 prediction, both deterministic) lands by the barrier, the
+/// straggler is covered: its update commits at the barrier instead of
+/// deferring.  Both copies race through the supervisor's per-worker
+/// high-water mark: exactly one is admitted per round.
+#[allow(clippy::too_many_arguments)]
+fn speculate_elastic(
+    env: &mut SimEnv,
+    active: &[usize],
+    starts: &[f64],
+    predicted: &[f64],
+    barrier: f64,
+    t0: f64,
+    round: u64,
+    spec_cover: &mut [bool],
+) {
+    let Some(sup) = env.sup.as_ref() else { return };
+    let stragglers: Vec<usize> = active
+        .iter()
+        .copied()
+        .filter(|&w| {
+            sup.state(w).speculate() && starts[w] + predicted[w].max(1e-6) > barrier
+        })
+        .collect();
+    if stragglers.is_empty() {
+        return;
+    }
+    let mut eligible = vec![false; env.n_workers()];
+    for &w in active {
+        eligible[w] = true;
+    }
+    for w in stragglers {
+        let Some(b) = env.sup.as_ref().and_then(|s| s.pick_backup(&eligible, w))
+        else {
+            continue;
+        };
+        let dss = env.workers[w].dss;
+        let mbs = env.workers[w].mbs;
+        // Chunk handoff + re-execution on the backup, from the round
+        // broadcast onward.
+        let comm = env.transfer(b, env.dataset_bytes(dss));
+        let redo = env.cluster.predict_time(b, env.cfg.hp.epochs, dss, mbs);
+        let backup_done = t0 + comm + redo;
+        let sup = env.sup.as_mut().expect("supervised");
+        sup.speculations += 1;
+        sup.spec_covered[w] += 1;
+        sup.spec_backups[b] += 1;
+        // First result wins; the duplicate is rejected by the mark.
+        let admitted = sup.admit(w, round);
+        debug_assert!(admitted, "rounds are monotone: the first copy admits");
+        sup.admit(w, round);
+        if backup_done <= barrier {
+            sup.spec_wins += 1;
+            spec_cover[w] = true;
+        }
+    }
 }
 
 #[cfg(test)]

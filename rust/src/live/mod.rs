@@ -45,6 +45,15 @@
 //! read timeout feeding a bounded retransmit loop with jittered
 //! backoff ([`reconnect_delay`]), and a partitioned worker parks,
 //! then resyncs through the ordinary reconnect path on heal.
+//!
+//! **Straggler supervision (DESIGN.md §18):** when
+//! `RunConfig::supervisor` is enabled, `TimeReport` heartbeat
+//! latencies and push arrivals feed the same health-scored FSM the
+//! simulator uses, ticked by the lease-reaper loop.  Live supervision
+//! is *advisory*: health states and the degraded signal surface as
+//! [`LiveReport`] counters while the lease layer keeps owning
+//! membership.  Off (the default) it is wire-invisible — no extra
+//! frames, same replies, same apply path.
 
 use std::io::{BufReader, BufWriter, Write};
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
@@ -61,8 +70,10 @@ use crate::faults::CorruptKind;
 use crate::gup::Gup;
 use crate::ps::{PsState, UpdateGuard};
 use crate::runtime::{init_params, MockRuntime, ModelRuntime};
+use crate::supervisor::Supervisor;
 use crate::tensor::{BufferPool, ParamVec};
 use crate::util::rng::Xoshiro256pp;
+use crate::util::salts;
 use crate::wire::{
     read_frame_with, read_seq_frame_with, write_frame_with, write_seq_frame_with,
     Message, TensorPayload, WireError, SEQ_FRAME_OVERHEAD,
@@ -136,6 +147,13 @@ pub struct LiveReport {
     /// FNV-1a digest of the final global parameters — cheap cross-run
     /// parity checks (killed vs unkilled coordinator).
     pub model_digest: u64,
+    /// Supervisor health-lifecycle counters (all 0 when supervision is
+    /// off).  Live evictions are *advisory*: the health states and the
+    /// degraded signal surface here while the lease layer keeps owning
+    /// membership (DESIGN.md §18).
+    pub sup_evictions: u64,
+    pub sup_readmissions: u64,
+    pub sup_degraded_enters: u64,
 }
 
 /// How a churned live worker fails.
@@ -184,8 +202,8 @@ pub struct LivePartition {
 /// Seeded frame-level network chaos for a live run — the wire twin of
 /// the simulator's `FaultKind::Net` species.  Rates are per outgoing
 /// frame, decided from a per-worker deterministic stream
-/// (`stream(seed, 0xC4A0 ^ wid)`, the same salt family as the DES
-/// `ChaosLink`).
+/// (`stream(seed, `[`salts::CHAOS_LINK`]` ^ wid)`, the same salt family
+/// as the DES `ChaosLink`).
 #[derive(Debug, Clone, Copy, Default)]
 pub struct LiveChaos {
     pub seed: u64,
@@ -372,7 +390,7 @@ impl ChaosTx {
             drop: chaos.drop,
             dup: chaos.dup,
             reorder: chaos.reorder,
-            rng: Xoshiro256pp::stream(chaos.seed, 0xC4A0 ^ wid as u64),
+            rng: Xoshiro256pp::stream(chaos.seed, salts::CHAOS_LINK ^ wid as u64),
             held: Vec::new(),
             dropped: 0,
             duplicated: 0,
@@ -499,6 +517,12 @@ struct PsShared {
     transport_dups: AtomicU64,
     /// Set once every worker thread has exited; unblocks the acceptor.
     shutdown: AtomicBool,
+    /// Advisory straggler supervision (DESIGN.md §18): heartbeats and
+    /// pushes feed the health model, the reaper loop ticks the FSM.
+    /// `None` when supervision is off — the wire protocol, replies and
+    /// apply path are byte-identical either way.
+    sup: Option<Mutex<Supervisor>>,
+    start: Instant,
     lease_timeout: Duration,
     deadline: Instant,
 }
@@ -560,6 +584,46 @@ impl PsShared {
                 l.alive = false;
                 self.lease_expirations.fetch_add(1, Ordering::Relaxed);
             }
+        }
+    }
+
+    /// Feed one iteration's compute latency into the health model
+    /// (no-op when supervision is off or the id is out of range).
+    fn sup_observe_iter(&self, w: usize, dur: f64) {
+        if let Some(sup) = &self.sup {
+            let mut s = sup.lock().unwrap();
+            if w < s.n_workers() {
+                s.observe_iter(w, dur);
+            }
+        }
+    }
+
+    /// Feed a push arrival (wall seconds since run start) into the
+    /// inter-push gap EWMA.
+    fn sup_observe_push(&self, w: usize) {
+        if let Some(sup) = &self.sup {
+            let now = self.start.elapsed().as_secs_f64();
+            let mut s = sup.lock().unwrap();
+            if w < s.n_workers() {
+                s.observe_push(w, now);
+            }
+        }
+    }
+
+    /// One advisory supervision tick over the live lease membership.
+    /// Health states and the degraded signal advance; membership
+    /// itself stays owned by the lease layer (live evictions are
+    /// surfaced in [`LiveReport`], never enforced on sockets).
+    fn sup_tick(&self) {
+        if let Some(sup) = &self.sup {
+            let now = self.start.elapsed().as_secs_f64();
+            let mut s = sup.lock().unwrap();
+            let n = s.n_workers();
+            let active: Vec<bool> = {
+                let ls = self.leases.lock().unwrap();
+                (0..n).map(|w| ls.get(w).map(|l| l.alive).unwrap_or(false)).collect()
+            };
+            s.tick(&active, now);
         }
     }
 }
@@ -700,6 +764,11 @@ fn run_live_opts(
         acks_sent: AtomicU64::new(0),
         transport_dups: AtomicU64::new(0),
         shutdown: AtomicBool::new(false),
+        sup: cfg
+            .supervisor
+            .on()
+            .then(|| Mutex::new(Supervisor::new(&cfg.supervisor, n_workers, cfg.seed))),
+        start,
         lease_timeout,
         deadline: start + duration,
     });
@@ -783,6 +852,7 @@ fn run_live_opts(
                 // the all-workers-done signal ends the loop.
                 Err(e) => {
                     srv.reap_expired(srv.lease_timeout);
+                    srv.sup_tick();
                     if srv.shutdown.load(Ordering::Relaxed)
                         || Instant::now() > srv.deadline + grace
                     {
@@ -845,7 +915,7 @@ fn run_live_opts(
                 .as_ref()
                 .map(|c| ChaosTx::new(c, wid))
                 .filter(|c| c.armed());
-            let mut jitter = Xoshiro256pp::stream(cfg.seed, 0xBACC ^ wid as u64);
+            let mut jitter = Xoshiro256pp::stream(cfg.seed, salts::LIVE_JITTER ^ wid as u64);
             let read_timeout = my_chaos
                 .filter(|c| c.drop > 0.0)
                 .map(|_| CHAOS_READ_TIMEOUT);
@@ -1116,6 +1186,13 @@ fn run_live_opts(
     shared.shutdown.store(true, Ordering::Relaxed);
     let _ = acceptor.join();
 
+    let (sup_evictions, sup_readmissions, sup_degraded_enters) = match &shared.sup {
+        Some(s) => {
+            let s = s.lock().unwrap();
+            (s.evictions, s.readmissions, s.degraded_enters)
+        }
+        None => (0, 0, 0),
+    };
     let coord = &mut *shared.state.lock().unwrap();
     // Final checkpoint so a state_dir always reflects run end.
     if coord.journal.is_some() {
@@ -1142,6 +1219,9 @@ fn run_live_opts(
         acks_sent: shared.acks_sent.load(Ordering::Relaxed),
         transport_dups: shared.transport_dups.load(Ordering::Relaxed),
         model_digest: params_digest(&coord.ps.params),
+        sup_evictions,
+        sup_readmissions,
+        sup_degraded_enters,
     })
 }
 
@@ -1578,15 +1658,20 @@ fn serve_worker(stream: TcpStream, srv: Arc<PsShared>, fp16: bool) -> Result<()>
                 }
                 srv.acks_sent.fetch_add(1, Ordering::Relaxed);
             }
-            Message::TimeReport { worker, .. } if fresh => {
+            Message::TimeReport { worker, train_time, .. } if fresh => {
                 srv.iterations.fetch_add(1, Ordering::Relaxed);
                 srv.lease_renew(worker as usize);
+                srv.sup_observe_iter(worker as usize, train_time);
             }
             // Duplicated heartbeats die here, silently — they carry no
             // state and get no reply.
             Message::TimeReport { .. } => {}
             Message::PushUpdate { worker, iter, test_loss, train_time, grads } => {
                 srv.lease_renew(worker as usize);
+                srv.sup_observe_iter(worker as usize, train_time);
+                if fresh {
+                    srv.sup_observe_push(worker as usize);
+                }
                 let reply = {
                     let coord = &mut *srv.state.lock().unwrap();
                     if fresh {
@@ -1670,7 +1755,7 @@ mod tests {
 
     #[test]
     fn reconnect_delay_is_jitter_bounded_and_capped() {
-        let mut rng = Xoshiro256pp::stream(9, 0xBACC);
+        let mut rng = Xoshiro256pp::stream(9, salts::LIVE_JITTER);
         for attempt in 0..12u32 {
             let base_ms = (RECONNECT_BASE_MS << attempt.min(5)).min(RECONNECT_CAP_MS);
             for _ in 0..64 {
@@ -1687,7 +1772,7 @@ mod tests {
     #[test]
     fn reconnect_delay_is_deterministic_per_seed_and_spread_per_worker() {
         let seq = |wid: u64| -> Vec<Duration> {
-            let mut rng = Xoshiro256pp::stream(42, 0xBACC ^ wid);
+            let mut rng = Xoshiro256pp::stream(42, salts::LIVE_JITTER ^ wid);
             (0..8).map(|a| reconnect_delay(a, &mut rng)).collect()
         };
         // Same worker, same seed → identical backoff schedule.

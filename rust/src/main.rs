@@ -36,7 +36,8 @@ fn usage() -> String {
      SUBCOMMANDS:\n\
        run   run one framework over the simulated 12-worker edge cluster\n\
        exp   regenerate a paper experiment: fig1 fig2 fig3 fig4 fig11\n\
-             fig12 fig13 fig14 table3 faults robust chaos scale all\n\
+             fig12 fig13 fig14 table3 faults robust chaos straggler\n\
+             scale all\n\
        live  run the real threaded TCP parameter server + workers\n\
              (worker leases, heartbeat timeouts, reconnect resync)\n\
        info  show artifacts, cluster and hyper-parameter defaults\n\n\
@@ -48,7 +49,9 @@ fn usage() -> String {
      24-spec policy-composition grid (DESIGN.md §14) instead of the six\n\
      presets.  `hermes exp stream` sweeps the streaming non-IID data\n\
      engine (DESIGN.md §16): seeded per-worker arrival curves ×\n\
-     Dirichlet label skew × framework.  Frameworks are composable\n\
+     Dirichlet label skew × framework.  `hermes exp straggler` sweeps a\n\
+     mid-run ×100 slowdown with supervision off/on (`hermes run bsp\n\
+     --supervise`, DESIGN.md §18).  Frameworks are composable\n\
      specs: `hermes run ssp+gup`, `bsp+dynalloc`, or with a data axis\n\
      `bsp+streamalloc@trickle`, `hermes@burst`, …\n\n\
      Try `hermes <cmd> --help`."
@@ -97,6 +100,11 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
         .flag("no-dynamic-alloc", "disable dual-binary-search sizing")
         .flag("no-prefetch", "disable prefetching")
         .flag("no-fp16", "disable fp16 wire compression")
+        .flag(
+            "supervise",
+            "enable straggler supervision: health-scored worker lifecycle, \
+             speculative re-execution, degraded-mode auto-tuning (DESIGN.md §18)",
+        )
         .flag("timeline", "record Fig.1-style timeline segments");
     let m = cmd.parse(args)?;
 
@@ -130,6 +138,7 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
     cfg.dynamic_alloc = !m.has("no-dynamic-alloc");
     cfg.prefetch = !m.has("no-prefetch");
     cfg.net.fp16_wire = !m.has("no-fp16");
+    cfg.supervisor.enabled = m.has("supervise");
     cfg.faults.churn_rate = m.get_f64("churn")?;
 
     let rt = exp::make_runtime(&model, &artifacts_dir(&m)).map_err(|e| e.to_string())?;
@@ -164,7 +173,7 @@ fn cmd_exp(args: &[String]) -> Result<(), String> {
         .pos(
             "which",
             "fig1 fig2 fig3 fig4 fig11 fig12 fig13 fig14 table3 faults robust \
-             chaos stream scale all",
+             chaos straggler stream scale all",
         )
         .opt("model", "mock", "mock | cnn | alexnet (compute backend)")
         .opt("artifacts", "artifacts", "artifacts directory")
@@ -207,6 +216,9 @@ fn cmd_exp(args: &[String]) -> Result<(), String> {
         }
         "chaos" => {
             exp::chaos_sweep(&out, model, &arts, threads).map(|_| ())
+        }
+        "straggler" => {
+            exp::straggler_sweep(&out, model, &arts, threads).map(|_| ())
         }
         "stream" => exp::stream_sweep(
             &out,

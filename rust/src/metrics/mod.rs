@@ -62,6 +62,15 @@ pub struct WorkerMetrics {
     /// Cumulative acks the receiver sent back on this worker's link
     /// (chaosed windows only; clean links carry no ack traffic).
     pub acks_sent: u64,
+    /// Rounds where a backup worker speculatively covered this
+    /// worker's chunk (supervised runs, DESIGN.md §18).
+    pub spec_covered: u64,
+    /// Rounds where this worker ran as the speculative backup.
+    pub spec_backups: u64,
+    /// Supervisor evictions of this worker.
+    pub sup_evictions: u64,
+    /// Supervisor readmissions of this worker.
+    pub sup_readmissions: u64,
 }
 
 impl WorkerMetrics {
@@ -143,6 +152,22 @@ pub struct RunMetrics {
     /// any run, since every driver transfer routes through it (the
     /// SimNet-ledger reconciliation invariant).
     pub chaos_bytes: u64,
+    /// Speculative chunk re-executions launched by the supervisor —
+    /// zero unless supervision is enabled (DESIGN.md §18).
+    pub sup_speculations: u64,
+    /// Speculations whose backup result won the first-wins race.
+    pub sup_spec_wins: u64,
+    /// Commits rejected by the high-water dedup (the losing half of
+    /// an original/backup race — proves at-most-once application).
+    pub sup_spec_dedup: u64,
+    /// Workers evicted by the supervisor.
+    pub sup_evictions: u64,
+    /// Workers readmitted after supervisor eviction.
+    pub sup_readmissions: u64,
+    /// Degraded-mode entries (fleet-wide unhealth auto-tuning).
+    pub sup_degraded_enters: u64,
+    /// Degraded-mode exits (defaults restored on recovery).
+    pub sup_degraded_exits: u64,
 }
 
 impl RunMetrics {
@@ -223,6 +248,19 @@ impl RunMetrics {
             ("frames_duplicated", Json::Num(self.frames_duplicated as f64)),
             ("acks_sent", Json::Num(self.acks_sent as f64)),
             ("chaos_bytes", Json::Num(self.chaos_bytes as f64)),
+            ("sup_speculations", Json::Num(self.sup_speculations as f64)),
+            ("sup_spec_wins", Json::Num(self.sup_spec_wins as f64)),
+            ("sup_spec_dedup", Json::Num(self.sup_spec_dedup as f64)),
+            ("sup_evictions", Json::Num(self.sup_evictions as f64)),
+            ("sup_readmissions", Json::Num(self.sup_readmissions as f64)),
+            (
+                "sup_degraded_enters",
+                Json::Num(self.sup_degraded_enters as f64),
+            ),
+            (
+                "sup_degraded_exits",
+                Json::Num(self.sup_degraded_exits as f64),
+            ),
             (
                 "crashed_workers",
                 Json::Arr(

@@ -10,6 +10,7 @@ use crate::faults::NetFault;
 use crate::runtime::ModelMeta;
 use crate::tensor::ParamVec;
 use crate::util::rng::Xoshiro256pp;
+use crate::util::salts;
 use crate::wire::{Message, TensorPayload};
 
 /// Per-worker and aggregate traffic counters.
@@ -172,7 +173,7 @@ pub struct ChaosStats {
 /// Deterministic frame-level fault injector wrapping [`SimNet`].
 ///
 /// Chaos decisions are drawn from one seeded RNG stream per worker
-/// (salt `0xC4A0 ^ w`), keyed only by that worker's frame ordinal —
+/// (salt [`salts::CHAOS_LINK`]` ^ w`), keyed only by that worker's frame ordinal —
 /// never by wall order across workers — so runs are bit-identical per
 /// seed across reruns, scalar/SIMD backends, and shard counts, the
 /// same discipline as `FaultPlan` and `StreamPlan`.  Species arm and
@@ -194,7 +195,7 @@ impl ChaosLink {
             enabled,
             links: vec![LinkState::default(); n_workers],
             rngs: (0..n_workers)
-                .map(|w| Xoshiro256pp::stream(seed, 0xC4A0 ^ w as u64))
+                .map(|w| Xoshiro256pp::stream(seed, salts::CHAOS_LINK ^ w as u64))
                 .collect(),
             per_worker: vec![ChaosStats::default(); n_workers],
             total: ChaosStats::default(),

@@ -32,6 +32,7 @@ pub use xla_rt::XlaRuntime;
 use anyhow::Result;
 
 use crate::tensor::ParamVec;
+use crate::util::salts;
 
 /// Output of one fused fwd+bwd+update step.
 #[derive(Debug, Clone)]
@@ -117,7 +118,7 @@ pub trait ModelRuntime {
 pub fn init_params(meta: &ModelMeta, seed: u64) -> ParamVec {
     use crate::tensor::Tensor;
     use crate::util::rng::Xoshiro256pp;
-    let mut rng = Xoshiro256pp::stream(seed, 0x9e1f);
+    let mut rng = Xoshiro256pp::stream(seed, salts::INIT_PARAMS);
     let mut tensors = Vec::with_capacity(meta.param_shapes.len());
     for shape in &meta.param_shapes {
         if shape.len() == 1 {

@@ -1,0 +1,702 @@
+//! Straggler supervision (DESIGN.md §18): a deterministic, per-worker
+//! health model driving a hysteresis lifecycle state machine.
+//!
+//! The paper's thesis is that stragglers — not bandwidth — stall
+//! heterogeneous edge training.  The alloc policies answer by
+//! *resizing* a straggler's chunk on periodic IQR rebalances, but a
+//! worker that slows 100× mid-run still pins every barrier and quorum
+//! round to its tail.  The supervisor closes the loop:
+//!
+//! * **Health model** — scalar-ordered EWMAs of iteration latency and
+//!   inter-push gaps per worker, scored against the fleet median.  A
+//!   worker is *unhealthy* when its score exceeds `suspect_factor ×
+//!   (1 + jitterᵂ)` and *healthy* below `recover_factor × (1 +
+//!   jitterᵂ)`; between the two lies a hysteresis band where streaks
+//!   hold (no flapping).  The per-worker threshold jitter is drawn
+//!   once from `stream(seed, SUPERVISOR ^ w)` so fleets do not
+//!   transition in lockstep, yet every decision is a pure function of
+//!   the seed.
+//! * **Lifecycle FSM** — `Healthy → Suspect → Probation → Evicted →
+//!   Readmitted`, advanced by consecutive-observation streaks and
+//!   walked back one state at a time on recovery.  Readmission after
+//!   eviction backs off exponentially (`probe_after_s × 2^evictions`).
+//! * **Speculation bookkeeping** — `admit(w, round)` is a per-worker
+//!   high-water mark: the first of {original, backup} to commit a
+//!   round wins and the loser is rejected, so speculative
+//!   re-execution is at-most-once by construction.
+//! * **Degraded-mode controller** — when more than `degrade_frac` of
+//!   the active fleet is un-Healthy, the driver tightens
+//!   `RobustConfig` (quorum / round deadline / rebalance cadence) and
+//!   restores defaults once the fleet recovers; enter/exit use a 2:1
+//!   hysteresis ratio so the controller cannot thrash.
+//!
+//! Bit-invisibility: the supervisor is only constructed when
+//! `SupervisorConfig::on()`; a disabled run makes zero RNG draws and
+//! zero float ops through this module, so defaults-off runs are
+//! byte-identical to the frozen reference drivers.
+
+use crate::config::SupervisorConfig;
+use crate::util::rng::Xoshiro256pp;
+use crate::util::salts;
+
+/// Base of the supervisor's DES wake-up tag window
+/// `[SUP_TAG_BASE, SUP_TAG_BASE + 0x1_0000)` — readmission probes are
+/// scheduled as `SUP_TAG_BASE + worker`.  Sits strictly between the
+/// driver's small-constant tags and the stream window (pinned by
+/// `util::salts::tests::des_tag_windows_are_disjoint`).
+pub const SUP_TAG_BASE: u32 = 0x50BA_0000;
+
+/// Does this DES tag belong to the supervisor window?
+#[inline]
+pub fn is_sup_tag(tag: u32) -> bool {
+    (SUP_TAG_BASE..SUP_TAG_BASE + 0x1_0000).contains(&tag)
+}
+
+/// Worker index encoded in a supervisor tag.
+#[inline]
+pub fn sup_tag_worker(tag: u32) -> usize {
+    debug_assert!(is_sup_tag(tag));
+    (tag - SUP_TAG_BASE) as usize
+}
+
+/// Event form of [`is_sup_tag`] (usable next to `is_fault_tag` /
+/// `is_stream_tag` in the drivers' crash-deferral checks).
+pub fn is_sup_ev(ev: &crate::sim::Ev) -> bool {
+    matches!(ev, crate::sim::Ev::Tag { tag, .. } if is_sup_tag(*tag))
+}
+
+/// The per-worker lifecycle state.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HealthState {
+    /// Normal operation.
+    Healthy,
+    /// Consistently unhealthy; barrier rounds speculate its chunk.
+    Suspect,
+    /// One streak from eviction; still speculated.
+    Probation,
+    /// Removed from the pool; its chunk was re-split to the others.
+    Evicted,
+    /// Back in the pool after an eviction, on a clean slate; one
+    /// healthy streak from full `Healthy`.
+    Readmitted,
+}
+
+impl HealthState {
+    /// Should barrier/quorum rounds speculatively cover this worker?
+    #[inline]
+    pub fn speculate(self) -> bool {
+        matches!(self, HealthState::Suspect | HealthState::Probation)
+    }
+}
+
+/// Per-worker health ledger.
+#[derive(Debug, Clone)]
+struct WorkerHealth {
+    state: HealthState,
+    /// EWMA of iteration compute latency (virtual seconds).
+    lat_ewma: f64,
+    /// EWMA of inter-push gaps (virtual seconds).
+    gap_ewma: f64,
+    /// Time of the last observed push, or < 0 before the first.
+    last_push: f64,
+    /// Last score computed by `tick` (max of the EWMA/median ratios).
+    score: f64,
+    /// Consecutive unhealthy observations (holds inside the band).
+    unhealthy: u64,
+    /// Consecutive healthy observations (holds inside the band).
+    healthy: u64,
+    /// Per-worker threshold jitter in `[-jitter, +jitter]`, drawn
+    /// once from `stream(seed, SUPERVISOR ^ w)`.
+    jitter: f64,
+    /// When an evicted worker becomes eligible for readmission.
+    readmit_at: f64,
+    /// Times this worker has been evicted (drives the backoff).
+    evictions: u64,
+    /// High-water mark of committed rounds (speculation dedup).
+    hwm: u64,
+    hwm_set: bool,
+}
+
+/// What a `tick` decided: the driver applies evictions (pool
+/// re-split), readmissions (model+GUP resync) and degraded-mode
+/// entry/exit.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct SupDelta {
+    pub evict: Vec<usize>,
+    pub readmit: Vec<usize>,
+    pub enter_degraded: bool,
+    pub exit_degraded: bool,
+}
+
+impl SupDelta {
+    pub fn is_empty(&self) -> bool {
+        self.evict.is_empty()
+            && self.readmit.is_empty()
+            && !self.enter_degraded
+            && !self.exit_degraded
+    }
+}
+
+/// The supervisor: health model + FSM + speculation bookkeeping.
+#[derive(Debug, Clone)]
+pub struct Supervisor {
+    cfg: SupervisorConfig,
+    workers: Vec<WorkerHealth>,
+    degraded: bool,
+    scratch: Vec<f64>,
+    // Fleet counters, folded into `RunMetrics` at `finish()`.
+    pub speculations: u64,
+    pub spec_wins: u64,
+    pub spec_dedup: u64,
+    pub evictions: u64,
+    pub readmissions: u64,
+    pub degraded_enters: u64,
+    pub degraded_exits: u64,
+    // Per-worker counters, folded into `WorkerMetrics`.
+    pub spec_covered: Vec<u64>,
+    pub spec_backups: Vec<u64>,
+    pub evicted_count: Vec<u64>,
+    pub readmitted_count: Vec<u64>,
+}
+
+impl Supervisor {
+    /// Build a supervisor for `n` workers.  The only RNG draws the
+    /// subsystem ever makes happen here: one threshold jitter per
+    /// worker from its own `SUPERVISOR ^ w` stream.
+    pub fn new(cfg: &SupervisorConfig, n: usize, seed: u64) -> Self {
+        let workers = (0..n)
+            .map(|w| {
+                let mut rng =
+                    Xoshiro256pp::stream(seed, salts::SUPERVISOR ^ w as u64);
+                let jitter = cfg.jitter * (2.0 * rng.next_f64() - 1.0);
+                WorkerHealth {
+                    state: HealthState::Healthy,
+                    lat_ewma: 0.0,
+                    gap_ewma: 0.0,
+                    last_push: -1.0,
+                    score: 0.0,
+                    unhealthy: 0,
+                    healthy: 0,
+                    jitter,
+                    readmit_at: 0.0,
+                    evictions: 0,
+                    hwm: 0,
+                    hwm_set: false,
+                }
+            })
+            .collect();
+        Self {
+            cfg: cfg.clone(),
+            workers,
+            degraded: false,
+            scratch: Vec::with_capacity(n),
+            speculations: 0,
+            spec_wins: 0,
+            spec_dedup: 0,
+            evictions: 0,
+            readmissions: 0,
+            degraded_enters: 0,
+            degraded_exits: 0,
+            spec_covered: vec![0; n],
+            spec_backups: vec![0; n],
+            evicted_count: vec![0; n],
+            readmitted_count: vec![0; n],
+        }
+    }
+
+    pub fn state(&self, w: usize) -> HealthState {
+        self.workers[w].state
+    }
+
+    /// Number of workers this supervisor tracks.
+    pub fn n_workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    pub fn degraded(&self) -> bool {
+        self.degraded
+    }
+
+    /// When an evicted worker may be probed for readmission.
+    pub fn readmit_at(&self, w: usize) -> f64 {
+        self.workers[w].readmit_at
+    }
+
+    /// Record one iteration's compute latency.
+    pub fn observe_iter(&mut self, w: usize, dur: f64) {
+        let a = self.cfg.ewma_alpha;
+        let h = &mut self.workers[w];
+        h.lat_ewma = if h.lat_ewma == 0.0 {
+            dur
+        } else {
+            a * dur + (1.0 - a) * h.lat_ewma
+        };
+    }
+
+    /// Record a push arrival at virtual time `t` (feeds the gap EWMA).
+    pub fn observe_push(&mut self, w: usize, t: f64) {
+        let a = self.cfg.ewma_alpha;
+        let h = &mut self.workers[w];
+        if h.last_push >= 0.0 {
+            let gap = (t - h.last_push).max(0.0);
+            h.gap_ewma = if h.gap_ewma == 0.0 {
+                gap
+            } else {
+                a * gap + (1.0 - a) * h.gap_ewma
+            };
+        }
+        h.last_push = t;
+    }
+
+    /// Upper median of the positive entries of `xs` in `scratch`
+    /// order; 0.0 when none.  Scalar `total_cmp` ordering keeps the
+    /// result identical across kernel backends.
+    fn median(scratch: &mut [f64]) -> f64 {
+        if scratch.is_empty() {
+            return 0.0;
+        }
+        scratch.sort_unstable_by(f64::total_cmp);
+        scratch[scratch.len() / 2]
+    }
+
+    /// One supervision step at virtual time `now` over the workers
+    /// marked `active` (alive and not evicted).  Scores every active
+    /// worker against the fleet medians, advances the FSM, and
+    /// returns the lifecycle decisions for the driver to apply.
+    pub fn tick(&mut self, active: &[bool], now: f64) -> SupDelta {
+        let mut delta = SupDelta::default();
+
+        // Fleet medians over active workers with observations.
+        self.scratch.clear();
+        for (w, h) in self.workers.iter().enumerate() {
+            if active.get(w).copied().unwrap_or(false) && h.lat_ewma > 0.0 {
+                self.scratch.push(h.lat_ewma);
+            }
+        }
+        let med_lat = Self::median(&mut self.scratch);
+        self.scratch.clear();
+        for (w, h) in self.workers.iter().enumerate() {
+            if active.get(w).copied().unwrap_or(false) && h.gap_ewma > 0.0 {
+                self.scratch.push(h.gap_ewma);
+            }
+        }
+        let med_gap = Self::median(&mut self.scratch);
+
+        let suspect_after = self.cfg.suspect_after;
+        let probation_after = suspect_after + self.cfg.evict_after;
+        let evict_after = suspect_after + 2 * self.cfg.evict_after;
+
+        for w in 0..self.workers.len() {
+            let h = &mut self.workers[w];
+            if h.state == HealthState::Evicted {
+                if self.cfg.evict && now >= h.readmit_at {
+                    h.state = HealthState::Readmitted;
+                    h.unhealthy = 0;
+                    h.healthy = 0;
+                    // Clean slate: rejoin at the fleet median so one
+                    // stale pre-eviction EWMA cannot re-evict it.
+                    h.lat_ewma = med_lat;
+                    h.gap_ewma = med_gap;
+                    h.last_push = -1.0;
+                    self.readmissions += 1;
+                    self.readmitted_count[w] += 1;
+                    delta.readmit.push(w);
+                }
+                continue;
+            }
+            if !active.get(w).copied().unwrap_or(false) {
+                continue;
+            }
+
+            // Score: worst ratio of the two EWMAs to the fleet
+            // median; components without data contribute nothing.
+            let mut score = 0.0f64;
+            if med_lat > 0.0 && h.lat_ewma > 0.0 {
+                score = score.max(h.lat_ewma / med_lat);
+            }
+            if med_gap > 0.0 && h.gap_ewma > 0.0 {
+                score = score.max(h.gap_ewma / med_gap);
+            }
+            h.score = score;
+
+            let up = self.cfg.suspect_factor * (1.0 + h.jitter);
+            let down = self.cfg.recover_factor * (1.0 + h.jitter);
+            if score > up {
+                h.unhealthy += 1;
+                h.healthy = 0;
+            } else if score < down {
+                h.healthy += 1;
+                h.unhealthy = 0;
+            }
+            // Inside [down, up]: hysteresis band — streaks hold.
+
+            // Escalate on unhealthy streaks.
+            match h.state {
+                HealthState::Healthy | HealthState::Readmitted
+                    if h.unhealthy >= suspect_after =>
+                {
+                    h.state = HealthState::Suspect;
+                }
+                HealthState::Suspect if h.unhealthy >= probation_after => {
+                    h.state = HealthState::Probation;
+                }
+                HealthState::Probation
+                    if self.cfg.evict && h.unhealthy >= evict_after =>
+                {
+                    h.state = HealthState::Evicted;
+                    h.readmit_at = now
+                        + self.cfg.probe_after_s
+                            * (1u64 << h.evictions.min(16)) as f64;
+                    h.evictions += 1;
+                    h.unhealthy = 0;
+                    h.healthy = 0;
+                    self.evictions += 1;
+                    self.evicted_count[w] += 1;
+                    delta.evict.push(w);
+                }
+                _ => {}
+            }
+            // De-escalate one state per healthy streak.
+            if h.healthy >= self.cfg.readmit_after {
+                let next = match h.state {
+                    HealthState::Probation => Some(HealthState::Suspect),
+                    HealthState::Suspect | HealthState::Readmitted => {
+                        Some(HealthState::Healthy)
+                    }
+                    _ => None,
+                };
+                if let Some(s) = next {
+                    h.state = s;
+                    h.healthy = 0;
+                }
+            }
+        }
+
+        // Degraded-mode controller with 2:1 enter/exit hysteresis.
+        if self.cfg.degrade {
+            let mut act = 0usize;
+            let mut unhealthy = 0usize;
+            for (w, h) in self.workers.iter().enumerate() {
+                if h.state == HealthState::Evicted {
+                    act += 1;
+                    unhealthy += 1;
+                } else if active.get(w).copied().unwrap_or(false) {
+                    act += 1;
+                    if h.state != HealthState::Healthy {
+                        unhealthy += 1;
+                    }
+                }
+            }
+            if act > 0 {
+                let frac = unhealthy as f64 / act as f64;
+                if !self.degraded && frac > self.cfg.degrade_frac {
+                    self.degraded = true;
+                    self.degraded_enters += 1;
+                    delta.enter_degraded = true;
+                } else if self.degraded && frac < self.cfg.degrade_frac / 2.0 {
+                    self.degraded = false;
+                    self.degraded_exits += 1;
+                    delta.exit_degraded = true;
+                }
+            }
+        }
+        delta
+    }
+
+    /// The healthiest idle candidate to back up `exclude`'s chunk:
+    /// the active `Healthy` worker with the lowest score (ties break
+    /// to the lowest index — deterministic).
+    pub fn pick_backup(&self, active: &[bool], exclude: usize) -> Option<usize> {
+        let mut best: Option<usize> = None;
+        for (w, h) in self.workers.iter().enumerate() {
+            if w == exclude
+                || !active.get(w).copied().unwrap_or(false)
+                || h.state != HealthState::Healthy
+            {
+                continue;
+            }
+            match best {
+                None => best = Some(w),
+                Some(b) => {
+                    if h.score.total_cmp(&self.workers[b].score)
+                        == std::cmp::Ordering::Less
+                    {
+                        best = Some(w);
+                    }
+                }
+            }
+        }
+        best
+    }
+
+    /// First-result-wins dedup through a per-worker high-water mark:
+    /// the first commit of `round` on behalf of worker `w` is
+    /// admitted; any later commit of the same (or an earlier) round —
+    /// the losing half of an original/backup race — is rejected, so a
+    /// speculated round applies at most once.
+    pub fn admit(&mut self, w: usize, round: u64) -> bool {
+        let h = &mut self.workers[w];
+        if !h.hwm_set || round > h.hwm {
+            h.hwm = round;
+            h.hwm_set = true;
+            true
+        } else {
+            self.spec_dedup += 1;
+            false
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> SupervisorConfig {
+        let mut c = SupervisorConfig::default();
+        c.enabled = true;
+        c.jitter = 0.0; // exact thresholds for the ladder tests
+        c
+    }
+
+    /// Feed `n` ticks where worker 0 is `slow`× the others.
+    fn drive(sup: &mut Supervisor, active: &[bool], slow: f64, n: usize) {
+        let t0 = sup.workers[0].last_push.max(0.0);
+        for i in 0..n {
+            let t = t0 + (i + 1) as f64;
+            for w in 0..active.len() {
+                if active[w] {
+                    let d = if w == 0 { slow } else { 1.0 };
+                    sup.observe_iter(w, d);
+                    sup.observe_push(w, t * d);
+                }
+            }
+            sup.tick(active, t);
+        }
+    }
+
+    #[test]
+    fn sup_tags_encode_workers() {
+        assert!(is_sup_tag(SUP_TAG_BASE));
+        assert!(is_sup_tag(SUP_TAG_BASE + 7));
+        assert!(!is_sup_tag(SUP_TAG_BASE - 1));
+        assert!(!is_sup_tag(SUP_TAG_BASE + 0x1_0000));
+        assert_eq!(sup_tag_worker(SUP_TAG_BASE + 3), 3);
+    }
+
+    #[test]
+    fn hysteresis_ladder_escalates_to_eviction() {
+        let c = cfg();
+        let mut sup = Supervisor::new(&c, 4, 42);
+        let active = [true; 4];
+        // Healthy until the suspect streak fills.
+        drive(&mut sup, &active, 100.0, c.suspect_after as usize - 1);
+        assert_eq!(sup.state(0), HealthState::Healthy);
+        drive(&mut sup, &active, 100.0, 1);
+        assert_eq!(sup.state(0), HealthState::Suspect);
+        drive(&mut sup, &active, 100.0, c.evict_after as usize);
+        assert_eq!(sup.state(0), HealthState::Probation);
+        drive(&mut sup, &active, 100.0, c.evict_after as usize);
+        assert_eq!(sup.state(0), HealthState::Evicted);
+        assert_eq!(sup.evictions, 1);
+        assert!(sup.readmit_at(0) > 0.0);
+        // The healthy workers never moved.
+        for w in 1..4 {
+            assert_eq!(sup.state(w), HealthState::Healthy);
+        }
+    }
+
+    #[test]
+    fn recovery_walks_back_one_state_at_a_time() {
+        let c = cfg();
+        let mut sup = Supervisor::new(&c, 4, 42);
+        let active = [true; 4];
+        let to_probation = (c.suspect_after + c.evict_after) as usize;
+        drive(&mut sup, &active, 100.0, to_probation);
+        assert_eq!(sup.state(0), HealthState::Probation);
+        // Recover: Probation → Suspect → Healthy, one streak each.
+        drive(&mut sup, &active, 1.0, c.readmit_after as usize);
+        assert_eq!(sup.state(0), HealthState::Suspect);
+        drive(&mut sup, &active, 1.0, c.readmit_after as usize);
+        assert_eq!(sup.state(0), HealthState::Healthy);
+        assert_eq!(sup.evictions, 0);
+    }
+
+    #[test]
+    fn band_scores_hold_streaks_no_flapping() {
+        let c = cfg();
+        let mut sup = Supervisor::new(&c, 4, 42);
+        let active = [true; 4];
+        drive(&mut sup, &active, 100.0, c.suspect_after as usize);
+        assert_eq!(sup.state(0), HealthState::Suspect);
+        // A score inside (recover_factor, suspect_factor) is neither
+        // healthy nor unhealthy: the state machine must hold, not
+        // oscillate, no matter how long the worker flaps there.
+        let mid = (c.recover_factor + c.suspect_factor) / 2.0;
+        for _ in 0..50 {
+            drive(&mut sup, &active, mid, 1);
+            assert_eq!(sup.state(0), HealthState::Suspect);
+        }
+        assert_eq!(sup.evictions, 0);
+    }
+
+    #[test]
+    fn flapping_worker_is_never_evicted() {
+        let c = cfg();
+        let mut sup = Supervisor::new(&c, 4, 42);
+        let active = [true; 4];
+        // Alternate one slow and one fast observation: streaks reset
+        // each flip, so the worker can reach Suspect at worst.
+        for _ in 0..100 {
+            drive(&mut sup, &active, 100.0, 1);
+            drive(&mut sup, &active, 1.0, 1);
+        }
+        assert_eq!(sup.evictions, 0);
+        assert_ne!(sup.state(0), HealthState::Evicted);
+        assert_ne!(sup.state(0), HealthState::Probation);
+    }
+
+    #[test]
+    fn readmission_waits_for_exponential_backoff() {
+        let mut c = cfg();
+        c.probe_after_s = 10.0;
+        let mut sup = Supervisor::new(&c, 4, 42);
+        let active = [true; 4];
+        let to_evict = (c.suspect_after + 2 * c.evict_after) as usize;
+        drive(&mut sup, &active, 100.0, to_evict);
+        assert_eq!(sup.state(0), HealthState::Evicted);
+        let at = sup.readmit_at(0);
+        let now = to_evict as f64;
+        assert!((at - (now + 10.0)).abs() < 1e-9, "first backoff is 1×");
+        // Before the probe time: still evicted.
+        let rest = [false, true, true, true];
+        let d = sup.tick(&rest, at - 1.0);
+        assert!(d.readmit.is_empty());
+        assert_eq!(sup.state(0), HealthState::Evicted);
+        // At the probe time: readmitted with median-reset EWMAs.
+        let d = sup.tick(&rest, at);
+        assert_eq!(d.readmit, vec![0]);
+        assert_eq!(sup.state(0), HealthState::Readmitted);
+        assert_eq!(sup.readmissions, 1);
+        // A second eviction backs off 2×.  `drive` restarts its clock
+        // at the readmission `last_push` reset, so the eviction lands
+        // at t = to_evict again, now with a doubled probe delay.
+        let all = [true; 4];
+        drive(&mut sup, &all, 100.0, to_evict);
+        assert_eq!(sup.state(0), HealthState::Evicted);
+        let gap2 = sup.readmit_at(0) - to_evict as f64;
+        assert!((gap2 - 20.0).abs() < 1e-9, "second backoff is 2×: {gap2}");
+    }
+
+    #[test]
+    fn admit_is_at_most_once_per_round() {
+        let c = cfg();
+        let mut sup = Supervisor::new(&c, 2, 42);
+        assert!(sup.admit(0, 1));
+        assert!(!sup.admit(0, 1), "the losing half of the race is rejected");
+        assert!(sup.admit(0, 2));
+        assert!(!sup.admit(0, 1), "stale rounds below the mark are rejected");
+        assert_eq!(sup.spec_dedup, 2);
+        // Round 0 is a valid first round.
+        assert!(sup.admit(1, 0));
+        assert!(!sup.admit(1, 0));
+    }
+
+    #[test]
+    fn pick_backup_prefers_lowest_score_healthy_worker() {
+        let c = cfg();
+        let mut sup = Supervisor::new(&c, 4, 42);
+        let active = [true; 4];
+        // Worker 0 slow, worker 2 slightly slow, 1 and 3 fast.
+        for i in 0..4 {
+            let t = (i + 1) as f64;
+            sup.observe_iter(0, 50.0);
+            sup.observe_iter(1, 1.0);
+            sup.observe_iter(2, 2.0);
+            sup.observe_iter(3, 1.0);
+            for w in 0..4 {
+                sup.observe_push(w, t);
+            }
+            sup.tick(&active, t);
+        }
+        assert_eq!(sup.state(0), HealthState::Suspect);
+        // Ties on score break to the lowest index.
+        assert_eq!(sup.pick_backup(&active, 0), Some(1));
+        // An inactive or non-Healthy candidate is skipped.
+        let some = [true, false, true, true];
+        assert_eq!(sup.pick_backup(&some, 0), Some(3));
+        assert_eq!(sup.pick_backup(&[true, false, true, false], 0), Some(2));
+        assert_eq!(sup.pick_backup(&[true, false, false, false], 0), None);
+    }
+
+    #[test]
+    fn degraded_mode_enters_and_exits_with_hysteresis() {
+        let mut c = cfg();
+        c.degrade_frac = 0.4;
+        let mut sup = Supervisor::new(&c, 4, 42);
+        let active = [true; 4];
+        // Two of four un-Healthy (0.5 > 0.4): enter degraded.
+        let mut entered = false;
+        for i in 0..(c.suspect_after as usize + 2) {
+            let t = (i + 1) as f64;
+            sup.observe_iter(0, 100.0);
+            sup.observe_iter(1, 100.0);
+            sup.observe_iter(2, 1.0);
+            sup.observe_iter(3, 1.0);
+            for w in 0..4 {
+                sup.observe_push(w, t);
+            }
+            let d = sup.tick(&active, t);
+            entered |= d.enter_degraded;
+        }
+        assert!(entered);
+        assert!(sup.degraded());
+        assert_eq!(sup.degraded_enters, 1);
+        // Recovery must cross the lower threshold (frac < 0.2): both
+        // stragglers walking back to Healthy exits exactly once.
+        let mut exited = false;
+        for i in 0..60 {
+            let t = 100.0 + i as f64;
+            for w in 0..4 {
+                sup.observe_iter(w, 1.0);
+                sup.observe_push(w, t);
+            }
+            let d = sup.tick(&active, t);
+            exited |= d.exit_degraded;
+        }
+        assert!(exited);
+        assert!(!sup.degraded());
+        assert_eq!(sup.degraded_exits, 1);
+    }
+
+    #[test]
+    fn decisions_are_deterministic_per_seed() {
+        let mut c = cfg();
+        c.jitter = 0.2;
+        let mk = |seed| {
+            let mut sup = Supervisor::new(&c, 6, seed);
+            let active = [true; 6];
+            let mut log = Vec::new();
+            for i in 0..40 {
+                let t = (i + 1) as f64;
+                for w in 0..6 {
+                    let d = if w == 0 && i > 10 { 80.0 } else { 1.0 + w as f64 * 0.1 };
+                    sup.observe_iter(w, d);
+                    sup.observe_push(w, t);
+                }
+                let d = sup.tick(&active, t);
+                if !d.is_empty() {
+                    log.push((i, d));
+                }
+            }
+            (log, (0..6).map(|w| sup.state(w)).collect::<Vec<_>>())
+        };
+        assert_eq!(mk(42), mk(42), "same seed ⇒ same decisions");
+        // Jitter actually varies per worker (seeded, not constant).
+        let sup = Supervisor::new(&c, 6, 42);
+        let js: Vec<f64> = sup.workers.iter().map(|h| h.jitter).collect();
+        assert!(js.iter().any(|&j| j != js[0]));
+        assert!(js.iter().all(|&j| j.abs() <= c.jitter));
+        let sup2 = Supervisor::new(&c, 6, 43);
+        assert!(sup2.workers.iter().zip(&js).any(|(h, &j)| h.jitter != j));
+    }
+}

@@ -4,6 +4,7 @@
 pub mod f16;
 pub mod json;
 pub mod rng;
+pub mod salts;
 pub mod stats;
 
 /// Format a virtual-time duration (seconds) the way the paper's tables

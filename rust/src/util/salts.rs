@@ -1,0 +1,157 @@
+//! The seeded-RNG salt registry (ISSUE 9 audit).
+//!
+//! Every subsystem that draws randomness derives its stream via
+//! [`Xoshiro256pp::stream(seed, salt)`], so two subsystems sharing a
+//! salt silently share a stream — the audit that produced this file
+//! found exactly one such collision (`0xC4A1`, the chaos partition
+//! pick, equals `0xC4A0 ^ 1`, worker 1's chaos-link stream) and moved
+//! it into a reserved block.  This module pins the full namespace:
+//! every salt in the tree is listed here, per-worker families are
+//! modeled as `(base, worker_mask)` blocks, and
+//! `tests::salt_namespaces_are_disjoint` proves no two entries can
+//! ever produce the same salt value.
+//!
+//! Two kinds of per-worker families exist:
+//! * low-byte XOR blocks (`base ^ w`, `w < 256`) — the chaos link and
+//!   supervisor families; modeled with `mask = 0xFF`;
+//! * shifted blocks (`base ^ (w << 17)`) — the data-path samplers;
+//!   modeled with `mask = !0x1FFFF` (the low 17 bits are fixed).
+//!
+//! Data-path salts (`DATA_*`) are **frozen**: golden tests pin values
+//! drawn from them, so they must never move.  New subsystems take
+//! salts from the `0xE000..=0xEFFF` reserved block.
+//!
+//! [`Xoshiro256pp::stream(seed, salt)`]:
+//! crate::util::rng::Xoshiro256pp::stream
+
+/// Cluster node instantiation (`cluster::Cluster::build`).
+pub const CLUSTER: u64 = 0xC1;
+/// Model parameter init (`runtime::init_params`).
+pub const INIT_PARAMS: u64 = 0x9E1F;
+/// Synthetic dataset class templates (`data::Dataset::synth`).
+pub const DATA_TEMPLATES: u64 = 0xDA7A;
+/// Synthetic dataset per-sample noise (`data::Dataset::synth`).
+pub const DATA_NOISE: u64 = 0x5A3B;
+/// Train/test split shuffle (`data::Dataset::split`).
+pub const DATA_SPLIT: u64 = 0x59171;
+/// Pool partitioning (`data::partition_pools`).
+pub const DATA_PARTITION: u64 = 0x9A27;
+/// Probe subset draw (`data::Probe::build`).
+pub const DATA_PROBE: u64 = 0x9120B;
+/// Per-worker mini-batch sampler, `base ^ (w << 17)`
+/// (`data::BatchSampler::new`).
+pub const DATA_BATCH: u64 = 0xBA7C;
+/// Per-worker stream arrival order, `base ^ (w << 17)`
+/// (`data::StreamSource::new`).
+pub const DATA_STREAM_ORDER: u64 = 0x57E0;
+/// Churn-plan generator (`faults::FaultPlan::churn`).
+pub const FAULT_CHURN: u64 = 0xFA17;
+/// Corruption coordinate draws (`frameworks::common::SimEnv::build`).
+pub const CORRUPT: u64 = 0xC0DE;
+/// Per-worker frame-chaos stream, `base ^ w` — shared by the DES
+/// [`ChaosLink`](crate::net::ChaosLink) and the live `ChaosTx`
+/// (intentionally the same family: one link, one stream).
+pub const CHAOS_LINK: u64 = 0xC4A0;
+/// Chaos 2-way partition pick (`config::ChaosConfig::build_plan`).
+/// Audit note: previously `0xC4A1 == CHAOS_LINK ^ 1`; moved into the
+/// reserved block.  Chaos-on runs are pinned to rerun-determinism,
+/// not to frozen values, so the move is behavior-safe.
+pub const CHAOS_PARTITION: u64 = 0xE0A1;
+/// Per-worker live reconnect jitter, `base ^ wid`
+/// (`live::run_live_opts`).  Audit note: previously `0xBACC ^ wid`,
+/// whose wid=0xB0 member collided with [`DATA_BATCH`]'s w=0 stream;
+/// moved into the reserved block.
+pub const LIVE_JITTER: u64 = 0xE2CC;
+/// Per-worker supervisor threshold jitter, `base ^ w`
+/// (`supervisor::Supervisor::new`, ISSUE 9).
+pub const SUPERVISOR: u64 = 0xE5A0;
+
+/// One registry entry: the streams `{base ^ (w & mask)}`.  Singleton
+/// salts use `mask = 0`.
+const REGISTRY: &[(&str, u64, u64)] = &[
+    ("cluster", CLUSTER, 0),
+    ("init_params", INIT_PARAMS, 0),
+    ("data_templates", DATA_TEMPLATES, 0),
+    ("data_noise", DATA_NOISE, 0),
+    ("data_split", DATA_SPLIT, 0),
+    ("data_partition", DATA_PARTITION, 0),
+    ("data_probe", DATA_PROBE, 0),
+    ("data_batch", DATA_BATCH, !0x1FFFF),
+    ("data_stream_order", DATA_STREAM_ORDER, !0x1FFFF),
+    ("fault_churn", FAULT_CHURN, 0),
+    ("corrupt", CORRUPT, 0),
+    ("chaos_link", CHAOS_LINK, 0xFF),
+    ("chaos_partition", CHAOS_PARTITION, 0),
+    ("live_jitter", LIVE_JITTER, 0xFF),
+    ("supervisor", SUPERVISOR, 0xFF),
+];
+
+/// Can blocks `a` and `b` ever emit the same salt?  `b1^w1 == b2^w2`
+/// for some `w1 ⊆ m1`, `w2 ⊆ m2` iff every differing bit of the bases
+/// is coverable by one of the masks.
+const fn blocks_overlap(b1: u64, m1: u64, b2: u64, m2: u64) -> bool {
+    (b1 ^ b2) & !(m1 | m2) == 0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn salt_namespaces_are_disjoint() {
+        for (i, &(n1, b1, m1)) in REGISTRY.iter().enumerate() {
+            for &(n2, b2, m2) in &REGISTRY[i + 1..] {
+                assert!(
+                    !blocks_overlap(b1, m1, b2, m2),
+                    "salt blocks '{n1}' ({b1:#x}/{m1:#x}) and \
+                     '{n2}' ({b2:#x}/{m2:#x}) can collide"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn the_audited_collision_is_detected_by_the_overlap_model() {
+        // The bug this registry exists to prevent: the old partition
+        // salt 0xC4A1 sat inside the chaos-link worker block.
+        assert!(blocks_overlap(CHAOS_LINK, 0xFF, 0xC4A1, 0));
+        // And its replacement does not.
+        assert!(!blocks_overlap(CHAOS_LINK, 0xFF, CHAOS_PARTITION, 0));
+        // Likewise the old live-jitter block grazed the data sampler.
+        assert!(blocks_overlap(0xBACC, 0xFF, DATA_BATCH, !0x1FFFF));
+        assert!(!blocks_overlap(LIVE_JITTER, 0xFF, DATA_BATCH, !0x1FFFF));
+    }
+
+    #[test]
+    fn des_tag_windows_are_disjoint() {
+        // The DES wake-up tag namespace (u32 event tags, not RNG
+        // salts): driver-defined tags are tiny constants; the
+        // supervisor, stream and fault windows stack strictly above
+        // them and below each other.
+        const DRIVER_TAG_MAX: u32 = 16;
+        let windows: &[(&str, u32, u32)] = &[
+            ("driver", 0, DRIVER_TAG_MAX),
+            (
+                "supervisor",
+                crate::supervisor::SUP_TAG_BASE,
+                crate::supervisor::SUP_TAG_BASE + 0x1_0000,
+            ),
+            (
+                "stream",
+                crate::data::stream::STREAM_TAG_BASE,
+                crate::faults::FAULT_TAG_BASE,
+            ),
+            ("fault", crate::faults::FAULT_TAG_BASE, u32::MAX),
+        ];
+        for (i, &(n1, s1, e1)) in windows.iter().enumerate() {
+            assert!(s1 < e1, "window '{n1}' is empty");
+            for &(n2, s2, e2) in &windows[i + 1..] {
+                assert!(
+                    e1 <= s2 || e2 <= s1,
+                    "DES tag windows '{n1}' [{s1:#x},{e1:#x}) and \
+                     '{n2}' [{s2:#x},{e2:#x}) overlap"
+                );
+            }
+        }
+    }
+}

@@ -175,3 +175,117 @@ fn exp_scale_grid_hybrid_is_reachable_from_the_cli() {
     let err = String::from_utf8_lossy(&out.stderr);
     assert!(err.contains("preset | hybrid"), "{err}");
 }
+
+#[test]
+fn run_supervise_flag_runs_end_to_end_from_the_cli() {
+    let dir = tmp_out("run_supervise");
+    let out = hermes()
+        .args([
+            "run",
+            "bsp",
+            "--supervise",
+            "--max-iters",
+            "24",
+            "--dss0",
+            "64",
+            "--target-acc",
+            "1.1",
+            "--out",
+            dir.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(out.status.success(), "run --supervise failed: {stderr}");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    // The summary JSON carries the supervisor lifecycle counters.
+    for key in ["sup_speculations", "sup_evictions", "sup_degraded_enters"] {
+        assert!(stdout.contains(key), "missing '{key}' in summary: {stdout}");
+    }
+}
+
+#[test]
+fn exp_straggler_writes_the_sweep_csv_from_the_cli() {
+    let dir = tmp_out("exp_straggler");
+    let out = hermes()
+        .args([
+            "exp",
+            "straggler",
+            "--threads",
+            "2",
+            "--out",
+            dir.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(out.status.success(), "exp straggler failed: {stderr}");
+    let csv = std::fs::read_to_string(dir.join("straggler_mock.csv")).unwrap();
+    // Header + 2 frameworks × 3 slowdowns × supervision off/on.
+    assert_eq!(csv.lines().count(), 13, "{csv}");
+    assert!(csv.starts_with("framework,slowdown,supervise,"), "{csv}");
+    for fw in ["bsp", "ebsp"] {
+        assert!(
+            csv.lines().any(|l| l.starts_with(&format!("{fw},100,true,"))),
+            "{fw} supervised ×100 row missing:\n{csv}"
+        );
+    }
+}
+
+#[test]
+fn supervisor_config_round_trips_through_json() {
+    use hermes_dml::config::RunConfig;
+    use hermes_dml::util::json::Json;
+
+    let mut rc = RunConfig::new("mock", "bsp");
+    rc.supervisor.enabled = true;
+    rc.supervisor.ewma_alpha = 0.2;
+    rc.supervisor.suspect_factor = 2.5;
+    rc.supervisor.suspect_after = 3;
+    rc.supervisor.probe_after_s = 12.5;
+    rc.supervisor.speculate = false;
+    rc.supervisor.degrade_frac = 0.4;
+    let j = rc.to_json().to_string();
+    let back = RunConfig::from_json(&Json::parse(&j).unwrap()).unwrap();
+    assert_eq!(back.supervisor, rc.supervisor);
+
+    // A config written before the supervisor existed still loads:
+    // a missing block means supervision off.
+    let mut m = match rc.to_json() {
+        Json::Obj(m) => m,
+        _ => unreachable!(),
+    };
+    m.remove("supervisor");
+    let back = RunConfig::from_json(&Json::Obj(m)).unwrap();
+    assert!(!back.supervisor.enabled);
+}
+
+#[test]
+fn malformed_supervisor_knob_lists_the_valid_knobs() {
+    use hermes_dml::config::{RunConfig, SUPERVISOR_KNOBS};
+    use hermes_dml::util::json::Json;
+
+    // A mistyped knob fails the parse with the full knob list.
+    let rc = RunConfig::new("mock", "bsp");
+    let mut m = match rc.to_json() {
+        Json::Obj(m) => m,
+        _ => unreachable!(),
+    };
+    let mut sup = match m.get("supervisor").cloned().unwrap() {
+        Json::Obj(s) => s,
+        _ => unreachable!(),
+    };
+    sup.insert("ewma_alpha".into(), Json::Str("hot".into()));
+    m.insert("supervisor".into(), Json::Obj(sup));
+    let err = RunConfig::from_json(&Json::Obj(m)).unwrap_err();
+    assert!(err.contains("ewma_alpha"), "{err}");
+    assert!(err.contains(SUPERVISOR_KNOBS), "{err}");
+
+    // An out-of-range knob fails validation with the same list.
+    let mut rc = RunConfig::new("mock", "bsp");
+    rc.supervisor.enabled = true;
+    rc.supervisor.ewma_alpha = 2.0;
+    let err = rc.validate().unwrap_err();
+    assert!(err.contains("ewma_alpha"), "{err}");
+    assert!(err.contains(SUPERVISOR_KNOBS), "{err}");
+}

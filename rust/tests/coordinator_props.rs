@@ -522,6 +522,13 @@ fn assert_same_run(
     assert_eq!(a.stream_arrivals, b.stream_arrivals, "{tag}: stream arrivals");
     assert_eq!(a.stream_skips, b.stream_skips, "{tag}: stream skips");
     assert_eq!(a.stream_evictions, b.stream_evictions, "{tag}: stream evictions");
+    assert_eq!(a.sup_speculations, b.sup_speculations, "{tag}: speculations");
+    assert_eq!(a.sup_spec_wins, b.sup_spec_wins, "{tag}: spec wins");
+    assert_eq!(a.sup_spec_dedup, b.sup_spec_dedup, "{tag}: spec dedup");
+    assert_eq!(a.sup_evictions, b.sup_evictions, "{tag}: sup evictions");
+    assert_eq!(a.sup_readmissions, b.sup_readmissions, "{tag}: sup readmissions");
+    assert_eq!(a.sup_degraded_enters, b.sup_degraded_enters, "{tag}: degraded enters");
+    assert_eq!(a.sup_degraded_exits, b.sup_degraded_exits, "{tag}: degraded exits");
     assert_eq!(a.curve.len(), b.curve.len(), "{tag}: curve length");
     for (i, (x, y)) in a.curve.iter().zip(&b.curve).enumerate() {
         let xc = (x.0.to_bits(), x.1.to_bits(), x.2.to_bits());
@@ -550,6 +557,10 @@ fn assert_same_run(
             let qa = (q.0.to_bits(), q.1, q.2);
             assert_eq!(pa, qa, "{wtag}: alloc {j}");
         }
+        assert_eq!(x.spec_covered, y.spec_covered, "{wtag}: spec covered");
+        assert_eq!(x.spec_backups, y.spec_backups, "{wtag}: spec backups");
+        assert_eq!(x.sup_evictions, y.sup_evictions, "{wtag}: sup evictions");
+        assert_eq!(x.sup_readmissions, y.sup_readmissions, "{wtag}: sup readmissions");
     }
 }
 
@@ -714,6 +725,124 @@ fn streamed_runs_bit_identical_across_reruns_and_backends() {
             assert_same_run(&format!("{spec} seed={seed} simd"), &a, &c);
             assert!(a.stream_arrivals > 0, "{spec} seed={seed}: no arrivals");
             assert!(a.iterations > 0, "{spec} seed={seed}: empty run");
+        }
+    }
+}
+
+#[test]
+fn supervised_runs_bit_identical_across_reruns_and_backends() {
+    // ISSUE 9 acceptance (DESIGN.md §18): a supervised run is a pure
+    // function of (seed, config) — health EWMAs, hysteresis state
+    // flips, speculation outcomes, evictions/readmissions and the
+    // degraded-mode controller all replay bit-identically across
+    // reruns and the {scalar, SIMD} kernel backends, including every
+    // supervisor counter in the full RunMetrics record.
+    use hermes_dml::config::RunConfig;
+    use hermes_dml::faults::FaultPlan;
+    use hermes_dml::frameworks::{run_framework, PRESETS};
+    use hermes_dml::runtime::MockRuntime;
+
+    for fw in PRESETS {
+        for seed in [7u64, 11] {
+            let mk = || {
+                let mut cfg = RunConfig::new("mock", fw);
+                cfg.seed = seed;
+                cfg.max_iters = 80;
+                cfg.dss0 = 96;
+                cfg.target_acc = 1.1; // run the full budget
+                cfg.faults.plan = FaultPlan::new().k_spike(0, 4.0, 1e9, 100.0);
+                cfg.supervisor.enabled = true;
+                cfg.supervisor.probe_after_s = 10.0;
+                cfg
+            };
+            let run_with = |backend: Backend| {
+                kernels::with_backend(backend, || {
+                    run_framework(mk(), Box::new(MockRuntime::new())).unwrap()
+                })
+            };
+            let a = run_with(Backend::Scalar);
+            let b = run_with(Backend::Scalar);
+            assert_same_run(&format!("{fw} supervised seed={seed} rerun"), &a, &b);
+            let c = run_with(Backend::Simd);
+            assert_same_run(&format!("{fw} supervised seed={seed} simd"), &a, &c);
+            assert!(a.iterations > 0, "{fw} seed={seed}: empty run");
+        }
+    }
+}
+
+#[test]
+fn prop_worker_ledgers_sum_to_fleet_totals_under_combined_plans() {
+    // Satellite ledger property (ISSUE 9): with a FaultPlan, a
+    // streamed data plan, a network-chaos window AND supervision all
+    // armed at once, the per-worker metric rows still sum exactly to
+    // the fleet totals — no path loses or double-counts traffic,
+    // iterations, frames or supervisor lifecycle events.
+    use hermes_dml::config::RunConfig;
+    use hermes_dml::faults::FaultPlan;
+    use hermes_dml::frameworks::run_framework;
+    use hermes_dml::runtime::MockRuntime;
+
+    for spec in ["bsp@steady", "ebsp@steady", "hermes@trickle"] {
+        for seed in [7u64, 11] {
+            let mut cfg = RunConfig::new("mock", spec);
+            cfg.seed = seed;
+            cfg.max_iters = 80;
+            cfg.dss0 = 96;
+            cfg.target_acc = 1.1; // run the full budget
+            cfg.faults.plan = FaultPlan::new()
+                .crash_rejoin(1, 2.0, 2.0)
+                .k_spike(0, 4.0, 1e9, 50.0)
+                .corrupt_nan(2, 3.0);
+            cfg.robust.guard = true;
+            cfg.chaos.drop = 0.1;
+            cfg.chaos.dup = 0.05;
+            cfg.chaos.reorder = 0.1;
+            cfg.supervisor.enabled = true;
+            cfg.supervisor.probe_after_s = 10.0;
+            let r = run_framework(cfg, Box::new(MockRuntime::new())).unwrap();
+            let tag = format!("{spec} seed={seed}");
+            assert!(r.iterations > 0, "{tag}: empty run");
+            let sum = |f: fn(&hermes_dml::metrics::WorkerMetrics) -> u64| {
+                r.workers.iter().map(f).sum::<u64>()
+            };
+            assert_eq!(sum(|w| w.iterations), r.iterations, "{tag}: iterations");
+            assert_eq!(sum(|w| w.bytes), r.bytes, "{tag}: bytes");
+            assert_eq!(sum(|w| w.api_calls), r.api_calls, "{tag}: api calls");
+            assert_eq!(sum(|w| w.pushes), r.total_pushes(), "{tag}: pushes");
+            assert_eq!(
+                sum(|w| w.frames_dropped),
+                r.frames_dropped,
+                "{tag}: frames dropped"
+            );
+            assert_eq!(
+                sum(|w| w.frames_retransmitted),
+                r.frames_retransmitted,
+                "{tag}: retransmits"
+            );
+            assert_eq!(sum(|w| w.acks_sent), r.acks_sent, "{tag}: acks");
+            assert_eq!(r.chaos_bytes, r.bytes, "{tag}: chaos ledger");
+            assert_eq!(
+                sum(|w| w.spec_covered),
+                r.sup_speculations,
+                "{tag}: speculation coverage"
+            );
+            assert_eq!(
+                sum(|w| w.spec_backups),
+                r.sup_speculations,
+                "{tag}: speculation backups"
+            );
+            assert_eq!(
+                sum(|w| w.sup_evictions),
+                r.sup_evictions,
+                "{tag}: eviction ledger"
+            );
+            assert_eq!(
+                sum(|w| w.sup_readmissions),
+                r.sup_readmissions,
+                "{tag}: readmission ledger"
+            );
+            assert!(r.frames_dropped > 0, "{tag}: chaos never fired");
+            assert!(r.stream_arrivals > 0, "{tag}: stream never delivered");
         }
     }
 }

@@ -1,0 +1,184 @@
+//! Straggler-supervision acceptance (ISSUE 9, DESIGN.md §18): a ×100
+//! mid-run slowdown finishes in bounded time when supervision is on
+//! (speculation covers the straggler, sustained unhealth evicts it),
+//! duplicate speculative copies are rejected at-most-once, hysteresis
+//! keeps a flapping worker in the fleet, supervision off stays
+//! bit-invisible, and supervised runs replay bit-identically per seed.
+
+use hermes_dml::config::RunConfig;
+use hermes_dml::exp::scaled_cfg;
+use hermes_dml::faults::FaultPlan;
+use hermes_dml::frameworks::{run_framework, PRESETS};
+use hermes_dml::metrics::RunMetrics;
+use hermes_dml::runtime::MockRuntime;
+
+/// Worker 0 slows down ×100 at t=8 and never recovers — the paper's
+/// pathological straggler.  Fixed budget so runs compare on virtual
+/// time, not on reaching the accuracy target.
+fn straggler_cfg(fw: &str, supervise: bool) -> RunConfig {
+    let mut cfg = scaled_cfg("mock", fw);
+    cfg.max_iters = 160;
+    cfg.target_acc = 1.1;
+    cfg.faults.plan = FaultPlan::new().k_spike(0, 8.0, 1e9, 100.0);
+    cfg.supervisor.enabled = supervise;
+    if supervise {
+        cfg.supervisor.probe_after_s = 20.0;
+    }
+    cfg
+}
+
+fn run(cfg: RunConfig) -> RunMetrics {
+    run_framework(cfg, Box::new(MockRuntime::new())).unwrap()
+}
+
+#[test]
+fn hundredfold_slowdown_is_bounded_with_supervision_on() {
+    for fw in ["bsp", "ebsp"] {
+        let off = run(straggler_cfg(fw, false));
+        let on = run(straggler_cfg(fw, true));
+        assert!(off.iterations > 0 && on.iterations > 0, "{fw}: no progress");
+        assert!(on.final_loss.is_finite(), "{fw}: supervised loss diverged");
+        assert!(
+            on.sup_speculations > 0 || on.sup_evictions > 0,
+            "{fw}: supervisor never acted on the straggler"
+        );
+        assert!(
+            on.virtual_time < off.virtual_time,
+            "{fw}: supervision did not bound the straggler ({} >= {})",
+            on.virtual_time,
+            off.virtual_time
+        );
+        // Unsupervised runs carry zero supervisor activity.
+        assert_eq!(off.sup_speculations, 0, "{fw}");
+        assert_eq!(off.sup_evictions, 0, "{fw}");
+        assert_eq!(off.sup_readmissions, 0, "{fw}");
+    }
+}
+
+#[test]
+fn speculative_copies_apply_at_most_once() {
+    // Every speculation hands the supervisor two copies of the same
+    // (worker, round) result — winner first, losing duplicate second.
+    // The per-worker high-water mark admits exactly one: the dedup
+    // counter must account for every duplicate copy.
+    for fw in ["bsp", "ebsp"] {
+        let on = run(straggler_cfg(fw, true));
+        if on.sup_speculations == 0 {
+            continue;
+        }
+        assert_eq!(
+            on.sup_spec_dedup, on.sup_speculations,
+            "{fw}: a duplicate speculative copy slipped past the high-water mark"
+        );
+        assert!(
+            on.sup_spec_wins <= on.sup_speculations,
+            "{fw}: more wins than speculations"
+        );
+    }
+}
+
+#[test]
+fn flapping_worker_is_never_evicted() {
+    // Brief ×50 spikes with recovery gaps: the hysteresis ladder
+    // (suspect_after + evict_after consecutive unhealthy ticks) must
+    // never reach eviction, because each healthy stretch walks the FSM
+    // back before the streak accumulates.
+    for fw in ["bsp", "ebsp"] {
+        let mut cfg = scaled_cfg("mock", fw);
+        cfg.max_iters = 160;
+        cfg.target_acc = 1.1;
+        let mut plan = FaultPlan::new();
+        for k in 0..8 {
+            plan = plan.k_spike(0, 2.0 + 6.0 * k as f64, 2.0, 50.0);
+        }
+        cfg.faults.plan = plan;
+        cfg.supervisor.enabled = true;
+        let r = run(cfg);
+        assert!(r.iterations > 0, "{fw}: no progress under flapping");
+        assert!(r.final_loss.is_finite(), "{fw}: loss diverged");
+        assert_eq!(r.sup_evictions, 0, "{fw}: hysteresis failed — flapper evicted");
+        assert_eq!(r.sup_readmissions, 0, "{fw}");
+    }
+}
+
+#[test]
+fn supervision_off_ignores_every_knob() {
+    // Bit-invisibility: with `enabled = false` the other fifteen knobs
+    // must not leak into the run — the trajectory is identical to the
+    // all-defaults config.
+    for fw in PRESETS {
+        let a = run(straggler_cfg(fw, false));
+        let mut cfg = straggler_cfg(fw, false);
+        cfg.supervisor.suspect_factor = 1.01;
+        cfg.supervisor.recover_factor = 1.005;
+        cfg.supervisor.suspect_after = 1;
+        cfg.supervisor.evict_after = 1;
+        cfg.supervisor.probe_after_s = 1.0;
+        cfg.supervisor.speculate = false;
+        cfg.supervisor.degrade_frac = 0.01;
+        let b = run(cfg);
+        assert_eq!(a.iterations, b.iterations, "{fw}");
+        assert_eq!(a.virtual_time.to_bits(), b.virtual_time.to_bits(), "{fw}");
+        assert_eq!(a.final_loss.to_bits(), b.final_loss.to_bits(), "{fw}");
+        assert_eq!(a.final_accuracy.to_bits(), b.final_accuracy.to_bits(), "{fw}");
+        assert_eq!(a.bytes, b.bytes, "{fw}");
+        assert_eq!(a.curve, b.curve, "{fw}");
+    }
+}
+
+#[test]
+fn supervised_runs_are_bit_identical_per_seed_for_every_framework() {
+    for fw in PRESETS {
+        let a = run(straggler_cfg(fw, true));
+        let b = run(straggler_cfg(fw, true));
+        assert!(a.iterations > 0, "{fw}: no progress");
+        assert_eq!(a.iterations, b.iterations, "{fw}");
+        assert_eq!(a.virtual_time.to_bits(), b.virtual_time.to_bits(), "{fw}");
+        assert_eq!(a.final_loss.to_bits(), b.final_loss.to_bits(), "{fw}");
+        assert_eq!(a.final_accuracy.to_bits(), b.final_accuracy.to_bits(), "{fw}");
+        assert_eq!(a.bytes, b.bytes, "{fw}");
+        assert_eq!(a.curve, b.curve, "{fw}");
+        assert_eq!(a.sup_speculations, b.sup_speculations, "{fw}");
+        assert_eq!(a.sup_spec_wins, b.sup_spec_wins, "{fw}");
+        assert_eq!(a.sup_spec_dedup, b.sup_spec_dedup, "{fw}");
+        assert_eq!(a.sup_evictions, b.sup_evictions, "{fw}");
+        assert_eq!(a.sup_readmissions, b.sup_readmissions, "{fw}");
+        assert_eq!(a.sup_degraded_enters, b.sup_degraded_enters, "{fw}");
+        assert_eq!(a.sup_degraded_exits, b.sup_degraded_exits, "{fw}");
+        // A different seed must actually change the supervised run.
+        let mut cfg = straggler_cfg(fw, true);
+        cfg.seed = 4242;
+        let c = run(cfg);
+        assert!(
+            c.virtual_time != a.virtual_time || c.iterations != a.iterations,
+            "{fw}: seed had no effect under supervision"
+        );
+    }
+}
+
+#[test]
+fn degraded_mode_engages_when_half_the_fleet_slows() {
+    // Fleet-wide unhealth: slow down more than degrade_frac of the
+    // workers and the controller must enter degraded mode at least
+    // once (tuning quorum/deadline), deterministically per seed.
+    let mut cfg = scaled_cfg("mock", "ebsp");
+    cfg.max_iters = 160;
+    cfg.target_acc = 1.1;
+    let n = cfg.cluster.num_workers();
+    let mut plan = FaultPlan::new();
+    for w in 0..(n / 2 + 1) {
+        plan = plan.k_spike(w, 8.0, 1e9, 100.0);
+    }
+    cfg.faults.plan = plan;
+    cfg.supervisor.enabled = true;
+    cfg.supervisor.evict = false; // keep the slow majority in the fleet
+    let a = run(cfg.clone());
+    assert!(a.iterations > 0, "no progress");
+    assert!(
+        a.sup_degraded_enters > 0,
+        "majority slowdown never tripped the degraded-mode controller"
+    );
+    let b = run(cfg);
+    assert_eq!(a.sup_degraded_enters, b.sup_degraded_enters);
+    assert_eq!(a.virtual_time.to_bits(), b.virtual_time.to_bits());
+}

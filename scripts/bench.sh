@@ -17,6 +17,11 @@
 #                       grids at 60/240 jobs so CI stays fast)
 #   BENCH_table3.json — Table III end-to-end sweep, sequential vs
 #                       parallel wall time
+#   BENCH_straggler.json — straggler supervision (DESIGN.md §18):
+#                       ×100 mid-run slowdown under bsp/ebsp with
+#                       supervision off vs on (virtual time, spec/evict
+#                       counters, speedup) — written by --record and
+#                       --smoke
 #
 # Usage: scripts/bench.sh [--smoke|--record]
 #   --smoke    CI mode: tiny budget, small model, capped grids — fast
@@ -57,7 +62,8 @@ BENCH_TABLE3_OUT="$root/BENCH_table3.json" cargo bench --bench table3_end_to_end
 if [[ "$mode" == "--record" || "$mode" == "--smoke" ]]; then
   BENCH_SHARD_OUT="$root/BENCH_shard.json" cargo bench --bench shard_scaling
   BENCH_SWEEP_OUT="$root/BENCH_sweep.json" cargo bench --bench sweep_scaling
-  reports+=("$root/BENCH_shard.json" "$root/BENCH_sweep.json")
+  BENCH_STRAGGLER_OUT="$root/BENCH_straggler.json" cargo bench --bench straggler
+  reports+=("$root/BENCH_shard.json" "$root/BENCH_sweep.json" "$root/BENCH_straggler.json")
 fi
 
 echo

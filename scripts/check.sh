@@ -59,3 +59,14 @@ for scalar in 0 1; do
     exp stream --threads 2 --out results_smoke
   test -s results_smoke/stream_mock.csv
 done
+
+# Straggler smoke (DESIGN.md §18): the supervision sweep — mid-run ×100
+# compute slowdown × framework × supervision off/on through the
+# streaming engine — end-to-end from the CLI under both kernel
+# backends.  CI uploads the resulting straggler_mock.csv per backend.
+echo "== straggler smoke (health-scored supervision sweep) =="
+for scalar in 0 1; do
+  HERMES_FORCE_SCALAR=$scalar cargo run --quiet --release --bin hermes -- \
+    exp straggler --threads 2 --out results_smoke
+  test -s results_smoke/straggler_mock.csv
+done
