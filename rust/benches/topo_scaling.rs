@@ -1,0 +1,103 @@
+//! Topology-scaling bench (DESIGN.md §19): flat vs 3-tier aggregation
+//! at 10 / 100 / 1000 workers over a fixed round budget.  Records the
+//! root-uplink bytes per round, the flat-over-tree ingress cut, and
+//! the DES wall clock per shape into `BENCH_topo.json` at the repo
+//! root (override with `BENCH_TOPO_OUT`); run via
+//! `scripts/bench.sh --record`.
+//!
+//! `HERMES_BENCH_SMOKE` shrinks the per-worker round budget so the CI
+//! bench-smoke leg finishes in seconds while emitting the same JSON
+//! shape.
+
+use std::path::Path;
+use std::time::Instant;
+
+use hermes_dml::bench_harness::Bench;
+use hermes_dml::config::{ClusterConfig, NodeFamily, RunConfig};
+use hermes_dml::frameworks::run_framework;
+use hermes_dml::metrics::RunMetrics;
+use hermes_dml::runtime::MockRuntime;
+use hermes_dml::util::json::Json;
+
+/// A synthetic two-family edge fleet of `n` workers.
+fn fleet(n: usize) -> ClusterConfig {
+    let fam = |name: &str, count, k_coeff| NodeFamily {
+        name: name.to_string(),
+        count,
+        vcpu: 2,
+        ram_gb: 4.0,
+        k_coeff,
+        jitter: 0.05,
+    };
+    let fast = n * 3 / 5;
+    ClusterConfig {
+        families: vec![fam("edge_fast", fast, 0.048), fam("edge_slow", n - fast, 0.075)],
+        degrade_fraction: 0.0,
+        degrade_rate: 1.0,
+    }
+}
+
+fn run(n: usize, rounds: usize, tree: bool) -> (RunMetrics, f64) {
+    let spec = if tree { "bsp/tree3" } else { "bsp" };
+    let mut cfg = RunConfig::new("mock", spec);
+    cfg.cluster = fleet(n);
+    cfg.hp.lr = 0.5;
+    cfg.hp.patience = 10_000;
+    cfg.max_iters = rounds * n; // lockstep: `rounds` full rounds
+    cfg.target_acc = 1.1;
+    cfg.dss0 = 32;
+    cfg.mbs0 = 16;
+    // Region tier capped at 10 (the ISSUE 10 reference shape); group
+    // tier fans in ~10 workers per group, never wider than the fleet.
+    cfg.topology.regions = 10.min(n / 2).max(1);
+    cfg.topology.groups = (n / 10).clamp(cfg.topology.regions, 256);
+    let t0 = Instant::now();
+    let r = run_framework(cfg, Box::new(MockRuntime::new())).unwrap();
+    (r, t0.elapsed().as_secs_f64())
+}
+
+fn main() {
+    let smoke = std::env::var("HERMES_BENCH_SMOKE").is_ok();
+    let rounds: usize = if smoke { 2 } else { 4 };
+    let mut extra: Vec<(String, Json)> = Vec::new();
+    extra.push(("smoke".into(), Json::Num(smoke as u8 as f64)));
+    extra.push(("rounds".into(), Json::Num(rounds as f64)));
+
+    Bench::report_header("topo: flat vs 3-tier root ingress, 10/100/1000 workers");
+    for n in [10usize, 100, 1000] {
+        let mut per_round = [0f64; 2];
+        for (i, tree) in [false, true].into_iter().enumerate() {
+            let (r, wall) = run(n, rounds, tree);
+            assert_eq!(r.iterations as usize, rounds * n, "n={n} run length drifted");
+            per_round[i] = r.tier_upstream_bytes as f64 / rounds as f64;
+            let shape = if tree { "tree" } else { "flat" };
+            println!(
+                "{n:>5} workers {shape:<5} up {:>12} B ({:>12.0} B/round)  \
+                 total {:>12} B  wall {wall:>7.2}s",
+                r.tier_upstream_bytes, per_round[i], r.bytes,
+            );
+            extra.push((
+                format!("upstream_bytes_{shape}_{n}"),
+                Json::Num(r.tier_upstream_bytes as f64),
+            ));
+            extra.push((
+                format!("upstream_bytes_per_round_{shape}_{n}"),
+                Json::Num(per_round[i]),
+            ));
+            extra.push((format!("total_bytes_{shape}_{n}"), Json::Num(r.bytes as f64)));
+            extra.push((format!("wall_s_{shape}_{n}"), Json::Num(wall)));
+        }
+        let cut = per_round[0] / per_round[1].max(1e-9);
+        println!("{n:>5} workers root-ingress cut ×{cut:.1}");
+        extra.push((format!("ingress_cut_{n}"), Json::Num(cut)));
+    }
+
+    let out_path = std::env::var("BENCH_TOPO_OUT")
+        .unwrap_or_else(|_| "BENCH_topo.json".to_string());
+    let fields: Vec<(&str, Json)> = std::iter::once(("title", Json::Str("topo".into())))
+        .chain(extra.iter().map(|(k, v)| (k.as_str(), v.clone())))
+        .collect();
+    std::fs::write(Path::new(&out_path), Json::obj(fields).to_string())
+        .expect("writing bench json");
+    println!("\nwrote {out_path}");
+}

@@ -1,0 +1,955 @@
+//! Multi-tier aggregation behind the [`Aggregator`] trait (ISSUE 10,
+//! DESIGN.md §19).
+//!
+//! Hermes's thesis is "transmit less, converge faster"; a single
+//! `PsState` on one machine is the scaling ceiling because every
+//! worker's delta crosses the full edge→cloud path.  This module lifts
+//! the parameter server behind a small trait and composes instances
+//! into a tree — edge workers → regional aggregators → global PS —
+//! where each tier runs the *same* Eq. 1 / Eq. 2 algebra over its
+//! children and forwards **one** merged delta upward, so upstream
+//! bytes scale with the number of regions instead of the fleet size.
+//!
+//! Three implementations:
+//!
+//! * in-process — today's [`PsState`] (the trait impl lives in
+//!   [`crate::ps`]), bit-identical to the pre-trait code because the
+//!   trait methods *are* `sync_sgd` / `async_sgd`;
+//! * [`ShardedAggregator`] — the same `PsState` with a pinned
+//!   [`shards`] worker count; bit-identical for any count because the
+//!   sharded ops are elementwise over disjoint ranges;
+//! * [`RemotePeerAggregator`] — a peer across a byte stream speaking
+//!   the existing seq/ack wire codec ([`crate::wire`]), served by
+//!   [`serve_peer`] with the live transport's anti-replay window
+//!   ([`crate::live::RxDedup`]).  Tensors cross the wire fp32
+//!   (`fp16 = false`): tier forwarding must be lossless or the tree
+//!   and flat algebras diverge.
+//!
+//! The DES-side composition is [`TierRouter`]: the generic driver
+//! calls it at its two PS mutation points (barrier rounds and async
+//! arrivals) and it either passes straight through to the root
+//! `PsState` (flat and single-region trees — **bit-identical by
+//! construction**, zero accounting, zero RNG draws) or merges through
+//! the tiers with per-tier [`SimNet`] link accounting and an optional
+//! per-region GUP-style gate ("regional tiers also transmit less").
+//!
+//! ## Wire protocol (remote peers)
+//!
+//! Request/reply over sequenced frames; every request is answered with
+//! the peer's current `GlobalModel` so the client mirror stays fresh:
+//!
+//! * `PushUpdate { iter: 0 }` — apply immediately (Eq. 2);
+//! * `PushUpdate { iter: ≥1 }` — buffer as a member of the open round;
+//! * `RequestModel` — commit the open round via Eq. 1 (no-op when the
+//!   buffer is empty) and return the post-merge model;
+//! * `Control { stop: true }` — close the session.
+
+use std::io::{Read, Write};
+
+use crate::config::{NetConfig, TopologyConfig};
+use crate::frameworks::policy::Topology;
+use crate::live::RxDedup;
+use crate::net::{SimNet, TrafficStats};
+use crate::ps::PsState;
+use crate::tensor::{shards, ParamVec};
+use crate::util::rng::Xoshiro256pp;
+use crate::util::salts;
+use crate::wire::{
+    read_seq_frame_with, write_seq_frame_with, Message, TensorPayload,
+    WireError,
+};
+
+/// One aggregation tier: the surface a parent needs from a child (and
+/// a child from the global root).  The contract mirrors `PsState`
+/// exactly so the in-process impl is the identity lift:
+///
+/// * [`apply_round`](Aggregator::apply_round) is Eq. 1 — average the
+///   deltas, take one step, bump the version once;
+/// * [`apply_async`](Aggregator::apply_async) is Eq. 2 — one step per
+///   delta;
+/// * [`snapshot`](Aggregator::snapshot) / [`resync`](Aggregator::resync)
+///   carry full state for crash recovery and late-joining tiers;
+/// * [`admit`](Aggregator::admit) is the robust-guard hook: a tier may
+///   veto a raw delta before it enters any merge (default: admit).
+pub trait Aggregator {
+    /// Eq. 1 barrier merge: `params -= eta · (1/K) Σ grads`, one
+    /// version bump.  Panics on an empty round (matches `sync_sgd`).
+    fn apply_round(&mut self, grads: &[ParamVec]);
+    /// Eq. 2 async step: `params -= eta · grad`, one version bump.
+    fn apply_async(&mut self, grad: &ParamVec);
+    /// The current model this tier would serve to a child.
+    fn params(&self) -> &ParamVec;
+    /// Model version (bumps once per applied update).
+    fn version(&self) -> u64;
+    /// Total updates applied (== version for every current impl).
+    fn updates(&self) -> u64;
+    /// Serialize full tier state (the `PSNP` snapshot codec).
+    fn snapshot(&self) -> Vec<u8>;
+    /// Replace this tier's state from a [`snapshot`](Aggregator::snapshot).
+    fn resync(&mut self, snap: &[u8]) -> Result<(), WireError>;
+    /// Robust-guard hook: may `grad` enter the merge?  Defaults to
+    /// admitting everything (guards live at the global root today —
+    /// coordinate-wise trimming needs the raw per-worker deltas).
+    fn admit(&mut self, _grad: &ParamVec) -> bool {
+        true
+    }
+}
+
+// ===================================================== sharded tier
+
+/// An in-process tier that pins its aggregation to a fixed shard
+/// count via [`shards::with_shards`].  Bit-identical to the plain
+/// `PsState` for *any* count (DESIGN.md §12: elementwise ops over
+/// disjoint ranges never reassociate), which is exactly what makes it
+/// safe to deploy different shard counts at different tiers.
+#[derive(Debug)]
+pub struct ShardedAggregator {
+    inner: PsState,
+    n_shards: usize,
+}
+
+impl ShardedAggregator {
+    /// Wrap `inner`, pinning every apply to `n_shards` workers
+    /// (clamped to `1..=`[`shards::MAX_SHARDS`]).
+    pub fn new(inner: PsState, n_shards: usize) -> ShardedAggregator {
+        ShardedAggregator {
+            inner,
+            n_shards: n_shards.clamp(1, shards::MAX_SHARDS),
+        }
+    }
+
+    pub fn inner(&self) -> &PsState {
+        &self.inner
+    }
+
+    pub fn into_inner(self) -> PsState {
+        self.inner
+    }
+}
+
+impl Aggregator for ShardedAggregator {
+    fn apply_round(&mut self, grads: &[ParamVec]) {
+        let inner = &mut self.inner;
+        shards::with_shards(self.n_shards, || inner.sync_sgd(grads));
+    }
+
+    fn apply_async(&mut self, grad: &ParamVec) {
+        let inner = &mut self.inner;
+        shards::with_shards(self.n_shards, || inner.async_sgd(grad));
+    }
+
+    fn params(&self) -> &ParamVec {
+        &self.inner.params
+    }
+
+    fn version(&self) -> u64 {
+        self.inner.version
+    }
+
+    fn updates(&self) -> u64 {
+        self.inner.updates
+    }
+
+    fn snapshot(&self) -> Vec<u8> {
+        self.inner.encode_snapshot()
+    }
+
+    fn resync(&mut self, snap: &[u8]) -> Result<(), WireError> {
+        self.inner = PsState::decode_snapshot(snap)?;
+        Ok(())
+    }
+}
+
+// ================================================= remote-peer tier
+
+/// Client handle to an [`Aggregator`] living across a byte stream
+/// (TCP in production, any `Read + Write` in tests), speaking the
+/// sequenced wire codec.  Keeps a locally mirrored model refreshed by
+/// every reply, so [`params`](Aggregator::params) /
+/// [`version`](Aggregator::version) are the view as of the last RPC.
+///
+/// [`snapshot`](Aggregator::snapshot) captures that mirrored view;
+/// [`resync`](Aggregator::resync) adopts a snapshot into the mirror
+/// (the authoritative peer recovers through its own server-side
+/// journal, exactly like the live coordinator).  RPC errors surface as
+/// a panic from the apply methods — the DES never constructs remote
+/// tiers, and live callers wrap the handle in their own retry loop.
+#[derive(Debug)]
+pub struct RemotePeerAggregator<S: Read + Write> {
+    stream: S,
+    /// Next outbound sequence number (1-based; 0 is never valid).
+    seq: u64,
+    /// Highest peer sequence seen — the cumulative ack we piggyback.
+    ack: u64,
+    eta: f32,
+    params: ParamVec,
+    version: u64,
+    enc: Vec<u8>,
+    dec: Vec<u8>,
+}
+
+impl<S: Read + Write> RemotePeerAggregator<S> {
+    /// Attach to a peer served by [`serve_peer`], fetching the initial
+    /// model so the mirror starts authoritative.  `eta` is recorded
+    /// for snapshot encoding only — steps happen peer-side.
+    pub fn connect(stream: S, eta: f32) -> Result<Self, WireError> {
+        let mut a = RemotePeerAggregator {
+            stream,
+            seq: 1,
+            ack: 0,
+            eta,
+            params: ParamVec::default(),
+            version: 0,
+            enc: Vec::new(),
+            dec: Vec::new(),
+        };
+        a.rpc(&Message::RequestModel { worker: 0 })?;
+        Ok(a)
+    }
+
+    /// One request/reply exchange; every reply is a `GlobalModel` that
+    /// refreshes the mirror.
+    fn rpc(&mut self, msg: &Message) -> Result<(), WireError> {
+        write_seq_frame_with(&mut self.stream, self.seq, self.ack, msg, &mut self.enc)?;
+        self.seq += 1;
+        let (seq, _ack, reply) = read_seq_frame_with(&mut self.stream, &mut self.dec)?;
+        self.ack = self.ack.max(seq);
+        match reply {
+            Message::GlobalModel { version, params } => {
+                self.version = version;
+                self.params = params.params;
+                Ok(())
+            }
+            _ => Err(WireError::Malformed("tier peer: expected GlobalModel")),
+        }
+    }
+
+    fn push(&mut self, grad: &ParamVec, iter: u64) -> Result<(), WireError> {
+        self.rpc(&Message::PushUpdate {
+            worker: 0,
+            iter,
+            test_loss: 0.0,
+            train_time: 0.0,
+            // fp16 = false: tier forwarding must be lossless.
+            grads: TensorPayload::new(grad.clone(), false),
+        })
+    }
+
+    /// Politely end the session (fire-and-forget; no reply expected).
+    pub fn close(mut self) -> Result<(), WireError> {
+        let msg = Message::Control { stop: true };
+        write_seq_frame_with(&mut self.stream, self.seq, self.ack, &msg, &mut self.enc)
+    }
+}
+
+impl<S: Read + Write> Aggregator for RemotePeerAggregator<S> {
+    fn apply_round(&mut self, grads: &[ParamVec]) {
+        assert!(!grads.is_empty(), "empty round");
+        for g in grads {
+            self.push(g, 1).expect("tier peer push failed");
+        }
+        // Commit the round and refresh the mirror in one exchange.
+        self.rpc(&Message::RequestModel { worker: 0 })
+            .expect("tier peer round commit failed");
+    }
+
+    fn apply_async(&mut self, grad: &ParamVec) {
+        self.push(grad, 0).expect("tier peer push failed");
+    }
+
+    fn params(&self) -> &ParamVec {
+        &self.params
+    }
+
+    fn version(&self) -> u64 {
+        self.version
+    }
+
+    fn updates(&self) -> u64 {
+        self.version
+    }
+
+    fn snapshot(&self) -> Vec<u8> {
+        let mut ps = PsState::new(self.params.clone(), self.eta);
+        ps.version = self.version;
+        ps.updates = self.version;
+        ps.encode_snapshot()
+    }
+
+    fn resync(&mut self, snap: &[u8]) -> Result<(), WireError> {
+        let ps = PsState::decode_snapshot(snap)?;
+        self.params = ps.params;
+        self.version = ps.version;
+        Ok(())
+    }
+}
+
+/// Serve one peer session over `stream`, applying its pushes to
+/// `agg`.  Replayed/duplicate frames (chaos, reconnect replays) are
+/// rejected by the same anti-replay window the live transport uses —
+/// an update is applied **exactly once** per sequence number.  Returns
+/// the number of model updates applied when the peer sends
+/// `Control { stop: true }` or hangs up.
+pub fn serve_peer<S, A>(stream: &mut S, agg: &mut A) -> Result<u64, WireError>
+where
+    S: Read + Write,
+    A: Aggregator,
+{
+    let mut dedup = RxDedup::default();
+    let mut round: Vec<ParamVec> = Vec::new();
+    let mut seq_out = 1u64;
+    let mut enc = Vec::new();
+    let mut dec = Vec::new();
+    let mut applied = 0u64;
+    loop {
+        let (seq, _ack, msg) = match read_seq_frame_with(stream, &mut dec) {
+            Ok(f) => f,
+            Err(WireError::Io(e))
+                if e.kind() == std::io::ErrorKind::UnexpectedEof =>
+            {
+                return Ok(applied);
+            }
+            Err(e) => return Err(e),
+        };
+        if !dedup.admit(seq) {
+            continue;
+        }
+        match msg {
+            Message::PushUpdate { iter, grads, .. } => {
+                if iter == 0 {
+                    if agg.admit(&grads.params) {
+                        agg.apply_async(&grads.params);
+                        applied += 1;
+                    }
+                } else if agg.admit(&grads.params) {
+                    round.push(grads.params);
+                }
+                reply_model(stream, agg, &mut seq_out, dedup.max_seq(), &mut enc)?;
+            }
+            Message::RequestModel { .. } => {
+                if !round.is_empty() {
+                    agg.apply_round(&round);
+                    round.clear();
+                    applied += 1;
+                }
+                reply_model(stream, agg, &mut seq_out, dedup.max_seq(), &mut enc)?;
+            }
+            Message::Control { stop } => {
+                if stop {
+                    return Ok(applied);
+                }
+            }
+            // Register / TimeReport / DatasetAssign / GlobalModel:
+            // worker-plane traffic, meaningless on a tier link.
+            _ => {}
+        }
+    }
+}
+
+fn reply_model<S: Write>(
+    stream: &mut S,
+    agg: &impl Aggregator,
+    seq_out: &mut u64,
+    ack: u64,
+    enc: &mut Vec<u8>,
+) -> Result<(), WireError> {
+    let msg = Message::GlobalModel {
+        version: agg.version(),
+        params: TensorPayload::new(agg.params().clone(), false),
+    };
+    write_seq_frame_with(stream, *seq_out, ack, &msg, enc)?;
+    *seq_out += 1;
+    Ok(())
+}
+
+// ==================================================== tree routing
+
+/// Balanced, seed-deterministic worker → bucket assignment: a
+/// Fisher-Yates shuffle of the worker ids (salt
+/// [`salts::TIER_ROUTE`]) dealt round-robin into `buckets` near-equal
+/// parts (sizes differ by at most one).  `buckets <= 1` makes **zero**
+/// RNG draws — flat and single-region-tree runs share every
+/// downstream random stream (defaults-off bit-invisibility).
+pub fn region_map(n: usize, buckets: usize, seed: u64) -> Vec<usize> {
+    if buckets <= 1 {
+        return vec![0; n];
+    }
+    let mut ids: Vec<usize> = (0..n).collect();
+    Xoshiro256pp::stream(seed, salts::TIER_ROUTE).shuffle(&mut ids);
+    let mut of = vec![0usize; n];
+    for (pos, &w) in ids.iter().enumerate() {
+        of[w] = pos % buckets;
+    }
+    of
+}
+
+/// One tier's merge state: per-bucket partial deltas plus the folded
+/// output.  Buffers are grown on first use and reused forever — the
+/// steady state performs zero heap allocations.
+#[derive(Debug)]
+struct TierMerge {
+    partials: Vec<ParamVec>,
+    touched: Vec<bool>,
+    out: ParamVec,
+}
+
+impl TierMerge {
+    fn new(n: usize) -> TierMerge {
+        TierMerge {
+            partials: vec![ParamVec::default(); n],
+            touched: vec![false; n],
+            out: ParamVec::default(),
+        }
+    }
+
+    fn begin(&mut self) {
+        for t in &mut self.touched {
+            *t = false;
+        }
+    }
+
+    /// `partials[r] += w · g`, zero-initializing `r` lazily so
+    /// untouched buckets cost nothing.
+    fn accum(&mut self, r: usize, g: &ParamVec, w: f32) {
+        if !self.touched[r] {
+            self.partials[r].resize_like(g);
+            self.partials[r].fill(0.0);
+            self.touched[r] = true;
+        }
+        self.partials[r].axpy(w, g);
+    }
+
+    /// Fold the touched partials, buckets ascending, into one merged
+    /// delta.  The bucket-ascending order is part of the determinism
+    /// contract (f32 addition is order-sensitive).
+    fn fold(&mut self, like: &ParamVec) -> &ParamVec {
+        self.out.resize_like(like);
+        self.out.fill(0.0);
+        for r in 0..self.partials.len() {
+            if self.touched[r] {
+                self.out.axpy(1.0, &self.partials[r]);
+            }
+        }
+        &self.out
+    }
+}
+
+/// The DES-side tree: routes the generic driver's two PS mutation
+/// points (barrier rounds, async arrivals) through the regional —
+/// and, for 3-tier topologies, group — aggregation tiers, accounting
+/// every tier-link forward on per-tier [`SimNet`] instances.
+///
+/// **Bit-identity contract** (DESIGN.md §19): with `pass_through`
+/// set — flat specs never build a router; single-region trees build
+/// this degenerate one — every call forwards verbatim to the root
+/// `PsState` with zero accounting and zero RNG draws, so a
+/// `<preset>/tree2` run at `regions = 1` is bit-identical to the flat
+/// `<preset>` run by construction.
+///
+/// With ≥ 2 effective buckets the tree runs the real tiered algebra:
+/// a sync round accumulates `w = 1/K` partials per group/region
+/// (members in arrival order, buckets folded ascending), forwards one
+/// merged delta per contributing bucket (charged on the tier link),
+/// and applies the single merged delta at the root — one version
+/// bump, the same cadence as flat `sync_sgd`, but upstream traffic
+/// proportional to regions instead of fleet size.
+#[derive(Debug)]
+pub struct TierRouter {
+    /// Degenerate single-bucket tree: exact flat behavior.
+    pub pass_through: bool,
+    topo: Topology,
+    n_regions: usize,
+    n_groups: usize,
+    region_of: Vec<usize>,
+    group_of: Vec<usize>,
+    group_region: Vec<usize>,
+    mid_merge: TierMerge,
+    up_merge: TierMerge,
+    /// Region → global link class (one slot per region).
+    uplink: SimNet,
+    /// Group → region link class (tree3 only; one slot per group).
+    midlink: SimNet,
+    tier_gup: bool,
+    fanin: usize,
+    /// Per-region async gate accumulators (error feedback: suppressed
+    /// deltas are carried forward, never dropped).
+    accum: Vec<ParamVec>,
+    pending: Vec<usize>,
+    pub gate_admits: u64,
+    pub gate_suppressed: u64,
+}
+
+impl TierRouter {
+    /// Build the router a spec/config pair asks for.  `Flat` builds
+    /// nothing; a tree with one region (and, for tree3, one group)
+    /// builds the pass-through degenerate.
+    pub fn build(
+        topo: Topology,
+        cfg: &TopologyConfig,
+        n_workers: usize,
+        seed: u64,
+    ) -> Option<TierRouter> {
+        if topo == Topology::Flat {
+            return None;
+        }
+        let n_regions = cfg.regions.max(1);
+        let n_groups =
+            if topo == Topology::Tree3 { cfg.groups.max(1) } else { 0 };
+        let link = NetConfig {
+            latency_s: cfg.uplink_latency_s,
+            bandwidth_bps: cfg.uplink_bandwidth_bps,
+            fp16_wire: false,
+        };
+        if n_regions <= 1 && n_groups <= 1 {
+            return Some(TierRouter {
+                pass_through: true,
+                topo,
+                n_regions: 1,
+                n_groups: 0,
+                region_of: Vec::new(),
+                group_of: Vec::new(),
+                group_region: Vec::new(),
+                mid_merge: TierMerge::new(0),
+                up_merge: TierMerge::new(0),
+                uplink: SimNet::new(link.clone(), 0),
+                midlink: SimNet::new(link, 0),
+                tier_gup: false,
+                fanin: 1,
+                accum: Vec::new(),
+                pending: Vec::new(),
+                gate_admits: 0,
+                gate_suppressed: 0,
+            });
+        }
+        let (region_of, group_of, group_region) = if topo == Topology::Tree3 {
+            // One shuffle assigns workers to groups; groups deal into
+            // regions round-robin (deterministic, zero extra draws).
+            let group_of = region_map(n_workers, n_groups, seed);
+            let group_region: Vec<usize> =
+                (0..n_groups).map(|g| g % n_regions).collect();
+            let region_of =
+                group_of.iter().map(|&g| group_region[g]).collect();
+            (region_of, group_of, group_region)
+        } else {
+            (region_map(n_workers, n_regions, seed), Vec::new(), Vec::new())
+        };
+        let tier_gup = cfg.tier_gup;
+        let fanin = cfg.tier_fanin.max(1);
+        // Stagger each region's first gate flush so the tiers don't
+        // all fire on the same arrival (salt block `TIER_GATE ^ r`,
+        // drawn only when the gate is armed).
+        let pending: Vec<usize> = if tier_gup {
+            (0..n_regions)
+                .map(|r| {
+                    Xoshiro256pp::stream(seed, salts::TIER_GATE ^ r as u64)
+                        .next_below(fanin as u64) as usize
+                })
+                .collect()
+        } else {
+            vec![0; n_regions]
+        };
+        Some(TierRouter {
+            pass_through: false,
+            topo,
+            n_regions,
+            n_groups,
+            region_of,
+            group_of,
+            group_region,
+            mid_merge: TierMerge::new(n_groups),
+            up_merge: TierMerge::new(n_regions),
+            uplink: SimNet::new(link.clone(), n_regions),
+            midlink: SimNet::new(link, n_groups),
+            tier_gup,
+            fanin,
+            accum: vec![ParamVec::default(); n_regions],
+            pending,
+            gate_admits: 0,
+            gate_suppressed: 0,
+        })
+    }
+
+    /// Regions actually merging (0 when pass-through — metrics treat
+    /// the degenerate tree exactly like flat).
+    pub fn merging_regions(&self) -> usize {
+        if self.pass_through {
+            0
+        } else {
+            self.n_regions
+        }
+    }
+
+    pub fn region_of(&self, worker: usize) -> usize {
+        if self.pass_through {
+            0
+        } else {
+            self.region_of[worker]
+        }
+    }
+
+    /// Region → global traffic totals.
+    pub fn uplink_stats(&self) -> &TrafficStats {
+        self.uplink.total()
+    }
+
+    /// Group → region traffic totals (zeros for two-tier trees).
+    pub fn midlink_stats(&self) -> &TrafficStats {
+        self.midlink.total()
+    }
+
+    /// Per-region sums of the edge-tier (worker-link) byte counters —
+    /// the ledger rows that must add back up to the fleet total.
+    pub fn edge_bytes(&self, net: &SimNet) -> Vec<u64> {
+        let mut v = vec![0u64; self.n_regions];
+        for w in 0..net.n_workers() {
+            v[self.region_of(w)] += net.worker(w).bytes;
+        }
+        v
+    }
+
+    /// Route one Eq. 1 barrier round: `grads[i]` came from worker
+    /// `who[i]`.  Pass-through forwards to `sync_sgd` verbatim; a real
+    /// tree merges per group/region, charges one `push_bytes` forward
+    /// per contributing bucket on the tier links (forwarding is
+    /// pipelined — it never stretches the DES clock), and applies the
+    /// merged delta at the root with a single version bump.
+    pub fn route_round(
+        &mut self,
+        ps: &mut PsState,
+        grads: &[ParamVec],
+        who: &[usize],
+        push_bytes: usize,
+    ) {
+        if grads.is_empty() {
+            return;
+        }
+        debug_assert_eq!(grads.len(), who.len());
+        if self.pass_through {
+            ps.sync_sgd(grads);
+            return;
+        }
+        let w = 1.0 / grads.len() as f32;
+        self.up_merge.begin();
+        if self.topo == Topology::Tree3 {
+            self.mid_merge.begin();
+            for (g, &wid) in grads.iter().zip(who) {
+                self.mid_merge.accum(self.group_of[wid], g, w);
+            }
+            for grp in 0..self.n_groups {
+                if self.mid_merge.touched[grp] {
+                    self.midlink.transfer_bytes(grp, push_bytes);
+                    self.up_merge.accum(
+                        self.group_region[grp],
+                        &self.mid_merge.partials[grp],
+                        1.0,
+                    );
+                }
+            }
+        } else {
+            for (g, &wid) in grads.iter().zip(who) {
+                self.up_merge.accum(self.region_of[wid], g, w);
+            }
+        }
+        for r in 0..self.n_regions {
+            if self.up_merge.touched[r] {
+                self.uplink.transfer_bytes(r, push_bytes);
+            }
+        }
+        let merged = self.up_merge.fold(&grads[0]);
+        ps.async_sgd(merged);
+    }
+
+    /// Route one Eq. 2 async push from `wid`.  Gate off: bit-identical
+    /// pass-through with per-push tier accounting (every push
+    /// forwards, exactly the flat byte count).  Gate on: the worker's
+    /// region accumulates pushes and forwards one merged delta per
+    /// `tier_fanin` arrivals — error feedback, so suppressed deltas
+    /// are carried, never dropped.
+    pub fn route_async(
+        &mut self,
+        ps: &mut PsState,
+        g: &ParamVec,
+        wid: usize,
+        push_bytes: usize,
+    ) {
+        if self.pass_through {
+            ps.async_sgd(g);
+            return;
+        }
+        if self.topo == Topology::Tree3 {
+            self.midlink.transfer_bytes(self.group_of[wid], push_bytes);
+        }
+        let r = self.region_of[wid];
+        if !self.tier_gup {
+            self.uplink.transfer_bytes(r, push_bytes);
+            ps.async_sgd(g);
+            return;
+        }
+        let acc = &mut self.accum[r];
+        if !acc.same_shape(g) {
+            acc.resize_like(g);
+            acc.fill(0.0);
+        }
+        acc.axpy(1.0, g);
+        self.pending[r] += 1;
+        if self.pending[r] >= self.fanin {
+            self.uplink.transfer_bytes(r, push_bytes);
+            ps.async_sgd(&self.accum[r]);
+            self.accum[r].fill(0.0);
+            self.pending[r] = 0;
+            self.gate_admits += 1;
+        } else {
+            self.gate_suppressed += 1;
+        }
+    }
+
+    /// Account a delta that crosses the tiers *verbatim*: GUP-admitted
+    /// pushes (Alg. 2's root merge needs the raw loss-weighted delta)
+    /// and defenses-on rounds (the robust guard's coordinate-wise
+    /// trimming needs the raw per-worker deltas).  Tiers relay instead
+    /// of merging, so these save nothing upstream — the honest price
+    /// of root-side robustness.
+    pub fn note_forward(&mut self, wid: usize, push_bytes: usize) {
+        if self.pass_through {
+            return;
+        }
+        if self.topo == Topology::Tree3 {
+            self.midlink.transfer_bytes(self.group_of[wid], push_bytes);
+        }
+        self.uplink.transfer_bytes(self.region_of[wid], push_bytes);
+    }
+
+    /// [`note_forward`](TierRouter::note_forward) for a whole
+    /// defenses-on round.
+    pub fn charge_round_forwards(&mut self, who: &[usize], push_bytes: usize) {
+        if self.pass_through {
+            return;
+        }
+        for &wid in who {
+            self.note_forward(wid, push_bytes);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+    use std::net::{TcpListener, TcpStream};
+
+    fn pv(seed: u64, n: usize) -> ParamVec {
+        let mut rng = Xoshiro256pp::seed_from_u64(seed);
+        let data: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        ParamVec { tensors: vec![Tensor::new(vec![n], data)] }
+    }
+
+    fn topo_cfg(regions: usize, groups: usize) -> TopologyConfig {
+        TopologyConfig { regions, groups, ..TopologyConfig::default() }
+    }
+
+    #[test]
+    fn region_map_is_balanced_deterministic_and_lazy() {
+        let a = region_map(13, 4, 7);
+        let b = region_map(13, 4, 7);
+        assert_eq!(a, b);
+        let mut counts = [0usize; 4];
+        for &r in &a {
+            assert!(r < 4);
+            counts[r] += 1;
+        }
+        assert!(counts.iter().all(|&c| (3..=4).contains(&c)), "{counts:?}");
+        assert_ne!(a, region_map(13, 4, 8), "seed must matter");
+        // buckets <= 1 draws nothing and maps everyone to bucket 0.
+        assert_eq!(region_map(5, 1, 7), vec![0; 5]);
+    }
+
+    #[test]
+    fn flat_spec_builds_no_router_and_tree1_is_pass_through() {
+        assert!(TierRouter::build(Topology::Flat, &topo_cfg(4, 8), 8, 1).is_none());
+        let t = TierRouter::build(Topology::Tree2, &topo_cfg(1, 1), 8, 1).unwrap();
+        assert!(t.pass_through);
+        assert_eq!(t.merging_regions(), 0);
+        let t3 = TierRouter::build(Topology::Tree3, &topo_cfg(1, 1), 8, 1).unwrap();
+        assert!(t3.pass_through);
+    }
+
+    #[test]
+    fn pass_through_round_is_bit_identical_to_flat() {
+        let w0 = pv(1, 300);
+        let grads: Vec<ParamVec> = (0..5).map(|i| pv(10 + i, 300)).collect();
+        let who: Vec<usize> = (0..5).collect();
+        let mut flat = PsState::new(w0.clone(), 0.3);
+        flat.sync_sgd(&grads);
+        let mut tree = PsState::new(w0, 0.3);
+        let mut r = TierRouter::build(Topology::Tree2, &topo_cfg(1, 1), 5, 1).unwrap();
+        r.route_round(&mut tree, &grads, &who, 64);
+        assert_eq!(flat.params, tree.params);
+        assert_eq!(flat.version, tree.version);
+        assert_eq!(r.uplink_stats().bytes, 0, "pass-through accounts nothing");
+    }
+
+    #[test]
+    fn single_touched_region_merges_bit_identically() {
+        // All contributors in one region ⇒ the tier partial is built
+        // in the same order as the flat scratch accumulator, so even a
+        // real (R = 2) tree is bit-identical for that round.
+        let n = 9;
+        let r = TierRouter::build(Topology::Tree2, &topo_cfg(2, 1), n, 3).unwrap();
+        let who: Vec<usize> =
+            (0..n).filter(|&w| r.region_of(w) == 0).collect();
+        assert!(who.len() >= 2, "need at least two region-0 workers");
+        let mut r = r;
+        let grads: Vec<ParamVec> =
+            who.iter().map(|&w| pv(50 + w as u64, 257)).collect();
+        let w0 = pv(2, 257);
+        let mut flat = PsState::new(w0.clone(), 0.05);
+        flat.sync_sgd(&grads);
+        let mut tree = PsState::new(w0, 0.05);
+        r.route_round(&mut tree, &grads, &who, 64);
+        assert_eq!(flat.params, tree.params);
+        // Exactly one merged forward crossed the uplink.
+        assert_eq!(r.uplink_stats().api_calls, 1);
+        assert_eq!(r.uplink_stats().bytes, 64);
+    }
+
+    #[test]
+    fn tree_round_matches_flat_numerically_and_charges_per_region() {
+        let n = 12;
+        let grads: Vec<ParamVec> = (0..n).map(|i| pv(30 + i as u64, 400)).collect();
+        let who: Vec<usize> = (0..n).collect();
+        let w0 = pv(3, 400);
+        let mut flat = PsState::new(w0.clone(), 0.1);
+        flat.sync_sgd(&grads);
+        let mut tree = PsState::new(w0, 0.1);
+        let mut r = TierRouter::build(Topology::Tree3, &topo_cfg(3, 6), n, 9).unwrap();
+        r.route_round(&mut tree, &grads, &who, 100);
+        assert_eq!(flat.version, tree.version, "one bump per round");
+        // Same algebra, different summation tree ⇒ equal to f32 noise.
+        for (a, b) in flat.params.tensors.iter().zip(&tree.params.tensors) {
+            for (x, y) in a.data().iter().zip(b.data()) {
+                assert!((x - y).abs() <= 1e-5, "{x} vs {y}");
+            }
+        }
+        // 12 workers merged into ≤ 3 region forwards and ≤ 6 group
+        // forwards — that is the whole point.
+        assert_eq!(r.uplink_stats().api_calls, 3);
+        assert_eq!(r.uplink_stats().bytes, 300);
+        assert_eq!(r.midlink_stats().api_calls, 6);
+    }
+
+    #[test]
+    fn async_gate_carries_error_feedback_and_staggers() {
+        let n = 8;
+        let cfg = TopologyConfig {
+            regions: 2,
+            tier_gup: true,
+            tier_fanin: 4,
+            ..TopologyConfig::default()
+        };
+        let mut r = TierRouter::build(Topology::Tree2, &cfg, n, 5).unwrap();
+        let mut ps = PsState::new(pv(4, 128), 0.2);
+        let v0 = ps.version;
+        let g = pv(60, 128);
+        let wid = (0..n).find(|&w| r.region_of(w) == 0).unwrap();
+        // Enough pushes to guarantee ≥ 1 flush regardless of stagger.
+        for _ in 0..8 {
+            r.route_async(&mut ps, &g, wid, 64);
+        }
+        assert!(r.gate_admits >= 1 && r.gate_admits <= 3);
+        assert_eq!(r.gate_admits + r.gate_suppressed, 8);
+        // Each flush applied one merged delta at the root.
+        assert_eq!(ps.version - v0, r.gate_admits);
+        assert_eq!(r.uplink_stats().api_calls, r.gate_admits);
+        // Gate off: every push forwards and applies — flat behavior.
+        let mut r2 =
+            TierRouter::build(Topology::Tree2, &topo_cfg(2, 1), n, 5).unwrap();
+        let mut ps2 = PsState::new(pv(4, 128), 0.2);
+        let mut flat = PsState::new(pv(4, 128), 0.2);
+        for _ in 0..3 {
+            r2.route_async(&mut ps2, &g, wid, 64);
+            flat.async_sgd(&g);
+        }
+        assert_eq!(ps2.params, flat.params);
+        assert_eq!(r2.uplink_stats().api_calls, 3);
+    }
+
+    #[test]
+    fn sharded_aggregator_is_bit_identical_to_in_process() {
+        let w0 = pv(6, 70_000); // big enough to actually shard
+        let grads: Vec<ParamVec> = (0..4).map(|i| pv(80 + i, 70_000)).collect();
+        let mut plain = PsState::new(w0.clone(), 0.1);
+        plain.sync_sgd(&grads);
+        plain.async_sgd(&grads[0]);
+        for s in [1, 3, 8] {
+            let mut sh = ShardedAggregator::new(PsState::new(w0.clone(), 0.1), s);
+            sh.apply_round(&grads);
+            sh.apply_async(&grads[0]);
+            assert_eq!(plain.params, *sh.params(), "shards = {s}");
+            assert_eq!(plain.version, sh.version());
+        }
+    }
+
+    #[test]
+    fn snapshot_resync_round_trips_through_the_trait() {
+        let mut a = ShardedAggregator::new(PsState::new(pv(7, 500), 0.1), 2);
+        a.apply_async(&pv(90, 500));
+        let snap = a.snapshot();
+        let mut b = ShardedAggregator::new(PsState::new(pv(8, 500), 0.1), 2);
+        b.resync(&snap).unwrap();
+        assert_eq!(a.params(), b.params());
+        assert_eq!(a.version(), b.version());
+    }
+
+    #[test]
+    fn remote_peer_tier_over_tcp_applies_rounds_and_rejects_replays() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let w0 = pv(9, 300);
+        let eta = 0.1;
+        let server_ps = PsState::new(w0.clone(), eta);
+        let server = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            let mut agg = server_ps;
+            let applied = serve_peer(&mut s, &mut agg).unwrap();
+            (agg, applied)
+        });
+
+        let stream = TcpStream::connect(addr).unwrap();
+        let mut peer = RemotePeerAggregator::connect(stream, eta).unwrap();
+        assert_eq!(*peer.params(), w0, "connect fetches the initial model");
+
+        // Shadow the algebra locally to prove the wire is lossless.
+        let mut shadow = PsState::new(w0, eta);
+        let grads: Vec<ParamVec> = (0..3).map(|i| pv(100 + i, 300)).collect();
+        peer.apply_round(&grads);
+        shadow.sync_sgd(&grads);
+        assert_eq!(*peer.params(), shadow.params);
+        assert_eq!(peer.version(), shadow.version);
+        peer.apply_async(&grads[0]);
+        shadow.async_sgd(&grads[0]);
+        assert_eq!(*peer.params(), shadow.params);
+
+        // Replay the *same* sequence number: the server's anti-replay
+        // window must drop it (no reply), so the next real exchange
+        // sees an unchanged version.
+        let v = peer.version();
+        let replay_seq = peer.seq - 1; // already-used seq
+        let msg = Message::PushUpdate {
+            worker: 0,
+            iter: 0,
+            test_loss: 0.0,
+            train_time: 0.0,
+            grads: TensorPayload::new(grads[0].clone(), false),
+        };
+        let mut enc = Vec::new();
+        write_seq_frame_with(&mut peer.stream, replay_seq, peer.ack, &msg, &mut enc)
+            .unwrap();
+        peer.rpc(&Message::RequestModel { worker: 0 }).unwrap();
+        assert_eq!(peer.version(), v, "replayed push must not apply");
+
+        peer.close().unwrap();
+        let (agg, applied) = server.join().unwrap();
+        assert_eq!(applied, 2, "one round commit + one async push");
+        assert_eq!(agg.params, shadow.params);
+    }
+}

@@ -531,6 +531,86 @@ impl SupervisorConfig {
     }
 }
 
+/// Multi-tier aggregation topology for one run (DESIGN.md §19): the
+/// shape of the tree a `/tree2` or `/tree3` framework spec builds,
+/// plus the tier-link cost model and the optional per-region GUP
+/// gate.  Only consulted when the spec's topology axis is a tree —
+/// flat runs never read it (defaults-off bit-invisibility), and a
+/// single-region (single-group) tree degenerates to an exact flat
+/// pass-through.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TopologyConfig {
+    /// Regional aggregators under the global PS (tree2/tree3).
+    pub regions: usize,
+    /// Edge groups under the regions (tree3 only; dealt round-robin
+    /// into regions).
+    pub groups: usize,
+    /// Per-forward latency on the tier links (region→global and
+    /// group→region share one link class).
+    pub uplink_latency_s: f64,
+    /// Tier-link bandwidth in bits/s.
+    pub uplink_bandwidth_bps: f64,
+    /// Arm the per-region GUP-style gate on async pushes: each region
+    /// accumulates deltas (error feedback) and forwards one merged
+    /// update per `tier_fanin` arrivals.
+    pub tier_gup: bool,
+    /// Pushes a region absorbs before forwarding when `tier_gup` is
+    /// on.
+    pub tier_fanin: usize,
+}
+
+impl Default for TopologyConfig {
+    fn default() -> Self {
+        TopologyConfig {
+            regions: 4,
+            groups: 8,
+            uplink_latency_s: 0.02,
+            uplink_bandwidth_bps: 50e6,
+            tier_gup: false,
+            tier_fanin: 4,
+        }
+    }
+}
+
+/// The knob list quoted by every topology parse/validation error
+/// (same CLI polish as [`SUPERVISOR_KNOBS`]).
+pub const TOPOLOGY_KNOBS: &str = "regions, groups, uplink_latency_s, \
+     uplink_bandwidth_bps, tier_gup, tier_fanin";
+
+impl TopologyConfig {
+    pub fn validate(&self) -> Result<(), String> {
+        let bad = |knob: &str, want: &str| {
+            Err(format!(
+                "topology {knob} must be {want} \
+                 (valid topology knobs: {TOPOLOGY_KNOBS})"
+            ))
+        };
+        // The per-region gate salt block is `TIER_GATE ^ region` with
+        // an 8-bit mask, so bucket counts are capped at 256.
+        if !(1..=256).contains(&self.regions) {
+            return bad("regions", "in [1, 256]");
+        }
+        if !(1..=256).contains(&self.groups) {
+            return bad("groups", "in [1, 256]");
+        }
+        if self.groups < self.regions {
+            return bad("groups", "≥ regions (every region needs a group)");
+        }
+        if !(self.uplink_latency_s.is_finite() && self.uplink_latency_s >= 0.0) {
+            return bad("uplink_latency_s", "finite and ≥ 0");
+        }
+        if !(self.uplink_bandwidth_bps.is_finite()
+            && self.uplink_bandwidth_bps > 0.0)
+        {
+            return bad("uplink_bandwidth_bps", "finite and > 0");
+        }
+        if self.tier_fanin == 0 {
+            return bad("tier_fanin", "≥ 1");
+        }
+        Ok(())
+    }
+}
+
 /// Streaming-data scenario for one run (DESIGN.md §16): either an
 /// explicit per-worker [`StreamPlan`] or the generator knobs a
 /// [`DataMode`] compiles into one at `SimEnv::build` — like
@@ -798,6 +878,9 @@ pub struct RunConfig {
     /// speculative re-execution, degraded-mode auto-tuning) — off by
     /// default (DESIGN.md §18).
     pub supervisor: SupervisorConfig,
+    /// Multi-tier aggregation tree shape — only consulted when the
+    /// spec's topology axis is `/tree2` or `/tree3` (DESIGN.md §19).
+    pub topology: TopologyConfig,
 }
 
 impl RunConfig {
@@ -832,6 +915,7 @@ impl RunConfig {
             stream: StreamConfig::default(),
             chaos: ChaosConfig::default(),
             supervisor: SupervisorConfig::default(),
+            topology: TopologyConfig::default(),
         }
     }
 
@@ -868,6 +952,7 @@ impl RunConfig {
         self.stream.validate()?;
         self.chaos.validate()?;
         self.supervisor.validate()?;
+        self.topology.validate()?;
         if self.framework.is_streaming() && self.stream.capacity < self.mbs0 {
             return Err(
                 "stream capacity must be ≥ mbs0 (the replay buffer must \
@@ -1049,6 +1134,23 @@ impl RunConfig {
                     ),
                 ]),
             ),
+            (
+                "topology",
+                Json::obj(vec![
+                    ("regions", Json::Num(self.topology.regions as f64)),
+                    ("groups", Json::Num(self.topology.groups as f64)),
+                    (
+                        "uplink_latency_s",
+                        Json::Num(self.topology.uplink_latency_s),
+                    ),
+                    (
+                        "uplink_bandwidth_bps",
+                        Json::Num(self.topology.uplink_bandwidth_bps),
+                    ),
+                    ("tier_gup", Json::Bool(self.topology.tier_gup)),
+                    ("tier_fanin", Json::Num(self.topology.tier_fanin as f64)),
+                ]),
+            ),
             ("dss0", Json::Num(self.dss0 as f64)),
             ("mbs0", Json::Num(self.mbs0 as f64)),
             ("target_acc", Json::Num(self.target_acc)),
@@ -1212,6 +1314,33 @@ impl RunConfig {
             supervisor.degraded_deadline_s = un("degraded_deadline_s")?;
             supervisor.degraded_rebalance_s = un("degraded_rebalance_s")?;
         }
+        // Optional for older configs: missing `topology` = defaults
+        // (inert unless the spec arms a tree).  A present-but-malformed
+        // block fails with the offending knob *and* the full knob list.
+        let mut topology = TopologyConfig::default();
+        if let Some(tj) = j.at("topology") {
+            let knob = |f: &str| {
+                format!(
+                    "topology/{f} missing or mistyped \
+                     (valid topology knobs: {TOPOLOGY_KNOBS})"
+                )
+            };
+            let tb = |f: &str| -> Result<bool, String> {
+                tj.get(f).and_then(Json::as_bool).ok_or_else(|| knob(f))
+            };
+            let tn = |f: &str| -> Result<f64, String> {
+                tj.get(f).and_then(Json::as_f64).ok_or_else(|| knob(f))
+            };
+            let tu = |f: &str| -> Result<usize, String> {
+                tj.get(f).and_then(Json::as_usize).ok_or_else(|| knob(f))
+            };
+            topology.regions = tu("regions")?;
+            topology.groups = tu("groups")?;
+            topology.uplink_latency_s = tn("uplink_latency_s")?;
+            topology.uplink_bandwidth_bps = tn("uplink_bandwidth_bps")?;
+            topology.tier_gup = tb("tier_gup")?;
+            topology.tier_fanin = tu("tier_fanin")?;
+        }
         // Typed spec validation at parse time: a bad name fails here
         // with the full list of valid specs, not deep inside a driver.
         let framework: FrameworkSpec = s("framework")?
@@ -1258,6 +1387,7 @@ impl RunConfig {
             stream,
             chaos,
             supervisor,
+            topology,
         };
         cfg.validate()?;
         Ok(cfg)

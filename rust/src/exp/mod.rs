@@ -1082,6 +1082,103 @@ pub fn straggler_sweep(
     Ok(rows)
 }
 
+// -------------------------------------------------------------- topo
+
+/// Topology axis of the `hermes exp topo` sweep.
+pub const TOPO_SWEEP_TOPOLOGIES: [&str; 3] = ["flat", "tree2", "tree3"];
+/// Framework axis of the `hermes exp topo` sweep.
+pub const TOPO_SWEEP_FRAMEWORKS: [&str; 3] = ["bsp", "ebsp", "hermes"];
+
+/// `hermes exp topo`: the hierarchical-aggregation sweep (DESIGN.md
+/// §19) — {flat, tree2, tree3} × {bsp, ebsp, hermes} over a fixed
+/// iteration budget, comparing root-uplink traffic.  Tree tiers merge
+/// each round's member deltas regionally and forward ONE delta upward,
+/// so synchronous presets see upstream bytes drop from O(workers) to
+/// O(regions) per round; GUP pushes relay verbatim (no savings, by
+/// design — the gate already thinned them at the edge).  Writes
+/// `topo_<model>.csv` with the per-tier traffic ledger columns.
+pub fn topo_sweep(
+    out: &Path,
+    model: &str,
+    artifacts: &Path,
+    threads: usize,
+) -> Result<Vec<RunMetrics>> {
+    let mut jobs = Vec::new();
+    for topo in TOPO_SWEEP_TOPOLOGIES {
+        for fw in TOPO_SWEEP_FRAMEWORKS {
+            let mut cfg = scaled_cfg(model, &format!("{fw}/{topo}"));
+            cfg.max_iters = 120;
+            cfg.target_acc = 1.1; // fixed budget: compare traffic
+            // 12-worker testbed tree: 6 edge groups → 3 regions → root
+            // (tree2 skips the group tier and uses 3 regions directly).
+            cfg.topology.regions = 3;
+            cfg.topology.groups = 6;
+            jobs.push(SweepJob::new(format!("{fw}/{topo}"), cfg));
+        }
+    }
+    let model_s = model.to_string();
+    let arts = artifacts.to_path_buf();
+
+    let mut csv = String::from(
+        "framework,topology,regions,iterations,virtual_time_s,final_loss,\
+         final_accuracy,bytes,tier_upstream_bytes,tier_upstream_updates,\
+         tier_mid_bytes,tier_mid_updates,tier_gate_admits,\
+         tier_gate_suppressed\n",
+    );
+    let mut table = TableFmt::new(&[
+        "Config",
+        "VT",
+        "Iters",
+        "Regions",
+        "Upstream B",
+        "Up updates",
+        "Mid B",
+    ]);
+    let mut rows: Vec<RunMetrics> = Vec::with_capacity(jobs.len());
+    sweep::run_sweep_streaming(
+        &jobs,
+        threads,
+        0, // auto window
+        move |_job| make_runtime(&model_s, &arts),
+        |i, r| {
+            let cfg = &jobs[i].cfg;
+            csv += &format!(
+                "{},{},{},{},{:.3},{:.5},{:.5},{},{},{},{},{},{},{}\n",
+                cfg.framework,
+                cfg.framework.topo.token(),
+                r.tier_regions,
+                r.iterations,
+                r.virtual_time,
+                r.final_loss,
+                r.final_accuracy,
+                r.bytes,
+                r.tier_upstream_bytes,
+                r.tier_upstream_updates,
+                r.tier_mid_bytes,
+                r.tier_mid_updates,
+                r.tier_gate_admits,
+                r.tier_gate_suppressed
+            );
+            table.row(vec![
+                jobs[i].label.clone(),
+                format!("{:.1}", r.virtual_time),
+                r.iterations.to_string(),
+                r.tier_regions.to_string(),
+                r.tier_upstream_bytes.to_string(),
+                r.tier_upstream_updates.to_string(),
+                r.tier_mid_bytes.to_string(),
+            ]);
+            rows.push(r);
+            Ok(())
+        },
+    )?;
+
+    let rendered = table.render();
+    println!("\nTopology sweep ({model}):\n{rendered}");
+    write_file(out, &format!("topo_{model}.csv"), &csv)?;
+    Ok(rows)
+}
+
 // ------------------------------------------------------------- scale
 
 /// Which framework axis a scale sweep fans over.
@@ -1259,6 +1356,7 @@ pub fn run_all(out: &Path, model: &str, artifacts: &Path) -> Result<()> {
     table3(out, model, artifacts)?;
     faults_churn_sweep(out, model, artifacts, 0, &FAULT_SWEEP_RATES, &PRESETS)?;
     straggler_sweep(out, model, artifacts, 0)?;
+    topo_sweep(out, model, artifacts, 0)?;
     stream_sweep(
         out,
         model,
@@ -1314,6 +1412,42 @@ mod tests {
         let csv = std::fs::read_to_string(dir.join("faults_churn_mock.csv")).unwrap();
         assert_eq!(csv.lines().count(), 3, "{csv}");
         assert!(csv.lines().nth(1).unwrap().starts_with("hermes,0,"), "{csv}");
+    }
+
+    #[test]
+    fn topo_sweep_trees_cut_upstream_bytes_for_sync_presets() {
+        let dir = std::env::temp_dir().join("hermes_exp_topo_test");
+        let rows = topo_sweep(&dir, "mock", Path::new("/nonexistent"), 0).unwrap();
+        // {flat, tree2, tree3} × {bsp, ebsp, hermes}, topology outermost.
+        assert_eq!(rows.len(), 9);
+        let csv = std::fs::read_to_string(dir.join("topo_mock.csv")).unwrap();
+        assert_eq!(csv.lines().count(), 10, "{csv}");
+        assert!(csv.lines().nth(1).unwrap().starts_with("bsp,flat,0,"), "{csv}");
+        let at = |t: usize, f: usize| &rows[t * 3 + f];
+        for f in 0..TOPO_SWEEP_FRAMEWORKS.len() {
+            // Same fixed budget everywhere: traffic is comparable.
+            assert_eq!(at(0, f).iterations, at(1, f).iterations);
+            assert_eq!(at(0, f).iterations, at(2, f).iterations);
+        }
+        for (f, fw) in ["bsp", "ebsp"].into_iter().enumerate() {
+            for t in [1, 2] {
+                assert!(
+                    at(t, f).tier_upstream_bytes < at(0, f).tier_upstream_bytes,
+                    "{fw}/{}: upstream {} !< flat {}",
+                    TOPO_SWEEP_TOPOLOGIES[t],
+                    at(t, f).tier_upstream_bytes,
+                    at(0, f).tier_upstream_bytes
+                );
+            }
+        }
+        // GUP pushes relay verbatim: the gate already thinned them at
+        // the edge, so the tree adds accounting but no extra savings.
+        assert_eq!(at(1, 2).tier_upstream_bytes, at(0, 2).tier_upstream_bytes);
+        // Tree runs carry a live regional ledger; flat synthesizes one.
+        assert_eq!(at(0, 0).tier_regions, 0);
+        assert_eq!(at(1, 0).tier_regions, 3);
+        assert_eq!(at(2, 0).tier_regions, 3);
+        assert!(at(2, 0).tier_mid_bytes > 0, "tree3 must charge the mid tier");
     }
 
     #[test]

@@ -7,6 +7,7 @@ use std::time::Instant;
 
 use anyhow::Result;
 
+use crate::aggregator::TierRouter;
 use crate::alloc::Allocation;
 use crate::cluster::Cluster;
 use crate::config::{RobustConfig, RunConfig};
@@ -98,6 +99,12 @@ pub struct SimEnv {
     /// [`REBALANCE_EVERY`](super::hermes::REBALANCE_EVERY) until the
     /// degraded-mode controller tightens it.
     pub rebalance_every: f64,
+    /// Multi-tier aggregation tree (DESIGN.md §19) — `Some` only when
+    /// the spec's topology axis is `/tree2` or `/tree3`.  Flat runs
+    /// never construct it, and a single-region tree constructs the
+    /// pass-through degenerate (zero accounting, zero RNG draws), so
+    /// both are bit-identical to the pre-topology engine.
+    pub topo: Option<TierRouter>,
     /// PS-side admission guard (`Some` only when the guard is enabled).
     guard: Option<UpdateGuard>,
     /// Armed corruption per worker, consumed at its next actual push.
@@ -228,6 +235,7 @@ impl SimEnv {
         } else {
             None
         };
+        let topo = TierRouter::build(cfg.framework.topo, &cfg.topology, n, cfg.seed);
 
         Ok(SimEnv {
             cfg,
@@ -255,6 +263,7 @@ impl SimEnv {
             robust,
             sup,
             rebalance_every: super::hermes::REBALANCE_EVERY,
+            topo,
             guard,
             corrupt_pending: vec![None; n],
             last_push: (0..n).map(|_| None).collect(),
@@ -708,22 +717,35 @@ impl SimEnv {
     }
 
     /// One synchronous round's aggregation with the ISSUE 6 defenses.
+    /// `who[i]` is the worker that produced `grads[i]` — the tier
+    /// router needs it to place deltas in regions; flat runs ignore it.
     /// Defenses-off takes the exact legacy SyncSGD path (bit-identical
-    /// to the pre-robustness drivers); otherwise the guard filters the
-    /// round's deltas and the configured aggregator — plain mean or
-    /// coordinate-wise trimmed mean — runs over the survivors.  An
-    /// all-quarantined round leaves the global model untouched.
-    /// Consumes and releases every buffer in `grads`.
-    pub fn aggregate_round(&mut self, grads: &mut Vec<ParamVec>) {
+    /// to the pre-robustness drivers) or, under a real tree, the
+    /// tiered Eq. 1 merge (DESIGN.md §19); otherwise the guard filters
+    /// the round's deltas and the configured aggregator — plain mean
+    /// or coordinate-wise trimmed mean — runs over the survivors at
+    /// the global root (trimming needs raw per-worker deltas, so tiers
+    /// relay verbatim and save nothing upstream).  An all-quarantined
+    /// round leaves the global model untouched.  Consumes and releases
+    /// every buffer in `grads`.
+    pub fn aggregate_round(&mut self, grads: &mut Vec<ParamVec>, who: &[usize]) {
         if grads.is_empty() {
             return;
         }
+        debug_assert_eq!(grads.len(), who.len());
+        let pb = self.push_bytes();
         if !self.robust.defenses_on() {
-            self.ps.sync_sgd(grads);
+            match self.topo.as_mut() {
+                Some(t) => t.route_round(&mut self.ps, grads, who, pb),
+                None => self.ps.sync_sgd(grads),
+            }
             for g in grads.drain(..) {
                 self.pool.release(g);
             }
             return;
+        }
+        if let Some(t) = self.topo.as_mut() {
+            t.charge_round_forwards(who, pb);
         }
         let mut survivors: Vec<ParamVec> = Vec::with_capacity(grads.len());
         for g in grads.drain(..) {
@@ -742,6 +764,32 @@ impl SimEnv {
         }
         for g in survivors.drain(..) {
             self.pool.release(g);
+        }
+    }
+
+    /// One asynchronous (Eq. 2) update from worker `w`: flat runs and
+    /// pass-through trees apply it directly (bit-identical to the
+    /// legacy `async_sgd` call); a real tree routes it through the
+    /// worker's region — and its tier-GUP gate when armed.
+    pub fn apply_async_update(&mut self, g: &ParamVec, w: usize) {
+        let pb = self.push_bytes();
+        match self.topo.as_mut() {
+            Some(t) => t.route_async(&mut self.ps, g, w, pb),
+            None => self.ps.async_sgd(g),
+        }
+    }
+
+    /// Account a GUP-admitted (Alg. 2) push crossing the tiers
+    /// verbatim — the loss-weighted root merge needs the raw delta, so
+    /// tiers relay rather than merge.  No-op for flat runs and
+    /// pass-through trees.
+    pub fn note_gup_forward(&mut self, w: usize) {
+        if self.topo.is_none() {
+            return;
+        }
+        let pb = self.push_bytes();
+        if let Some(t) = self.topo.as_mut() {
+            t.note_forward(w, pb);
         }
     }
 
@@ -868,6 +916,38 @@ impl SimEnv {
             for i in 0..self.run.workers.len() {
                 self.run.workers[i].spec_covered = sup.spec_covered[i];
                 self.run.workers[i].spec_backups = sup.spec_backups[i];
+            }
+        }
+        // Tier ledger (DESIGN.md §19).  A merging tree reports its
+        // tier-link counters; flat runs and pass-through trees report
+        // tier_regions = 0 plus the synthesized flat equivalent of the
+        // topmost link — every push crosses it — so `topo_<model>.csv`
+        // compares upstream traffic apples-to-apples, and the
+        // flat-vs-1-region-tree bit-identity extends to every tier
+        // field.
+        let total_pushes: u64 =
+            self.run.workers.iter().map(|w| w.pushes).sum();
+        let pb = self.net.push_msg_bytes(self.rt.meta()) as u64;
+        match self.topo.as_ref() {
+            Some(t) if !t.pass_through => {
+                self.run.tier_regions = t.merging_regions() as u64;
+                self.run.tier_upstream_bytes = t.uplink_stats().bytes;
+                self.run.tier_upstream_updates = t.uplink_stats().api_calls;
+                self.run.tier_mid_bytes = t.midlink_stats().bytes;
+                self.run.tier_mid_updates = t.midlink_stats().api_calls;
+                self.run.tier_gate_admits = t.gate_admits;
+                self.run.tier_gate_suppressed = t.gate_suppressed;
+                self.run.tier_edge_bytes = t.edge_bytes(&self.net);
+            }
+            _ => {
+                self.run.tier_regions = 0;
+                self.run.tier_upstream_bytes = total_pushes * pb;
+                self.run.tier_upstream_updates = total_pushes;
+                self.run.tier_mid_bytes = 0;
+                self.run.tier_mid_updates = 0;
+                self.run.tier_gate_admits = 0;
+                self.run.tier_gate_suppressed = 0;
+                self.run.tier_edge_bytes = vec![self.run.bytes];
             }
         }
         self.run

@@ -400,6 +400,7 @@ fn run_event(env: &mut SimEnv, spec: FrameworkSpec) -> Result<()> {
                     env.corrupt_outgoing(w, &mut g_scratch);
                     let t_w = env.workers[w].last_loss;
                     if env.guard_admits(&g_scratch) {
+                        env.note_gup_forward(w);
                         env.ps
                             .loss_based_sgd(&g_scratch, t_w, env.rt.as_mut(), &env.probe)?;
                         let now = env.queue.now();
@@ -415,7 +416,7 @@ fn run_event(env: &mut SimEnv, spec: FrameworkSpec) -> Result<()> {
                     env.corrupt_outgoing(w, &mut g);
                     let admitted = env.guard_admits(&g);
                     if admitted {
-                        env.ps.async_sgd(&g);
+                        env.apply_async_update(&g, w);
                     }
                     env.pool.release(g);
                     if admitted
@@ -826,6 +827,7 @@ fn run_lockstep(env: &mut SimEnv, spec: FrameworkSpec) -> Result<()> {
                 env.corrupt_outgoing(w, &mut g_scratch);
                 let t_w = env.workers[w].last_loss;
                 if env.guard_admits(&g_scratch) {
+                    env.note_gup_forward(w);
                     env.ps
                         .loss_based_sgd(&g_scratch, t_w, env.rt.as_mut(), &env.probe)?;
                 }
@@ -835,9 +837,12 @@ fn run_lockstep(env: &mut SimEnv, spec: FrameworkSpec) -> Result<()> {
             // then this round's committed pushes in active order.
             let mut round: Vec<ParamVec> =
                 Vec::with_capacity(late_grads.len() + grads.len());
-            for (_w, g, arr) in late_grads.drain(..) {
+            let mut round_who: Vec<usize> =
+                Vec::with_capacity(late_grads.len() + grads.len());
+            for (w, g, arr) in late_grads.drain(..) {
                 ps_ready = ps_ready.max(arr);
                 round.push(g);
+                round_who.push(w);
             }
             for (g, &w) in grads.drain(..).zip(&active) {
                 if finishes[w] <= commit {
@@ -846,6 +851,7 @@ fn run_lockstep(env: &mut SimEnv, spec: FrameworkSpec) -> Result<()> {
                     env.note_push(w, arr);
                     ps_ready = ps_ready.max(arr);
                     round.push(g);
+                    round_who.push(w);
                 } else {
                     let arr = finishes[w] + env.transfer(w, push_b);
                     env.segment(w, finishes[w], arr, SegmentKind::Comm);
@@ -855,7 +861,7 @@ fn run_lockstep(env: &mut SimEnv, spec: FrameworkSpec) -> Result<()> {
                 }
             }
             env.queue.advance_to(ps_ready);
-            env.aggregate_round(&mut round);
+            env.aggregate_round(&mut round, &round_who);
         }
         if monitored {
             // The barrier re-ships the (re-sized) working set in the
@@ -1056,7 +1062,7 @@ fn run_gated_rounds(env: &mut SimEnv, spec: FrameworkSpec) -> Result<()> {
             for (g, &w) in grads.iter_mut().zip(&active) {
                 env.corrupt_outgoing(w, g);
             }
-            env.aggregate_round(&mut grads);
+            env.aggregate_round(&mut grads, &active);
             let t1 = env.queue.now();
             for &w in &active {
                 let comm = env.transfer(w, model_b);
@@ -1438,6 +1444,7 @@ fn run_elastic(env: &mut SimEnv, spec: FrameworkSpec) -> Result<()> {
                 env.corrupt_outgoing(w, &mut g_scratch);
                 let t_w = env.workers[w].last_loss;
                 if env.guard_admits(&g_scratch) {
+                    env.note_gup_forward(w);
                     env.ps
                         .loss_based_sgd(&g_scratch, t_w, env.rt.as_mut(), &env.probe)?;
                 }
@@ -1446,14 +1453,18 @@ fn run_elastic(env: &mut SimEnv, spec: FrameworkSpec) -> Result<()> {
             // Carried late deltas fold in ahead of this round's pushes.
             let mut round: Vec<ParamVec> =
                 Vec::with_capacity(carried.len() + grads.len());
+            let mut round_who: Vec<usize> =
+                Vec::with_capacity(carried.len() + grads.len());
             let mut ready2 = ps_ready;
-            for (_w, g, arr) in carried {
+            for (w, g, arr) in carried {
                 ready2 = ready2.max(arr);
                 round.push(g);
+                round_who.push(w);
             }
             round.extend(grads.drain(..));
+            round_who.extend_from_slice(&pushers);
             env.queue.advance_to(ready2);
-            env.aggregate_round(&mut round);
+            env.aggregate_round(&mut round, &round_who);
         }
         if monitored {
             // EBSP never re-ships datasets: charge the data plane here.

@@ -35,5 +35,5 @@ pub use common::{
 };
 pub use policy::{
     AggPolicy, AllocPolicy, DataMode, FrameworkSpec, GatePolicy, SpecError,
-    SyncPolicy, PRESETS, STREAM_MODES,
+    SyncPolicy, Topology, PRESETS, STREAM_MODES, TOPOLOGIES,
 };

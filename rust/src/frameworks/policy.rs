@@ -9,18 +9,22 @@
 //! composition (`bsp+dynalloc`, `ssp+gup`, `selsync+dynalloc`, …) is a
 //! first-class spec the generic driver ([`super::driver`]) executes.
 //!
-//! Spec grammar (`FromStr`): `<first>[+<gate>][+<alloc>][@<stream>]`
-//! where `<first>` is a preset name (`bsp asp ssp ebsp selsync
-//! hermes`), `<gate>` ∈ {`every`, `delta`, `gup`}, `<alloc>` ∈
-//! {`static`, `dynalloc`, `streamalloc`} and the optional `@<stream>`
-//! suffix ([`DataMode`]) swaps the static dataset for a streaming one
-//! (`steady ramp burst trickle`, DESIGN.md §16) — e.g.
-//! `bsp@trickle`, `hermes+streamalloc@burst`.  The preset seeds all
-//! axes; later tokens override one axis each (at most once).
-//! `Display` renders the preset name when the spec matches one, else
-//! the canonical `<sync>[+<gate>][+<alloc>]` form, with `@<stream>`
-//! appended when streaming — `FromStr ∘ Display` is the identity on
-//! every spec in the grid.
+//! Spec grammar (`FromStr`):
+//! `<first>[+<gate>][+<alloc>][@<stream>][/<topo>]` where `<first>` is
+//! a preset name (`bsp asp ssp ebsp selsync hermes`), `<gate>` ∈
+//! {`every`, `delta`, `gup`}, `<alloc>` ∈ {`static`, `dynalloc`,
+//! `streamalloc`}, the optional `@<stream>` suffix ([`DataMode`])
+//! swaps the static dataset for a streaming one (`steady ramp burst
+//! trickle`, DESIGN.md §16), and the optional `/<topo>` suffix
+//! ([`Topology`], DESIGN.md §19) routes aggregation through a
+//! hierarchical parameter-server tree (`flat tree2 tree3`) — e.g.
+//! `bsp@trickle`, `hermes+streamalloc@burst`, `bsp/tree2`,
+//! `ebsp@steady/tree3`.  The preset seeds all axes; later tokens
+//! override one axis each (at most once).  `Display` renders the
+//! preset name when the spec matches one, else the canonical
+//! `<sync>[+<gate>][+<alloc>]` form, with `@<stream>` appended when
+//! streaming and `/<topo>` when non-flat — `FromStr ∘ Display` is the
+//! identity on every spec in the grid.
 
 use std::fmt;
 use std::str::FromStr;
@@ -94,6 +98,25 @@ pub enum DataMode {
 /// which is the implicit default when no `@<stream>` suffix appears).
 pub const STREAM_MODES: [&str; 4] = ["steady", "ramp", "burst", "trickle"];
 
+/// The topology axis (DESIGN.md §19): how worker updates reach the
+/// global parameter server.  Everything but `Flat` routes aggregation
+/// through regional tiers that merge their children's deltas (Eq. 1 /
+/// Alg. 2 per tier) and forward one merged update upward.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Topology {
+    /// Every worker talks straight to the global PS (the classic
+    /// single-tier deployment; the default on every preset).
+    Flat,
+    /// Two aggregation tiers: workers → regional aggregators → global.
+    Tree2,
+    /// Three aggregation tiers: workers → edge groups → regional
+    /// aggregators → global.
+    Tree3,
+}
+
+/// The topology tokens, in grammar order.
+pub const TOPOLOGIES: [&str; 3] = ["flat", "tree2", "tree3"];
+
 /// How the PS treats incoming deltas (ISSUE 6 failure-domain axis).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum AggPolicy {
@@ -121,12 +144,18 @@ pub struct FrameworkSpec {
     pub alloc: AllocPolicy,
     pub agg: AggPolicy,
     pub data: DataMode,
+    pub topo: Topology,
 }
 
 impl FrameworkSpec {
     /// Does this spec stream its dataset over virtual time?
     pub fn is_streaming(&self) -> bool {
         self.data != DataMode::Static
+    }
+
+    /// Does this spec aggregate through a hierarchical tier tree?
+    pub fn is_tree(&self) -> bool {
+        self.topo != Topology::Flat
     }
 }
 
@@ -144,6 +173,7 @@ pub fn preset(name: &str) -> Option<FrameworkSpec> {
         alloc,
         agg: AggPolicy::Mean,
         data: DataMode::Static,
+        topo: Topology::Flat,
     };
     match name {
         "bsp" => Some(spec(Barrier, Every, Static)),
@@ -205,6 +235,31 @@ impl DataMode {
     }
 }
 
+impl Topology {
+    pub fn token(&self) -> &'static str {
+        match self {
+            Topology::Flat => "flat",
+            Topology::Tree2 => "tree2",
+            Topology::Tree3 => "tree3",
+        }
+    }
+
+    /// Parse a bare topology token (`flat`, `tree2`, `tree3`) as used by
+    /// the `/<topo>` spec suffix and the `--topology` CLI option.
+    pub fn from_token(tok: &str) -> Option<Topology> {
+        match tok {
+            "flat" => Some(Topology::Flat),
+            "tree2" => Some(Topology::Tree2),
+            "tree3" => Some(Topology::Tree3),
+            _ => None,
+        }
+    }
+}
+
+fn topology_token(tok: &str) -> Option<Topology> {
+    Topology::from_token(tok)
+}
+
 fn data_mode_token(tok: &str) -> Option<DataMode> {
     match tok {
         "steady" => Some(DataMode::Steady),
@@ -255,13 +310,15 @@ fn alloc_token(tok: &str) -> Option<AllocPolicy> {
 pub fn spec_help() -> String {
     format!(
         "valid specs: presets {} or compositions \
-         <preset>[+<gate>][+<alloc>][+<agg>][@<stream>] with gate one \
-         of every|delta|gup, alloc one of static|dynalloc|streamalloc, \
-         agg one of mean|robust and stream one of {} (e.g. \
-         bsp+dynalloc, ssp+gup, selsync+dynalloc, hermes+robust, \
-         bsp@trickle, hermes+streamalloc@burst)",
+         <preset>[+<gate>][+<alloc>][+<agg>][@<stream>][/<topo>] with \
+         gate one of every|delta|gup, alloc one of \
+         static|dynalloc|streamalloc, agg one of mean|robust, stream \
+         one of {} and topo one of {} (e.g. bsp+dynalloc, ssp+gup, \
+         selsync+dynalloc, hermes+robust, bsp@trickle, \
+         hermes+streamalloc@burst, bsp/tree2, ebsp@steady/tree3)",
         PRESETS.join(" "),
-        STREAM_MODES.join("|")
+        STREAM_MODES.join("|"),
+        TOPOLOGIES.join("|")
     )
 }
 
@@ -310,6 +367,20 @@ impl FromStr for FrameworkSpec {
         if input.is_empty() {
             return Err(SpecError::new(s, s, "empty spec"));
         }
+        // The topology axis rides as the outermost `/<topo>` suffix —
+        // split it off first so `ebsp@steady/tree3` parses as
+        // (ebsp@steady, tree3).
+        let (input2, topo) = match input.split_once('/') {
+            None => (input, Topology::Flat),
+            Some((core, topo)) => {
+                let topo = topo.trim();
+                let t = topology_token(topo).ok_or_else(|| {
+                    SpecError::new(input, topo, "unknown topology")
+                })?;
+                (core.trim(), t)
+            }
+        };
+        let input = input2;
         // The data axis rides as an `@<stream>` suffix — split it off
         // before the `+` axis tokens so `hermes+streamalloc@burst`
         // parses as (hermes+streamalloc, burst).
@@ -353,12 +424,19 @@ impl FromStr for FrameworkSpec {
             }
         }
         spec.data = data;
+        spec.topo = topo;
         Ok(spec)
     }
 }
 
 impl fmt::Display for FrameworkSpec {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // The topology suffix is outermost: render the flat core first
+        // so `ebsp@steady/tree3` comes out in grammar order.
+        if self.is_tree() {
+            let core = FrameworkSpec { topo: Topology::Flat, ..*self };
+            return write!(f, "{core}/{}", self.topo.token());
+        }
         if self.is_streaming() {
             let core = FrameworkSpec { data: DataMode::Static, ..*self };
             return write!(f, "{core}@{}", self.data.token());
@@ -407,6 +485,7 @@ pub fn grid_specs() -> Vec<FrameworkSpec> {
                     alloc,
                     agg: AggPolicy::Mean,
                     data: DataMode::Static,
+                    topo: Topology::Flat,
                 });
             }
         }
@@ -464,6 +543,7 @@ mod tests {
                 alloc: AllocPolicy::Dynamic,
                 agg: AggPolicy::Mean,
                 data: DataMode::Static,
+                topo: Topology::Flat,
             }
         );
         let s: FrameworkSpec = "ssp+gup".parse().unwrap();
@@ -611,6 +691,67 @@ mod tests {
         let s: FrameworkSpec = "bsp+streamalloc".parse().unwrap();
         assert_eq!(s.alloc, AllocPolicy::StreamDriven);
         assert_eq!(s.to_string(), "bsp+streamalloc");
+    }
+
+    #[test]
+    fn topology_axis_parses_renders_and_defaults_flat() {
+        // Every preset and grid spec stays flat.
+        for name in PRESETS {
+            let s = preset(name).unwrap();
+            assert_eq!(s.topo, Topology::Flat);
+            assert!(!s.is_tree());
+        }
+        for spec in grid_specs() {
+            assert_eq!(spec.topo, Topology::Flat);
+        }
+        // `/<topo>` composes with any spec and round-trips.
+        for base in ["bsp", "hermes", "ssp+gup", "ebsp@steady"] {
+            for topo in TOPOLOGIES {
+                let s: FrameworkSpec = format!("{base}/{topo}").parse().unwrap();
+                assert_eq!(s.topo.token(), topo);
+                assert_eq!(s.is_tree(), topo != "flat");
+                let core = FrameworkSpec { topo: Topology::Flat, ..s };
+                assert_eq!(core, base.parse().unwrap());
+                let rendered = s.to_string();
+                assert_eq!(
+                    rendered.parse::<FrameworkSpec>().unwrap(),
+                    s,
+                    "{rendered}"
+                );
+            }
+        }
+        // An explicit `/flat` renders back to the bare core spec.
+        assert_eq!("bsp/flat".parse::<FrameworkSpec>().unwrap().to_string(), "bsp");
+        assert_eq!(
+            "bsp/tree2".parse::<FrameworkSpec>().unwrap().to_string(),
+            "bsp/tree2"
+        );
+        // Grammar order: stream suffix inside, topo suffix outside.
+        assert_eq!(
+            "ebsp@steady/tree3".parse::<FrameworkSpec>().unwrap().to_string(),
+            "ebsp@steady/tree3"
+        );
+        // Tree specs are never presets.
+        assert_eq!(
+            preset_name(&"bsp/tree2".parse::<FrameworkSpec>().unwrap()),
+            None
+        );
+    }
+
+    #[test]
+    fn topology_parse_errors_list_valid_topologies() {
+        let err = "bsp/warp".parse::<FrameworkSpec>().unwrap_err();
+        assert_eq!(err.token, "warp");
+        assert!(err.reason.contains("unknown topology"), "{err}");
+        let msg = err.to_string();
+        for topo in TOPOLOGIES {
+            assert!(msg.contains(topo), "error must suggest '{topo}': {msg}");
+        }
+        // The core before '/' is still fully validated.
+        assert!("bspp/tree2".parse::<FrameworkSpec>().is_err());
+        assert!("bsp+warp/tree2".parse::<FrameworkSpec>().is_err());
+        assert!("bsp@warp/tree2".parse::<FrameworkSpec>().is_err());
+        assert!("bsp/".parse::<FrameworkSpec>().is_err());
     }
 
     #[test]

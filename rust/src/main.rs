@@ -37,7 +37,7 @@ fn usage() -> String {
        run   run one framework over the simulated 12-worker edge cluster\n\
        exp   regenerate a paper experiment: fig1 fig2 fig3 fig4 fig11\n\
              fig12 fig13 fig14 table3 faults robust chaos straggler\n\
-             scale all\n\
+             topo scale all\n\
        live  run the real threaded TCP parameter server + workers\n\
              (worker leases, heartbeat timeouts, reconnect resync)\n\
        info  show artifacts, cluster and hyper-parameter defaults\n\n\
@@ -51,9 +51,13 @@ fn usage() -> String {
      engine (DESIGN.md §16): seeded per-worker arrival curves ×\n\
      Dirichlet label skew × framework.  `hermes exp straggler` sweeps a\n\
      mid-run ×100 slowdown with supervision off/on (`hermes run bsp\n\
-     --supervise`, DESIGN.md §18).  Frameworks are composable\n\
+     --supervise`, DESIGN.md §18).  `hermes exp topo` sweeps the\n\
+     multi-tier aggregation tree (DESIGN.md §19): edge groups merge\n\
+     into regional aggregators which forward ONE delta to the global\n\
+     PS.  Frameworks are composable\n\
      specs: `hermes run ssp+gup`, `bsp+dynalloc`, or with a data axis\n\
-     `bsp+streamalloc@trickle`, `hermes@burst`, …\n\n\
+     `bsp+streamalloc@trickle`, `hermes@burst`, or with a topology\n\
+     `bsp/tree3`, `hermes+gup@burst/tree2`, …\n\n\
      Try `hermes <cmd> --help`."
         .to_string()
 }
@@ -94,6 +98,14 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
         .opt("dss0", "", "initial per-worker dataset size")
         .opt("mbs0", "", "initial mini-batch size (power of two)")
         .opt("staleness", "", "SSP staleness bound s")
+        .opt(
+            "topology",
+            "",
+            "aggregation topology: flat | tree2 | tree3 (DESIGN.md §19); \
+             also composable as a spec suffix, e.g. `bsp/tree3`",
+        )
+        .opt("regions", "", "regional aggregator count for tree topologies")
+        .opt("groups", "", "edge-group count for tree3 (≥ regions)")
         .opt("churn", "0", "crash/rejoin cycles per 100 virtual s (faults)")
         .opt("artifacts", "artifacts", "artifacts directory")
         .opt("out", "results", "output directory")
@@ -135,6 +147,17 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
     setu(m.get_opt("dss0"), &mut cfg.dss0)?;
     setu(m.get_opt("mbs0"), &mut cfg.mbs0)?;
     setu(m.get_opt("staleness"), &mut cfg.hp.ssp_staleness)?;
+    if let Some(t) = m.get_opt("topology").filter(|s| !s.is_empty()) {
+        cfg.framework.topo =
+            hermes_dml::frameworks::Topology::from_token(t).ok_or_else(|| {
+                format!(
+                    "bad topology '{t}': expected one of {}",
+                    hermes_dml::frameworks::TOPOLOGIES.join("|")
+                )
+            })?;
+    }
+    setu(m.get_opt("regions"), &mut cfg.topology.regions)?;
+    setu(m.get_opt("groups"), &mut cfg.topology.groups)?;
     cfg.dynamic_alloc = !m.has("no-dynamic-alloc");
     cfg.prefetch = !m.has("no-prefetch");
     cfg.net.fp16_wire = !m.has("no-fp16");
@@ -159,11 +182,17 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
         if run.converged { " — CONVERGED" } else { "" },
     );
     let out = PathBuf::from(m.get("out"));
-    write_file(&out, &format!("run_{fw}_{model}_curve.csv"), &run.curve_csv())
+    // A `/<topo>` suffix must not fragment the output filename.
+    let fw_file = fw.replace('/', "-");
+    write_file(&out, &format!("run_{fw_file}_{model}_curve.csv"), &run.curve_csv())
         .map_err(|e| e.to_string())?;
     if m.has("timeline") {
-        write_file(&out, &format!("run_{fw}_{model}_timeline.csv"), &run.segments_csv())
-            .map_err(|e| e.to_string())?;
+        write_file(
+            &out,
+            &format!("run_{fw_file}_{model}_timeline.csv"),
+            &run.segments_csv(),
+        )
+        .map_err(|e| e.to_string())?;
     }
     Ok(())
 }
@@ -173,7 +202,7 @@ fn cmd_exp(args: &[String]) -> Result<(), String> {
         .pos(
             "which",
             "fig1 fig2 fig3 fig4 fig11 fig12 fig13 fig14 table3 faults robust \
-             chaos straggler stream scale all",
+             chaos straggler stream topo scale all",
         )
         .opt("model", "mock", "mock | cnn | alexnet (compute backend)")
         .opt("artifacts", "artifacts", "artifacts directory")
@@ -219,6 +248,9 @@ fn cmd_exp(args: &[String]) -> Result<(), String> {
         }
         "straggler" => {
             exp::straggler_sweep(&out, model, &arts, threads).map(|_| ())
+        }
+        "topo" => {
+            exp::topo_sweep(&out, model, &arts, threads).map(|_| ())
         }
         "stream" => exp::stream_sweep(
             &out,

@@ -168,6 +168,29 @@ pub struct RunMetrics {
     pub sup_degraded_enters: u64,
     /// Degraded-mode exits (defaults restored on recovery).
     pub sup_degraded_exits: u64,
+    /// Regional aggregators actually merging (ISSUE 10).  0 for flat
+    /// runs *and* pass-through single-region trees, so the flat vs.
+    /// 1-region-tree bit-identity covers the tier counters too.
+    pub tier_regions: u64,
+    /// Bytes forwarded on the topmost (region → global) link.  Flat
+    /// runs synthesize the equivalent — every push crosses it — so
+    /// tree savings are directly comparable.
+    pub tier_upstream_bytes: u64,
+    /// Forwards on the topmost link (api-call equivalent).
+    pub tier_upstream_updates: u64,
+    /// Bytes on the group → region mid-tier links (tree3 only).
+    pub tier_mid_bytes: u64,
+    /// Forwards on the mid-tier links (tree3 only).
+    pub tier_mid_updates: u64,
+    /// Per-region tier-GUP gate flushes (merged forwards).
+    pub tier_gate_admits: u64,
+    /// Pushes absorbed by the per-region gate (error feedback —
+    /// carried into the next flush, never dropped).
+    pub tier_gate_suppressed: u64,
+    /// Per-region sums of the edge-tier (worker-link) byte counters;
+    /// the ledger invariant Σ == `bytes` is asserted in
+    /// `coordinator_props`.  Flat runs report one region.
+    pub tier_edge_bytes: Vec<u64>,
 }
 
 impl RunMetrics {
@@ -260,6 +283,31 @@ impl RunMetrics {
             (
                 "sup_degraded_exits",
                 Json::Num(self.sup_degraded_exits as f64),
+            ),
+            ("tier_regions", Json::Num(self.tier_regions as f64)),
+            (
+                "tier_upstream_bytes",
+                Json::Num(self.tier_upstream_bytes as f64),
+            ),
+            (
+                "tier_upstream_updates",
+                Json::Num(self.tier_upstream_updates as f64),
+            ),
+            ("tier_mid_bytes", Json::Num(self.tier_mid_bytes as f64)),
+            ("tier_mid_updates", Json::Num(self.tier_mid_updates as f64)),
+            ("tier_gate_admits", Json::Num(self.tier_gate_admits as f64)),
+            (
+                "tier_gate_suppressed",
+                Json::Num(self.tier_gate_suppressed as f64),
+            ),
+            (
+                "tier_edge_bytes",
+                Json::Arr(
+                    self.tier_edge_bytes
+                        .iter()
+                        .map(|&b| Json::Num(b as f64))
+                        .collect(),
+                ),
             ),
             (
                 "crashed_workers",

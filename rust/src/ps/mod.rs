@@ -301,6 +301,41 @@ impl PsState {
     }
 }
 
+/// The identity lift onto the tier surface (ISSUE 10): the trait
+/// methods *are* `sync_sgd` / `async_sgd` / the `PSNP` snapshot codec,
+/// so an in-process tier is bit-identical to the pre-trait parameter
+/// server by construction.
+impl crate::aggregator::Aggregator for PsState {
+    fn apply_round(&mut self, grads: &[ParamVec]) {
+        self.sync_sgd(grads);
+    }
+
+    fn apply_async(&mut self, grad: &ParamVec) {
+        self.async_sgd(grad);
+    }
+
+    fn params(&self) -> &ParamVec {
+        &self.params
+    }
+
+    fn version(&self) -> u64 {
+        self.version
+    }
+
+    fn updates(&self) -> u64 {
+        self.updates
+    }
+
+    fn snapshot(&self) -> Vec<u8> {
+        self.encode_snapshot()
+    }
+
+    fn resync(&mut self, snap: &[u8]) -> Result<(), WireError> {
+        *self = PsState::decode_snapshot(snap)?;
+        Ok(())
+    }
+}
+
 /// How many accepted update norms the guard remembers; the median of
 /// this ring is the reference scale for the relative-norm bound.
 const GUARD_WINDOW: usize = 32;

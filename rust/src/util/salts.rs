@@ -65,6 +65,15 @@ pub const LIVE_JITTER: u64 = 0xE2CC;
 /// Per-worker supervisor threshold jitter, `base ^ w`
 /// (`supervisor::Supervisor::new`, ISSUE 9).
 pub const SUPERVISOR: u64 = 0xE5A0;
+/// Worker → region assignment shuffle for tree topologies
+/// (`aggregator::region_map`, ISSUE 10).  Drawn only when a topology
+/// with ≥ 2 regions is armed — flat and single-region-tree runs make
+/// zero draws from this stream (defaults-off bit-invisibility).
+pub const TIER_ROUTE: u64 = 0xE7A3;
+/// Per-region tier-GUP gate stagger, `base ^ region`
+/// (`aggregator::TierRouter`, ISSUE 10).  Drawn only when `tier_gup`
+/// is on, so gate-off runs never touch the stream.
+pub const TIER_GATE: u64 = 0xE870;
 
 /// One registry entry: the streams `{base ^ (w & mask)}`.  Singleton
 /// salts use `mask = 0`.
@@ -84,6 +93,8 @@ const REGISTRY: &[(&str, u64, u64)] = &[
     ("chaos_partition", CHAOS_PARTITION, 0),
     ("live_jitter", LIVE_JITTER, 0xFF),
     ("supervisor", SUPERVISOR, 0xFF),
+    ("tier_route", TIER_ROUTE, 0),
+    ("tier_gate", TIER_GATE, 0xFF),
 ];
 
 /// Can blocks `a` and `b` ever emit the same salt?  `b1^w1 == b2^w2`
@@ -120,6 +131,13 @@ mod tests {
         // Likewise the old live-jitter block grazed the data sampler.
         assert!(blocks_overlap(0xBACC, 0xFF, DATA_BATCH, !0x1FFFF));
         assert!(!blocks_overlap(LIVE_JITTER, 0xFF, DATA_BATCH, !0x1FFFF));
+        // The tier blocks (ISSUE 10) live in the reserved range and
+        // clear both per-worker shifted samplers and the supervisor
+        // low-byte family.
+        assert!(!blocks_overlap(TIER_ROUTE, 0, DATA_BATCH, !0x1FFFF));
+        assert!(!blocks_overlap(TIER_GATE, 0xFF, DATA_BATCH, !0x1FFFF));
+        assert!(!blocks_overlap(TIER_GATE, 0xFF, SUPERVISOR, 0xFF));
+        assert!(!blocks_overlap(TIER_GATE, 0xFF, TIER_ROUTE, 0));
     }
 
     #[test]

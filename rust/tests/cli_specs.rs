@@ -233,6 +233,142 @@ fn exp_straggler_writes_the_sweep_csv_from_the_cli() {
 }
 
 #[test]
+fn bad_topology_is_rejected_with_the_valid_topologies() {
+    // A bad `/<topo>` spec suffix fails the typed spec parse…
+    let out = hermes().args(["run", "bsp/mesh"]).output().unwrap();
+    assert!(!out.status.success(), "a bad topology must not run");
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("mesh"), "{err}");
+    assert!(err.contains("unknown topology"), "{err}");
+    for topo in ["flat", "tree2", "tree3"] {
+        assert!(err.contains(topo), "missing topology '{topo}': {err}");
+    }
+    // …and so does a bad `--topology` option value.
+    let out = hermes()
+        .args(["run", "bsp", "--topology", "ring"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("bad topology 'ring'"), "{err}");
+    assert!(err.contains("flat|tree2|tree3"), "{err}");
+}
+
+#[test]
+fn tree_specs_run_end_to_end_from_the_cli() {
+    for spec in ["bsp/tree2", "hermes/tree3"] {
+        let dir = tmp_out(&spec.replace('/', "_"));
+        let out = hermes()
+            .args([
+                "run",
+                spec,
+                "--max-iters",
+                "24",
+                "--dss0",
+                "64",
+                "--target-acc",
+                "1.1",
+                "--regions",
+                "3",
+                "--groups",
+                "6",
+                "--out",
+                dir.to_str().unwrap(),
+            ])
+            .output()
+            .unwrap();
+        let stderr = String::from_utf8_lossy(&out.stderr);
+        assert!(out.status.success(), "{spec} failed: {stderr}");
+        let stdout = String::from_utf8_lossy(&out.stdout);
+        assert!(stdout.contains(spec), "{spec} not in summary: {stdout}");
+        // The summary JSON carries the per-tier traffic ledger.
+        for key in ["tier_regions", "tier_upstream_bytes", "tier_edge_bytes"] {
+            assert!(stdout.contains(key), "missing '{key}' in summary: {stdout}");
+        }
+        let file = format!("run_{}_mock_curve.csv", spec.replace('/', "-"));
+        assert!(dir.join(&file).exists(), "{spec}: {file} not written");
+    }
+}
+
+#[test]
+fn exp_topo_writes_the_sweep_csv_from_the_cli() {
+    let dir = tmp_out("exp_topo");
+    let out = hermes()
+        .args(["exp", "topo", "--threads", "2", "--out", dir.to_str().unwrap()])
+        .output()
+        .unwrap();
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(out.status.success(), "exp topo failed: {stderr}");
+    let csv = std::fs::read_to_string(dir.join("topo_mock.csv")).unwrap();
+    // Header + 3 topologies × 3 frameworks.
+    assert_eq!(csv.lines().count(), 10, "{csv}");
+    assert!(csv.starts_with("framework,topology,regions,"), "{csv}");
+    for row in ["bsp,flat,", "bsp/tree3,tree3,", "hermes/tree2,tree2,"] {
+        assert!(
+            csv.lines().any(|l| l.starts_with(row)),
+            "row '{row}' missing:\n{csv}"
+        );
+    }
+}
+
+#[test]
+fn topology_config_round_trips_through_json() {
+    use hermes_dml::config::RunConfig;
+    use hermes_dml::util::json::Json;
+
+    let mut rc = RunConfig::new("mock", "bsp/tree3");
+    rc.topology.regions = 10;
+    rc.topology.groups = 100;
+    rc.topology.uplink_latency_s = 0.05;
+    rc.topology.uplink_bandwidth_bps = 25e6;
+    rc.topology.tier_gup = true;
+    rc.topology.tier_fanin = 8;
+    let j = rc.to_json().to_string();
+    let back = RunConfig::from_json(&Json::parse(&j).unwrap()).unwrap();
+    assert_eq!(back.topology, rc.topology);
+    assert_eq!(back.framework, rc.framework, "topo axis lost in round-trip");
+
+    // A config written before the aggregation tree existed still
+    // loads: a missing block means the flat defaults.
+    let mut m = match rc.to_json() {
+        Json::Obj(m) => m,
+        _ => unreachable!(),
+    };
+    m.remove("topology");
+    let back = RunConfig::from_json(&Json::Obj(m)).unwrap();
+    assert_eq!(back.topology, Default::default());
+}
+
+#[test]
+fn malformed_topology_knob_lists_the_valid_knobs() {
+    use hermes_dml::config::{RunConfig, TOPOLOGY_KNOBS};
+    use hermes_dml::util::json::Json;
+
+    // A mistyped knob fails the parse with the full knob list.
+    let rc = RunConfig::new("mock", "bsp/tree2");
+    let mut m = match rc.to_json() {
+        Json::Obj(m) => m,
+        _ => unreachable!(),
+    };
+    let mut topo = match m.get("topology").cloned().unwrap() {
+        Json::Obj(t) => t,
+        _ => unreachable!(),
+    };
+    topo.insert("regions".into(), Json::Str("many".into()));
+    m.insert("topology".into(), Json::Obj(topo));
+    let err = RunConfig::from_json(&Json::Obj(m)).unwrap_err();
+    assert!(err.contains("regions"), "{err}");
+    assert!(err.contains(TOPOLOGY_KNOBS), "{err}");
+
+    // An out-of-range knob fails validation with the same list.
+    let mut rc = RunConfig::new("mock", "bsp/tree2");
+    rc.topology.regions = 0;
+    let err = rc.validate().unwrap_err();
+    assert!(err.contains("regions"), "{err}");
+    assert!(err.contains(TOPOLOGY_KNOBS), "{err}");
+}
+
+#[test]
 fn supervisor_config_round_trips_through_json() {
     use hermes_dml::config::RunConfig;
     use hermes_dml::util::json::Json;

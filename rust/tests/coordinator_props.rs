@@ -529,6 +529,22 @@ fn assert_same_run(
     assert_eq!(a.sup_readmissions, b.sup_readmissions, "{tag}: sup readmissions");
     assert_eq!(a.sup_degraded_enters, b.sup_degraded_enters, "{tag}: degraded enters");
     assert_eq!(a.sup_degraded_exits, b.sup_degraded_exits, "{tag}: degraded exits");
+    assert_eq!(a.tier_regions, b.tier_regions, "{tag}: tier regions");
+    assert_eq!(a.tier_upstream_bytes, b.tier_upstream_bytes, "{tag}: tier upstream bytes");
+    assert_eq!(
+        a.tier_upstream_updates,
+        b.tier_upstream_updates,
+        "{tag}: tier upstream updates"
+    );
+    assert_eq!(a.tier_mid_bytes, b.tier_mid_bytes, "{tag}: tier mid bytes");
+    assert_eq!(a.tier_mid_updates, b.tier_mid_updates, "{tag}: tier mid updates");
+    assert_eq!(a.tier_gate_admits, b.tier_gate_admits, "{tag}: tier gate admits");
+    assert_eq!(
+        a.tier_gate_suppressed,
+        b.tier_gate_suppressed,
+        "{tag}: tier gate suppressed"
+    );
+    assert_eq!(a.tier_edge_bytes, b.tier_edge_bytes, "{tag}: tier edge bytes");
     assert_eq!(a.curve.len(), b.curve.len(), "{tag}: curve length");
     for (i, (x, y)) in a.curve.iter().zip(&b.curve).enumerate() {
         let xc = (x.0.to_bits(), x.1.to_bits(), x.2.to_bits());
@@ -843,6 +859,114 @@ fn prop_worker_ledgers_sum_to_fleet_totals_under_combined_plans() {
             );
             assert!(r.frames_dropped > 0, "{tag}: chaos never fired");
             assert!(r.stream_arrivals > 0, "{tag}: stream never delivered");
+            // Flat runs synthesize a one-region tier ledger (ISSUE 10):
+            // the edge tier IS the fleet, and every push reaches the
+            // root unmerged.
+            assert_eq!(r.tier_regions, 0, "{tag}: flat run grew regions");
+            assert_eq!(
+                r.tier_edge_bytes.iter().sum::<u64>(),
+                r.bytes,
+                "{tag}: tier edge ledger"
+            );
+            assert_eq!(
+                r.tier_upstream_updates,
+                r.total_pushes(),
+                "{tag}: flat upstream updates"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_tree_tier_ledger_sums_to_fleet_totals() {
+    // ISSUE 10 satellite: with a real aggregation tree the per-tier
+    // traffic ledger must still balance — the edge-tier rows partition
+    // the fleet's bytes by region (Σ == RunMetrics.bytes exactly), the
+    // region count matches the topology config, and sync trees forward
+    // strictly fewer upstream updates than the workers pushed.
+    use hermes_dml::config::RunConfig;
+    use hermes_dml::frameworks::run_framework;
+    use hermes_dml::runtime::MockRuntime;
+
+    for spec in ["bsp/tree2", "ebsp/tree3", "hermes/tree3", "selsync/tree2"] {
+        for seed in [7u64, 11] {
+            let mut cfg = RunConfig::new("mock", spec);
+            cfg.seed = seed;
+            cfg.max_iters = 60;
+            cfg.dss0 = 96;
+            cfg.target_acc = 1.1; // run the full budget
+            cfg.topology.regions = 3;
+            cfg.topology.groups = 6;
+            let r = run_framework(cfg, Box::new(MockRuntime::new())).unwrap();
+            let tag = format!("{spec} seed={seed}");
+            assert!(r.iterations > 0, "{tag}: empty run");
+            assert_eq!(r.tier_regions, 3, "{tag}: regions");
+            assert_eq!(r.tier_edge_bytes.len(), 3, "{tag}: edge rows");
+            assert_eq!(
+                r.tier_edge_bytes.iter().sum::<u64>(),
+                r.bytes,
+                "{tag}: tier edge ledger"
+            );
+            if spec.starts_with("bsp") || spec.starts_with("ebsp") {
+                assert!(
+                    r.tier_upstream_updates < r.total_pushes(),
+                    "{tag}: tree forwarded {} updates for {} pushes",
+                    r.tier_upstream_updates,
+                    r.total_pushes()
+                );
+            }
+            if spec.ends_with("tree3") {
+                assert!(r.tier_mid_updates > 0, "{tag}: mid tier never merged");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_flat_vs_single_region_tree_bit_identical() {
+    // THE acceptance property of the aggregator subsystem (ISSUE 10,
+    // DESIGN.md §19): a one-region tree is pass-through — zero extra
+    // RNG draws, zero tier accounting, deltas applied through the same
+    // [`PsState`] arithmetic — so every canonical preset run through
+    // `<preset>/tree2` with regions=1 must reproduce the frozen
+    // reference driver bit-for-bit, across {scalar, SIMD} backends ×
+    // shard counts.
+    use hermes_dml::config::RunConfig;
+    use hermes_dml::frameworks::{run_framework, run_reference, PRESETS};
+    use hermes_dml::runtime::MockRuntime;
+
+    let mk = |fw: &str| {
+        let mut cfg = RunConfig::new("mock", fw);
+        cfg.max_iters = 60;
+        cfg.dss0 = 96;
+        cfg.target_acc = 0.995;
+        cfg
+    };
+
+    for fw in PRESETS {
+        let want = kernels::with_backend(Backend::Scalar, || {
+            shards::with_shards(1, || {
+                let rt = Box::new(MockRuntime::new());
+                run_reference(mk(fw), rt).unwrap()
+            })
+        });
+        for s in [1usize, 3] {
+            for backend in [Backend::Scalar, Backend::Simd] {
+                let got = kernels::with_backend(backend, || {
+                    shards::with_shards(s, || {
+                        let mut cfg = mk(&format!("{fw}/tree2"));
+                        cfg.topology.regions = 1;
+                        cfg.topology.groups = 1;
+                        let rt = Box::new(MockRuntime::new());
+                        run_framework(cfg, rt).unwrap()
+                    })
+                });
+                assert_same_run(
+                    &format!("{fw}/tree2 R=1 {backend:?} s={s}"),
+                    &want,
+                    &got,
+                );
+            }
         }
     }
 }

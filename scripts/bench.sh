@@ -22,6 +22,10 @@
 #                       supervision off vs on (virtual time, spec/evict
 #                       counters, speedup) — written by --record and
 #                       --smoke
+#   BENCH_topo.json   — hierarchical aggregation (DESIGN.md §19): flat
+#                       vs 3-tier root-uplink bytes per round and DES
+#                       wall clock at 10/100/1000 workers — written by
+#                       --record and --smoke
 #
 # Usage: scripts/bench.sh [--smoke|--record]
 #   --smoke    CI mode: tiny budget, small model, capped grids — fast
@@ -63,7 +67,8 @@ if [[ "$mode" == "--record" || "$mode" == "--smoke" ]]; then
   BENCH_SHARD_OUT="$root/BENCH_shard.json" cargo bench --bench shard_scaling
   BENCH_SWEEP_OUT="$root/BENCH_sweep.json" cargo bench --bench sweep_scaling
   BENCH_STRAGGLER_OUT="$root/BENCH_straggler.json" cargo bench --bench straggler
-  reports+=("$root/BENCH_shard.json" "$root/BENCH_sweep.json" "$root/BENCH_straggler.json")
+  BENCH_TOPO_OUT="$root/BENCH_topo.json" cargo bench --bench topo_scaling
+  reports+=("$root/BENCH_shard.json" "$root/BENCH_sweep.json" "$root/BENCH_straggler.json" "$root/BENCH_topo.json")
 fi
 
 echo

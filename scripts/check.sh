@@ -70,3 +70,14 @@ for scalar in 0 1; do
     exp straggler --threads 2 --out results_smoke
   test -s results_smoke/straggler_mock.csv
 done
+
+# Topology smoke (DESIGN.md §19): the hierarchical-aggregation sweep —
+# {flat, tree2, tree3} × {bsp, ebsp, hermes} with the per-tier traffic
+# ledger — end-to-end from the CLI under both kernel backends.  CI
+# uploads the resulting topo_mock.csv per backend.
+echo "== topo smoke (hierarchical aggregation sweep) =="
+for scalar in 0 1; do
+  HERMES_FORCE_SCALAR=$scalar cargo run --quiet --release --bin hermes -- \
+    exp topo --threads 2 --out results_smoke
+  test -s results_smoke/topo_mock.csv
+done
